@@ -1,0 +1,127 @@
+//! End-to-end driver (DESIGN.md "End-to-end validation"): run the full
+//! Galen system — PJRT-compiled compressed-model accuracy, hardware-
+//! simulator latency, KL sensitivity analysis, DDPG joint search, and
+//! post-search fine-tuning through the AOT train-step graph — on a real
+//! trained model, logging the reward curve and the paper's headline
+//! metrics.  Results land in results/e2e_joint_search.json and are quoted
+//! in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example joint_search_e2e -- \
+//!         [--variant resnet18s] [--target 0.3] [--episodes 120]
+
+use anyhow::Result;
+use galen::agent::AgentKind;
+use galen::coordinator::{policy_report, table1_header, ExperimentRecord, Session, SessionOptions};
+use galen::eval::{retrain, RetrainCfg, Split};
+use galen::search::SearchConfig;
+use galen::util::cli::Cli;
+
+fn main() -> Result<()> {
+    galen::util::logging::init(log::LevelFilter::Info);
+    let args = Cli::new("joint_search_e2e", "full-system joint compression search")
+        .opt("variant", "resnet18s", "model variant")
+        .opt("target", "0.3", "target compression rate c")
+        .opt("episodes", "120", "search episodes")
+        .opt("eval-batches", "2", "validation batches per episode")
+        .opt("retrain-steps", "60", "fine-tune steps for the final policy")
+        .opt("seed", "7", "seed")
+        .parse()?;
+
+    let target = args.get_f64("target")?;
+    let mut opts = SessionOptions::new(args.get("variant"));
+    opts.seed = args.get_u64("seed")?;
+    let t0 = std::time::Instant::now();
+    let mut session = Session::open(opts)?;
+    log::info!(
+        "session up in {:.1}s (artifacts compiled, sensitivity ready)",
+        t0.elapsed().as_secs_f64()
+    );
+
+    let mut cfg = SearchConfig::new(AgentKind::Joint, target);
+    cfg.episodes = args.get_usize("episodes")?;
+    cfg.eval_batches = args.get_usize("eval-batches")?;
+    cfg.seed = args.get_u64("seed")?;
+    cfg.log_every = 10;
+
+    let t1 = std::time::Instant::now();
+    let outcome = session.search(&cfg)?;
+    let search_secs = t1.elapsed().as_secs_f64();
+
+    // ---- reward curve (compact console plot) ----
+    println!("\nreward curve (episode -> reward, new best marked *):");
+    let mut best = f64::NEG_INFINITY;
+    for h in outcome.history.iter().step_by((cfg.episodes / 30).max(1)) {
+        let mark = if h.reward > best { "*" } else { " " };
+        best = best.max(h.reward);
+        let bar_len = ((h.reward + 3.0).max(0.0) * 12.0) as usize;
+        println!(
+            "  ep {:4} {mark} {:+.4}  acc {:.3}  rel.lat {:5.1}%  {}",
+            h.episode,
+            h.reward,
+            h.accuracy,
+            100.0 * h.latency_s / outcome.base_latency_s,
+            "#".repeat(bar_len.min(60))
+        );
+    }
+
+    // ---- headline row ----
+    println!("\n{}", table1_header());
+    let rec = ExperimentRecord {
+        name: format!("e2e_joint_search_c{:03}", (target * 100.0) as u32),
+        config: cfg,
+        outcome,
+    };
+    println!("{}", rec.table1_row());
+    println!(
+        "\nBest policy:\n{}",
+        policy_report(&session.ir, &rec.outcome.best_policy)
+    );
+
+    // ---- fine-tune + test accuracy (the paper's reported numbers) ----
+    let steps = args.get_usize("retrain-steps")?;
+    let test_before;
+    let mut test_after;
+    {
+        let ev = session.evaluator.as_ref().expect("pjrt session");
+        test_before = ev.accuracy(&rec.outcome.best_policy, Split::Test, usize::MAX)?;
+        test_after = test_before;
+    }
+    if steps > 0 {
+        let t2 = std::time::Instant::now();
+        let report = {
+            let ev = session.evaluator.as_ref().unwrap();
+            retrain(
+                ev,
+                &rec.outcome.best_policy,
+                &RetrainCfg {
+                    steps,
+                    lr: 3e-3,
+                    seed: args.get_u64("seed")?,
+                },
+            )?
+        };
+        log::info!(
+            "retrained {steps} steps in {:.1}s (loss {:.4} -> {:.4})",
+            t2.elapsed().as_secs_f64(),
+            report.losses.first().unwrap_or(&0.0),
+            report.losses.last().unwrap_or(&0.0)
+        );
+        let ev = session.evaluator.as_mut().unwrap();
+        ev.set_params(&report.params)?;
+        test_after = ev.accuracy(&rec.outcome.best_policy, Split::Test, usize::MAX)?;
+        ev.reset_params()?;
+    }
+
+    let path = rec.save(&session.ir, &galen::results_dir())?;
+    log::info!("record saved to {}", path.display());
+    println!(
+        "\nE2E summary: search {search_secs:.0}s / {} episodes, base acc {:.2}%\n  compressed test acc (raw)       {:.2}%\n  compressed test acc (retrained) {:.2}%\n  relative latency                {:.1}% (target {:.0}%)",
+        rec.outcome.history.len(),
+        rec.outcome.base_accuracy * 100.0,
+        test_before * 100.0,
+        test_after * 100.0,
+        rec.outcome.relative_latency() * 100.0,
+        target * 100.0,
+    );
+    Ok(())
+}

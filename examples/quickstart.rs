@@ -1,0 +1,83 @@
+//! Quickstart: load the AOT artifacts, evaluate a hand-written compression
+//! policy (accuracy via PJRT, latency via the hardware simulator), and
+//! compare it against the uncompressed reference.
+//!
+//!     cargo run --release --example quickstart -- [--variant micro]
+
+use anyhow::Result;
+use galen::compress::{DiscretePolicy, QuantMode};
+use galen::coordinator::policy_report;
+use galen::eval::{Evaluator, Split};
+use galen::hw::{CostModel, HwTarget, LatencySimulator};
+use galen::runtime::{ArtifactRegistry, PjrtRuntime};
+use galen::util::cli::Cli;
+
+fn main() -> Result<()> {
+    galen::util::logging::init(log::LevelFilter::Info);
+    let args = Cli::new("quickstart", "evaluate a hand-written policy")
+        .opt("variant", "micro", "model variant")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .parse()?;
+
+    // 1. bring up the PJRT runtime and load everything `make artifacts` built
+    let rt = PjrtRuntime::cpu()?;
+    let reg = ArtifactRegistry::load(
+        &rt,
+        std::path::Path::new(args.get("artifacts")),
+        args.get("variant"),
+    )?;
+    let ir = reg.ir.clone();
+    let ev = Evaluator::new(rt, reg)?;
+
+    // 2. hardware substrate: the paper's Raspberry Pi 4B target
+    let sim = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 42);
+
+    // 3. reference policy: no compression
+    let reference = DiscretePolicy::reference(&ir);
+    let base_acc = ev.accuracy(&reference, Split::Test, 4)?;
+    let base_lat = sim.latency(&ir, &reference);
+    println!(
+        "uncompressed: accuracy {:.2}%  simulated latency {:.2} ms",
+        base_acc * 100.0,
+        base_lat * 1e3
+    );
+
+    // 4. a hand-written mixed policy: INT8 everywhere, plus 4-bit MIX and
+    //    50% pruning on the deepest prunable layer
+    let mut policy = reference.clone();
+    for l in &mut policy.layers {
+        l.quant = QuantMode::Int8;
+    }
+    if let Some(&deep) = ir.prunable_layers().last() {
+        policy.layers[deep].kept_channels = (ir.layers[deep].cout / 2).max(1);
+        if galen::hw::mix_supported(
+            &ir.layers[deep],
+            policy.effective_cin(&ir, deep),
+            policy.layers[deep].kept_channels,
+        ) {
+            policy.layers[deep].quant = QuantMode::Mix {
+                w_bits: 4,
+                a_bits: 4,
+            };
+        }
+    }
+
+    let acc = ev.accuracy(&policy, Split::Test, 4)?;
+    let lat = sim.latency(&ir, &policy);
+    println!(
+        "compressed:   accuracy {:.2}%  simulated latency {:.2} ms ({:.1}% of reference)",
+        acc * 100.0,
+        lat * 1e3,
+        100.0 * lat / base_lat
+    );
+    println!(
+        "MACs {:.3e} -> {:.3e}   BOPs {:.3e} -> {:.3e}",
+        reference.macs(&ir) as f64,
+        policy.macs(&ir) as f64,
+        reference.bops(&ir) as f64,
+        policy.bops(&ir) as f64
+    );
+    println!("\n{}", policy_report(&ir, &policy));
+    println!("next: run a real search with `galen search --agent joint --target 0.3`");
+    Ok(())
+}

@@ -1,0 +1,181 @@
+"""AOT export: lower the L2 graphs to HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model variant this produces, under artifacts/:
+
+    meta_<v>.json            structural manifest for the Rust model IR
+    weights_<v>.gten         trained parameters (manifest order)
+    data_<v>.gten            val/test splits (normalized) + retrain pool
+    model_fwd_<v>.hlo.txt    logits = f(x, *params, *policy)   [eval batch]
+    train_step_<v>.hlo.txt   one frozen-BN SGD-momentum fine-tune step
+    model_fwd_pallas_<v>.hlo.txt  (micro only) conv via the L1 Pallas kernel
+    qgemm_pallas.hlo.txt     standalone fused-qgemm kernel artifact
+
+Run via `make artifacts`; skipped when outputs are newer than inputs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import gten
+from . import model as model_mod
+from . import train as train_mod
+from .kernels import qgemm as qgemm_kernel
+
+EVAL_BATCH = 128
+TRAIN_BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec_structs(shapes: list[list[int]]):
+    return [jax.ShapeDtypeStruct(tuple(s), jnp.float32) for s in shapes]
+
+
+def export_fwd(spec, out_path: str, *, use_pallas: bool = False,
+               batch: int = EVAL_BATCH) -> None:
+    pm = model_mod.param_manifest(spec)
+    qm = model_mod.policy_manifest(spec)
+    n_p, n_q = len(pm), len(qm)
+
+    def fn(x, *rest):
+        params = list(rest[:n_p])
+        policy = list(rest[n_p:])
+        return (model_mod.forward(spec, params, policy, x, use_pallas=use_pallas),)
+
+    args = ([jax.ShapeDtypeStruct((batch, spec.img, spec.img, 3), jnp.float32)]
+            + _spec_structs([m["shape"] for m in pm])
+            + _spec_structs([m["shape"] for m in qm]))
+    lowered = jax.jit(fn).lower(*args)
+    with open(out_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    assert n_q == len(qm)
+
+
+def export_train_step(spec, out_path: str, *, batch: int = TRAIN_BATCH) -> None:
+    pm = model_mod.param_manifest(spec)
+    qm = model_mod.policy_manifest(spec)
+    tidx = model_mod.trainable_indices(spec)
+    n_p, n_t, n_q = len(pm), len(tidx), len(qm)
+
+    def fn(x, y, lr, *rest):
+        params = list(rest[:n_p])
+        moms = list(rest[n_p:n_p + n_t])
+        policy = list(rest[n_p + n_t:])
+        loss, new_p, new_m = model_mod.train_step(spec, params, moms, policy, x, y, lr)
+        return tuple([loss] + new_p + new_m)
+
+    args = ([jax.ShapeDtypeStruct((batch, spec.img, spec.img, 3), jnp.float32),
+             jax.ShapeDtypeStruct((batch,), jnp.int32),
+             jax.ShapeDtypeStruct((), jnp.float32)]
+            + _spec_structs([m["shape"] for m in pm])
+            + _spec_structs([pm[i]["shape"] for i in tidx])
+            + _spec_structs([m["shape"] for m in qm]))
+    lowered = jax.jit(fn).lower(*args)
+    with open(out_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    assert n_q == len(qm)
+
+
+def export_qgemm(out_path: str, m: int = 256, k: int = 288, n: int = 32) -> None:
+    """Standalone L1 kernel artifact (used by runtime tests + kernel bench)."""
+    def fn(a, b, a_bits, w_bits, mask):
+        return (qgemm_kernel.qgemm(a, b, a_bits, w_bits, mask),)
+
+    args = [jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((k, n), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32)]
+    lowered = jax.jit(fn).lower(*args)
+    with open(out_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+
+def export_dataset(spec, out_path: str, *, seed: int) -> None:
+    """Validation/test/retrain splits. Validation feeds the search reward and
+    the sensitivity analysis (paper: split from the train set); test is only
+    used for the final reported accuracy; retrain pool feeds fine-tuning."""
+    val_x, val_y = data_mod.make_dataset(2048, seed=seed + 1000)
+    test_x, test_y = data_mod.make_dataset(2048, seed=seed + 2000)
+    retrain_x, retrain_y = data_mod.make_dataset(4096, seed=seed + 3000)
+    gten.write(out_path, {
+        "val_x": data_mod.normalize(val_x), "val_y": val_y,
+        "test_x": data_mod.normalize(test_x), "test_y": test_y,
+        "retrain_x": data_mod.normalize(retrain_x), "retrain_y": retrain_y,
+    })
+
+
+def export_variant(variant: str, out_dir: str, *, train_steps: int, seed: int) -> None:
+    spec = model_mod.VARIANTS[variant]
+    t0 = time.time()
+    print(f"=== exporting {variant} ===", flush=True)
+
+    meta = model_mod.manifest(spec)
+    meta["eval_batch"] = EVAL_BATCH
+    meta["train_batch"] = TRAIN_BATCH
+    with open(os.path.join(out_dir, f"meta_{variant}.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+    export_dataset(spec, os.path.join(out_dir, f"data_{variant}.gten"), seed=seed)
+
+    params = train_mod.train(spec, steps=train_steps, seed=seed)
+    dataset = gten.read(os.path.join(out_dir, f"data_{variant}.gten"))
+    test_acc = train_mod.evaluate(spec, [jnp.asarray(p) for p in params],
+                                  dataset["test_x"], dataset["test_y"])
+    print(f"[{variant}] uncompressed test accuracy: {test_acc:.4f}", flush=True)
+    gten.write(os.path.join(out_dir, f"weights_{variant}.gten"),
+               {m["name"]: p for m, p in zip(model_mod.param_manifest(spec), params)})
+    with open(os.path.join(out_dir, f"meta_{variant}.json")) as f:
+        meta = json.load(f)
+    meta["base_test_acc"] = test_acc
+    with open(os.path.join(out_dir, f"meta_{variant}.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+    export_fwd(spec, os.path.join(out_dir, f"model_fwd_{variant}.hlo.txt"))
+    export_train_step(spec, os.path.join(out_dir, f"train_step_{variant}.hlo.txt"))
+    if variant == "micro":
+        export_fwd(spec, os.path.join(out_dir, f"model_fwd_pallas_{variant}.hlo.txt"),
+                   use_pallas=True, batch=16)
+    print(f"=== {variant} done in {time.time() - t0:.1f}s ===", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default="micro,resnet18s")
+    ap.add_argument("--train-steps", type=int, default=400)
+    ap.add_argument("--micro-train-steps", type=int, default=250)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    export_qgemm(os.path.join(args.out_dir, "qgemm_pallas.hlo.txt"))
+    for variant in args.variants.split(","):
+        steps = args.micro_train_steps if variant == "micro" else args.train_steps
+        export_variant(variant, args.out_dir, train_steps=steps, seed=args.seed)
+    # stamp for make
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write(str(time.time()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Synthetic 10-class 32x32x3 image dataset ("CIFAR-S").
+
+The paper evaluates on CIFAR-10. Training real CIFAR-10 to >90% on a CPU-only
+build machine is out of budget, so we procedurally generate a seeded dataset
+with comparable structure (documented in DESIGN.md):
+
+* each class has a characteristic *spatial* structure (oriented gratings,
+  rings, blobs, checkers at class-specific frequency/orientation),
+* each class has a characteristic but overlapping color distribution,
+* samples are perturbed with random phase/shift/scale, per-sample color
+  jitter, and additive Gaussian pixel noise.
+
+The generator is pure numpy, fully determined by (seed, index), so Python
+(train/eval export) and any later re-generation agree bit-for-bit.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+NUM_CLASSES = 10
+IMG = 32
+CHANNELS = 3
+
+# Per-class base hue (RGB weights) -- overlapping on purpose.
+_CLASS_COLOR = np.array(
+    [
+        [0.9, 0.2, 0.2],
+        [0.2, 0.9, 0.2],
+        [0.2, 0.2, 0.9],
+        [0.8, 0.8, 0.2],
+        [0.8, 0.2, 0.8],
+        [0.2, 0.8, 0.8],
+        [0.9, 0.5, 0.1],
+        [0.5, 0.5, 0.9],
+        [0.7, 0.7, 0.7],
+        [0.4, 0.9, 0.5],
+    ],
+    dtype=np.float32,
+)
+
+# Per-class spatial pattern parameters: (kind, frequency, orientation)
+# kinds: 0 grating, 1 rings, 2 blob, 3 checker
+_CLASS_PATTERN = [
+    (0, 2.0, 0.0),
+    (0, 4.0, np.pi / 4),
+    (1, 2.5, 0.0),
+    (1, 5.0, 0.0),
+    (2, 1.0, 0.0),
+    (2, 2.0, 0.0),
+    (3, 2.0, 0.0),
+    (3, 4.0, 0.0),
+    (0, 6.0, np.pi / 2),
+    (1, 3.5, 0.0),
+]
+
+
+def _pattern(kind: int, freq: float, theta: float, rng: np.random.Generator) -> np.ndarray:
+    """One HxW grayscale pattern in [-1, 1] with random phase/offset."""
+    y, x = np.meshgrid(
+        np.linspace(-1, 1, IMG, dtype=np.float32),
+        np.linspace(-1, 1, IMG, dtype=np.float32),
+        indexing="ij",
+    )
+    phase = rng.uniform(0, 2 * np.pi)
+    jt = theta + rng.normal(0, 0.15)
+    cx, cy = rng.uniform(-0.35, 0.35, size=2)
+    if kind == 0:  # oriented grating
+        u = np.cos(jt) * (x - cx) + np.sin(jt) * (y - cy)
+        return np.sin(2 * np.pi * freq * u + phase)
+    if kind == 1:  # concentric rings
+        r = np.sqrt((x - cx) ** 2 + (y - cy) ** 2)
+        return np.sin(2 * np.pi * freq * r + phase)
+    if kind == 2:  # gaussian blobs grid
+        s = 0.18 / freq
+        g = np.exp(-(((x - cx) ** 2 + (y - cy) ** 2) / (2 * s * s)))
+        g2 = np.exp(-(((x + cx) ** 2 + (y + cy) ** 2) / (2 * s * s)))
+        return 2.0 * np.clip(g + g2, 0, 1) - 1.0
+    # checkerboard
+    u = np.cos(jt) * (x - cx) + np.sin(jt) * (y - cy)
+    v = -np.sin(jt) * (x - cx) + np.cos(jt) * (y - cy)
+    return np.sign(np.sin(2 * np.pi * freq * u + phase) * np.sin(2 * np.pi * freq * v + phase))
+
+
+def make_sample(label: int, rng: np.random.Generator) -> np.ndarray:
+    kind, freq, theta = _CLASS_PATTERN[label]
+    pat = _pattern(kind, freq, theta, rng).astype(np.float32)  # HxW in [-1,1]
+    color = _CLASS_COLOR[label] + rng.normal(0, 0.12, size=3).astype(np.float32)
+    img = 0.5 + 0.45 * pat[..., None] * color[None, None, :]
+    img += rng.normal(0, 0.08, size=img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.0).astype(np.float32)
+
+
+def make_dataset(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (x [n,32,32,3] float32 in [0,1], y [n] int32), balanced classes."""
+    rng = np.random.default_rng(seed)
+    labels = np.arange(n, dtype=np.int32) % NUM_CLASSES
+    rng.shuffle(labels)
+    xs = np.stack([make_sample(int(l), rng) for l in labels])
+    return xs.astype(np.float32), labels.astype(np.int32)
+
+
+def normalize(x: np.ndarray) -> np.ndarray:
+    """Dataset-level standardization used for both train and eval."""
+    mean = np.array([0.5, 0.5, 0.5], dtype=np.float32)
+    std = np.array([0.27, 0.27, 0.27], dtype=np.float32)
+    return (x - mean) / std

@@ -1,0 +1,61 @@
+"""GTEN: a minimal named-tensor container for the Python -> Rust handoff.
+
+numpy's .npz is a zip container that would force a zip+npy parser into the
+Rust side; instead we define a trivial little-endian binary format that both
+sides implement from scratch (Rust reader: rust/src/util/gten.rs).
+
+Layout (all integers little-endian):
+
+    magic   b"GTEN1\n"
+    u32     tensor count
+    per tensor:
+        u16     name length, then name bytes (utf-8)
+        u8      dtype: 0 = f32, 1 = i32
+        u8      ndim
+        u32     dims[ndim]
+        f32/i32 data (row-major), prod(dims) elements
+"""
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"GTEN1\n"
+_DTYPES = {0: np.float32, 1: np.int32}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _CODES:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", _CODES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read(path: str) -> dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        if f.read(len(MAGIC)) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        (count,) = struct.unpack("<I", f.read(4))
+        out: dict[str, np.ndarray] = {}
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dtype = _DTYPES[code]
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(n * 4), dtype=dtype, count=n)
+            out[name] = data.reshape(dims).copy()
+        return out

@@ -1,0 +1,111 @@
+"""L1 Pallas kernel: fused fake-quantize -> GEMM -> channel-mask (`qgemm`).
+
+This is the compute hot-spot of a compressed convolution layer: after
+im2col, a conv is a GEMM  A[M, K] @ B[K, N]  where N is the output-channel
+dimension.  Galen's compressed layers additionally (a) fake-quantize the
+activations A with a runtime bit width, (b) fake-quantize the weights B per
+output channel with another runtime bit width, and (c) zero the structurally
+pruned output channels.  Fusing all three into the GEMM avoids materializing
+the quantized tensors in HBM — on TPU the quantize/dequantize runs on the
+VPU while tiles stream through VMEM into the MXU.
+
+TPU mapping (documented, since CPU lowering uses interpret=True):
+  * grid over M tiles of TM=128 rows; each grid step holds
+    A-tile (128, K), B (K, N), accumulator (128, N) in VMEM.  For the
+    experiment models K <= 2304, N <= 256 => <= 2.6 MiB per step, well under
+    VMEM.  The inner `aq @ bq` maps onto the 128x128 MXU.
+  * B's per-column min/max is recomputed per grid step from the resident
+    tile (K is never split), so no cross-step reduction is needed.
+  * A's range is *per tensor* (paper: activations use tensor-level dynamic
+    range after im2col), so it is reduced once outside the kernel and passed
+    in as two scalars — otherwise each M-tile would see a different range.
+
+interpret=True is mandatory here: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see /opt/xla-example).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-8
+TILE_M = 128
+
+
+def _fq_block(x, bits, x_min, x_max):
+    """Eq. 3 fake quantization on a resident block (VPU-friendly ops only)."""
+    b = jnp.maximum(bits, 1.0)
+    n = jnp.exp2(b) - 1.0
+    half = jnp.exp2(b - 1.0)
+    s = n / jnp.maximum(x_max - x_min, _EPS)
+    z = jnp.floor(s * x_min) + half
+    q = jnp.clip(jnp.floor(s * x - z), -n, n)
+    fq = (q + z) / s
+    return jnp.where(bits >= 0.5, fq, x)
+
+
+def _qgemm_kernel(a_ref, b_ref, a_bits_ref, w_bits_ref, a_min_ref, a_max_ref,
+                  mask_ref, o_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    a_bits = a_bits_ref[0, 0]
+    w_bits = w_bits_ref[0, 0]
+
+    # Activations: per-tensor range, precomputed outside (see module doc).
+    aq = _fq_block(a, a_bits, a_min_ref[0, 0], a_max_ref[0, 0])
+
+    # Weights: per-output-channel (= per-column) dynamic range, computed on
+    # the resident tile. K is never split so this is the exact range.
+    b_min = jnp.min(b, axis=0, keepdims=True)
+    b_max = jnp.max(b, axis=0, keepdims=True)
+    bq = _fq_block(b, w_bits, b_min, b_max)
+
+    acc = jnp.dot(aq, bq, preferred_element_type=jnp.float32)
+    o_ref[...] = acc * mask_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m",))
+def qgemm(a: jnp.ndarray, b: jnp.ndarray, a_bits: jnp.ndarray,
+          w_bits: jnp.ndarray, mask: jnp.ndarray, *, tile_m: int = TILE_M) -> jnp.ndarray:
+    """Fused fake-quant GEMM with output-channel masking.
+
+    a: [M, K] activations (im2col patches), b: [K, N] weights,
+    a_bits / w_bits: scalar runtime bit widths (0 => FP32 bypass),
+    mask: [N] 0/1 pruning mask.  Returns [M, N] float32.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert mask.shape == (n,), f"mask shape {mask.shape} != ({n},)"
+
+    tm = min(tile_m, m)
+    pad = (-m) % tm
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+    mp = m + pad
+
+    a_min = jnp.min(a[:m] if pad else a).reshape(1, 1)
+    a_max = jnp.max(a[:m] if pad else a).reshape(1, 1)
+    scalar = lambda v: jnp.asarray(v, jnp.float32).reshape(1, 1)
+
+    out = pl.pallas_call(
+        _qgemm_kernel,
+        grid=(mp // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=True,
+    )(a, b, scalar(a_bits), scalar(w_bits), a_min, a_max,
+      mask.astype(jnp.float32).reshape(1, n))
+    return out[:m]

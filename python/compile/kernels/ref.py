@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the fused quantized-GEMM kernel (`qgemm.py`).
+
+This module is the correctness contract of the L1 Pallas kernel: the kernel
+must match `qgemm_ref` to float tolerance for every shape/bit-width/mask
+combination.  pytest (incl. Hypothesis sweeps) enforces it at build time.
+
+Semantics (mirrors the hot spot of a compressed conv layer lowered to GEMM
+via im2col):
+
+    out = (FQ_tensor(A, a_bits) @ FQ_col(B, w_bits)) * mask[None, :]
+
+* A [M, K] — im2col activation patches; fake-quantized per-tensor with the
+  runtime activation bit width `a_bits` (0 => FP32 bypass).
+* B [K, N] — reshaped conv weights, N = output channels; fake-quantized
+  per column (i.e. per output channel, the paper's dynamic per-channel
+  calibration) with runtime weight bit width `w_bits` (0 => bypass).
+* mask [N] — 0/1 structured-pruning channel mask applied to the output.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-8
+
+
+def _fq(x: jnp.ndarray, bits: jnp.ndarray, x_min: jnp.ndarray, x_max: jnp.ndarray) -> jnp.ndarray:
+    b = jnp.maximum(bits, 1.0)
+    n = jnp.exp2(b) - 1.0
+    half = jnp.exp2(b - 1.0)
+    s = n / jnp.maximum(x_max - x_min, _EPS)
+    z = jnp.floor(s * x_min) + half
+    q = jnp.clip(jnp.floor(s * x - z), -n, n)
+    fq = (q + z) / s
+    return jnp.where(bits >= 0.5, fq, x)
+
+
+def fq_tensor(a: jnp.ndarray, bits: jnp.ndarray) -> jnp.ndarray:
+    """Per-tensor fake quantization (activations after im2col)."""
+    return _fq(a, bits, jnp.min(a), jnp.max(a))
+
+
+def fq_columns(b: jnp.ndarray, bits: jnp.ndarray) -> jnp.ndarray:
+    """Per-column (output-channel) fake quantization (weights)."""
+    x_min = jnp.min(b, axis=0, keepdims=True)
+    x_max = jnp.max(b, axis=0, keepdims=True)
+    return _fq(b, bits, x_min, x_max)
+
+
+def qgemm_ref(a: jnp.ndarray, b: jnp.ndarray, a_bits: jnp.ndarray,
+              w_bits: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    aq = fq_tensor(a, a_bits)
+    bq = fq_columns(b, w_bits)
+    return (aq @ bq) * mask[None, :]

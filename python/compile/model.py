@@ -1,0 +1,343 @@
+"""L2: policy-parameterized ResNet family (JAX, build-time only).
+
+The paper compresses a trained ResNet18 (CIFAR-10 variant: 3x3 stem, four
+stages of BasicBlocks, widths w0*{1,2,4,8}).  Because the Rust search loop
+may never call back into Python, the *entire compression policy is part of
+the compiled graph's runtime inputs*:
+
+  logits = f(x, *params, *policy)
+
+where per conv layer the policy contributes (mask[c_out], w_bits, a_bits)
+and the final linear contributes (w_bits, a_bits).  See DESIGN.md
+"Compression-as-runtime-inputs".
+
+* pruning: 0/1 channel mask multiplied after BN — numerically identical to
+  structurally removing the channels (they contribute zero downstream).
+* quantization: Eq. 3 fake quantization with runtime bit widths
+  (0 => FP32 bypass, 8 => INT8, 1..6 => MIX), dynamic per-channel ranges.
+* BN is frozen (running statistics as graph inputs) in both the eval and the
+  retraining graph: retraining a compressed model with frozen BN statistics
+  is standard fine-tuning practice and keeps the train-step artifact
+  stateless apart from params/momenta.
+
+Three model variants (same topology, different width/depth) are exported:
+`micro` for fast tests, `resnet18s` for the paper-scale experiments on a CPU
+budget, `resnet18` full width.  The structural metadata Rust needs (layer
+graph, pruning-dependency groups, parameter/policy manifests) is emitted by
+`manifest()` and serialized to `artifacts/meta_<variant>.json` by aot.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quant
+from .kernels import qgemm as qgemm_kernel
+
+BN_EPS = 1e-5
+
+
+# --------------------------------------------------------------------------
+# Specs
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    cin: int
+    cout: int
+    kernel: int
+    stride: int
+    in_spatial: int
+    out_spatial: int
+    prunable: bool      # independently prunable (not in a residual group)
+    group: int          # pruning-dependency group id (-1: none / independent)
+    relu: bool          # ReLU directly after BN+mask (block conv2: fused later)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearSpec:
+    name: str
+    cin: int
+    cout: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    variant: str
+    width: int                  # stem width w0
+    blocks: tuple[int, ...]     # BasicBlocks per stage
+    img: int = 32
+    classes: int = 10
+
+    @property
+    def stage_widths(self) -> tuple[int, ...]:
+        return tuple(self.width * (2 ** i) for i in range(len(self.blocks)))
+
+
+VARIANTS: dict[str, ModelSpec] = {
+    "micro": ModelSpec("micro", width=8, blocks=(1, 1, 1, 1)),
+    "resnet18s": ModelSpec("resnet18s", width=32, blocks=(2, 2, 2, 2)),
+    "resnet18": ModelSpec("resnet18", width=64, blocks=(2, 2, 2, 2)),
+}
+
+
+def conv_specs(spec: ModelSpec) -> tuple[list[ConvSpec], LinearSpec]:
+    """Enumerate conv layers in forward order with dependency groups.
+
+    Group g_i is the residual *stream* of stage i: the stem (stage 0) or the
+    downsample projection (later stages) plus every block's conv2 output.
+    All members must share one channel mask, hence none is independently
+    prunable (the paper's "gray" layers).  Each block's conv1 is the inner
+    width and independently prunable.
+    """
+    convs: list[ConvSpec] = []
+    sp = spec.img
+    widths = spec.stage_widths
+    convs.append(ConvSpec("stem", 3, widths[0], 3, 1, sp, sp, False, 0, True))
+    cin = widths[0]
+    for si, (w, nb) in enumerate(zip(widths, spec.blocks)):
+        stride = 1 if si == 0 else 2
+        for bi in range(nb):
+            s = stride if bi == 0 else 1
+            out_sp = sp // s
+            name = f"s{si}b{bi}"
+            convs.append(ConvSpec(f"{name}.conv1", cin, w, 3, s, sp, out_sp,
+                                  True, -1, True))
+            convs.append(ConvSpec(f"{name}.conv2", w, w, 3, 1, out_sp, out_sp,
+                                  False, si, False))
+            if bi == 0 and (s != 1 or cin != w):
+                convs.append(ConvSpec(f"{name}.down", cin, w, 1, s, sp, out_sp,
+                                      False, si, False))
+            cin = w
+            sp = out_sp
+    fc = LinearSpec("fc", widths[-1], spec.classes)
+    return convs, fc
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def param_manifest(spec: ModelSpec) -> list[dict]:
+    """Flat, ordered parameter list: the artifact input contract."""
+    convs, fc = conv_specs(spec)
+    out: list[dict] = []
+    for c in convs:
+        out.append({"name": f"{c.name}.w", "shape": [c.kernel, c.kernel, c.cin, c.cout],
+                    "trainable": True})
+        for p, tr in (("gamma", True), ("beta", True), ("mean", False), ("var", False)):
+            out.append({"name": f"{c.name}.bn.{p}", "shape": [c.cout], "trainable": tr})
+    out.append({"name": "fc.w", "shape": [fc.cin, fc.cout], "trainable": True})
+    out.append({"name": "fc.b", "shape": [fc.cout], "trainable": True})
+    return out
+
+
+def policy_manifest(spec: ModelSpec) -> list[dict]:
+    """Flat, ordered policy-input list (mask + bit widths per layer)."""
+    convs, _fc = conv_specs(spec)
+    out: list[dict] = []
+    for c in convs:
+        out.append({"name": f"{c.name}.mask", "shape": [c.cout]})
+        out.append({"name": f"{c.name}.w_bits", "shape": []})
+        out.append({"name": f"{c.name}.a_bits", "shape": []})
+    out.append({"name": "fc.w_bits", "shape": []})
+    out.append({"name": "fc.a_bits", "shape": []})
+    return out
+
+
+def init_params(spec: ModelSpec, seed: int = 0) -> list[np.ndarray]:
+    """He-init conv weights; BN gamma=1 beta=0 mean=0 var=1; zero-init fc bias."""
+    rng = np.random.default_rng(seed)
+    params: list[np.ndarray] = []
+    for m in param_manifest(spec):
+        shape = tuple(m["shape"])
+        name = m["name"]
+        if name.endswith(".w") and len(shape) == 4:
+            fan_in = shape[0] * shape[1] * shape[2]
+            params.append(rng.normal(0, np.sqrt(2.0 / fan_in), shape).astype(np.float32))
+        elif name == "fc.w":
+            params.append(rng.normal(0, np.sqrt(1.0 / shape[0]), shape).astype(np.float32))
+        elif name.endswith(".gamma") or name.endswith(".var"):
+            params.append(np.ones(shape, np.float32))
+        else:  # beta, mean, fc.b
+            params.append(np.zeros(shape, np.float32))
+    return params
+
+
+def identity_policy(spec: ModelSpec) -> list[np.ndarray]:
+    """The reference (no-compression) policy P_r: all masks 1, all bits 0."""
+    out: list[np.ndarray] = []
+    for m in policy_manifest(spec):
+        shape = tuple(m["shape"])
+        out.append(np.ones(shape, np.float32) if m["name"].endswith(".mask")
+                   else np.zeros(shape, np.float32))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+def _index_maps(spec: ModelSpec):
+    pm = param_manifest(spec)
+    qm = policy_manifest(spec)
+    pidx = {m["name"]: i for i, m in enumerate(pm)}
+    qidx = {m["name"]: i for i, m in enumerate(qm)}
+    return pidx, qidx
+
+
+def _qconv_xla(x, w, a_bits, w_bits, stride):
+    """Per-channel fake-quantized conv (NHWC x HWIO), STE-differentiable."""
+    xq = quant.fake_quant_ste(x, a_bits, axis=-1)
+    wq = quant.fake_quant_ste(w, w_bits, axis=3)
+    return jax.lax.conv_general_dilated(
+        xq, wq, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _qconv_pallas(x, w, a_bits, w_bits, mask, stride):
+    """conv = im2col + fused L1 qgemm kernel (quant + GEMM + mask fused)."""
+    n, _h, _wd, cin = x.shape
+    kh, kw, _, cout = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x, filter_shape=(kh, kw), window_strides=(stride, stride),
+        padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    oh, ow = patches.shape[1], patches.shape[2]
+    # patches feature order is (cin, kh, kw) — align W accordingly.
+    a = patches.reshape(n * oh * ow, cin * kh * kw)
+    b = jnp.transpose(w, (2, 0, 1, 3)).reshape(cin * kh * kw, cout)
+    out = qgemm_kernel.qgemm(a, b, a_bits, w_bits, mask)
+    return out.reshape(n, oh, ow, cout)
+
+
+def _bn(x, gamma, beta, mean, var):
+    inv = gamma / jnp.sqrt(var + BN_EPS)
+    return x * inv + (beta - mean * inv)
+
+
+def forward(spec: ModelSpec, params: list, policy: list, x: jnp.ndarray,
+            *, use_pallas: bool = False) -> jnp.ndarray:
+    """Compressed forward pass. params/policy follow the manifests exactly."""
+    convs, _fc = conv_specs(spec)
+    pidx, qidx = _index_maps(spec)
+
+    def conv_block(h, c: ConvSpec):
+        w = params[pidx[f"{c.name}.w"]]
+        mask = policy[qidx[f"{c.name}.mask"]]
+        wb = policy[qidx[f"{c.name}.w_bits"]]
+        ab = policy[qidx[f"{c.name}.a_bits"]]
+        if use_pallas:
+            h = _qconv_pallas(h, w, ab, wb, mask, c.stride)
+        else:
+            h = _qconv_xla(h, w, ab, wb, c.stride)
+        h = _bn(h, params[pidx[f"{c.name}.bn.gamma"]], params[pidx[f"{c.name}.bn.beta"]],
+                params[pidx[f"{c.name}.bn.mean"]], params[pidx[f"{c.name}.bn.var"]])
+        # Mask after BN: the BN shift would otherwise un-zero pruned channels.
+        return h * mask
+
+    by_name = {c.name: c for c in convs}
+    h = conv_block(x, by_name["stem"])
+    h = jax.nn.relu(h)
+
+    for si in range(len(spec.blocks)):
+        for bi in range(spec.blocks[si]):
+            name = f"s{si}b{bi}"
+            identity = h
+            h = jax.nn.relu(conv_block(h, by_name[f"{name}.conv1"]))
+            h = conv_block(h, by_name[f"{name}.conv2"])
+            if f"{name}.down" in by_name:
+                identity = conv_block(identity, by_name[f"{name}.down"])
+            h = jax.nn.relu(h + identity)
+
+    h = jnp.mean(h, axis=(1, 2))  # global average pool -> [N, C]
+    wfc = params[pidx["fc.w"]]
+    bfc = params[pidx["fc.b"]]
+    hq = quant.fake_quant_ste(h, policy[qidx["fc.a_bits"]], axis=-1)
+    wq = quant.fake_quant_ste(wfc, policy[qidx["fc.w_bits"]], axis=1)
+    return hq @ wq + bfc
+
+
+def forward_probs(spec: ModelSpec, params, policy, x, *, use_pallas=False):
+    return jax.nn.softmax(forward(spec, params, policy, x, use_pallas=use_pallas), axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Loss / training step (frozen-BN fine-tuning, SGD with momentum)
+# --------------------------------------------------------------------------
+
+def loss_fn(spec: ModelSpec, params: list, policy: list, x, y) -> jnp.ndarray:
+    logits = forward(spec, params, policy, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll)
+
+
+def trainable_indices(spec: ModelSpec) -> list[int]:
+    return [i for i, m in enumerate(param_manifest(spec)) if m["trainable"]]
+
+
+def train_step(spec: ModelSpec, params: list, moms: list, policy: list,
+               x, y, lr, momentum: float = 0.9, weight_decay: float = 5e-4):
+    """One SGD-momentum step on the *trainable* params (conv W, BN affine, fc).
+
+    Returns (loss, new_trainable_params, new_moms); both lists follow
+    `trainable_indices` order.  BN running statistics are frozen inputs.
+    The quantizers use straight-through estimators, so this step retrains
+    *through* the compression policy, as the paper's 30-epoch fine-tune does.
+    """
+    tidx = trainable_indices(spec)
+
+    def f(tparams):
+        full = list(params)
+        for j, i in enumerate(tidx):
+            full[i] = tparams[j]
+        return loss_fn(spec, full, policy, x, y)
+
+    tparams = [params[i] for i in tidx]
+    loss, grads = jax.value_and_grad(f)(tparams)
+    pm = param_manifest(spec)
+    new_p, new_m = [], []
+    for j, i in enumerate(tidx):
+        g = grads[j]
+        if pm[i]["name"].endswith(".w"):  # decay conv/fc weights only
+            g = g + weight_decay * tparams[j]
+        m = momentum * moms[j] + g
+        new_m.append(m)
+        new_p.append(tparams[j] - lr * m)
+    return loss, new_p, new_m
+
+
+# --------------------------------------------------------------------------
+# Structural manifest for the Rust model IR
+# --------------------------------------------------------------------------
+
+def manifest(spec: ModelSpec) -> dict:
+    convs, fc = conv_specs(spec)
+    layers = []
+    for c in convs:
+        layers.append({
+            "name": c.name, "kind": "conv", "cin": c.cin, "cout": c.cout,
+            "kernel": c.kernel, "stride": c.stride,
+            "in_spatial": c.in_spatial, "out_spatial": c.out_spatial,
+            "prunable": c.prunable, "group": c.group, "depthwise": False,
+        })
+    layers.append({
+        "name": fc.name, "kind": "linear", "cin": fc.cin, "cout": fc.cout,
+        "kernel": 1, "stride": 1, "in_spatial": 1, "out_spatial": 1,
+        "prunable": False, "group": -1, "depthwise": False,
+    })
+    return {
+        "variant": spec.variant,
+        "img": spec.img,
+        "classes": spec.classes,
+        "width": spec.width,
+        "blocks": list(spec.blocks),
+        "layers": layers,
+        "params": param_manifest(spec),
+        "policy": policy_manifest(spec),
+        "trainable": trainable_indices(spec),
+    }

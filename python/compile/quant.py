@@ -1,0 +1,70 @@
+"""Fake quantization (paper Eq. 3) with *runtime* bit widths.
+
+The paper quantizes value r as
+
+    Q(r) = max(-n, min(n, floor(s * r - z)))
+
+with n = 2^b - 1, scale s = n / (x_max - x_min), offset
+z = floor(s * x_min) + 2^(b-1), and dynamic per-channel range calibration
+(x_min / x_max taken from the tensor itself).
+
+Crucially for this reproduction the bit width ``b`` is a *traced scalar
+input* of the AOT-compiled graph, not a Python constant: one compiled
+artifact serves every quantization policy.  ``b < 0.5`` bypasses
+quantization entirely (the FP32 option).  ``b = 8`` realizes INT8 and
+``1 <= b <= 6`` the MIX options of the paper.
+
+`fake_quant` is the eval-path op; `fake_quant_ste` is the training-path op
+with a straight-through estimator so retraining (paper: 30 epochs after the
+search) differentiates through the quantizer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-8
+
+
+def _channel_min_max(x: jnp.ndarray, axis: int | None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Dynamic range: reduce over all axes except `axis` (None => per-tensor)."""
+    if axis is None:
+        axes = tuple(range(x.ndim))
+    else:
+        axes = tuple(i for i in range(x.ndim) if i != axis % x.ndim)
+    x_min = jnp.min(x, axis=axes, keepdims=True)
+    x_max = jnp.max(x, axis=axes, keepdims=True)
+    return x_min, x_max
+
+
+def quantize(x: jnp.ndarray, bits: jnp.ndarray, axis: int) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Paper Eq. 3. Returns (q, s, z); all dtype float32 (q holds integers).
+
+    bits: scalar float tensor (traced). Caller guarantees bits >= 1 when the
+    result is used; see `fake_quant` for the bits==0 bypass.
+    """
+    b = jnp.maximum(bits, 1.0)
+    n = jnp.exp2(b) - 1.0
+    half = jnp.exp2(b - 1.0)
+    x_min, x_max = _channel_min_max(x, axis)
+    s = n / jnp.maximum(x_max - x_min, _EPS)
+    z = jnp.floor(s * x_min) + half
+    q = jnp.clip(jnp.floor(s * x - z), -n, n)
+    return q, s, z
+
+
+def dequantize(q: jnp.ndarray, s: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    return (q + z) / s
+
+
+def fake_quant(x: jnp.ndarray, bits: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Quantize-dequantize with runtime bit width; bits < 0.5 bypasses (FP32)."""
+    q, s, z = quantize(x, bits, axis)
+    fq = dequantize(q, s, z)
+    return jnp.where(bits >= 0.5, fq, x)
+
+
+def fake_quant_ste(x: jnp.ndarray, bits: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """fake_quant with a straight-through estimator for the backward pass."""
+    fq = fake_quant(x, bits, axis)
+    return x + jax.lax.stop_gradient(fq - x)

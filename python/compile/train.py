@@ -1,0 +1,165 @@
+"""Build-time pre-training of the compressible model on the synthetic dataset.
+
+The paper starts from a *trained* ResNet18.  This module produces that
+starting point: it trains the uncompressed model (batch-statistics BN, no
+quantization ops in the graph for speed) with Adam + cosine schedule on the
+seeded synthetic dataset, tracks BN running statistics, and returns the flat
+parameter list in `model.param_manifest` order so the frozen-BN compressed
+graphs can consume it directly.
+
+Runs once inside `make artifacts`; never on the search path.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+
+BN_MOMENTUM = 0.9
+
+
+# --------------------------------------------------------------------------
+# Plain (uncompressed, batch-stats BN) training forward
+# --------------------------------------------------------------------------
+
+def _forward_train(spec, params, x):
+    """Uncompressed forward with batch-stats BN; returns (logits, stats).
+
+    stats maps bn param-index -> (batch_mean, batch_var) for the running
+    update.  Mirrors model.forward's topology exactly.
+    """
+    convs, _fc = model_mod.conv_specs(spec)
+    pidx, _ = model_mod._index_maps(spec)
+    stats: dict[int, tuple] = {}
+
+    def conv_block(h, c):
+        w = params[pidx[f"{c.name}.w"]]
+        h = jax.lax.conv_general_dilated(
+            h, w, window_strides=(c.stride, c.stride), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        mean = jnp.mean(h, axis=(0, 1, 2))
+        var = jnp.var(h, axis=(0, 1, 2))
+        stats[pidx[f"{c.name}.bn.mean"]] = (mean, var)
+        gamma = params[pidx[f"{c.name}.bn.gamma"]]
+        beta = params[pidx[f"{c.name}.bn.beta"]]
+        inv = gamma / jnp.sqrt(var + model_mod.BN_EPS)
+        return h * inv + (beta - mean * inv)
+
+    by_name = {c.name: c for c in convs}
+    h = jax.nn.relu(conv_block(x, by_name["stem"]))
+    for si in range(len(spec.blocks)):
+        for bi in range(spec.blocks[si]):
+            name = f"s{si}b{bi}"
+            identity = h
+            h = jax.nn.relu(conv_block(h, by_name[f"{name}.conv1"]))
+            h = conv_block(h, by_name[f"{name}.conv2"])
+            if f"{name}.down" in by_name:
+                identity = conv_block(identity, by_name[f"{name}.down"])
+            h = jax.nn.relu(h + identity)
+    h = jnp.mean(h, axis=(1, 2))
+    logits = h @ params[pidx["fc.w"]] + params[pidx["fc.b"]]
+    return logits, stats
+
+
+def _loss_train(spec, tparams, frozen, tidx, x, y):
+    full = list(frozen)
+    for j, i in enumerate(tidx):
+        full[i] = tparams[j]
+    logits, stats = _forward_train(spec, full, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+    acc = (jnp.argmax(logits, -1) == y).mean()
+    return nll, (stats, acc)
+
+
+# --------------------------------------------------------------------------
+# Adam
+# --------------------------------------------------------------------------
+
+def _adam_update(g, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1 ** t)
+    vh = v / (1 - b2 ** t)
+    return -lr * mh / (jnp.sqrt(vh) + eps), m, v
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _train_step(spec, tparams, frozen, ms, vs, t, lr, x, y):
+    tidx = tuple(model_mod.trainable_indices(spec))
+    (loss, (stats, acc)), grads = jax.value_and_grad(
+        _loss_train, argnums=1, has_aux=True)(spec, tparams, frozen, tidx, x, y)
+    new_t, new_m, new_v = [], [], []
+    for p, g, m, v in zip(tparams, grads, ms, vs):
+        upd, m2, v2 = _adam_update(g, m, v, t, lr)
+        new_t.append(p + upd)
+        new_m.append(m2)
+        new_v.append(v2)
+    # BN running-stat update on the frozen list
+    new_frozen = list(frozen)
+    for mean_idx, (bm, bv) in stats.items():
+        var_idx = mean_idx + 1  # manifest order: ..., mean, var
+        new_frozen[mean_idx] = BN_MOMENTUM * frozen[mean_idx] + (1 - BN_MOMENTUM) * bm
+        new_frozen[var_idx] = BN_MOMENTUM * frozen[var_idx] + (1 - BN_MOMENTUM) * bv
+    return new_t, new_frozen, new_m, new_v, loss, acc
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _eval_logits(spec, params, x):
+    policy = [jnp.asarray(p) for p in model_mod.identity_policy(spec)]
+    return model_mod.forward(spec, params, policy, x)
+
+
+def evaluate(spec, params, x, y, batch: int = 256) -> float:
+    """Test accuracy of the frozen-BN (deployment) graph."""
+    correct = 0
+    for i in range(0, len(x), batch):
+        logits = _eval_logits(spec, params, jnp.asarray(x[i:i + batch]))
+        correct += int((np.argmax(np.asarray(logits), -1) == y[i:i + batch]).sum())
+    return correct / len(x)
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+def train(spec: model_mod.ModelSpec, *, steps: int = 400, batch: int = 128,
+          lr: float = 2e-3, train_n: int = 8192, seed: int = 7,
+          log_every: int = 50) -> list[np.ndarray]:
+    """Train from scratch; returns params in manifest order (numpy)."""
+    xs, ys = data_mod.make_dataset(train_n, seed=seed)
+    xs = data_mod.normalize(xs)
+    params = [jnp.asarray(p) for p in model_mod.init_params(spec, seed=seed)]
+    tidx = model_mod.trainable_indices(spec)
+    tparams = [params[i] for i in tidx]
+    frozen = list(params)
+    ms = [jnp.zeros_like(p) for p in tparams]
+    vs = [jnp.zeros_like(p) for p in tparams]
+
+    rng = np.random.default_rng(seed + 1)
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        idx = rng.integers(0, train_n, size=batch)
+        x = jnp.asarray(xs[idx])
+        y = jnp.asarray(ys[idx].astype(np.int32))
+        # cosine schedule with short warmup
+        warm = min(1.0, step / 30.0)
+        lr_t = lr * warm * 0.5 * (1 + np.cos(np.pi * step / steps))
+        tparams, frozen, ms, vs, loss, acc = _train_step(
+            spec, tparams, frozen, ms, vs,
+            jnp.asarray(step, jnp.float32), jnp.asarray(lr_t, jnp.float32), x, y)
+        if step % log_every == 0 or step == steps:
+            print(f"[train:{spec.variant}] step {step}/{steps} "
+                  f"loss={float(loss):.4f} batch_acc={float(acc):.3f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+
+    full = list(frozen)
+    for j, i in enumerate(tidx):
+        full[i] = tparams[j]
+    return [np.asarray(p, dtype=np.float32) for p in full]

@@ -1,0 +1,84 @@
+"""AOT export plumbing: GTEN roundtrip, HLO text generation, input arity."""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, gten, model as M
+
+
+def test_gten_roundtrip():
+    tensors = {
+        "a": np.arange(24, dtype=np.float32).reshape(2, 3, 4),
+        "b": np.array([1, -2, 3], dtype=np.int32),
+        "scalar": np.float32(3.5).reshape(()),
+        "empty_name_ok": np.zeros((0,), np.float32),
+    }
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.gten")
+        gten.write(path, tensors)
+        back = gten.read(path)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+def test_gten_rejects_bad_magic():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "bad.gten")
+        with open(path, "wb") as f:
+            f.write(b"NOPE!!")
+        with pytest.raises(ValueError):
+            gten.read(path)
+
+
+def test_hlo_text_structure():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 1.0,)
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text
+    assert "f32[4,4]" in text
+    assert "ROOT" in text
+
+
+def test_export_qgemm_artifact():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "qgemm.hlo.txt")
+        aot.export_qgemm(path, m=32, k=18, n=8)
+        text = open(path).read()
+        assert "HloModule" in text
+        # 5 parameters: a, b, a_bits, w_bits, mask
+        assert "parameter(4)" in text and "parameter(5)" not in text
+
+
+def test_export_fwd_micro_arity():
+    spec = M.VARIANTS["micro"]
+    n_inputs = 1 + len(M.param_manifest(spec)) + len(M.policy_manifest(spec))
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "fwd.hlo.txt")
+        aot.export_fwd(spec, path, batch=2)
+        text = open(path).read()
+        assert f"parameter({n_inputs - 1})" in text
+        assert f"parameter({n_inputs})" not in text
+        assert "f32[2,32,32,3]" in text  # batch respected
+
+
+def test_export_train_step_micro_arity():
+    spec = M.VARIANTS["micro"]
+    n_p = len(M.param_manifest(spec))
+    n_t = len(M.trainable_indices(spec))
+    n_q = len(M.policy_manifest(spec))
+    n_inputs = 3 + n_p + n_t + n_q  # x, y, lr + params + moms + policy
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ts.hlo.txt")
+        aot.export_train_step(spec, path, batch=4)
+        text = open(path).read()
+        assert f"parameter({n_inputs - 1})" in text
+        assert f"parameter({n_inputs})" not in text

@@ -1,0 +1,108 @@
+"""L1 kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Covers dense shape grids, all quantization modes (FP32 bypass / INT8 / MIX),
+masks, padding edge cases (M not a multiple of the tile), plus a Hypothesis
+sweep over random shapes/bit widths as demanded for kernel validation.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.qgemm import qgemm
+from compile.kernels.ref import qgemm_ref, fq_tensor, fq_columns
+
+RNG = np.random.default_rng(42)
+
+
+def _case(m, k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    b = rng.normal(size=(k, n)).astype(np.float32)
+    mask = (rng.random(n) > 0.25).astype(np.float32)
+    return jnp.asarray(a), jnp.asarray(b), jnp.asarray(mask)
+
+
+def _check(m, k, n, a_bits, w_bits, seed=0, tile_m=128):
+    a, b, mask = _case(m, k, n, seed)
+    ab = jnp.float32(a_bits)
+    wb = jnp.float32(w_bits)
+    out = qgemm(a, b, ab, wb, mask, tile_m=tile_m)
+    ref = qgemm_ref(a, b, ab, wb, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (128, 64, 32), (130, 72, 16),
+                                   (1, 9, 8), (257, 288, 8), (64, 2304, 16)])
+@pytest.mark.parametrize("a_bits,w_bits", [(0, 0), (8, 8), (4, 4), (2, 6), (1, 1), (0, 5), (3, 0)])
+def test_qgemm_matches_ref(m, k, n, a_bits, w_bits):
+    _check(m, k, n, a_bits, w_bits)
+
+
+def test_fp32_bypass_is_exact_gemm():
+    a, b, mask = _case(64, 32, 16)
+    out = qgemm(a, b, jnp.float32(0), jnp.float32(0), mask)
+    ref = (np.asarray(a) @ np.asarray(b)) * np.asarray(mask)[None, :]
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5, atol=1e-5)
+
+
+def test_mask_zeroes_columns():
+    a, b, _ = _case(32, 16, 8)
+    mask = jnp.asarray(np.array([1, 0, 1, 0, 0, 1, 1, 0], np.float32))
+    out = np.asarray(qgemm(a, b, jnp.float32(4), jnp.float32(4), mask))
+    assert np.all(out[:, np.asarray(mask) == 0] == 0)
+    assert np.any(out[:, np.asarray(mask) == 1] != 0)
+
+
+def test_quant_error_shrinks_with_bits():
+    """More bits => closer to the FP32 GEMM (monotone in expectation)."""
+    a, b, mask = _case(96, 64, 16, seed=3)
+    exact = np.asarray(a) @ np.asarray(b)
+    errs = []
+    for bits in [2, 4, 6, 8]:
+        out = np.asarray(qgemm(a, b, jnp.float32(bits), jnp.float32(bits),
+                               jnp.ones(16, jnp.float32)))
+        errs.append(np.abs(out - exact).mean())
+    assert errs[0] > errs[1] > errs[2] > errs[3]
+
+
+def test_tile_boundary_independence():
+    """Result must not depend on the M tile size (padding correctness)."""
+    a, b, mask = _case(100, 32, 8, seed=5)
+    outs = [np.asarray(qgemm(a, b, jnp.float32(5), jnp.float32(3), mask, tile_m=t))
+            for t in (16, 32, 128)]
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-6)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-6)
+
+
+def test_fq_tensor_range():
+    x = jnp.asarray(RNG.normal(size=(50, 20)).astype(np.float32))
+    for bits in [1, 2, 4, 8]:
+        fq = np.asarray(fq_tensor(x, jnp.float32(bits)))
+        # distinct reconstruction levels bounded by the bit budget
+        assert len(np.unique(fq.round(5))) <= 2 ** (bits + 1)
+
+
+def test_fq_columns_independent():
+    """Scaling one column must not change the quantization of the others."""
+    x = RNG.normal(size=(64, 4)).astype(np.float32)
+    base = np.asarray(fq_columns(jnp.asarray(x), jnp.float32(4)))
+    x2 = x.copy()
+    x2[:, 0] *= 100.0
+    mod = np.asarray(fq_columns(jnp.asarray(x2), jnp.float32(4)))
+    np.testing.assert_allclose(base[:, 1:], mod[:, 1:], rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 96),
+    n=st.integers(1, 24),
+    a_bits=st.sampled_from([0.0, 1.0, 2.0, 3.0, 5.0, 8.0]),
+    w_bits=st.sampled_from([0.0, 1.0, 4.0, 6.0, 8.0]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_qgemm_hypothesis(m, k, n, a_bits, w_bits, seed):
+    _check(m, k, n, a_bits, w_bits, seed=seed)

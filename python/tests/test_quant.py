@@ -1,0 +1,80 @@
+"""Unit tests for the Eq. 3 fake-quantizer with runtime bit widths."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+RNG = np.random.default_rng(1)
+
+
+def test_bypass_bits_zero():
+    x = jnp.asarray(RNG.normal(size=(8, 8)).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(quant.fake_quant(x, jnp.float32(0.0))),
+                                  np.asarray(x))
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 6, 8])
+def test_level_count_bounded(bits):
+    x = jnp.asarray(RNG.normal(size=(4096,)).astype(np.float32))
+    fq = np.asarray(quant.fake_quant(x, jnp.float32(bits), axis=None))
+    assert len(np.unique(fq.round(6))) <= 2 ** (bits + 1)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_error_bounded_by_step(bits):
+    x = RNG.uniform(-3, 3, size=(2048,)).astype(np.float32)
+    fq = np.asarray(quant.fake_quant(jnp.asarray(x), jnp.float32(bits), axis=None))
+    n = 2 ** bits - 1
+    step = (x.max() - x.min()) / n
+    assert np.abs(fq - x).max() <= step * 1.5 + 1e-6
+
+
+def test_per_channel_axis():
+    """Each channel is calibrated independently on its own range."""
+    x = np.stack([RNG.normal(0, 1, 256), RNG.normal(0, 100, 256)], axis=1).astype(np.float32)
+    fq = np.asarray(quant.fake_quant(jnp.asarray(x), jnp.float32(4), axis=1))
+    # wide channel's error is ~100x the narrow channel's, not shared
+    e0 = np.abs(fq[:, 0] - x[:, 0]).max()
+    e1 = np.abs(fq[:, 1] - x[:, 1]).max()
+    assert e1 > 10 * e0
+
+
+def test_constant_tensor_stable():
+    x = jnp.full((16,), 3.25, jnp.float32)
+    fq = np.asarray(quant.fake_quant(x, jnp.float32(8), axis=None))
+    assert np.all(np.isfinite(fq))
+
+
+def test_ste_gradient_is_identity():
+    x = jnp.asarray(RNG.normal(size=(32,)).astype(np.float32))
+    g = jax.grad(lambda v: jnp.sum(quant.fake_quant_ste(v, jnp.float32(3), axis=None) ** 2))(x)
+    # d/dx sum(fq(x)^2) under STE = 2*fq(x)
+    fq = quant.fake_quant(x, jnp.float32(3), axis=None)
+    np.testing.assert_allclose(np.asarray(g), 2 * np.asarray(fq), rtol=1e-5)
+
+
+def test_quantize_integer_levels():
+    x = jnp.asarray(RNG.normal(size=(128,)).astype(np.float32))
+    q, s, z = quant.quantize(x, jnp.float32(5), axis=None)
+    qn = np.asarray(q)
+    assert np.all(qn == np.floor(qn))
+    assert np.abs(qn).max() <= 2 ** 5 - 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.sampled_from([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]),
+       n=st.integers(2, 512), seed=st.integers(0, 2 ** 16),
+       scale=st.floats(0.01, 100.0))
+def test_fake_quant_hypothesis(bits, n, seed, scale):
+    x = (np.random.default_rng(seed).normal(size=(n,)) * scale).astype(np.float32)
+    fq = np.asarray(quant.fake_quant(jnp.asarray(x), jnp.float32(bits), axis=None))
+    assert np.all(np.isfinite(fq))
+    nlevels = 2 ** int(bits) - 1
+    if x.max() > x.min():
+        step = (x.max() - x.min()) / nlevels
+        assert np.abs(fq - x).max() <= 2.0 * step + 1e-5

@@ -1,0 +1,63 @@
+#![allow(dead_code)] // each bench uses a subset of these helpers
+//! Shared plumbing for the experiment benches (one per paper table/figure).
+//!
+//! Benches honour environment overrides so the same harness scales from a
+//! quick smoke run to the paper protocol:
+//!   GALEN_BENCH_VARIANT   model variant (default: micro)
+//!   GALEN_BENCH_EPISODES  episodes per search (default: 60)
+//!   GALEN_BENCH_PAPER     "1" => paper episode counts (310/410)
+
+use galen::agent::AgentKind;
+use galen::coordinator::{Session, SessionOptions};
+use galen::search::SearchConfig;
+
+pub fn variant() -> String {
+    std::env::var("GALEN_BENCH_VARIANT").unwrap_or_else(|_| "micro".into())
+}
+
+pub fn episodes() -> usize {
+    std::env::var("GALEN_BENCH_EPISODES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40) // single-core CI budget; paper protocol via GALEN_BENCH_PAPER=1
+}
+
+pub fn session() -> anyhow::Result<Session> {
+    galen::util::logging::init(log::LevelFilter::Info);
+    let opts = SessionOptions::new(&variant());
+    Session::open(opts)
+}
+
+pub fn config(agent: AgentKind, target: f64) -> SearchConfig {
+    let mut cfg = if std::env::var("GALEN_BENCH_PAPER").as_deref() == Ok("1") {
+        SearchConfig::paper(agent, target)
+    } else {
+        let mut c = SearchConfig::new(agent, target);
+        c.episodes = episodes();
+        c
+    };
+    cfg.log_every = 0;
+    cfg.eval_batches = 1;
+    cfg
+}
+
+pub fn artifacts_present() -> bool {
+    let ok = galen::artifacts_dir()
+        .join(format!("meta_{}.json", variant()))
+        .exists();
+    if !ok {
+        println!(
+            "SKIP: artifacts for '{}' not built (run `make artifacts`)",
+            variant()
+        );
+    }
+    ok
+}
+
+/// Save a bench result table under results/.
+pub fn save_rows(name: &str, header: &str, rows: &[String]) {
+    let path = galen::results_dir().join(format!("{name}.txt"));
+    let _ = std::fs::create_dir_all(galen::results_dir());
+    let _ = std::fs::write(&path, format!("{header}\n{}\n", rows.join("\n")));
+    println!("[saved {}]", path.display());
+}

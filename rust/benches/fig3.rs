@@ -1,0 +1,52 @@
+//! Figure 3 regeneration: per-layer policies predicted by the pruning,
+//! quantization and joint agents at c = 0.3 (bar labels = remaining
+//! channels / bit widths).
+//!
+//!     cargo bench --bench fig3
+
+mod common;
+
+use galen::agent::AgentKind;
+use galen::bench::Bencher;
+use galen::coordinator::{policy_report, ExperimentRecord};
+
+fn main() {
+    if !common::artifacts_present() {
+        return;
+    }
+    let session = common::session().expect("session");
+    let mut b = Bencher::new();
+    let target = 0.3;
+
+    for agent in [AgentKind::Pruning, AgentKind::Quantization, AgentKind::Joint] {
+        let cfg = common::config(agent, target);
+        let outcome = b.once(&format!("fig3/{}", agent.label()), || {
+            session.search(&cfg).expect("search")
+        });
+        println!(
+            "\n=== Figure 3{}: {} agent policy (c=0.3, acc {:.2}%, rel.lat {:.1}%) ===",
+            match agent {
+                AgentKind::Pruning => "a",
+                AgentKind::Quantization => "b",
+                AgentKind::Joint => "c",
+            },
+            agent.label(),
+            outcome.best.accuracy * 100.0,
+            outcome.relative_latency() * 100.0
+        );
+        println!("{}", policy_report(&session.ir, &outcome.best_policy));
+        ExperimentRecord {
+            name: format!("fig3_{}_{}", common::variant(), agent.label()),
+            config: cfg,
+            outcome,
+        }
+        .save(&session.ir, &galen::results_dir())
+        .expect("save");
+    }
+    println!(
+        "paper observations to compare: pruning spreads evenly (first layer\n\
+         exempt); quantization varies bit widths, INT8 pinned on constraint-\n\
+         limited first/last layers, weights quantized stronger than\n\
+         activations; joint is less aggressive on both methods."
+    );
+}

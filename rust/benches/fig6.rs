@@ -1,0 +1,72 @@
+//! Figure 6 regeneration: KL sensitivity over layers, for activation
+//! quantization, weight quantization and channel pruning (the paper's
+//! 10-point sparsity grid / full bit-width range via --paper grid env).
+//!
+//!     cargo bench --bench fig6
+//!     GALEN_BENCH_PAPER_GRID=1 cargo bench --bench fig6
+
+mod common;
+
+use galen::bench::Bencher;
+use galen::coordinator::{Session, SessionOptions};
+use galen::eval::SensitivityConfig;
+
+fn main() {
+    if !common::artifacts_present() {
+        return;
+    }
+    galen::util::logging::init(log::LevelFilter::Info);
+    let mut opts = SessionOptions::new(&common::variant());
+    if std::env::var("GALEN_BENCH_PAPER_GRID").as_deref() == Ok("1") {
+        opts.sensitivity = SensitivityConfig::paper();
+        opts.sensitivity_cache = Some(
+            galen::results_dir().join(format!("sensitivity_{}_paper.json", common::variant())),
+        );
+    }
+    let mut b = Bencher::new();
+    // session bring-up computes (or loads) the sensitivity table == Fig 6
+    let session = b.once("fig6/sensitivity-analysis", || {
+        Session::open(opts).expect("session")
+    });
+    let sens = &session.sens;
+
+    let mut rows = Vec::new();
+    let header = format!(
+        "{:14} | {:^30} | {:^30} | {:^30}",
+        "layer", "a-quant Ω (value:omega)", "w-quant Ω", "prune Ω"
+    );
+    for l in &session.ir.layers {
+        let fmt = |series: &Vec<galen::eval::SensitivityProbe>| {
+            series
+                .iter()
+                .map(|p| format!("{:.0}:{:.3}", p.value * 10.0, p.omega))
+                .collect::<Vec<_>>()
+                .join(" ")
+        };
+        rows.push(format!(
+            "{:14} | {:30} | {:30} | {:30}",
+            l.name,
+            fmt(&sens.quant_a[l.index]),
+            fmt(&sens.quant_w[l.index]),
+            fmt(&sens.prune[l.index]),
+        ));
+        println!("{}", rows.last().unwrap());
+    }
+    common::save_rows(&format!("fig6_{}", common::variant()), &header, &rows);
+
+    // the paper's reported trends, quantified:
+    let lower_bits_higher_omega = |series: &Vec<Vec<galen::eval::SensitivityProbe>>| {
+        let mut ok = 0;
+        for l in series {
+            if l.first().map(|p| p.omega) >= l.last().map(|p| p.omega) {
+                ok += 1;
+            }
+        }
+        (ok, series.len())
+    };
+    let (wa, wn) = lower_bits_higher_omega(&sens.quant_w);
+    let (aa, an) = lower_bits_higher_omega(&sens.quant_a);
+    println!(
+        "\ntrend check — lowest bit width has the highest Ω on {wa}/{wn} layers (weights), {aa}/{an} (activations)"
+    );
+}

@@ -1,0 +1,133 @@
+//! L3 hot-path microbenches (the §Perf baseline/after numbers in
+//! EXPERIMENTS.md):
+//!   * DDPG optimize step (dominant: the 400/300 MLP GEMMs)
+//!   * actor inference (per time step)
+//!   * hardware simulator per-policy latency evaluation
+//!   * replay buffer sampling
+//!   * policy -> runtime-input packing (masks + ℓ1 ranking)
+//!   * JSON parse of a meta manifest
+//!
+//!     cargo bench --bench hot_paths
+
+mod common;
+
+use galen::agent::{Ddpg, DdpgConfig, JointMapper, PolicyMapper, Transition};
+use galen::bench::Bencher;
+use galen::compress::{DiscretePolicy, PolicyInputs};
+use galen::hw::{CostModel, HwTarget, LatencySimulator};
+use galen::model::ir::test_fixtures::tiny_meta;
+use galen::model::{LayerKind, ModelIr};
+use galen::util::rng::Pcg64;
+
+fn bench_ir() -> ModelIr {
+    // prefer the real resnet18s manifest (21 layers) for realistic sizes
+    galen::model::load_meta(&galen::artifacts_dir().join("meta_resnet18s.json"))
+        .ok()
+        .and_then(|m| ModelIr::from_meta(&m).ok())
+        .unwrap_or_else(|| ModelIr::from_meta(&tiny_meta()).unwrap())
+}
+
+fn main() {
+    galen::util::logging::init(log::LevelFilter::Warn);
+    let mut b = Bencher::new();
+    Bencher::header();
+    let ir = bench_ir();
+    let mut rng = Pcg64::new(1);
+
+    // ---- DDPG: paper-sized nets (state ~30, actions 3, hidden 400/300) ----
+    let state_dim = 30;
+    let mut agent = Ddpg::new(state_dim, 3, DdpgConfig::default(), 7);
+    for _ in 0..2000 {
+        let s: Vec<f32> = (0..state_dim).map(|_| rng.next_f32()).collect();
+        let ns: Vec<f32> = (0..state_dim).map(|_| rng.next_f32()).collect();
+        let a: Vec<f32> = (0..3).map(|_| rng.next_f32()).collect();
+        agent.store(Transition {
+            state: s,
+            action: a,
+            reward: rng.next_f32(),
+            next_state: ns,
+            terminal: rng.below(20) == 0,
+        });
+    }
+    let probe: Vec<f32> = (0..state_dim).map(|_| rng.next_f32()).collect();
+    b.iter("ddpg/actor-inference (1 step)", || {
+        agent.act(&probe, true, false)
+    });
+    b.iter("ddpg/optimize (batch 128)", || agent.optimize());
+
+    // ---- replay sampling ----
+    let replay = agent.replay.clone();
+    let mut rrng = Pcg64::new(3);
+    b.iter("replay/sample-128", || replay.sample(128, &mut rrng));
+
+    // ---- hardware simulator ----
+    let sim = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 5);
+    let mapper = JointMapper::default();
+    let mut policies = Vec::new();
+    for _ in 0..64 {
+        let mut p = DiscretePolicy::reference(&ir);
+        for i in 0..ir.layers.len() {
+            mapper.apply(
+                &ir,
+                &mut p,
+                i,
+                &[rrng.next_f32(), rrng.next_f32(), rrng.next_f32()],
+            );
+        }
+        policies.push(p);
+    }
+    let mut pi = 0usize;
+    b.iter("hw/latency (full model policy)", || {
+        pi = (pi + 1) % policies.len();
+        sim.latency(&ir, &policies[pi])
+    });
+
+    // ---- policy -> runtime inputs (ℓ1 ranking + mask building) ----
+    let weights: std::collections::BTreeMap<String, (Vec<usize>, Vec<f32>)> = ir
+        .layers
+        .iter()
+        .map(|l| {
+            let shape = match l.kind {
+                LayerKind::Conv => vec![l.kernel, l.kernel, l.cin, l.cout],
+                LayerKind::Linear => vec![l.cin, l.cout],
+            };
+            let n: usize = shape.iter().product();
+            let mut v = vec![0.0f32; n];
+            for x in &mut v {
+                *x = rrng.next_f32() - 0.5;
+            }
+            (format!("{}.w", l.name), (shape, v))
+        })
+        .collect();
+    let rankings = galen::compress::precompute_rankings(&ir, &weights);
+    b.iter("compress/policy-input packing (cached ℓ1)", || {
+        pi = (pi + 1) % policies.len();
+        PolicyInputs::build_with_rankings(&ir, &policies[pi], &rankings).unwrap()
+    });
+
+    // ---- full search episode against the synthetic evaluator ----
+    let sens = galen::eval::SensitivityTable::disabled(
+        ir.layers.len(),
+        &galen::eval::SensitivityConfig::default(),
+        &ir.variant,
+    );
+    b.iter("search/episode (synthetic eval)", || {
+        let ev = galen::search::SimEvaluator::new(&ir);
+        let mut cfg = galen::search::SearchConfig::fast(galen::agent::AgentKind::Joint, 0.3);
+        cfg.episodes = 1;
+        cfg.warmup_episodes = 1;
+        cfg.log_every = 0;
+        let mut s = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 5);
+        galen::search::run_search(&ir, &sens, &ev, &mut s, &mapper, &cfg, None).unwrap()
+    });
+
+    // ---- JSON manifest parse ----
+    let meta_path = galen::artifacts_dir().join("meta_resnet18s.json");
+    if let Ok(text) = std::fs::read_to_string(&meta_path) {
+        b.iter("json/parse meta_resnet18s", || {
+            galen::util::json::Json::parse(&text).unwrap()
+        });
+    }
+
+    println!("\n(benchmarks feed EXPERIMENTS.md §Perf)");
+}

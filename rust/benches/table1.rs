@@ -1,0 +1,64 @@
+//! Table 1 regeneration: compressed-model performance per agent at target
+//! compression rates c = 0.3 and c = 0.2 (MACs, BOPs, latency, accuracy).
+//!
+//!     cargo bench --bench table1
+//!     GALEN_BENCH_VARIANT=resnet18s GALEN_BENCH_EPISODES=120 cargo bench --bench table1
+
+mod common;
+
+use galen::agent::AgentKind;
+use galen::bench::Bencher;
+use galen::coordinator::{table1_header, ExperimentRecord};
+
+fn main() {
+    if !common::artifacts_present() {
+        return;
+    }
+    let session = common::session().expect("session");
+    let mut b = Bencher::new();
+    let mut rows = Vec::new();
+
+    // uncompressed reference row
+    let reference = galen::compress::DiscretePolicy::reference(&session.ir);
+    let sim = session.simulator(1);
+    let base_lat = sim.latency(&session.ir, &reference);
+    rows.push(format!(
+        "{:16} {:>4} {:>10.3e} {:>10.3e} {:>8.2} ms {:>7.2} % {:>7.1} %",
+        "uncompressed",
+        "-",
+        reference.macs(&session.ir) as f64,
+        reference.bops(&session.ir) as f64,
+        base_lat * 1e3,
+        session.ir.base_test_acc * 100.0,
+        100.0
+    ));
+
+    for &target in &[0.3, 0.2] {
+        for agent in [AgentKind::Pruning, AgentKind::Quantization, AgentKind::Joint] {
+            let cfg = common::config(agent, target);
+            let outcome = b.once(
+                &format!("table1/{}/c{:.1}", agent.label(), target),
+                || session.search(&cfg).expect("search"),
+            );
+            let rec = ExperimentRecord {
+                name: format!(
+                    "table1_{}_{}_c{:03}",
+                    common::variant(),
+                    agent.label(),
+                    (target * 100.0) as u32
+                ),
+                config: cfg,
+                outcome,
+            };
+            rows.push(rec.table1_row());
+            rec.save(&session.ir, &galen::results_dir()).expect("save");
+        }
+    }
+
+    let header = table1_header();
+    println!("\n=== Table 1 ({} variant) ===\n{header}", common::variant());
+    for r in &rows {
+        println!("{r}");
+    }
+    common::save_rows(&format!("table1_{}", common::variant()), &header, &rows);
+}

@@ -1,0 +1,347 @@
+//! DDPG core (Lillicrap et al.) with the paper's hyperparameters.
+
+use crate::nn::{Activation, Adam, Mlp};
+use crate::tensor::Mat;
+use crate::util::rng::Pcg64;
+use crate::util::stats::{Ema, RunningNorm};
+
+use super::replay::{ReplayBuffer, Transition};
+
+#[derive(Clone, Debug)]
+pub struct DdpgConfig {
+    pub hidden: (usize, usize),
+    pub actor_lr: f32,
+    pub critic_lr: f32,
+    pub gamma: f32,
+    /// Polyak factor for the target networks.
+    pub tau: f32,
+    pub batch: usize,
+    pub replay_capacity: usize,
+    /// Initial exploration noise sigma (Eq. 7) and its per-episode decay.
+    pub sigma0: f64,
+    pub sigma_decay: f64,
+    /// Moving-average constant for reward normalization.
+    pub reward_ema: f64,
+    /// Gradient clip (global L2) for both networks.
+    pub grad_clip: f32,
+}
+
+impl Default for DdpgConfig {
+    fn default() -> Self {
+        Self {
+            hidden: (400, 300),
+            actor_lr: 1e-4,
+            critic_lr: 1e-3,
+            gamma: 0.99,
+            tau: 0.01,
+            batch: 128,
+            replay_capacity: 2000,
+            sigma0: 0.5,
+            sigma_decay: 0.95,
+            reward_ema: 0.05,
+            grad_clip: 5.0,
+        }
+    }
+}
+
+/// Actor-critic pair with targets, replay, normalizers and exploration state.
+pub struct Ddpg {
+    pub cfg: DdpgConfig,
+    pub actor: Mlp,
+    pub critic: Mlp,
+    actor_target: Mlp,
+    critic_target: Mlp,
+    actor_opt: Adam,
+    critic_opt: Adam,
+    pub replay: ReplayBuffer,
+    state_norm: RunningNorm,
+    reward_mean: Ema,
+    reward_scale: Ema,
+    pub sigma: f64,
+    rng: Pcg64,
+    state_dim: usize,
+    action_dim: usize,
+}
+
+impl Ddpg {
+    pub fn new(state_dim: usize, action_dim: usize, cfg: DdpgConfig, seed: u64) -> Self {
+        let mut rng = Pcg64::with_stream(seed, 0xddb6);
+        let (h1, h2) = cfg.hidden;
+        let actor = Mlp::new(
+            &[state_dim, h1, h2, action_dim],
+            &[Activation::Relu, Activation::Relu, Activation::Sigmoid],
+            &mut rng,
+        );
+        let critic = Mlp::new(
+            &[state_dim + action_dim, h1, h2, 1],
+            &[Activation::Relu, Activation::Relu, Activation::Linear],
+            &mut rng,
+        );
+        let actor_target = actor.clone();
+        let critic_target = critic.clone();
+        let actor_opt = Adam::new(&actor, cfg.actor_lr);
+        let critic_opt = Adam::new(&critic, cfg.critic_lr);
+        Self {
+            replay: ReplayBuffer::new(cfg.replay_capacity),
+            state_norm: RunningNorm::new(state_dim),
+            reward_mean: Ema::new(cfg.reward_ema),
+            reward_scale: Ema::new(cfg.reward_ema),
+            sigma: cfg.sigma0,
+            actor,
+            critic,
+            actor_target,
+            critic_target,
+            actor_opt,
+            critic_opt,
+            rng,
+            state_dim,
+            action_dim,
+            cfg,
+        }
+    }
+
+    pub fn state_dim(&self) -> usize {
+        self.state_dim
+    }
+
+    pub fn action_dim(&self) -> usize {
+        self.action_dim
+    }
+
+    fn normalized(&self, state: &[f32]) -> Vec<f32> {
+        let mut s = state.to_vec();
+        self.state_norm.normalize(&mut s);
+        s
+    }
+
+    /// Predict an action for one state.
+    /// `explore`: add Eq. 7 truncated-normal noise around the actor output.
+    /// `random`: ignore the actor entirely (warm-up episodes).
+    pub fn act(&mut self, state: &[f32], explore: bool, random: bool) -> Vec<f32> {
+        assert_eq!(state.len(), self.state_dim);
+        self.state_norm.update(state);
+        if random {
+            return (0..self.action_dim)
+                .map(|_| self.rng.next_f64() as f32)
+                .collect();
+        }
+        let s = self.normalized(state);
+        let mu = self.actor.forward1(&s);
+        if !explore {
+            return mu;
+        }
+        mu.into_iter()
+            .map(|m| self.rng.truncated_normal(m as f64, self.sigma, 0.0, 1.0) as f32)
+            .collect()
+    }
+
+    pub fn store(&mut self, t: Transition) {
+        self.replay.push(t);
+    }
+
+    /// End-of-episode: decay exploration noise.
+    pub fn end_episode(&mut self) {
+        self.sigma *= self.cfg.sigma_decay;
+    }
+
+    /// One optimization step (critic TD + actor policy gradient + soft
+    /// target updates) on a replay minibatch.  Returns (critic_loss, mean_q).
+    pub fn optimize(&mut self) -> Option<(f32, f32)> {
+        let batch_n = self.cfg.batch.min(self.replay.len());
+        if batch_n < 8 {
+            return None;
+        }
+        // ---- assemble batch (normalized states, normalized rewards) ----
+        let (states, actions, rewards, next_states, terminals) = {
+            let batch = self.replay.sample(batch_n, &mut self.rng);
+            let states = Mat::from_rows(
+                &batch.iter().map(|t| self.normalized(&t.state)).collect::<Vec<_>>(),
+            );
+            let actions =
+                Mat::from_rows(&batch.iter().map(|t| t.action.clone()).collect::<Vec<_>>());
+            let rewards: Vec<f32> = batch.iter().map(|t| t.reward).collect();
+            let next_states = Mat::from_rows(
+                &batch
+                    .iter()
+                    .map(|t| self.normalized(&t.next_state))
+                    .collect::<Vec<_>>(),
+            );
+            let terminals: Vec<bool> = batch.iter().map(|t| t.terminal).collect();
+            (states, actions, rewards, next_states, terminals)
+        };
+
+        // reward normalization by moving average (paper §Proposed Agents)
+        let batch_mean = rewards.iter().sum::<f32>() as f64 / rewards.len() as f64;
+        let mean = self.reward_mean.update(batch_mean);
+        let batch_scale = rewards
+            .iter()
+            .map(|&r| (r as f64 - mean).abs())
+            .sum::<f64>()
+            / rewards.len() as f64;
+        let scale = self.reward_scale.update(batch_scale).max(1e-3);
+        let norm_rewards: Vec<f32> = rewards
+            .iter()
+            .map(|&r| ((r as f64 - mean) / scale) as f32)
+            .collect();
+
+        // ---- critic update: y = r + gamma * Q'(s', mu'(s')) ----
+        let next_actions = self.actor_target.forward(&next_states);
+        let q_next = self
+            .critic_target
+            .forward(&next_states.hcat(&next_actions));
+        let mut y = Mat::zeros(batch_n, 1);
+        for i in 0..batch_n {
+            let bootstrap = if terminals[i] {
+                0.0
+            } else {
+                self.cfg.gamma * q_next.at(i, 0)
+            };
+            *y.at_mut(i, 0) = norm_rewards[i] + bootstrap;
+        }
+        let sa = states.hcat(&actions);
+        let cache = self.critic.forward_cached(&sa);
+        let q = cache.activations.last().unwrap();
+        let mut dout = Mat::zeros(batch_n, 1);
+        let mut critic_loss = 0.0f32;
+        for i in 0..batch_n {
+            let d = q.at(i, 0) - y.at(i, 0);
+            critic_loss += d * d / batch_n as f32;
+            *dout.at_mut(i, 0) = 2.0 * d / batch_n as f32;
+        }
+        let (mut cgrads, _) = self.critic.backward(&cache, &dout);
+        Mlp::clip_grads(&mut cgrads, self.cfg.grad_clip);
+        self.critic_opt.step(&mut self.critic, &cgrads);
+
+        // ---- actor update: ascend Q(s, mu(s)) ----
+        let acache = self.actor.forward_cached(&states);
+        let mu = acache.activations.last().unwrap().clone();
+        let sa_mu = states.hcat(&mu);
+        let ccache = self.critic.forward_cached(&sa_mu);
+        let q_mu = ccache.activations.last().unwrap();
+        let mean_q = q_mu.mean();
+        // dLoss/dQ = -1/N (maximize Q)
+        let dq = Mat::from_vec(batch_n, 1, vec![-1.0 / batch_n as f32; batch_n]);
+        let (_, dsa) = self.critic.backward(&ccache, &dq);
+        let (_, da) = dsa.hsplit(self.state_dim);
+        let (mut agrads, _) = self.actor.backward(&acache, &da);
+        Mlp::clip_grads(&mut agrads, self.cfg.grad_clip);
+        self.actor_opt.step(&mut self.actor, &agrads);
+
+        // ---- soft target updates ----
+        self.actor_target.soft_update_from(&self.actor, self.cfg.tau);
+        self.critic_target
+            .soft_update_from(&self.critic, self.cfg.tau);
+
+        Some((critic_loss, mean_q))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(state_dim: usize, action_dim: usize, seed: u64) -> Ddpg {
+        Ddpg::new(
+            state_dim,
+            action_dim,
+            DdpgConfig {
+                hidden: (32, 24),
+                batch: 16,
+                replay_capacity: 512,
+                ..Default::default()
+            },
+            seed,
+        )
+    }
+
+    #[test]
+    fn actions_in_unit_interval() {
+        let mut agent = mk(4, 2, 1);
+        for i in 0..50 {
+            let s = vec![i as f32, -1.0, 0.5, 2.0];
+            for &(e, r) in &[(false, false), (true, false), (false, true)] {
+                let a = agent.act(&s, e, r);
+                assert_eq!(a.len(), 2);
+                assert!(a.iter().all(|&x| (0.0..=1.0).contains(&x)), "{a:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn noise_decays() {
+        let mut agent = mk(2, 1, 2);
+        let s0 = agent.sigma;
+        for _ in 0..10 {
+            agent.end_episode();
+        }
+        assert!((agent.sigma - s0 * 0.95f64.powi(10)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn optimize_needs_data() {
+        let mut agent = mk(2, 1, 3);
+        assert!(agent.optimize().is_none());
+    }
+
+    /// End-to-end learning sanity: a 1-step bandit where reward = 1 - |a - 0.7|.
+    /// After training, the deterministic policy should act near 0.7.
+    #[test]
+    fn learns_simple_bandit() {
+        let mut agent = mk(2, 1, 4);
+        let state = vec![0.3f32, -0.2];
+        let mut rng = Pcg64::new(77);
+        for ep in 0..600 {
+            let random = ep < 40;
+            let a = agent.act(&state, true, random);
+            let reward = 1.0 - (a[0] - 0.7).abs();
+            agent.store(Transition {
+                state: state.clone(),
+                action: a,
+                reward,
+                next_state: state.clone(),
+                terminal: true,
+            });
+            agent.end_episode();
+            if ep >= 40 {
+                agent.optimize();
+            }
+            let _ = &mut rng;
+        }
+        let a = agent.act(&state, false, false);
+        assert!(
+            (a[0] - 0.7).abs() < 0.15,
+            "expected action near 0.7, got {}",
+            a[0]
+        );
+    }
+
+    #[test]
+    fn critic_loss_decreases_on_fixed_batch() {
+        let mut agent = mk(3, 2, 5);
+        let mut rng = Pcg64::new(9);
+        for _ in 0..64 {
+            let s: Vec<f32> = (0..3).map(|_| rng.next_f32()).collect();
+            let a: Vec<f32> = (0..2).map(|_| rng.next_f32()).collect();
+            let r = s[0] + a[0];
+            agent.store(Transition {
+                state: s.clone(),
+                action: a,
+                reward: r,
+                next_state: s,
+                terminal: true,
+            });
+        }
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..200 {
+            if let Some((loss, _)) = agent.optimize() {
+                first.get_or_insert(loss);
+                last = loss;
+            }
+        }
+        assert!(
+            last < first.unwrap(),
+            "critic loss should fall: first={first:?} last={last}"
+        );
+    }
+}

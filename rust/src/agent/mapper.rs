@@ -1,0 +1,283 @@
+//! Action -> policy mapping for the three agents.
+//!
+//! A mapper decides (a) which layers constitute the episode's time steps and
+//! (b) how a continuous action vector updates the `DiscretePolicy` at one
+//! layer, enforcing hardware constraints (channel rounding, MIX support
+//! fallback) exactly as the deployed runtime would.
+
+use crate::compress::{discretize, select_quant_mode, DiscretePolicy, DiscretizeOpts};
+#[cfg(test)]
+use crate::compress::QuantMode;
+use crate::hw::mix_supported;
+use crate::model::ModelIr;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AgentKind {
+    Pruning,
+    Quantization,
+    Joint,
+}
+
+impl AgentKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "pruning" | "prune" => Ok(Self::Pruning),
+            "quantization" | "quant" => Ok(Self::Quantization),
+            "joint" => Ok(Self::Joint),
+            other => anyhow::bail!("unknown agent kind '{other}' (pruning|quantization|joint)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Pruning => "pruning",
+            Self::Quantization => "quantization",
+            Self::Joint => "joint",
+        }
+    }
+}
+
+pub trait PolicyMapper: Send + Sync {
+    fn kind(&self) -> AgentKind;
+    fn action_dim(&self) -> usize;
+    /// Layer indices that get a time step, in forward order.
+    fn steps(&self, ir: &ModelIr) -> Vec<usize>;
+    /// Apply `action` to `policy` at layer `idx`.
+    fn apply(&self, ir: &ModelIr, policy: &mut DiscretePolicy, idx: usize, action: &[f32]);
+}
+
+/// Pruning agent: one action = channel compression ratio r (Eq. 4).
+#[derive(Clone, Debug)]
+pub struct PruningMapper {
+    pub opts: DiscretizeOpts,
+    /// Cap on the pruning ratio (keeps >= (1-max)·cout channels).
+    pub max_ratio: f64,
+}
+
+impl Default for PruningMapper {
+    fn default() -> Self {
+        Self {
+            opts: DiscretizeOpts::default(),
+            max_ratio: 0.9,
+        }
+    }
+}
+
+impl PruningMapper {
+    /// The channel-rounded variant used in sequential/joint comparisons
+    /// (paper appendix: "we applied the same channel rounding restriction
+    /// as for the joint agent").
+    pub fn rounded() -> Self {
+        Self {
+            opts: DiscretizeOpts {
+                channel_multiple: 32,
+                min_channels: 1,
+            },
+            max_ratio: 0.9,
+        }
+    }
+}
+
+impl PolicyMapper for PruningMapper {
+    fn kind(&self) -> AgentKind {
+        AgentKind::Pruning
+    }
+    fn action_dim(&self) -> usize {
+        1
+    }
+    fn steps(&self, ir: &ModelIr) -> Vec<usize> {
+        ir.prunable_layers()
+    }
+    fn apply(&self, ir: &ModelIr, policy: &mut DiscretePolicy, idx: usize, action: &[f32]) {
+        let l = &ir.layers[idx];
+        if !l.prunable {
+            return; // dependency-coupled layers never accept pruning actions
+        }
+        let r = (action[0] as f64).clamp(0.0, 1.0) * self.max_ratio;
+        policy.layers[idx].kept_channels = discretize(r, l.cout, self.opts);
+    }
+}
+
+/// Quantization agent: two actions (activation, weight) through the
+/// t_mix/t_int8 thresholds.
+#[derive(Clone, Debug)]
+pub struct QuantizationMapper {
+    /// MIX exploration-range cap (paper: 6 bits).
+    pub max_bits: u8,
+}
+
+impl Default for QuantizationMapper {
+    fn default() -> Self {
+        Self { max_bits: 6 }
+    }
+}
+
+impl PolicyMapper for QuantizationMapper {
+    fn kind(&self) -> AgentKind {
+        AgentKind::Quantization
+    }
+    fn action_dim(&self) -> usize {
+        2
+    }
+    fn steps(&self, ir: &ModelIr) -> Vec<usize> {
+        (0..ir.layers.len()).collect()
+    }
+    fn apply(&self, ir: &ModelIr, policy: &mut DiscretePolicy, idx: usize, action: &[f32]) {
+        let l = &ir.layers[idx];
+        let eff_cin = policy.effective_cin(ir, idx);
+        let eff_cout = policy.layers[idx].kept_channels;
+        let supported = mix_supported(l, eff_cin, eff_cout);
+        policy.layers[idx].quant = select_quant_mode(
+            (action[0] as f64).clamp(0.0, 1.0),
+            (action[1] as f64).clamp(0.0, 1.0),
+            supported,
+            self.max_bits,
+        );
+    }
+}
+
+/// Joint agent: [pruning ratio, activation action, weight action]; pruning
+/// rounds to multiples of 32 so consumers stay bit-serial-compatible.
+#[derive(Clone, Debug)]
+pub struct JointMapper {
+    pub prune: PruningMapper,
+    pub quant: QuantizationMapper,
+}
+
+impl Default for JointMapper {
+    fn default() -> Self {
+        Self {
+            prune: PruningMapper::rounded(),
+            quant: QuantizationMapper::default(),
+        }
+    }
+}
+
+impl PolicyMapper for JointMapper {
+    fn kind(&self) -> AgentKind {
+        AgentKind::Joint
+    }
+    fn action_dim(&self) -> usize {
+        3
+    }
+    fn steps(&self, ir: &ModelIr) -> Vec<usize> {
+        (0..ir.layers.len()).collect()
+    }
+    fn apply(&self, ir: &ModelIr, policy: &mut DiscretePolicy, idx: usize, action: &[f32]) {
+        // pruning first: the rounded channel count decides MIX support
+        self.prune.apply(ir, policy, idx, &action[..1]);
+        self.quant.apply(ir, policy, idx, &action[1..]);
+    }
+}
+
+/// Construct the default mapper for an agent kind.
+pub fn mapper_for(kind: AgentKind) -> Box<dyn PolicyMapper> {
+    match kind {
+        AgentKind::Pruning => Box::new(PruningMapper::default()),
+        AgentKind::Quantization => Box::new(QuantizationMapper::default()),
+        AgentKind::Joint => Box::new(JointMapper::default()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ir::test_fixtures::tiny_meta;
+    use crate::model::ModelIr;
+
+    fn ir() -> ModelIr {
+        ModelIr::from_meta(&tiny_meta()).unwrap()
+    }
+
+    #[test]
+    fn pruning_mapper_steps_only_prunable() {
+        let ir = ir();
+        let m = PruningMapper::default();
+        assert_eq!(m.steps(&ir), vec![1, 3]);
+    }
+
+    #[test]
+    fn pruning_action_monotone() {
+        let ir = ir();
+        let m = PruningMapper::default();
+        let mut kept = Vec::new();
+        for a in [0.0f32, 0.25, 0.5, 0.75, 1.0] {
+            let mut p = DiscretePolicy::reference(&ir);
+            m.apply(&ir, &mut p, 1, &[a]);
+            kept.push(p.layers[1].kept_channels);
+        }
+        assert_eq!(kept[0], ir.layers[1].cout);
+        for w in kept.windows(2) {
+            assert!(w[1] <= w[0], "{kept:?}");
+        }
+        assert!(*kept.last().unwrap() >= 1);
+    }
+
+    #[test]
+    fn pruning_refuses_dependent_layers() {
+        let ir = ir();
+        let m = PruningMapper::default();
+        let mut p = DiscretePolicy::reference(&ir);
+        m.apply(&ir, &mut p, 0, &[1.0]); // stem is group 0
+        assert_eq!(p.layers[0].kept_channels, ir.layers[0].cout);
+    }
+
+    #[test]
+    fn quant_mapper_thresholds_and_fallback() {
+        let ir = ir();
+        let m = QuantizationMapper::default();
+        let mut p = DiscretePolicy::reference(&ir);
+        m.apply(&ir, &mut p, 1, &[0.1, 0.1]);
+        assert_eq!(p.layers[1].quant, QuantMode::Fp32);
+        m.apply(&ir, &mut p, 1, &[0.3, 0.1]);
+        assert_eq!(p.layers[1].quant, QuantMode::Int8);
+        // tiny model never supports MIX (cin < 32) => INT8 fallback
+        m.apply(&ir, &mut p, 1, &[0.9, 0.9]);
+        assert_eq!(p.layers[1].quant, QuantMode::Int8);
+    }
+
+    #[test]
+    fn joint_mapper_combines() {
+        let ir = ir();
+        let m = JointMapper::default();
+        assert_eq!(m.action_dim(), 3);
+        let mut p = DiscretePolicy::reference(&ir);
+        m.apply(&ir, &mut p, 1, &[0.8, 0.3, 0.1]);
+        // channel rounding to 32 on an 8-wide layer keeps all 8
+        assert_eq!(p.layers[1].kept_channels, 8);
+        assert_eq!(p.layers[1].quant, QuantMode::Int8);
+    }
+
+    #[test]
+    fn joint_rounding_on_wide_layer() {
+        // fabricate a wide prunable layer to exercise the 32-rounding
+        let mut meta = tiny_meta();
+        meta.layers[1].cout = 128;
+        meta.layers[2].cin = 128;
+        for p in &mut meta.params {
+            if p.name == "s0b0.conv1.w" {
+                p.shape = vec![3, 3, 8, 128];
+            }
+            if p.name == "s0b0.conv2.w" {
+                p.shape = vec![3, 3, 128, 8];
+            }
+            if p.name.starts_with("s0b0.conv1.bn") {
+                p.shape = vec![128];
+            }
+        }
+        let ir = ModelIr::from_meta(&meta).unwrap();
+        let m = JointMapper::default();
+        let mut p = DiscretePolicy::reference(&ir);
+        m.apply(&ir, &mut p, 1, &[0.6, 0.0, 0.0]);
+        let kept = p.layers[1].kept_channels;
+        assert_eq!(kept % 32, 0, "kept={kept}");
+        assert!(kept < 128 && kept >= 32);
+    }
+
+    #[test]
+    fn agent_kind_parsing() {
+        assert_eq!(AgentKind::parse("joint").unwrap(), AgentKind::Joint);
+        assert_eq!(AgentKind::parse("prune").unwrap(), AgentKind::Pruning);
+        assert!(AgentKind::parse("nope").is_err());
+    }
+}

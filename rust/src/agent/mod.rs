@@ -1,0 +1,25 @@
+//! The three reinforcement-learning agents (paper §Proposed Agents).
+//!
+//! All share one DDPG core (actor 400/300 + Sigmoid, critic 400/300,
+//! Adam 1e-4/1e-3, gamma 0.99, replay 2000, batch 128, truncated-normal
+//! exploration noise sigma0=0.5 decaying 0.95/episode, running state
+//! standardization, moving-average reward normalization) and differ in the
+//! action space and the action -> policy mapping:
+//!
+//! * pruning agent      — 1 action/layer: channel compression ratio;
+//! * quantization agent — 2 actions/layer: activation + weight actions
+//!   mapped through the t_mix/t_int8 thresholds (Eq. 8);
+//! * joint agent        — 3 actions/layer: pruning (rounded to multiples of
+//!   32 for bit-serial compatibility) + both quantization actions.
+
+mod ddpg;
+mod mapper;
+mod replay;
+mod state;
+
+pub use ddpg::{Ddpg, DdpgConfig};
+pub use mapper::{
+    mapper_for, AgentKind, JointMapper, PolicyMapper, PruningMapper, QuantizationMapper,
+};
+pub use replay::{ReplayBuffer, Transition};
+pub use state::StateBuilder;

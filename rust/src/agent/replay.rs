@@ -1,0 +1,102 @@
+//! Experience replay buffer (paper: capacity 2000 transitions; the episode
+//! count it holds varies with the per-episode step count).
+
+use std::collections::VecDeque;
+
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Transition {
+    pub state: Vec<f32>,
+    pub action: Vec<f32>,
+    /// Per-episode shared reward (assigned to every step of the episode).
+    pub reward: f32,
+    pub next_state: Vec<f32>,
+    /// Last step of the episode (no bootstrap through the terminal).
+    pub terminal: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct ReplayBuffer {
+    cap: usize,
+    items: VecDeque<Transition>,
+}
+
+impl ReplayBuffer {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            cap,
+            items: VecDeque::with_capacity(cap),
+        }
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        if self.items.len() == self.cap {
+            self.items.pop_front();
+        }
+        self.items.push_back(t);
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Uniform sample with replacement-free indices (batch <= len).
+    pub fn sample<'a>(&'a self, batch: usize, rng: &mut Pcg64) -> Vec<&'a Transition> {
+        let n = self.items.len();
+        let k = batch.min(n);
+        rng.sample_indices(n, k)
+            .into_iter()
+            .map(|i| &self.items[i])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(r: f32) -> Transition {
+        Transition {
+            state: vec![r],
+            action: vec![0.5],
+            reward: r,
+            next_state: vec![r + 1.0],
+            terminal: false,
+        }
+    }
+
+    #[test]
+    fn bounded_capacity_fifo() {
+        let mut buf = ReplayBuffer::new(3);
+        for i in 0..5 {
+            buf.push(t(i as f32));
+        }
+        assert_eq!(buf.len(), 3);
+        // oldest (0, 1) evicted
+        let rewards: Vec<f32> = buf.items.iter().map(|t| t.reward).collect();
+        assert_eq!(rewards, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn sample_distinct_and_bounded() {
+        let mut buf = ReplayBuffer::new(100);
+        for i in 0..50 {
+            buf.push(t(i as f32));
+        }
+        let mut rng = Pcg64::new(1);
+        let s = buf.sample(20, &mut rng);
+        assert_eq!(s.len(), 20);
+        let s = buf.sample(200, &mut rng);
+        assert_eq!(s.len(), 50, "clamped to buffer size");
+    }
+}

@@ -1,0 +1,151 @@
+//! Agent state construction (paper: "a layer-specific state is constructed
+//! and passed to a reinforcement agent").
+//!
+//! Features per time step t (layer): static layer descriptors, dynamic
+//! MAC-budget accounting under the partial policy P_{e,t}, capability flags,
+//! the previous action a_{t-1}, and the layer's sensitivity profile
+//! (Eq. 5 probes) — the paper's central addition over AMC/HAQ.
+
+use crate::compress::DiscretePolicy;
+use crate::eval::SensitivityTable;
+use crate::hw::mix_supported;
+use crate::model::{LayerKind, ModelIr};
+
+pub struct StateBuilder {
+    max_channels: f32,
+    total_macs: f64,
+    img: f32,
+    action_dim: usize,
+    sens_dim: usize,
+}
+
+impl StateBuilder {
+    pub fn new(ir: &ModelIr, sens: &SensitivityTable, action_dim: usize) -> Self {
+        Self {
+            max_channels: ir.layers.iter().map(|l| l.cout).max().unwrap_or(1) as f32,
+            total_macs: ir.total_macs() as f64,
+            img: ir.img as f32,
+            action_dim,
+            sens_dim: sens.feature_dim(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        13 + self.action_dim + self.sens_dim
+    }
+
+    /// Build s_t for layer `idx` given the policy decided so far and the
+    /// previous action.
+    pub fn build(
+        &self,
+        ir: &ModelIr,
+        sens: &SensitivityTable,
+        policy: &DiscretePolicy,
+        idx: usize,
+        step: usize,
+        num_steps: usize,
+        prev_action: &[f32],
+    ) -> Vec<f32> {
+        let l = &ir.layers[idx];
+        let mut s = Vec::with_capacity(self.dim());
+        s.push(step as f32 / num_steps.max(1) as f32);
+        s.push((l.kind == LayerKind::Conv) as u8 as f32);
+        s.push((l.kind == LayerKind::Linear) as u8 as f32);
+        s.push(l.cin as f32 / self.max_channels);
+        s.push(l.cout as f32 / self.max_channels);
+        s.push(l.kernel as f32 / 3.0);
+        s.push(l.stride as f32 / 2.0);
+        s.push(l.out_spatial as f32 / self.img);
+        s.push(((l.macs() as f64 + 1.0).ln() / (self.total_macs + 1.0).ln()) as f32);
+
+        // MAC budget accounting under the partial policy: spent on layers
+        // before `idx` (already decided), original cost for the rest.
+        let mut done = 0u64;
+        let mut rest = 0u64;
+        for m in &ir.layers {
+            if m.index < idx {
+                let cin = policy.effective_cin(ir, m.index);
+                done += m.macs_at(cin, policy.layers[m.index].kept_channels);
+            } else {
+                rest += m.macs();
+            }
+        }
+        s.push((done as f64 / self.total_macs) as f32);
+        s.push((rest as f64 / self.total_macs) as f32);
+
+        s.push(l.prunable as u8 as f32);
+        s.push(mix_supported(l, l.cin, l.cout) as u8 as f32);
+
+        debug_assert_eq!(prev_action.len(), self.action_dim);
+        s.extend_from_slice(prev_action);
+        s.extend(sens.layer_features(idx));
+        debug_assert_eq!(s.len(), self.dim());
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::SensitivityConfig;
+    use crate::model::ir::test_fixtures::tiny_meta;
+    use crate::model::ModelIr;
+
+    fn setup() -> (ModelIr, SensitivityTable) {
+        let ir = ModelIr::from_meta(&tiny_meta()).unwrap();
+        let sens =
+            SensitivityTable::disabled(ir.layers.len(), &SensitivityConfig::default(), "tiny");
+        (ir, sens)
+    }
+
+    #[test]
+    fn state_dim_consistent() {
+        let (ir, sens) = setup();
+        let sb = StateBuilder::new(&ir, &sens, 3);
+        let p = DiscretePolicy::reference(&ir);
+        let s = sb.build(&ir, &sens, &p, 0, 0, ir.layers.len(), &[0.0; 3]);
+        assert_eq!(s.len(), sb.dim());
+        assert!(s.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn budget_features_move_with_progress() {
+        let (ir, sens) = setup();
+        let sb = StateBuilder::new(&ir, &sens, 1);
+        let p = DiscretePolicy::reference(&ir);
+        let n = ir.layers.len();
+        let s0 = sb.build(&ir, &sens, &p, 0, 0, n, &[0.0]);
+        let s_last = sb.build(&ir, &sens, &p, n - 1, n - 1, n, &[0.0]);
+        // done fraction grows, rest fraction shrinks
+        assert!(s_last[9] > s0[9]);
+        assert!(s_last[10] < s0[10]);
+        // step fraction
+        assert_eq!(s0[0], 0.0);
+        assert!((s_last[0] - (n - 1) as f32 / n as f32).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pruning_reflected_in_done_macs() {
+        let (ir, sens) = setup();
+        let sb = StateBuilder::new(&ir, &sens, 1);
+        let mut p = DiscretePolicy::reference(&ir);
+        let full = sb.build(&ir, &sens, &p, 3, 3, ir.layers.len(), &[0.0]);
+        p.layers[1].kept_channels = 2;
+        let pruned = sb.build(&ir, &sens, &p, 3, 3, ir.layers.len(), &[0.0]);
+        assert!(pruned[9] < full[9]);
+    }
+
+    #[test]
+    fn capability_flags() {
+        let (ir, sens) = setup();
+        let sb = StateBuilder::new(&ir, &sens, 1);
+        let p = DiscretePolicy::reference(&ir);
+        let n = ir.layers.len();
+        let stem = sb.build(&ir, &sens, &p, 0, 0, n, &[0.0]);
+        assert_eq!(stem[11], 0.0, "stem not prunable");
+        let conv1 = sb.build(&ir, &sens, &p, 1, 1, n, &[0.0]);
+        assert_eq!(conv1[11], 1.0);
+        // tiny model: cin=8 < 32 => MIX unsupported everywhere
+        assert_eq!(stem[12], 0.0);
+    }
+}

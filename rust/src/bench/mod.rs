@@ -1,0 +1,177 @@
+//! Mini-criterion: the benchmark harness behind `cargo bench` (criterion is
+//! not available offline).
+//!
+//! Two kinds of benches share it:
+//! * microbenches (`Bencher::iter`) — warmup, adaptive iteration count,
+//!   mean/median/p95 over wall-clock samples;
+//! * experiment harnesses (paper tables/figures) — long-running RL searches
+//!   that print the paper's rows; they use `Bencher::once` so `cargo bench`
+//!   drives them uniformly.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub iters_per_sample: u64,
+}
+
+impl BenchStats {
+    pub fn mean_ns(&self) -> f64 {
+        crate::util::stats::mean(&self.samples) / self.iters_per_sample as f64
+    }
+    pub fn median_ns(&self) -> f64 {
+        crate::util::stats::median(&self.samples) / self.iters_per_sample as f64
+    }
+    pub fn p95_ns(&self) -> f64 {
+        crate::util::stats::percentile(&self.samples, 95.0) / self.iters_per_sample as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:40} {:>12} {:>12} {:>12}",
+            self.name,
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.p95_ns())
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bencher {
+    pub sample_count: usize,
+    pub target_sample_time: Duration,
+    pub warmup: Duration,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self {
+            sample_count: 20,
+            target_sample_time: Duration::from_millis(100),
+            warmup: Duration::from_millis(200),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn fast() -> Self {
+        Self {
+            sample_count: 10,
+            target_sample_time: Duration::from_millis(30),
+            warmup: Duration::from_millis(50),
+            results: Vec::new(),
+        }
+    }
+
+    /// Microbench: measures `f` with warmup + adaptive batching.
+    pub fn iter<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &BenchStats {
+        // warmup + calibration
+        let warm_start = Instant::now();
+        let mut calib_iters = 0u64;
+        while warm_start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+        let iters = ((self.target_sample_time.as_secs_f64() / per_iter).ceil() as u64).max(1);
+
+        let mut samples = Vec::with_capacity(self.sample_count);
+        for _ in 0..self.sample_count {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let stats = BenchStats {
+            name: name.to_string(),
+            samples,
+            iters_per_sample: iters,
+        };
+        println!("{}", stats.report());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Experiment harness: run once, report wall time.
+    pub fn once<R>(&mut self, name: &str, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        let dt = t0.elapsed();
+        let stats = BenchStats {
+            name: name.to_string(),
+            samples: vec![dt.as_nanos() as f64],
+            iters_per_sample: 1,
+        };
+        println!("{:40} completed in {}", name, fmt_ns(dt.as_nanos() as f64));
+        self.results.push(stats);
+        r
+    }
+
+    pub fn header() {
+        println!(
+            "{:40} {:>12} {:>12} {:>12}",
+            "benchmark", "median", "mean", "p95"
+        );
+        println!("{}", "-".repeat(80));
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn microbench_produces_stats() {
+        let mut b = Bencher {
+            sample_count: 3,
+            target_sample_time: Duration::from_micros(200),
+            warmup: Duration::from_micros(200),
+            results: Vec::new(),
+        };
+        let s = b.iter("noop-ish", || std::hint::black_box(1 + 1));
+        assert_eq!(s.samples.len(), 3);
+        assert!(s.mean_ns() >= 0.0);
+        assert!(s.p95_ns() >= s.median_ns() * 0.5);
+    }
+
+    #[test]
+    fn once_returns_value() {
+        let mut b = Bencher::fast();
+        let v = b.once("compute", || 21 * 2);
+        assert_eq!(v, 42);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

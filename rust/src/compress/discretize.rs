@@ -1,0 +1,114 @@
+//! Eq. 4 inverse mapping from continuous compression ratios to discrete
+//! CMPs, plus the hardware-motivated channel rounding (bit-serial operators
+//! need channel multiples of 32/8 — paper §Direct Metric).
+
+/// Options controlling the ratio -> channel-count mapping of one layer.
+#[derive(Clone, Copy, Debug)]
+pub struct DiscretizeOpts {
+    /// Round the kept-channel count up to a multiple (e.g. 32 for joint
+    /// agents so pruned layers stay MIX-compatible). 1 = no rounding.
+    pub channel_multiple: usize,
+    /// Lower bound on kept channels (>= 1).
+    pub min_channels: usize,
+}
+
+impl Default for DiscretizeOpts {
+    fn default() -> Self {
+        Self {
+            channel_multiple: 1,
+            min_channels: 1,
+        }
+    }
+}
+
+/// Round `x` up to a multiple of `m` (m >= 1).
+pub fn round_to_multiple(x: usize, m: usize) -> usize {
+    if m <= 1 {
+        return x;
+    }
+    x.div_ceil(m) * m
+}
+
+/// Eq. 4: d_v(r) = floor((1 - r) * v) + 1, then hardware rounding.
+///
+/// `r` is the compression ratio in [0, 1] (0 = keep everything), `v` the
+/// reference (original channel count).  Returns the kept channel count in
+/// [min_channels.., v].
+pub fn discretize(r: f64, v: usize, opts: DiscretizeOpts) -> usize {
+    let r = r.clamp(0.0, 1.0);
+    let base = ((1.0 - r) * v as f64).floor() as usize + 1;
+    let base = base.min(v).max(opts.min_channels);
+    round_to_multiple(base, opts.channel_multiple).min(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_at_zero() {
+        // r=0 keeps all channels: floor(1*64)+1 = 65 clamped to 64
+        assert_eq!(discretize(0.0, 64, DiscretizeOpts::default()), 64);
+    }
+
+    #[test]
+    fn max_compression_keeps_one() {
+        assert_eq!(discretize(1.0, 64, DiscretizeOpts::default()), 1);
+    }
+
+    #[test]
+    fn monotone_nonincreasing_in_r() {
+        let mut prev = usize::MAX;
+        for i in 0..=100 {
+            let r = i as f64 / 100.0;
+            let c = discretize(r, 128, DiscretizeOpts::default());
+            assert!(c <= prev, "r={r} c={c} prev={prev}");
+            assert!((1..=128).contains(&c));
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn channel_rounding_to_32() {
+        let opts = DiscretizeOpts {
+            channel_multiple: 32,
+            min_channels: 1,
+        };
+        // any ratio lands on {32, 64, 96, ...}
+        for i in 0..=20 {
+            let c = discretize(i as f64 / 20.0, 256, opts);
+            assert_eq!(c % 32, 0, "c={c}");
+            assert!(c >= 32 && c <= 256);
+        }
+        // small layers cannot round above their width
+        assert_eq!(discretize(0.9, 32, opts), 32);
+    }
+
+    #[test]
+    fn min_channels_respected() {
+        let opts = DiscretizeOpts {
+            channel_multiple: 1,
+            min_channels: 4,
+        };
+        assert_eq!(discretize(1.0, 64, opts), 4);
+    }
+
+    #[test]
+    fn covers_full_range() {
+        // Eq.4 must be able to reach every channel count for m=1
+        let mut seen = std::collections::BTreeSet::new();
+        for i in 0..=4000 {
+            seen.insert(discretize(i as f64 / 4000.0, 16, DiscretizeOpts::default()));
+        }
+        assert_eq!(seen.len(), 16);
+    }
+
+    #[test]
+    fn round_to_multiple_basics() {
+        assert_eq!(round_to_multiple(1, 32), 32);
+        assert_eq!(round_to_multiple(32, 32), 32);
+        assert_eq!(round_to_multiple(33, 32), 64);
+        assert_eq!(round_to_multiple(7, 1), 7);
+        assert_eq!(round_to_multiple(0, 8), 0);
+    }
+}

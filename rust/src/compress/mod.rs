@@ -1,0 +1,16 @@
+//! Compression policies and their mapping chain (paper Eqs. 1, 4, 8):
+//!
+//! agent action `a ∈ [0,1]^N`  →  continuous compression parameters `r`
+//! →  discrete, hardware-specific CMPs (channel counts, bit widths)
+//! →  runtime policy inputs (masks + bit scalars) for the PJRT artifact.
+
+mod discretize;
+mod policy;
+mod quant_mode;
+
+pub use discretize::{discretize, round_to_multiple, DiscretizeOpts};
+pub use policy::{
+    l1_channel_ranking, precompute_rankings, ContinuousPolicy, DiscretePolicy, LayerCmp,
+    PolicyInputs,
+};
+pub use quant_mode::{select_quant_mode, QuantMode, T_INT8, T_MIX};

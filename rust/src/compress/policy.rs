@@ -1,0 +1,341 @@
+//! Policy representations along the mapping chain, and the ℓ1 channel
+//! ranking (Li et al. 2017) that picks *which* channels a pruning decision
+//! removes.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::quant_mode::QuantMode;
+use crate::model::{LayerKind, ModelIr};
+
+/// Continuous per-layer compression parameters r (paper Eq. 1): one entry
+/// per layer per method, all in [0, 1].  Kept for logging/analysis; the
+/// agents map actions straight to `DiscretePolicy`.
+#[derive(Clone, Debug, Default)]
+pub struct ContinuousPolicy {
+    /// layer index -> pruning ratio r (0 = keep all).
+    pub prune: BTreeMap<usize, f64>,
+    /// layer index -> (activation action, weight action).
+    pub quant: BTreeMap<usize, (f64, f64)>,
+}
+
+/// Discrete compression parameters of one layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerCmp {
+    /// Output channels kept (== original width when unpruned).
+    pub kept_channels: usize,
+    pub quant: QuantMode,
+}
+
+/// A complete discrete compression policy: one `LayerCmp` per IR layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DiscretePolicy {
+    pub layers: Vec<LayerCmp>,
+}
+
+impl DiscretePolicy {
+    /// The reference policy P_r: no pruning, no quantization.
+    pub fn reference(ir: &ModelIr) -> Self {
+        Self {
+            layers: ir
+                .layers
+                .iter()
+                .map(|l| LayerCmp {
+                    kept_channels: l.cout,
+                    quant: QuantMode::Fp32,
+                })
+                .collect(),
+        }
+    }
+
+    /// Effective input channels of layer `i` after pruning of its producers:
+    /// conv1 layers read the (unpruned) residual stream; conv2 reads its
+    /// block's conv1.  Uses the IR consumer wiring in reverse.
+    pub fn effective_cin(&self, ir: &ModelIr, i: usize) -> usize {
+        for (p, consumers) in ir.consumers.iter().enumerate() {
+            if consumers.contains(&i) {
+                return self.layers[p].kept_channels;
+            }
+        }
+        ir.layers[i].cin
+    }
+
+    /// Total MACs under this policy (pruning-aware; per sample).
+    pub fn macs(&self, ir: &ModelIr) -> u64 {
+        ir.layers
+            .iter()
+            .map(|l| {
+                let cin = self.effective_cin(ir, l.index);
+                l.macs_at(cin, self.layers[l.index].kept_channels)
+            })
+            .sum()
+    }
+
+    /// Total BOPs (paper: MACs x w_bits x a_bits) under this policy.
+    pub fn bops(&self, ir: &ModelIr) -> u64 {
+        ir.layers
+            .iter()
+            .map(|l| {
+                let cin = self.effective_cin(ir, l.index);
+                let macs = l.macs_at(cin, self.layers[l.index].kept_channels);
+                let (wb, ab) = self.layers[l.index].quant.bits();
+                macs * wb as u64 * ab as u64
+            })
+            .sum()
+    }
+
+    /// Parameter count under this policy.
+    pub fn params(&self, ir: &ModelIr) -> u64 {
+        ir.layers
+            .iter()
+            .map(|l| {
+                let cin = self.effective_cin(ir, l.index);
+                l.params_at(cin, self.layers[l.index].kept_channels)
+            })
+            .sum()
+    }
+
+    /// Human-readable per-layer summary (Fig 3 style).
+    pub fn describe(&self, ir: &ModelIr) -> String {
+        let mut s = String::new();
+        for l in &ir.layers {
+            let c = &self.layers[l.index];
+            s.push_str(&format!(
+                "{:14} {:>4}/{:<4} {}\n",
+                l.name,
+                c.kept_channels,
+                l.cout,
+                c.quant.label()
+            ));
+        }
+        s
+    }
+}
+
+/// Flattened runtime policy inputs for the PJRT artifact, in policy-manifest
+/// order (mask vectors and bit scalars).
+#[derive(Clone, Debug)]
+pub struct PolicyInputs {
+    /// One flat f32 buffer per policy-manifest entry.
+    pub buffers: Vec<Vec<f32>>,
+}
+
+/// ℓ1 ranking of output channels: indices sorted by *descending* ℓ1 norm
+/// (keep-first order).  `w` is the flat weight tensor, `shape` its dims with
+/// the output-channel axis last (HWIO conv / [in, out] linear).
+pub fn l1_channel_ranking(w: &[f32], shape: &[usize]) -> Vec<usize> {
+    let cout = *shape.last().expect("empty shape");
+    assert_eq!(w.len() % cout, 0);
+    let mut norms = vec![0.0f64; cout];
+    for (i, &x) in w.iter().enumerate() {
+        norms[i % cout] += x.abs() as f64;
+    }
+    let mut idx: Vec<usize> = (0..cout).collect();
+    idx.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+    idx
+}
+
+/// Precomputed ℓ1 keep-first channel rankings per conv layer (weights are
+/// fixed during a search, so rankings are computed once — §Perf).
+pub fn precompute_rankings(
+    ir: &ModelIr,
+    weights_by_name: &BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+) -> BTreeMap<String, Vec<usize>> {
+    let mut out = BTreeMap::new();
+    for l in &ir.layers {
+        if l.kind == LayerKind::Conv {
+            if let Some((shape, w)) = weights_by_name.get(&format!("{}.w", l.name)) {
+                out.insert(l.name.clone(), l1_channel_ranking(w, shape));
+            }
+        }
+    }
+    out
+}
+
+impl PolicyInputs {
+    /// Build the runtime inputs for `policy`.
+    ///
+    /// `weights_by_name` supplies the conv/fc weight tensors for the ℓ1
+    /// strategy; pass the loaded `weights_<variant>.gten` map.  Masks keep
+    /// the `kept_channels` channels of largest ℓ1 norm (paper: "identify the
+    /// channels with least magnitude weights and remove them").
+    pub fn build(
+        ir: &ModelIr,
+        policy: &DiscretePolicy,
+        weights_by_name: &BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+    ) -> Result<Self> {
+        let rankings = precompute_rankings(ir, weights_by_name);
+        Self::build_with_rankings(ir, policy, &rankings)
+    }
+
+    /// Hot-path variant with precomputed rankings (see `precompute_rankings`).
+    pub fn build_with_rankings(
+        ir: &ModelIr,
+        policy: &DiscretePolicy,
+        rankings: &BTreeMap<String, Vec<usize>>,
+    ) -> Result<Self> {
+        if policy.layers.len() != ir.layers.len() {
+            bail!(
+                "policy has {} layers, model {}",
+                policy.layers.len(),
+                ir.layers.len()
+            );
+        }
+        let mut buffers = vec![Vec::new(); ir.policy_index.len()];
+        for l in &ir.layers {
+            let cmp = &policy.layers[l.index];
+            if cmp.kept_channels == 0 || cmp.kept_channels > l.cout {
+                bail!("{}: kept_channels {} out of range", l.name, cmp.kept_channels);
+            }
+            let (wb, ab) = cmp.quant.policy_bits();
+            if l.kind == LayerKind::Conv {
+                let mask_pos = ir
+                    .policy_pos(&format!("{}.mask", l.name))
+                    .ok_or_else(|| anyhow::anyhow!("no mask input for {}", l.name))?;
+                let mut mask = vec![0.0f32; l.cout];
+                if cmp.kept_channels == l.cout {
+                    mask.fill(1.0);
+                } else {
+                    let ranking = rankings
+                        .get(&l.name)
+                        .ok_or_else(|| anyhow::anyhow!("missing ranking for {}", l.name))?;
+                    for &c in ranking.iter().take(cmp.kept_channels) {
+                        mask[c] = 1.0;
+                    }
+                }
+                buffers[mask_pos] = mask;
+            }
+            let wpos = ir
+                .policy_pos(&format!("{}.w_bits", l.name))
+                .ok_or_else(|| anyhow::anyhow!("no w_bits input for {}", l.name))?;
+            let apos = ir
+                .policy_pos(&format!("{}.a_bits", l.name))
+                .ok_or_else(|| anyhow::anyhow!("no a_bits input for {}", l.name))?;
+            buffers[wpos] = vec![wb];
+            buffers[apos] = vec![ab];
+        }
+        Ok(Self { buffers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelIr;
+
+    fn ir() -> ModelIr {
+        ModelIr::from_meta(&crate::model::ir::test_fixtures::tiny_meta()).unwrap()
+    }
+
+    fn weights_for(ir: &ModelIr) -> BTreeMap<String, (Vec<usize>, Vec<f32>)> {
+        let mut m = BTreeMap::new();
+        for l in &ir.layers {
+            let shape = match l.kind {
+                LayerKind::Conv => vec![l.kernel, l.kernel, l.cin, l.cout],
+                LayerKind::Linear => vec![l.cin, l.cout],
+            };
+            let n: usize = shape.iter().product();
+            // deterministic weights: channel c has magnitude ~ c+1 so the ℓ1
+            // ranking is the identity reversed (largest channel index first)
+            let cout = l.cout;
+            let w: Vec<f32> = (0..n).map(|i| (i % cout) as f32 + 1.0).collect();
+            m.insert(format!("{}.w", l.name), (shape, w));
+        }
+        m
+    }
+
+    #[test]
+    fn reference_policy_counts() {
+        let ir = ir();
+        let p = DiscretePolicy::reference(&ir);
+        assert_eq!(p.macs(&ir), ir.total_macs());
+        assert_eq!(p.bops(&ir), ir.total_macs() * 32 * 32);
+        assert_eq!(p.params(&ir), ir.total_params());
+    }
+
+    #[test]
+    fn pruning_shrinks_consumer_macs() {
+        let ir = ir();
+        let mut p = DiscretePolicy::reference(&ir);
+        // prune s0b0.conv1 (index 1) to half
+        p.layers[1].kept_channels = 4;
+        let conv2 = &ir.layers[2];
+        assert_eq!(p.effective_cin(&ir, 2), 4);
+        let macs = p.macs(&ir);
+        let expect_delta = conv2.macs() - conv2.macs_at(4, conv2.cout)
+            + (ir.layers[1].macs() - ir.layers[1].macs_at(ir.layers[1].cin, 4));
+        assert_eq!(ir.total_macs() - macs, expect_delta);
+    }
+
+    #[test]
+    fn quant_shrinks_bops_not_macs() {
+        let ir = ir();
+        let mut p = DiscretePolicy::reference(&ir);
+        p.layers[0].quant = QuantMode::Int8;
+        assert_eq!(p.macs(&ir), ir.total_macs());
+        assert!(p.bops(&ir) < ir.total_macs() * 32 * 32);
+    }
+
+    #[test]
+    fn l1_ranking_orders_by_magnitude() {
+        // 2 channels: channel 1 bigger
+        let w = vec![1.0, 10.0, 1.0, 10.0]; // shape [2, 2] (in, out)
+        assert_eq!(l1_channel_ranking(&w, &[2, 2]), vec![1, 0]);
+        // negative magnitudes count via |.|
+        let w = vec![-5.0, 1.0, -5.0, 1.0];
+        assert_eq!(l1_channel_ranking(&w, &[2, 2]), vec![0, 1]);
+    }
+
+    #[test]
+    fn policy_inputs_layout() {
+        let ir = ir();
+        let weights = weights_for(&ir);
+        let mut p = DiscretePolicy::reference(&ir);
+        p.layers[1].kept_channels = 4; // prune conv1 to 4 of 8
+        p.layers[3].quant = QuantMode::Mix {
+            w_bits: 3,
+            a_bits: 5,
+        };
+        p.layers[6].quant = QuantMode::Int8;
+        let inputs = PolicyInputs::build(&ir, &p, &weights).unwrap();
+        assert_eq!(inputs.buffers.len(), ir.policy_index.len());
+        // mask of layer 1 has exactly 4 ones, on the largest-ℓ1 channels (4..8)
+        let mask = &inputs.buffers[ir.policy_pos("s0b0.conv1.mask").unwrap()];
+        assert_eq!(mask.iter().filter(|&&x| x == 1.0).count(), 4);
+        assert_eq!(&mask[4..], &[1.0, 1.0, 1.0, 1.0]);
+        // bit scalars
+        assert_eq!(
+            inputs.buffers[ir.policy_pos("s1b0.conv1.w_bits").unwrap()],
+            vec![3.0]
+        );
+        assert_eq!(
+            inputs.buffers[ir.policy_pos("s1b0.conv1.a_bits").unwrap()],
+            vec![5.0]
+        );
+        assert_eq!(
+            inputs.buffers[ir.policy_pos("fc.w_bits").unwrap()],
+            vec![8.0]
+        );
+        // unpruned conv masks are all ones
+        let stem_mask = &inputs.buffers[ir.policy_pos("stem.mask").unwrap()];
+        assert!(stem_mask.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn policy_inputs_rejects_bad_channels() {
+        let ir = ir();
+        let weights = weights_for(&ir);
+        let mut p = DiscretePolicy::reference(&ir);
+        p.layers[0].kept_channels = 0;
+        assert!(PolicyInputs::build(&ir, &p, &weights).is_err());
+    }
+
+    #[test]
+    fn describe_contains_layers() {
+        let ir = ir();
+        let p = DiscretePolicy::reference(&ir);
+        let d = p.describe(&ir);
+        assert!(d.contains("stem") && d.contains("fc") && d.contains("FP32"));
+    }
+}

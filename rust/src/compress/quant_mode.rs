@@ -1,0 +1,159 @@
+//! Quantization-method selection (paper §Quantization Implementation
+//! Details): thresholds over the predicted actions pick FP32 / INT8 / MIX,
+//! and Eq. 8 rescales the action into the MIX compression parameter.
+
+/// MIX threshold t_mix (paper: 0.5).
+pub const T_MIX: f64 = 0.5;
+/// INT8 threshold t_int8 (paper: 0.2).
+pub const T_INT8: f64 = 0.2;
+
+/// The quantization mode of one layer after discretization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMode {
+    /// No quantization (single-precision float).
+    Fp32,
+    /// Fixed-point 8-bit integer quantization.
+    Int8,
+    /// Mixed precision with independent weight/activation bit widths.
+    Mix { w_bits: u8, a_bits: u8 },
+}
+
+impl QuantMode {
+    /// Effective (weight, activation) bit widths for BOPs accounting.
+    pub fn bits(&self) -> (u32, u32) {
+        match self {
+            QuantMode::Fp32 => (32, 32),
+            QuantMode::Int8 => (8, 8),
+            QuantMode::Mix { w_bits, a_bits } => (*w_bits as u32, *a_bits as u32),
+        }
+    }
+
+    /// Runtime policy scalars for the artifact (0 = bypass/FP32).
+    pub fn policy_bits(&self) -> (f32, f32) {
+        match self {
+            QuantMode::Fp32 => (0.0, 0.0),
+            QuantMode::Int8 => (8.0, 8.0),
+            QuantMode::Mix { w_bits, a_bits } => (*w_bits as f32, *a_bits as f32),
+        }
+    }
+
+    pub fn is_mix(&self) -> bool {
+        matches!(self, QuantMode::Mix { .. })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            QuantMode::Fp32 => "FP32".into(),
+            QuantMode::Int8 => "INT8".into(),
+            QuantMode::Mix { w_bits, a_bits } => format!("MIX(w{w_bits}/a{a_bits})"),
+        }
+    }
+}
+
+/// Eq. 8: rescale action above t_mix into the MIX compression ratio r.
+/// (The paper's printed min/max order is swapped; the intended clamp to
+/// [0, 1] is used here.)
+fn mix_ratio(action: f64) -> f64 {
+    ((action - T_MIX) / (1.0 - T_MIX)).clamp(0.0, 1.0)
+}
+
+/// Eq. 4 applied to bit widths: ratio r -> discrete bits in [1, max_bits].
+fn mix_bits(r: f64, max_bits: u8) -> u8 {
+    (((1.0 - r) * max_bits as f64).floor() as i64 + 1).clamp(1, max_bits as i64) as u8
+}
+
+/// Map the (activation, weight) quantization actions of a layer to a mode.
+///
+/// Paper: if either action exceeds t_mix => MIX (falling back to INT8 where
+/// unsupported); else if either exceeds t_int8 => INT8; else FP32.
+/// `max_bits` limits the MIX exploration range (paper uses 6: bit-serial
+/// beyond 6 bits is slower than INT8 on the target).
+pub fn select_quant_mode(
+    a_act: f64,
+    a_weight: f64,
+    mix_supported: bool,
+    max_bits: u8,
+) -> QuantMode {
+    debug_assert!((0.0..=1.0).contains(&a_act) && (0.0..=1.0).contains(&a_weight));
+    if a_act > T_MIX || a_weight > T_MIX {
+        if mix_supported {
+            let r_a = mix_ratio(a_act);
+            let r_w = mix_ratio(a_weight);
+            return QuantMode::Mix {
+                w_bits: mix_bits(r_w, max_bits),
+                a_bits: mix_bits(r_a, max_bits),
+            };
+        }
+        return QuantMode::Int8;
+    }
+    if a_act > T_INT8 || a_weight > T_INT8 {
+        return QuantMode::Int8;
+    }
+    QuantMode::Fp32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thresholds() {
+        assert_eq!(select_quant_mode(0.1, 0.1, true, 6), QuantMode::Fp32);
+        assert_eq!(select_quant_mode(0.3, 0.1, true, 6), QuantMode::Int8);
+        assert_eq!(select_quant_mode(0.1, 0.25, true, 6), QuantMode::Int8);
+        assert!(select_quant_mode(0.7, 0.7, true, 6).is_mix());
+        // MIX unsupported falls back to INT8, never FP32
+        assert_eq!(select_quant_mode(0.9, 0.9, false, 6), QuantMode::Int8);
+    }
+
+    #[test]
+    fn mix_bit_mapping_monotone() {
+        // stronger action (closer to 1) => fewer bits
+        let bits =
+            |a: f64| match select_quant_mode(a, a, true, 6) {
+                QuantMode::Mix { w_bits, .. } => w_bits,
+                m => panic!("expected mix, got {m:?}"),
+            };
+        let mut prev = 7;
+        for a in [0.55, 0.65, 0.75, 0.85, 0.95, 1.0] {
+            let b = bits(a);
+            assert!(b <= prev, "a={a} bits={b} prev={prev}");
+            assert!((1..=6).contains(&b));
+            prev = b;
+        }
+        assert_eq!(bits(1.0), 1); // max action => 1 bit
+        assert_eq!(bits(0.5 + 1e-9), 6); // just over threshold => max bits
+    }
+
+    #[test]
+    fn independent_w_a_bits() {
+        match select_quant_mode(0.6, 0.95, true, 6) {
+            QuantMode::Mix { w_bits, a_bits } => {
+                assert!(w_bits < a_bits, "w={w_bits} a={a_bits}");
+            }
+            m => panic!("{m:?}"),
+        }
+    }
+
+    #[test]
+    fn bops_bits() {
+        assert_eq!(QuantMode::Fp32.bits(), (32, 32));
+        assert_eq!(QuantMode::Int8.bits(), (8, 8));
+        assert_eq!(QuantMode::Mix { w_bits: 3, a_bits: 5 }.bits(), (3, 5));
+    }
+
+    #[test]
+    fn policy_bits_bypass_semantics() {
+        assert_eq!(QuantMode::Fp32.policy_bits(), (0.0, 0.0));
+        assert_eq!(QuantMode::Int8.policy_bits(), (8.0, 8.0));
+    }
+
+    #[test]
+    fn max_bits_respected() {
+        for a in [0.51, 0.7, 0.99] {
+            if let QuantMode::Mix { w_bits, a_bits } = select_quant_mode(a, a, true, 4) {
+                assert!(w_bits <= 4 && a_bits <= 4);
+            }
+        }
+    }
+}

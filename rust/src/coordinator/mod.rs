@@ -1,0 +1,16 @@
+//! Experiment coordinator: wires runtime + evaluator + simulator + search
+//! into the paper's experiment protocols and persists results.
+//!
+//! * `Session` — owns the PJRT evaluator, latency simulator and sensitivity
+//!   table for one model variant / hardware target.
+//! * `search` / `sweep` — single searches and target-rate sweeps (Table 1,
+//!   Figures 3-4).
+//! * `sequential` — the appendix's prune-then-quantize / quantize-then-prune
+//!   schemes (Figure 5).
+//! * result records are serialized to `results/*.json` for EXPERIMENTS.md.
+
+mod report;
+mod session;
+
+pub use report::{policy_json, policy_report, table1_header, ExperimentRecord};
+pub use session::{Backend, Session, SessionOptions};

@@ -1,0 +1,165 @@
+//! Experiment result records (results/*.json) and table/figure printers.
+
+use anyhow::Result;
+
+use crate::compress::DiscretePolicy;
+use crate::model::ModelIr;
+use crate::search::{SearchConfig, SearchOutcome};
+use crate::util::json::Json;
+
+/// A persisted experiment result: config + outcome (+ policy detail).
+pub struct ExperimentRecord {
+    pub name: String,
+    pub config: SearchConfig,
+    pub outcome: SearchOutcome,
+}
+
+impl ExperimentRecord {
+    pub fn to_json(&self, ir: &ModelIr) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("config", self.config.to_json()),
+            ("outcome", self.outcome.to_json()),
+            ("policy", policy_json(ir, &self.outcome.best_policy)),
+        ])
+    }
+
+    pub fn save(&self, ir: &ModelIr, dir: &std::path::Path) -> Result<std::path::PathBuf> {
+        let path = dir.join(format!("{}.json", self.name));
+        self.to_json(ir).write_file(&path)?;
+        Ok(path)
+    }
+
+    /// One row of Table 1: method, c, MACs, BOPs, latency, accuracy.
+    pub fn table1_row(&self) -> String {
+        format!(
+            "{:16} {:>4.2} {:>10.3e} {:>10.3e} {:>8.2} ms {:>7.2} % {:>7.1} %",
+            self.config.agent.label(),
+            self.config.target,
+            self.outcome.best.macs as f64,
+            self.outcome.best.bops as f64,
+            self.outcome.best.latency_s * 1e3,
+            self.outcome.best.accuracy * 100.0,
+            self.outcome.relative_latency() * 100.0,
+        )
+    }
+}
+
+/// Per-layer policy detail (Fig 3/5/7 bar-chart data).
+pub fn policy_json(ir: &ModelIr, p: &DiscretePolicy) -> Json {
+    Json::Arr(
+        ir.layers
+            .iter()
+            .map(|l| {
+                let cmp = &p.layers[l.index];
+                let (wb, ab) = cmp.quant.bits();
+                Json::obj(vec![
+                    ("layer", Json::str(l.name.clone())),
+                    ("channels", Json::num(cmp.kept_channels as f64)),
+                    ("channels_orig", Json::num(l.cout as f64)),
+                    ("quant", Json::str(cmp.quant.label())),
+                    ("w_bits", Json::num(wb as f64)),
+                    ("a_bits", Json::num(ab as f64)),
+                    ("prunable", Json::Bool(l.prunable)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Printable per-layer policy table (the textual Figure 3).
+pub fn policy_report(ir: &ModelIr, p: &DiscretePolicy) -> String {
+    let mut s = format!(
+        "{:14} {:>9} {:>6} {:>12}  bar (remaining channels)\n",
+        "layer", "channels", "grp", "quant"
+    );
+    for l in &ir.layers {
+        let cmp = &p.layers[l.index];
+        let frac = cmp.kept_channels as f64 / l.cout as f64;
+        let bar: String = "#".repeat((frac * 24.0).round() as usize);
+        let grp = if l.group >= 0 {
+            format!("g{}", l.group)
+        } else if l.prunable {
+            "-".into()
+        } else {
+            "fix".into()
+        };
+        s.push_str(&format!(
+            "{:14} {:>4}/{:<4} {:>6} {:>12}  {}\n",
+            l.name,
+            cmp.kept_channels,
+            l.cout,
+            grp,
+            cmp.quant.label(),
+            bar
+        ));
+    }
+    s
+}
+
+/// Header matching `ExperimentRecord::table1_row`.
+pub fn table1_header() -> String {
+    format!(
+        "{:16} {:>4} {:>10} {:>10} {:>11} {:>9} {:>9}\n{}",
+        "method",
+        "c",
+        "MACs",
+        "BOPs",
+        "latency",
+        "accuracy",
+        "rel.lat",
+        "-".repeat(78)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::AgentKind;
+    use crate::model::ir::test_fixtures::tiny_meta;
+    use crate::model::ModelIr;
+    use crate::search::EpisodeSummary;
+
+    fn outcome(ir: &ModelIr) -> SearchOutcome {
+        let p = DiscretePolicy::reference(ir);
+        SearchOutcome {
+            best_policy: p.clone(),
+            best: EpisodeSummary {
+                episode: 3,
+                reward: 0.8,
+                accuracy: 0.91,
+                latency_s: 0.004,
+                macs: p.macs(ir),
+                bops: p.bops(ir),
+            },
+            history: vec![],
+            base_latency_s: 0.01,
+            base_accuracy: 0.95,
+        }
+    }
+
+    #[test]
+    fn record_roundtrips_to_json() {
+        let ir = ModelIr::from_meta(&tiny_meta()).unwrap();
+        let rec = ExperimentRecord {
+            name: "test_record".into(),
+            config: SearchConfig::new(AgentKind::Joint, 0.3),
+            outcome: outcome(&ir),
+        };
+        let j = rec.to_json(&ir);
+        assert_eq!(j.req_str("name").unwrap(), "test_record");
+        let policy = j.req_arr("policy").unwrap();
+        assert_eq!(policy.len(), ir.layers.len());
+        assert!(rec.table1_row().contains("joint"));
+    }
+
+    #[test]
+    fn policy_report_readable() {
+        let ir = ModelIr::from_meta(&tiny_meta()).unwrap();
+        let p = DiscretePolicy::reference(&ir);
+        let rep = policy_report(&ir, &p);
+        assert!(rep.contains("stem"));
+        assert!(rep.contains("FP32"));
+        assert!(rep.lines().count() >= ir.layers.len());
+    }
+}

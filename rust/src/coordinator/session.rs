@@ -1,0 +1,306 @@
+//! A coordinator session: one model variant on one hardware target.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::agent::{mapper_for, AgentKind, PruningMapper, QuantizationMapper};
+use crate::compress::DiscretePolicy;
+use crate::eval::{Evaluator, SensitivityConfig, SensitivityTable, Split};
+use crate::hw::{CostModel, HwTarget, LatencySimulator};
+use crate::model::ModelIr;
+use crate::runtime::{ArtifactRegistry, PjrtRuntime};
+use crate::search::{run_search, PolicyEvaluator, SearchConfig, SearchOutcome, SimEvaluator};
+
+/// Accuracy backend for searches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Real model accuracy through the PJRT forward artifact.
+    Pjrt,
+    /// Synthetic accuracy model (simulator-only studies / tests).
+    Synthetic,
+}
+
+#[derive(Clone, Debug)]
+pub struct SessionOptions {
+    pub artifacts_dir: PathBuf,
+    pub variant: String,
+    pub target_hw: HwTarget,
+    pub backend: Backend,
+    pub sensitivity: SensitivityConfig,
+    /// Cache file for the sensitivity table (skipped when None).
+    pub sensitivity_cache: Option<PathBuf>,
+    pub seed: u64,
+}
+
+impl SessionOptions {
+    pub fn new(variant: &str) -> Self {
+        Self {
+            artifacts_dir: crate::artifacts_dir(),
+            variant: variant.to_string(),
+            target_hw: HwTarget::cortex_a72(),
+            backend: Backend::Pjrt,
+            sensitivity: SensitivityConfig::default(),
+            sensitivity_cache: Some(
+                crate::results_dir().join(format!("sensitivity_{variant}.json")),
+            ),
+            seed: 7,
+        }
+    }
+}
+
+/// Owns everything a search needs.
+pub struct Session {
+    pub opts: SessionOptions,
+    pub ir: ModelIr,
+    /// Present iff backend == Pjrt.
+    pub evaluator: Option<Evaluator>,
+    pub sens: SensitivityTable,
+}
+
+impl Session {
+    /// Bring up the session: PJRT client, artifacts, upfront sensitivity.
+    pub fn open(opts: SessionOptions) -> Result<Self> {
+        match opts.backend {
+            Backend::Pjrt => {
+                let runtime = PjrtRuntime::cpu()?;
+                let reg = ArtifactRegistry::load(&runtime, &opts.artifacts_dir, &opts.variant)?;
+                let ir = reg.ir.clone();
+                let evaluator = Evaluator::new(runtime, reg)?;
+                let sens = match &opts.sensitivity_cache {
+                    Some(path) => {
+                        SensitivityTable::compute_cached(&evaluator, &opts.sensitivity, path)?
+                    }
+                    None => SensitivityTable::compute(&evaluator, &opts.sensitivity)?,
+                };
+                Ok(Self {
+                    opts,
+                    ir,
+                    evaluator: Some(evaluator),
+                    sens,
+                })
+            }
+            Backend::Synthetic => {
+                // synthetic sessions only need the structural manifest
+                let meta = crate::model::load_meta(
+                    &opts.artifacts_dir.join(format!("meta_{}.json", opts.variant)),
+                )?;
+                let ir = ModelIr::from_meta(&meta)?;
+                let sens = SensitivityTable::disabled(
+                    ir.layers.len(),
+                    &opts.sensitivity,
+                    &opts.variant,
+                );
+                Ok(Self {
+                    opts,
+                    ir,
+                    evaluator: None,
+                    sens,
+                })
+            }
+        }
+    }
+
+    /// Synthetic session straight from an in-memory manifest (tests).
+    pub fn synthetic(ir: ModelIr, opts: SessionOptions) -> Self {
+        let sens =
+            SensitivityTable::disabled(ir.layers.len(), &opts.sensitivity, &opts.variant);
+        Self {
+            opts,
+            ir,
+            evaluator: None,
+            sens,
+        }
+    }
+
+    pub fn simulator(&self, seed: u64) -> LatencySimulator {
+        LatencySimulator::new(CostModel::new(self.opts.target_hw.clone()), seed)
+    }
+
+    fn policy_evaluator<'a>(
+        &'a self,
+        cfg: &SearchConfig,
+    ) -> Box<dyn PolicyEvaluator + 'a> {
+        match (&self.evaluator, self.opts.backend) {
+            (Some(ev), Backend::Pjrt) => Box::new((ev, Split::Val, cfg.eval_batches)),
+            _ => Box::new(SimEvaluator::new(&self.ir)),
+        }
+    }
+
+    /// Run one policy search.
+    pub fn search(&self, cfg: &SearchConfig) -> Result<SearchOutcome> {
+        self.search_from(cfg, None, None)
+    }
+
+    /// Run one policy search from an optional base policy with an optional
+    /// sensitivity-table override (T2/F7 ablation passes `disabled`).
+    pub fn search_from(
+        &self,
+        cfg: &SearchConfig,
+        base: Option<&DiscretePolicy>,
+        sens_override: Option<&SensitivityTable>,
+    ) -> Result<SearchOutcome> {
+        let mapper = mapper_for(cfg.agent);
+        let ev = self.policy_evaluator(cfg);
+        let mut sim = self.simulator(cfg.seed ^ 0x5117);
+        run_search(
+            &self.ir,
+            sens_override.unwrap_or(&self.sens),
+            ev.as_ref(),
+            &mut sim,
+            mapper.as_ref(),
+            cfg,
+            base,
+        )
+    }
+
+    /// Sweep target compression rates for one agent (Figure 4 series).
+    pub fn sweep(&self, agent: AgentKind, targets: &[f64], proto: &SearchConfig) -> Result<Vec<SearchOutcome>> {
+        let mut out = Vec::with_capacity(targets.len());
+        for &c in targets {
+            let mut cfg = proto.clone();
+            cfg.agent = agent;
+            cfg.target = c;
+            out.push(self.search(&cfg)?);
+        }
+        Ok(out)
+    }
+
+    /// Sequential two-stage search (appendix, Figure 5): run `first` to the
+    /// intermediate target c1 = (1 + c) / 2, freeze its policy, then run the
+    /// other method to the final target c.
+    pub fn sequential(
+        &self,
+        first: AgentKind,
+        target: f64,
+        proto: &SearchConfig,
+    ) -> Result<(SearchOutcome, SearchOutcome)> {
+        anyhow::ensure!(
+            first != AgentKind::Joint,
+            "sequential schemes combine the two single-method agents"
+        );
+        let c1 = (1.0 + target) / 2.0;
+        let mut cfg1 = proto.clone();
+        cfg1.agent = first;
+        cfg1.target = c1;
+        // paper appendix: the pruning runs use the joint agent's channel
+        // rounding so the downstream quantization stays MIX-compatible
+        let ev = self.policy_evaluator(&cfg1);
+        let mut sim = self.simulator(cfg1.seed ^ 0x5117);
+        let first_mapper: Box<dyn crate::agent::PolicyMapper> = match first {
+            AgentKind::Pruning => Box::new(PruningMapper::rounded()),
+            AgentKind::Quantization => Box::new(QuantizationMapper::default()),
+            AgentKind::Joint => unreachable!(),
+        };
+        let out1 = run_search(
+            &self.ir,
+            &self.sens,
+            ev.as_ref(),
+            &mut sim,
+            first_mapper.as_ref(),
+            &cfg1,
+            None,
+        )?;
+
+        let second = match first {
+            AgentKind::Pruning => AgentKind::Quantization,
+            AgentKind::Quantization => AgentKind::Pruning,
+            AgentKind::Joint => unreachable!(),
+        };
+        let mut cfg2 = proto.clone();
+        cfg2.agent = second;
+        cfg2.target = target;
+        cfg2.seed = proto.seed.wrapping_add(1);
+        let second_mapper: Box<dyn crate::agent::PolicyMapper> = match second {
+            AgentKind::Pruning => Box::new(PruningMapper::rounded()),
+            AgentKind::Quantization => Box::new(QuantizationMapper::default()),
+            AgentKind::Joint => unreachable!(),
+        };
+        let ev2 = self.policy_evaluator(&cfg2);
+        let mut sim2 = self.simulator(cfg2.seed ^ 0x5117);
+        let out2 = run_search(
+            &self.ir,
+            &self.sens,
+            ev2.as_ref(),
+            &mut sim2,
+            second_mapper.as_ref(),
+            &cfg2,
+            Some(&out1.best_policy),
+        )?;
+        Ok((out1, out2))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::DdpgConfig;
+    use crate::model::ir::test_fixtures::tiny_meta;
+
+    fn session() -> Session {
+        let ir = ModelIr::from_meta(&tiny_meta()).unwrap();
+        let mut opts = SessionOptions::new("tiny");
+        opts.backend = Backend::Synthetic;
+        opts.sensitivity_cache = None;
+        Session::synthetic(ir, opts)
+    }
+
+    fn fast(agent: AgentKind, c: f64) -> SearchConfig {
+        let mut cfg = SearchConfig::fast(agent, c);
+        cfg.episodes = 24;
+        cfg.warmup_episodes = 6;
+        cfg.log_every = 0;
+        cfg.ddpg = DdpgConfig {
+            hidden: (32, 24),
+            batch: 24,
+            replay_capacity: 400,
+            ..Default::default()
+        };
+        cfg
+    }
+
+    #[test]
+    fn synthetic_search_runs() {
+        let s = session();
+        let out = s.search(&fast(AgentKind::Joint, 0.5)).unwrap();
+        assert_eq!(out.history.len(), 24);
+        assert!(out.best.latency_s > 0.0);
+    }
+
+    #[test]
+    fn sweep_produces_one_outcome_per_target() {
+        let s = session();
+        let outs = s
+            .sweep(AgentKind::Quantization, &[0.4, 0.6], &fast(AgentKind::Quantization, 0.4))
+            .unwrap();
+        assert_eq!(outs.len(), 2);
+    }
+
+    #[test]
+    fn sequential_freezes_first_stage() {
+        let s = session();
+        let (first, second) = s
+            .sequential(AgentKind::Pruning, 0.4, &fast(AgentKind::Pruning, 0.4))
+            .unwrap();
+        // second stage keeps the first stage's pruning decisions
+        for l in &s.ir.layers {
+            assert_eq!(
+                second.best_policy.layers[l.index].kept_channels,
+                first.best_policy.layers[l.index].kept_channels,
+                "layer {}",
+                l.name
+            );
+        }
+        // and adds quantization on top
+        let (_, int8, fp32) = crate::search::quant_histogram(&second.best_policy);
+        assert!(int8 + fp32 == s.ir.layers.len());
+    }
+
+    #[test]
+    fn sequential_rejects_joint_first() {
+        let s = session();
+        assert!(s
+            .sequential(AgentKind::Joint, 0.4, &fast(AgentKind::Joint, 0.4))
+            .is_err());
+    }
+}

@@ -1,0 +1,252 @@
+//! Accuracy/probability evaluation of compressed models on the PJRT
+//! runtime.
+//!
+//! The forward artifact's input contract (aot.py) is
+//! `[x, *params (manifest order), *policy (manifest order)]`.
+//! Parameters and evaluation batches are uploaded to the device once at
+//! construction; per-policy calls upload only the small mask/bit tensors.
+
+use anyhow::{ensure, Result};
+
+use std::collections::BTreeMap;
+
+use crate::compress::{precompute_rankings, DiscretePolicy, PolicyInputs};
+use crate::runtime::{ArtifactRegistry, DeviceTensors, HostTensor, PjrtRuntime};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    /// Validation split: drives the search reward + sensitivity analysis.
+    Val,
+    /// Test split: only for final reported accuracies.
+    Test,
+}
+
+/// Device-cached batches of one split.
+struct DeviceSplit {
+    x: Vec<xla::PjRtBuffer>,
+    y: Vec<Vec<i32>>,
+}
+
+pub struct Evaluator {
+    pub runtime: PjrtRuntime,
+    pub reg: ArtifactRegistry,
+    dev_params: DeviceTensors,
+    val: DeviceSplit,
+    test: DeviceSplit,
+    batch: usize,
+    /// Reference (uncompressed) softmax probabilities per val batch, lazily
+    /// computed: the sensitivity analysis' KL baseline.
+    ref_probs: std::cell::RefCell<Option<Vec<Vec<f32>>>>,
+    /// Forward executions performed (profiling counter).
+    pub fwd_calls: std::cell::Cell<u64>,
+    /// ℓ1 channel rankings, precomputed once (§Perf: weights are fixed).
+    rankings: BTreeMap<String, Vec<usize>>,
+}
+
+fn batches(
+    runtime: &PjrtRuntime,
+    x: &HostTensor,
+    y: &[i32],
+    batch: usize,
+) -> Result<DeviceSplit> {
+    let img_elems: usize = x.shape[1..].iter().product();
+    let n = x.shape[0];
+    let mut bx = Vec::new();
+    let mut by = Vec::new();
+    let full = n / batch;
+    for b in 0..full {
+        let lo = b * batch;
+        let data = &x.data[lo * img_elems..(lo + batch) * img_elems];
+        let mut shape = x.shape.clone();
+        shape[0] = batch;
+        bx.push(runtime.upload_one(&HostTensor::new(shape, data.to_vec()))?);
+        by.push(y[lo..lo + batch].to_vec());
+    }
+    Ok(DeviceSplit { x: bx, y: by })
+}
+
+impl Evaluator {
+    pub fn new(runtime: PjrtRuntime, reg: ArtifactRegistry) -> Result<Self> {
+        let batch = reg.meta.eval_batch;
+        ensure!(batch > 0, "eval batch must be positive");
+        let dev_params = runtime.upload(&reg.params)?;
+        let val = batches(&runtime, &reg.dataset.val_x, &reg.dataset.val_y, batch)?;
+        let test = batches(&runtime, &reg.dataset.test_x, &reg.dataset.test_y, batch)?;
+        let rankings = precompute_rankings(&reg.ir, &reg.params_by_name);
+        Ok(Self {
+            runtime,
+            reg,
+            dev_params,
+            val,
+            test,
+            batch,
+            ref_probs: std::cell::RefCell::new(None),
+            fwd_calls: std::cell::Cell::new(0),
+            rankings,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn num_batches(&self, split: Split) -> usize {
+        match split {
+            Split::Val => self.val.x.len(),
+            Split::Test => self.test.x.len(),
+        }
+    }
+
+    fn split(&self, split: Split) -> &DeviceSplit {
+        match split {
+            Split::Val => &self.val,
+            Split::Test => &self.test,
+        }
+    }
+
+    fn upload_policy(&self, policy: &DiscretePolicy) -> Result<DeviceTensors> {
+        let inputs = PolicyInputs::build_with_rankings(&self.reg.ir, policy, &self.rankings)?;
+        let tensors: Vec<HostTensor> = inputs
+            .buffers
+            .into_iter()
+            .zip(&self.reg.meta.policy)
+            .map(|(buf, entry)| HostTensor::new(entry.shape.clone(), buf))
+            .collect();
+        self.runtime.upload(&tensors)
+    }
+
+    /// Logits of one batch under `policy_bufs`.
+    fn logits(
+        &self,
+        xbuf: &xla::PjRtBuffer,
+        policy_bufs: &DeviceTensors,
+    ) -> Result<HostTensor> {
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.dev_params.len() + policy_bufs.len());
+        args.push(xbuf);
+        args.extend(self.dev_params.bufs.iter());
+        args.extend(policy_bufs.bufs.iter());
+        let mut out = self.reg.fwd.run_b(&args)?;
+        self.fwd_calls.set(self.fwd_calls.get() + 1);
+        ensure!(out.len() == 1, "fwd artifact returned {} outputs", out.len());
+        Ok(out.remove(0))
+    }
+
+    /// Top-1 accuracy of `policy` over the first `max_batches` batches.
+    pub fn accuracy(
+        &self,
+        policy: &DiscretePolicy,
+        split: Split,
+        max_batches: usize,
+    ) -> Result<f64> {
+        let policy_bufs = self.upload_policy(policy)?;
+        let s = self.split(split);
+        let nb = s.x.len().min(max_batches.max(1));
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for b in 0..nb {
+            let logits = self.logits(&s.x[b], &policy_bufs)?;
+            let classes = logits.shape[1];
+            for (i, &label) in s.y[b].iter().enumerate() {
+                let row = &logits.data[i * classes..(i + 1) * classes];
+                let pred = argmax(row);
+                correct += (pred == label as usize) as usize;
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total as f64)
+    }
+
+    /// Softmax probabilities of `policy` on val batch `b` (row-major [B,C]).
+    pub fn probs(&self, policy: &DiscretePolicy, b: usize) -> Result<Vec<f32>> {
+        let policy_bufs = self.upload_policy(policy)?;
+        let logits = self.logits(&self.val.x[b], &policy_bufs)?;
+        Ok(softmax_rows(&logits.data, logits.shape[1]))
+    }
+
+    /// Reference (uncompressed) probabilities on val batch `b` (cached).
+    pub fn ref_probs(&self, b: usize) -> Result<Vec<f32>> {
+        {
+            let cache = self.ref_probs.borrow();
+            if let Some(all) = cache.as_ref() {
+                return Ok(all[b].clone());
+            }
+        }
+        let reference = DiscretePolicy::reference(&self.reg.ir);
+        let mut all = Vec::with_capacity(self.val.x.len());
+        for i in 0..self.val.x.len() {
+            all.push(self.probs(&reference, i)?);
+        }
+        let out = all[b].clone();
+        *self.ref_probs.borrow_mut() = Some(all);
+        Ok(out)
+    }
+
+    /// Replace the device-resident parameters (after fine-tuning).
+    pub fn set_params(&mut self, params: &[HostTensor]) -> Result<()> {
+        ensure!(params.len() == self.reg.params.len());
+        self.dev_params = self.runtime.upload(params)?;
+        *self.ref_probs.borrow_mut() = None;
+        Ok(())
+    }
+
+    /// Restore the original trained parameters.
+    pub fn reset_params(&mut self) -> Result<()> {
+        let params = self.reg.params.clone();
+        self.set_params(&params)
+    }
+}
+
+pub(crate) fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    let _ = best;
+    // manual loop above avoids NaN-poisoned partial_cmp sorts
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+pub(crate) fn softmax_rows(logits: &[f32], classes: usize) -> Vec<f32> {
+    let rows = logits.len() / classes;
+    let mut out = vec![0.0f32; logits.len()];
+    for r in 0..rows {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for (o, &x) in out[r * classes..(r + 1) * classes].iter_mut().zip(row) {
+            *o = (x - m).exp();
+            sum += *o;
+        }
+        for o in &mut out[r * classes..(r + 1) * classes] {
+            *o /= sum;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let p = softmax_rows(&[1.0, 2.0, 3.0, -1.0, 0.0, 1.0], 3);
+        for r in 0..2 {
+            let s: f32 = p[r * 3..(r + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Policy evaluation: accuracy via the PJRT forward artifact, KL-divergence
+//! sensitivity analysis (paper Eq. 5), and post-search fine-tuning through
+//! the AOT train-step graph.
+
+mod evaluator;
+mod retrain;
+mod sensitivity;
+
+pub use evaluator::{Evaluator, Split};
+pub use retrain::{retrain, RetrainCfg, RetrainReport};
+pub use sensitivity::{SensitivityConfig, SensitivityProbe, SensitivityTable};

@@ -1,0 +1,116 @@
+//! Post-search fine-tuning through the AOT train-step artifact (frozen-BN
+//! SGD-momentum with STE quantizers — paper: "reported accuracies are test
+//! accuracies of the compressed and for 30 epochs retrained models").
+//!
+//! Input contract of `train_step_<variant>.hlo.txt` (aot.py):
+//!   [x, y(i32), lr, *params, *moms (trainable order), *policy]
+//! Outputs: [loss, *new_trainable_params, *new_moms].
+
+use anyhow::{ensure, Result};
+
+use super::evaluator::Evaluator;
+use crate::compress::{DiscretePolicy, PolicyInputs};
+use crate::runtime::HostTensor;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RetrainCfg {
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl Default for RetrainCfg {
+    fn default() -> Self {
+        Self {
+            steps: 60,
+            lr: 5e-3,
+            seed: 99,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RetrainReport {
+    pub losses: Vec<f32>,
+    /// Parameters after fine-tuning, full manifest order.
+    pub params: Vec<HostTensor>,
+}
+
+/// Fine-tune the compressed model; returns the tuned parameters without
+/// mutating the evaluator (callers decide whether to `set_params`).
+pub fn retrain(ev: &Evaluator, policy: &DiscretePolicy, cfg: &RetrainCfg) -> Result<RetrainReport> {
+    let reg = &ev.reg;
+    let ts = reg
+        .train_step
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("no train_step artifact for {}", reg.variant))?;
+    let batch = reg.meta.train_batch;
+    let trainable = &reg.meta.trainable;
+    let mut params: Vec<HostTensor> = reg.params.clone();
+    let mut moms: Vec<HostTensor> = trainable
+        .iter()
+        .map(|&i| HostTensor::new(params[i].shape.clone(), vec![0.0; params[i].numel()]))
+        .collect();
+
+    // policy inputs are constant across steps
+    let pol = PolicyInputs::build(&reg.ir, policy, &reg.params_by_name)?;
+    let pol_tensors: Vec<HostTensor> = pol
+        .buffers
+        .into_iter()
+        .zip(&reg.meta.policy)
+        .map(|(buf, e)| HostTensor::new(e.shape.clone(), buf))
+        .collect();
+    let pol_dev = ev.runtime.upload(&pol_tensors)?;
+
+    let img_elems: usize = reg.dataset.retrain_x.shape[1..].iter().product();
+    let n = reg.dataset.retrain_x.shape[0];
+    ensure!(n >= batch, "retrain pool smaller than a batch");
+
+    let mut rng = Pcg64::with_stream(cfg.seed, 0x7e7a);
+    let mut losses = Vec::with_capacity(cfg.steps);
+    let mut shape = reg.dataset.retrain_x.shape.clone();
+    shape[0] = batch;
+
+    for _step in 0..cfg.steps {
+        // sample a batch
+        let idx = rng.sample_indices(n, batch);
+        let mut x = Vec::with_capacity(batch * img_elems);
+        let mut y = Vec::with_capacity(batch);
+        for &i in &idx {
+            x.extend_from_slice(&reg.dataset.retrain_x.data[i * img_elems..(i + 1) * img_elems]);
+            y.push(reg.dataset.retrain_y[i]);
+        }
+        let xbuf = ev.runtime.upload_one(&HostTensor::new(shape.clone(), x))?;
+        let ybuf = ev.runtime.upload_i32(&y, &[batch])?;
+        let lrbuf = ev.runtime.upload_one(&HostTensor::scalar(cfg.lr))?;
+
+        let params_dev = ev.runtime.upload(&params)?;
+        let moms_dev = ev.runtime.upload(&moms)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
+        args.push(&xbuf);
+        args.push(&ybuf);
+        args.push(&lrbuf);
+        args.extend(params_dev.bufs.iter());
+        args.extend(moms_dev.bufs.iter());
+        args.extend(pol_dev.bufs.iter());
+
+        let out = ts.run_b(&args)?;
+        ensure!(
+            out.len() == 1 + 2 * trainable.len(),
+            "train_step returned {} outputs, expected {}",
+            out.len(),
+            1 + 2 * trainable.len()
+        );
+        losses.push(out[0].data[0]);
+        for (j, &pi) in trainable.iter().enumerate() {
+            params[pi] = out[1 + j].clone();
+        }
+        for (j, m) in moms.iter_mut().enumerate() {
+            *m = out[1 + trainable.len() + j].clone();
+        }
+    }
+
+    Ok(RetrainReport { losses, params })
+}

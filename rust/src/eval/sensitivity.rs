@@ -1,0 +1,326 @@
+//! Sensitivity analysis (paper Eq. 5, generalizing ZeroQ): the distortion
+//! of compressing a *single layer* with a specific CMP, measured as the
+//! KL divergence between the compressed and the reference model's output
+//! distributions over N validation samples.
+//!
+//! The full table is computed once up front per search (paper: "the
+//! complete sensitivity analysis is done upfront the search for all
+//! layers") and cached to `results/sensitivity_<variant>.json`.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::evaluator::Evaluator;
+use crate::compress::{DiscretePolicy, QuantMode};
+use crate::util::json::Json;
+
+/// Probe grid configuration.
+#[derive(Clone, Debug)]
+pub struct SensitivityConfig {
+    /// Pruning ratios probed per layer (fraction of channels removed).
+    pub prune_ratios: Vec<f64>,
+    /// Bit widths probed for weight quantization (activation at max).
+    pub w_bits: Vec<u8>,
+    /// Bit widths probed for activation quantization (weights at max).
+    pub a_bits: Vec<u8>,
+    /// Validation batches averaged per probe (N = batches * batch_size).
+    pub batches: usize,
+}
+
+impl Default for SensitivityConfig {
+    fn default() -> Self {
+        Self {
+            prune_ratios: vec![0.25, 0.5, 0.75, 0.9375],
+            w_bits: vec![1, 2, 4, 6, 8],
+            a_bits: vec![1, 2, 4, 6, 8],
+            batches: 1,
+        }
+    }
+}
+
+impl SensitivityConfig {
+    /// The paper's Fig-6 resolution: 10 uniform sparsity points, all bit widths.
+    pub fn paper() -> Self {
+        Self {
+            prune_ratios: (1..=10).map(|i| i as f64 / 10.0).collect(),
+            w_bits: (1..=8).collect(),
+            a_bits: (1..=8).collect(),
+            batches: 1,
+        }
+    }
+}
+
+/// One probed point: the CMP value and its measured distortion Ω.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SensitivityProbe {
+    pub value: f64,
+    pub omega: f64,
+}
+
+/// Per-layer probe series for each compression method.
+#[derive(Clone, Debug, Default)]
+pub struct SensitivityTable {
+    pub variant: String,
+    /// [layer][probe] — pruning (value = ratio removed).
+    pub prune: Vec<Vec<SensitivityProbe>>,
+    /// [layer][probe] — weight quantization (value = bits).
+    pub quant_w: Vec<Vec<SensitivityProbe>>,
+    /// [layer][probe] — activation quantization (value = bits).
+    pub quant_a: Vec<Vec<SensitivityProbe>>,
+}
+
+/// KL(p || q) averaged over rows, with flooring for numerical safety.
+pub fn kl_divergence(p: &[f32], q: &[f32], classes: usize) -> f64 {
+    assert_eq!(p.len(), q.len());
+    let rows = p.len() / classes;
+    let mut total = 0.0f64;
+    for r in 0..rows {
+        let mut kl = 0.0f64;
+        for c in 0..classes {
+            let pi = (p[r * classes + c] as f64).max(1e-10);
+            let qi = (q[r * classes + c] as f64).max(1e-10);
+            kl += pi * (pi / qi).ln();
+        }
+        total += kl;
+    }
+    total / rows as f64
+}
+
+impl SensitivityTable {
+    /// Measure Ω for a single-layer policy deviation over `cfg.batches`.
+    fn omega(ev: &Evaluator, policy: &DiscretePolicy, batches: usize) -> Result<f64> {
+        let classes = ev.reg.ir.classes;
+        let nb = batches.clamp(1, ev.num_batches(super::Split::Val));
+        let mut acc = 0.0;
+        for b in 0..nb {
+            let p = ev.probs(policy, b)?;
+            let q = ev.ref_probs(b)?;
+            acc += kl_divergence(&p, &q, classes);
+        }
+        Ok(acc / nb as f64)
+    }
+
+    /// Run the full upfront analysis.
+    pub fn compute(ev: &Evaluator, cfg: &SensitivityConfig) -> Result<Self> {
+        let ir = &ev.reg.ir;
+        let reference = DiscretePolicy::reference(ir);
+        let mut table = Self {
+            variant: ir.variant.clone(),
+            ..Default::default()
+        };
+        let max_bits = 8u8;
+        for l in &ir.layers {
+            let mut prune = Vec::new();
+            // pruning probes: every layer gets probed (even group members —
+            // their *measured* sensitivity is what tells the agent they are
+            // load-bearing), but ratios are discretized to channel counts.
+            for &ratio in &cfg.prune_ratios {
+                let kept = (((1.0 - ratio) * l.cout as f64).floor() as usize).max(1);
+                let mut p = reference.clone();
+                p.layers[l.index].kept_channels = kept;
+                prune.push(SensitivityProbe {
+                    value: ratio,
+                    omega: Self::omega(ev, &p, cfg.batches)?,
+                });
+            }
+            let mut qw = Vec::new();
+            for &bits in &cfg.w_bits {
+                let mut p = reference.clone();
+                p.layers[l.index].quant = QuantMode::Mix {
+                    w_bits: bits,
+                    a_bits: max_bits,
+                };
+                qw.push(SensitivityProbe {
+                    value: bits as f64,
+                    omega: Self::omega(ev, &p, cfg.batches)?,
+                });
+            }
+            let mut qa = Vec::new();
+            for &bits in &cfg.a_bits {
+                let mut p = reference.clone();
+                p.layers[l.index].quant = QuantMode::Mix {
+                    w_bits: max_bits,
+                    a_bits: bits,
+                };
+                qa.push(SensitivityProbe {
+                    value: bits as f64,
+                    omega: Self::omega(ev, &p, cfg.batches)?,
+                });
+            }
+            log::debug!(
+                "sensitivity[{}]: prune {:?} qw {:?}",
+                l.name,
+                prune.iter().map(|p| p.omega).collect::<Vec<_>>(),
+                qw.iter().map(|p| p.omega).collect::<Vec<_>>()
+            );
+            table.prune.push(prune);
+            table.quant_w.push(qw);
+            table.quant_a.push(qa);
+        }
+        Ok(table)
+    }
+
+    /// Compute or load from the JSON cache.
+    pub fn compute_cached(
+        ev: &Evaluator,
+        cfg: &SensitivityConfig,
+        cache_path: &Path,
+    ) -> Result<Self> {
+        if cache_path.exists() {
+            if let Ok(t) = Self::from_json(&Json::read_file(cache_path)?) {
+                if t.variant == ev.reg.ir.variant && t.prune.len() == ev.reg.ir.layers.len() {
+                    log::info!("sensitivity cache hit: {}", cache_path.display());
+                    return Ok(t);
+                }
+            }
+        }
+        log::info!("computing sensitivity table ({} layers)...", ev.reg.ir.layers.len());
+        let t = Self::compute(ev, cfg)?;
+        t.to_json().write_file(cache_path)?;
+        Ok(t)
+    }
+
+    /// Normalized feature vector for layer `i`: the agent-state summary of
+    /// the probe series (log-scaled Ω at each probe point).
+    pub fn layer_features(&self, i: usize) -> Vec<f32> {
+        let series = [&self.prune[i], &self.quant_w[i], &self.quant_a[i]];
+        let mut out = Vec::new();
+        for s in series {
+            for p in s.iter() {
+                out.push(((p.omega + 1e-8).ln() as f32).clamp(-20.0, 20.0));
+            }
+        }
+        out
+    }
+
+    /// Number of features `layer_features` emits per layer.
+    pub fn feature_dim(&self) -> usize {
+        if self.prune.is_empty() {
+            0
+        } else {
+            self.prune[0].len() + self.quant_w[0].len() + self.quant_a[0].len()
+        }
+    }
+
+    // ---------------- (de)serialization ----------------
+    pub fn to_json(&self) -> Json {
+        let series = |s: &Vec<Vec<SensitivityProbe>>| {
+            Json::Arr(
+                s.iter()
+                    .map(|layer| {
+                        Json::Arr(
+                            layer
+                                .iter()
+                                .flat_map(|p| [Json::Num(p.value), Json::Num(p.omega)])
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            )
+        };
+        Json::obj(vec![
+            ("variant", Json::str(self.variant.clone())),
+            ("prune", series(&self.prune)),
+            ("quant_w", series(&self.quant_w)),
+            ("quant_a", series(&self.quant_a)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let series = |key: &str| -> Result<Vec<Vec<SensitivityProbe>>> {
+            j.req_arr(key)?
+                .iter()
+                .map(|layer| {
+                    let flat = layer
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("bad series"))?;
+                    Ok(flat
+                        .chunks(2)
+                        .map(|c| SensitivityProbe {
+                            value: c[0].as_f64().unwrap_or(0.0),
+                            omega: c[1].as_f64().unwrap_or(0.0),
+                        })
+                        .collect())
+                })
+                .collect()
+        };
+        Ok(Self {
+            variant: j.req_str("variant")?.to_string(),
+            prune: series("prune")?,
+            quant_w: series("quant_w")?,
+            quant_a: series("quant_a")?,
+        })
+    }
+
+    /// A constant-feature table (the paper's "disabled sensitivity"
+    /// ablation: "for all sensitivity-based features within the agent state
+    /// a constant value was set").
+    pub fn disabled(num_layers: usize, cfg: &SensitivityConfig, variant: &str) -> Self {
+        let flat = |values: &[f64]| {
+            vec![
+                values
+                    .iter()
+                    .map(|&v| SensitivityProbe { value: v, omega: 1.0 })
+                    .collect::<Vec<_>>();
+                num_layers
+            ]
+        };
+        Self {
+            variant: variant.to_string(),
+            prune: flat(&cfg.prune_ratios),
+            quant_w: flat(&cfg.w_bits.iter().map(|&b| b as f64).collect::<Vec<_>>()),
+            quant_a: flat(&cfg.a_bits.iter().map(|&b| b as f64).collect::<Vec<_>>()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kl_zero_for_identical() {
+        let p = vec![0.2f32, 0.3, 0.5, 0.6, 0.3, 0.1];
+        assert!(kl_divergence(&p, &p, 3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kl_positive_and_asymmetric() {
+        let p = vec![0.8f32, 0.15, 0.05];
+        let q = vec![0.1f32, 0.45, 0.45];
+        let a = kl_divergence(&p, &q, 3);
+        let b = kl_divergence(&q, &p, 3);
+        assert!(a > 0.0 && b > 0.0);
+        assert!((a - b).abs() > 1e-6);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = SensitivityTable {
+            variant: "tiny".into(),
+            prune: vec![vec![SensitivityProbe { value: 0.5, omega: 0.1 }]],
+            quant_w: vec![vec![SensitivityProbe { value: 4.0, omega: 0.2 }]],
+            quant_a: vec![vec![SensitivityProbe { value: 2.0, omega: 0.3 }]],
+        };
+        let back = SensitivityTable::from_json(&t.to_json()).unwrap();
+        assert_eq!(back.variant, "tiny");
+        assert_eq!(back.prune[0][0], SensitivityProbe { value: 0.5, omega: 0.1 });
+        assert_eq!(back.quant_a[0][0].omega, 0.3);
+    }
+
+    #[test]
+    fn feature_vector_shape() {
+        let cfg = SensitivityConfig::default();
+        let t = SensitivityTable::disabled(3, &cfg, "tiny");
+        assert_eq!(
+            t.feature_dim(),
+            cfg.prune_ratios.len() + cfg.w_bits.len() + cfg.a_bits.len()
+        );
+        let f = t.layer_features(1);
+        assert_eq!(f.len(), t.feature_dim());
+        // disabled table: constant features
+        let g = t.layer_features(2);
+        assert_eq!(f, g);
+    }
+}

@@ -1,0 +1,70 @@
+//! TVM bit-serial operator constraints (paper §Direct Metric): mixed
+//! precision is only available to layers whose *compressed* configuration
+//! satisfies the operator's layout requirements.  Unsupported layers fall
+//! back to INT8 when the agent asks for MIX.
+
+use crate::model::{Layer, LayerKind};
+
+/// Can this layer run the bit-serial (MIX) operators, given its effective
+/// (post-pruning) channel counts?
+///
+/// Conv: input channels % 32 == 0, output channels % 8 == 0, spatial output
+/// dimension >= 2, not depthwise.  Linear: output features % 8 == 0.
+pub fn mix_supported(layer: &Layer, eff_cin: usize, eff_cout: usize) -> bool {
+    match layer.kind {
+        LayerKind::Conv => {
+            !layer.depthwise
+                && eff_cin % 32 == 0
+                && eff_cin > 0
+                && eff_cout % 8 == 0
+                && eff_cout > 0
+                && layer.out_spatial >= 2
+        }
+        LayerKind::Linear => eff_cout % 8 == 0 && eff_cout > 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LayerKind;
+
+    fn conv(cin: usize, cout: usize, out_spatial: usize, depthwise: bool) -> Layer {
+        Layer {
+            index: 0,
+            name: "t".into(),
+            kind: LayerKind::Conv,
+            cin,
+            cout,
+            kernel: 3,
+            stride: 1,
+            in_spatial: out_spatial,
+            out_spatial,
+            prunable: true,
+            group: -1,
+            depthwise,
+        }
+    }
+
+    #[test]
+    fn conv_constraints() {
+        assert!(mix_supported(&conv(32, 64, 8, false), 32, 64));
+        // first layer (cin=3) can never be MIX — matches paper Fig 3b
+        assert!(!mix_supported(&conv(3, 32, 32, false), 3, 32));
+        assert!(!mix_supported(&conv(32, 64, 8, false), 16, 64)); // pruned producer broke %32
+        assert!(!mix_supported(&conv(32, 64, 8, false), 32, 60)); // cout % 8
+        assert!(!mix_supported(&conv(32, 64, 1, false), 32, 64)); // spatial < 2
+        assert!(!mix_supported(&conv(32, 32, 8, true), 32, 32)); // depthwise
+    }
+
+    #[test]
+    fn linear_constraints() {
+        let mut fc = conv(256, 10, 1, false);
+        fc.kind = LayerKind::Linear;
+        // classifier with 10 outputs is not a multiple of 8 => INT8 fallback,
+        // exactly the paper's "last layer is INT8 by constraint"
+        assert!(!mix_supported(&fc, 256, 10));
+        fc.cout = 16;
+        assert!(mix_supported(&fc, 256, 16));
+    }
+}

@@ -1,0 +1,31 @@
+//! Hardware substrate: an analytical latency simulator of the paper's
+//! target (Raspberry Pi 4B, ARM Cortex-A72, TVM-generated fp32 / int8 /
+//! bit-serial operators).
+//!
+//! The paper measures each candidate policy's inference latency on the
+//! physical device; this environment has no Pi, so — per the substitution
+//! rule in DESIGN.md — we implement the closest synthetic equivalent that
+//! exercises the same code path: `LatencySimulator::measure` consumes a
+//! `DiscretePolicy` exactly as TVM would consume the restructured model and
+//! returns a latency scalar with measurement noise (repeat + median).
+//!
+//! The cost model reproduces the qualitative structure the search dynamics
+//! depend on (calibration tests in `cost.rs` / `sim.rs`):
+//!
+//! * latency is **not** proportional to MACs or BOPs: cache-boundness makes
+//!   large layers disproportionately expensive (Klein et al. 2021);
+//! * INT8 beats FP32 by ~2-3x minus (re)quantization overheads;
+//! * bit-serial MIX scales with `w_bits * a_bits` plus bit-packing overhead
+//!   and crosses over INT8 near 6x6 bits (paper §Exploration Range);
+//! * the TVM bit-serial operator constraints gate MIX per layer
+//!   (in_ch % 32, out_ch % 8, spatial >= 2, no depthwise, linear out % 8).
+
+mod constraints;
+mod cost;
+mod sim;
+mod target;
+
+pub use constraints::mix_supported;
+pub use cost::{CostModel, LayerCost};
+pub use sim::{LatencySimulator, Measurement};
+pub use target::HwTarget;

@@ -1,0 +1,163 @@
+//! Whole-model latency simulator with a measurement harness.
+//!
+//! `latency()` is the deterministic cost-model sum over the policy's
+//! effective layer configurations.  `measure()` mimics the paper's TVM
+//! remote measurement: N noisy repetitions, median-reduced — so the reward
+//! the agent sees carries realistic measurement jitter.
+
+use super::cost::CostModel;
+use crate::compress::DiscretePolicy;
+use crate::model::ModelIr;
+use crate::util::rng::Pcg64;
+use crate::util::stats::median;
+
+/// One latency measurement (seconds) with its raw samples.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub latency_s: f64,
+    pub samples: Vec<f64>,
+}
+
+#[derive(Clone, Debug)]
+pub struct LatencySimulator {
+    pub cost: CostModel,
+    /// Relative Gaussian measurement noise per repetition (sigma).
+    pub noise_sigma: f64,
+    /// Repetitions per measurement (median-reduced).
+    pub repeats: usize,
+    rng: Pcg64,
+}
+
+impl LatencySimulator {
+    pub fn new(cost: CostModel, seed: u64) -> Self {
+        Self {
+            cost,
+            noise_sigma: 0.01,
+            repeats: 5,
+            rng: Pcg64::with_stream(seed, 0x1a7e),
+        }
+    }
+
+    /// Deterministic (noise-free) end-to-end latency of a compressed model.
+    pub fn latency(&self, ir: &ModelIr, policy: &DiscretePolicy) -> f64 {
+        let mut total = 0.0;
+        for l in &ir.layers {
+            let cmp = &policy.layers[l.index];
+            let eff_cin = policy.effective_cin(ir, l.index);
+            total += self
+                .cost
+                .layer_cost(l, eff_cin, cmp.kept_channels, cmp.quant)
+                .total();
+        }
+        total
+    }
+
+    /// Per-layer deterministic latency breakdown (profiling / Fig analysis).
+    pub fn latency_per_layer(&self, ir: &ModelIr, policy: &DiscretePolicy) -> Vec<f64> {
+        ir.layers
+            .iter()
+            .map(|l| {
+                let cmp = &policy.layers[l.index];
+                let eff_cin = policy.effective_cin(ir, l.index);
+                self.cost
+                    .layer_cost(l, eff_cin, cmp.kept_channels, cmp.quant)
+                    .total()
+            })
+            .collect()
+    }
+
+    /// Noisy measurement: repeat + median, like the on-device harness.
+    pub fn measure(&mut self, ir: &ModelIr, policy: &DiscretePolicy) -> Measurement {
+        let base = self.latency(ir, policy);
+        let samples: Vec<f64> = (0..self.repeats)
+            .map(|_| {
+                let noise = 1.0 + self.noise_sigma * self.rng.normal();
+                // measurement noise is one-sided-ish in practice (preemption
+                // only ever slows you down); fold extreme negatives
+                base * noise.max(1.0 - 2.0 * self.noise_sigma)
+            })
+            .collect();
+        Measurement {
+            latency_s: median(&samples),
+            samples,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::QuantMode;
+    use crate::hw::HwTarget;
+    use crate::model::ir::test_fixtures::tiny_meta;
+    use crate::model::ModelIr;
+
+    fn setup() -> (ModelIr, LatencySimulator) {
+        let ir = ModelIr::from_meta(&tiny_meta()).unwrap();
+        let sim = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 7);
+        (ir, sim)
+    }
+
+    #[test]
+    fn reference_latency_positive_and_deterministic() {
+        let (ir, sim) = setup();
+        let p = DiscretePolicy::reference(&ir);
+        let a = sim.latency(&ir, &p);
+        let b = sim.latency(&ir, &p);
+        assert!(a > 0.0);
+        assert_eq!(a, b);
+        let per_layer = sim.latency_per_layer(&ir, &p);
+        assert_eq!(per_layer.len(), ir.layers.len());
+        assert!((per_layer.iter().sum::<f64>() - a).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compression_reduces_latency() {
+        let (ir, sim) = setup();
+        let reference = DiscretePolicy::reference(&ir);
+        let base = sim.latency(&ir, &reference);
+
+        let mut pruned = reference.clone();
+        pruned.layers[1].kept_channels = 2;
+        pruned.layers[3].kept_channels = 4;
+        assert!(sim.latency(&ir, &pruned) < base);
+
+        let mut quant = reference.clone();
+        for l in &mut quant.layers {
+            l.quant = QuantMode::Int8;
+        }
+        assert!(sim.latency(&ir, &quant) < base);
+    }
+
+    #[test]
+    fn measurement_noise_bounded_and_seeded() {
+        let (ir, _) = setup();
+        let p = DiscretePolicy::reference(&ir);
+        let mut sim1 = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 42);
+        let mut sim2 = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 42);
+        let base = sim1.latency(&ir, &p);
+        let m1 = sim1.measure(&ir, &p);
+        let m2 = sim2.measure(&ir, &p);
+        assert_eq!(m1.latency_s, m2.latency_s, "seeded determinism");
+        assert_eq!(m1.samples.len(), 5);
+        assert!((m1.latency_s / base - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn float_only_target_ignores_quant_modes() {
+        let ir = ModelIr::from_meta(&tiny_meta()).unwrap();
+        let sim = LatencySimulator::new(
+            CostModel::new(HwTarget::cortex_a72().float_only()),
+            3,
+        );
+        let reference = DiscretePolicy::reference(&ir);
+        let mut quant = reference.clone();
+        for l in &mut quant.layers {
+            l.quant = QuantMode::Int8;
+        }
+        // on a float-only device quantization buys nothing
+        let a = sim.latency(&ir, &reference);
+        let b = sim.latency(&ir, &quant);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,104 @@
+//! Target-device description.  The default models the paper's Raspberry Pi
+//! 4B (quad Cortex-A72 @ 1.5 GHz): NEON 128-bit SIMD, 32 KiB L1d per core,
+//! 1 MiB shared L2, LPDDR4.  All knobs are plain fields so ablations and
+//! tests can fabricate alternative devices (e.g. one without quantization
+//! support — the paper's motivation for hardware-specific search).
+
+#[derive(Clone, Debug)]
+pub struct HwTarget {
+    pub name: String,
+    pub cores: usize,
+    pub freq_hz: f64,
+    /// f32 MACs per cycle per core (NEON 128-bit FMA).
+    pub f32_macs_per_cycle: f64,
+    /// Throughput multiplier of the int8 GEMM kernels over f32.
+    pub int8_speedup: f64,
+    /// Binary (1-bit x 1-bit) MACs per second, all cores — the popcount
+    /// GEMM roofline of the TVM bit-serial operators (Cowan et al. 2020).
+    pub binary_macs_per_sec: f64,
+    /// Elementwise throughput (elems/s, all cores) for quantize/requantize,
+    /// BN-scale, ReLU, residual adds.
+    pub elemwise_per_sec: f64,
+    /// Activation bit-packing throughput for bit-serial (elems/s per plane).
+    pub pack_per_sec: f64,
+    /// Sustained memory bandwidth (bytes/s) for cache-miss traffic.
+    pub mem_bw: f64,
+    pub l1_bytes: usize,
+    pub l2_bytes: usize,
+    /// Fixed per-operator launch overhead (s) — TVM op call + scheduling.
+    pub layer_overhead_s: f64,
+    /// Whether the deployed runtime ships quantized kernels at all
+    /// (hardware-specific search motivation: some targets do not).
+    pub supports_int8: bool,
+    pub supports_bitserial: bool,
+}
+
+impl HwTarget {
+    /// Raspberry Pi 4B / ARM Cortex-A72 (the paper's testbed).
+    ///
+    /// Constant provenance (order-of-magnitude, calibrated to the paper's
+    /// qualitative claims rather than absolute numbers):
+    /// * 4 cores x 1.5 GHz x 4 f32 MACs/cycle  => 24 GMAC/s peak;
+    ///   TVM fp32 conv sustains a cache-dependent 40-85 % of that.
+    /// * int8 dot kernels: ~2.8x f32 (SDOT-less A72 gets less than A76).
+    /// * bit-serial popcount GEMM: ~83x f32 MAC rate per *binary* op —
+    ///   calibrated so MIX 6x6 lands slightly above INT8 (paper found >6
+    ///   bits slower than INT8) and MIX 2x2 roughly 3-4x under it.
+    pub fn cortex_a72() -> Self {
+        Self {
+            name: "raspberry-pi-4b/cortex-a72".into(),
+            cores: 4,
+            freq_hz: 1.5e9,
+            f32_macs_per_cycle: 4.0,
+            int8_speedup: 2.8,
+            binary_macs_per_sec: 2.8e12,
+            elemwise_per_sec: 6.0e9,
+            pack_per_sec: 2.5e9,
+            mem_bw: 4.0e9,
+            l1_bytes: 32 * 1024,
+            l2_bytes: 1024 * 1024,
+            layer_overhead_s: 18e-6,
+            supports_int8: true,
+            supports_bitserial: true,
+        }
+    }
+
+    /// A float-only device (no quantized kernels): used by ablations to show
+    /// the search adapting to hardware capabilities.
+    pub fn float_only(mut self) -> Self {
+        self.supports_int8 = false;
+        self.supports_bitserial = false;
+        self.name = format!("{}+float-only", self.name);
+        self
+    }
+
+    /// Peak f32 MAC throughput (MACs/s, all cores).
+    pub fn f32_peak(&self) -> f64 {
+        self.cores as f64 * self.freq_hz * self.f32_macs_per_cycle
+    }
+
+    /// Peak int8 MAC throughput (MACs/s, all cores).
+    pub fn int8_peak(&self) -> f64 {
+        self.f32_peak() * self.int8_speedup
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a72_peaks() {
+        let t = HwTarget::cortex_a72();
+        assert_eq!(t.f32_peak(), 24e9);
+        assert!(t.int8_peak() > t.f32_peak());
+        assert!(t.supports_int8 && t.supports_bitserial);
+    }
+
+    #[test]
+    fn float_only_strips_quant() {
+        let t = HwTarget::cortex_a72().float_only();
+        assert!(!t.supports_int8 && !t.supports_bitserial);
+        assert!(t.name.contains("float-only"));
+    }
+}

@@ -1,0 +1,46 @@
+//! # Galen-RS
+//!
+//! Production-grade reproduction of *"Towards Hardware-Specific Automatic
+//! Compression of Neural Networks"* (Krieger, Klein, Fröning, 2022) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! * **L3 (this crate)** — the Galen search framework: DDPG agents for
+//!   pruning / quantization / joint compression, the episode loop with
+//!   hardware-latency reward, sensitivity analysis, the embedded-CPU latency
+//!   simulator substrate, and all experiment harnesses.
+//! * **L2/L1 (python/, build-time only)** — the compressible model as a
+//!   policy-parameterized JAX graph whose convolutions lower through a fused
+//!   Pallas quantize-GEMM kernel; AOT-exported to HLO text under
+//!   `artifacts/` and executed here via PJRT (`runtime`).
+//!
+//! Python never runs on the search path: policies are runtime *inputs* of
+//! one compiled artifact (see DESIGN.md "Compression-as-runtime-inputs").
+
+pub mod agent;
+pub mod bench;
+pub mod compress;
+pub mod coordinator;
+pub mod eval;
+pub mod hw;
+pub mod model;
+pub mod nn;
+pub mod reward;
+pub mod runtime;
+pub mod search;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+
+/// Repository-root-relative default artifact directory.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("GALEN_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+/// Default results directory for experiment harnesses.
+pub fn results_dir() -> std::path::PathBuf {
+    std::env::var("GALEN_RESULTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("results"))
+}

@@ -1,0 +1,347 @@
+//! `galen` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   search       run a policy search (agent, target, episodes, ...)
+//!   sweep        sweep target compression rates (Figure 4 protocol)
+//!   sequential   prune->quant / quant->prune schemes (Figure 5 protocol)
+//!   sensitivity  compute + print the layer sensitivity table (Figure 6)
+//!   latency      profile the hardware simulator on a model variant
+//!   validate     evaluate a saved policy (accuracy + latency + retrain)
+//!
+//! Python never runs here: everything executes against AOT artifacts in
+//! `artifacts/` and the analytical hardware substrate.
+
+use anyhow::Result;
+use galen::agent::AgentKind;
+use galen::compress::DiscretePolicy;
+use galen::coordinator::{policy_report, Backend, ExperimentRecord, Session, SessionOptions};
+use galen::eval::{retrain, RetrainCfg, SensitivityConfig, Split};
+use galen::search::SearchConfig;
+use galen::util::cli::Cli;
+use galen::util::json::Json;
+
+fn main() {
+    galen::util::logging::init(log::LevelFilter::Info);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, rest)) => (c.as_str(), rest.to_vec()),
+        None => {
+            eprintln!("{}", usage());
+            std::process::exit(2);
+        }
+    };
+    let r = match cmd {
+        "search" => cmd_search(&rest),
+        "sweep" => cmd_sweep(&rest),
+        "sequential" => cmd_sequential(&rest),
+        "sensitivity" => cmd_sensitivity(&rest),
+        "latency" => cmd_latency(&rest),
+        "validate" => cmd_validate(&rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "galen — hardware-specific automatic compression via reinforcement learning\n\
+     \n\
+     Usage: galen <command> [options]   (--help per command)\n\
+     \n\
+     Commands:\n\
+       search       run one policy search (pruning|quantization|joint)\n\
+       sweep        sweep target compression rates (Fig 4)\n\
+       sequential   two-stage prune/quant schemes (Fig 5)\n\
+       sensitivity  layer sensitivity analysis (Fig 6)\n\
+       latency      hardware-simulator latency profile\n\
+       validate     evaluate a saved policy json (accuracy, latency, retrain)"
+}
+
+fn common_session(args: &galen::util::cli::Args) -> Result<Session> {
+    let mut opts = SessionOptions::new(args.get("variant"));
+    if args.has_flag("synthetic") {
+        opts.backend = Backend::Synthetic;
+    }
+    if args.has_flag("paper-sensitivity") {
+        opts.sensitivity = SensitivityConfig::paper();
+    }
+    opts.seed = args.get_u64("seed")?;
+    Session::open(opts)
+}
+
+fn base_cli(name: &'static str, about: &'static str) -> Cli {
+    Cli::new(name, about)
+        .opt("variant", "resnet18s", "model variant (micro|resnet18s|resnet18)")
+        .opt("seed", "7", "global seed")
+        .opt("episodes", "120", "episodes per search")
+        .opt("warmup", "10", "random warm-up episodes")
+        .opt("eval-batches", "2", "validation batches per accuracy eval")
+        .opt("beta", "-3.0", "reward cost exponent (Eq. 6)")
+        .opt("results", "results", "results directory")
+        .opt("config", "", "JSON config file with search overrides (configs/*.json)")
+        .flag("synthetic", "synthetic accuracy backend (no PJRT)")
+        .flag("paper-sensitivity", "Fig-6 resolution sensitivity probes")
+        .flag("paper-episodes", "use the paper's 310/410 episode counts")
+}
+
+fn mk_config(args: &galen::util::cli::Args, agent: AgentKind, target: f64) -> Result<SearchConfig> {
+    let mut cfg = if args.has_flag("paper-episodes") {
+        SearchConfig::paper(agent, target)
+    } else {
+        let mut c = SearchConfig::new(agent, target);
+        c.episodes = args.get_usize("episodes")?;
+        c
+    };
+    cfg.warmup_episodes = args.get_usize("warmup")?;
+    cfg.eval_batches = args.get_usize("eval-batches")?;
+    cfg.beta = args.get_f64("beta")?;
+    cfg.seed = args.get_u64("seed")?;
+    let config_path = args.get("config");
+    if !config_path.is_empty() {
+        let j = Json::read_file(std::path::Path::new(config_path))?;
+        cfg.apply_json(&j);
+    }
+    Ok(cfg)
+}
+
+fn clone_outcome(o: &galen::search::SearchOutcome) -> galen::search::SearchOutcome {
+    galen::search::SearchOutcome {
+        best_policy: o.best_policy.clone(),
+        best: o.best.clone(),
+        history: o.history.clone(),
+        base_latency_s: o.base_latency_s,
+        base_accuracy: o.base_accuracy,
+    }
+}
+
+fn cmd_search(argv: &[String]) -> Result<()> {
+    let cli = base_cli("galen search", "run one compression policy search")
+        .opt("agent", "joint", "pruning|quantization|joint")
+        .opt("target", "0.3", "target compression rate c")
+        .flag("retrain", "fine-tune the best policy before reporting")
+        .flag("no-sensitivity", "ablation: constant sensitivity features");
+    let args = cli.parse_from(argv)?;
+    let session = common_session(&args)?;
+    let agent = AgentKind::parse(args.get("agent"))?;
+    let target = args.get_f64("target")?;
+    let cfg = mk_config(&args, agent, target)?;
+
+    let sens_override = if args.has_flag("no-sensitivity") {
+        Some(galen::eval::SensitivityTable::disabled(
+            session.ir.layers.len(),
+            &session.opts.sensitivity,
+            &session.opts.variant,
+        ))
+    } else {
+        None
+    };
+    let outcome = session.search_from(&cfg, None, sens_override.as_ref())?;
+
+    println!("{}", galen::coordinator::table1_header());
+    let rec = ExperimentRecord {
+        name: format!(
+            "search_{}_{}_c{:03}",
+            session.opts.variant,
+            agent.label(),
+            (target * 100.0) as u32
+        ),
+        config: cfg,
+        outcome,
+    };
+    println!("{}", rec.table1_row());
+    println!(
+        "\nBest policy:\n{}",
+        policy_report(&session.ir, &rec.outcome.best_policy)
+    );
+
+    if args.has_flag("retrain") {
+        if let Some(ev) = &session.evaluator {
+            let report = retrain(ev, &rec.outcome.best_policy, &RetrainCfg::default())?;
+            log::info!(
+                "retrain losses: first={:.4} last={:.4}",
+                report.losses.first().copied().unwrap_or(0.0),
+                report.losses.last().copied().unwrap_or(0.0)
+            );
+        }
+    }
+    let path = rec.save(&session.ir, std::path::Path::new(args.get("results")))?;
+    log::info!("saved {}", path.display());
+    Ok(())
+}
+
+fn cmd_sweep(argv: &[String]) -> Result<()> {
+    let cli = base_cli("galen sweep", "sweep target compression rates (Fig 4)")
+        .opt("agents", "pruning,quantization,joint", "agents to sweep")
+        .opt("targets", "0.1,0.2,0.3,0.4,0.5,0.6,0.7", "target rates");
+    let args = cli.parse_from(argv)?;
+    let session = common_session(&args)?;
+    let targets = args.get_f64_list("targets")?;
+    println!(
+        "{:16} {:>5} {:>10} {:>10} {:>9}",
+        "agent", "c", "rel.lat", "accuracy", "reward"
+    );
+    for agent_s in args.get_list("agents") {
+        let agent = AgentKind::parse(&agent_s)?;
+        let proto = mk_config(&args, agent, 0.3)?;
+        let outs = session.sweep(agent, &targets, &proto)?;
+        for (c, out) in targets.iter().zip(&outs) {
+            println!(
+                "{:16} {:>5.2} {:>9.1}% {:>9.2}% {:>9.3}",
+                agent.label(),
+                c,
+                out.relative_latency() * 100.0,
+                out.best.accuracy * 100.0,
+                out.best.reward
+            );
+            let rec = ExperimentRecord {
+                name: format!(
+                    "sweep_{}_{}_c{:03}",
+                    session.opts.variant,
+                    agent.label(),
+                    (c * 100.0) as u32
+                ),
+                config: {
+                    let mut cfg = proto.clone();
+                    cfg.target = *c;
+                    cfg
+                },
+                outcome: clone_outcome(out),
+            };
+            rec.save(&session.ir, std::path::Path::new(args.get("results")))?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sequential(argv: &[String]) -> Result<()> {
+    let cli = base_cli("galen sequential", "two-stage schemes vs joint (Fig 5)")
+        .opt("target", "0.2", "effective target compression rate")
+        .opt("first", "pruning", "first stage: pruning|quantization");
+    let args = cli.parse_from(argv)?;
+    let session = common_session(&args)?;
+    let target = args.get_f64("target")?;
+    let first = AgentKind::parse(args.get("first"))?;
+    let proto = mk_config(&args, first, target)?;
+    let (s1, s2) = session.sequential(first, target, &proto)?;
+    println!(
+        "stage 1 ({}): rel.lat {:.1}%  acc {:.2}%",
+        first.label(),
+        s1.relative_latency() * 100.0,
+        s1.best.accuracy * 100.0
+    );
+    println!(
+        "stage 2: rel.lat {:.1}%  acc {:.2}%\n\nFinal policy:\n{}",
+        s2.relative_latency() * 100.0,
+        s2.best.accuracy * 100.0,
+        policy_report(&session.ir, &s2.best_policy)
+    );
+    Ok(())
+}
+
+fn cmd_sensitivity(argv: &[String]) -> Result<()> {
+    let cli = base_cli("galen sensitivity", "layer sensitivity table (Fig 6)");
+    let args = cli.parse_from(argv)?;
+    let session = common_session(&args)?;
+    let sens = &session.sens;
+    println!(
+        "{:14} {:>34} {:>34}",
+        "layer", "w-quant Ω (bits asc)", "prune Ω (ratio asc)"
+    );
+    for l in &session.ir.layers {
+        let w: Vec<String> = sens.quant_w[l.index]
+            .iter()
+            .map(|p| format!("{:.3}", p.omega))
+            .collect();
+        let pr: Vec<String> = sens.prune[l.index]
+            .iter()
+            .map(|p| format!("{:.3}", p.omega))
+            .collect();
+        println!("{:14} {:>34} {:>34}", l.name, w.join(" "), pr.join(" "));
+    }
+    Ok(())
+}
+
+fn cmd_latency(argv: &[String]) -> Result<()> {
+    let cli = base_cli("galen latency", "hardware-simulator latency profile");
+    let args = cli.parse_from(argv)?;
+    let mut opts = SessionOptions::new(args.get("variant"));
+    opts.backend = Backend::Synthetic; // structure only
+    opts.seed = args.get_u64("seed")?;
+    let session = Session::open(opts)?;
+    let sim = session.simulator(1);
+    let p = DiscretePolicy::reference(&session.ir);
+    let per_layer = sim.latency_per_layer(&session.ir, &p);
+    println!("{:14} {:>12} {:>10}", "layer", "latency", "share");
+    let total: f64 = per_layer.iter().sum();
+    for (l, t) in session.ir.layers.iter().zip(&per_layer) {
+        println!("{:14} {:>9.3} ms {:>9.1}%", l.name, t * 1e3, 100.0 * t / total);
+    }
+    println!("total {:.3} ms (fp32 reference)", total * 1e3);
+    Ok(())
+}
+
+fn cmd_validate(argv: &[String]) -> Result<()> {
+    let cli = base_cli("galen validate", "evaluate a saved policy record")
+        .req("policy", "path to a results/*.json record")
+        .flag("retrain", "fine-tune before the test-split evaluation")
+        .flag("test-split", "report test accuracy instead of validation");
+    let args = cli.parse_from(argv)?;
+    let session = common_session(&args)?;
+    let j = Json::read_file(std::path::Path::new(args.get("policy")))?;
+    let policy = parse_policy(&session, &j)?;
+
+    let sim = session.simulator(args.get_u64("seed")?);
+    let lat = sim.latency(&session.ir, &policy);
+    println!("latency: {:.3} ms", lat * 1e3);
+    if let Some(ev) = &session.evaluator {
+        let split = if args.has_flag("test-split") {
+            Split::Test
+        } else {
+            Split::Val
+        };
+        let acc = ev.accuracy(&policy, split, usize::MAX)?;
+        println!("accuracy ({split:?}): {:.2}%", acc * 100.0);
+        if args.has_flag("retrain") {
+            let rep = retrain(ev, &policy, &RetrainCfg::default())?;
+            log::info!("retrained {} steps", rep.losses.len());
+        }
+    }
+    println!("{}", policy_report(&session.ir, &policy));
+    Ok(())
+}
+
+/// Parse the `policy` array of a saved record back into a DiscretePolicy.
+fn parse_policy(session: &Session, j: &Json) -> Result<DiscretePolicy> {
+    use galen::compress::{LayerCmp, QuantMode};
+    let arr = j.req_arr("policy")?;
+    anyhow::ensure!(arr.len() == session.ir.layers.len(), "layer count mismatch");
+    let mut layers = Vec::with_capacity(arr.len());
+    for (l, e) in session.ir.layers.iter().zip(arr) {
+        anyhow::ensure!(e.req_str("layer")? == l.name, "layer order mismatch");
+        let channels = e.req_usize("channels")?;
+        let wb = e.req_f64("w_bits")? as u32;
+        let ab = e.req_f64("a_bits")? as u32;
+        let quant = match (wb, ab) {
+            (32, 32) => QuantMode::Fp32,
+            (8, 8) => QuantMode::Int8,
+            (w, a) => QuantMode::Mix {
+                w_bits: w as u8,
+                a_bits: a as u8,
+            },
+        };
+        layers.push(LayerCmp {
+            kept_channels: channels,
+            quant,
+        });
+    }
+    Ok(DiscretePolicy { layers })
+}

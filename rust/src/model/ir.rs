@@ -1,0 +1,409 @@
+//! Graph-level IR over the manifest, with MAC/BOP accounting and
+//! pruning-dependency groups.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::meta::ModelMeta;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Linear,
+}
+
+/// One compressible layer of the model (conv or linear).
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub index: usize,
+    pub name: String,
+    pub kind: LayerKind,
+    pub cin: usize,
+    pub cout: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub in_spatial: usize,
+    pub out_spatial: usize,
+    /// Independently prunable (not residual-coupled).
+    pub prunable: bool,
+    /// Dependency group id (>= 0 couples the layer to a residual stream).
+    pub group: i64,
+    pub depthwise: bool,
+}
+
+impl Layer {
+    /// MACs at the layer's *original* configuration.
+    pub fn macs(&self) -> u64 {
+        self.macs_at(self.cin, self.cout)
+    }
+
+    /// MACs with compressed channel counts.
+    pub fn macs_at(&self, cin: usize, cout: usize) -> u64 {
+        match self.kind {
+            LayerKind::Conv => {
+                (self.kernel as u64)
+                    * (self.kernel as u64)
+                    * cin as u64
+                    * cout as u64
+                    * (self.out_spatial as u64)
+                    * (self.out_spatial as u64)
+            }
+            LayerKind::Linear => cin as u64 * cout as u64,
+        }
+    }
+
+    /// Parameter count (weights only) with compressed channels.
+    pub fn params_at(&self, cin: usize, cout: usize) -> u64 {
+        match self.kind {
+            LayerKind::Conv => (self.kernel * self.kernel * cin * cout) as u64,
+            LayerKind::Linear => (cin * cout) as u64,
+        }
+    }
+
+    /// Output activation element count per sample with `cout` channels.
+    pub fn out_elems(&self, cout: usize) -> u64 {
+        (self.out_spatial * self.out_spatial * cout) as u64
+    }
+
+    /// Input activation element count per sample with `cin` channels.
+    pub fn in_elems(&self, cin: usize) -> u64 {
+        (self.in_spatial * self.in_spatial * cin) as u64
+    }
+}
+
+/// The full compressible-model IR.
+#[derive(Clone, Debug)]
+pub struct ModelIr {
+    pub variant: String,
+    pub img: usize,
+    pub classes: usize,
+    pub layers: Vec<Layer>,
+    /// group id -> member layer indices (residual streams).
+    pub groups: BTreeMap<i64, Vec<usize>>,
+    /// For layer i, the set of layer indices whose *input* channel count
+    /// follows layer i's output channels (consumers).
+    pub consumers: Vec<Vec<usize>>,
+    /// policy-input name -> position in the policy manifest (input packing).
+    pub policy_index: BTreeMap<String, usize>,
+    pub base_test_acc: f64,
+    pub eval_batch: usize,
+    pub train_batch: usize,
+}
+
+impl ModelIr {
+    pub fn from_meta(meta: &ModelMeta) -> Result<Self> {
+        let mut layers = Vec::with_capacity(meta.layers.len());
+        for (i, l) in meta.layers.iter().enumerate() {
+            let kind = match l.kind.as_str() {
+                "conv" => LayerKind::Conv,
+                "linear" => LayerKind::Linear,
+                k => bail!("unknown layer kind '{k}'"),
+            };
+            layers.push(Layer {
+                index: i,
+                name: l.name.clone(),
+                kind,
+                cin: l.cin,
+                cout: l.cout,
+                kernel: l.kernel,
+                stride: l.stride,
+                in_spatial: l.in_spatial,
+                out_spatial: l.out_spatial,
+                prunable: l.prunable,
+                group: l.group,
+                depthwise: l.depthwise,
+            });
+        }
+
+        let mut groups: BTreeMap<i64, Vec<usize>> = BTreeMap::new();
+        for l in &layers {
+            if l.group >= 0 {
+                groups.entry(l.group).or_default().push(l.index);
+            }
+        }
+        // dependency sanity: group members share the output width
+        for (gid, members) in &groups {
+            let w = layers[members[0]].cout;
+            if members.iter().any(|&i| layers[i].cout != w) {
+                bail!("group {gid} members disagree on width");
+            }
+        }
+
+        // Consumers: topology-specific wiring for the ResNet family. A
+        // conv1 feeds the following conv2; stream members feed the next
+        // stage's first conv1/downsample and (last stream) the classifier.
+        let consumers = Self::infer_consumers(&layers);
+
+        let policy_index = meta
+            .policy
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.name.clone(), i))
+            .collect();
+
+        Ok(Self {
+            variant: meta.variant.clone(),
+            img: meta.img,
+            classes: meta.classes,
+            layers,
+            groups,
+            consumers,
+            policy_index,
+            base_test_acc: meta.base_test_acc,
+            eval_batch: meta.eval_batch,
+            train_batch: meta.train_batch,
+        })
+    }
+
+    /// Wire up who consumes whose output channels, from the layer list
+    /// (manifest order is forward order).  conv1 -> its block's conv2.
+    /// A stream member (group >= 0) feeds every later conv1/down/linear
+    /// whose input width equals the stream width — stage widths are unique
+    /// in the ResNet family, so the width identifies the stream.
+    fn infer_consumers(layers: &[Layer]) -> Vec<Vec<usize>> {
+        let mut consumers = vec![Vec::new(); layers.len()];
+        for (i, l) in layers.iter().enumerate() {
+            if l.group < 0 {
+                // independent (conv1): its block's conv2 is the consumer
+                if let Some(prefix) = l.name.strip_suffix(".conv1") {
+                    if let Some(j) = layers
+                        .iter()
+                        .position(|m| m.name == format!("{prefix}.conv2"))
+                    {
+                        consumers[i].push(j);
+                    }
+                }
+                continue;
+            }
+            for (j, m) in layers.iter().enumerate().skip(i + 1) {
+                let is_reader = (m.name.ends_with(".conv1")
+                    || m.name.ends_with(".down")
+                    || m.kind == LayerKind::Linear)
+                    && m.cin == l.cout;
+                if is_reader {
+                    consumers[i].push(j);
+                }
+            }
+        }
+        consumers
+    }
+
+    pub fn layer_by_name(&self, name: &str) -> Option<&Layer> {
+        self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// Total MACs at the original configuration (per sample).
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    /// Total parameters at the original configuration.
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params_at(l.cin, l.cout)).sum()
+    }
+
+    /// Indices of layers the pruning agent may act on.
+    pub fn prunable_layers(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .filter(|l| l.prunable)
+            .map(|l| l.index)
+            .collect()
+    }
+
+    /// Number of compressible layers (= time steps per episode).
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Position of a policy input in the flat policy vector, by name.
+    pub fn policy_pos(&self, name: &str) -> Option<usize> {
+        self.policy_index.get(name).copied()
+    }
+}
+
+pub mod test_fixtures {
+    //! Artifact-free fixtures: a miniature ResNet-shaped manifest used by
+    //! unit tests, property tests and microbenches that must not depend on
+    //! `artifacts/` being built.
+    use super::super::meta::{ManifestEntry, MetaLayer, ModelMeta};
+
+    /// A miniature ResNet-shaped manifest (stem + one block per 2 stages +
+    /// fc) for tests that must not depend on artifacts/ being built.
+    pub fn tiny_meta() -> ModelMeta {
+        let conv = |name: &str, cin, cout, k, stride, isp, osp, prunable, group| MetaLayer {
+            name: name.into(),
+            kind: "conv".into(),
+            cin,
+            cout,
+            kernel: k,
+            stride,
+            in_spatial: isp,
+            out_spatial: osp,
+            prunable,
+            group,
+            depthwise: false,
+        };
+        let layers = vec![
+            conv("stem", 3, 8, 3, 1, 16, 16, false, 0),
+            conv("s0b0.conv1", 8, 8, 3, 1, 16, 16, true, -1),
+            conv("s0b0.conv2", 8, 8, 3, 1, 16, 16, false, 0),
+            conv("s1b0.conv1", 8, 16, 3, 2, 16, 8, true, -1),
+            conv("s1b0.conv2", 16, 16, 3, 1, 8, 8, false, 1),
+            conv("s1b0.down", 8, 16, 1, 2, 16, 8, false, 1),
+            MetaLayer {
+                name: "fc".into(),
+                kind: "linear".into(),
+                cin: 16,
+                cout: 10,
+                kernel: 1,
+                stride: 1,
+                in_spatial: 1,
+                out_spatial: 1,
+                prunable: false,
+                group: -1,
+                depthwise: false,
+            },
+        ];
+        let mut params = Vec::new();
+        let mut policy = Vec::new();
+        for l in &layers {
+            if l.kind == "conv" {
+                params.push(ManifestEntry {
+                    name: format!("{}.w", l.name),
+                    shape: vec![l.kernel, l.kernel, l.cin, l.cout],
+                    trainable: true,
+                });
+                for p in ["gamma", "beta", "mean", "var"] {
+                    params.push(ManifestEntry {
+                        name: format!("{}.bn.{p}", l.name),
+                        shape: vec![l.cout],
+                        trainable: p == "gamma" || p == "beta",
+                    });
+                }
+                policy.push(ManifestEntry {
+                    name: format!("{}.mask", l.name),
+                    shape: vec![l.cout],
+                    trainable: false,
+                });
+                for p in ["w_bits", "a_bits"] {
+                    policy.push(ManifestEntry {
+                        name: format!("{}.{p}", l.name),
+                        shape: vec![],
+                        trainable: false,
+                    });
+                }
+            }
+        }
+        params.push(ManifestEntry {
+            name: "fc.w".into(),
+            shape: vec![16, 10],
+            trainable: true,
+        });
+        params.push(ManifestEntry {
+            name: "fc.b".into(),
+            shape: vec![10],
+            trainable: true,
+        });
+        policy.push(ManifestEntry {
+            name: "fc.w_bits".into(),
+            shape: vec![],
+            trainable: false,
+        });
+        policy.push(ManifestEntry {
+            name: "fc.a_bits".into(),
+            shape: vec![],
+            trainable: false,
+        });
+        let trainable = params
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.trainable)
+            .map(|(i, _)| i)
+            .collect();
+        ModelMeta {
+            variant: "tiny".into(),
+            img: 16,
+            classes: 10,
+            width: 8,
+            blocks: vec![1, 1],
+            eval_batch: 8,
+            train_batch: 4,
+            base_test_acc: 0.9,
+            layers,
+            params,
+            policy,
+            trainable,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_fixtures::tiny_meta;
+    use super::*;
+
+    fn ir() -> ModelIr {
+        ModelIr::from_meta(&tiny_meta()).unwrap()
+    }
+
+    #[test]
+    fn builds_groups() {
+        let ir = ir();
+        assert_eq!(ir.groups[&0], vec![0, 2]); // stem + s0b0.conv2
+        assert_eq!(ir.groups[&1], vec![4, 5]); // s1b0.conv2 + down
+    }
+
+    #[test]
+    fn mac_accounting() {
+        let ir = ir();
+        let stem = &ir.layers[0];
+        assert_eq!(stem.macs(), 3 * 3 * 3 * 8 * 16 * 16);
+        let fc = ir.layers.last().unwrap();
+        assert_eq!(fc.macs(), 160);
+        assert_eq!(
+            ir.total_macs(),
+            ir.layers.iter().map(|l| l.macs()).sum::<u64>()
+        );
+        // pruning cuts MACs linearly in cout
+        let l = &ir.layers[1];
+        assert_eq!(l.macs_at(l.cin, l.cout / 2) * 2, l.macs());
+    }
+
+    #[test]
+    fn prunable_set() {
+        let ir = ir();
+        let p = ir.prunable_layers();
+        assert_eq!(p, vec![1, 3]); // the two conv1 layers
+    }
+
+    #[test]
+    fn consumers_wiring() {
+        let ir = ir();
+        // conv1 -> conv2 of the same block
+        assert_eq!(ir.consumers[1], vec![2]);
+        assert_eq!(ir.consumers[3], vec![4]);
+        // stage-0 stream members feed stage-1 conv1 and down
+        assert!(ir.consumers[0].contains(&3) && ir.consumers[0].contains(&5));
+        assert!(ir.consumers[2].contains(&3) && ir.consumers[2].contains(&5));
+        // stage-1 stream feeds the classifier
+        assert!(ir.consumers[4].contains(&6));
+    }
+
+    #[test]
+    fn policy_positions() {
+        let ir = ir();
+        assert_eq!(ir.policy_pos("stem.mask"), Some(0));
+        assert_eq!(ir.policy_pos("stem.w_bits"), Some(1));
+        assert_eq!(ir.policy_pos("fc.a_bits"), Some(ir.policy_index.len() - 1));
+        assert_eq!(ir.policy_pos("nope"), None);
+    }
+
+    #[test]
+    fn rejects_inconsistent_group() {
+        let mut meta = tiny_meta();
+        meta.layers[2].cout = 4; // break group width invariant
+        assert!(ModelIr::from_meta(&meta).is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! Loader for the AOT structural manifest (`artifacts/meta_<variant>.json`).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One entry of the parameter or policy input manifest: the artifact input
+/// contract (name, shape, position = index in the list).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub trainable: bool,
+}
+
+/// Raw layer description straight from the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetaLayer {
+    pub name: String,
+    pub kind: String,
+    pub cin: usize,
+    pub cout: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub in_spatial: usize,
+    pub out_spatial: usize,
+    pub prunable: bool,
+    pub group: i64,
+    pub depthwise: bool,
+}
+
+/// Everything `aot.py` recorded about one exported model variant.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub variant: String,
+    pub img: usize,
+    pub classes: usize,
+    pub width: usize,
+    pub blocks: Vec<usize>,
+    pub eval_batch: usize,
+    pub train_batch: usize,
+    pub base_test_acc: f64,
+    pub layers: Vec<MetaLayer>,
+    pub params: Vec<ManifestEntry>,
+    pub policy: Vec<ManifestEntry>,
+    pub trainable: Vec<usize>,
+}
+
+fn entry(j: &Json) -> Result<ManifestEntry> {
+    let shape = j
+        .req_arr("shape")?
+        .iter()
+        .map(|d| d.as_usize().context("shape dim not a number"))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ManifestEntry {
+        name: j.req_str("name")?.to_string(),
+        shape,
+        trainable: j.get("trainable").and_then(Json::as_bool).unwrap_or(false),
+    })
+}
+
+fn layer(j: &Json) -> Result<MetaLayer> {
+    Ok(MetaLayer {
+        name: j.req_str("name")?.to_string(),
+        kind: j.req_str("kind")?.to_string(),
+        cin: j.req_usize("cin")?,
+        cout: j.req_usize("cout")?,
+        kernel: j.req_usize("kernel")?,
+        stride: j.req_usize("stride")?,
+        in_spatial: j.req_usize("in_spatial")?,
+        out_spatial: j.req_usize("out_spatial")?,
+        prunable: j.req_bool("prunable")?,
+        group: j.req_f64("group")? as i64,
+        depthwise: j.req_bool("depthwise")?,
+    })
+}
+
+/// Parse `meta_<variant>.json`.
+pub fn load_meta(path: &Path) -> Result<ModelMeta> {
+    let j = Json::read_file(path)?;
+    let layers = j
+        .req_arr("layers")?
+        .iter()
+        .map(layer)
+        .collect::<Result<Vec<_>>>()?;
+    let params = j
+        .req_arr("params")?
+        .iter()
+        .map(entry)
+        .collect::<Result<Vec<_>>>()?;
+    let policy = j
+        .req_arr("policy")?
+        .iter()
+        .map(entry)
+        .collect::<Result<Vec<_>>>()?;
+    let trainable = j
+        .req_arr("trainable")?
+        .iter()
+        .map(|v| v.as_usize().context("trainable index"))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ModelMeta {
+        variant: j.req_str("variant")?.to_string(),
+        img: j.req_usize("img")?,
+        classes: j.req_usize("classes")?,
+        width: j.req_usize("width")?,
+        blocks: j
+            .req_arr("blocks")?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect(),
+        eval_batch: j.req_usize("eval_batch")?,
+        train_batch: j.req_usize("train_batch")?,
+        base_test_acc: j.get("base_test_acc").and_then(Json::as_f64).unwrap_or(0.0),
+        layers,
+        params,
+        policy,
+        trainable,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "variant": "micro", "img": 32, "classes": 10, "width": 8,
+      "blocks": [1,1,1,1], "eval_batch": 128, "train_batch": 64,
+      "base_test_acc": 0.91,
+      "layers": [
+        {"name":"stem","kind":"conv","cin":3,"cout":8,"kernel":3,"stride":1,
+         "in_spatial":32,"out_spatial":32,"prunable":false,"group":0,"depthwise":false},
+        {"name":"fc","kind":"linear","cin":64,"cout":10,"kernel":1,"stride":1,
+         "in_spatial":1,"out_spatial":1,"prunable":false,"group":-1,"depthwise":false}
+      ],
+      "params": [{"name":"stem.w","shape":[3,3,3,8],"trainable":true}],
+      "policy": [{"name":"stem.mask","shape":[8]},{"name":"stem.w_bits","shape":[]}],
+      "trainable": [0]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let p = std::env::temp_dir().join(format!("galen_meta_{}.json", std::process::id()));
+        std::fs::write(&p, SAMPLE).unwrap();
+        let m = load_meta(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(m.variant, "micro");
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.layers[0].cout, 8);
+        assert_eq!(m.layers[1].kind, "linear");
+        assert_eq!(m.params[0].shape, vec![3, 3, 3, 8]);
+        assert_eq!(m.policy[1].shape, Vec::<usize>::new());
+        assert!((m.base_test_acc - 0.91).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,14 @@
+//! Model intermediate representation.
+//!
+//! Rust never re-derives the network from Python — it loads the structural
+//! manifest (`artifacts/meta_<variant>.json`) emitted at AOT time and builds
+//! a graph-level IR: layer shapes, MACs/BOPs accounting, and the pruning
+//! *dependency groups* that make residual-coupled layers non-prunable
+//! (paper: "we automatically detect such dependencies ... and do not accept
+//! the prediction of pruning parameters for affected layers").
+
+pub mod ir;
+pub mod meta;
+
+pub use ir::{Layer, LayerKind, ModelIr};
+pub use meta::{load_meta, ManifestEntry, ModelMeta};

@@ -1,0 +1,127 @@
+//! Adam optimizer (Kingma & Ba 2015) over an `Mlp`, with the paper's
+//! hyperparameters as defaults: beta1=0.9, beta2=0.999 (actor lr 1e-4,
+//! critic lr 1e-3 are passed by the agents).
+
+use super::mlp::{Mlp, MlpGrads};
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: u64,
+    m_w: Vec<Mat>,
+    v_w: Vec<Mat>,
+    m_b: Vec<Vec<f32>>,
+    v_b: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(model: &Mlp, lr: f32) -> Self {
+        let m_w = model
+            .layers
+            .iter()
+            .map(|l| Mat::zeros(l.w.rows, l.w.cols))
+            .collect::<Vec<_>>();
+        let v_w = m_w.clone();
+        let m_b: Vec<Vec<f32>> = model.layers.iter().map(|l| vec![0.0; l.b.len()]).collect();
+        let v_b = m_b.clone();
+        Self {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            m_w,
+            v_w,
+            m_b,
+            v_b,
+        }
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.t
+    }
+
+    /// Apply one Adam step of `grads` to `model` (grads = dLoss/dparam;
+    /// descends).
+    pub fn step(&mut self, model: &mut Mlp, grads: &MlpGrads) {
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for li in 0..model.layers.len() {
+            let layer = &mut model.layers[li];
+            let (mw, vw) = (&mut self.m_w[li], &mut self.v_w[li]);
+            for i in 0..layer.w.data.len() {
+                let g = grads.w[li].data[i];
+                mw.data[i] = self.beta1 * mw.data[i] + (1.0 - self.beta1) * g;
+                vw.data[i] = self.beta2 * vw.data[i] + (1.0 - self.beta2) * g * g;
+                let mh = mw.data[i] / b1t;
+                let vh = vw.data[i] / b2t;
+                layer.w.data[i] -= self.lr * mh / (vh.sqrt() + self.eps);
+            }
+            let (mb, vb) = (&mut self.m_b[li], &mut self.v_b[li]);
+            for i in 0..layer.b.len() {
+                let g = grads.b[li][i];
+                mb[i] = self.beta1 * mb[i] + (1.0 - self.beta1) * g;
+                vb[i] = self.beta2 * vb[i] + (1.0 - self.beta2) * g * g;
+                let mh = mb[i] / b1t;
+                let vh = vb[i] / b2t;
+                layer.b[i] -= self.lr * mh / (vh.sqrt() + self.eps);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::mlp::Activation;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn adam_fits_faster_than_no_update() {
+        let mut rng = Pcg64::new(1);
+        let mut mlp = Mlp::new(&[1, 8, 1], &[Activation::Tanh, Activation::Linear], &mut rng);
+        let mut opt = Adam::new(&mlp, 1e-2);
+        let xs: Vec<f32> = (0..32).map(|i| i as f32 / 16.0 - 1.0).collect();
+        let mut losses = Vec::new();
+        for _ in 0..400 {
+            let x = Mat::from_vec(32, 1, xs.clone());
+            let cache = mlp.forward_cached(&x);
+            let y = cache.activations.last().unwrap();
+            let mut dout = Mat::zeros(32, 1);
+            let mut loss = 0.0f32;
+            for i in 0..32 {
+                let t = (2.0 * xs[i]).sin();
+                let d = y.at(i, 0) - t;
+                loss += d * d / 32.0;
+                *dout.at_mut(i, 0) = 2.0 * d / 32.0;
+            }
+            losses.push(loss);
+            let (grads, _) = mlp.backward(&cache, &dout);
+            opt.step(&mut mlp, &grads);
+        }
+        assert!(losses[399] < 0.02, "final loss {}", losses[399]);
+        assert!(losses[399] < 0.05 * losses[0]);
+        assert_eq!(opt.steps(), 400);
+    }
+
+    #[test]
+    fn bias_correction_first_step_magnitude() {
+        // With bias correction, the very first Adam step is ~lr in magnitude.
+        let mut rng = Pcg64::new(2);
+        let mut mlp = Mlp::new(&[1, 1], &[Activation::Linear], &mut rng);
+        let w0 = mlp.layers[0].w.data[0];
+        let mut opt = Adam::new(&mlp, 0.01);
+        let grads = MlpGrads {
+            w: vec![Mat::from_vec(1, 1, vec![3.7])],
+            b: vec![vec![0.0]],
+        };
+        opt.step(&mut mlp, &grads);
+        let delta = (mlp.layers[0].w.data[0] - w0).abs();
+        assert!((delta - 0.01).abs() < 1e-4, "delta={delta}");
+    }
+}

@@ -1,0 +1,399 @@
+//! MLP with manual backprop (Linear -> act -> Linear -> act -> ... -> out).
+
+use crate::tensor::Mat;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    Sigmoid,
+    Tanh,
+    Linear,
+}
+
+impl Activation {
+    #[inline]
+    fn apply(self, x: f32) -> f32 {
+        match self {
+            Activation::Relu => x.max(0.0),
+            Activation::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            Activation::Tanh => x.tanh(),
+            Activation::Linear => x,
+        }
+    }
+
+    /// Derivative expressed in terms of the *activated output* y.
+    #[inline]
+    fn dydx_from_y(self, y: f32) -> f32 {
+        match self {
+            Activation::Relu => {
+                if y > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Activation::Sigmoid => y * (1.0 - y),
+            Activation::Tanh => 1.0 - y * y,
+            Activation::Linear => 1.0,
+        }
+    }
+}
+
+/// One dense layer: y = act(x W + b), W is [in, out] row-major.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub w: Mat,
+    pub b: Vec<f32>,
+    pub act: Activation,
+}
+
+/// Multi-layer perceptron.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub layers: Vec<Layer>,
+}
+
+/// Per-layer parameter gradients, same shapes as the parameters.
+#[derive(Clone, Debug)]
+pub struct MlpGrads {
+    pub w: Vec<Mat>,
+    pub b: Vec<Vec<f32>>,
+}
+
+/// Forward activations cache for backprop.
+pub struct ForwardCache {
+    /// activations[0] = input, activations[i+1] = output of layer i.
+    pub activations: Vec<Mat>,
+}
+
+impl Mlp {
+    /// `sizes` = [in, h1, ..., out]; `acts.len() == sizes.len() - 1`.
+    /// Init: uniform fan-in (DDPG paper init) — U(-1/sqrt(fan_in), +1/sqrt(fan_in)),
+    /// with the final layer at U(-3e-3, 3e-3) for stable early Q-values.
+    pub fn new(sizes: &[usize], acts: &[Activation], rng: &mut Pcg64) -> Self {
+        assert_eq!(acts.len(), sizes.len() - 1);
+        let mut layers = Vec::new();
+        for i in 0..acts.len() {
+            let (fin, fout) = (sizes[i], sizes[i + 1]);
+            let bound = if i + 1 == acts.len() {
+                3e-3
+            } else {
+                1.0 / (fin as f64).sqrt()
+            };
+            let mut w = Mat::zeros(fin, fout);
+            for x in &mut w.data {
+                *x = rng.uniform(-bound, bound) as f32;
+            }
+            let mut b = vec![0.0f32; fout];
+            for x in &mut b {
+                *x = rng.uniform(-bound, bound) as f32;
+            }
+            layers.push(Layer { w, b, act: acts[i] });
+        }
+        Self { layers }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].w.rows
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.layers.last().unwrap().w.cols
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.w.data.len() + l.b.len())
+            .sum()
+    }
+
+    /// Forward for a batch [B, in] -> [B, out].
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let mut h = x.clone();
+        for layer in &self.layers {
+            let mut z = h.matmul(&layer.w);
+            z.add_row(&layer.b);
+            z.map_inplace(|v| layer.act.apply(v));
+            h = z;
+        }
+        h
+    }
+
+    /// Forward for a single vector.
+    pub fn forward1(&self, x: &[f32]) -> Vec<f32> {
+        let m = Mat::from_vec(1, x.len(), x.to_vec());
+        self.forward(&m).data
+    }
+
+    /// Forward keeping the activation cache for `backward`.
+    pub fn forward_cached(&self, x: &Mat) -> ForwardCache {
+        let mut activations = Vec::with_capacity(self.layers.len() + 1);
+        activations.push(x.clone());
+        for layer in &self.layers {
+            let mut z = activations.last().unwrap().matmul(&layer.w);
+            z.add_row(&layer.b);
+            z.map_inplace(|v| layer.act.apply(v));
+            activations.push(z);
+        }
+        ForwardCache { activations }
+    }
+
+    /// Backprop `dloss/doutput` through the net.
+    /// Returns (parameter grads, dloss/dinput).
+    pub fn backward(&self, cache: &ForwardCache, dout: &Mat) -> (MlpGrads, Mat) {
+        let n = self.layers.len();
+        let mut gw: Vec<Mat> = Vec::with_capacity(n);
+        let mut gb: Vec<Vec<f32>> = Vec::with_capacity(n);
+        // walk backwards
+        let mut delta = dout.clone();
+        let mut gw_rev = Vec::with_capacity(n);
+        let mut gb_rev = Vec::with_capacity(n);
+        for (i, layer) in self.layers.iter().enumerate().rev() {
+            let y = &cache.activations[i + 1];
+            // dL/dz = dL/dy * act'(z) (expressed via y)
+            let mut dz = delta;
+            for (v, &yv) in dz.data.iter_mut().zip(&y.data) {
+                *v *= layer.act.dydx_from_y(yv);
+            }
+            let x = &cache.activations[i];
+            gw_rev.push(x.t_matmul(&dz)); // [in, out]
+            gb_rev.push(dz.col_sum());
+            delta = dz.matmul_t(&layer.w); // [B, in]
+        }
+        for _ in 0..n {
+            gw.push(gw_rev.pop().unwrap());
+            gb.push(gb_rev.pop().unwrap());
+        }
+        (MlpGrads { w: gw, b: gb }, delta)
+    }
+
+    /// Polyak soft update: self = tau * src + (1 - tau) * self.
+    pub fn soft_update_from(&mut self, src: &Mlp, tau: f32) {
+        assert_eq!(self.layers.len(), src.layers.len());
+        for (dst, s) in self.layers.iter_mut().zip(&src.layers) {
+            for (d, &sv) in dst.w.data.iter_mut().zip(&s.w.data) {
+                *d += tau * (sv - *d);
+            }
+            for (d, &sv) in dst.b.iter_mut().zip(&s.b) {
+                *d += tau * (sv - *d);
+            }
+        }
+    }
+
+    /// Hard copy of parameters (bit-exact, unlike soft_update with tau=1).
+    pub fn copy_from(&mut self, src: &Mlp) {
+        assert_eq!(self.layers.len(), src.layers.len());
+        for (dst, s) in self.layers.iter_mut().zip(&src.layers) {
+            dst.w.data.copy_from_slice(&s.w.data);
+            dst.b.copy_from_slice(&s.b);
+        }
+    }
+
+    /// Global L2 gradient-norm clipping; returns the pre-clip norm.
+    pub fn clip_grads(grads: &mut MlpGrads, max_norm: f32) -> f32 {
+        let mut sq = 0.0f64;
+        for g in &grads.w {
+            for &x in &g.data {
+                sq += (x as f64) * (x as f64);
+            }
+        }
+        for g in &grads.b {
+            for &x in g {
+                sq += (x as f64) * (x as f64);
+            }
+        }
+        let norm = sq.sqrt() as f32;
+        if norm > max_norm && norm > 0.0 {
+            let s = max_norm / norm;
+            for g in &mut grads.w {
+                g.scale(s);
+            }
+            for g in &mut grads.b {
+                for x in g {
+                    *x *= s;
+                }
+            }
+        }
+        norm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_mlp(seed: u64) -> Mlp {
+        let mut rng = Pcg64::new(seed);
+        Mlp::new(
+            &[4, 8, 6, 2],
+            &[Activation::Relu, Activation::Tanh, Activation::Sigmoid],
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mlp = tiny_mlp(1);
+        let x = Mat::zeros(5, 4);
+        let y = mlp.forward(&x);
+        assert_eq!((y.rows, y.cols), (5, 2));
+        assert_eq!(mlp.input_dim(), 4);
+        assert_eq!(mlp.output_dim(), 2);
+    }
+
+    #[test]
+    fn sigmoid_output_bounded() {
+        let mlp = tiny_mlp(2);
+        let mut rng = Pcg64::new(9);
+        for _ in 0..50 {
+            let x: Vec<f32> = (0..4).map(|_| rng.normal_scaled(0.0, 10.0) as f32).collect();
+            for y in mlp.forward1(&x) {
+                assert!((0.0..=1.0).contains(&y));
+            }
+        }
+    }
+
+    /// The core correctness test: analytic gradients vs finite differences.
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut mlp = tiny_mlp(3);
+        let mut rng = Pcg64::new(4);
+        let x = {
+            let mut m = Mat::zeros(3, 4);
+            for v in &mut m.data {
+                *v = rng.normal() as f32;
+            }
+            m
+        };
+        // loss = sum(y^2)/2 -> dL/dy = y
+        let cache = mlp.forward_cached(&x);
+        let y = cache.activations.last().unwrap().clone();
+        let (grads, dx) = mlp.backward(&cache, &y);
+
+        let loss = |mlp: &Mlp, x: &Mat| -> f64 {
+            let y = mlp.forward(x);
+            y.data.iter().map(|&v| 0.5 * (v as f64) * (v as f64)).sum()
+        };
+        let eps = 1e-3f32;
+
+        // check a sample of weight grads in every layer
+        for li in 0..mlp.layers.len() {
+            let n = mlp.layers[li].w.data.len();
+            for &pi in &[0usize, n / 2, n - 1] {
+                let orig = mlp.layers[li].w.data[pi];
+                mlp.layers[li].w.data[pi] = orig + eps;
+                let lp = loss(&mlp, &x);
+                mlp.layers[li].w.data[pi] = orig - eps;
+                let lm = loss(&mlp, &x);
+                mlp.layers[li].w.data[pi] = orig;
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let an = grads.w[li].data[pi];
+                assert!(
+                    (fd - an).abs() < 2e-2 * (1.0 + fd.abs().max(an.abs())),
+                    "layer {li} w[{pi}]: fd={fd} analytic={an}"
+                );
+            }
+            // bias grads
+            let orig = mlp.layers[li].b[0];
+            mlp.layers[li].b[0] = orig + eps;
+            let lp = loss(&mlp, &x);
+            mlp.layers[li].b[0] = orig - eps;
+            let lm = loss(&mlp, &x);
+            mlp.layers[li].b[0] = orig;
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let an = grads.b[li][0];
+            assert!(
+                (fd - an).abs() < 2e-2 * (1.0 + fd.abs().max(an.abs())),
+                "layer {li} b[0]: fd={fd} analytic={an}"
+            );
+        }
+
+        // input gradient
+        let mut x2 = x.clone();
+        let orig = x2.data[1];
+        x2.data[1] = orig + eps;
+        let lp = loss(&mlp, &x2);
+        x2.data[1] = orig - eps;
+        let lm = loss(&mlp, &x2);
+        let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+        assert!((fd - dx.data[1]).abs() < 2e-2 * (1.0 + fd.abs()));
+    }
+
+    #[test]
+    fn soft_update_interpolates() {
+        let a = tiny_mlp(5);
+        let mut b = tiny_mlp(6);
+        let orig_b = b.layers[0].w.data[0];
+        let av = a.layers[0].w.data[0];
+        b.soft_update_from(&a, 0.25);
+        let expect = orig_b + 0.25 * (av - orig_b);
+        assert!((b.layers[0].w.data[0] - expect).abs() < 1e-6);
+        // tau=1 copies exactly
+        b.copy_from(&a);
+        assert_eq!(b.layers[0].w.data, a.layers[0].w.data);
+    }
+
+    #[test]
+    fn clip_grads_bounds_norm() {
+        let mlp = tiny_mlp(7);
+        let x = Mat::from_vec(1, 4, vec![10.0, -10.0, 5.0, 3.0]);
+        let cache = mlp.forward_cached(&x);
+        let dout = Mat::from_vec(1, 2, vec![100.0, -100.0]);
+        let (mut grads, _) = mlp.backward(&cache, &dout);
+        let pre = Mlp::clip_grads(&mut grads, 1.0);
+        assert!(pre > 0.0);
+        let mut sq = 0.0f64;
+        for g in &grads.w {
+            sq += g.data.iter().map(|&v| (v as f64).powi(2)).sum::<f64>();
+        }
+        for g in &grads.b {
+            sq += g.iter().map(|&v| (v as f64).powi(2)).sum::<f64>();
+        }
+        assert!(sq.sqrt() <= 1.0 + 1e-4);
+    }
+
+    #[test]
+    fn training_reduces_regression_loss() {
+        // sanity: MLP + manual grads can fit a tiny function with plain SGD
+        let mut rng = Pcg64::new(8);
+        let mut mlp = Mlp::new(
+            &[2, 16, 1],
+            &[Activation::Relu, Activation::Linear],
+            &mut rng,
+        );
+        let xs: Vec<[f32; 2]> = (0..64)
+            .map(|_| [rng.uniform(-1.0, 1.0) as f32, rng.uniform(-1.0, 1.0) as f32])
+            .collect();
+        let target = |a: f32, b: f32| a * 0.5 - b * 0.25 + 0.1;
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..300 {
+            let x = Mat::from_rows(&xs.iter().map(|p| p.to_vec()).collect::<Vec<_>>());
+            let cache = mlp.forward_cached(&x);
+            let y = cache.activations.last().unwrap();
+            let mut dout = Mat::zeros(y.rows, 1);
+            let mut loss = 0.0f32;
+            for i in 0..y.rows {
+                let t = target(xs[i][0], xs[i][1]);
+                let d = y.at(i, 0) - t;
+                loss += d * d;
+                *dout.at_mut(i, 0) = 2.0 * d / y.rows as f32;
+            }
+            loss /= y.rows as f32;
+            first.get_or_insert(loss);
+            last = loss;
+            let (grads, _) = mlp.backward(&cache, &dout);
+            for (layer, (gw, gb)) in mlp.layers.iter_mut().zip(grads.w.iter().zip(&grads.b)) {
+                for (w, &g) in layer.w.data.iter_mut().zip(&gw.data) {
+                    *w -= 0.05 * g;
+                }
+                for (b, &g) in layer.b.iter_mut().zip(gb) {
+                    *b -= 0.05 * g;
+                }
+            }
+        }
+        assert!(last < 0.05 * first.unwrap(), "first={first:?} last={last}");
+    }
+}

@@ -1,0 +1,13 @@
+//! From-scratch neural nets for the DDPG agents.
+//!
+//! The paper's actor/critic networks are 2-hidden-layer MLPs (400, 300
+//! units, ReLU hidden activations; Sigmoid output for the actor, linear for
+//! the critic), optimized with Adam.  This module implements exactly that
+//! with hand-derived backprop (verified against finite differences in the
+//! tests) plus Polyak soft target updates.
+
+pub mod adam;
+pub mod mlp;
+
+pub use adam::Adam;
+pub use mlp::{Activation, Mlp, MlpGrads};

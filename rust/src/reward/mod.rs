@@ -1,0 +1,107 @@
+//! Reward functions.
+//!
+//! Primary: the *absolute reward* (Bender et al. 2020) adapted by the paper
+//! (Eq. 6): `r(P) = acc + beta * |T_P / (c * T_M) - 1|` with beta < 0.
+//! Also provided: the *hard exponential reward* (MnasNet, Tan et al. 2019)
+//! the paper tried and rejected — kept for the ablation bench.
+
+/// Absolute reward (paper Eq. 6).
+#[derive(Clone, Copy, Debug)]
+pub struct AbsoluteReward {
+    /// Cost exponent beta < 0 (paper experiments: -3.0).
+    pub beta: f64,
+    /// Target compression rate c (fraction of original latency).
+    pub target: f64,
+    /// Uncompressed model latency T_M (seconds).
+    pub base_latency: f64,
+}
+
+impl AbsoluteReward {
+    pub fn new(beta: f64, target: f64, base_latency: f64) -> Self {
+        assert!(beta < 0.0, "cost exponent must be negative");
+        assert!(target > 0.0 && base_latency > 0.0);
+        Self {
+            beta,
+            target,
+            base_latency,
+        }
+    }
+
+    /// r(P) for a validated policy.
+    pub fn reward(&self, accuracy: f64, latency: f64) -> f64 {
+        let budget = self.target * self.base_latency;
+        accuracy + self.beta.abs() * -((latency / budget - 1.0).abs())
+    }
+}
+
+/// Hard exponential reward (Tan et al. 2019): acc * (T/T0)^w when over
+/// budget, acc otherwise.  The paper reports the same instabilities Bender
+/// et al. discuss; regenerable via the reward ablation.
+#[derive(Clone, Copy, Debug)]
+pub struct HardExponentialReward {
+    pub w: f64,
+    pub target: f64,
+    pub base_latency: f64,
+}
+
+impl HardExponentialReward {
+    pub fn reward(&self, accuracy: f64, latency: f64) -> f64 {
+        let budget = self.target * self.base_latency;
+        if latency <= budget {
+            accuracy
+        } else {
+            accuracy * (latency / budget).powf(self.w)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absolute_reward_peaks_on_budget() {
+        let r = AbsoluteReward::new(-3.0, 0.3, 0.1);
+        let on = r.reward(0.9, 0.03);
+        let over = r.reward(0.9, 0.06);
+        let under = r.reward(0.9, 0.015);
+        assert_eq!(on, 0.9);
+        assert!(over < on);
+        // Eq. 6 also penalizes under-budget policies (|.|)
+        assert!(under < on);
+        // 2x over budget with beta=-3: penalty = 3.0
+        assert!((over - (0.9 - 3.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_accuracy_more_reward() {
+        let r = AbsoluteReward::new(-3.0, 0.5, 1.0);
+        assert!(r.reward(0.95, 0.5) > r.reward(0.90, 0.5));
+    }
+
+    #[test]
+    fn beta_scales_penalty() {
+        let strict = AbsoluteReward::new(-6.0, 0.3, 1.0);
+        let lax = AbsoluteReward::new(-1.0, 0.3, 1.0);
+        let (acc, lat) = (0.9, 0.45);
+        assert!(strict.reward(acc, lat) < lax.reward(acc, lat));
+    }
+
+    #[test]
+    #[should_panic]
+    fn positive_beta_rejected() {
+        AbsoluteReward::new(1.0, 0.3, 1.0);
+    }
+
+    #[test]
+    fn hard_exponential_free_under_budget() {
+        let r = HardExponentialReward {
+            w: -2.0,
+            target: 0.3,
+            base_latency: 1.0,
+        };
+        assert_eq!(r.reward(0.9, 0.2), 0.9);
+        assert_eq!(r.reward(0.9, 0.3), 0.9);
+        assert!(r.reward(0.9, 0.6) < 0.9);
+    }
+}

@@ -1,0 +1,191 @@
+//! PJRT client wrapper + executable handle.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A host-side tensor destined for (or read from) the device.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>().max(1),
+            data.len().max(1),
+            "shape {shape:?} vs {} elems",
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// The PJRT CPU client.  Cloneable handle (the underlying client is
+/// reference-counted by the xla crate).
+pub struct PjrtRuntime {
+    pub client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Self { client })
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))?;
+        log::info!("compiled artifact {}", path.display());
+        Ok(Executable {
+            exe,
+            name: path.display().to_string(),
+        })
+    }
+
+    /// Upload host tensors once; reuse across many `Executable::run_b` calls.
+    pub fn upload(&self, tensors: &[HostTensor]) -> Result<DeviceTensors> {
+        let mut bufs = Vec::with_capacity(tensors.len());
+        for t in tensors {
+            // scalars: PJRT wants rank-0; represent as dims=[]
+            let buf = self
+                .client
+                .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+                .map_err(|e| anyhow::anyhow!("uploading tensor: {e:?}"))?;
+            bufs.push(buf);
+        }
+        Ok(DeviceTensors { bufs })
+    }
+
+    pub fn upload_i32(&self, data: &[i32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(data, shape, None)
+            .map_err(|e| anyhow::anyhow!("uploading i32 tensor: {e:?}"))
+    }
+
+    pub fn upload_one(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+            .map_err(|e| anyhow::anyhow!("uploading tensor: {e:?}"))
+    }
+}
+
+/// Device-resident tensors (uploaded once, used by many executions).
+pub struct DeviceTensors {
+    pub bufs: Vec<xla::PjRtBuffer>,
+}
+
+impl DeviceTensors {
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+}
+
+/// A compiled artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with device-resident buffers; returns all tuple outputs as
+    /// host tensors.  The AOT graphs are lowered with `return_tuple=True`,
+    /// so the single PJRT output is a tuple literal that we decompose.
+    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
+        let outs = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow::anyhow!("{}: execute failed: {e:?}", self.name))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{}: readback failed: {e:?}", self.name))?;
+        literal_to_tensors(lit)
+    }
+
+    /// Convenience: execute from host tensors (uploads everything).
+    pub fn run(&self, runtime: &PjrtRuntime, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let dev = runtime.upload(args)?;
+        let refs: Vec<&xla::PjRtBuffer> = dev.bufs.iter().collect();
+        self.run_b(&refs)
+    }
+}
+
+/// Decompose a (possibly tuple) literal into f32 host tensors.
+pub fn literal_to_tensors(lit: xla::Literal) -> Result<Vec<HostTensor>> {
+    let shape = lit.shape().map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
+    let elems = match shape {
+        xla::Shape::Tuple(_) => lit
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("tuple decompose: {e:?}"))?,
+        _ => vec![lit],
+    };
+    let mut out = Vec::with_capacity(elems.len());
+    for e in elems {
+        let ashape = e
+            .array_shape()
+            .map_err(|err| anyhow::anyhow!("array shape: {err:?}"))?;
+        let dims: Vec<usize> = ashape.dims().iter().map(|&d| d as usize).collect();
+        let ty = e.ty().map_err(|err| anyhow::anyhow!("ty: {err:?}"))?;
+        let data: Vec<f32> = match ty {
+            xla::ElementType::F32 => e
+                .to_vec::<f32>()
+                .map_err(|err| anyhow::anyhow!("to_vec f32: {err:?}"))?,
+            xla::ElementType::S32 => e
+                .to_vec::<i32>()
+                .map_err(|err| anyhow::anyhow!("to_vec i32: {err:?}"))?
+                .into_iter()
+                .map(|v| v as f32)
+                .collect(),
+            other => bail!("unsupported output element type {other:?}"),
+        };
+        out.push(HostTensor::new(dims, data));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shapes() {
+        let t = HostTensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.numel(), 6);
+        let s = HostTensor::scalar(4.0);
+        assert_eq!(s.numel(), 1);
+        assert!(s.shape.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_rejects_mismatch() {
+        HostTensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+}

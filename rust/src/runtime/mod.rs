@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the hot
+//! path.  Adapted from /opt/xla-example/load_hlo (HLO *text* is the
+//! interchange format — see python/compile/aot.py).
+//!
+//! Performance-relevant design points:
+//! * model parameters (11 MB for resnet18s) are uploaded to device buffers
+//!   **once** (`DeviceTensors`) and reused by every `execute_b` call — only
+//!   the per-episode policy inputs (a few KiB of masks/bit scalars) and the
+//!   evaluation batch are re-uploaded;
+//! * executables are compiled once per artifact and cached in the
+//!   `ArtifactRegistry`.
+
+mod executor;
+mod registry;
+
+pub use executor::{DeviceTensors, Executable, HostTensor, PjrtRuntime};
+pub use registry::ArtifactRegistry;

@@ -1,0 +1,124 @@
+//! Artifact registry: one-stop loader for everything `make artifacts`
+//! produced for a model variant (meta manifest, weights, dataset splits,
+//! compiled executables).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use super::executor::{Executable, HostTensor, PjrtRuntime};
+use crate::model::{load_meta, ModelIr, ModelMeta};
+use crate::util::gten;
+
+/// Dataset splits exported by aot.py (normalized images + int labels).
+pub struct Dataset {
+    pub val_x: HostTensor,
+    pub val_y: Vec<i32>,
+    pub test_x: HostTensor,
+    pub test_y: Vec<i32>,
+    pub retrain_x: HostTensor,
+    pub retrain_y: Vec<i32>,
+}
+
+/// All artifacts of one model variant.
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    pub variant: String,
+    pub meta: ModelMeta,
+    pub ir: ModelIr,
+    /// Parameter tensors in manifest order.
+    pub params: Vec<HostTensor>,
+    /// name -> (shape, data) view of the parameters (ℓ1 ranking etc.).
+    pub params_by_name: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+    pub fwd: Executable,
+    pub train_step: Option<Executable>,
+    pub dataset: Dataset,
+}
+
+impl ArtifactRegistry {
+    /// Load and compile everything for `variant` from `dir`.
+    pub fn load(runtime: &PjrtRuntime, dir: &Path, variant: &str) -> Result<Self> {
+        Self::load_with(runtime, dir, variant, false)
+    }
+
+    /// `pallas = true` loads the Pallas-kernel forward artifact instead of
+    /// the XLA-conv one (exported for the micro variant).
+    pub fn load_with(
+        runtime: &PjrtRuntime,
+        dir: &Path,
+        variant: &str,
+        pallas: bool,
+    ) -> Result<Self> {
+        let meta = load_meta(&dir.join(format!("meta_{variant}.json")))
+            .with_context(|| format!("loading meta for {variant} (run `make artifacts`?)"))?;
+        let ir = ModelIr::from_meta(&meta)?;
+
+        let weights = gten::read(&dir.join(format!("weights_{variant}.gten")))?;
+        let mut params = Vec::with_capacity(meta.params.len());
+        let mut params_by_name = BTreeMap::new();
+        for entry in &meta.params {
+            let t = weights
+                .get(&entry.name)
+                .with_context(|| format!("weights file missing {}", entry.name))?;
+            let data = t.as_f32()?.to_vec();
+            anyhow::ensure!(
+                t.shape == entry.shape,
+                "{}: weight shape {:?} != manifest {:?}",
+                entry.name,
+                t.shape,
+                entry.shape
+            );
+            params_by_name.insert(entry.name.clone(), (t.shape.clone(), data.clone()));
+            params.push(HostTensor::new(t.shape.clone(), data));
+        }
+
+        let data = gten::read(&dir.join(format!("data_{variant}.gten")))?;
+        let tensor = |name: &str| -> Result<HostTensor> {
+            let t = data
+                .get(name)
+                .with_context(|| format!("dataset missing {name}"))?;
+            Ok(HostTensor::new(t.shape.clone(), t.as_f32()?.to_vec()))
+        };
+        let labels = |name: &str| -> Result<Vec<i32>> {
+            Ok(data
+                .get(name)
+                .with_context(|| format!("dataset missing {name}"))?
+                .as_i32()?
+                .to_vec())
+        };
+        let dataset = Dataset {
+            val_x: tensor("val_x")?,
+            val_y: labels("val_y")?,
+            test_x: tensor("test_x")?,
+            test_y: labels("test_y")?,
+            retrain_x: tensor("retrain_x")?,
+            retrain_y: labels("retrain_y")?,
+        };
+
+        let fwd_name = if pallas {
+            format!("model_fwd_pallas_{variant}.hlo.txt")
+        } else {
+            format!("model_fwd_{variant}.hlo.txt")
+        };
+        let fwd = runtime.load_hlo_text(&dir.join(fwd_name))?;
+        let ts_path = dir.join(format!("train_step_{variant}.hlo.txt"));
+        let train_step = if ts_path.exists() {
+            Some(runtime.load_hlo_text(&ts_path)?)
+        } else {
+            None
+        };
+
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            variant: variant.to_string(),
+            meta,
+            ir,
+            params,
+            params_by_name,
+            fwd,
+            train_step,
+            dataset,
+        })
+    }
+}

@@ -1,0 +1,12 @@
+//! The episode loop (paper Figures 1 + 2): predict a full policy layer by
+//! layer, validate it (accuracy on the PJRT artifact + latency on the
+//! hardware simulator), compute the absolute reward, share it across the
+//! episode's transitions, and optimize the agent.
+
+mod config;
+mod episode;
+
+pub use config::SearchConfig;
+pub use episode::{
+    quant_histogram, run_search, EpisodeSummary, PolicyEvaluator, SearchOutcome, SimEvaluator,
+};

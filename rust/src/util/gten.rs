@@ -1,0 +1,210 @@
+//! Reader/writer for the GTEN named-tensor container (python/compile/gten.py).
+//!
+//! Little-endian layout:
+//! `b"GTEN1\n"`, u32 count, then per tensor: u16 name-len, name, u8 dtype
+//! (0=f32, 1=i32), u8 ndim, u32 dims[ndim], raw row-major data.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 6] = b"GTEN1\n";
+
+/// A named tensor loaded from (or destined for) a GTEN file.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GtenData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct GtenTensor {
+    pub shape: Vec<usize>,
+    pub data: GtenData,
+}
+
+impl GtenTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self {
+            shape,
+            data: GtenData::F32(data),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            GtenData::F32(v) => Ok(v),
+            GtenData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            GtenData::I32(v) => Ok(v),
+            GtenData::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+}
+
+pub type GtenFile = BTreeMap<String, GtenTensor>;
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+/// Load every tensor in a GTEN file.
+pub fn read(path: &Path) -> Result<GtenFile> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = std::io::BufReader::new(f);
+    let mut magic = [0u8; 6];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: bad GTEN magic", path.display());
+    }
+    let count = read_u32(&mut r)?;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let nlen = read_u16(&mut r)? as usize;
+        let mut name = vec![0u8; nlen];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name not utf-8")?;
+        let dtype = read_u8(&mut r)?;
+        let ndim = read_u8(&mut r)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u32(&mut r)? as usize);
+        }
+        let n: usize = shape.iter().product::<usize>().max(1) * if ndim == 0 { 1 } else { 1 };
+        let numel = if ndim == 0 { 1 } else { shape.iter().product() };
+        let mut raw = vec![0u8; numel * 4];
+        r.read_exact(&mut raw)?;
+        let data = match dtype {
+            0 => GtenData::F32(
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            1 => GtenData::I32(
+                raw.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            d => bail!("{name}: unknown dtype code {d}"),
+        };
+        let _ = n;
+        out.insert(name, GtenTensor { shape, data });
+    }
+    Ok(out)
+}
+
+/// Write tensors (used by tests and by result exports consumed elsewhere).
+pub fn write(path: &Path, tensors: &GtenFile) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let f = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        w.write_all(&(nb.len() as u16).to_le_bytes())?;
+        w.write_all(nb)?;
+        let code: u8 = match &t.data {
+            GtenData::F32(_) => 0,
+            GtenData::I32(_) => 1,
+        };
+        w.write_all(&[code, t.shape.len() as u8])?;
+        for &d in &t.shape {
+            w.write_all(&(d as u32).to_le_bytes())?;
+        }
+        match &t.data {
+            GtenData::F32(v) => {
+                for x in v {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+            GtenData::I32(v) => {
+                for x in v {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("galen_gten_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut f: GtenFile = BTreeMap::new();
+        f.insert(
+            "w".into(),
+            GtenTensor::f32(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25]),
+        );
+        f.insert(
+            "y".into(),
+            GtenTensor {
+                shape: vec![4],
+                data: GtenData::I32(vec![1, -2, 3, 4]),
+            },
+        );
+        f.insert(
+            "scalar".into(),
+            GtenTensor {
+                shape: vec![],
+                data: GtenData::F32(vec![7.5]),
+            },
+        );
+        let p = tmp("roundtrip");
+        write(&p, &f).unwrap();
+        let back = read(&p).unwrap();
+        assert_eq!(f, back);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmp("badmagic");
+        std::fs::write(&p, b"NOPE!!rest").unwrap();
+        assert!(read(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn type_mismatch_errors() {
+        let t = GtenTensor::f32(vec![2], vec![1.0, 2.0]);
+        assert!(t.as_i32().is_err());
+        assert!(t.as_f32().is_ok());
+    }
+}

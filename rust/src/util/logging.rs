@@ -1,0 +1,67 @@
+//! Minimal timestamped stderr logger backing the `log` crate facade.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger once; respects `GALEN_LOG` (error|warn|info|debug|trace).
+pub fn init(default_level: LevelFilter) {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let level = match std::env::var("GALEN_LOG").ok().as_deref() {
+        Some("error") => LevelFilter::Error,
+        Some("warn") => LevelFilter::Warn,
+        Some("info") => LevelFilter::Info,
+        Some("debug") => LevelFilter::Debug,
+        Some("trace") => LevelFilter::Trace,
+        _ => default_level,
+    };
+    let logger = Box::leak(Box::new(StderrLogger {
+        start: Instant::now(),
+    }));
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent() {
+        init(LevelFilter::Info);
+        init(LevelFilter::Debug); // second call must not panic
+        log::info!("logging smoke test");
+    }
+}

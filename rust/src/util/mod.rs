@@ -1,0 +1,71 @@
+//! From-scratch substrates (no third-party equivalents available offline):
+//! RNG + samplers, JSON, GTEN tensor files, streaming stats, CLI, logging,
+//! and a small scoped-thread helper used for parallel experiment sweeps.
+
+pub mod cli;
+pub mod gten;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+
+/// Run `f` over `items` with up to `workers` scoped threads, preserving
+/// input order in the output. Panics in workers propagate.
+pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let queue: std::sync::Mutex<std::collections::VecDeque<(usize, T)>> =
+        std::sync::Mutex::new(items.into_iter().enumerate().collect());
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots_mx = std::sync::Mutex::new(&mut slots);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let job = queue.lock().unwrap().pop_front();
+                match job {
+                    None => break,
+                    Some((i, item)) => {
+                        let r = f(item);
+                        slots_mx.lock().unwrap()[i] = Some(r);
+                    }
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|r| r.expect("worker dropped job")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let xs: Vec<usize> = (0..57).collect();
+        let ys = parallel_map(xs.clone(), 4, |x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_single_worker() {
+        let ys = parallel_map(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(ys, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let ys: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(ys.is_empty());
+    }
+}

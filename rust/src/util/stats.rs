@@ -1,0 +1,205 @@
+//! Streaming statistics used across the agents and the measurement harness:
+//! Welford running mean/variance (state standardization, paper §Proposed
+//! Agents), exponential moving average (reward normalization), and small
+//! helpers (median, percentile) for the latency measurement wrapper.
+
+/// Welford online mean/variance, elementwise over fixed-size vectors.
+///
+/// The paper standardizes agent states "using mean and variance of the
+/// features ... running estimations updated using seen states, comparable to
+/// a batch norm layer".
+#[derive(Clone, Debug)]
+pub struct RunningNorm {
+    count: u64,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+}
+
+impl RunningNorm {
+    pub fn new(dim: usize) -> Self {
+        Self {
+            count: 0,
+            mean: vec![0.0; dim],
+            m2: vec![0.0; dim],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn update(&mut self, x: &[f32]) {
+        assert_eq!(x.len(), self.mean.len());
+        self.count += 1;
+        let n = self.count as f64;
+        for i in 0..x.len() {
+            let xi = x[i] as f64;
+            let d = xi - self.mean[i];
+            self.mean[i] += d / n;
+            self.m2[i] += d * (xi - self.mean[i]);
+        }
+    }
+
+    pub fn variance(&self, i: usize) -> f64 {
+        if self.count < 2 {
+            1.0
+        } else {
+            (self.m2[i] / (self.count - 1) as f64).max(1e-12)
+        }
+    }
+
+    /// Standardize in place: (x - mean) / std. Identity until 2 samples seen.
+    pub fn normalize(&self, x: &mut [f32]) {
+        assert_eq!(x.len(), self.mean.len());
+        if self.count < 2 {
+            return;
+        }
+        for i in 0..x.len() {
+            x[i] = ((x[i] as f64 - self.mean[i]) / self.variance(i).sqrt()) as f32;
+        }
+    }
+}
+
+/// Exponential moving average (reward normalization: "the rewards within the
+/// sampled transition batch ... are normalized using a moving average").
+#[derive(Clone, Debug)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Self { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => prev + self.alpha * (x - prev),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> f64 {
+        self.value.unwrap_or(0.0)
+    }
+}
+
+/// Median of a slice (copies; used on tiny latency-sample vectors).
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Linear-interpolated percentile, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn running_norm_matches_batch_stats() {
+        let mut rng = Pcg64::new(1);
+        let data: Vec<[f32; 3]> = (0..1000)
+            .map(|_| {
+                [
+                    rng.normal_scaled(5.0, 2.0) as f32,
+                    rng.normal_scaled(-1.0, 0.5) as f32,
+                    rng.normal_scaled(0.0, 10.0) as f32,
+                ]
+            })
+            .collect();
+        let mut norm = RunningNorm::new(3);
+        for x in &data {
+            norm.update(x);
+        }
+        assert!((norm.mean[0] - 5.0).abs() < 0.3);
+        assert!((norm.variance(1).sqrt() - 0.5).abs() < 0.05);
+
+        let mut x = data[0];
+        norm.normalize(&mut x);
+        assert!(x[0].abs() < 5.0); // roughly standardized
+    }
+
+    #[test]
+    fn normalize_is_identity_before_two_samples() {
+        let norm = RunningNorm::new(2);
+        let mut x = [3.0f32, -4.0];
+        norm.normalize(&mut x);
+        assert_eq!(x, [3.0, -4.0]);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.2);
+        for _ in 0..200 {
+            e.update(10.0);
+        }
+        assert!((e.get() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ema_first_value_seeds() {
+        let mut e = Ema::new(0.1);
+        assert_eq!(e.update(4.0), 4.0);
+    }
+
+    #[test]
+    fn median_and_percentile() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0, 5.0], 0.0), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0, 5.0], 100.0), 5.0);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0, 5.0], 50.0), 3.0);
+    }
+
+    #[test]
+    fn stddev_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((stddev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,283 @@
+//! Integration tests over the real AOT artifacts (run `make artifacts`
+//! first; tests are skipped with a notice when artifacts are absent).
+//!
+//! These exercise the full L3->L2->L1 composition: HLO-text loading, PJRT
+//! compilation, input packing (params + policy), masked/quantized forward,
+//! the Pallas-kernel artifact, and the train-step graph.
+
+use std::path::PathBuf;
+
+use galen::compress::{DiscretePolicy, QuantMode};
+use galen::eval::{Evaluator, Split};
+use galen::runtime::{ArtifactRegistry, HostTensor, PjrtRuntime};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("meta_micro.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built");
+        None
+    }
+}
+
+fn evaluator(variant: &str) -> Option<Evaluator> {
+    let dir = artifacts()?;
+    let rt = PjrtRuntime::cpu().expect("pjrt client");
+    let reg = ArtifactRegistry::load(&rt, &dir, variant).expect("registry");
+    Some(Evaluator::new(rt, reg).expect("evaluator"))
+}
+
+#[test]
+fn qgemm_artifact_matches_cpu_reference() {
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let exe = rt.load_hlo_text(&dir.join("qgemm_pallas.hlo.txt")).unwrap();
+    // artifact shape: a[256,288] b[288,32] bits scalars mask[32]
+    let (m, k, n) = (256usize, 288usize, 32usize);
+    let mut rng = galen::util::rng::Pcg64::new(3);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let mask: Vec<f32> = (0..n).map(|i| (i % 3 != 0) as u8 as f32).collect();
+    let out = exe
+        .run(
+            &rt,
+            &[
+                HostTensor::new(vec![m, k], a.clone()),
+                HostTensor::new(vec![k, n], b.clone()),
+                HostTensor::scalar(0.0), // a_bits: bypass
+                HostTensor::scalar(0.0), // w_bits: bypass
+                HostTensor::new(vec![n], mask.clone()),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape, vec![m, n]);
+    // FP32 bypass: must equal a plain masked GEMM
+    for i in 0..8 {
+        for j in 0..n {
+            let mut s = 0.0f64;
+            for kk in 0..k {
+                s += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+            }
+            let expect = s as f32 * mask[j];
+            let got = out[0].data[i * n + j];
+            assert!(
+                (got - expect).abs() <= 1e-3 * (1.0 + expect.abs()),
+                "[{i},{j}] {got} vs {expect}"
+            );
+        }
+    }
+}
+
+#[test]
+fn qgemm_artifact_quantized_masks_and_compresses() {
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let exe = rt.load_hlo_text(&dir.join("qgemm_pallas.hlo.txt")).unwrap();
+    let (m, k, n) = (256usize, 288usize, 32usize);
+    let mut rng = galen::util::rng::Pcg64::new(4);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+    let mut mask = vec![1.0f32; n];
+    mask[0] = 0.0;
+    mask[17] = 0.0;
+    let run = |a_bits: f32, w_bits: f32| {
+        exe.run(
+            &rt,
+            &[
+                HostTensor::new(vec![m, k], a.clone()),
+                HostTensor::new(vec![k, n], b.clone()),
+                HostTensor::scalar(a_bits),
+                HostTensor::scalar(w_bits),
+                HostTensor::new(vec![n], mask.clone()),
+            ],
+        )
+        .unwrap()
+        .remove(0)
+    };
+    let exact = run(0.0, 0.0);
+    let q8 = run(8.0, 8.0);
+    let q2 = run(2.0, 2.0);
+    // masked columns are exactly zero in all modes
+    for out in [&exact, &q8, &q2] {
+        for i in 0..m {
+            assert_eq!(out.data[i * n], 0.0);
+            assert_eq!(out.data[i * n + 17], 0.0);
+        }
+    }
+    // more bits => closer to exact
+    let err = |o: &HostTensor| -> f64 {
+        o.data
+            .iter()
+            .zip(&exact.data)
+            .map(|(x, y)| ((x - y).abs()) as f64)
+            .sum::<f64>()
+            / o.data.len() as f64
+    };
+    assert!(err(&q8) < err(&q2), "8-bit {} vs 2-bit {}", err(&q8), err(&q2));
+}
+
+#[test]
+fn micro_forward_reference_policy_accuracy() {
+    let Some(ev) = evaluator("micro") else { return };
+    let p = DiscretePolicy::reference(&ev.reg.ir);
+    let acc = ev.accuracy(&p, Split::Test, 4).unwrap();
+    // aot.py reported ~0.999 test accuracy for the trained micro model
+    assert!(acc > 0.95, "uncompressed accuracy {acc}");
+    let val = ev.accuracy(&p, Split::Val, 4).unwrap();
+    assert!(val > 0.95, "val accuracy {val}");
+}
+
+#[test]
+fn micro_forward_int8_keeps_accuracy_one_bit_destroys() {
+    let Some(ev) = evaluator("micro") else { return };
+    let ir = &ev.reg.ir;
+    let mut int8 = DiscretePolicy::reference(ir);
+    for l in &mut int8.layers {
+        l.quant = QuantMode::Int8;
+    }
+    let acc8 = ev.accuracy(&int8, Split::Val, 4).unwrap();
+    assert!(acc8 > 0.9, "INT8 accuracy collapsed: {acc8}");
+
+    let mut one_bit = DiscretePolicy::reference(ir);
+    for l in &mut one_bit.layers {
+        l.quant = QuantMode::Mix {
+            w_bits: 1,
+            a_bits: 1,
+        };
+    }
+    let acc1 = ev.accuracy(&one_bit, Split::Val, 4).unwrap();
+    assert!(
+        acc1 < acc8 - 0.2,
+        "1-bit ({acc1}) should be far below INT8 ({acc8})"
+    );
+}
+
+#[test]
+fn micro_forward_pruning_mask_degrades_gracefully() {
+    let Some(ev) = evaluator("micro") else { return };
+    let ir = &ev.reg.ir;
+    let base = ev
+        .accuracy(&DiscretePolicy::reference(ir), Split::Val, 2)
+        .unwrap();
+    // prune half the channels of every prunable layer
+    let mut pruned = DiscretePolicy::reference(ir);
+    for &i in &ir.prunable_layers() {
+        pruned.layers[i].kept_channels = (ir.layers[i].cout / 2).max(1);
+    }
+    let acc = ev.accuracy(&pruned, Split::Val, 2).unwrap();
+    assert!(acc <= base + 1e-9);
+    assert!(acc > 0.3, "half-pruning should not destroy the model: {acc}");
+}
+
+#[test]
+fn sensitivity_probes_increase_with_compression_strength() {
+    let Some(ev) = evaluator("micro") else { return };
+    use galen::eval::{SensitivityConfig, SensitivityTable};
+    let cfg = SensitivityConfig {
+        prune_ratios: vec![0.5],
+        w_bits: vec![1, 8],
+        a_bits: vec![8],
+        batches: 1,
+    };
+    let t = SensitivityTable::compute(&ev, &cfg).unwrap();
+    assert_eq!(t.prune.len(), ev.reg.ir.layers.len());
+    // 1-bit weight quantization must distort more than 8-bit on most layers
+    let mut more = 0;
+    for l in &t.quant_w {
+        if l[0].omega > l[1].omega {
+            more += 1;
+        }
+    }
+    assert!(
+        more * 2 >= t.quant_w.len(),
+        "1-bit omega should dominate 8-bit on most layers ({more}/{})",
+        t.quant_w.len()
+    );
+}
+
+#[test]
+fn pallas_forward_artifact_matches_xla_forward() {
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let xla_reg = ArtifactRegistry::load(&rt, &dir, "micro").unwrap();
+    let pal_reg = ArtifactRegistry::load_with(&rt, &dir, "micro", true).unwrap();
+
+    // identical inputs: first 16 val images (pallas artifact batch = 16)
+    let img: usize = 32 * 32 * 3;
+    let x = HostTensor::new(
+        vec![16, 32, 32, 3],
+        xla_reg.dataset.val_x.data[..16 * img].to_vec(),
+    );
+    let policy = DiscretePolicy::reference(&xla_reg.ir);
+    let inputs = galen::compress::PolicyInputs::build(
+        &xla_reg.ir,
+        &policy,
+        &xla_reg.params_by_name,
+    )
+    .unwrap();
+    let mut args: Vec<HostTensor> = vec![x];
+    args.extend(xla_reg.params.iter().cloned());
+    for (buf, e) in inputs.buffers.iter().zip(&xla_reg.meta.policy) {
+        args.push(HostTensor::new(e.shape.clone(), buf.clone()));
+    }
+    let pal_out = pal_reg.fwd.run(&rt, &args).unwrap().remove(0);
+    assert_eq!(pal_out.shape, vec![16, 10]);
+
+    // XLA fwd artifact has batch 128; evaluate the same 16 rows via the
+    // evaluator probs on batch 0 and compare argmax agreement.
+    let ev = Evaluator::new(rt, xla_reg).unwrap();
+    let p = ev.probs(&policy, 0).unwrap();
+    let classes = 10;
+    let mut agree = 0;
+    for i in 0..16 {
+        let pal_pred = (0..classes)
+            .max_by(|&a, &b| {
+                pal_out.data[i * classes + a]
+                    .partial_cmp(&pal_out.data[i * classes + b])
+                    .unwrap()
+            })
+            .unwrap();
+        let xla_pred = (0..classes)
+            .max_by(|&a, &b| {
+                p[i * classes + a].partial_cmp(&p[i * classes + b]).unwrap()
+            })
+            .unwrap();
+        agree += (pal_pred == xla_pred) as usize;
+    }
+    assert!(agree >= 15, "pallas/XLA prediction agreement {agree}/16");
+}
+
+#[test]
+fn train_step_artifact_reduces_loss() {
+    let Some(ev) = evaluator("micro") else { return };
+    use galen::eval::{retrain, RetrainCfg};
+    let ir = &ev.reg.ir;
+    // compress hard enough that there is something to recover
+    let mut policy = DiscretePolicy::reference(ir);
+    for l in &mut policy.layers {
+        l.quant = QuantMode::Mix {
+            w_bits: 3,
+            a_bits: 4,
+        };
+    }
+    let report = retrain(
+        &ev,
+        &policy,
+        &RetrainCfg {
+            steps: 12,
+            lr: 2e-3,
+            seed: 5,
+        },
+    )
+    .unwrap();
+    assert_eq!(report.losses.len(), 12);
+    let first2 = (report.losses[0] + report.losses[1]) / 2.0;
+    let last2 = (report.losses[10] + report.losses[11]) / 2.0;
+    assert!(
+        last2 <= first2 * 1.05,
+        "retraining diverged: first {first2} last {last2}"
+    );
+    assert_eq!(report.params.len(), ev.reg.params.len());
+}

@@ -1,0 +1,86 @@
+//! End-to-end search integration: real PJRT accuracy + simulated hardware
+//! latency, on the micro variant (fast).  Skipped when artifacts are absent.
+
+use std::path::PathBuf;
+
+use galen::agent::{AgentKind, DdpgConfig};
+use galen::coordinator::{Backend, Session, SessionOptions};
+use galen::eval::SensitivityConfig;
+use galen::search::SearchConfig;
+
+fn opts(backend: Backend) -> Option<SessionOptions> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("meta_micro.json").exists() {
+        eprintln!("SKIP: artifacts/ not built");
+        return None;
+    }
+    let mut o = SessionOptions::new("micro");
+    o.artifacts_dir = dir;
+    o.backend = backend;
+    // light sensitivity grid keeps the test fast; cached across tests
+    o.sensitivity = SensitivityConfig {
+        prune_ratios: vec![0.5],
+        w_bits: vec![2, 8],
+        a_bits: vec![2, 8],
+        batches: 1,
+    };
+    o.sensitivity_cache =
+        Some(std::env::temp_dir().join(format!("galen_test_sens_{}.json", std::process::id())));
+    Some(o)
+}
+
+fn small_cfg(agent: AgentKind, target: f64) -> SearchConfig {
+    let mut cfg = SearchConfig::fast(agent, target);
+    cfg.episodes = 14;
+    cfg.warmup_episodes = 6;
+    cfg.eval_batches = 1;
+    cfg.opt_steps_per_episode = 5;
+    cfg.log_every = 0;
+    cfg.ddpg = DdpgConfig {
+        hidden: (64, 48),
+        batch: 32,
+        replay_capacity: 500,
+        ..Default::default()
+    };
+    cfg
+}
+
+#[test]
+fn pjrt_backed_joint_search_end_to_end() {
+    let Some(o) = opts(Backend::Pjrt) else { return };
+    let session = Session::open(o).expect("session");
+    let out = session
+        .search(&small_cfg(AgentKind::Joint, 0.4))
+        .expect("search");
+    assert_eq!(out.history.len(), 14);
+    // every episode produced a real accuracy in [0,1] and positive latency
+    for h in &out.history {
+        assert!((0.0..=1.0).contains(&h.accuracy));
+        assert!(h.latency_s > 0.0);
+        assert!(h.macs <= session.ir.total_macs());
+    }
+    // search must find something compressing below the fp32 reference
+    assert!(out.relative_latency() < 1.0);
+    // best policy accuracy is evaluated on the real model: better than chance
+    assert!(out.best.accuracy > 0.2);
+}
+
+#[test]
+fn pjrt_sequential_scheme_runs() {
+    let Some(o) = opts(Backend::Pjrt) else { return };
+    let session = Session::open(o).expect("session");
+    let (s1, s2) = session
+        .sequential(
+            AgentKind::Pruning,
+            0.4,
+            &small_cfg(AgentKind::Pruning, 0.4),
+        )
+        .expect("sequential");
+    // stage-2 policy preserves stage-1 pruning
+    for l in &session.ir.layers {
+        assert_eq!(
+            s2.best_policy.layers[l.index].kept_channels,
+            s1.best_policy.layers[l.index].kept_channels
+        );
+    }
+}

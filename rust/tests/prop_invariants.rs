@@ -1,0 +1,232 @@
+//! Property-based invariant tests (galen::testing::forall) over the
+//! policy-mapping chain, the hardware cost model and the DDPG plumbing —
+//! artifact-free, so they always run.
+
+use galen::agent::{JointMapper, PolicyMapper, PruningMapper, QuantizationMapper};
+use galen::compress::{discretize, select_quant_mode, DiscretePolicy, DiscretizeOpts, QuantMode};
+use galen::hw::{CostModel, HwTarget, LatencySimulator};
+use galen::model::ir::test_fixtures::tiny_meta;
+use galen::model::ModelIr;
+use galen::testing::{forall, Config};
+use galen::util::rng::Pcg64;
+
+fn ir() -> ModelIr {
+    ModelIr::from_meta(&tiny_meta()).unwrap()
+}
+
+#[test]
+fn prop_discretize_in_range_and_monotone() {
+    forall(
+        Config::default(),
+        |rng: &mut Pcg64| {
+            let v = 1 + rng.below(512);
+            let r1 = rng.next_f64();
+            let r2 = rng.next_f64();
+            let m = [1usize, 8, 32][rng.below(3)];
+            (v, r1.min(r2), r1.max(r2), m)
+        },
+        |&(v, rlo, rhi, m)| {
+            let opts = DiscretizeOpts {
+                channel_multiple: m,
+                min_channels: 1,
+            };
+            let clo = discretize(rlo, v, opts);
+            let chi = discretize(rhi, v, opts);
+            if !(1..=v).contains(&clo) || !(1..=v).contains(&chi) {
+                return Err(format!("out of range: {clo} {chi} of {v}"));
+            }
+            if chi > clo {
+                return Err(format!("not monotone: r{rlo}->{clo} r{rhi}->{chi}"));
+            }
+            if m > 1 && clo % m != 0 && clo != v {
+                return Err(format!("rounding violated: {clo} % {m}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quant_mode_selection_total_and_bounded() {
+    forall(
+        Config::default(),
+        |rng: &mut Pcg64| {
+            (
+                rng.next_f64(),
+                rng.next_f64(),
+                rng.below(2) == 0,
+                1 + rng.below(8) as u8,
+            )
+        },
+        |&(a, w, supported, max_bits)| {
+            let mode = select_quant_mode(a, w, supported, max_bits);
+            match mode {
+                QuantMode::Mix { w_bits, a_bits } => {
+                    if !supported {
+                        return Err("MIX chosen while unsupported".into());
+                    }
+                    if w_bits == 0 || w_bits > max_bits || a_bits == 0 || a_bits > max_bits {
+                        return Err(format!("bits out of range: w{w_bits} a{a_bits}"));
+                    }
+                }
+                QuantMode::Int8 | QuantMode::Fp32 => {}
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_policy_macs_bops_consistency() {
+    // For ANY policy produced by the joint mapper: macs <= total, bops <=
+    // macs*32*32, bops >= macs (>=1 bit per operand).
+    let ir = ir();
+    let mapper = JointMapper::default();
+    forall(
+        Config { cases: 200, ..Default::default() },
+        |rng: &mut Pcg64| {
+            let mut actions = Vec::new();
+            for _ in 0..ir.layers.len() {
+                actions.push([rng.next_f32(), rng.next_f32(), rng.next_f32()]);
+            }
+            actions
+        },
+        |actions| {
+            let mut p = DiscretePolicy::reference(&ir);
+            for (i, a) in actions.iter().enumerate() {
+                mapper.apply(&ir, &mut p, i, a);
+            }
+            let macs = p.macs(&ir);
+            let bops = p.bops(&ir);
+            if macs > ir.total_macs() {
+                return Err(format!("macs {macs} > total {}", ir.total_macs()));
+            }
+            if bops > macs * 32 * 32 {
+                return Err("bops exceed fp32 bound".into());
+            }
+            if bops < macs {
+                return Err("bops below 1-bit floor".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_latency_positive_and_compression_never_hurts_much() {
+    // Latency under any mapped policy stays positive and within 2x of the
+    // reference (compression should never inflate cost beyond noise terms).
+    let ir = ir();
+    let sim = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 1);
+    let base = sim.latency(&ir, &DiscretePolicy::reference(&ir));
+    let mapper = JointMapper::default();
+    forall(
+        Config { cases: 200, ..Default::default() },
+        |rng: &mut Pcg64| {
+            (0..ir.layers.len())
+                .map(|_| [rng.next_f32(), rng.next_f32(), rng.next_f32()])
+                .collect::<Vec<_>>()
+        },
+        |actions| {
+            let mut p = DiscretePolicy::reference(&ir);
+            for (i, a) in actions.iter().enumerate() {
+                mapper.apply(&ir, &mut p, i, a);
+            }
+            let lat = sim.latency(&ir, &p);
+            if !(lat > 0.0) {
+                return Err(format!("non-positive latency {lat}"));
+            }
+            if lat > base * 2.0 {
+                return Err(format!("latency blew up: {lat} vs base {base}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pruning_mapper_group_safety() {
+    // No action sequence may change the channel count of a dependency-
+    // coupled (group) layer.
+    let ir = ir();
+    for mapper in [PruningMapper::default(), PruningMapper::rounded()] {
+        forall(
+            Config { cases: 150, ..Default::default() },
+            |rng: &mut Pcg64| {
+                (0..ir.layers.len())
+                    .map(|_| [rng.next_f32()])
+                    .collect::<Vec<_>>()
+            },
+            |actions| {
+                let mut p = DiscretePolicy::reference(&ir);
+                for (i, a) in actions.iter().enumerate() {
+                    mapper.apply(&ir, &mut p, i, a);
+                }
+                for l in &ir.layers {
+                    if !l.prunable && p.layers[l.index].kept_channels != l.cout {
+                        return Err(format!("group layer {} pruned", l.name));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_quant_mapper_respects_hardware_support() {
+    let ir = ir();
+    let mapper = QuantizationMapper::default();
+    let cost = CostModel::new(HwTarget::cortex_a72());
+    forall(
+        Config { cases: 150, ..Default::default() },
+        |rng: &mut Pcg64| {
+            (0..ir.layers.len())
+                .map(|_| [rng.next_f32(), rng.next_f32()])
+                .collect::<Vec<_>>()
+        },
+        |actions| {
+            let mut p = DiscretePolicy::reference(&ir);
+            for (i, a) in actions.iter().enumerate() {
+                mapper.apply(&ir, &mut p, i, a);
+            }
+            // the mapper must never emit a mode the runtime would reject:
+            // effective_mode must be the identity on the mapped policy
+            for l in &ir.layers {
+                let cin = p.effective_cin(&ir, l.index);
+                let eff = cost.effective_mode(l, cin, p.layers[l.index].kept_channels, p.layers[l.index].quant);
+                if eff != p.layers[l.index].quant {
+                    return Err(format!(
+                        "layer {}: mapper emitted {:?}, runtime runs {:?}",
+                        l.name, p.layers[l.index].quant, eff
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rng_truncated_normal_always_in_bounds() {
+    forall(
+        Config { cases: 300, ..Default::default() },
+        |rng: &mut Pcg64| {
+            (
+                rng.uniform(-2.0, 3.0),
+                rng.uniform(0.0, 2.0),
+                rng.next_u64(),
+            )
+        },
+        |&(mu, sigma, seed)| {
+            let mut r = Pcg64::new(seed);
+            for _ in 0..16 {
+                let x = r.truncated_normal(mu, sigma, 0.0, 1.0);
+                if !(0.0..=1.0).contains(&x) {
+                    return Err(format!("sample {x} outside [0,1]"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
