@@ -19,19 +19,42 @@ use galen::model::ir::test_fixtures::tiny_meta;
 use galen::model::{LayerKind, ModelIr};
 use galen::util::rng::Pcg64;
 
-fn bench_ir() -> ModelIr {
-    // prefer the real resnet18s manifest (21 layers) for realistic sizes
-    galen::model::load_meta(&galen::artifacts_dir().join("meta_resnet18s.json"))
-        .ok()
-        .and_then(|m| ModelIr::from_meta(&m).ok())
-        .unwrap_or_else(|| ModelIr::from_meta(&tiny_meta()).unwrap())
+/// Load the bench IR, preferring the real resnet18s manifest (21 layers)
+/// for realistic sizes.  Never falls back silently: the IR actually used is
+/// logged, printed, and tagged in the emitted JSON so runs on different IRs
+/// are never compared as if they were the same workload.
+fn bench_ir() -> (ModelIr, String) {
+    let path = galen::artifacts_dir().join("meta_resnet18s.json");
+    match galen::model::load_meta(&path).and_then(|m| ModelIr::from_meta(&m)) {
+        Ok(ir) => {
+            log::info!(
+                "hot_paths: using {} ({} layers) from {}",
+                ir.variant,
+                ir.layers.len(),
+                path.display()
+            );
+            let tag = ir.variant.clone();
+            (ir, tag)
+        }
+        Err(e) => {
+            log::warn!(
+                "hot_paths: {} unavailable ({e:#}); falling back to the tiny fixture IR — \
+                 numbers are NOT comparable to resnet18s runs",
+                path.display()
+            );
+            let ir = ModelIr::from_meta(&tiny_meta()).unwrap();
+            let tag = format!("{} (fixture fallback)", ir.variant);
+            (ir, tag)
+        }
+    }
 }
 
 fn main() {
     galen::util::logging::init(log::LevelFilter::Warn);
     let mut b = Bencher::new();
+    let (ir, ir_tag) = bench_ir();
+    println!("IR: {ir_tag} ({} layers)\n", ir.layers.len());
     Bencher::header();
-    let ir = bench_ir();
     let mut rng = Pcg64::new(1);
 
     // ---- DDPG: paper-sized nets (state ~30, actions 3, hidden 400/300) ----
@@ -129,5 +152,17 @@ fn main() {
         });
     }
 
-    println!("\n(benchmarks feed EXPERIMENTS.md §Perf)");
+    // machine-readable trajectory file at the repo root (EXPERIMENTS.md §Perf)
+    let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives one level below the repo root")
+        .join("BENCH_hot_paths.json");
+    let threads = galen::util::num_threads().to_string();
+    b.write_json(
+        &json_path,
+        &[("ir", ir_tag), ("gemm_threads", threads)],
+    )
+    .expect("write BENCH_hot_paths.json");
+    println!("\nwrote {}", json_path.display());
+    println!("(benchmarks feed EXPERIMENTS.md §Perf)");
 }

@@ -1,11 +1,39 @@
 //! DDPG core (Lillicrap et al.) with the paper's hyperparameters.
 
-use crate::nn::{Activation, Adam, Mlp};
+use crate::nn::{Activation, Adam, Mlp, TrainWorkspace};
 use crate::tensor::Mat;
 use crate::util::rng::Pcg64;
 use crate::util::stats::{Ema, RunningNorm};
 
 use super::replay::{ReplayBuffer, Transition};
+
+/// Pre-sized scratch for `optimize`.  Every buffer is reused across steps,
+/// so the steady-state optimization step performs no heap allocation (the
+/// first step at a given batch shape sizes everything).
+#[derive(Default)]
+struct OptimizeWorkspace {
+    /// Sampled replay indices.
+    idx: Vec<usize>,
+    rewards: Vec<f32>,
+    terminals: Vec<bool>,
+    states: Mat,
+    actions: Mat,
+    next_states: Mat,
+    /// [state | action] critic inputs.
+    sa: Mat,
+    next_sa: Mat,
+    sa_mu: Mat,
+    /// TD targets.
+    y: Mat,
+    dout: Mat,
+    dq: Mat,
+    /// dQ/daction slice for the actor update.
+    da: Mat,
+    actor_ws: TrainWorkspace,
+    critic_ws: TrainWorkspace,
+    actor_tgt_ws: TrainWorkspace,
+    critic_tgt_ws: TrainWorkspace,
+}
 
 #[derive(Clone, Debug)]
 pub struct DdpgConfig {
@@ -61,6 +89,7 @@ pub struct Ddpg {
     rng: Pcg64,
     state_dim: usize,
     action_dim: usize,
+    ws: OptimizeWorkspace,
 }
 
 impl Ddpg {
@@ -97,6 +126,7 @@ impl Ddpg {
             state_dim,
             action_dim,
             cfg,
+            ws: OptimizeWorkspace::default(),
         }
     }
 
@@ -146,86 +176,99 @@ impl Ddpg {
 
     /// One optimization step (critic TD + actor policy gradient + soft
     /// target updates) on a replay minibatch.  Returns (critic_loss, mean_q).
+    ///
+    /// All intermediates live in a per-agent workspace, so the steady-state
+    /// step performs no heap allocation (see
+    /// `workspace_fingerprint` and the regression test that pins it).
     pub fn optimize(&mut self) -> Option<(f32, f32)> {
         let batch_n = self.cfg.batch.min(self.replay.len());
         if batch_n < 8 {
             return None;
         }
-        // ---- assemble batch (normalized states, normalized rewards) ----
-        let (states, actions, rewards, next_states, terminals) = {
-            let batch = self.replay.sample(batch_n, &mut self.rng);
-            let states = Mat::from_rows(
-                &batch.iter().map(|t| self.normalized(&t.state)).collect::<Vec<_>>(),
-            );
-            let actions =
-                Mat::from_rows(&batch.iter().map(|t| t.action.clone()).collect::<Vec<_>>());
-            let rewards: Vec<f32> = batch.iter().map(|t| t.reward).collect();
-            let next_states = Mat::from_rows(
-                &batch
-                    .iter()
-                    .map(|t| self.normalized(&t.next_state))
-                    .collect::<Vec<_>>(),
-            );
-            let terminals: Vec<bool> = batch.iter().map(|t| t.terminal).collect();
-            (states, actions, rewards, next_states, terminals)
-        };
+        // ---- assemble batch into the workspace (normalized states) ----
+        self.replay
+            .sample_into(batch_n, &mut self.rng, &mut self.ws.idx);
+        let ws = &mut self.ws;
+        ws.states.reshape_to(batch_n, self.state_dim);
+        ws.actions.reshape_to(batch_n, self.action_dim);
+        ws.next_states.reshape_to(batch_n, self.state_dim);
+        ws.rewards.clear();
+        ws.terminals.clear();
+        for (r, &i) in ws.idx.iter().enumerate() {
+            let t = self.replay.get(i);
+            let srow = ws.states.row_mut(r);
+            srow.copy_from_slice(&t.state);
+            self.state_norm.normalize(srow);
+            let nrow = ws.next_states.row_mut(r);
+            nrow.copy_from_slice(&t.next_state);
+            self.state_norm.normalize(nrow);
+            ws.actions.row_mut(r).copy_from_slice(&t.action);
+            ws.rewards.push(t.reward);
+            ws.terminals.push(t.terminal);
+        }
 
         // reward normalization by moving average (paper §Proposed Agents)
-        let batch_mean = rewards.iter().sum::<f32>() as f64 / rewards.len() as f64;
+        let batch_mean = ws.rewards.iter().sum::<f32>() as f64 / ws.rewards.len() as f64;
         let mean = self.reward_mean.update(batch_mean);
-        let batch_scale = rewards
+        let batch_scale = ws
+            .rewards
             .iter()
             .map(|&r| (r as f64 - mean).abs())
             .sum::<f64>()
-            / rewards.len() as f64;
+            / ws.rewards.len() as f64;
         let scale = self.reward_scale.update(batch_scale).max(1e-3);
-        let norm_rewards: Vec<f32> = rewards
-            .iter()
-            .map(|&r| ((r as f64 - mean) / scale) as f32)
-            .collect();
 
         // ---- critic update: y = r + gamma * Q'(s', mu'(s')) ----
-        let next_actions = self.actor_target.forward(&next_states);
-        let q_next = self
-            .critic_target
-            .forward(&next_states.hcat(&next_actions));
-        let mut y = Mat::zeros(batch_n, 1);
-        for i in 0..batch_n {
-            let bootstrap = if terminals[i] {
-                0.0
-            } else {
-                self.cfg.gamma * q_next.at(i, 0)
-            };
-            *y.at_mut(i, 0) = norm_rewards[i] + bootstrap;
+        self.actor_target
+            .forward_cached_ws(&ws.next_states, &mut ws.actor_tgt_ws);
+        ws.next_states
+            .hcat_into(ws.actor_tgt_ws.output(), &mut ws.next_sa);
+        self.critic_target
+            .forward_cached_ws(&ws.next_sa, &mut ws.critic_tgt_ws);
+        ws.y.reshape_to(batch_n, 1);
+        {
+            let q_next = ws.critic_tgt_ws.output();
+            for i in 0..batch_n {
+                let bootstrap = if ws.terminals[i] {
+                    0.0
+                } else {
+                    self.cfg.gamma * q_next.at(i, 0)
+                };
+                let norm_r = ((ws.rewards[i] as f64 - mean) / scale) as f32;
+                *ws.y.at_mut(i, 0) = norm_r + bootstrap;
+            }
         }
-        let sa = states.hcat(&actions);
-        let cache = self.critic.forward_cached(&sa);
-        let q = cache.activations.last().unwrap();
-        let mut dout = Mat::zeros(batch_n, 1);
+        ws.states.hcat_into(&ws.actions, &mut ws.sa);
+        self.critic.forward_cached_ws(&ws.sa, &mut ws.critic_ws);
+        ws.dout.reshape_to(batch_n, 1);
         let mut critic_loss = 0.0f32;
-        for i in 0..batch_n {
-            let d = q.at(i, 0) - y.at(i, 0);
-            critic_loss += d * d / batch_n as f32;
-            *dout.at_mut(i, 0) = 2.0 * d / batch_n as f32;
+        {
+            let q = ws.critic_ws.output();
+            for i in 0..batch_n {
+                let d = q.at(i, 0) - ws.y.at(i, 0);
+                critic_loss += d * d / batch_n as f32;
+                *ws.dout.at_mut(i, 0) = 2.0 * d / batch_n as f32;
+            }
         }
-        let (mut cgrads, _) = self.critic.backward(&cache, &dout);
-        Mlp::clip_grads(&mut cgrads, self.cfg.grad_clip);
-        self.critic_opt.step(&mut self.critic, &cgrads);
+        self.critic.backward_ws(&mut ws.critic_ws, &ws.dout);
+        Mlp::clip_grads(&mut ws.critic_ws.grads, self.cfg.grad_clip);
+        self.critic_opt.step(&mut self.critic, &ws.critic_ws.grads);
 
         // ---- actor update: ascend Q(s, mu(s)) ----
-        let acache = self.actor.forward_cached(&states);
-        let mu = acache.activations.last().unwrap().clone();
-        let sa_mu = states.hcat(&mu);
-        let ccache = self.critic.forward_cached(&sa_mu);
-        let q_mu = ccache.activations.last().unwrap();
-        let mean_q = q_mu.mean();
+        self.actor.forward_cached_ws(&ws.states, &mut ws.actor_ws);
+        ws.states.hcat_into(ws.actor_ws.output(), &mut ws.sa_mu);
+        self.critic.forward_cached_ws(&ws.sa_mu, &mut ws.critic_ws);
+        let mean_q = ws.critic_ws.output().mean();
         // dLoss/dQ = -1/N (maximize Q)
-        let dq = Mat::from_vec(batch_n, 1, vec![-1.0 / batch_n as f32; batch_n]);
-        let (_, dsa) = self.critic.backward(&ccache, &dq);
-        let (_, da) = dsa.hsplit(self.state_dim);
-        let (mut agrads, _) = self.actor.backward(&acache, &da);
-        Mlp::clip_grads(&mut agrads, self.cfg.grad_clip);
-        self.actor_opt.step(&mut self.actor, &agrads);
+        ws.dq.reshape_to(batch_n, 1);
+        ws.dq.data.fill(-1.0 / batch_n as f32);
+        self.critic.backward_ws(&mut ws.critic_ws, &ws.dq);
+        ws.critic_ws
+            .input_grad()
+            .split_right_into(self.state_dim, &mut ws.da);
+        self.actor.backward_ws(&mut ws.actor_ws, &ws.da);
+        Mlp::clip_grads(&mut ws.actor_ws.grads, self.cfg.grad_clip);
+        self.actor_opt.step(&mut self.actor, &ws.actor_ws.grads);
 
         // ---- soft target updates ----
         self.actor_target.soft_update_from(&self.actor, self.cfg.tau);
@@ -233,6 +276,41 @@ impl Ddpg {
             .soft_update_from(&self.critic, self.cfg.tau);
 
         Some((critic_loss, mean_q))
+    }
+
+    /// (pointer, capacity) of every `optimize` workspace buffer.  After a
+    /// warm-up step at a stable batch shape these must not change — the
+    /// zero-allocation regression test pins exactly that.
+    pub fn workspace_fingerprint(&self) -> Vec<(usize, usize)> {
+        let ws = &self.ws;
+        let mut out = vec![
+            (ws.idx.as_ptr() as usize, ws.idx.capacity()),
+            (ws.rewards.as_ptr() as usize, ws.rewards.capacity()),
+            (ws.terminals.as_ptr() as usize, ws.terminals.capacity()),
+        ];
+        for m in [
+            &ws.states,
+            &ws.actions,
+            &ws.next_states,
+            &ws.sa,
+            &ws.next_sa,
+            &ws.sa_mu,
+            &ws.y,
+            &ws.dout,
+            &ws.dq,
+            &ws.da,
+        ] {
+            out.push((m.data.as_ptr() as usize, m.data.capacity()));
+        }
+        for t in [
+            &ws.actor_ws,
+            &ws.critic_ws,
+            &ws.actor_tgt_ws,
+            &ws.critic_tgt_ws,
+        ] {
+            out.extend(t.buffer_fingerprint());
+        }
+        out
     }
 }
 
@@ -312,6 +390,39 @@ mod tests {
             (a[0] - 0.7).abs() < 0.15,
             "expected action near 0.7, got {}",
             a[0]
+        );
+    }
+
+    /// Zero-allocation steady state: after a warm-up step has sized the
+    /// workspace, further optimize steps must reuse every buffer in place
+    /// (stable pointers and capacities).
+    #[test]
+    fn optimize_workspace_stable_across_steps() {
+        let mut agent = mk(4, 2, 9);
+        let mut rng = Pcg64::new(31);
+        for _ in 0..64 {
+            let s: Vec<f32> = (0..4).map(|_| rng.next_f32()).collect();
+            let a: Vec<f32> = (0..2).map(|_| rng.next_f32()).collect();
+            agent.store(Transition {
+                state: s.clone(),
+                action: a,
+                reward: rng.next_f32(),
+                next_state: s,
+                terminal: rng.below(4) == 0,
+            });
+        }
+        for _ in 0..3 {
+            agent.optimize().expect("enough data to optimize");
+        }
+        let fp = agent.workspace_fingerprint();
+        assert!(!fp.is_empty());
+        for _ in 0..10 {
+            agent.optimize().unwrap();
+        }
+        assert_eq!(
+            fp,
+            agent.workspace_fingerprint(),
+            "optimize reallocated workspace buffers at steady state"
         );
     }
 

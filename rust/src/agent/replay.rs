@@ -59,6 +59,19 @@ impl ReplayBuffer {
             .map(|i| &self.items[i])
             .collect()
     }
+
+    /// `sample` without the per-call Vec: fills `idx` with distinct indices
+    /// into the buffer (resolve them with `get`).  Draws from `rng` exactly
+    /// like `sample`, so the two paths are trajectory-identical.
+    pub fn sample_into(&self, batch: usize, rng: &mut Pcg64, idx: &mut Vec<usize>) {
+        let n = self.items.len();
+        rng.sample_indices_into(n, batch.min(n), idx);
+    }
+
+    /// Transition at index `i` (for `sample_into` consumers).
+    pub fn get(&self, i: usize) -> &Transition {
+        &self.items[i]
+    }
 }
 
 #[cfg(test)]
@@ -98,5 +111,24 @@ mod tests {
         assert_eq!(s.len(), 20);
         let s = buf.sample(200, &mut rng);
         assert_eq!(s.len(), 50, "clamped to buffer size");
+    }
+
+    #[test]
+    fn sample_into_matches_sample() {
+        let mut buf = ReplayBuffer::new(100);
+        for i in 0..50 {
+            buf.push(t(i as f32));
+        }
+        let mut r1 = Pcg64::new(7);
+        let mut r2 = Pcg64::new(7);
+        let mut idx = Vec::new();
+        for _ in 0..20 {
+            let by_ref = buf.sample(16, &mut r1);
+            buf.sample_into(16, &mut r2, &mut idx);
+            assert_eq!(idx.len(), by_ref.len());
+            for (a, &i) in by_ref.iter().zip(&idx) {
+                assert_eq!(*a, buf.get(i));
+            }
+        }
     }
 }

@@ -139,6 +139,43 @@ impl Bencher {
     pub fn results(&self) -> &[BenchStats] {
         &self.results
     }
+
+    /// Machine-readable results: `{"meta": {...}, "benches": {name ->
+    /// {ns_per_iter (p50), p95_ns, mean_ns, ...}}}`.  `meta` entries record
+    /// run provenance (e.g. which IR a bench actually used) so the perf
+    /// trajectory across PRs is comparable.  hot_paths writes this to
+    /// `BENCH_hot_paths.json` at the repo root.
+    pub fn write_json(
+        &self,
+        path: &std::path::Path,
+        meta: &[(&str, String)],
+    ) -> anyhow::Result<()> {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+
+        let mut benches = BTreeMap::new();
+        for s in &self.results {
+            let mut e = BTreeMap::new();
+            e.insert("ns_per_iter".to_string(), Json::num(s.median_ns()));
+            e.insert("p50_ns".to_string(), Json::num(s.median_ns()));
+            e.insert("p95_ns".to_string(), Json::num(s.p95_ns()));
+            e.insert("mean_ns".to_string(), Json::num(s.mean_ns()));
+            e.insert(
+                "iters_per_sample".to_string(),
+                Json::num(s.iters_per_sample as f64),
+            );
+            e.insert("samples".to_string(), Json::num(s.samples.len() as f64));
+            benches.insert(s.name.clone(), Json::Obj(e));
+        }
+        let mut m = BTreeMap::new();
+        for (k, v) in meta {
+            m.insert((*k).to_string(), Json::str(v.clone()));
+        }
+        let mut root = BTreeMap::new();
+        root.insert("meta".to_string(), Json::Obj(m));
+        root.insert("benches".to_string(), Json::Obj(benches));
+        Json::Obj(root).write_file(path)
+    }
 }
 
 #[cfg(test)]
@@ -173,5 +210,21 @@ mod tests {
         assert!(fmt_ns(5_000.0).contains("µs"));
         assert!(fmt_ns(5_000_000.0).contains("ms"));
         assert!(fmt_ns(5e9).contains(" s"));
+    }
+
+    #[test]
+    fn write_json_roundtrips() {
+        use crate::util::json::Json;
+        let mut b = Bencher::fast();
+        b.once("unit/compute", || 1 + 1);
+        let path = std::env::temp_dir().join("galen_bench_write_json_test.json");
+        b.write_json(&path, &[("ir", "tiny".to_string())]).unwrap();
+        let j = Json::read_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(j.req("meta").unwrap().req_str("ir").unwrap(), "tiny");
+        let benches = j.req("benches").unwrap();
+        let e = benches.req("unit/compute").unwrap();
+        assert!(e.req_f64("ns_per_iter").unwrap() >= 0.0);
+        assert!(e.req_f64("p95_ns").unwrap() >= 0.0);
     }
 }

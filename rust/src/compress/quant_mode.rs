@@ -8,7 +8,9 @@ pub const T_MIX: f64 = 0.5;
 pub const T_INT8: f64 = 0.2;
 
 /// The quantization mode of one layer after discretization.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// (`Hash` lets the hardware simulator memoize per-layer costs keyed by
+/// layer configuration — see `hw::LatencySimulator`.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum QuantMode {
     /// No quantization (single-precision float).
     Fp32,

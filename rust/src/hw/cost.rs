@@ -87,11 +87,29 @@ impl CostModel {
         weights + acts_in + acts_out
     }
 
+    /// `layer_cost(..).total()` — the scalar the latency simulator memoizes.
+    pub fn layer_total(
+        &self,
+        l: &Layer,
+        eff_cin: usize,
+        eff_cout: usize,
+        quant: QuantMode,
+    ) -> f64 {
+        self.layer_cost(l, eff_cin, eff_cout, quant).total()
+    }
+
     /// Latency of one layer (batch 1) under effective channel counts and a
     /// quantization mode.  Falls back internally (MIX->INT8->FP32) when the
     /// target or the layer configuration does not support the mode — the
     /// same fallback the policy mapping applies, so probing unsupported
     /// configurations is safe and matches deployment.
+    ///
+    /// Purity contract: the result is a pure function of
+    /// `(layer, eff_cin, eff_cout, quant)` and the (immutable-by-convention)
+    /// target parameters — this is what makes the simulator-level
+    /// memoization sound.  Mutating `self.target` requires
+    /// `LatencySimulator::invalidate_cache` on any simulator wrapping this
+    /// model.
     pub fn layer_cost(
         &self,
         l: &Layer,

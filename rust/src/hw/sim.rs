@@ -4,10 +4,21 @@
 //! effective layer configurations.  `measure()` mimics the paper's TVM
 //! remote measurement: N noisy repetitions, median-reduced — so the reward
 //! the agent sees carries realistic measurement jitter.
+//!
+//! Per-layer costs are memoized keyed by
+//! `(layer_index, effective_cin, kept_channels, quant_mode)`: the episode
+//! loop perturbs one layer at a time, so after warm-up a `latency()` call
+//! only pays the analytical cost model for the layers whose configuration
+//! actually changed (everything else is a hash lookup).  The cache is
+//! invalidated automatically when a different model IR is evaluated and
+//! explicitly via `invalidate_cache` (required after mutating `cost`).
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
 
 use super::cost::CostModel;
-use crate::compress::DiscretePolicy;
-use crate::model::ModelIr;
+use crate::compress::{DiscretePolicy, QuantMode};
+use crate::model::{LayerKind, ModelIr};
 use crate::util::rng::Pcg64;
 use crate::util::stats::median;
 
@@ -18,14 +29,59 @@ pub struct Measurement {
     pub samples: Vec<f64>,
 }
 
+/// Memo key: one layer under one effective configuration.
+type CostKey = (usize, usize, usize, QuantMode);
+
+/// Cheap identity of the IR a cache was filled against: layer count plus an
+/// order-sensitive FNV-1a hash over every layer's shape-defining fields, so
+/// two structurally different IRs (even permutations with identical totals)
+/// never share cached per-layer costs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+struct IrFingerprint {
+    layers: usize,
+    shape_hash: u64,
+}
+
+impl IrFingerprint {
+    fn of(ir: &ModelIr) -> Self {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        };
+        for l in &ir.layers {
+            mix(l.cin as u64);
+            mix(l.cout as u64);
+            mix(l.kernel as u64);
+            mix(l.stride as u64);
+            mix(l.in_spatial as u64);
+            mix(l.out_spatial as u64);
+            mix(l.depthwise as u64);
+            mix(matches!(l.kind, LayerKind::Conv) as u64);
+        }
+        Self {
+            layers: ir.layers.len(),
+            shape_hash: h,
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct LatencySimulator {
+    /// The analytical cost model.  Mutating it (or its target) requires
+    /// `invalidate_cache` — memoized layer costs do not track it.
     pub cost: CostModel,
     /// Relative Gaussian measurement noise per repetition (sigma).
     pub noise_sigma: f64,
     /// Repetitions per measurement (median-reduced).
     pub repeats: usize,
     rng: Pcg64,
+    /// Memoized `layer_cost(..).total()` per layer configuration.  Interior
+    /// mutability keeps `latency` at `&self`.
+    cache: RefCell<HashMap<CostKey, f64>>,
+    cached_ir: Cell<IrFingerprint>,
+    hits: Cell<u64>,
+    misses: Cell<u64>,
 }
 
 impl LatencySimulator {
@@ -35,34 +91,31 @@ impl LatencySimulator {
             noise_sigma: 0.01,
             repeats: 5,
             rng: Pcg64::with_stream(seed, 0x1a7e),
+            cache: RefCell::new(HashMap::new()),
+            cached_ir: Cell::new(IrFingerprint::default()),
+            hits: Cell::new(0),
+            misses: Cell::new(0),
         }
     }
 
     /// Deterministic (noise-free) end-to-end latency of a compressed model.
     pub fn latency(&self, ir: &ModelIr, policy: &DiscretePolicy) -> f64 {
+        self.revalidate(ir);
+        let mut cache = self.cache.borrow_mut();
         let mut total = 0.0;
         for l in &ir.layers {
-            let cmp = &policy.layers[l.index];
-            let eff_cin = policy.effective_cin(ir, l.index);
-            total += self
-                .cost
-                .layer_cost(l, eff_cin, cmp.kept_channels, cmp.quant)
-                .total();
+            total += self.cached_layer_total(&mut cache, ir, policy, l.index);
         }
         total
     }
 
     /// Per-layer deterministic latency breakdown (profiling / Fig analysis).
     pub fn latency_per_layer(&self, ir: &ModelIr, policy: &DiscretePolicy) -> Vec<f64> {
+        self.revalidate(ir);
+        let mut cache = self.cache.borrow_mut();
         ir.layers
             .iter()
-            .map(|l| {
-                let cmp = &policy.layers[l.index];
-                let eff_cin = policy.effective_cin(ir, l.index);
-                self.cost
-                    .layer_cost(l, eff_cin, cmp.kept_channels, cmp.quant)
-                    .total()
-            })
+            .map(|l| self.cached_layer_total(&mut cache, ir, policy, l.index))
             .collect()
     }
 
@@ -82,6 +135,54 @@ impl LatencySimulator {
             samples,
         }
     }
+
+    /// Drop every memoized layer cost.  Must be called after mutating
+    /// `cost` (the cache cannot observe cost-model changes).
+    pub fn invalidate_cache(&self) {
+        self.cache.borrow_mut().clear();
+        self.cached_ir.set(IrFingerprint::default());
+    }
+
+    /// (cache hits, cache misses) since construction / `reset_cache_stats`.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.hits.get(), self.misses.get())
+    }
+
+    pub fn reset_cache_stats(&self) {
+        self.hits.set(0);
+        self.misses.set(0);
+    }
+
+    fn cached_layer_total(
+        &self,
+        cache: &mut HashMap<CostKey, f64>,
+        ir: &ModelIr,
+        policy: &DiscretePolicy,
+        i: usize,
+    ) -> f64 {
+        let l = &ir.layers[i];
+        let cmp = &policy.layers[i];
+        let eff_cin = policy.effective_cin(ir, i);
+        let key = (i, eff_cin, cmp.kept_channels, cmp.quant);
+        if let Some(&v) = cache.get(&key) {
+            self.hits.set(self.hits.get() + 1);
+            return v;
+        }
+        self.misses.set(self.misses.get() + 1);
+        let v = self.cost.layer_total(l, eff_cin, cmp.kept_channels, cmp.quant);
+        cache.insert(key, v);
+        v
+    }
+
+    /// Clear the cache when `ir` differs from the one it was filled against
+    /// (layer indices are only meaningful within one IR).
+    fn revalidate(&self, ir: &ModelIr) {
+        let fp = IrFingerprint::of(ir);
+        if self.cached_ir.get() != fp {
+            self.cache.borrow_mut().clear();
+            self.cached_ir.set(fp);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -96,6 +197,19 @@ mod tests {
         let ir = ModelIr::from_meta(&tiny_meta()).unwrap();
         let sim = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 7);
         (ir, sim)
+    }
+
+    /// The memoization-free reference: what `latency` computed before the
+    /// cache existed.
+    fn uncached_latency(cost: &CostModel, ir: &ModelIr, policy: &DiscretePolicy) -> f64 {
+        ir.layers
+            .iter()
+            .map(|l| {
+                let cmp = &policy.layers[l.index];
+                let eff_cin = policy.effective_cin(ir, l.index);
+                cost.layer_total(l, eff_cin, cmp.kept_channels, cmp.quant)
+            })
+            .sum()
     }
 
     #[test]
@@ -159,5 +273,62 @@ mod tests {
         let a = sim.latency(&ir, &reference);
         let b = sim.latency(&ir, &quant);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn memoized_latency_matches_uncached_after_mutations() {
+        let (ir, sim) = setup();
+        let mut rng = Pcg64::new(99);
+        let mut policy = DiscretePolicy::reference(&ir);
+        for step in 0..200 {
+            // mutate one random layer per step, like the episode loop
+            let i = rng.below(ir.layers.len());
+            let l = &ir.layers[i];
+            if l.prunable {
+                policy.layers[i].kept_channels = 1 + rng.below(l.cout);
+            }
+            policy.layers[i].quant = match rng.below(3) {
+                0 => QuantMode::Fp32,
+                1 => QuantMode::Int8,
+                _ => QuantMode::Mix {
+                    w_bits: 1 + rng.below(6) as u8,
+                    a_bits: 1 + rng.below(6) as u8,
+                },
+            };
+            let cached = sim.latency(&ir, &policy);
+            let fresh = uncached_latency(&sim.cost, &ir, &policy);
+            assert_eq!(cached, fresh, "divergence at step {step}");
+        }
+        let per_layer = sim.latency_per_layer(&ir, &policy);
+        assert_eq!(per_layer.len(), ir.layers.len());
+    }
+
+    #[test]
+    fn single_layer_perturbation_costs_few_misses() {
+        let (ir, sim) = setup();
+        let mut policy = DiscretePolicy::reference(&ir);
+        sim.latency(&ir, &policy); // warm the cache
+        sim.reset_cache_stats();
+        // change one prunable layer's width: only that layer and its
+        // consumer (whose effective cin changed) can miss
+        policy.layers[1].kept_channels = 2;
+        sim.latency(&ir, &policy);
+        let (hits, misses) = sim.cache_stats();
+        assert!(misses <= 2, "expected <=2 misses, got {misses}");
+        assert_eq!(hits + misses, ir.layers.len() as u64);
+    }
+
+    #[test]
+    fn invalidate_clears_and_stays_correct() {
+        let (ir, sim) = setup();
+        let p = DiscretePolicy::reference(&ir);
+        let a = sim.latency(&ir, &p);
+        sim.invalidate_cache();
+        sim.reset_cache_stats();
+        let b = sim.latency(&ir, &p);
+        let (hits, misses) = sim.cache_stats();
+        assert_eq!(a, b);
+        assert_eq!(hits, 0, "cache was not actually cleared");
+        assert_eq!(misses, ir.layers.len() as u64);
     }
 }

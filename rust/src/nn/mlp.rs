@@ -67,6 +67,85 @@ pub struct ForwardCache {
     pub activations: Vec<Mat>,
 }
 
+/// Reusable forward/backward buffers, keyed by (network shape, batch size).
+///
+/// `forward_cached_ws` / `backward_ws` run against these pre-sized buffers
+/// instead of allocating fresh matrices, so a training step that reuses one
+/// workspace is allocation-free at steady state (the first step at a new
+/// batch shape grows the buffers; subsequent steps only overwrite them).
+/// Results are bit-exact with the allocating `forward_cached` / `backward`.
+pub struct TrainWorkspace {
+    /// activations[0] = input copy, activations[i+1] = output of layer i.
+    pub activations: Vec<Mat>,
+    /// delta[i] = dLoss/d(activations[i]) scratch, same shapes as activations.
+    delta: Vec<Mat>,
+    /// Parameter gradients of the most recent `backward_ws` call.
+    pub grads: MlpGrads,
+    batch: usize,
+}
+
+impl Default for TrainWorkspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TrainWorkspace {
+    pub fn new() -> Self {
+        Self {
+            activations: Vec::new(),
+            delta: Vec::new(),
+            grads: MlpGrads {
+                w: Vec::new(),
+                b: Vec::new(),
+            },
+            batch: 0,
+        }
+    }
+
+    /// Size every buffer for `mlp` at batch size `batch`, reusing existing
+    /// allocations whenever they are already large enough.
+    fn ensure(&mut self, mlp: &Mlp, batch: usize) {
+        let n = mlp.layers.len();
+        self.activations.resize_with(n + 1, || Mat::zeros(0, 0));
+        self.delta.resize_with(n + 1, || Mat::zeros(0, 0));
+        self.grads.w.resize_with(n, || Mat::zeros(0, 0));
+        self.grads.b.resize_with(n, Vec::new);
+        self.activations[0].reshape_to(batch, mlp.layers[0].w.rows);
+        self.delta[0].reshape_to(batch, mlp.layers[0].w.rows);
+        for (i, l) in mlp.layers.iter().enumerate() {
+            self.activations[i + 1].reshape_to(batch, l.w.cols);
+            self.delta[i + 1].reshape_to(batch, l.w.cols);
+            self.grads.w[i].reshape_to(l.w.rows, l.w.cols);
+            self.grads.b[i].resize(l.b.len(), 0.0);
+        }
+        self.batch = batch;
+    }
+
+    /// Network output of the most recent `forward_cached_ws`.
+    pub fn output(&self) -> &Mat {
+        self.activations.last().expect("forward_cached_ws not run")
+    }
+
+    /// dLoss/dinput of the most recent `backward_ws`.
+    pub fn input_grad(&self) -> &Mat {
+        &self.delta[0]
+    }
+
+    /// (pointer, capacity) of every owned buffer — lets tests assert
+    /// steady-state reuse (no reallocation across steps).
+    pub fn buffer_fingerprint(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for m in self.activations.iter().chain(&self.delta).chain(&self.grads.w) {
+            out.push((m.data.as_ptr() as usize, m.data.capacity()));
+        }
+        for b in &self.grads.b {
+            out.push((b.as_ptr() as usize, b.capacity()));
+        }
+        out
+    }
+}
+
 impl Mlp {
     /// `sizes` = [in, h1, ..., out]; `acts.len() == sizes.len() - 1`.
     /// Init: uniform fan-in (DDPG paper init) — U(-1/sqrt(fan_in), +1/sqrt(fan_in)),
@@ -138,6 +217,43 @@ impl Mlp {
             activations.push(z);
         }
         ForwardCache { activations }
+    }
+
+    /// `forward_cached` into a reusable workspace: identical math, zero
+    /// allocation once `ws` has seen this (network, batch) shape.
+    pub fn forward_cached_ws(&self, x: &Mat, ws: &mut TrainWorkspace) {
+        assert_eq!(x.cols, self.input_dim(), "input width");
+        ws.ensure(self, x.rows);
+        ws.activations[0].copy_from_mat(x);
+        for (i, layer) in self.layers.iter().enumerate() {
+            let (prev, rest) = ws.activations.split_at_mut(i + 1);
+            let z = &mut rest[0];
+            prev[i].matmul_into(&layer.w, z);
+            z.add_row(&layer.b);
+            z.map_inplace(|v| layer.act.apply(v));
+        }
+    }
+
+    /// `backward` into a reusable workspace: parameter grads land in
+    /// `ws.grads`, dLoss/dinput in `ws.input_grad()`.  Must follow a
+    /// `forward_cached_ws` on the same workspace.
+    pub fn backward_ws(&self, ws: &mut TrainWorkspace, dout: &Mat) {
+        let n = self.layers.len();
+        assert_eq!(ws.batch, dout.rows, "workspace batch");
+        assert_eq!(dout.cols, self.output_dim(), "output width");
+        ws.delta[n].copy_from_mat(dout);
+        for (i, layer) in self.layers.iter().enumerate().rev() {
+            let (dprev, drest) = ws.delta.split_at_mut(i + 1);
+            let dz = &mut drest[0];
+            // dL/dz = dL/dy * act'(z) (expressed via y)
+            let y = &ws.activations[i + 1];
+            for (v, &yv) in dz.data.iter_mut().zip(&y.data) {
+                *v *= layer.act.dydx_from_y(yv);
+            }
+            ws.activations[i].t_matmul_into(dz, &mut ws.grads.w[i]); // [in, out]
+            dz.col_sum_into(&mut ws.grads.b[i]);
+            dz.matmul_t_into(&layer.w, &mut dprev[i]); // [B, in]
+        }
     }
 
     /// Backprop `dloss/doutput` through the net.
@@ -319,6 +435,42 @@ mod tests {
         let lm = loss(&mlp, &x2);
         let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
         assert!((fd - dx.data[1]).abs() < 2e-2 * (1.0 + fd.abs()));
+    }
+
+    /// The workspace paths must be bit-exact with the allocating paths —
+    /// they share the same kernels and the same accumulation order.
+    #[test]
+    fn workspace_paths_bit_exact_with_allocating_paths() {
+        let mlp = tiny_mlp(11);
+        let mut rng = Pcg64::new(12);
+        let mut x = Mat::zeros(5, 4);
+        for v in &mut x.data {
+            *v = rng.normal() as f32;
+        }
+        let cache = mlp.forward_cached(&x);
+        let y = cache.activations.last().unwrap().clone();
+        let (grads, dx) = mlp.backward(&cache, &y);
+
+        let mut ws = TrainWorkspace::new();
+        mlp.forward_cached_ws(&x, &mut ws);
+        assert_eq!(ws.output(), &y);
+        for (a, b) in ws.activations.iter().zip(&cache.activations) {
+            assert_eq!(a, b);
+        }
+        mlp.backward_ws(&mut ws, &y);
+        for (a, b) in ws.grads.w.iter().zip(&grads.w) {
+            assert_eq!(a, b);
+        }
+        for (a, b) in ws.grads.b.iter().zip(&grads.b) {
+            assert_eq!(a, b);
+        }
+        assert_eq!(ws.input_grad(), &dx);
+
+        // second pass on the same workspace: buffers are reused, not regrown
+        let fp = ws.buffer_fingerprint();
+        mlp.forward_cached_ws(&x, &mut ws);
+        mlp.backward_ws(&mut ws, &y);
+        assert_eq!(fp, ws.buffer_fingerprint(), "workspace reallocated");
     }
 
     #[test]

@@ -10,4 +10,4 @@ pub mod adam;
 pub mod mlp;
 
 pub use adam::Adam;
-pub use mlp::{Activation, Mlp, MlpGrads};
+pub use mlp::{Activation, Mlp, MlpGrads, TrainWorkspace};

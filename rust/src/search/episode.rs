@@ -241,6 +241,11 @@ pub fn run_search(
     }
 
     let (best, best_policy) = best.expect("at least one episode");
+    let (hits, misses) = sim.cache_stats();
+    log::debug!(
+        "search done: simulator cache {hits} hits / {misses} misses ({:.1}% hit rate)",
+        100.0 * hits as f64 / (hits + misses).max(1) as f64
+    );
     Ok(SearchOutcome {
         best_policy,
         best,

@@ -1,12 +1,170 @@
 //! Minimal dense f32 matrix used by the agent networks (rust/src/nn).
 //!
 //! Row-major `Mat` with exactly the operations DDPG needs: GEMM (with
-//! optional transposes), broadcast row ops, elementwise maps.  The GEMM is
-//! the L3 hot path (profiled in rust/benches/hot_paths.rs) — it is written
-//! as an i-k-j loop over row-major data so the inner loop is a contiguous
-//! axpy the compiler auto-vectorizes.
+//! optional transposes), broadcast row ops, elementwise maps.  The GEMMs are
+//! the L3 hot path (profiled in rust/benches/hot_paths.rs) and are written
+//! as cache-blocked, multi-accumulator kernels with `_into` variants that
+//! reuse caller buffers, plus a deterministic row-parallel path
+//! (`util::parallel_row_blocks`) for large shapes.
+//!
+//! Determinism contract: every kernel accumulates the contributions of each
+//! output element in a fixed order that does not depend on the worker count
+//! (each thread owns disjoint output rows and runs the identical per-row
+//! code), so N-thread results are bit-identical to 1-thread results.  The
+//! `GALEN_NUM_THREADS` environment variable caps the worker count
+//! (`util::num_threads`).
 
-#[derive(Clone, Debug, PartialEq)]
+use crate::util::{num_threads, parallel_row_blocks};
+
+/// K-panel height of the blocked GEMM: a `KC x n` slab of the right-hand
+/// matrix is streamed repeatedly while it is still cache-resident.
+const KC: usize = 256;
+
+/// Minimum MAC count before the row-parallel path amortizes its scoped
+/// threads (thread spawn is ~tens of microseconds; below this the serial
+/// kernel wins).
+const PAR_MIN_MACS: usize = 1 << 21;
+
+/// Worker count for a GEMM of `macs` multiply-accumulates: scaled so every
+/// thread gets at least ~`PAR_MIN_MACS` of work (a just-over-threshold GEMM
+/// must not fan out to a many-core machine's full width, where per-call
+/// thread-spawn overhead would dominate the kernel).
+fn gemm_workers(macs: usize) -> usize {
+    (macs / PAR_MIN_MACS).clamp(1, num_threads())
+}
+
+/// Rows `r0..` of `A @ B` into `out_block` (`A` is `m x k_dim`, `B` is
+/// `k_dim x n`, all row-major).  i-k-j loop, k blocked in `KC` panels and
+/// unrolled 4-wide (four independent accumulation streams per output row).
+/// Per output element the k contributions are consumed in ascending order in
+/// fixed groups of four — identical for every block split.
+fn gemm_rows(a: &[f32], k_dim: usize, b: &[f32], n: usize, r0: usize, out_block: &mut [f32]) {
+    out_block.fill(0.0);
+    if n == 0 || k_dim == 0 {
+        return;
+    }
+    let rows = out_block.len() / n;
+    for k0 in (0..k_dim).step_by(KC) {
+        let k1 = (k0 + KC).min(k_dim);
+        for i in 0..rows {
+            let arow = &a[(r0 + i) * k_dim..(r0 + i) * k_dim + k_dim];
+            let orow = &mut out_block[i * n..(i + 1) * n];
+            let mut k = k0;
+            while k + 4 <= k1 {
+                let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
+                let b0 = &b[k * n..(k + 1) * n];
+                let b1 = &b[(k + 1) * n..(k + 2) * n];
+                let b2 = &b[(k + 2) * n..(k + 3) * n];
+                let b3 = &b[(k + 3) * n..(k + 4) * n];
+                for ((((o, &v0), &v1), &v2), &v3) in
+                    orow.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3)
+                {
+                    *o += a0 * v0 + a1 * v1 + a2 * v2 + a3 * v3;
+                }
+                k += 4;
+            }
+            while k < k1 {
+                let av = arow[k];
+                let brow = &b[k * n..(k + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+                k += 1;
+            }
+        }
+    }
+}
+
+/// Rows `i0..` of `A^T @ B` into `out_block` (`A` is `m x ka`, `B` is
+/// `m x n`).  The reduction runs over the `m` shared rows, unrolled 4-wide;
+/// per output element the r contributions are consumed in ascending order in
+/// fixed groups of four.
+fn t_gemm_rows(
+    a: &[f32],
+    ka: usize,
+    b: &[f32],
+    n: usize,
+    m: usize,
+    i0: usize,
+    out_block: &mut [f32],
+) {
+    out_block.fill(0.0);
+    if n == 0 {
+        return;
+    }
+    let rows = out_block.len() / n;
+    let mut r = 0;
+    while r + 4 <= m {
+        for i in 0..rows {
+            let c = i0 + i;
+            let a0 = a[r * ka + c];
+            let a1 = a[(r + 1) * ka + c];
+            let a2 = a[(r + 2) * ka + c];
+            let a3 = a[(r + 3) * ka + c];
+            let orow = &mut out_block[i * n..(i + 1) * n];
+            let b0 = &b[r * n..(r + 1) * n];
+            let b1 = &b[(r + 1) * n..(r + 2) * n];
+            let b2 = &b[(r + 2) * n..(r + 3) * n];
+            let b3 = &b[(r + 3) * n..(r + 4) * n];
+            for ((((o, &v0), &v1), &v2), &v3) in orow.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3) {
+                *o += a0 * v0 + a1 * v1 + a2 * v2 + a3 * v3;
+            }
+        }
+        r += 4;
+    }
+    while r < m {
+        for i in 0..rows {
+            let av = a[r * ka + i0 + i];
+            let orow = &mut out_block[i * n..(i + 1) * n];
+            let brow = &b[r * n..(r + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+        r += 1;
+    }
+}
+
+/// Rows `r0..` of `A @ B^T` into `out_block` (`A` is `m x k_dim`, `B` is
+/// `b_rows x k_dim`).  Each output element is a dot product computed with 4
+/// independent accumulators (breaks the FP add dependency chain so the inner
+/// loop pipelines/vectorizes).
+fn gemm_t_rows(
+    a: &[f32],
+    k_dim: usize,
+    b: &[f32],
+    b_rows: usize,
+    r0: usize,
+    out_block: &mut [f32],
+) {
+    if b_rows == 0 {
+        return;
+    }
+    let rows = out_block.len() / b_rows;
+    for i in 0..rows {
+        let arow = &a[(r0 + i) * k_dim..(r0 + i) * k_dim + k_dim];
+        let orow = &mut out_block[i * b_rows..(i + 1) * b_rows];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k_dim..(j + 1) * k_dim];
+            let mut acc = [0.0f32; 4];
+            let mut chunks_a = arow.chunks_exact(4);
+            let mut chunks_b = brow.chunks_exact(4);
+            for (ca, cb) in (&mut chunks_a).zip(&mut chunks_b) {
+                acc[0] += ca[0] * cb[0];
+                acc[1] += ca[1] * cb[1];
+                acc[2] += ca[2] * cb[2];
+                acc[3] += ca[3] * cb[3];
+            }
+            let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+            for (x, y) in chunks_a.remainder().iter().zip(chunks_b.remainder()) {
+                s += x * y;
+            }
+            *o = s;
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Mat {
     pub rows: usize,
     pub cols: usize,
@@ -58,80 +216,90 @@ impl Mat {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Reshape in place, reusing the allocation (no reallocation once the
+    /// capacity has grown to the steady-state shape).
+    pub fn reshape_to(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Become a copy of `src`, reusing the allocation.
+    pub fn copy_from_mat(&mut self, src: &Mat) {
+        self.reshape_to(src.rows, src.cols);
+        self.data.copy_from_slice(&src.data);
+    }
+
     /// out = self @ other. Accumulates into a fresh matrix.
     pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul inner dim");
         let mut out = Mat::zeros(self.rows, other.cols);
         self.matmul_into(other, &mut out);
         out
     }
 
     /// out = self @ other, writing into a preallocated buffer (hot path —
-    /// avoids allocation in the agent optimization loop).
+    /// avoids allocation in the agent optimization loop).  Dispatches to the
+    /// row-parallel path for large shapes; bit-exact for any worker count.
     pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
-        assert_eq!(self.cols, other.rows);
-        assert_eq!(out.rows, self.rows);
-        assert_eq!(out.cols, other.cols);
-        out.data.fill(0.0);
-        let n = other.cols;
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for (k, &a) in arow.iter().enumerate() {
-                let brow = &other.data[k * n..(k + 1) * n];
-                // zip elides bounds checks; the contiguous axpy vectorizes
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += a * b;
-                }
-            }
-        }
+        let workers = gemm_workers(self.rows * self.cols * other.cols);
+        self.matmul_into_threaded(other, out, workers);
+    }
+
+    /// `matmul_into` with an explicit worker count (1 = serial).  Exposed so
+    /// tests and benches can assert thread-count determinism directly.
+    pub fn matmul_into_threaded(&self, other: &Mat, out: &mut Mat, workers: usize) {
+        assert_eq!(self.cols, other.rows, "matmul inner dim");
+        out.reshape_to(self.rows, other.cols);
+        let (k, n) = (self.cols, other.cols);
+        parallel_row_blocks(&mut out.data, self.rows, workers, |r0, block| {
+            gemm_rows(&self.data, k, &other.data, n, r0, block);
+        });
     }
 
     /// self^T @ other (used for weight gradients: X^T dY).
     pub fn t_matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.rows, other.rows, "t_matmul outer dim");
         let mut out = Mat::zeros(self.cols, other.cols);
-        let n = other.cols;
-        for r in 0..self.rows {
-            let arow = self.row(r);
-            let brow = other.row(r);
-            for (i, &a) in arow.iter().enumerate() {
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for (o, &b) in orow.iter_mut().zip(brow) {
-                    *o += a * b;
-                }
-            }
-        }
+        self.t_matmul_into(other, &mut out);
         out
+    }
+
+    /// self^T @ other into a preallocated buffer.
+    pub fn t_matmul_into(&self, other: &Mat, out: &mut Mat) {
+        let workers = gemm_workers(self.rows * self.cols * other.cols);
+        self.t_matmul_into_threaded(other, out, workers);
+    }
+
+    /// `t_matmul_into` with an explicit worker count (1 = serial).
+    pub fn t_matmul_into_threaded(&self, other: &Mat, out: &mut Mat, workers: usize) {
+        assert_eq!(self.rows, other.rows, "t_matmul outer dim");
+        out.reshape_to(self.cols, other.cols);
+        let (ka, n, m) = (self.cols, other.cols, self.rows);
+        parallel_row_blocks(&mut out.data, self.cols, workers, |i0, block| {
+            t_gemm_rows(&self.data, ka, &other.data, n, m, i0, block);
+        });
     }
 
     /// self @ other^T (used for input gradients: dY W^T).
     pub fn matmul_t(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.cols, "matmul_t inner dim");
         let mut out = Mat::zeros(self.rows, other.rows);
-        for i in 0..self.rows {
-            let arow = self.row(i);
-            for j in 0..other.rows {
-                let brow = other.row(j);
-                // 4 independent accumulators: breaks the FP add dependency
-                // chain so the dot product pipelines/vectorizes
-                let mut acc = [0.0f32; 4];
-                let mut chunks_a = arow.chunks_exact(4);
-                let mut chunks_b = brow.chunks_exact(4);
-                for (ca, cb) in (&mut chunks_a).zip(&mut chunks_b) {
-                    acc[0] += ca[0] * cb[0];
-                    acc[1] += ca[1] * cb[1];
-                    acc[2] += ca[2] * cb[2];
-                    acc[3] += ca[3] * cb[3];
-                }
-                let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-                for (a, b) in chunks_a.remainder().iter().zip(chunks_b.remainder()) {
-                    s += a * b;
-                }
-                *out.at_mut(i, j) = s;
-            }
-        }
+        self.matmul_t_into(other, &mut out);
         out
+    }
+
+    /// self @ other^T into a preallocated buffer.
+    pub fn matmul_t_into(&self, other: &Mat, out: &mut Mat) {
+        let workers = gemm_workers(self.rows * self.cols * other.rows);
+        self.matmul_t_into_threaded(other, out, workers);
+    }
+
+    /// `matmul_t_into` with an explicit worker count (1 = serial).
+    pub fn matmul_t_into_threaded(&self, other: &Mat, out: &mut Mat, workers: usize) {
+        assert_eq!(self.cols, other.cols, "matmul_t inner dim");
+        out.reshape_to(self.rows, other.rows);
+        let (k, b_rows) = (self.cols, other.rows);
+        parallel_row_blocks(&mut out.data, self.rows, workers, |r0, block| {
+            gemm_t_rows(&self.data, k, &other.data, b_rows, r0, block);
+        });
     }
 
     /// Add a row vector to every row (bias broadcast).
@@ -148,12 +316,19 @@ impl Mat {
     /// Column sums (bias gradient).
     pub fn col_sum(&self) -> Vec<f32> {
         let mut out = vec![0.0f32; self.cols];
+        self.col_sum_into(&mut out);
+        out
+    }
+
+    /// Column sums into a preallocated buffer.
+    pub fn col_sum_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.cols);
+        out.fill(0.0);
         for i in 0..self.rows {
             for (o, x) in out.iter_mut().zip(self.row(i)) {
                 *o += x;
             }
         }
-        out
     }
 
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
@@ -187,17 +362,19 @@ impl Mat {
 
     /// Horizontal concatenation [self | other] (critic input: state ++ action).
     pub fn hcat(&self, other: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols + other.cols);
+        self.hcat_into(other, &mut out);
+        out
+    }
+
+    /// [self | other] into a preallocated buffer.
+    pub fn hcat_into(&self, other: &Mat, out: &mut Mat) {
         assert_eq!(self.rows, other.rows);
-        let cols = self.cols + other.cols;
-        let mut data = Vec::with_capacity(self.rows * cols);
+        out.reshape_to(self.rows, self.cols + other.cols);
         for i in 0..self.rows {
-            data.extend_from_slice(self.row(i));
-            data.extend_from_slice(other.row(i));
-        }
-        Mat {
-            rows: self.rows,
-            cols,
-            data,
+            let row = out.row_mut(i);
+            row[..self.cols].copy_from_slice(self.row(i));
+            row[self.cols..].copy_from_slice(other.row(i));
         }
     }
 
@@ -211,6 +388,16 @@ impl Mat {
             r.row_mut(i).copy_from_slice(&self.row(i)[at..]);
         }
         (l, r)
+    }
+
+    /// Copy columns `[at, cols)` into `out` (the right half of `hsplit`,
+    /// without materializing the left half).
+    pub fn split_right_into(&self, at: usize, out: &mut Mat) {
+        assert!(at <= self.cols);
+        out.reshape_to(self.rows, self.cols - at);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[at..]);
+        }
     }
 
     pub fn scale(&mut self, s: f32) {
@@ -280,6 +467,9 @@ mod tests {
         let (l, r) = c.hsplit(2);
         assert_eq!(l, a);
         assert_eq!(r, b);
+        let mut right = Mat::zeros(0, 0);
+        c.split_right_into(2, &mut right);
+        assert_eq!(right, b);
     }
 
     #[test]
@@ -297,5 +487,68 @@ mod tests {
         let a = m(2, 2, &[1., 2., 3., 4.]);
         let b = m(3, 2, &[0.; 6]);
         let _ = a.matmul(&b);
+    }
+
+    #[test]
+    fn reshape_reuses_allocation() {
+        let mut a = Mat::zeros(8, 8);
+        let cap = a.data.capacity();
+        let ptr = a.data.as_ptr();
+        a.reshape_to(4, 4);
+        a.reshape_to(8, 8);
+        assert_eq!(a.data.capacity(), cap);
+        assert_eq!(a.data.as_ptr(), ptr);
+        assert_eq!((a.rows, a.cols), (8, 8));
+    }
+
+    /// Thread-count determinism on shapes that cross the k-panel and the
+    /// unroll remainders (k = 1, 3, KC, KC + 5).
+    #[test]
+    fn threaded_kernels_bit_exact_vs_serial() {
+        let mut rng = crate::util::rng::Pcg64::new(42);
+        for &(rows, k, n) in &[(7usize, 1usize, 5usize), (5, 3, 9), (3, 256, 4), (9, 261, 6)] {
+            let mut a = Mat::zeros(rows, k);
+            let mut b = Mat::zeros(k, n);
+            let mut bt = Mat::zeros(n, k);
+            let mut c = Mat::zeros(rows, n);
+            for x in a
+                .data
+                .iter_mut()
+                .chain(&mut b.data)
+                .chain(&mut bt.data)
+                .chain(&mut c.data)
+            {
+                *x = rng.normal() as f32;
+            }
+            for workers in [2usize, 3, 8] {
+                let mut s = Mat::zeros(0, 0);
+                let mut p = Mat::zeros(0, 0);
+                a.matmul_into_threaded(&b, &mut s, 1);
+                a.matmul_into_threaded(&b, &mut p, workers);
+                assert_eq!(s.data, p.data, "matmul {rows}x{k}x{n} w={workers}");
+                a.t_matmul_into_threaded(&c, &mut s, 1);
+                a.t_matmul_into_threaded(&c, &mut p, workers);
+                assert_eq!(s.data, p.data, "t_matmul {rows}x{k}x{n} w={workers}");
+                a.matmul_t_into_threaded(&bt, &mut s, 1);
+                a.matmul_t_into_threaded(&bt, &mut p, workers);
+                assert_eq!(s.data, p.data, "matmul_t {rows}x{k}x{n} w={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_do_not_panic() {
+        let a = Mat::zeros(0, 4);
+        let b = Mat::zeros(4, 3);
+        assert_eq!(a.matmul(&b).data.len(), 0);
+        let a = Mat::zeros(3, 0);
+        let b = Mat::zeros(0, 2);
+        let c = a.matmul(&b); // inner dim 0: all-zero result
+        assert!(c.data.iter().all(|&x| x == 0.0));
+        assert_eq!((c.rows, c.cols), (3, 2));
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(3, 0);
+        let c = a.matmul(&b);
+        assert_eq!((c.rows, c.cols), (2, 0));
     }
 }

@@ -9,6 +9,53 @@ pub mod logging;
 pub mod rng;
 pub mod stats;
 
+/// Worker count for the parallel compute kernels: the `GALEN_NUM_THREADS`
+/// environment variable when set (>= 1), otherwise the machine's available
+/// parallelism. Read once and cached for the process lifetime.
+pub fn num_threads() -> usize {
+    static N: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("GALEN_NUM_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+    })
+}
+
+/// Split the row-major buffer `data` (`rows` rows) into up to `workers`
+/// contiguous row blocks and run `f(first_row, block)` on each, one scoped
+/// thread per block.
+///
+/// Every invocation owns a disjoint block, and the block boundaries are a
+/// pure function of `rows` and `workers` — so the decomposition is
+/// deterministic, and a kernel whose per-row computation does not depend on
+/// the block split produces bit-identical results for every worker count.
+/// Panics in workers propagate.
+pub fn parallel_row_blocks<F>(data: &mut [f32], rows: usize, workers: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let row_len = if rows == 0 { 0 } else { data.len() / rows };
+    debug_assert!(rows == 0 || data.len() == rows * row_len);
+    let workers = workers.clamp(1, rows.max(1));
+    if workers == 1 || row_len == 0 {
+        f(0, data);
+        return;
+    }
+    let block_rows = rows.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (b, block) in data.chunks_mut(block_rows * row_len).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(b * block_rows, block));
+        }
+    });
+}
+
 /// Run `f` over `items` with up to `workers` scoped threads, preserving
 /// input order in the output. Panics in workers propagate.
 pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
@@ -67,5 +114,43 @@ mod tests {
     fn parallel_map_empty() {
         let ys: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
         assert!(ys.is_empty());
+    }
+
+    #[test]
+    fn row_blocks_cover_all_rows_once() {
+        for rows in [0usize, 1, 2, 7, 16, 33] {
+            for workers in [1usize, 2, 3, 8, 64] {
+                let row_len = 3;
+                let mut data = vec![0.0f32; rows * row_len];
+                parallel_row_blocks(&mut data, rows, workers, |r0, block| {
+                    let n = block.len() / row_len.max(1);
+                    for i in 0..n {
+                        for x in &mut block[i * row_len..(i + 1) * row_len] {
+                            *x += (r0 + i) as f32;
+                        }
+                    }
+                });
+                for (i, chunk) in data.chunks(row_len).enumerate() {
+                    assert!(
+                        chunk.iter().all(|&x| x == i as f32),
+                        "rows={rows} workers={workers} row {i}: {chunk:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_blocks_zero_width_rows() {
+        let mut data: Vec<f32> = Vec::new();
+        parallel_row_blocks(&mut data, 5, 4, |r0, block| {
+            assert_eq!(r0, 0);
+            assert!(block.is_empty());
+        });
+    }
+
+    #[test]
+    fn num_threads_at_least_one() {
+        assert!(num_threads() >= 1);
     }
 }

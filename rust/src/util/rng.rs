@@ -117,15 +117,24 @@ impl Pcg64 {
 
     /// k distinct indices from [0, n) (k <= n), unordered.
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx = Vec::new();
+        self.sample_indices_into(n, k, &mut idx);
+        idx
+    }
+
+    /// `sample_indices` writing into a reusable buffer — identical draws, no
+    /// per-call allocation once the buffer has grown to `n` (hot path: the
+    /// DDPG replay sampler).
+    pub fn sample_indices_into(&mut self, n: usize, k: usize, out: &mut Vec<usize>) {
         debug_assert!(k <= n);
         // partial Fisher-Yates on an index vector
-        let mut idx: Vec<usize> = (0..n).collect();
+        out.clear();
+        out.extend(0..n);
         for i in 0..k {
             let j = i + self.below(n - i);
-            idx.swap(i, j);
+            out.swap(i, j);
         }
-        idx.truncate(k);
-        idx
+        out.truncate(k);
     }
 }
 
@@ -234,6 +243,25 @@ mod tests {
             d.dedup();
             assert_eq!(d.len(), 8);
         }
+    }
+
+    #[test]
+    fn sample_indices_into_matches_allocating_path() {
+        let mut a = Pcg64::new(29);
+        let mut b = Pcg64::new(29);
+        let mut buf = Vec::new();
+        for _ in 0..50 {
+            let s = a.sample_indices(40, 16);
+            b.sample_indices_into(40, 16, &mut buf);
+            assert_eq!(s, buf, "draw-for-draw parity");
+        }
+        // buffer capacity is stable after the first call at a given n
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        for _ in 0..20 {
+            b.sample_indices_into(40, 16, &mut buf);
+        }
+        assert_eq!((buf.capacity(), buf.as_ptr()), (cap, ptr));
     }
 
     #[test]

@@ -7,11 +7,151 @@ use galen::compress::{discretize, select_quant_mode, DiscretePolicy, DiscretizeO
 use galen::hw::{CostModel, HwTarget, LatencySimulator};
 use galen::model::ir::test_fixtures::tiny_meta;
 use galen::model::ModelIr;
+use galen::tensor::Mat;
 use galen::testing::{forall, Config};
 use galen::util::rng::Pcg64;
 
 fn ir() -> ModelIr {
     ModelIr::from_meta(&tiny_meta()).unwrap()
+}
+
+// ---------------------------------------------------------------- GEMM ----
+
+/// Naive triple-loop references: single accumulator, ascending reduction
+/// index — the semantics the optimized kernels must reproduce.
+fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut s = 0.0f32;
+            for k in 0..a.cols {
+                s += a.at(i, k) * b.at(k, j);
+            }
+            *out.at_mut(i, j) = s;
+        }
+    }
+    out
+}
+
+fn naive_t_matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.cols, b.cols);
+    for i in 0..a.cols {
+        for j in 0..b.cols {
+            let mut s = 0.0f32;
+            for r in 0..a.rows {
+                s += a.at(r, i) * b.at(r, j);
+            }
+            *out.at_mut(i, j) = s;
+        }
+    }
+    out
+}
+
+fn naive_matmul_t(a: &Mat, b: &Mat) -> Mat {
+    let mut out = Mat::zeros(a.rows, b.rows);
+    for i in 0..a.rows {
+        for j in 0..b.rows {
+            let mut s = 0.0f32;
+            for k in 0..a.cols {
+                s += a.at(i, k) * b.at(j, k);
+            }
+            *out.at_mut(i, j) = s;
+        }
+    }
+    out
+}
+
+/// Matrix of "exact" values: multiples of 0.25 in [-8, 8].  Every product
+/// (granularity 2^-4, magnitude <= 64) and every partial sum over the
+/// shapes below stays exactly representable in f32, so *any* summation
+/// order must produce bit-identical results — which turns FP equality into
+/// a legitimate bit-exactness oracle for the blocked kernels.
+fn exact_mat(rng: &mut Pcg64, rows: usize, cols: usize) -> Mat {
+    let mut m = Mat::zeros(rows, cols);
+    for v in &mut m.data {
+        *v = (rng.below(65) as f32 - 32.0) * 0.25;
+    }
+    m
+}
+
+#[test]
+fn prop_gemm_blocked_bit_exact_vs_naive_reference() {
+    forall(
+        Config { cases: 120, ..Default::default() },
+        |rng: &mut Pcg64| {
+            let m = 1 + rng.below(24);
+            // crosses the 4-wide unroll remainders AND the KC=256 k-panel
+            let k = 1 + rng.below(280);
+            let n = 1 + rng.below(24);
+            let a = exact_mat(rng, m, k);
+            let b = exact_mat(rng, k, n);
+            let bt = exact_mat(rng, n, k);
+            let c = exact_mat(rng, m, n);
+            (a, b, bt, c)
+        },
+        |(a, b, bt, c)| {
+            if a.matmul(b) != naive_matmul(a, b) {
+                return Err("matmul differs from naive reference".into());
+            }
+            if a.t_matmul(c) != naive_t_matmul(a, c) {
+                return Err("t_matmul differs from naive reference".into());
+            }
+            if a.matmul_t(bt) != naive_matmul_t(a, bt) {
+                return Err("matmul_t differs from naive reference".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gemm_thread_count_invariant() {
+    // Full-random values (rounding now matters): every worker count must be
+    // bit-identical to the serial kernel, because each thread owns disjoint
+    // output rows and runs the identical per-row code.
+    forall(
+        Config { cases: 60, ..Default::default() },
+        |rng: &mut Pcg64| {
+            let m = 1 + rng.below(40);
+            let k = 1 + rng.below(96);
+            let n = 1 + rng.below(40);
+            let workers = 2 + rng.below(7);
+            let mut a = Mat::zeros(m, k);
+            let mut b = Mat::zeros(k, n);
+            let mut bt = Mat::zeros(n, k);
+            let mut c = Mat::zeros(m, n);
+            for v in a
+                .data
+                .iter_mut()
+                .chain(&mut b.data)
+                .chain(&mut bt.data)
+                .chain(&mut c.data)
+            {
+                *v = rng.normal() as f32;
+            }
+            (a, b, bt, c, workers)
+        },
+        |(a, b, bt, c, workers)| {
+            let mut serial = Mat::zeros(0, 0);
+            let mut parallel = Mat::zeros(0, 0);
+            a.matmul_into_threaded(b, &mut serial, 1);
+            a.matmul_into_threaded(b, &mut parallel, *workers);
+            if serial != parallel {
+                return Err(format!("matmul not deterministic at {workers} workers"));
+            }
+            a.t_matmul_into_threaded(c, &mut serial, 1);
+            a.t_matmul_into_threaded(c, &mut parallel, *workers);
+            if serial != parallel {
+                return Err(format!("t_matmul not deterministic at {workers} workers"));
+            }
+            a.matmul_t_into_threaded(bt, &mut serial, 1);
+            a.matmul_t_into_threaded(bt, &mut parallel, *workers);
+            if serial != parallel {
+                return Err(format!("matmul_t not deterministic at {workers} workers"));
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
@@ -205,6 +345,47 @@ fn prop_quant_mapper_respects_hardware_support() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn prop_sim_memoized_latency_matches_uncached() {
+    // One long-lived (warm-cache) simulator vs the memoization-free sum of
+    // per-layer costs, across random mapped policies: identical results.
+    let ir = ir();
+    let sim = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 2);
+    let mapper = JointMapper::default();
+    forall(
+        Config { cases: 200, ..Default::default() },
+        |rng: &mut Pcg64| {
+            (0..ir.layers.len())
+                .map(|_| [rng.next_f32(), rng.next_f32(), rng.next_f32()])
+                .collect::<Vec<_>>()
+        },
+        |actions| {
+            let mut p = DiscretePolicy::reference(&ir);
+            for (i, a) in actions.iter().enumerate() {
+                mapper.apply(&ir, &mut p, i, a);
+            }
+            let cached = sim.latency(&ir, &p);
+            let uncached: f64 = ir
+                .layers
+                .iter()
+                .map(|l| {
+                    let cmp = &p.layers[l.index];
+                    let eff_cin = p.effective_cin(&ir, l.index);
+                    sim.cost
+                        .layer_total(l, eff_cin, cmp.kept_channels, cmp.quant)
+                })
+                .sum();
+            if cached != uncached {
+                return Err(format!("memoized {cached} != uncached {uncached}"));
+            }
+            Ok(())
+        },
+    );
+    let (hits, misses) = sim.cache_stats();
+    assert!(hits > 0, "cache never hit across 200 policies");
+    assert!(misses > 0);
 }
 
 #[test]
