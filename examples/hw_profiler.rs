@@ -1,46 +1,119 @@
-//! Hardware-substrate explorer: per-layer latency breakdown of a model
-//! variant under FP32 / INT8 / bit-serial modes, the MIX-vs-INT8 crossover
-//! (paper §Exploration Range), and the float-only-device ablation that
-//! motivates hardware-specific search.
+//! Hardware-substrate explorer, now backed by the measured-latency
+//! profiler subsystem: profiles a model variant on the real in-tree kernels
+//! (f32 / i8 / packed-i8 GEMM), writes the on-disk profile cache, and
+//! prints per-layer measured vs simulated latency side by side — plus the
+//! simulator-only exploration the example always had (MIX-vs-INT8
+//! crossover, float-only ablation).
 //!
 //!     cargo run --release --example hw_profiler -- [--variant resnet18s]
+//!     cargo run --release --example hw_profiler -- --fixture   # no artifacts
+//!
+//! `--fixture` uses the in-code tiny test IR, so the example runs (and CI
+//! smoke-tests the profiler) without `artifacts/` being built.
+
+use std::path::Path;
 
 use anyhow::Result;
 use galen::compress::{DiscretePolicy, QuantMode};
 use galen::coordinator::{Backend, Session, SessionOptions};
-use galen::hw::{mix_supported, CostModel, HwTarget, LatencySimulator};
+use galen::hw::{
+    mix_supported, CostModel, HwTarget, LatencySimulator, MeasuredProfiler, ProfilerConfig,
+};
+use galen::model::ir::test_fixtures::tiny_meta;
+use galen::model::ModelIr;
 use galen::util::cli::Cli;
 
 fn main() -> Result<()> {
     galen::util::logging::init(log::LevelFilter::Info);
-    let args = Cli::new("hw_profiler", "latency-simulator exploration")
+    let args = Cli::new("hw_profiler", "measured + simulated latency exploration")
         .opt("variant", "resnet18s", "model variant")
+        .opt("profiles", "profiles", "profile-cache root directory")
+        .flag("fixture", "use the in-code tiny fixture IR (no artifacts/)")
         .parse()?;
 
-    let mut opts = SessionOptions::new(args.get("variant"));
-    opts.backend = Backend::Synthetic; // structure only; no PJRT needed
-    let session = Session::open(opts)?;
-    let ir = &session.ir;
-    let sim = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 1);
+    let (ir, model_tag) = if args.has_flag("fixture") {
+        (ModelIr::from_meta(&tiny_meta())?, "tiny".to_string())
+    } else {
+        let mut opts = SessionOptions::new(args.get("variant"));
+        opts.backend = Backend::Synthetic; // structure only; no PJRT needed
+        let session = Session::open(opts)?;
+        let tag = session.opts.variant.clone();
+        (session.ir, tag)
+    };
+    let target = HwTarget::cortex_a72();
+    let sim = LatencySimulator::new(CostModel::new(target.clone()), 1);
 
-    // ---- per-layer fp32 breakdown ----
-    let fp32 = DiscretePolicy::reference(ir);
-    let per_layer = sim.latency_per_layer(ir, &fp32);
-    let total: f64 = per_layer.iter().sum();
-    println!("{:14} {:>11} {:>8} {:>12} {:>8}", "layer", "fp32 lat", "share", "MACs", "MIX?");
-    for (l, t) in ir.layers.iter().zip(&per_layer) {
+    // ---- measured vs simulated per-layer profile ----
+    // The fixture's layers are tiny; the fast harness keeps CI smoke cheap.
+    let cfg = if args.has_flag("fixture") {
+        ProfilerConfig::fast()
+    } else {
+        ProfilerConfig::default()
+    };
+    let mut prof = MeasuredProfiler::with_cache(
+        target.clone(),
+        &model_tag,
+        cfg,
+        Path::new(args.get("profiles")),
+    )?;
+
+    let fp32 = DiscretePolicy::reference(&ir);
+    let mut int8 = fp32.clone();
+    for l in &mut int8.layers {
+        l.quant = QuantMode::Int8;
+    }
+
+    println!(
+        "{:14} {:>13} {:>13} {:>9} {:>13} {:>8}",
+        "layer", "meas fp32", "sim fp32", "sim/meas", "meas int8", "MIX?"
+    );
+    let meas_fp32 = prof.model_latency_per_layer(&ir, &fp32);
+    let sim_fp32 = sim.latency_per_layer(&ir, &fp32);
+    let meas_int8 = prof.model_latency_per_layer(&ir, &int8);
+    for (((l, mf), sf), mi) in ir.layers.iter().zip(&meas_fp32).zip(&sim_fp32).zip(&meas_int8) {
         println!(
-            "{:14} {:>8.3} ms {:>7.1}% {:>12} {:>8}",
+            "{:14} {:>10.3} µs {:>10.3} ms {:>8.0}x {:>10.3} µs {:>8}",
             l.name,
-            t * 1e3,
-            100.0 * t / total,
-            l.macs(),
+            mf * 1e6,
+            sf * 1e3,
+            sf / mf,
+            mi * 1e6,
             if mix_supported(l, l.cin, l.cout) { "yes" } else { "no" }
         );
     }
-    println!("total fp32: {:.3} ms\n", total * 1e3);
+    let (meas_total, sim_total): (f64, f64) =
+        (meas_fp32.iter().sum(), sim_fp32.iter().sum());
+    println!(
+        "total fp32: measured {:.3} µs (host kernels) vs simulated {:.3} ms (Cortex-A72 model)",
+        meas_total * 1e6,
+        sim_total * 1e3
+    );
+    println!(
+        "whole-model INT8 measured speedup: {:.2}x\n",
+        meas_total / meas_int8.iter().sum::<f64>()
+    );
 
-    // ---- whole-model mode comparison ----
+    // ---- profile cache: write, then show that a re-run re-measures nothing
+    let stats = prof.stats();
+    if let Some(path) = prof.save()? {
+        println!(
+            "profile cache: {} entries ({} measured, {} loaded) -> {}",
+            stats.entries,
+            stats.measured,
+            stats.loaded,
+            path.display()
+        );
+    }
+    prof.model_latency(&ir, &fp32);
+    prof.model_latency(&ir, &int8);
+    let again = prof.stats();
+    println!(
+        "second pass: {} new measurements ({} cache hits)\n",
+        again.measured - stats.measured,
+        again.hits - stats.hits
+    );
+
+    // ---- simulator exploration: whole-model mode comparison ----
     let mode_policy = |q: QuantMode| {
         let mut p = fp32.clone();
         for l in &mut p.layers {
@@ -48,8 +121,8 @@ fn main() -> Result<()> {
         }
         p
     };
-    println!("{:22} {:>12} {:>10}", "whole-model mode", "latency", "vs fp32");
-    let int8_total = sim.latency(ir, &mode_policy(QuantMode::Int8));
+    println!("{:22} {:>12} {:>10}", "whole-model mode (sim)", "latency", "vs fp32");
+    let int8_total = sim.latency(&ir, &mode_policy(QuantMode::Int8));
     for (name, q) in [
         ("FP32", QuantMode::Fp32),
         ("INT8", QuantMode::Int8),
@@ -59,44 +132,22 @@ fn main() -> Result<()> {
         ("MIX 2x2", QuantMode::Mix { w_bits: 2, a_bits: 2 }),
         ("MIX 1x1", QuantMode::Mix { w_bits: 1, a_bits: 1 }),
     ] {
-        let t = sim.latency(ir, &mode_policy(q));
-        println!("{:22} {:>9.3} ms {:>9.2}x", name, t * 1e3, total / t);
+        let t = sim.latency(&ir, &mode_policy(q));
+        println!("{:22} {:>9.3} ms {:>9.2}x", name, t * 1e3, sim_total / t);
     }
     println!(
         "\ncrossover check (paper: >6-bit bit-serial is slower than INT8):\n  INT8 {:.3} ms vs MIX6x6 {:.3} ms vs MIX7x7 {:.3} ms",
         int8_total * 1e3,
-        sim.latency(ir, &mode_policy(QuantMode::Mix { w_bits: 6, a_bits: 6 })) * 1e3,
-        sim.latency(ir, &mode_policy(QuantMode::Mix { w_bits: 7, a_bits: 7 })) * 1e3,
+        sim.latency(&ir, &mode_policy(QuantMode::Mix { w_bits: 6, a_bits: 6 })) * 1e3,
+        sim.latency(&ir, &mode_policy(QuantMode::Mix { w_bits: 7, a_bits: 7 })) * 1e3,
     );
 
     // ---- hardware-specific search motivation: a float-only device ----
-    let float_sim = LatencySimulator::new(
-        CostModel::new(HwTarget::cortex_a72().float_only()),
-        1,
-    );
-    let int8 = mode_policy(QuantMode::Int8);
+    let float_sim = LatencySimulator::new(CostModel::new(target.float_only()), 1);
     println!(
         "\nfloat-only device: INT8 policy gains {:.2}x (vs {:.2}x on the A72)\n => identical policies, different hardware, different optimum — why the\n    search must consume measured target latency.",
-        float_sim.latency(ir, &fp32) / float_sim.latency(ir, &int8),
-        total / int8_total,
+        float_sim.latency(&ir, &fp32) / float_sim.latency(&ir, &mode_policy(QuantMode::Int8)),
+        sim_total / int8_total,
     );
-
-    // ---- pruning sweep on the costliest layer ----
-    let (worst, _) = per_layer
-        .iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .unwrap();
-    let l = &ir.layers[worst];
-    println!("\npruning sweep on the costliest layer ({}):", l.name);
-    for keep_frac in [1.0, 0.75, 0.5, 0.25] {
-        let mut p = fp32.clone();
-        p.layers[worst].kept_channels = ((l.cout as f64 * keep_frac) as usize).max(1);
-        println!(
-            "  keep {:>4.0}% -> {:>8.3} ms",
-            keep_frac * 100.0,
-            sim.latency(ir, &p) * 1e3
-        );
-    }
     Ok(())
 }

@@ -6,6 +6,7 @@
 //!   * replay buffer sampling
 //!   * policy -> runtime-input packing (masks + ℓ1 ranking)
 //!   * JSON parse of a meta manifest
+//!   * i8 vs f32 GEMM (the measured-latency profiler's kernel substrate)
 //!
 //!     cargo bench --bench hot_paths
 
@@ -17,6 +18,8 @@ use galen::compress::{DiscretePolicy, PolicyInputs};
 use galen::hw::{CostModel, HwTarget, LatencySimulator};
 use galen::model::ir::test_fixtures::tiny_meta;
 use galen::model::{LayerKind, ModelIr};
+use galen::tensor::quant::{gemm_i8, gemm_i8_packed, QuantizedMat, QuantizedTensor};
+use galen::tensor::Mat;
 use galen::util::rng::Pcg64;
 
 /// Load the bench IR, preferring the real resnet18s manifest (21 layers)
@@ -142,6 +145,35 @@ fn main() {
         cfg.log_every = 0;
         let mut s = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 5);
         galen::search::run_search(&ir, &sens, &ev, &mut s, &mapper, &cfg, None).unwrap()
+    });
+
+    // ---- i8 vs f32 GEMM (measured-latency profiler kernel substrate) ----
+    // 64x576x64 is the im2col shape of a 64->64 3x3 conv at 8x8 spatial —
+    // a mid-sized resnet18s layer.  All three kernels run serially so the
+    // numbers track kernel quality, not thread-pool behavior.  The i8
+    // entries include the per-call dynamic activation quantize, exactly as
+    // the profiler times them.
+    let (gm, gk, gn) = (64, 576, 64);
+    let mut ga = Mat::zeros(gm, gk);
+    let mut gw = Mat::zeros(gk, gn);
+    for x in ga.data.iter_mut().chain(&mut gw.data) {
+        *x = rrng.next_f32() * 2.0 - 1.0;
+    }
+    let mut gout = Mat::zeros(gm, gn);
+    b.iter("tensor/i8_vs_f32_gemm/f32 64x576x64", || {
+        ga.matmul_into_threaded(&gw, &mut gout, 1)
+    });
+    let qw = QuantizedMat::quantize_per_channel(&gw);
+    let packed = qw.pack();
+    let mut qa = QuantizedTensor::quantize(&ga);
+    let mut acc: Vec<i32> = Vec::new();
+    b.iter("tensor/i8_vs_f32_gemm/i8 64x576x64", || {
+        qa.requantize(&ga);
+        gemm_i8(&qa, &qw, &mut acc, &mut gout);
+    });
+    b.iter("tensor/i8_vs_f32_gemm/i8_packed 64x576x64", || {
+        qa.requantize(&ga);
+        gemm_i8_packed(&qa, &packed, &mut acc, &mut gout);
     });
 
     // ---- JSON manifest parse ----

@@ -43,6 +43,19 @@ impl QuantMode {
         matches!(self, QuantMode::Mix { .. })
     }
 
+    /// Stable discriminant of the mode *class* (FP32 / INT8 / MIX): shared
+    /// by the simulator's measurement-noise streams, the profiler's cache
+    /// keys, and the hybrid calibration classes, so those keyed structures
+    /// cannot classify the same mode differently.  MIX bit widths are
+    /// deliberately excluded — combine with `bits()` where they matter.
+    pub fn class_id(&self) -> u64 {
+        match self {
+            QuantMode::Fp32 => 0,
+            QuantMode::Int8 => 1,
+            QuantMode::Mix { .. } => 2,
+        }
+    }
+
     pub fn label(&self) -> String {
         match self {
             QuantMode::Fp32 => "FP32".into(),

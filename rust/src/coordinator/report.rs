@@ -135,6 +135,7 @@ mod tests {
             history: vec![],
             base_latency_s: 0.01,
             base_accuracy: 0.95,
+            latency_backend: "sim".into(),
         }
     }
 

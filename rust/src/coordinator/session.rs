@@ -7,7 +7,10 @@ use anyhow::Result;
 use crate::agent::{mapper_for, AgentKind, PruningMapper, QuantizationMapper};
 use crate::compress::DiscretePolicy;
 use crate::eval::{Evaluator, SensitivityConfig, SensitivityTable, Split};
-use crate::hw::{CostModel, HwTarget, LatencySimulator};
+use crate::hw::{
+    CostModel, HwTarget, HybridProvider, LatencyKind, LatencyProvider, LatencySimulator,
+    MeasuredProfiler, ProfilerConfig,
+};
 use crate::model::ModelIr;
 use crate::runtime::{ArtifactRegistry, PjrtRuntime};
 use crate::search::{run_search, PolicyEvaluator, SearchConfig, SearchOutcome, SimEvaluator};
@@ -27,6 +30,13 @@ pub struct SessionOptions {
     pub variant: String,
     pub target_hw: HwTarget,
     pub backend: Backend,
+    /// Latency backend searches score policies with (`--latency`).
+    pub latency: LatencyKind,
+    /// Measurement-harness knobs for the measured/hybrid backends.
+    pub profiler: ProfilerConfig,
+    /// Root of the on-disk profile caches (`<dir>/<target>/<model>.json`);
+    /// None keeps measured profiles in memory only (tests).
+    pub profiles_dir: Option<PathBuf>,
     pub sensitivity: SensitivityConfig,
     /// Cache file for the sensitivity table (skipped when None).
     pub sensitivity_cache: Option<PathBuf>,
@@ -40,6 +50,9 @@ impl SessionOptions {
             variant: variant.to_string(),
             target_hw: HwTarget::cortex_a72(),
             backend: Backend::Pjrt,
+            latency: LatencyKind::Sim,
+            profiler: ProfilerConfig::default(),
+            profiles_dir: Some(crate::profiles_dir()),
             sensitivity: SensitivityConfig::default(),
             sensitivity_cache: Some(
                 crate::results_dir().join(format!("sensitivity_{variant}.json")),
@@ -117,6 +130,40 @@ impl Session {
         LatencySimulator::new(CostModel::new(self.opts.target_hw.clone()), seed)
     }
 
+    /// A measured-kernel profiler for this session's target and model,
+    /// disk-backed when `opts.profiles_dir` is set.
+    pub fn profiler(&self) -> Result<MeasuredProfiler> {
+        let cfg = self.opts.profiler.clone();
+        match &self.opts.profiles_dir {
+            Some(dir) => MeasuredProfiler::with_cache(
+                self.opts.target_hw.clone(),
+                &self.opts.variant,
+                cfg,
+                dir,
+            ),
+            None => Ok(MeasuredProfiler::new(
+                self.opts.target_hw.clone(),
+                &self.opts.variant,
+                cfg,
+            )),
+        }
+    }
+
+    /// The latency backend of this session's searches (`opts.latency`).
+    /// Hybrid providers are calibrated against the default probe set before
+    /// being returned.
+    pub fn latency_provider(&self, seed: u64) -> Result<Box<dyn LatencyProvider>> {
+        match self.opts.latency {
+            LatencyKind::Sim => Ok(Box::new(self.simulator(seed))),
+            LatencyKind::Measured => Ok(Box::new(self.profiler()?)),
+            LatencyKind::Hybrid => {
+                let mut hybrid = HybridProvider::new(self.profiler()?, self.simulator(seed));
+                hybrid.calibrate_default(&self.ir);
+                Ok(Box::new(hybrid))
+            }
+        }
+    }
+
     fn policy_evaluator<'a>(
         &'a self,
         cfg: &SearchConfig,
@@ -142,16 +189,18 @@ impl Session {
     ) -> Result<SearchOutcome> {
         let mapper = mapper_for(cfg.agent);
         let ev = self.policy_evaluator(cfg);
-        let mut sim = self.simulator(cfg.seed ^ 0x5117);
-        run_search(
+        let mut provider = self.latency_provider(cfg.seed ^ 0x5117)?;
+        let out = run_search(
             &self.ir,
             sens_override.unwrap_or(&self.sens),
             ev.as_ref(),
-            &mut sim,
+            provider.as_mut(),
             mapper.as_ref(),
             cfg,
             base,
-        )
+        )?;
+        provider.persist()?;
+        Ok(out)
     }
 
     /// Sweep target compression rates for one agent (Figure 4 series).
@@ -186,7 +235,7 @@ impl Session {
         // paper appendix: the pruning runs use the joint agent's channel
         // rounding so the downstream quantization stays MIX-compatible
         let ev = self.policy_evaluator(&cfg1);
-        let mut sim = self.simulator(cfg1.seed ^ 0x5117);
+        let mut provider = self.latency_provider(cfg1.seed ^ 0x5117)?;
         let first_mapper: Box<dyn crate::agent::PolicyMapper> = match first {
             AgentKind::Pruning => Box::new(PruningMapper::rounded()),
             AgentKind::Quantization => Box::new(QuantizationMapper::default()),
@@ -196,11 +245,12 @@ impl Session {
             &self.ir,
             &self.sens,
             ev.as_ref(),
-            &mut sim,
+            provider.as_mut(),
             first_mapper.as_ref(),
             &cfg1,
             None,
         )?;
+        provider.persist()?;
 
         let second = match first {
             AgentKind::Pruning => AgentKind::Quantization,
@@ -217,16 +267,17 @@ impl Session {
             AgentKind::Joint => unreachable!(),
         };
         let ev2 = self.policy_evaluator(&cfg2);
-        let mut sim2 = self.simulator(cfg2.seed ^ 0x5117);
+        let mut provider2 = self.latency_provider(cfg2.seed ^ 0x5117)?;
         let out2 = run_search(
             &self.ir,
             &self.sens,
             ev2.as_ref(),
-            &mut sim2,
+            provider2.as_mut(),
             second_mapper.as_ref(),
             &cfg2,
             Some(&out1.best_policy),
         )?;
+        provider2.persist()?;
         Ok((out1, out2))
     }
 }
@@ -242,6 +293,8 @@ mod tests {
         let mut opts = SessionOptions::new("tiny");
         opts.backend = Backend::Synthetic;
         opts.sensitivity_cache = None;
+        opts.profiles_dir = None; // tests must not write repo-level caches
+        opts.profiler = ProfilerConfig::fast();
         Session::synthetic(ir, opts)
     }
 
@@ -264,6 +317,24 @@ mod tests {
         let s = session();
         let out = s.search(&fast(AgentKind::Joint, 0.5)).unwrap();
         assert_eq!(out.history.len(), 24);
+        assert!(out.best.latency_s > 0.0);
+        assert_eq!(out.latency_backend, "sim");
+    }
+
+    #[test]
+    fn measured_and_hybrid_backends_run_searches() {
+        let mut s = session();
+        s.opts.latency = LatencyKind::Measured;
+        let mut cfg = fast(AgentKind::Quantization, 0.5);
+        cfg.episodes = 6;
+        cfg.warmup_episodes = 2;
+        let out = s.search(&cfg).unwrap();
+        assert_eq!(out.latency_backend, "measured");
+        assert!(out.best.latency_s > 0.0);
+
+        s.opts.latency = LatencyKind::Hybrid;
+        let out = s.search(&cfg).unwrap();
+        assert_eq!(out.latency_backend, "hybrid");
         assert!(out.best.latency_s > 0.0);
     }
 

@@ -1,6 +1,7 @@
 //! Hardware substrate: an analytical latency simulator of the paper's
 //! target (Raspberry Pi 4B, ARM Cortex-A72, TVM-generated fp32 / int8 /
-//! bit-serial operators).
+//! bit-serial operators) **and** a measured-latency profiler that actually
+//! executes quantized kernels and times them.
 //!
 //! The paper measures each candidate policy's inference latency on the
 //! physical device; this environment has no Pi, so — per the substitution
@@ -8,6 +9,13 @@
 //! exercises the same code path: `LatencySimulator::measure` consumes a
 //! `DiscretePolicy` exactly as TVM would consume the restructured model and
 //! returns a latency scalar with measurement noise (repeat + median).
+//!
+//! Since PR 2 the measurement half is real as well: `MeasuredProfiler`
+//! lowers each layer configuration to the in-tree f32 / i8 / packed-i8 GEMM
+//! kernels (`tensor::quant`) and measures steady-state host latency behind
+//! a versioned on-disk profile cache.  Both backends (plus the calibrated
+//! `HybridProvider`) implement `LatencyProvider`, the pluggable latency
+//! interface of `search::run_search` (`--latency sim|measured|hybrid`).
 //!
 //! The cost model reproduces the qualitative structure the search dynamics
 //! depend on (calibration tests in `cost.rs` / `sim.rs`):
@@ -22,10 +30,16 @@
 
 mod constraints;
 mod cost;
+mod profiler;
+mod provider;
 mod sim;
 mod target;
 
 pub use constraints::mix_supported;
 pub use cost::{CostModel, LayerCost};
+pub use profiler::{
+    MeasuredProfiler, ProfileEntry, ProfilerConfig, ProfilerStats, PROFILE_SCHEMA_VERSION,
+};
+pub use provider::{HybridProvider, LatencyKind, LatencyProvider};
 pub use sim::{LatencySimulator, Measurement};
 pub use target::HwTarget;

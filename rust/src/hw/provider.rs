@@ -1,0 +1,386 @@
+//! The pluggable latency backend of the search loop.
+//!
+//! `LatencyProvider` abstracts "how long does this compressed model take"
+//! so `search::run_search` can consume either the analytical simulator, the
+//! measured-kernel profiler, or the hybrid of the two — selected with
+//! `--latency sim|measured|hybrid` on the CLI.
+//!
+//! The hybrid provider implements the practical middle ground: measuring
+//! every configuration the agent probes is expensive, so it measures a
+//! small calibration set once, fits per-mode scale coefficients to the
+//! analytical `CostModel` by least squares on the relative residuals
+//! (minimizing `sum_i (1 - alpha * sim_i / meas_i)^2`, the estimator that
+//! directly reduces mean relative error), and afterwards answers from the
+//! measured cache when a configuration is known and from the *calibrated*
+//! simulator when it is not.
+
+use anyhow::Result;
+
+use super::profiler::MeasuredProfiler;
+use super::sim::{LatencySimulator, Measurement};
+use crate::compress::{DiscretePolicy, QuantMode};
+use crate::model::{Layer, ModelIr};
+
+/// Latency backend of a policy search.
+pub trait LatencyProvider {
+    /// Deterministic central latency estimate (seconds) — used for the
+    /// reference/base latency a search normalizes against.
+    fn latency(&mut self, ir: &ModelIr, policy: &DiscretePolicy) -> f64;
+
+    /// The per-episode measurement the reward consumes (may carry noise).
+    fn measure(&mut self, ir: &ModelIr, policy: &DiscretePolicy) -> Measurement;
+
+    /// Short backend label for logs and result records.
+    fn backend(&self) -> &'static str;
+
+    /// (hits, misses/measured) of whatever cache the provider keeps.
+    fn cache_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
+    /// Flush any on-disk state (profile caches).  No-op by default.
+    fn persist(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+impl LatencyProvider for LatencySimulator {
+    fn latency(&mut self, ir: &ModelIr, policy: &DiscretePolicy) -> f64 {
+        LatencySimulator::latency(self, ir, policy)
+    }
+
+    fn measure(&mut self, ir: &ModelIr, policy: &DiscretePolicy) -> Measurement {
+        LatencySimulator::measure(self, ir, policy)
+    }
+
+    fn backend(&self) -> &'static str {
+        "sim"
+    }
+
+    fn cache_stats(&self) -> (u64, u64) {
+        LatencySimulator::cache_stats(self)
+    }
+}
+
+impl LatencyProvider for MeasuredProfiler {
+    fn latency(&mut self, ir: &ModelIr, policy: &DiscretePolicy) -> f64 {
+        self.model_latency(ir, policy)
+    }
+
+    fn measure(&mut self, ir: &ModelIr, policy: &DiscretePolicy) -> Measurement {
+        // steady-state trimmed medians are already noise-rejected; the
+        // measurement *is* the estimate
+        let latency_s = self.model_latency(ir, policy);
+        Measurement {
+            latency_s,
+            samples: vec![latency_s],
+        }
+    }
+
+    fn backend(&self) -> &'static str {
+        "measured"
+    }
+
+    fn cache_stats(&self) -> (u64, u64) {
+        let s = self.stats();
+        (s.hits, s.measured)
+    }
+
+    fn persist(&mut self) -> Result<()> {
+        self.save().map(|_| ())
+    }
+}
+
+/// Which latency backend a session should construct.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LatencyKind {
+    /// Analytical cost-model simulator (fast, noise-injected).
+    Sim,
+    /// Real kernel measurements with the profile cache.
+    Measured,
+    /// Measured where cached, least-squares-calibrated simulator elsewhere.
+    Hybrid,
+}
+
+impl LatencyKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sim" | "simulator" => Ok(Self::Sim),
+            "measured" | "profiler" => Ok(Self::Measured),
+            "hybrid" => Ok(Self::Hybrid),
+            other => anyhow::bail!("unknown latency backend '{other}' (sim|measured|hybrid)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Sim => "sim",
+            Self::Measured => "measured",
+            Self::Hybrid => "hybrid",
+        }
+    }
+}
+
+/// Mode classes the hybrid calibration fits one coefficient for (the
+/// `QuantMode::class_id` discriminants: FP32 / INT8 / MIX).
+const CLASSES: usize = 3;
+
+fn mode_class(mode: QuantMode) -> usize {
+    mode.class_id() as usize
+}
+
+/// Measured-where-known, calibrated-analytical elsewhere.
+#[derive(Debug)]
+pub struct HybridProvider {
+    pub profiler: MeasuredProfiler,
+    pub sim: LatencySimulator,
+    /// Per-mode-class multipliers mapping analytical seconds onto measured
+    /// seconds (identity until `calibrate` runs).
+    scales: [f64; CLASSES],
+    calibrated: bool,
+}
+
+impl HybridProvider {
+    pub fn new(profiler: MeasuredProfiler, sim: LatencySimulator) -> Self {
+        Self {
+            profiler,
+            sim,
+            scales: [1.0; CLASSES],
+            calibrated: false,
+        }
+    }
+
+    pub fn is_calibrated(&self) -> bool {
+        self.calibrated
+    }
+
+    /// The fitted per-class coefficients `[fp32, int8, mix]`.
+    pub fn scales(&self) -> [f64; CLASSES] {
+        self.scales
+    }
+
+    /// Calibrated analytical latency of one layer configuration — what the
+    /// hybrid answers when the configuration was never measured.
+    pub fn calibrated_layer_total(
+        &self,
+        l: &Layer,
+        eff_cin: usize,
+        kept: usize,
+        quant: QuantMode,
+    ) -> f64 {
+        let mode = self.sim.cost.effective_mode(l, eff_cin, kept, quant);
+        self.scales[mode_class(mode)] * self.sim.cost.layer_total(l, eff_cin, kept, quant)
+    }
+
+    /// Fit the per-class coefficients against measured samples of every
+    /// distinct layer configuration in `policies` (measuring each through
+    /// the profiler, so the samples also seed the measured cache).
+    ///
+    /// Least squares on relative residuals: with `r_i = sim_i / meas_i`,
+    /// `alpha = sum r_i / sum r_i^2` minimizes
+    /// `sum_i (1 - alpha * r_i)^2` — the squared relative error of the
+    /// calibrated prediction.
+    pub fn calibrate(&mut self, ir: &ModelIr, policies: &[DiscretePolicy]) {
+        let mut seen = std::collections::HashSet::new();
+        let mut num = [0.0f64; CLASSES];
+        let mut den = [0.0f64; CLASSES];
+        for policy in policies {
+            for l in &ir.layers {
+                let cmp = &policy.layers[l.index];
+                let eff_cin = policy.effective_cin(ir, l.index);
+                let mode = self
+                    .sim
+                    .cost
+                    .effective_mode(l, eff_cin, cmp.kept_channels, cmp.quant);
+                if !seen.insert(super::profiler::config_key(l, eff_cin, cmp.kept_channels, mode)) {
+                    continue;
+                }
+                let meas = self
+                    .profiler
+                    .layer_latency(l, eff_cin, cmp.kept_channels, cmp.quant);
+                let sim_t = self
+                    .sim
+                    .cost
+                    .layer_total(l, eff_cin, cmp.kept_channels, cmp.quant);
+                if meas > 0.0 && sim_t > 0.0 {
+                    let r = sim_t / meas;
+                    let c = mode_class(mode);
+                    num[c] += r;
+                    den[c] += r * r;
+                }
+            }
+        }
+        for c in 0..CLASSES {
+            if den[c] > 0.0 {
+                self.scales[c] = num[c] / den[c];
+            }
+        }
+        self.calibrated = true;
+        log::info!(
+            "hybrid calibration: scales fp32={:.3e} int8={:.3e} mix={:.3e}",
+            self.scales[0],
+            self.scales[1],
+            self.scales[2]
+        );
+    }
+
+    /// Calibrate on a small default probe set spanning the mode classes and
+    /// a pruned shape per prunable layer.
+    pub fn calibrate_default(&mut self, ir: &ModelIr) {
+        let reference = DiscretePolicy::reference(ir);
+        let mut int8 = reference.clone();
+        for l in &mut int8.layers {
+            l.quant = QuantMode::Int8;
+        }
+        let mut mix = reference.clone();
+        for l in &mut mix.layers {
+            l.quant = QuantMode::Mix { w_bits: 4, a_bits: 4 };
+        }
+        let mut pruned = reference.clone();
+        for l in ir.layers.iter().filter(|l| l.prunable) {
+            pruned.layers[l.index].kept_channels = (l.cout / 2).max(1);
+        }
+        let mut pruned_int8 = pruned.clone();
+        for l in &mut pruned_int8.layers {
+            l.quant = QuantMode::Int8;
+        }
+        self.calibrate(ir, &[reference, int8, mix, pruned, pruned_int8]);
+    }
+
+    fn layer_latency(&mut self, ir: &ModelIr, policy: &DiscretePolicy, i: usize) -> f64 {
+        let l = &ir.layers[i];
+        let cmp = &policy.layers[i];
+        let eff_cin = policy.effective_cin(ir, i);
+        if let Some(measured) = self.profiler.lookup(l, eff_cin, cmp.kept_channels, cmp.quant) {
+            measured
+        } else {
+            self.calibrated_layer_total(l, eff_cin, cmp.kept_channels, cmp.quant)
+        }
+    }
+}
+
+impl LatencyProvider for HybridProvider {
+    fn latency(&mut self, ir: &ModelIr, policy: &DiscretePolicy) -> f64 {
+        (0..ir.layers.len())
+            .map(|i| self.layer_latency(ir, policy, i))
+            .sum()
+    }
+
+    fn measure(&mut self, ir: &ModelIr, policy: &DiscretePolicy) -> Measurement {
+        let latency_s = LatencyProvider::latency(self, ir, policy);
+        Measurement {
+            latency_s,
+            samples: vec![latency_s],
+        }
+    }
+
+    fn backend(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn cache_stats(&self) -> (u64, u64) {
+        let s = self.profiler.stats();
+        (s.hits, s.measured)
+    }
+
+    fn persist(&mut self) -> Result<()> {
+        self.profiler.save().map(|_| ())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{CostModel, HwTarget, ProfilerConfig};
+    use crate::model::ir::test_fixtures::tiny_meta;
+    use crate::model::ModelIr;
+
+    fn ir() -> ModelIr {
+        ModelIr::from_meta(&tiny_meta()).unwrap()
+    }
+
+    fn hybrid() -> HybridProvider {
+        HybridProvider::new(
+            MeasuredProfiler::new(HwTarget::cortex_a72(), "tiny", ProfilerConfig::fast()),
+            LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 9),
+        )
+    }
+
+    #[test]
+    fn latency_kind_parses() {
+        assert_eq!(LatencyKind::parse("sim").unwrap(), LatencyKind::Sim);
+        assert_eq!(LatencyKind::parse("measured").unwrap(), LatencyKind::Measured);
+        assert_eq!(LatencyKind::parse("hybrid").unwrap(), LatencyKind::Hybrid);
+        assert!(LatencyKind::parse("nope").is_err());
+        assert_eq!(LatencyKind::Hybrid.label(), "hybrid");
+    }
+
+    #[test]
+    fn simulator_satisfies_provider() {
+        let ir = ir();
+        let mut sim = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 3);
+        let p = DiscretePolicy::reference(&ir);
+        let provider: &mut dyn LatencyProvider = &mut sim;
+        let base = provider.latency(&ir, &p);
+        assert!(base > 0.0);
+        let m = provider.measure(&ir, &p);
+        assert!((m.latency_s / base - 1.0).abs() < 0.1);
+        assert_eq!(provider.backend(), "sim");
+    }
+
+    #[test]
+    fn hybrid_uses_measured_when_cached_and_calibrated_sim_otherwise() {
+        let ir = ir();
+        let mut h = hybrid();
+        let reference = DiscretePolicy::reference(&ir);
+        h.calibrate(&ir, &[reference.clone()]);
+        assert!(h.is_calibrated());
+
+        // every reference config was measured during calibration
+        let measured_total: f64 = (0..ir.layers.len())
+            .map(|i| {
+                let l = &ir.layers[i];
+                h.profiler
+                    .lookup(l, reference.effective_cin(&ir, i), l.cout, QuantMode::Fp32)
+                    .expect("calibration must seed the measured cache")
+            })
+            .sum();
+        assert_eq!(LatencyProvider::latency(&mut h, &ir, &reference), measured_total);
+
+        // an unmeasured policy falls back to the calibrated simulator
+        let mut int8 = reference.clone();
+        for l in &mut int8.layers {
+            l.quant = QuantMode::Int8;
+        }
+        let before = h.profiler.stats().measured;
+        let lat = LatencyProvider::latency(&mut h, &ir, &int8);
+        assert_eq!(
+            h.profiler.stats().measured,
+            before,
+            "hybrid latency must never trigger new measurements"
+        );
+        let expected: f64 = ir
+            .layers
+            .iter()
+            .map(|l| {
+                h.calibrated_layer_total(
+                    l,
+                    int8.effective_cin(&ir, l.index),
+                    l.cout,
+                    QuantMode::Int8,
+                )
+            })
+            .sum();
+        assert_eq!(lat, expected);
+    }
+
+    #[test]
+    fn calibration_scales_are_positive_and_finite() {
+        let ir = ir();
+        let mut h = hybrid();
+        h.calibrate_default(&ir);
+        for s in h.scales() {
+            assert!(s.is_finite() && s > 0.0, "scale {s}");
+        }
+    }
+}

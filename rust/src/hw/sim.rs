@@ -3,7 +3,11 @@
 //! `latency()` is the deterministic cost-model sum over the policy's
 //! effective layer configurations.  `measure()` mimics the paper's TVM
 //! remote measurement: N noisy repetitions, median-reduced — so the reward
-//! the agent sees carries realistic measurement jitter.
+//! the agent sees carries realistic measurement jitter.  The jitter is a
+//! pure function of `(seed, ir, policy)`, not of call order: probing the
+//! same configuration twice (or in a different episode order) returns the
+//! identical measurement, which keeps hybrid calibration and tests
+//! reproducible.
 //!
 //! Per-layer costs are memoized keyed by
 //! `(layer_index, effective_cin, kept_channels, quant_mode)`: the episode
@@ -21,6 +25,7 @@ use crate::compress::{DiscretePolicy, QuantMode};
 use crate::model::{LayerKind, ModelIr};
 use crate::util::rng::Pcg64;
 use crate::util::stats::median;
+use crate::util::Fnv1a;
 
 /// One latency measurement (seconds) with its raw samples.
 #[derive(Clone, Debug)]
@@ -75,7 +80,8 @@ pub struct LatencySimulator {
     pub noise_sigma: f64,
     /// Repetitions per measurement (median-reduced).
     pub repeats: usize,
-    rng: Pcg64,
+    /// Seed of the per-`(ir, policy)` measurement-noise streams.
+    seed: u64,
     /// Memoized `layer_cost(..).total()` per layer configuration.  Interior
     /// mutability keeps `latency` at `&self`.
     cache: RefCell<HashMap<CostKey, f64>>,
@@ -90,7 +96,7 @@ impl LatencySimulator {
             cost,
             noise_sigma: 0.01,
             repeats: 5,
-            rng: Pcg64::with_stream(seed, 0x1a7e),
+            seed,
             cache: RefCell::new(HashMap::new()),
             cached_ir: Cell::new(IrFingerprint::default()),
             hits: Cell::new(0),
@@ -120,11 +126,17 @@ impl LatencySimulator {
     }
 
     /// Noisy measurement: repeat + median, like the on-device harness.
-    pub fn measure(&mut self, ir: &ModelIr, policy: &DiscretePolicy) -> Measurement {
+    ///
+    /// The noise stream is derived from `(seed, ir, policy)`, so the result
+    /// is deterministic per configuration and independent of how many
+    /// measurements happened before (call-order invariance — required for
+    /// reproducible hybrid calibration).
+    pub fn measure(&self, ir: &ModelIr, policy: &DiscretePolicy) -> Measurement {
         let base = self.latency(ir, policy);
+        let mut rng = Pcg64::with_stream(self.seed, self.measurement_stream(ir, policy));
         let samples: Vec<f64> = (0..self.repeats)
             .map(|_| {
-                let noise = 1.0 + self.noise_sigma * self.rng.normal();
+                let noise = 1.0 + self.noise_sigma * rng.normal();
                 // measurement noise is one-sided-ish in practice (preemption
                 // only ever slows you down); fold extreme negatives
                 base * noise.max(1.0 - 2.0 * self.noise_sigma)
@@ -172,6 +184,20 @@ impl LatencySimulator {
         let v = self.cost.layer_total(l, eff_cin, cmp.kept_channels, cmp.quant);
         cache.insert(key, v);
         v
+    }
+
+    /// RNG stream id of one `(ir, policy)` measurement: FNV-1a over the IR
+    /// shape fingerprint and every layer's effective configuration.  The
+    /// mode class id keeps INT8 distinct from a hypothetical MIX(8/8).
+    fn measurement_stream(&self, ir: &ModelIr, policy: &DiscretePolicy) -> u64 {
+        let mut h = Fnv1a::seeded(IrFingerprint::of(ir).shape_hash ^ 0x1a7e);
+        for cmp in &policy.layers {
+            h.mix(cmp.kept_channels as u64);
+            h.mix(cmp.quant.class_id());
+            let (wb, ab) = cmp.quant.bits();
+            h.mix(((wb as u64) << 32) | ab as u64);
+        }
+        h.finish()
     }
 
     /// Clear the cache when `ir` differs from the one it was filled against
@@ -247,14 +273,42 @@ mod tests {
     fn measurement_noise_bounded_and_seeded() {
         let (ir, _) = setup();
         let p = DiscretePolicy::reference(&ir);
-        let mut sim1 = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 42);
-        let mut sim2 = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 42);
+        let sim1 = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 42);
+        let sim2 = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 42);
         let base = sim1.latency(&ir, &p);
         let m1 = sim1.measure(&ir, &p);
         let m2 = sim2.measure(&ir, &p);
         assert_eq!(m1.latency_s, m2.latency_s, "seeded determinism");
         assert_eq!(m1.samples.len(), 5);
         assert!((m1.latency_s / base - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn measurement_noise_is_call_order_independent() {
+        let (ir, sim) = setup();
+        let reference = DiscretePolicy::reference(&ir);
+        let mut pruned = reference.clone();
+        pruned.layers[1].kept_channels = 3;
+        let mut quant = reference.clone();
+        for l in &mut quant.layers {
+            l.quant = QuantMode::Int8;
+        }
+
+        // measure in one order...
+        let a1 = sim.measure(&ir, &reference);
+        let b1 = sim.measure(&ir, &pruned);
+        let c1 = sim.measure(&ir, &quant);
+        // ...then the reverse order: per-policy results must be identical
+        let c2 = sim.measure(&ir, &quant);
+        let b2 = sim.measure(&ir, &pruned);
+        let a2 = sim.measure(&ir, &reference);
+        assert_eq!(a1.samples, a2.samples);
+        assert_eq!(b1.samples, b2.samples);
+        assert_eq!(c1.samples, c2.samples);
+
+        // distinct policies still draw distinct noise streams
+        assert_ne!(a1.samples, b1.samples);
+        assert_ne!(b1.samples, c1.samples);
     }
 
     #[test]

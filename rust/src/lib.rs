@@ -44,3 +44,11 @@ pub fn results_dir() -> std::path::PathBuf {
         .map(std::path::PathBuf::from)
         .unwrap_or_else(|_| std::path::PathBuf::from("results"))
 }
+
+/// Default root of the measured-latency profile caches
+/// (`profiles/<target>/<model>.json`, see `hw::MeasuredProfiler`).
+pub fn profiles_dir() -> std::path::PathBuf {
+    std::env::var("GALEN_PROFILES")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("profiles"))
+}

@@ -16,6 +16,7 @@ use galen::agent::AgentKind;
 use galen::compress::DiscretePolicy;
 use galen::coordinator::{policy_report, Backend, ExperimentRecord, Session, SessionOptions};
 use galen::eval::{retrain, RetrainCfg, SensitivityConfig, Split};
+use galen::hw::LatencyKind;
 use galen::search::SearchConfig;
 use galen::util::cli::Cli;
 use galen::util::json::Json;
@@ -74,6 +75,7 @@ fn common_session(args: &galen::util::cli::Args) -> Result<Session> {
     if args.has_flag("paper-sensitivity") {
         opts.sensitivity = SensitivityConfig::paper();
     }
+    opts.latency = LatencyKind::parse(args.get("latency"))?;
     opts.seed = args.get_u64("seed")?;
     Session::open(opts)
 }
@@ -87,6 +89,7 @@ fn base_cli(name: &'static str, about: &'static str) -> Cli {
         .opt("eval-batches", "2", "validation batches per accuracy eval")
         .opt("beta", "-3.0", "reward cost exponent (Eq. 6)")
         .opt("results", "results", "results directory")
+        .opt("latency", "sim", "latency backend: sim|measured|hybrid")
         .opt("config", "", "JSON config file with search overrides (configs/*.json)")
         .flag("synthetic", "synthetic accuracy backend (no PJRT)")
         .flag("paper-sensitivity", "Fig-6 resolution sensitivity probes")
@@ -120,6 +123,7 @@ fn clone_outcome(o: &galen::search::SearchOutcome) -> galen::search::SearchOutco
         history: o.history.clone(),
         base_latency_s: o.base_latency_s,
         base_accuracy: o.base_accuracy,
+        latency_backend: o.latency_backend.clone(),
     }
 }
 
@@ -271,21 +275,39 @@ fn cmd_sensitivity(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_latency(argv: &[String]) -> Result<()> {
-    let cli = base_cli("galen latency", "hardware-simulator latency profile");
+    let cli = base_cli("galen latency", "hardware latency profile (sim or measured)");
     let args = cli.parse_from(argv)?;
     let mut opts = SessionOptions::new(args.get("variant"));
     opts.backend = Backend::Synthetic; // structure only
+    opts.latency = LatencyKind::parse(args.get("latency"))?;
     opts.seed = args.get_u64("seed")?;
     let session = Session::open(opts)?;
-    let sim = session.simulator(1);
     let p = DiscretePolicy::reference(&session.ir);
-    let per_layer = sim.latency_per_layer(&session.ir, &p);
+    // A per-layer profile is either simulated or measured; a hybrid request
+    // degrades to the full measured profile (and says so) rather than
+    // mislabeling measured numbers as calibrated-hybrid output.
+    let (per_layer, backend) = match session.opts.latency {
+        LatencyKind::Sim => (session.simulator(1).latency_per_layer(&session.ir, &p), "sim"),
+        LatencyKind::Measured | LatencyKind::Hybrid => {
+            if session.opts.latency == LatencyKind::Hybrid {
+                log::info!(
+                    "latency profile has no calibrated-fallback path; measuring every layer"
+                );
+            }
+            let mut prof = session.profiler()?;
+            let t = prof.model_latency_per_layer(&session.ir, &p);
+            if let Some(path) = prof.save()? {
+                log::info!("profile cache written to {}", path.display());
+            }
+            (t, "measured")
+        }
+    };
     println!("{:14} {:>12} {:>10}", "layer", "latency", "share");
     let total: f64 = per_layer.iter().sum();
     for (l, t) in session.ir.layers.iter().zip(&per_layer) {
         println!("{:14} {:>9.3} ms {:>9.1}%", l.name, t * 1e3, 100.0 * t / total);
     }
-    println!("total {:.3} ms (fp32 reference)", total * 1e3);
+    println!("total {:.3} ms (fp32 reference, {backend} backend)", total * 1e3);
     Ok(())
 }
 

@@ -5,7 +5,7 @@ use anyhow::Result;
 use crate::agent::{Ddpg, PolicyMapper, StateBuilder, Transition};
 use crate::compress::{DiscretePolicy, QuantMode};
 use crate::eval::SensitivityTable;
-use crate::hw::LatencySimulator;
+use crate::hw::LatencyProvider;
 use crate::model::ModelIr;
 use crate::reward::AbsoluteReward;
 use crate::search::SearchConfig;
@@ -120,6 +120,8 @@ pub struct SearchOutcome {
     pub history: Vec<EpisodeSummary>,
     pub base_latency_s: f64,
     pub base_accuracy: f64,
+    /// Which latency backend scored the search (`sim`/`measured`/`hybrid`).
+    pub latency_backend: String,
 }
 
 impl SearchOutcome {
@@ -133,6 +135,7 @@ impl SearchOutcome {
             ("base_latency_s", Json::num(self.base_latency_s)),
             ("base_accuracy", Json::num(self.base_accuracy)),
             ("relative_latency", Json::num(self.relative_latency())),
+            ("latency_backend", Json::str(self.latency_backend.clone())),
             (
                 "history",
                 Json::Arr(self.history.iter().map(|h| h.to_json()).collect()),
@@ -146,11 +149,15 @@ impl SearchOutcome {
 /// `base` starts episodes from a fixed pre-compressed policy instead of the
 /// reference — the sequential search schemes of the appendix fix one
 /// method's parameters and search the other.
+///
+/// `latency` is the pluggable hardware backend: the analytical simulator,
+/// the measured-kernel profiler, or the calibrated hybrid — the search loop
+/// is agnostic to which one scores the policies.
 pub fn run_search(
     ir: &ModelIr,
     sens: &SensitivityTable,
     evaluator: &dyn PolicyEvaluator,
-    sim: &mut LatencySimulator,
+    latency: &mut dyn LatencyProvider,
     mapper: &dyn PolicyMapper,
     cfg: &SearchConfig,
     base: Option<&DiscretePolicy>,
@@ -161,7 +168,7 @@ pub fn run_search(
     let mut agent = Ddpg::new(sb.dim(), mapper.action_dim(), cfg.ddpg.clone(), cfg.seed);
 
     let reference = DiscretePolicy::reference(ir);
-    let base_latency = sim.latency(ir, &reference);
+    let base_latency = latency.latency(ir, &reference);
     let reward_fn = AbsoluteReward::new(cfg.beta, cfg.target, base_latency);
     let base_accuracy = evaluator.base_accuracy();
 
@@ -186,8 +193,8 @@ pub fn run_search(
 
         // ---- validate the complete policy (paper Fig. 1) ----
         let accuracy = evaluator.accuracy(&policy)?;
-        let latency = sim.measure(ir, &policy).latency_s;
-        let reward = reward_fn.reward(accuracy, latency);
+        let measured = latency.measure(ir, &policy).latency_s;
+        let reward = reward_fn.reward(accuracy, measured);
 
         // ---- shared per-episode reward across all transitions ----
         for t in 0..states.len() {
@@ -216,7 +223,7 @@ pub fn run_search(
             episode: ep,
             reward,
             accuracy,
-            latency_s: latency,
+            latency_s: measured,
             macs: policy.macs(ir),
             bops: policy.bops(ir),
         };
@@ -232,8 +239,8 @@ pub fn run_search(
                 "[{} c={:.2}] ep {ep:4} reward={reward:+.4} acc={accuracy:.4} lat={:.2}ms ({:.1}% of base) sigma={:.3}",
                 mapper.kind().label(),
                 cfg.target,
-                latency * 1e3,
-                100.0 * latency / base_latency,
+                measured * 1e3,
+                100.0 * measured / base_latency,
                 agent.sigma,
             );
         }
@@ -241,9 +248,10 @@ pub fn run_search(
     }
 
     let (best, best_policy) = best.expect("at least one episode");
-    let (hits, misses) = sim.cache_stats();
+    let (hits, misses) = latency.cache_stats();
     log::debug!(
-        "search done: simulator cache {hits} hits / {misses} misses ({:.1}% hit rate)",
+        "search done: {} latency cache {hits} hits / {misses} misses ({:.1}% hit rate)",
+        latency.backend(),
         100.0 * hits as f64 / (hits + misses).max(1) as f64
     );
     Ok(SearchOutcome {
@@ -252,6 +260,7 @@ pub fn run_search(
         history,
         base_latency_s: base_latency,
         base_accuracy,
+        latency_backend: latency.backend().to_string(),
     })
 }
 
@@ -275,7 +284,7 @@ mod tests {
     use super::*;
     use crate::agent::{AgentKind, DdpgConfig, JointMapper, PruningMapper, QuantizationMapper};
     use crate::eval::SensitivityConfig;
-    use crate::hw::{CostModel, HwTarget};
+    use crate::hw::{CostModel, HwTarget, LatencySimulator, MeasuredProfiler, ProfilerConfig};
     use crate::model::ir::test_fixtures::tiny_meta;
     use crate::model::ModelIr;
 
@@ -371,6 +380,31 @@ mod tests {
         assert_eq!(
             out.best_policy.layers[1].kept_channels, 2,
             "pruning from the base policy must survive the quantization run"
+        );
+    }
+
+    #[test]
+    fn search_runs_with_measured_profiler_backend() {
+        // The acceptance path: the episode loop is backend-agnostic, so a
+        // MeasuredProfiler (real kernel timings) drops in for the simulator.
+        let (ir, sens, _) = setup();
+        let ev = SimEvaluator::new(&ir);
+        let mapper = QuantizationMapper::default();
+        let mut cfg = fast_cfg(AgentKind::Quantization, 0.5);
+        cfg.episodes = 6;
+        cfg.warmup_episodes = 2;
+        let mut profiler =
+            MeasuredProfiler::new(HwTarget::cortex_a72(), "tiny", ProfilerConfig::fast());
+        let out = run_search(&ir, &sens, &ev, &mut profiler, &mapper, &cfg, None).unwrap();
+        assert_eq!(out.history.len(), 6);
+        assert_eq!(out.latency_backend, "measured");
+        assert!(out.best.latency_s > 0.0);
+        assert!(out.base_latency_s > 0.0);
+        let stats = profiler.stats();
+        assert!(stats.measured > 0, "the profiler must have timed kernels");
+        assert!(
+            stats.hits > 0,
+            "repeat configurations must be served from the cache"
         );
     }
 

@@ -14,10 +14,13 @@
 //! `GALEN_NUM_THREADS` environment variable caps the worker count
 //! (`util::num_threads`).
 
+pub mod quant;
+
 use crate::util::{num_threads, parallel_row_blocks};
 
 /// K-panel height of the blocked GEMM: a `KC x n` slab of the right-hand
-/// matrix is streamed repeatedly while it is still cache-resident.
+/// matrix is streamed repeatedly while it is still cache-resident.  Shared
+/// with the quantized integer kernels in `quant`.
 const KC: usize = 256;
 
 /// Minimum MAC count before the row-parallel path amortizes its scoped

@@ -1,0 +1,398 @@
+//! Quantized integer GEMM kernels: the executable substrate of the
+//! measured-latency profiler (`hw::profiler`).
+//!
+//! Symmetric i8 quantization — per tensor for activations (dynamic range is
+//! recomputed every call, like the deployed runtime's dynamic quantize) and
+//! per output channel for weights (computed once, offline).  The integer
+//! kernel accumulates i8 x i8 products in i32 and applies the
+//! `a_scale * w_scale[channel]` epilogue into f32, so a quantized layer can
+//! actually *run* and be timed, not just costed analytically.
+//!
+//! Two integer paths share the PR-1 cache-blocked structure (`KC` k-panels,
+//! 4-wide unrolled inner loops, ascending fixed-order accumulation):
+//!
+//! * `gemm_i8` — unpacked row-major RHS, the drop-in analogue of
+//!   `Mat::matmul_into`;
+//! * `gemm_i8_packed` — RHS pre-packed into 4-row interleaved k-panels
+//!   (`PackedRhsI8`), so the inner loop reads each output column's four
+//!   k-contributions from contiguous bytes.  Packing is an offline weight
+//!   transformation, exactly like TVM's bit-serial weight pre-packing.
+//!
+//! Accumulator safety: |q| <= 127, so one product is <= 16129 and a k-deep
+//! sum fits i32 for any k < 2^31 / 16129 ≈ 133k — far beyond any layer here.
+
+use super::{Mat, KC};
+
+/// Symmetric scale for values in [-max_abs, max_abs] onto [-127, 127].
+/// An all-zero tensor gets scale 1.0 (every value quantizes to 0).
+fn scale_for(max_abs: f32) -> f32 {
+    if max_abs == 0.0 {
+        1.0
+    } else {
+        max_abs / 127.0
+    }
+}
+
+fn quantize_slice(src: &[f32], scale: f32, dst: &mut [i8]) {
+    let inv = 1.0 / scale;
+    for (q, &x) in dst.iter_mut().zip(src) {
+        *q = (x * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+}
+
+/// Per-tensor symmetrically quantized activation matrix (row-major).
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i8>,
+    pub scale: f32,
+}
+
+impl QuantizedTensor {
+    /// Dynamic-range quantize: scan for max |x|, then round-to-nearest.
+    pub fn quantize(m: &Mat) -> Self {
+        let mut q = Self {
+            rows: 0,
+            cols: 0,
+            data: Vec::new(),
+            scale: 1.0,
+        };
+        q.requantize(m);
+        q
+    }
+
+    /// Re-quantize in place, reusing the allocation (the per-call dynamic
+    /// quantize of the profiler's timed region).
+    pub fn requantize(&mut self, m: &Mat) {
+        self.rows = m.rows;
+        self.cols = m.cols;
+        self.data.resize(m.data.len(), 0);
+        let max_abs = m.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        self.scale = scale_for(max_abs);
+        quantize_slice(&m.data, self.scale, &mut self.data);
+    }
+
+    pub fn dequantize(&self) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&q| q as f32 * self.scale).collect(),
+        }
+    }
+}
+
+/// Per-output-channel symmetrically quantized weight matrix (row-major,
+/// columns are output channels — the GEMM RHS layout).
+#[derive(Clone, Debug)]
+pub struct QuantizedMat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i8>,
+    /// One scale per column (output channel).
+    pub scales: Vec<f32>,
+}
+
+impl QuantizedMat {
+    pub fn quantize_per_channel(m: &Mat) -> Self {
+        let mut max_abs = vec![0.0f32; m.cols];
+        for i in 0..m.rows {
+            for (mx, &x) in max_abs.iter_mut().zip(m.row(i)) {
+                *mx = mx.max(x.abs());
+            }
+        }
+        let scales: Vec<f32> = max_abs.into_iter().map(scale_for).collect();
+        let mut data = vec![0i8; m.data.len()];
+        for i in 0..m.rows {
+            let row = m.row(i);
+            let qrow = &mut data[i * m.cols..(i + 1) * m.cols];
+            for ((q, &x), &s) in qrow.iter_mut().zip(row).zip(&scales) {
+                *q = (x / s).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        Self {
+            rows: m.rows,
+            cols: m.cols,
+            data,
+            scales,
+        }
+    }
+
+    pub fn dequantize(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let qrow = &self.data[i * self.cols..(i + 1) * self.cols];
+            let orow = out.row_mut(i);
+            for ((o, &q), &s) in orow.iter_mut().zip(qrow).zip(&self.scales) {
+                *o = q as f32 * s;
+            }
+        }
+        out
+    }
+
+    /// Pre-pack into the 4-row interleaved panel layout (offline weight
+    /// transformation for the packed GEMM path).
+    pub fn pack(&self) -> PackedRhsI8 {
+        PackedRhsI8::pack(&self.data, self.rows, self.cols, self.scales.clone())
+    }
+}
+
+/// RHS packed for `gemm_i8_packed`: k-panels of 4 rows, columns interleaved
+/// so the 4 k-contributions of one output column are contiguous.  Tail rows
+/// (k % 4) are zero-padded — zeros are exact no-ops for the accumulation.
+///
+/// Layout: `data[panel * 4n + j * 4 + r] = rhs[(4*panel + r) * n + j]`.
+#[derive(Clone, Debug)]
+pub struct PackedRhsI8 {
+    pub k: usize,
+    pub n: usize,
+    pub data: Vec<i8>,
+    /// Per-column scales carried along from the quantized weights.
+    pub scales: Vec<f32>,
+}
+
+impl PackedRhsI8 {
+    pub fn pack(rhs: &[i8], k: usize, n: usize, scales: Vec<f32>) -> Self {
+        assert_eq!(rhs.len(), k * n, "rhs shape mismatch");
+        assert_eq!(scales.len(), n, "one scale per column");
+        let panels = k.div_ceil(4).max(1);
+        let mut data = vec![0i8; panels * 4 * n];
+        for p in 0..panels {
+            let panel = &mut data[p * 4 * n..(p + 1) * 4 * n];
+            for (j, chunk) in panel.chunks_exact_mut(4).enumerate() {
+                for (r, slot) in chunk.iter_mut().enumerate() {
+                    let row = 4 * p + r;
+                    if row < k {
+                        *slot = rhs[row * n + j];
+                    }
+                }
+            }
+        }
+        Self { k, n, data, scales }
+    }
+}
+
+/// Integer core: `out[m x n] = a[m x k] @ b[k x n]` in i32, row-major i8
+/// operands.  Same i-k-j loop, `KC` k-panels and 4-wide unroll as the f32
+/// `gemm_rows` kernel; per output element the k contributions accumulate in
+/// ascending order in fixed groups of four.
+pub fn gemm_i8_i32(a: &[i8], k: usize, b: &[i8], n: usize, out: &mut [i32]) {
+    out.fill(0);
+    if n == 0 || k == 0 {
+        return;
+    }
+    let m = out.len() / n;
+    for k0 in (0..k).step_by(KC) {
+        let k1 = (k0 + KC).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..i * k + k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            let mut kk = k0;
+            while kk + 4 <= k1 {
+                let a0 = arow[kk] as i32;
+                let a1 = arow[kk + 1] as i32;
+                let a2 = arow[kk + 2] as i32;
+                let a3 = arow[kk + 3] as i32;
+                let b0 = &b[kk * n..(kk + 1) * n];
+                let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+                let b2 = &b[(kk + 2) * n..(kk + 3) * n];
+                let b3 = &b[(kk + 3) * n..(kk + 4) * n];
+                for ((((o, &v0), &v1), &v2), &v3) in
+                    orow.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3)
+                {
+                    *o += a0 * v0 as i32 + a1 * v1 as i32 + a2 * v2 as i32 + a3 * v3 as i32;
+                }
+                kk += 4;
+            }
+            while kk < k1 {
+                let av = arow[kk] as i32;
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv as i32;
+                }
+                kk += 1;
+            }
+        }
+    }
+}
+
+/// Integer core over a packed RHS: bit-identical to `gemm_i8_i32` on the
+/// same logical operands (zero-padded tail rows contribute nothing).
+pub fn gemm_i8_packed_i32(a: &[i8], k: usize, packed: &PackedRhsI8, out: &mut [i32]) {
+    assert_eq!(packed.k, k, "packed k mismatch");
+    let n = packed.n;
+    out.fill(0);
+    if n == 0 || k == 0 {
+        return;
+    }
+    let m = out.len() / n;
+    let panels = k.div_ceil(4);
+    for i in 0..m {
+        let arow = &a[i * k..i * k + k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for p in 0..panels {
+            let k0 = 4 * p;
+            let a0 = arow[k0] as i32;
+            let a1 = if k0 + 1 < k { arow[k0 + 1] as i32 } else { 0 };
+            let a2 = if k0 + 2 < k { arow[k0 + 2] as i32 } else { 0 };
+            let a3 = if k0 + 3 < k { arow[k0 + 3] as i32 } else { 0 };
+            let panel = &packed.data[p * 4 * n..(p + 1) * 4 * n];
+            for (o, q) in orow.iter_mut().zip(panel.chunks_exact(4)) {
+                *o += a0 * q[0] as i32 + a1 * q[1] as i32 + a2 * q[2] as i32 + a3 * q[3] as i32;
+            }
+        }
+    }
+}
+
+/// Quantized GEMM with f32 epilogue: `out = (qa @ qw) * a_scale * w_scale[j]`.
+/// `acc` is the caller-owned i32 accumulator (reused across calls — the
+/// profiler's timed region allocates nothing).
+pub fn gemm_i8(a: &QuantizedTensor, w: &QuantizedMat, acc: &mut Vec<i32>, out: &mut Mat) {
+    assert_eq!(a.cols, w.rows, "gemm_i8 inner dim");
+    let (m, n) = (a.rows, w.cols);
+    acc.clear();
+    acc.resize(m * n, 0);
+    gemm_i8_i32(&a.data, a.cols, &w.data, n, acc);
+    scale_epilogue(acc, a.scale, &w.scales, m, n, out);
+}
+
+/// Packed-RHS variant of `gemm_i8` (same result, packed inner loop).
+pub fn gemm_i8_packed(a: &QuantizedTensor, w: &PackedRhsI8, acc: &mut Vec<i32>, out: &mut Mat) {
+    assert_eq!(a.cols, w.k, "gemm_i8_packed inner dim");
+    let (m, n) = (a.rows, w.n);
+    acc.clear();
+    acc.resize(m * n, 0);
+    gemm_i8_packed_i32(&a.data, a.cols, w, acc);
+    scale_epilogue(acc, a.scale, &w.scales, m, n, out);
+}
+
+fn scale_epilogue(acc: &[i32], a_scale: f32, w_scales: &[f32], m: usize, n: usize, out: &mut Mat) {
+    out.reshape_to(m, n);
+    for i in 0..m {
+        let arow = &acc[i * n..(i + 1) * n];
+        let orow = out.row_mut(i);
+        for ((o, &q), &s) in orow.iter_mut().zip(arow).zip(w_scales) {
+            *o = q as f32 * a_scale * s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_mat(rng: &mut Pcg64, rows: usize, cols: usize, amp: f32) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for x in &mut m.data {
+            *x = (rng.next_f32() * 2.0 - 1.0) * amp;
+        }
+        m
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let mut rng = Pcg64::new(11);
+        let m = random_mat(&mut rng, 9, 13, 4.0);
+        let q = QuantizedTensor::quantize(&m);
+        let back = q.dequantize();
+        let half = q.scale * 0.5 * 1.0001;
+        for (x, y) in m.data.iter().zip(&back.data) {
+            assert!((x - y).abs() <= half, "{x} vs {y} (scale {})", q.scale);
+        }
+    }
+
+    #[test]
+    fn per_channel_roundtrip_error_bounded_per_column() {
+        let mut rng = Pcg64::new(12);
+        let mut m = random_mat(&mut rng, 8, 6, 1.0);
+        // give columns wildly different ranges: per-channel scales must adapt
+        for i in 0..m.rows {
+            for j in 0..m.cols {
+                *m.at_mut(i, j) *= (j + 1) as f32 * 10.0;
+            }
+        }
+        let q = QuantizedMat::quantize_per_channel(&m);
+        let back = q.dequantize();
+        for i in 0..m.rows {
+            for j in 0..m.cols {
+                let tol = q.scales[j] * 0.5 * 1.0001;
+                let (x, y) = (m.at(i, j), back.at(i, j));
+                assert!((x - y).abs() <= tol, "[{i},{j}] {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_tensor_quantizes_cleanly() {
+        let m = Mat::zeros(3, 4);
+        let q = QuantizedTensor::quantize(&m);
+        assert_eq!(q.scale, 1.0);
+        assert!(q.data.iter().all(|&v| v == 0));
+        let qm = QuantizedMat::quantize_per_channel(&m);
+        assert!(qm.scales.iter().all(|&s| s == 1.0));
+        assert_eq!(qm.dequantize(), m);
+    }
+
+    #[test]
+    fn integer_gemm_known_values() {
+        // 2x3 @ 3x2 with small integers: exact check against hand result
+        let a: Vec<i8> = vec![1, 2, 3, 4, 5, 6];
+        let b: Vec<i8> = vec![7, 8, 9, 10, 11, 12];
+        let mut out = vec![0i32; 4];
+        gemm_i8_i32(&a, 3, &b, 2, &mut out);
+        assert_eq!(out, vec![58, 64, 139, 154]);
+    }
+
+    #[test]
+    fn packed_matches_unpacked_across_tail_shapes() {
+        let mut rng = Pcg64::new(21);
+        // k crosses the 4-wide unroll tail (1, 3) and the KC panel (256+5)
+        for &(m, k, n) in &[(3usize, 1usize, 5usize), (4, 3, 2), (2, 261, 7), (5, 8, 1)] {
+            let a: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let b: Vec<i8> = (0..k * n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let packed = PackedRhsI8::pack(&b, k, n, vec![1.0; n]);
+            let mut flat = vec![0i32; m * n];
+            let mut pk = vec![0i32; m * n];
+            gemm_i8_i32(&a, k, &b, n, &mut flat);
+            gemm_i8_packed_i32(&a, k, &packed, &mut pk);
+            assert_eq!(flat, pk, "shape {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn scaled_gemm_matches_f32_on_dequantized_operands() {
+        // The quantized GEMM is *exactly* the f32 GEMM of the dequantized
+        // operands (integer accumulation is exact; the epilogue applies the
+        // scales).  Compare against Mat::matmul of the dequantized matrices.
+        let mut rng = Pcg64::new(31);
+        let a = random_mat(&mut rng, 6, 10, 2.0);
+        let w = random_mat(&mut rng, 10, 5, 0.5);
+        let qa = QuantizedTensor::quantize(&a);
+        let qw = QuantizedMat::quantize_per_channel(&w);
+        let reference = qa.dequantize().matmul(&qw.dequantize());
+
+        let mut acc = Vec::new();
+        let mut out = Mat::zeros(0, 0);
+        gemm_i8(&qa, &qw, &mut acc, &mut out);
+        for (x, y) in out.data.iter().zip(&reference.data) {
+            assert!((x - y).abs() <= 1e-4 * y.abs().max(1.0), "{x} vs {y}");
+        }
+
+        let mut out2 = Mat::zeros(0, 0);
+        gemm_i8_packed(&qa, &qw.pack(), &mut acc, &mut out2);
+        assert_eq!(out.data, out2.data, "packed epilogue must be bit-equal");
+    }
+
+    #[test]
+    fn requantize_reuses_allocation() {
+        let mut rng = Pcg64::new(41);
+        let m = random_mat(&mut rng, 8, 8, 1.0);
+        let mut q = QuantizedTensor::quantize(&m);
+        let ptr = q.data.as_ptr();
+        let m2 = random_mat(&mut rng, 8, 8, 3.0);
+        q.requantize(&m2);
+        assert_eq!(q.data.as_ptr(), ptr);
+        assert!(q.scale > 0.0);
+    }
+}

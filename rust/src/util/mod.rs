@@ -9,6 +9,47 @@ pub mod logging;
 pub mod rng;
 pub mod stats;
 
+/// Incremental FNV-1a 64-bit hasher: the shared primitive behind the
+/// hardware layer's cache keys and fingerprints (`hw::sim` measurement
+/// streams, `hw::profiler` config keys / target fingerprints).  One
+/// implementation, so the keyed structures can never drift apart.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Self(0xcbf2_9ce4_8422_2325)
+    }
+
+    /// Seed with an existing hash value (stream-chaining).
+    pub fn seeded(h: u64) -> Self {
+        Self(h)
+    }
+
+    pub fn mix(&mut self, x: u64) -> &mut Self {
+        self.0 ^= x;
+        self.0 = self.0.wrapping_mul(0x0100_0000_01b3);
+        self
+    }
+
+    pub fn mix_bytes(&mut self, bytes: &[u8]) -> &mut Self {
+        for &b in bytes {
+            self.mix(b as u64);
+        }
+        self
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// Worker count for the parallel compute kernels: the `GALEN_NUM_THREADS`
 /// environment variable when set (>= 1), otherwise the machine's available
 /// parallelism. Read once and cached for the process lifetime.
@@ -152,5 +193,27 @@ mod tests {
     #[test]
     fn num_threads_at_least_one() {
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn fnv1a_separates_sequences_and_orders() {
+        let h = |xs: &[u64]| {
+            let mut f = Fnv1a::new();
+            for &x in xs {
+                f.mix(x);
+            }
+            f.finish()
+        };
+        assert_eq!(h(&[1, 2, 3]), h(&[1, 2, 3]));
+        assert_ne!(h(&[1, 2, 3]), h(&[3, 2, 1]), "order-sensitive");
+        assert_ne!(h(&[1]), h(&[1, 0]), "length-sensitive");
+        let mut a = Fnv1a::new();
+        a.mix_bytes(b"abc");
+        let mut b = Fnv1a::new();
+        for &c in b"abc" {
+            b.mix(c as u64);
+        }
+        assert_eq!(a.finish(), b.finish());
+        assert_eq!(Fnv1a::seeded(Fnv1a::new().finish()).finish(), Fnv1a::new().finish());
     }
 }

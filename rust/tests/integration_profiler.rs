@@ -1,0 +1,228 @@
+//! Measured-latency profiler integration (the PR-2 acceptance criteria):
+//! an end-to-end search scored by real kernel timings, profile-cache reuse
+//! with zero re-measurements, and hybrid calibration reducing the
+//! simulator's relative error on held-out configurations.
+
+use galen::agent::{AgentKind, DdpgConfig, JointMapper, PolicyMapper};
+use galen::compress::DiscretePolicy;
+use galen::eval::{SensitivityConfig, SensitivityTable};
+use galen::hw::{
+    CostModel, HwTarget, HybridProvider, LatencyProvider, LatencySimulator, MeasuredProfiler,
+    ProfilerConfig,
+};
+use galen::model::ir::test_fixtures::tiny_meta;
+use galen::model::ModelIr;
+use galen::search::{run_search, SearchConfig, SimEvaluator};
+use galen::util::rng::Pcg64;
+
+fn ir() -> ModelIr {
+    ModelIr::from_meta(&tiny_meta()).unwrap()
+}
+
+fn fast_profiler() -> MeasuredProfiler {
+    MeasuredProfiler::new(HwTarget::cortex_a72(), "tiny", ProfilerConfig::fast())
+}
+
+fn tmp_profile_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("galen_it_profiles_{tag}_{}", std::process::id()))
+}
+
+/// A small bank of random mapped policies (the joint mapper guarantees they
+/// are runtime-valid).
+fn random_policies(ir: &ModelIr, seed: u64, n: usize) -> Vec<DiscretePolicy> {
+    let mapper = JointMapper::default();
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut p = DiscretePolicy::reference(ir);
+            for i in 0..ir.layers.len() {
+                mapper.apply(
+                    ir,
+                    &mut p,
+                    i,
+                    &[rng.next_f32(), rng.next_f32(), rng.next_f32()],
+                );
+            }
+            p
+        })
+        .collect()
+}
+
+#[test]
+fn search_end_to_end_with_measured_profiler() {
+    let ir = ir();
+    let sens = SensitivityTable::disabled(ir.layers.len(), &SensitivityConfig::default(), "tiny");
+    let ev = SimEvaluator::new(&ir);
+    let mapper = JointMapper::default();
+    let mut cfg = SearchConfig::fast(AgentKind::Joint, 0.4);
+    cfg.episodes = 8;
+    cfg.warmup_episodes = 2;
+    cfg.log_every = 0;
+    cfg.ddpg = DdpgConfig {
+        hidden: (32, 24),
+        batch: 24,
+        replay_capacity: 400,
+        ..Default::default()
+    };
+    let mut profiler = fast_profiler();
+    let out = run_search(&ir, &sens, &ev, &mut profiler, &mapper, &cfg, None).unwrap();
+    assert_eq!(out.history.len(), 8);
+    assert_eq!(out.latency_backend, "measured");
+    assert!(out.base_latency_s > 0.0);
+    assert!(out.best.latency_s > 0.0);
+    assert!(profiler.stats().measured > 0);
+}
+
+#[test]
+fn second_run_hits_profile_cache_with_zero_remeasurements() {
+    let ir = ir();
+    let dir = tmp_profile_dir("roundtrip");
+    let _ = std::fs::remove_dir_all(&dir);
+    let policies = random_policies(&ir, 17, 6);
+
+    // first run: everything must be measured, then persisted
+    let mut first = MeasuredProfiler::with_cache(
+        HwTarget::cortex_a72(),
+        "tiny",
+        ProfilerConfig::fast(),
+        &dir,
+    )
+    .unwrap();
+    let latencies: Vec<f64> = policies
+        .iter()
+        .map(|p| first.model_latency(&ir, p))
+        .collect();
+    assert!(first.stats().measured > 0);
+    let path = first.save().unwrap().expect("disk-backed profiler");
+    assert!(path.exists());
+
+    // second run (fresh process simulated by a fresh profiler): everything
+    // is served from the loaded manifest — zero re-measurements, identical
+    // latencies down to the bit
+    let mut second = MeasuredProfiler::with_cache(
+        HwTarget::cortex_a72(),
+        "tiny",
+        ProfilerConfig::fast(),
+        &dir,
+    )
+    .unwrap();
+    assert_eq!(second.stats().loaded, first.stats().entries);
+    for (p, &expect) in policies.iter().zip(&latencies) {
+        assert_eq!(second.model_latency(&ir, p), expect);
+    }
+    let stats = second.stats();
+    assert_eq!(stats.measured, 0, "cache must satisfy every configuration");
+    assert!(stats.hits > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The paper's target (a Pi 4) and this container's host differ by orders
+/// of magnitude, so the analytical model's *absolute* scale is
+/// systematically wrong against host measurements — which is exactly the
+/// situation hybrid calibration exists for.  The slowed target pins that
+/// systematic offset so the assertion below cannot go flaky when host
+/// speed happens to match the modeled device.
+fn slowed_target() -> HwTarget {
+    let mut t = HwTarget::cortex_a72();
+    t.freq_hz /= 1000.0;
+    t.elemwise_per_sec /= 1000.0;
+    t.pack_per_sec /= 1000.0;
+    t.binary_macs_per_sec /= 1000.0;
+    t.mem_bw /= 1000.0;
+    t.layer_overhead_s *= 1000.0;
+    t
+}
+
+#[test]
+fn hybrid_calibration_reduces_mean_relative_error_on_held_out_configs() {
+    let ir = ir();
+    let sim = LatencySimulator::new(CostModel::new(slowed_target()), 3);
+    let mut hybrid = HybridProvider::new(fast_profiler(), sim);
+
+    // calibrate on one bank of policies...
+    hybrid.calibrate(&ir, &random_policies(&ir, 23, 6));
+    assert!(hybrid.is_calibrated());
+
+    // ...evaluate on a disjoint bank, measuring each held-out layer config
+    // with an independent profiler (so the hybrid's own cache cannot serve
+    // them) and comparing raw vs calibrated analytical predictions.
+    let mut oracle = fast_profiler();
+    let cost = CostModel::new(slowed_target());
+    let mut raw_err = 0.0f64;
+    let mut cal_err = 0.0f64;
+    let mut n = 0u32;
+    for p in random_policies(&ir, 51, 4) {
+        for l in &ir.layers {
+            let cmp = &p.layers[l.index];
+            let eff_cin = p.effective_cin(&ir, l.index);
+            let meas = oracle.layer_latency(l, eff_cin, cmp.kept_channels, cmp.quant);
+            let sim_raw = cost.layer_total(l, eff_cin, cmp.kept_channels, cmp.quant);
+            let sim_cal =
+                hybrid.calibrated_layer_total(l, eff_cin, cmp.kept_channels, cmp.quant);
+            raw_err += (sim_raw - meas).abs() / meas;
+            cal_err += (sim_cal - meas).abs() / meas;
+            n += 1;
+        }
+    }
+    let (raw_err, cal_err) = (raw_err / n as f64, cal_err / n as f64);
+    assert!(
+        cal_err < raw_err,
+        "calibration must reduce mean relative error: raw {raw_err:.3} vs calibrated {cal_err:.3}"
+    );
+}
+
+#[test]
+fn measured_latency_responds_to_compression() {
+    // Compression must reduce *measured* time, not just modeled time: the
+    // pruned/quantized GEMMs are genuinely smaller/cheaper kernels.  Use
+    // aggregate work (the whole fixture model) to stay above timer noise.
+    let ir = ir();
+    let mut prof = MeasuredProfiler::new(
+        HwTarget::cortex_a72(),
+        "tiny",
+        ProfilerConfig {
+            samples: 7,
+            ..ProfilerConfig::fast()
+        },
+    );
+    let reference = DiscretePolicy::reference(&ir);
+    let base = prof.model_latency(&ir, &reference);
+
+    let mut pruned = reference.clone();
+    for l in ir.layers.iter().filter(|l| l.prunable) {
+        pruned.layers[l.index].kept_channels = (l.cout / 4).max(1);
+    }
+    let pruned_t = prof.model_latency(&ir, &pruned);
+    assert!(
+        pruned_t < base,
+        "4x channel pruning must measurably shrink latency: {pruned_t} vs {base}"
+    );
+}
+
+#[test]
+fn provider_trait_objects_are_interchangeable() {
+    // The same driver code runs against all three backends.
+    let ir = ir();
+    let reference = DiscretePolicy::reference(&ir);
+    let sim = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 5);
+    let mut hybrid = HybridProvider::new(
+        fast_profiler(),
+        LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 5),
+    );
+    hybrid.calibrate(&ir, &[reference.clone()]);
+
+    let mut providers: Vec<Box<dyn LatencyProvider>> = vec![
+        Box::new(sim),
+        Box::new(fast_profiler()),
+        Box::new(hybrid),
+    ];
+    let mut seen = Vec::new();
+    for p in providers.iter_mut() {
+        let base = p.latency(&ir, &reference);
+        let m = p.measure(&ir, &reference);
+        assert!(base > 0.0 && m.latency_s > 0.0, "{} backend", p.backend());
+        p.persist().unwrap();
+        seen.push(p.backend());
+    }
+    assert_eq!(seen, vec!["sim", "measured", "hybrid"]);
+}

@@ -7,6 +7,9 @@ use galen::compress::{discretize, select_quant_mode, DiscretePolicy, DiscretizeO
 use galen::hw::{CostModel, HwTarget, LatencySimulator};
 use galen::model::ir::test_fixtures::tiny_meta;
 use galen::model::ModelIr;
+use galen::tensor::quant::{
+    gemm_i8_i32, gemm_i8_packed_i32, PackedRhsI8, QuantizedMat, QuantizedTensor,
+};
 use galen::tensor::Mat;
 use galen::testing::{forall, Config};
 use galen::util::rng::Pcg64;
@@ -148,6 +151,94 @@ fn prop_gemm_thread_count_invariant() {
             a.matmul_t_into_threaded(bt, &mut parallel, *workers);
             if serial != parallel {
                 return Err(format!("matmul_t not deterministic at {workers} workers"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------- quantized GEMM ----
+
+#[test]
+fn prop_i8_quantize_dequantize_roundtrip_bounded() {
+    // Pins the round-trip error contract of symmetric i8 quantization: for
+    // every element, |x - deq(q(x))| <= scale / 2 (round-to-nearest, no
+    // clamping distortion because scale = max|x| / 127).  Holds per tensor
+    // for activations and per column for per-channel weights.
+    forall(
+        Config { cases: 150, ..Default::default() },
+        |rng: &mut Pcg64| {
+            let rows = 1 + rng.below(16);
+            let cols = 1 + rng.below(16);
+            let amp = 10f32.powf(rng.uniform(-3.0, 3.0) as f32);
+            let mut m = Mat::zeros(rows, cols);
+            for x in &mut m.data {
+                *x = (rng.next_f32() * 2.0 - 1.0) * amp;
+            }
+            m
+        },
+        |m| {
+            let qt = QuantizedTensor::quantize(m);
+            let back = qt.dequantize();
+            let tol = qt.scale * 0.5 * (1.0 + 1e-5);
+            for (x, y) in m.data.iter().zip(&back.data) {
+                if (x - y).abs() > tol {
+                    return Err(format!("per-tensor: |{x} - {y}| > {tol}"));
+                }
+            }
+            let qm = QuantizedMat::quantize_per_channel(m);
+            let back = qm.dequantize();
+            for i in 0..m.rows {
+                for j in 0..m.cols {
+                    let tol = qm.scales[j] * 0.5 * (1.0 + 1e-5);
+                    let (x, y) = (m.at(i, j), back.at(i, j));
+                    if (x - y).abs() > tol {
+                        return Err(format!("per-channel [{i},{j}]: |{x} - {y}| > {tol}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_i8_gemm_parity_with_f32_reference_on_exact_values() {
+    // Integer i8 x i8 -> i32 accumulation is exact, and an f32 GEMM over
+    // the same small-integer values is exact too (products <= 16129, sums
+    // well below 2^24) — so the two kernels must agree *bit for bit*, for
+    // shapes crossing the 4-wide unroll tails and the KC k-panel, packed
+    // and unpacked alike.
+    forall(
+        Config { cases: 80, ..Default::default() },
+        |rng: &mut Pcg64| {
+            let m = 1 + rng.below(12);
+            let k = 1 + rng.below(280); // crosses KC=256
+            let n = 1 + rng.below(12);
+            let a: Vec<i8> = (0..m * k).map(|_| rng.below(33) as i8 - 16).collect();
+            let b: Vec<i8> = (0..k * n).map(|_| rng.below(33) as i8 - 16).collect();
+            (m, k, n, a, b)
+        },
+        |(m, k, n, a, b)| {
+            let (m, k, n) = (*m, *k, *n);
+            // f32 reference over the identical integer values
+            let af = Mat::from_vec(m, k, a.iter().map(|&x| x as f32).collect());
+            let bf = Mat::from_vec(k, n, b.iter().map(|&x| x as f32).collect());
+            let reference = af.matmul(&bf);
+
+            let mut flat = vec![0i32; m * n];
+            gemm_i8_i32(a, k, b, n, &mut flat);
+            for (q, &r) in flat.iter().zip(&reference.data) {
+                if *q != r as i32 {
+                    return Err(format!("i8 gemm {q} != f32 reference {r}"));
+                }
+            }
+
+            let packed = PackedRhsI8::pack(b, k, n, vec![1.0; n]);
+            let mut pk = vec![0i32; m * n];
+            gemm_i8_packed_i32(a, k, &packed, &mut pk);
+            if pk != flat {
+                return Err("packed kernel diverges from unpacked".into());
             }
             Ok(())
         },
