@@ -1,0 +1,117 @@
+//! Parallel Pareto-sweep walkthrough: fan a grid of
+//! `(agent, latency target)` searches across worker threads, fold the
+//! outcomes into a dominance-filtered Pareto front, and write the
+//! `sweeps/<target>/<model>.json` artifact.
+//!
+//!     cargo run --release --example pareto_sweep -- --fixture --jobs 4
+//!     cargo run --release --example pareto_sweep -- --variant resnet18s
+//!     cargo run --release --example pareto_sweep -- --fixture --jobs 2 --check
+//!
+//! `--fixture` uses the in-code tiny test IR, so the example runs (and CI
+//! smoke-tests the orchestrator) without `artifacts/` being built.
+//! `--check` re-runs the sweep on 1 worker and asserts the front is
+//! bit-identical — the determinism guarantee of the orchestrator.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+use galen::agent::AgentKind;
+use galen::coordinator::{Backend, Session, SessionOptions};
+use galen::hw::{LatencyKind, ProfilerConfig};
+use galen::model::ir::test_fixtures::tiny_meta;
+use galen::model::ModelIr;
+use galen::search::{SearchConfig, SweepGrid};
+use galen::util::cli::Cli;
+
+fn main() -> Result<()> {
+    galen::util::logging::init(log::LevelFilter::Info);
+    let args = Cli::new("pareto_sweep", "parallel Pareto sweep across agents x targets")
+        .opt("variant", "resnet18s", "model variant")
+        .opt("agents", "pruning,quantization,joint", "agents to sweep")
+        .opt("targets", "0.3,0.5", "latency targets c")
+        .opt("jobs", "0", "worker threads (0 = all cores)")
+        .opt("episodes", "30", "episodes per search job")
+        .opt("latency", "sim", "latency backend: sim|measured|hybrid")
+        .opt("sweeps", "", "Pareto artifact root (default sweeps/, or GALEN_SWEEPS)")
+        .flag("fixture", "use the in-code tiny fixture IR (no artifacts/)")
+        .flag("check", "re-run on 1 worker and assert the identical front")
+        .parse()?;
+
+    let session = if args.has_flag("fixture") {
+        let ir = ModelIr::from_meta(&tiny_meta())?;
+        let mut opts = SessionOptions::new("tiny");
+        opts.backend = Backend::Synthetic;
+        opts.sensitivity_cache = None;
+        opts.profiles_dir = None; // keep fixture runs artifact-free on disk
+        opts.profiler = ProfilerConfig::fast();
+        opts.latency = LatencyKind::parse(args.get("latency"))?;
+        Session::synthetic(ir, opts)
+    } else {
+        let mut opts = SessionOptions::new(args.get("variant"));
+        opts.backend = Backend::Synthetic; // accuracy proxy either way
+        opts.latency = LatencyKind::parse(args.get("latency"))?;
+        Session::open(opts)?
+    };
+
+    let agents = args
+        .get_list("agents")
+        .iter()
+        .map(|s| AgentKind::parse(s))
+        .collect::<Result<Vec<_>>>()?;
+    let targets = args.get_f64_list("targets")?;
+    let grid = SweepGrid::new(agents, targets);
+
+    let mut proto = SearchConfig::fast(AgentKind::Joint, 0.5);
+    proto.episodes = args.get_usize("episodes")?;
+    proto.log_every = 0;
+
+    let jobs = args.get_usize("jobs")?;
+    let report = session.sweep_parallel(&grid, &proto, jobs)?;
+    println!(
+        "{} jobs on {} workers in {:.1}s ({} latency backend)\n",
+        report.outcomes.len(),
+        report.workers,
+        report.wall_s,
+        session.opts.latency.label()
+    );
+    print!("{}", report.job_table());
+    println!(
+        "\nPareto front ({} of {} jobs survive dominance + dedup):\n{}",
+        report.front.points.len(),
+        report.outcomes.len(),
+        report.front.table()
+    );
+
+    let sweeps_root = if args.get("sweeps").is_empty() {
+        galen::sweeps_dir()
+    } else {
+        PathBuf::from(args.get("sweeps"))
+    };
+    let path = session.save_sweep(&report, &sweeps_root)?;
+    println!("sweep artifact: {}", path.display());
+
+    if args.has_flag("check") {
+        if session.opts.latency != LatencyKind::Sim {
+            // measured/hybrid runs re-time kernels with fresh wall-clock
+            // samples, so cross-run bit-identity only holds for `sim`
+            println!(
+                "\ndeterminism check skipped: requires --latency sim \
+                 (measured/hybrid timings differ run to run)"
+            );
+            return Ok(());
+        }
+        println!("\ndeterminism check: re-running on 1 worker ...");
+        let seq = session.sweep_parallel(&grid, &proto, 1)?;
+        anyhow::ensure!(
+            seq.front == report.front,
+            "parallel front diverged from the sequential front"
+        );
+        println!(
+            "OK: {}-worker front is bit-identical to the 1-worker front \
+             ({:.2}x wall-clock)",
+            report.workers,
+            seq.wall_s / report.wall_s
+        );
+    }
+    Ok(())
+}

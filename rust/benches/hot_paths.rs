@@ -7,15 +7,18 @@
 //!   * policy -> runtime-input packing (masks + ℓ1 ranking)
 //!   * JSON parse of a meta manifest
 //!   * i8 vs f32 GEMM (the measured-latency profiler's kernel substrate)
+//!   * parallel sweep orchestrator vs the 1-worker sweep (speedup + the
+//!     front-equality determinism verdict, emitted into the JSON meta)
 //!
 //!     cargo bench --bench hot_paths
 
 mod common;
 
-use galen::agent::{Ddpg, DdpgConfig, JointMapper, PolicyMapper, Transition};
+use galen::agent::{AgentKind, Ddpg, DdpgConfig, JointMapper, PolicyMapper, Transition};
 use galen::bench::Bencher;
 use galen::compress::{DiscretePolicy, PolicyInputs};
-use galen::hw::{CostModel, HwTarget, LatencySimulator};
+use galen::hw::{CostModel, HwTarget, LatencyKind, LatencySimulator, ProfilerConfig};
+use galen::search::{run_sweep, LatencyFactory, SweepGrid};
 use galen::model::ir::test_fixtures::tiny_meta;
 use galen::model::{LayerKind, ModelIr};
 use galen::tensor::quant::{gemm_i8, gemm_i8_packed, QuantizedMat, QuantizedTensor};
@@ -139,13 +142,51 @@ fn main() {
     );
     b.iter("search/episode (synthetic eval)", || {
         let ev = galen::search::SimEvaluator::new(&ir);
-        let mut cfg = galen::search::SearchConfig::fast(galen::agent::AgentKind::Joint, 0.3);
+        let mut cfg = galen::search::SearchConfig::fast(AgentKind::Joint, 0.3);
         cfg.episodes = 1;
         cfg.warmup_episodes = 1;
         cfg.log_every = 0;
         let mut s = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 5);
         galen::search::run_search(&ir, &sens, &ev, &mut s, &mapper, &cfg, None).unwrap()
     });
+
+    // ---- parallel sweep orchestrator: N workers vs 1 on the same grid ----
+    // 6 jobs (3 agents x 2 targets) of deliberately tiny searches: the
+    // section tracks orchestrator throughput (fan-out overhead, shared
+    // latency caches), not search quality.  Fresh factories per run keep
+    // the two runs cache-independent; the speedup and the front-equality
+    // verdict land in BENCH_hot_paths.json's meta block.
+    let mut sweep_proto = galen::search::SearchConfig::fast(AgentKind::Joint, 0.5);
+    sweep_proto.episodes = 8;
+    sweep_proto.warmup_episodes = 3;
+    sweep_proto.log_every = 0;
+    let sweep_grid = SweepGrid::new(
+        vec![AgentKind::Pruning, AgentKind::Quantization, AgentKind::Joint],
+        vec![0.35, 0.6],
+    );
+    let mk_factory = || {
+        LatencyFactory::new(
+            LatencyKind::Sim,
+            HwTarget::cortex_a72(),
+            &ir.variant,
+            ProfilerConfig::fast(),
+            None,
+        )
+    };
+    let sweep_workers = galen::util::num_threads().clamp(2, 4);
+    let seq_report = b.once("sweep/parallel_vs_sequential/1-worker (6 jobs)", || {
+        run_sweep(&ir, &sens, &sweep_grid, &sweep_proto, 1, &mk_factory()).unwrap()
+    });
+    let par_report = b.once(
+        &format!("sweep/parallel_vs_sequential/{sweep_workers}-worker (6 jobs)"),
+        || run_sweep(&ir, &sens, &sweep_grid, &sweep_proto, sweep_workers, &mk_factory()).unwrap(),
+    );
+    let sweep_speedup = seq_report.wall_s / par_report.wall_s;
+    let sweep_fronts_identical = seq_report.front == par_report.front;
+    println!(
+        "sweep orchestrator: {sweep_workers}-worker speedup {sweep_speedup:.2}x, \
+         fronts identical: {sweep_fronts_identical}"
+    );
 
     // ---- i8 vs f32 GEMM (measured-latency profiler kernel substrate) ----
     // 64x576x64 is the im2col shape of a 64->64 3x3 conv at 8x8 spatial —
@@ -192,7 +233,13 @@ fn main() {
     let threads = galen::util::num_threads().to_string();
     b.write_json(
         &json_path,
-        &[("ir", ir_tag), ("gemm_threads", threads)],
+        &[
+            ("ir", ir_tag),
+            ("gemm_threads", threads),
+            ("sweep_workers", sweep_workers.to_string()),
+            ("sweep_parallel_speedup", format!("{sweep_speedup:.3}")),
+            ("sweep_fronts_identical", sweep_fronts_identical.to_string()),
+        ],
     )
     .expect("write BENCH_hot_paths.json");
     println!("\nwrote {}", json_path.display());

@@ -35,18 +35,26 @@ struct OptimizeWorkspace {
     critic_tgt_ws: TrainWorkspace,
 }
 
+/// DDPG hyper-parameters (paper defaults in `Default`).
 #[derive(Clone, Debug)]
 pub struct DdpgConfig {
+    /// Hidden widths of both networks (paper: 400/300).
     pub hidden: (usize, usize),
+    /// Actor Adam learning rate.
     pub actor_lr: f32,
+    /// Critic Adam learning rate.
     pub critic_lr: f32,
+    /// Discount factor.
     pub gamma: f32,
     /// Polyak factor for the target networks.
     pub tau: f32,
+    /// Optimization batch size.
     pub batch: usize,
+    /// Replay buffer capacity (transitions).
     pub replay_capacity: usize,
-    /// Initial exploration noise sigma (Eq. 7) and its per-episode decay.
+    /// Initial exploration noise sigma (Eq. 7).
     pub sigma0: f64,
+    /// Per-episode multiplicative decay of sigma.
     pub sigma_decay: f64,
     /// Moving-average constant for reward normalization.
     pub reward_ema: f64,
@@ -74,17 +82,22 @@ impl Default for DdpgConfig {
 
 /// Actor-critic pair with targets, replay, normalizers and exploration state.
 pub struct Ddpg {
+    /// The hyper-parameters the agent was built with.
     pub cfg: DdpgConfig,
+    /// The policy network.
     pub actor: Mlp,
+    /// The value network.
     pub critic: Mlp,
     actor_target: Mlp,
     critic_target: Mlp,
     actor_opt: Adam,
     critic_opt: Adam,
+    /// Experience replay buffer.
     pub replay: ReplayBuffer,
     state_norm: RunningNorm,
     reward_mean: Ema,
     reward_scale: Ema,
+    /// Current exploration noise sigma (decayed per episode).
     pub sigma: f64,
     rng: Pcg64,
     state_dim: usize,
@@ -93,6 +106,8 @@ pub struct Ddpg {
 }
 
 impl Ddpg {
+    /// A fresh agent for `state_dim`-dimensional states and
+    /// `action_dim`-dimensional actions, seeded deterministically.
     pub fn new(state_dim: usize, action_dim: usize, cfg: DdpgConfig, seed: u64) -> Self {
         let mut rng = Pcg64::with_stream(seed, 0xddb6);
         let (h1, h2) = cfg.hidden;
@@ -130,10 +145,12 @@ impl Ddpg {
         }
     }
 
+    /// Dimension of the states the agent expects.
     pub fn state_dim(&self) -> usize {
         self.state_dim
     }
 
+    /// Dimension of the actions the agent emits.
     pub fn action_dim(&self) -> usize {
         self.action_dim
     }
@@ -165,6 +182,7 @@ impl Ddpg {
             .collect()
     }
 
+    /// Append a transition to the replay buffer.
     pub fn store(&mut self, t: Transition) {
         self.replay.push(t);
     }

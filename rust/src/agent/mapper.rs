@@ -11,14 +11,21 @@ use crate::compress::QuantMode;
 use crate::hw::mix_supported;
 use crate::model::ModelIr;
 
+/// The three agent kinds of the paper (one per compression method plus
+/// the joint agent).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AgentKind {
+    /// Channel-pruning-only agent (1 action per layer).
     Pruning,
+    /// Quantization-only agent (2 actions per layer).
     Quantization,
+    /// Joint pruning + quantization agent (3 actions per layer).
     Joint,
 }
 
 impl AgentKind {
+    /// Parse a CLI label (`pruning`/`quantization`/`joint`, with short
+    /// aliases).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s {
             "pruning" | "prune" => Ok(Self::Pruning),
@@ -28,6 +35,7 @@ impl AgentKind {
         }
     }
 
+    /// Stable lowercase label (CLI, records, artifacts).
     pub fn label(&self) -> &'static str {
         match self {
             Self::Pruning => "pruning",
@@ -37,8 +45,11 @@ impl AgentKind {
     }
 }
 
+/// Action -> policy mapping strategy of one agent kind.
 pub trait PolicyMapper: Send + Sync {
+    /// Which agent kind this mapper implements.
     fn kind(&self) -> AgentKind;
+    /// Length of the action vectors the mapper consumes.
     fn action_dim(&self) -> usize;
     /// Layer indices that get a time step, in forward order.
     fn steps(&self, ir: &ModelIr) -> Vec<usize>;
@@ -49,6 +60,7 @@ pub trait PolicyMapper: Send + Sync {
 /// Pruning agent: one action = channel compression ratio r (Eq. 4).
 #[derive(Clone, Debug)]
 pub struct PruningMapper {
+    /// Channel rounding/minimum rules for discretization.
     pub opts: DiscretizeOpts,
     /// Cap on the pruning ratio (keeps >= (1-max)·cout channels).
     pub max_ratio: f64,
@@ -140,7 +152,9 @@ impl PolicyMapper for QuantizationMapper {
 /// rounds to multiples of 32 so consumers stay bit-serial-compatible.
 #[derive(Clone, Debug)]
 pub struct JointMapper {
+    /// The pruning half (channel-rounded, see `PruningMapper::rounded`).
     pub prune: PruningMapper,
+    /// The quantization half.
     pub quant: QuantizationMapper,
 }
 

@@ -6,23 +6,29 @@ use std::collections::VecDeque;
 use crate::util::rng::Pcg64;
 
 #[derive(Clone, Debug, PartialEq)]
+/// One (s, a, r, s') experience tuple.
 pub struct Transition {
+    /// State the action was taken in.
     pub state: Vec<f32>,
+    /// The action taken.
     pub action: Vec<f32>,
     /// Per-episode shared reward (assigned to every step of the episode).
     pub reward: f32,
+    /// Successor state (zeroed when terminal).
     pub next_state: Vec<f32>,
     /// Last step of the episode (no bootstrap through the terminal).
     pub terminal: bool,
 }
 
 #[derive(Clone, Debug)]
+/// Fixed-capacity ring buffer of transitions with uniform sampling.
 pub struct ReplayBuffer {
     cap: usize,
     items: VecDeque<Transition>,
 }
 
 impl ReplayBuffer {
+    /// An empty buffer holding at most `cap` transitions.
     pub fn new(cap: usize) -> Self {
         assert!(cap > 0);
         Self {
@@ -31,6 +37,7 @@ impl ReplayBuffer {
         }
     }
 
+    /// Append a transition, evicting the oldest at capacity.
     pub fn push(&mut self, t: Transition) {
         if self.items.len() == self.cap {
             self.items.pop_front();
@@ -38,14 +45,17 @@ impl ReplayBuffer {
         self.items.push_back(t);
     }
 
+    /// Number of stored transitions.
     pub fn len(&self) -> usize {
         self.items.len()
     }
 
+    /// Whether the buffer holds no transitions.
     pub fn is_empty(&self) -> bool {
         self.items.is_empty()
     }
 
+    /// Maximum number of stored transitions.
     pub fn capacity(&self) -> usize {
         self.cap
     }

@@ -11,6 +11,7 @@ use crate::eval::SensitivityTable;
 use crate::hw::mix_supported;
 use crate::model::{LayerKind, ModelIr};
 
+/// Assembles the per-layer-step state vectors the agents consume.
 pub struct StateBuilder {
     max_channels: f32,
     total_macs: f64,
@@ -20,6 +21,7 @@ pub struct StateBuilder {
 }
 
 impl StateBuilder {
+    /// A builder for `ir`'s layers with `sens`'s sensitivity features.
     pub fn new(ir: &ModelIr, sens: &SensitivityTable, action_dim: usize) -> Self {
         Self {
             max_channels: ir.layers.iter().map(|l| l.cout).max().unwrap_or(1) as f32,
@@ -30,6 +32,7 @@ impl StateBuilder {
         }
     }
 
+    /// Dimension of the state vectors this builder emits.
     pub fn dim(&self) -> usize {
         13 + self.action_dim + self.sens_dim
     }

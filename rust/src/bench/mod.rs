@@ -10,24 +10,32 @@
 
 use std::time::{Duration, Instant};
 
+/// Raw samples and derived statistics of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchStats {
+    /// Benchmark name.
     pub name: String,
+    /// Wall-clock nanoseconds per sample (each sample batches iterations).
     pub samples: Vec<f64>,
+    /// Iterations batched into each sample.
     pub iters_per_sample: u64,
 }
 
 impl BenchStats {
+    /// Mean nanoseconds per iteration.
     pub fn mean_ns(&self) -> f64 {
         crate::util::stats::mean(&self.samples) / self.iters_per_sample as f64
     }
+    /// Median nanoseconds per iteration.
     pub fn median_ns(&self) -> f64 {
         crate::util::stats::median(&self.samples) / self.iters_per_sample as f64
     }
+    /// 95th-percentile nanoseconds per iteration.
     pub fn p95_ns(&self) -> f64 {
         crate::util::stats::percentile(&self.samples, 95.0) / self.iters_per_sample as f64
     }
 
+    /// One formatted stats row (pairs with `Bencher::header`).
     pub fn report(&self) -> String {
         format!(
             "{:40} {:>12} {:>12} {:>12}",
@@ -39,6 +47,7 @@ impl BenchStats {
     }
 }
 
+/// Human-readable duration from nanoseconds (ns/µs/ms/s).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.1} ns")
@@ -51,9 +60,14 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// The harness driver: collects `BenchStats` per bench and serializes
+/// them (`write_json`).
 pub struct Bencher {
+    /// Samples per microbench.
     pub sample_count: usize,
+    /// Wall-clock target per sample (iterations batch up to this).
     pub target_sample_time: Duration,
+    /// Warmup/calibration budget before sampling.
     pub warmup: Duration,
     results: Vec<BenchStats>,
 }
@@ -65,6 +79,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Default settings (20 samples, 100 ms target per sample).
     pub fn new() -> Self {
         Self {
             sample_count: 20,
@@ -74,6 +89,7 @@ impl Bencher {
         }
     }
 
+    /// Cheaper settings for CI and experiment harnesses.
     pub fn fast() -> Self {
         Self {
             sample_count: 10,
@@ -128,6 +144,7 @@ impl Bencher {
         r
     }
 
+    /// Print the column header `report` rows align with.
     pub fn header() {
         println!(
             "{:40} {:>12} {:>12} {:>12}",
@@ -136,6 +153,7 @@ impl Bencher {
         println!("{}", "-".repeat(80));
     }
 
+    /// Stats of every bench run so far, in order.
     pub fn results(&self) -> &[BenchStats] {
         &self.results
     }

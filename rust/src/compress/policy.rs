@@ -25,12 +25,14 @@ pub struct ContinuousPolicy {
 pub struct LayerCmp {
     /// Output channels kept (== original width when unpruned).
     pub kept_channels: usize,
+    /// Quantization mode of the layer.
     pub quant: QuantMode,
 }
 
 /// A complete discrete compression policy: one `LayerCmp` per IR layer.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DiscretePolicy {
+    /// One compression decision per IR layer, in layer order.
     pub layers: Vec<LayerCmp>,
 }
 

@@ -39,6 +39,7 @@ impl QuantMode {
         }
     }
 
+    /// Whether this is the bit-serial MIX mode.
     pub fn is_mix(&self) -> bool {
         matches!(self, QuantMode::Mix { .. })
     }
@@ -56,6 +57,7 @@ impl QuantMode {
         }
     }
 
+    /// Human-readable label (`FP32`, `INT8`, `MIX(w3/a5)`).
     pub fn label(&self) -> String {
         match self {
             QuantMode::Fp32 => "FP32".into(),

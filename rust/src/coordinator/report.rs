@@ -9,12 +9,16 @@ use crate::util::json::Json;
 
 /// A persisted experiment result: config + outcome (+ policy detail).
 pub struct ExperimentRecord {
+    /// Record name (also the file stem under results/).
     pub name: String,
+    /// The search configuration that produced the outcome.
     pub config: SearchConfig,
+    /// The search result.
     pub outcome: SearchOutcome,
 }
 
 impl ExperimentRecord {
+    /// JSON form (the results/*.json layout).
     pub fn to_json(&self, ir: &ModelIr) -> Json {
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),
@@ -24,6 +28,7 @@ impl ExperimentRecord {
         ])
     }
 
+    /// Write the record to `dir/<name>.json`; returns the path.
     pub fn save(&self, ir: &ModelIr, dir: &std::path::Path) -> Result<std::path::PathBuf> {
         let path = dir.join(format!("{}.json", self.name));
         self.to_json(ir).write_file(&path)?;

@@ -1,6 +1,6 @@
 //! A coordinator session: one model variant on one hardware target.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
@@ -13,7 +13,10 @@ use crate::hw::{
 };
 use crate::model::ModelIr;
 use crate::runtime::{ArtifactRegistry, PjrtRuntime};
-use crate::search::{run_search, PolicyEvaluator, SearchConfig, SearchOutcome, SimEvaluator};
+use crate::search::{
+    run_search, run_sweep, LatencyFactory, PolicyEvaluator, SearchConfig, SearchOutcome,
+    SimEvaluator, SweepGrid, SweepReport,
+};
 
 /// Accuracy backend for searches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -24,11 +27,17 @@ pub enum Backend {
     Synthetic,
 }
 
+/// Everything configurable about a session, with sensible defaults from
+/// `SessionOptions::new`.
 #[derive(Clone, Debug)]
 pub struct SessionOptions {
+    /// Where the AOT artifacts (`meta_*.json`, HLO text, weights) live.
     pub artifacts_dir: PathBuf,
+    /// Model variant (`micro`/`resnet18s`/`resnet18`).
     pub variant: String,
+    /// The hardware target policies are scored against.
     pub target_hw: HwTarget,
+    /// Accuracy backend (real PJRT artifact or synthetic model).
     pub backend: Backend,
     /// Latency backend searches score policies with (`--latency`).
     pub latency: LatencyKind,
@@ -37,13 +46,17 @@ pub struct SessionOptions {
     /// Root of the on-disk profile caches (`<dir>/<target>/<model>.json`);
     /// None keeps measured profiles in memory only (tests).
     pub profiles_dir: Option<PathBuf>,
+    /// Sensitivity-analysis probe grid (Figure 6).
     pub sensitivity: SensitivityConfig,
     /// Cache file for the sensitivity table (skipped when None).
     pub sensitivity_cache: Option<PathBuf>,
+    /// Session seed (forked per subsystem).
     pub seed: u64,
 }
 
 impl SessionOptions {
+    /// Defaults for `variant`: PJRT accuracy, Cortex-A72 target, simulator
+    /// latency, repo-level artifact/profile/result directories.
     pub fn new(variant: &str) -> Self {
         Self {
             artifacts_dir: crate::artifacts_dir(),
@@ -64,10 +77,13 @@ impl SessionOptions {
 
 /// Owns everything a search needs.
 pub struct Session {
+    /// The options the session was opened with.
     pub opts: SessionOptions,
+    /// Structural model description (layer shapes, wiring, policy inputs).
     pub ir: ModelIr,
     /// Present iff backend == Pjrt.
     pub evaluator: Option<Evaluator>,
+    /// The upfront layer-sensitivity table (state features).
     pub sens: SensitivityTable,
 }
 
@@ -126,6 +142,7 @@ impl Session {
         }
     }
 
+    /// An analytical latency simulator for this session's target.
     pub fn simulator(&self, seed: u64) -> LatencySimulator {
         LatencySimulator::new(CostModel::new(self.opts.target_hw.clone()), seed)
     }
@@ -203,8 +220,15 @@ impl Session {
         Ok(out)
     }
 
-    /// Sweep target compression rates for one agent (Figure 4 series).
-    pub fn sweep(&self, agent: AgentKind, targets: &[f64], proto: &SearchConfig) -> Result<Vec<SearchOutcome>> {
+    /// Sweep target compression rates for one agent (Figure 4 series),
+    /// sequentially, with this session's full accuracy backend.  For grids
+    /// across agents *and* targets, prefer `sweep_parallel`.
+    pub fn sweep(
+        &self,
+        agent: AgentKind,
+        targets: &[f64],
+        proto: &SearchConfig,
+    ) -> Result<Vec<SearchOutcome>> {
         let mut out = Vec::with_capacity(targets.len());
         for &c in targets {
             let mut cfg = proto.clone();
@@ -213,6 +237,49 @@ impl Session {
             out.push(self.search(&cfg)?);
         }
         Ok(out)
+    }
+
+    /// A latency-provider factory for this session's backend whose
+    /// providers share cross-worker caches (`search::LatencyFactory`) —
+    /// what `sweep_parallel` hands to each worker.
+    pub fn latency_factory(&self) -> LatencyFactory {
+        LatencyFactory::new(
+            self.opts.latency,
+            self.opts.target_hw.clone(),
+            &self.opts.variant,
+            self.opts.profiler.clone(),
+            self.opts.profiles_dir.clone(),
+        )
+    }
+
+    /// Run the sweep grid in parallel on `workers` threads (0 = all cores)
+    /// and fold the outcomes into a Pareto front.
+    ///
+    /// Jobs are deterministically seeded from `proto.seed` per
+    /// `(agent, target, replicate)` cell, so with the simulator latency
+    /// backend the result is bit-identical for every worker count (the
+    /// measured/hybrid backends are consistent within one sweep but carry
+    /// run-to-run timing jitter).  Accuracy is the deterministic synthetic
+    /// proxy (`search::SimEvaluator`) regardless of this session's
+    /// accuracy backend — the PJRT evaluator is not thread-safe; validate
+    /// chosen front points afterwards via `search`/`validate`.  Latency
+    /// uses this session's `opts.latency` backend with shared caches, so
+    /// concurrent workers reuse each other's measurements.
+    pub fn sweep_parallel(
+        &self,
+        grid: &SweepGrid,
+        proto: &SearchConfig,
+        workers: usize,
+    ) -> Result<SweepReport> {
+        run_sweep(&self.ir, &self.sens, grid, proto, workers, &self.latency_factory())
+    }
+
+    /// Persist a sweep's Pareto front to `dir/<target>/<model>.json`
+    /// (see `search::ParetoFront::save`); returns the path written.
+    pub fn save_sweep(&self, report: &SweepReport, dir: &Path) -> Result<PathBuf> {
+        report
+            .front
+            .save(dir, &self.opts.target_hw.name, &self.opts.variant)
     }
 
     /// Sequential two-stage search (appendix, Figure 5): run `first` to the
@@ -345,6 +412,20 @@ mod tests {
             .sweep(AgentKind::Quantization, &[0.4, 0.6], &fast(AgentKind::Quantization, 0.4))
             .unwrap();
         assert_eq!(outs.len(), 2);
+    }
+
+    #[test]
+    fn sweep_parallel_is_worker_count_invariant() {
+        let s = session();
+        let grid = SweepGrid::new(vec![AgentKind::Quantization], vec![0.4, 0.6]);
+        let mut proto = fast(AgentKind::Quantization, 0.4);
+        proto.episodes = 8;
+        proto.warmup_episodes = 3;
+        let seq = s.sweep_parallel(&grid, &proto, 1).unwrap();
+        let par = s.sweep_parallel(&grid, &proto, 2).unwrap();
+        assert_eq!(seq.outcomes.len(), 2);
+        assert_eq!(seq.front, par.front);
+        assert!(!seq.front.points.is_empty());
     }
 
     #[test]

@@ -13,6 +13,7 @@ use std::collections::BTreeMap;
 use crate::compress::{precompute_rankings, DiscretePolicy, PolicyInputs};
 use crate::runtime::{ArtifactRegistry, DeviceTensors, HostTensor, PjrtRuntime};
 
+/// Which dataset split an evaluation runs on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Split {
     /// Validation split: drives the search reward + sensitivity analysis.
@@ -27,8 +28,12 @@ struct DeviceSplit {
     y: Vec<Vec<i32>>,
 }
 
+/// Accuracy evaluation through the PJRT forward artifact, with model
+/// parameters and dataset batches cached on device.
 pub struct Evaluator {
+    /// The PJRT client everything executes on.
     pub runtime: PjrtRuntime,
+    /// Compiled artifacts + dataset + IR of the variant.
     pub reg: ArtifactRegistry,
     dev_params: DeviceTensors,
     val: DeviceSplit,
@@ -66,6 +71,7 @@ fn batches(
 }
 
 impl Evaluator {
+    /// Upload parameters and dataset batches; precompute channel rankings.
     pub fn new(runtime: PjrtRuntime, reg: ArtifactRegistry) -> Result<Self> {
         let batch = reg.meta.eval_batch;
         ensure!(batch > 0, "eval batch must be positive");
@@ -86,10 +92,12 @@ impl Evaluator {
         })
     }
 
+    /// The artifact's evaluation batch size.
     pub fn batch_size(&self) -> usize {
         self.batch
     }
 
+    /// Number of device-cached batches of `split`.
     pub fn num_batches(&self, split: Split) -> usize {
         match split {
             Split::Val => self.val.x.len(),

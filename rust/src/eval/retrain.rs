@@ -13,10 +13,14 @@ use crate::compress::{DiscretePolicy, PolicyInputs};
 use crate::runtime::HostTensor;
 use crate::util::rng::Pcg64;
 
+/// Fine-tuning schedule.
 #[derive(Clone, Copy, Debug)]
 pub struct RetrainCfg {
+    /// SGD-momentum steps.
     pub steps: usize,
+    /// Learning rate.
     pub lr: f32,
+    /// Batch-order shuffle seed.
     pub seed: u64,
 }
 
@@ -30,8 +34,10 @@ impl Default for RetrainCfg {
     }
 }
 
+/// What `retrain` produced.
 #[derive(Clone, Debug)]
 pub struct RetrainReport {
+    /// Per-step training losses.
     pub losses: Vec<f32>,
     /// Parameters after fine-tuning, full manifest order.
     pub params: Vec<HostTensor>,

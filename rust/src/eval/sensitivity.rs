@@ -54,19 +54,22 @@ impl SensitivityConfig {
 /// One probed point: the CMP value and its measured distortion Ω.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SensitivityProbe {
+    /// The probed CMP value (ratio removed, or bits).
     pub value: f64,
+    /// Measured KL distortion Ω at that value.
     pub omega: f64,
 }
 
 /// Per-layer probe series for each compression method.
 #[derive(Clone, Debug, Default)]
 pub struct SensitivityTable {
+    /// Model variant the table was computed for.
     pub variant: String,
-    /// [layer][probe] — pruning (value = ratio removed).
+    /// `[layer][probe]` — pruning (value = ratio removed).
     pub prune: Vec<Vec<SensitivityProbe>>,
-    /// [layer][probe] — weight quantization (value = bits).
+    /// `[layer][probe]` — weight quantization (value = bits).
     pub quant_w: Vec<Vec<SensitivityProbe>>,
-    /// [layer][probe] — activation quantization (value = bits).
+    /// `[layer][probe]` — activation quantization (value = bits).
     pub quant_a: Vec<Vec<SensitivityProbe>>,
 }
 
@@ -204,6 +207,7 @@ impl SensitivityTable {
     }
 
     // ---------------- (de)serialization ----------------
+    /// JSON form (the sensitivity cache file).
     pub fn to_json(&self) -> Json {
         let series = |s: &Vec<Vec<SensitivityProbe>>| {
             Json::Arr(
@@ -227,6 +231,7 @@ impl SensitivityTable {
         ])
     }
 
+    /// Parse a cached table (inverse of `to_json`).
     pub fn from_json(j: &Json) -> Result<Self> {
         let series = |key: &str| -> Result<Vec<Vec<SensitivityProbe>>> {
             j.req_arr(key)?

@@ -19,25 +19,34 @@ use crate::model::LayerKind;
 /// Cost breakdown of one layer under one configuration (seconds).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct LayerCost {
+    /// Roofline compute term (GEMM / bit-serial).
     pub compute: f64,
+    /// Dynamic quantize/requantize data movement.
     pub quant_overhead: f64,
+    /// Bit-serial activation packing.
     pub pack_overhead: f64,
+    /// Elementwise epilogue (BN, ReLU, residual add).
     pub elementwise: f64,
+    /// Fixed per-operator launch overhead.
     pub launch: f64,
 }
 
 impl LayerCost {
+    /// Sum of all terms (seconds).
     pub fn total(&self) -> f64 {
         self.compute + self.quant_overhead + self.pack_overhead + self.elementwise + self.launch
     }
 }
 
+/// The analytical cost model for one hardware target.
 #[derive(Clone, Debug)]
 pub struct CostModel {
+    /// The device being modeled.
     pub target: HwTarget,
 }
 
 impl CostModel {
+    /// A cost model for `target`.
     pub fn new(target: HwTarget) -> Self {
         Self { target }
     }

@@ -17,6 +17,11 @@
 //! `HybridProvider`) implement `LatencyProvider`, the pluggable latency
 //! interface of `search::run_search` (`--latency sim|measured|hybrid`).
 //!
+//! For parallel sweeps (`search::run_sweep`), both backends accept shared
+//! cross-worker caches (`SharedCostCache` / `SharedProfileCache`) so
+//! concurrent searches reuse each other's per-layer costs and kernel
+//! measurements instead of re-deriving them.
+//!
 //! The cost model reproduces the qualitative structure the search dynamics
 //! depend on (calibration tests in `cost.rs` / `sim.rs`):
 //!
@@ -32,6 +37,7 @@ mod constraints;
 mod cost;
 mod profiler;
 mod provider;
+mod shared;
 mod sim;
 mod target;
 
@@ -40,6 +46,8 @@ pub use cost::{CostModel, LayerCost};
 pub use profiler::{
     MeasuredProfiler, ProfileEntry, ProfilerConfig, ProfilerStats, PROFILE_SCHEMA_VERSION,
 };
+pub(crate) use profiler::sanitize;
 pub use provider::{HybridProvider, LatencyKind, LatencyProvider};
+pub use shared::{SharedCostCache, SharedProfileCache};
 pub use sim::{LatencySimulator, Measurement};
 pub use target::HwTarget;

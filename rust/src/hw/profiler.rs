@@ -29,6 +29,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::cost::CostModel;
+use super::shared::SharedProfileCache;
 use super::target::HwTarget;
 use crate::compress::{DiscretePolicy, QuantMode};
 use crate::model::{Layer, LayerKind, ModelIr};
@@ -123,6 +124,7 @@ pub struct ProfilerStats {
 /// profile cache.  Plugs into the search loop via `hw::LatencyProvider`.
 #[derive(Debug)]
 pub struct MeasuredProfiler {
+    /// Measurement-harness knobs (warmup, samples, re-run policy).
     pub cfg: ProfilerConfig,
     /// Mode-support fallback (MIX -> INT8 -> FP32) mirrors the deployed
     /// runtime, so probing unsupported configurations measures what would
@@ -131,6 +133,9 @@ pub struct MeasuredProfiler {
     model: String,
     cache_path: Option<PathBuf>,
     entries: HashMap<u64, ProfileEntry>,
+    /// Cross-worker measurement cache (sweep orchestrator); consulted after
+    /// the local map, published to after every measurement.
+    shared: Option<SharedProfileCache>,
     hits: u64,
     measured: u64,
     loaded: usize,
@@ -146,11 +151,21 @@ impl MeasuredProfiler {
             model: model.to_string(),
             cache_path: None,
             entries: HashMap::new(),
+            shared: None,
             hits: 0,
             measured: 0,
             loaded: 0,
             dirty: false,
         }
+    }
+
+    /// Attach a cross-worker measurement cache (parallel sweeps): any
+    /// configuration measured by a profiler sharing the handle is reused
+    /// here instead of being re-timed, and the first published measurement
+    /// is canonical for every worker.
+    pub fn with_shared_cache(mut self, cache: SharedProfileCache) -> Self {
+        self.shared = Some(cache);
+        self
     }
 
     /// Profiler backed by `dir/<target>/<model>.json`; loads any existing
@@ -184,10 +199,12 @@ impl MeasuredProfiler {
         Ok(p)
     }
 
+    /// The hardware target whose kernel selection this profiler mirrors.
     pub fn target(&self) -> &HwTarget {
         &self.cost.target
     }
 
+    /// Cache/measurement counters since construction.
     pub fn stats(&self) -> ProfilerStats {
         ProfilerStats {
             hits: self.hits,
@@ -217,20 +234,54 @@ impl MeasuredProfiler {
             self.hits += 1;
             return e.latency_s;
         }
+        if let Some(e) = self.shared.as_ref().and_then(|s| s.get(key)) {
+            // another sweep worker already measured this configuration;
+            // adopt its canonical entry (and persist it with ours)
+            self.hits += 1;
+            self.dirty = true;
+            let latency_s = e.latency_s;
+            self.entries.insert(key, e);
+            return latency_s;
+        }
         let (latency_s, mad_s, samples) = bench_layer(&self.cfg, l, eff_cin, kept, mode, key);
         self.measured += 1;
         self.dirty = true;
-        self.entries.insert(
-            key,
-            ProfileEntry {
-                latency_s,
-                mad_s,
-                samples,
-                layer: l.name.clone(),
-                mode: mode.label(),
-            },
-        );
+        let mut entry = ProfileEntry {
+            latency_s,
+            mad_s,
+            samples,
+            layer: l.name.clone(),
+            mode: mode.label(),
+        };
+        if let Some(shared) = &self.shared {
+            // first publication wins; a racing worker's entry supersedes ours
+            entry = shared.insert_or_get(key, entry);
+        }
+        let latency_s = entry.latency_s;
+        self.entries.insert(key, entry);
         latency_s
+    }
+
+    /// Fold every entry of the attached shared cache into the local map
+    /// (no-op without one).  Returns how many entries were new.  The sweep
+    /// orchestrator calls this once after all workers finish, so a single
+    /// disk-backed profiler can persist the whole sweep's measurements
+    /// without concurrent manifest writes.
+    pub fn absorb_shared(&mut self) -> usize {
+        let Some(shared) = self.shared.clone() else {
+            return 0;
+        };
+        let mut added = 0;
+        for (key, entry) in shared.snapshot() {
+            if let std::collections::hash_map::Entry::Vacant(v) = self.entries.entry(key) {
+                v.insert(entry);
+                added += 1;
+            }
+        }
+        if added > 0 {
+            self.dirty = true;
+        }
+        added
     }
 
     /// Cache-only lookup: no measurement, no counter updates.  Used by the
@@ -360,7 +411,9 @@ pub(crate) fn target_fingerprint(t: &HwTarget) -> u64 {
     h.finish()
 }
 
-fn sanitize(name: &str) -> String {
+/// File-system-safe directory name for a target (shared with the sweep
+/// artifact layout, so `profiles/<target>/` and `sweeps/<target>/` agree).
+pub(crate) fn sanitize(name: &str) -> String {
     name.chars()
         .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '.' { c } else { '-' })
         .collect()
@@ -569,6 +622,27 @@ mod tests {
             config_key(l, l.cin, l.cout, QuantMode::Mix { w_bits: 8, a_bits: 8 }),
             "MIX(8/8) must not collide with INT8"
         );
+    }
+
+    #[test]
+    fn shared_cache_reuses_measurements_across_profilers() {
+        let ir = ir();
+        let shared = SharedProfileCache::new();
+        let mut a = fast_profiler().with_shared_cache(shared.clone());
+        let mut b = fast_profiler().with_shared_cache(shared.clone());
+        let policy = DiscretePolicy::reference(&ir);
+        let ta = a.model_latency(&ir, &policy);
+        assert!(a.stats().measured > 0);
+        assert_eq!(shared.len(), a.stats().entries);
+        // the second profiler re-times nothing and returns identical values
+        let tb = b.model_latency(&ir, &policy);
+        assert_eq!(b.stats().measured, 0, "shared entries must be reused");
+        assert_eq!(ta, tb);
+        // absorb_shared on a fresh profiler imports every sweep measurement
+        let mut c = fast_profiler().with_shared_cache(shared.clone());
+        assert_eq!(c.absorb_shared(), shared.len());
+        assert_eq!(c.stats().entries, shared.len());
+        assert_eq!(c.absorb_shared(), 0, "second absorb adds nothing");
     }
 
     #[test]

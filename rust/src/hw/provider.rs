@@ -103,6 +103,7 @@ pub enum LatencyKind {
 }
 
 impl LatencyKind {
+    /// Parse a CLI label (`sim`/`measured`/`hybrid`, with aliases).
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "sim" | "simulator" => Ok(Self::Sim),
@@ -112,6 +113,7 @@ impl LatencyKind {
         }
     }
 
+    /// Stable lowercase label (CLI, records, logs).
     pub fn label(&self) -> &'static str {
         match self {
             Self::Sim => "sim",
@@ -132,7 +134,9 @@ fn mode_class(mode: QuantMode) -> usize {
 /// Measured-where-known, calibrated-analytical elsewhere.
 #[derive(Debug)]
 pub struct HybridProvider {
+    /// The measured half (answers for known configurations).
     pub profiler: MeasuredProfiler,
+    /// The analytical half (calibrated fallback).
     pub sim: LatencySimulator,
     /// Per-mode-class multipliers mapping analytical seconds onto measured
     /// seconds (identity until `calibrate` runs).
@@ -141,6 +145,7 @@ pub struct HybridProvider {
 }
 
 impl HybridProvider {
+    /// An uncalibrated hybrid of `profiler` and `sim` (scales = 1.0).
     pub fn new(profiler: MeasuredProfiler, sim: LatencySimulator) -> Self {
         Self {
             profiler,
@@ -150,6 +155,7 @@ impl HybridProvider {
         }
     }
 
+    /// Whether `calibrate` has run.
     pub fn is_calibrated(&self) -> bool {
         self.calibrated
     }

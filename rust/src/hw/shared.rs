@@ -1,0 +1,194 @@
+//! Thread-safe shared latency caches for concurrent searches.
+//!
+//! The parallel sweep orchestrator (`search::orchestrator`) runs many
+//! `run_search` jobs at once, each with its own `LatencyProvider`.  Most of
+//! those searches probe overlapping layer configurations, so per-provider
+//! caches would re-derive (simulator) or re-measure (profiler) the same
+//! entries once per worker.  These handles put one `Arc<RwLock<HashMap>>`
+//! behind every provider of a sweep: the first provider to resolve a
+//! configuration publishes it, and every other worker reuses the published
+//! value.
+//!
+//! Sharing never changes results for the analytical simulator — its
+//! per-layer costs are pure functions of the configuration — and for the
+//! measured profiler the first published measurement becomes canonical
+//! (`SharedProfileCache::insert_or_get`), so all workers of one sweep score
+//! a given configuration with the same number.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use super::profiler::ProfileEntry;
+
+/// Shared memo of deterministic per-layer simulator costs, keyed by a hash
+/// of `(IR fingerprint, layer, eff_cin, kept_channels, quant_mode)`.
+///
+/// Cloning the handle shares the underlying map (it is an `Arc`); attach a
+/// clone to each `LatencySimulator` of a sweep via
+/// `LatencySimulator::with_shared_cache`.
+#[derive(Clone, Debug, Default)]
+pub struct SharedCostCache {
+    inner: Arc<RwLock<HashMap<u64, f64>>>,
+}
+
+impl SharedCostCache {
+    /// An empty cache handle.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Published cost for `key`, if any worker has resolved it.
+    pub fn get(&self, key: u64) -> Option<f64> {
+        self.inner.read().expect("shared cost cache poisoned").get(&key).copied()
+    }
+
+    /// Publish a resolved cost.  Values are pure functions of the key, so
+    /// concurrent double-inserts write the same number and either wins.
+    pub fn insert(&self, key: u64, value: f64) {
+        self.inner
+            .write()
+            .expect("shared cost cache poisoned")
+            .insert(key, value);
+    }
+
+    /// Number of published entries.
+    pub fn len(&self) -> usize {
+        self.inner.read().expect("shared cost cache poisoned").len()
+    }
+
+    /// Whether no entry has been published yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Shared measured-profile entries, keyed by the profiler's config hash
+/// (`hw::profiler::config_key`).
+///
+/// Unlike simulator costs, measurements carry timing jitter, so the *first*
+/// published entry is canonical: `insert_or_get` never overwrites, and every
+/// worker that races on the same configuration walks away with the same
+/// `ProfileEntry`.
+#[derive(Clone, Debug, Default)]
+pub struct SharedProfileCache {
+    inner: Arc<RwLock<HashMap<u64, ProfileEntry>>>,
+}
+
+impl SharedProfileCache {
+    /// An empty cache handle.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The canonical entry for `key`, if one was published.
+    pub fn get(&self, key: u64) -> Option<ProfileEntry> {
+        self.inner
+            .read()
+            .expect("shared profile cache poisoned")
+            .get(&key)
+            .cloned()
+    }
+
+    /// Publish `entry` unless some worker beat us to it; returns the
+    /// canonical entry either way.
+    pub fn insert_or_get(&self, key: u64, entry: ProfileEntry) -> ProfileEntry {
+        self.inner
+            .write()
+            .expect("shared profile cache poisoned")
+            .entry(key)
+            .or_insert(entry)
+            .clone()
+    }
+
+    /// A point-in-time copy of every published entry (used to fold a
+    /// sweep's measurements into one disk manifest after the barrier).
+    pub fn snapshot(&self) -> Vec<(u64, ProfileEntry)> {
+        self.inner
+            .read()
+            .expect("shared profile cache poisoned")
+            .iter()
+            .map(|(k, v)| (*k, v.clone()))
+            .collect()
+    }
+
+    /// Number of published entries.
+    pub fn len(&self) -> usize {
+        self.inner.read().expect("shared profile cache poisoned").len()
+    }
+
+    /// Whether no entry has been published yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(latency_s: f64) -> ProfileEntry {
+        ProfileEntry {
+            latency_s,
+            mad_s: 0.0,
+            samples: 1,
+            layer: "l".into(),
+            mode: "FP32".into(),
+        }
+    }
+
+    #[test]
+    fn cost_cache_roundtrip_and_clone_shares() {
+        let a = SharedCostCache::new();
+        let b = a.clone();
+        assert!(a.is_empty());
+        a.insert(7, 1.5);
+        assert_eq!(b.get(7), Some(1.5));
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.get(8), None);
+    }
+
+    #[test]
+    fn profile_cache_first_insert_is_canonical() {
+        let c = SharedProfileCache::new();
+        let first = c.insert_or_get(1, entry(2.0));
+        assert_eq!(first.latency_s, 2.0);
+        // a racing second measurement must NOT displace the canonical one
+        let second = c.insert_or_get(1, entry(3.0));
+        assert_eq!(second.latency_s, 2.0);
+        assert_eq!(c.get(1).unwrap().latency_s, 2.0);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn profile_cache_snapshot_copies_entries() {
+        let c = SharedProfileCache::new();
+        c.insert_or_get(1, entry(1.0));
+        c.insert_or_get(2, entry(2.0));
+        let mut snap = c.snapshot();
+        snap.sort_by_key(|(k, _)| *k);
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].0, 1);
+        assert_eq!(snap[1].1.latency_s, 2.0);
+    }
+
+    #[test]
+    fn concurrent_writers_settle_on_one_value() {
+        let c = SharedProfileCache::new();
+        std::thread::scope(|scope| {
+            for t in 0..8 {
+                let c = c.clone();
+                scope.spawn(move || {
+                    for k in 0..16u64 {
+                        c.insert_or_get(k, entry((t * 100 + k) as f64));
+                    }
+                });
+            }
+        });
+        assert_eq!(c.len(), 16);
+        // every reader agrees with the canonical entry
+        for k in 0..16u64 {
+            let v = c.get(k).unwrap().latency_s;
+            assert_eq!(c.insert_or_get(k, entry(-1.0)).latency_s, v);
+        }
+    }
+}

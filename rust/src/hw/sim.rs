@@ -21,6 +21,7 @@ use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 
 use super::cost::CostModel;
+use super::shared::SharedCostCache;
 use crate::compress::{DiscretePolicy, QuantMode};
 use crate::model::{LayerKind, ModelIr};
 use crate::util::rng::Pcg64;
@@ -30,7 +31,9 @@ use crate::util::Fnv1a;
 /// One latency measurement (seconds) with its raw samples.
 #[derive(Clone, Debug)]
 pub struct Measurement {
+    /// Median-reduced latency estimate (seconds).
     pub latency_s: f64,
+    /// The raw per-repetition samples behind the estimate.
     pub samples: Vec<f64>,
 }
 
@@ -71,6 +74,7 @@ impl IrFingerprint {
     }
 }
 
+/// Analytical whole-model latency simulator (see the module docs).
 #[derive(Clone, Debug)]
 pub struct LatencySimulator {
     /// The analytical cost model.  Mutating it (or its target) requires
@@ -85,12 +89,16 @@ pub struct LatencySimulator {
     /// Memoized `layer_cost(..).total()` per layer configuration.  Interior
     /// mutability keeps `latency` at `&self`.
     cache: RefCell<HashMap<CostKey, f64>>,
+    /// Cross-worker shared memo (sweep orchestrator); consulted after the
+    /// local cache, published to on every analytical evaluation.
+    shared: Option<SharedCostCache>,
     cached_ir: Cell<IrFingerprint>,
     hits: Cell<u64>,
     misses: Cell<u64>,
 }
 
 impl LatencySimulator {
+    /// A simulator over `cost` whose measurement noise is seeded by `seed`.
     pub fn new(cost: CostModel, seed: u64) -> Self {
         Self {
             cost,
@@ -98,10 +106,23 @@ impl LatencySimulator {
             repeats: 5,
             seed,
             cache: RefCell::new(HashMap::new()),
+            shared: None,
             cached_ir: Cell::new(IrFingerprint::default()),
             hits: Cell::new(0),
             misses: Cell::new(0),
         }
+    }
+
+    /// Attach a cross-worker cost cache (parallel sweeps): per-layer costs
+    /// resolved by any simulator sharing the handle are reused here instead
+    /// of re-running the analytical model.  Costs are pure functions of the
+    /// configuration, so sharing cannot change any result — but only share
+    /// between simulators with identical cost models (the shared key does
+    /// not fingerprint the target; `search::LatencyFactory` guarantees
+    /// this by construction).
+    pub fn with_shared_cache(mut self, cache: SharedCostCache) -> Self {
+        self.shared = Some(cache);
+        self
     }
 
     /// Deterministic (noise-free) end-to-end latency of a compressed model.
@@ -148,18 +169,23 @@ impl LatencySimulator {
         }
     }
 
-    /// Drop every memoized layer cost.  Must be called after mutating
-    /// `cost` (the cache cannot observe cost-model changes).
+    /// Drop every *local* memoized layer cost.  Must be called after
+    /// mutating `cost` (the cache cannot observe cost-model changes).  A
+    /// shared sweep cache is deliberately left untouched — other workers'
+    /// views of it stay valid; detach from it instead when the cost model
+    /// diverges.
     pub fn invalidate_cache(&self) {
         self.cache.borrow_mut().clear();
         self.cached_ir.set(IrFingerprint::default());
     }
 
     /// (cache hits, cache misses) since construction / `reset_cache_stats`.
+    /// Shared-cache hits count as hits (no analytical evaluation happened).
     pub fn cache_stats(&self) -> (u64, u64) {
         (self.hits.get(), self.misses.get())
     }
 
+    /// Zero the hit/miss counters (between bench phases).
     pub fn reset_cache_stats(&self) {
         self.hits.set(0);
         self.misses.set(0);
@@ -180,10 +206,38 @@ impl LatencySimulator {
             self.hits.set(self.hits.get() + 1);
             return v;
         }
+        if let Some(shared) = &self.shared {
+            let sk = self.shared_key(i, eff_cin, cmp.kept_channels, cmp.quant);
+            if let Some(v) = shared.get(sk) {
+                // another sweep worker already paid for this configuration
+                self.hits.set(self.hits.get() + 1);
+                cache.insert(key, v);
+                return v;
+            }
+            self.misses.set(self.misses.get() + 1);
+            let v = self.cost.layer_total(l, eff_cin, cmp.kept_channels, cmp.quant);
+            cache.insert(key, v);
+            shared.insert(sk, v);
+            return v;
+        }
         self.misses.set(self.misses.get() + 1);
         let v = self.cost.layer_total(l, eff_cin, cmp.kept_channels, cmp.quant);
         cache.insert(key, v);
         v
+    }
+
+    /// Key of one layer configuration in the cross-worker cache: unlike the
+    /// local `CostKey`, it must also identify the IR (layer indices are only
+    /// meaningful within one model).
+    fn shared_key(&self, i: usize, eff_cin: usize, kept: usize, quant: QuantMode) -> u64 {
+        let mut h = Fnv1a::seeded(self.cached_ir.get().shape_hash ^ 0x5c05_7001);
+        h.mix(i as u64);
+        h.mix(eff_cin as u64);
+        h.mix(kept as u64);
+        h.mix(quant.class_id());
+        let (wb, ab) = quant.bits();
+        h.mix(((wb as u64) << 32) | ab as u64);
+        h.finish()
     }
 
     /// RNG stream id of one `(ir, policy)` measurement: FNV-1a over the IR
@@ -370,6 +424,29 @@ mod tests {
         let (hits, misses) = sim.cache_stats();
         assert!(misses <= 2, "expected <=2 misses, got {misses}");
         assert_eq!(hits + misses, ir.layers.len() as u64);
+    }
+
+    #[test]
+    fn shared_cache_is_parity_preserving_and_reused() {
+        let (ir, _) = setup();
+        let shared = SharedCostCache::new();
+        let a = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 7)
+            .with_shared_cache(shared.clone());
+        let b = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 7)
+            .with_shared_cache(shared.clone());
+        let plain = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 7);
+        let p = DiscretePolicy::reference(&ir);
+
+        let la = a.latency(&ir, &p);
+        assert_eq!(la, plain.latency(&ir, &p), "sharing must not change values");
+        assert!(!shared.is_empty());
+
+        // the second simulator resolves every layer from the shared cache
+        let lb = b.latency(&ir, &p);
+        assert_eq!(la, lb);
+        let (hits, misses) = b.cache_stats();
+        assert_eq!(misses, 0, "all layer costs must come from the shared cache");
+        assert_eq!(hits, ir.layers.len() as u64);
     }
 
     #[test]

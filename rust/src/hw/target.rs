@@ -4,10 +4,14 @@
 //! tests can fabricate alternative devices (e.g. one without quantization
 //! support — the paper's motivation for hardware-specific search).
 
+/// All modeled parameters of one target device.
 #[derive(Clone, Debug)]
 pub struct HwTarget {
+    /// Human-readable device name (also the cache directory name).
     pub name: String,
+    /// Core count.
     pub cores: usize,
+    /// Clock frequency (Hz).
     pub freq_hz: f64,
     /// f32 MACs per cycle per core (NEON 128-bit FMA).
     pub f32_macs_per_cycle: f64,
@@ -23,13 +27,16 @@ pub struct HwTarget {
     pub pack_per_sec: f64,
     /// Sustained memory bandwidth (bytes/s) for cache-miss traffic.
     pub mem_bw: f64,
+    /// L1 data cache per core (bytes).
     pub l1_bytes: usize,
+    /// Shared L2 cache (bytes).
     pub l2_bytes: usize,
     /// Fixed per-operator launch overhead (s) — TVM op call + scheduling.
     pub layer_overhead_s: f64,
     /// Whether the deployed runtime ships quantized kernels at all
     /// (hardware-specific search motivation: some targets do not).
     pub supports_int8: bool,
+    /// Whether the runtime ships the TVM-style bit-serial operators.
     pub supports_bitserial: bool,
 }
 

@@ -7,7 +7,8 @@
 //! * **L3 (this crate)** — the Galen search framework: DDPG agents for
 //!   pruning / quantization / joint compression, the episode loop with
 //!   hardware-latency reward, sensitivity analysis, the embedded-CPU latency
-//!   simulator substrate, and all experiment harnesses.
+//!   simulator substrate, the measured-kernel profiler, the parallel sweep
+//!   orchestrator, and all experiment harnesses.
 //! * **L2/L1 (python/, build-time only)** — the compressible model as a
 //!   policy-parameterized JAX graph whose convolutions lower through a fused
 //!   Pallas quantize-GEMM kernel; AOT-exported to HLO text under
@@ -15,20 +16,78 @@
 //!
 //! Python never runs on the search path: policies are runtime *inputs* of
 //! one compiled artifact (see DESIGN.md "Compression-as-runtime-inputs").
+//!
+//! ## Orientation
+//!
+//! ARCHITECTURE.md at the repository root maps the module graph and the
+//! data flow end to end.  The short version, bottom-up:
+//!
+//! * [`tensor`] — GEMM kernels (f32 blocked/threaded, i8, packed-i8);
+//! * [`nn`] / [`agent`] — MLPs, Adam, replay, and the DDPG agents;
+//! * [`model`] / [`compress`] — the structural IR and compression policies;
+//! * [`hw`] — latency backends behind the pluggable `hw::LatencyProvider`:
+//!   analytical simulator, measured-kernel profiler, calibrated hybrid;
+//! * [`search`] — the episode loop (`search::run_search`) and the parallel
+//!   Pareto-sweep orchestrator (`search::run_sweep`);
+//! * [`coordinator`] — `coordinator::Session` wires it all together and
+//!   persists results; the `galen` binary is a thin CLI over it.
+//!
+//! ## Quick start (no artifacts required)
+//!
+//! ```no_run
+//! use galen::agent::AgentKind;
+//! use galen::coordinator::{Backend, Session, SessionOptions};
+//! use galen::search::{SearchConfig, SweepGrid};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut opts = SessionOptions::new("resnet18s");
+//! opts.backend = Backend::Synthetic; // no PJRT device needed
+//! let session = Session::open(opts)?;
+//!
+//! // one search ...
+//! let outcome = session.search(&SearchConfig::fast(AgentKind::Joint, 0.3))?;
+//! println!("relative latency {:.1}%", outcome.relative_latency() * 100.0);
+//!
+//! // ... or a parallel Pareto sweep across agents x targets
+//! let grid = SweepGrid::new(
+//!     vec![AgentKind::Pruning, AgentKind::Quantization, AgentKind::Joint],
+//!     vec![0.2, 0.4, 0.6],
+//! );
+//! let report = session.sweep_parallel(&grid, &SearchConfig::fast(AgentKind::Joint, 0.3), 0)?;
+//! println!("{}", report.front.table());
+//! # Ok(())
+//! # }
+//! ```
 
+#![warn(missing_docs)]
+
+/// The three RL agents (DDPG core, action->policy mappers, replay, state).
 pub mod agent;
+/// Mini-criterion benchmark harness behind `cargo bench`.
 pub mod bench;
+/// Policy representations and discretization along the mapping chain.
 pub mod compress;
+/// Sessions, experiment protocols, and result records.
 pub mod coordinator;
+/// Accuracy evaluation, retraining, and sensitivity analysis.
 pub mod eval;
+/// Hardware substrate: latency simulator, measured profiler, providers.
 pub mod hw;
+/// Structural model IR and the artifact meta manifests.
 pub mod model;
+/// From-scratch neural-network substrate (MLP + Adam) for the agents.
 pub mod nn;
+/// The absolute reward function (paper Eq. 6).
 pub mod reward;
+/// PJRT runtime: loads and executes the AOT artifacts.
 pub mod runtime;
+/// The episode loop and the parallel sweep orchestrator.
 pub mod search;
+/// Matrix types and the f32/i8/packed-i8 GEMM kernels.
 pub mod tensor;
+/// Property-testing mini-framework (no proptest offline).
 pub mod testing;
+/// Shared substrates: RNG, JSON, GTEN, stats, CLI, logging, threading.
 pub mod util;
 
 /// Repository-root-relative default artifact directory.
@@ -51,4 +110,12 @@ pub fn profiles_dir() -> std::path::PathBuf {
     std::env::var("GALEN_PROFILES")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(|_| std::path::PathBuf::from("profiles"))
+}
+
+/// Default root of the Pareto-sweep artifacts
+/// (`sweeps/<target>/<model>.json`, see `search::ParetoFront`).
+pub fn sweeps_dir() -> std::path::PathBuf {
+    std::env::var("GALEN_SWEEPS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("sweeps"))
 }

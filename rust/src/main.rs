@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!   search       run a policy search (agent, target, episodes, ...)
-//!   sweep        sweep target compression rates (Figure 4 protocol)
+//!   sweep        parallel Pareto sweep across agents x targets (--jobs)
 //!   sequential   prune->quant / quant->prune schemes (Figure 5 protocol)
 //!   sensitivity  compute + print the layer sensitivity table (Figure 6)
 //!   latency      profile the hardware simulator on a model variant
@@ -17,7 +17,7 @@ use galen::compress::DiscretePolicy;
 use galen::coordinator::{policy_report, Backend, ExperimentRecord, Session, SessionOptions};
 use galen::eval::{retrain, RetrainCfg, SensitivityConfig, Split};
 use galen::hw::LatencyKind;
-use galen::search::SearchConfig;
+use galen::search::{SearchConfig, SweepGrid};
 use galen::util::cli::Cli;
 use galen::util::json::Json;
 
@@ -60,14 +60,16 @@ fn usage() -> &'static str {
      \n\
      Commands:\n\
        search       run one policy search (pruning|quantization|joint)\n\
-       sweep        sweep target compression rates (Fig 4)\n\
+       sweep        parallel Pareto sweep across agents x targets (Fig 4)\n\
        sequential   two-stage prune/quant schemes (Fig 5)\n\
        sensitivity  layer sensitivity analysis (Fig 6)\n\
        latency      hardware-simulator latency profile\n\
        validate     evaluate a saved policy json (accuracy, latency, retrain)"
 }
 
-fn common_session(args: &galen::util::cli::Args) -> Result<Session> {
+/// Session options from the shared base-CLI flags (every subcommand's
+/// flags must be wired here exactly once).
+fn session_opts(args: &galen::util::cli::Args) -> Result<SessionOptions> {
     let mut opts = SessionOptions::new(args.get("variant"));
     if args.has_flag("synthetic") {
         opts.backend = Backend::Synthetic;
@@ -77,7 +79,11 @@ fn common_session(args: &galen::util::cli::Args) -> Result<Session> {
     }
     opts.latency = LatencyKind::parse(args.get("latency"))?;
     opts.seed = args.get_u64("seed")?;
-    Session::open(opts)
+    Ok(opts)
+}
+
+fn common_session(args: &galen::util::cli::Args) -> Result<Session> {
+    Session::open(session_opts(args)?)
 }
 
 fn base_cli(name: &'static str, about: &'static str) -> Cli {
@@ -114,17 +120,6 @@ fn mk_config(args: &galen::util::cli::Args, agent: AgentKind, target: f64) -> Re
         cfg.apply_json(&j);
     }
     Ok(cfg)
-}
-
-fn clone_outcome(o: &galen::search::SearchOutcome) -> galen::search::SearchOutcome {
-    galen::search::SearchOutcome {
-        best_policy: o.best_policy.clone(),
-        best: o.best.clone(),
-        history: o.history.clone(),
-        base_latency_s: o.base_latency_s,
-        base_accuracy: o.base_accuracy,
-        latency_backend: o.latency_backend.clone(),
-    }
 }
 
 fn cmd_search(argv: &[String]) -> Result<()> {
@@ -183,46 +178,83 @@ fn cmd_search(argv: &[String]) -> Result<()> {
 }
 
 fn cmd_sweep(argv: &[String]) -> Result<()> {
-    let cli = base_cli("galen sweep", "sweep target compression rates (Fig 4)")
-        .opt("agents", "pruning,quantization,joint", "agents to sweep")
-        .opt("targets", "0.1,0.2,0.3,0.4,0.5,0.6,0.7", "target rates");
+    let cli = base_cli(
+        "galen sweep",
+        "parallel Pareto sweep over agents x targets (Fig 4 protocol)",
+    )
+    .opt("agents", "pruning,quantization,joint", "agents to sweep")
+    .opt("targets", "0.1,0.2,0.3,0.4,0.5,0.6,0.7", "target rates")
+    .opt("jobs", "0", "sweep worker threads (0 = all cores)")
+    .opt("replicates", "1", "independent seeds per (agent, target) cell")
+    .opt("sweeps", "", "Pareto artifact root (default sweeps/, or GALEN_SWEEPS)");
     let args = cli.parse_from(argv)?;
-    let session = common_session(&args)?;
-    let targets = args.get_f64_list("targets")?;
-    println!(
-        "{:16} {:>5} {:>10} {:>10} {:>9}",
-        "agent", "c", "rel.lat", "accuracy", "reward"
-    );
-    for agent_s in args.get_list("agents") {
-        let agent = AgentKind::parse(&agent_s)?;
-        let proto = mk_config(&args, agent, 0.3)?;
-        let outs = session.sweep(agent, &targets, &proto)?;
-        for (c, out) in targets.iter().zip(&outs) {
-            println!(
-                "{:16} {:>5.2} {:>9.1}% {:>9.2}% {:>9.3}",
-                agent.label(),
-                c,
-                out.relative_latency() * 100.0,
-                out.best.accuracy * 100.0,
-                out.best.reward
-            );
-            let rec = ExperimentRecord {
-                name: format!(
-                    "sweep_{}_{}_c{:03}",
-                    session.opts.variant,
-                    agent.label(),
-                    (c * 100.0) as u32
-                ),
-                config: {
-                    let mut cfg = proto.clone();
-                    cfg.target = *c;
-                    cfg
-                },
-                outcome: clone_outcome(out),
-            };
-            rec.save(&session.ir, std::path::Path::new(args.get("results")))?;
-        }
+    // Sweep jobs always score accuracy with the deterministic synthetic
+    // proxy (the PJRT evaluator is not thread-safe), so never pay PJRT
+    // session startup here — validate chosen front points with
+    // `galen search` / `galen validate` afterwards.
+    if !args.has_flag("synthetic") {
+        log::info!(
+            "sweep uses the synthetic accuracy proxy; skipping PJRT setup \
+             (validate front points with `galen search`/`galen validate`)"
+        );
     }
+    let mut opts = session_opts(&args)?;
+    opts.backend = Backend::Synthetic;
+    let session = Session::open(opts)?;
+    let targets = args.get_f64_list("targets")?;
+    let agents = args
+        .get_list("agents")
+        .iter()
+        .map(|s| AgentKind::parse(s))
+        .collect::<Result<Vec<_>>>()?;
+    anyhow::ensure!(!agents.is_empty() && !targets.is_empty(), "empty sweep grid");
+    let proto = mk_config(&args, agents[0], targets[0])?;
+    let grid = SweepGrid::new(agents, targets).with_replicates(args.get_usize("replicates")?);
+
+    let report = session.sweep_parallel(&grid, &proto, args.get_usize("jobs")?)?;
+
+    print!("{}", report.job_table());
+    for o in &report.outcomes {
+        let rec = ExperimentRecord {
+            name: format!(
+                "sweep_{}_{}_c{:03}_{:08x}",
+                session.opts.variant,
+                o.job.agent.label(),
+                (o.job.target * 100.0) as u32,
+                o.job.seed as u32
+            ),
+            config: {
+                let mut cfg = proto.clone();
+                cfg.agent = o.job.agent;
+                cfg.target = o.job.target;
+                cfg.seed = o.job.seed;
+                cfg
+            },
+            outcome: o.outcome.clone(),
+        };
+        rec.save(&session.ir, std::path::Path::new(args.get("results")))?;
+    }
+
+    println!(
+        "\nPareto front ({} of {} jobs survive, accuracy proxy vs relative latency):\n{}",
+        report.front.points.len(),
+        report.outcomes.len(),
+        report.front.table()
+    );
+    let sweeps_root = if args.get("sweeps").is_empty() {
+        galen::sweeps_dir()
+    } else {
+        std::path::PathBuf::from(args.get("sweeps"))
+    };
+    let path = session.save_sweep(&report, &sweeps_root)?;
+    println!("sweep artifact: {}", path.display());
+    println!(
+        "({} jobs on {} workers in {:.1}s, {} latency backend)",
+        report.outcomes.len(),
+        report.workers,
+        report.wall_s,
+        session.opts.latency.label()
+    );
     Ok(())
 }
 

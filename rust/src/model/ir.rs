@@ -7,28 +7,41 @@ use anyhow::{bail, Result};
 
 use super::meta::ModelMeta;
 
+/// Operator class of a compressible layer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LayerKind {
+    /// 2-D convolution.
     Conv,
+    /// Fully-connected layer.
     Linear,
 }
 
 /// One compressible layer of the model (conv or linear).
 #[derive(Clone, Debug)]
 pub struct Layer {
+    /// Position in the IR's layer list.
     pub index: usize,
+    /// Layer name (matches the artifact manifests).
     pub name: String,
+    /// Conv or linear.
     pub kind: LayerKind,
+    /// Input channels (original).
     pub cin: usize,
+    /// Output channels (original).
     pub cout: usize,
+    /// Square kernel extent (1 for linear).
     pub kernel: usize,
+    /// Stride (1 for linear).
     pub stride: usize,
+    /// Input spatial extent (square).
     pub in_spatial: usize,
+    /// Output spatial extent (square).
     pub out_spatial: usize,
     /// Independently prunable (not residual-coupled).
     pub prunable: bool,
     /// Dependency group id (>= 0 couples the layer to a residual stream).
     pub group: i64,
+    /// Whether the conv is depthwise.
     pub depthwise: bool,
 }
 
@@ -75,9 +88,13 @@ impl Layer {
 /// The full compressible-model IR.
 #[derive(Clone, Debug)]
 pub struct ModelIr {
+    /// Model variant name (`micro`/`resnet18s`/...).
     pub variant: String,
+    /// Input image extent (square).
     pub img: usize,
+    /// Classifier output count.
     pub classes: usize,
+    /// Compressible layers in forward order.
     pub layers: Vec<Layer>,
     /// group id -> member layer indices (residual streams).
     pub groups: BTreeMap<i64, Vec<usize>>,
@@ -86,12 +103,16 @@ pub struct ModelIr {
     pub consumers: Vec<Vec<usize>>,
     /// policy-input name -> position in the policy manifest (input packing).
     pub policy_index: BTreeMap<String, usize>,
+    /// Test accuracy of the uncompressed model (from the manifest).
     pub base_test_acc: f64,
+    /// Evaluation batch size of the artifact.
     pub eval_batch: usize,
+    /// Retraining batch size of the artifact.
     pub train_batch: usize,
 }
 
 impl ModelIr {
+    /// Build the IR from a parsed manifest (validates kinds and groups).
     pub fn from_meta(meta: &ModelMeta) -> Result<Self> {
         let mut layers = Vec::with_capacity(meta.layers.len());
         for (i, l) in meta.layers.iter().enumerate() {
@@ -189,6 +210,7 @@ impl ModelIr {
         consumers
     }
 
+    /// Find a layer by its manifest name.
     pub fn layer_by_name(&self, name: &str) -> Option<&Layer> {
         self.layers.iter().find(|l| l.name == name)
     }
@@ -223,6 +245,7 @@ impl ModelIr {
     }
 }
 
+/// Artifact-free test fixtures (also used by benches and examples).
 pub mod test_fixtures {
     //! Artifact-free fixtures: a miniature ResNet-shaped manifest used by
     //! unit tests, property tests and microbenches that must not depend on

@@ -10,41 +10,67 @@ use crate::util::json::Json;
 /// contract (name, shape, position = index in the list).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ManifestEntry {
+    /// Input name (e.g. `stem.w`, `stem.mask`).
     pub name: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Whether retraining updates it.
     pub trainable: bool,
 }
 
 /// Raw layer description straight from the manifest.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MetaLayer {
+    /// Layer name.
     pub name: String,
+    /// `"conv"` or `"linear"`.
     pub kind: String,
+    /// Input channels.
     pub cin: usize,
+    /// Output channels.
     pub cout: usize,
+    /// Square kernel extent.
     pub kernel: usize,
+    /// Stride.
     pub stride: usize,
+    /// Input spatial extent.
     pub in_spatial: usize,
+    /// Output spatial extent.
     pub out_spatial: usize,
+    /// Independently prunable.
     pub prunable: bool,
+    /// Residual dependency group (-1 = none).
     pub group: i64,
+    /// Depthwise convolution flag.
     pub depthwise: bool,
 }
 
 /// Everything `aot.py` recorded about one exported model variant.
 #[derive(Clone, Debug)]
 pub struct ModelMeta {
+    /// Variant name.
     pub variant: String,
+    /// Input image extent.
     pub img: usize,
+    /// Classifier output count.
     pub classes: usize,
+    /// Base channel width.
     pub width: usize,
+    /// Residual blocks per stage.
     pub blocks: Vec<usize>,
+    /// Evaluation batch size.
     pub eval_batch: usize,
+    /// Retraining batch size.
     pub train_batch: usize,
+    /// Test accuracy of the uncompressed model.
     pub base_test_acc: f64,
+    /// Layer descriptions in forward order.
     pub layers: Vec<MetaLayer>,
+    /// Parameter input manifest (artifact argument order).
     pub params: Vec<ManifestEntry>,
+    /// Policy input manifest (artifact argument order).
     pub policy: Vec<ManifestEntry>,
+    /// Indices of trainable parameter entries.
     pub trainable: Vec<usize>,
 }
 

@@ -7,7 +7,9 @@
 //! (paper: "we automatically detect such dependencies ... and do not accept
 //! the prediction of pruning parameters for affected layers").
 
+/// Graph-level IR with MAC/BOP accounting and dependency groups.
 pub mod ir;
+/// Manifest loader (`meta_<variant>.json`).
 pub mod meta;
 
 pub use ir::{Layer, LayerKind, ModelIr};

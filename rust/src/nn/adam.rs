@@ -5,11 +5,16 @@
 use super::mlp::{Mlp, MlpGrads};
 use crate::tensor::Mat;
 
+/// Adam state (first/second moments) for one `Mlp`.
 #[derive(Clone, Debug)]
 pub struct Adam {
+    /// Learning rate.
     pub lr: f32,
+    /// First-moment decay.
     pub beta1: f32,
+    /// Second-moment decay.
     pub beta2: f32,
+    /// Denominator fuzz.
     pub eps: f32,
     t: u64,
     m_w: Vec<Mat>,
@@ -19,6 +24,7 @@ pub struct Adam {
 }
 
 impl Adam {
+    /// Zero-initialized optimizer state shaped like `model`.
     pub fn new(model: &Mlp, lr: f32) -> Self {
         let m_w = model
             .layers
@@ -41,6 +47,7 @@ impl Adam {
         }
     }
 
+    /// Number of steps applied so far.
     pub fn steps(&self) -> u64 {
         self.t
     }

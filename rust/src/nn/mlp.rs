@@ -3,11 +3,16 @@
 use crate::tensor::Mat;
 use crate::util::rng::Pcg64;
 
+/// Elementwise activation functions.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Activation {
+    /// max(0, x).
     Relu,
+    /// 1 / (1 + e^-x).
     Sigmoid,
+    /// tanh(x).
     Tanh,
+    /// Identity (output layers).
     Linear,
 }
 
@@ -43,21 +48,27 @@ impl Activation {
 /// One dense layer: y = act(x W + b), W is [in, out] row-major.
 #[derive(Clone, Debug)]
 pub struct Layer {
+    /// Weight matrix, [in, out] row-major.
     pub w: Mat,
+    /// Bias vector (length out).
     pub b: Vec<f32>,
+    /// Activation applied to the affine output.
     pub act: Activation,
 }
 
 /// Multi-layer perceptron.
 #[derive(Clone, Debug)]
 pub struct Mlp {
+    /// Dense layers, input to output.
     pub layers: Vec<Layer>,
 }
 
 /// Per-layer parameter gradients, same shapes as the parameters.
 #[derive(Clone, Debug)]
 pub struct MlpGrads {
+    /// Weight gradients, per layer.
     pub w: Vec<Mat>,
+    /// Bias gradients, per layer.
     pub b: Vec<Vec<f32>>,
 }
 
@@ -77,7 +88,7 @@ pub struct ForwardCache {
 pub struct TrainWorkspace {
     /// activations[0] = input copy, activations[i+1] = output of layer i.
     pub activations: Vec<Mat>,
-    /// delta[i] = dLoss/d(activations[i]) scratch, same shapes as activations.
+    /// `delta[i] = dLoss/d(activations[i])` scratch, same shapes as activations.
     delta: Vec<Mat>,
     /// Parameter gradients of the most recent `backward_ws` call.
     pub grads: MlpGrads,
@@ -91,6 +102,7 @@ impl Default for TrainWorkspace {
 }
 
 impl TrainWorkspace {
+    /// An empty workspace (buffers grow on first use).
     pub fn new() -> Self {
         Self {
             activations: Vec::new(),
@@ -173,14 +185,17 @@ impl Mlp {
         Self { layers }
     }
 
+    /// Input dimension of the first layer.
     pub fn input_dim(&self) -> usize {
         self.layers[0].w.rows
     }
 
+    /// Output dimension of the last layer.
     pub fn output_dim(&self) -> usize {
         self.layers.last().unwrap().w.cols
     }
 
+    /// Total number of trainable parameters.
     pub fn param_count(&self) -> usize {
         self.layers
             .iter()

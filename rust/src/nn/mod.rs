@@ -6,7 +6,9 @@
 //! with hand-derived backprop (verified against finite differences in the
 //! tests) plus Polyak soft target updates.
 
+/// Adam optimizer over an `Mlp`.
 pub mod adam;
+/// MLP with manual backprop and reusable training workspaces.
 pub mod mlp;
 
 pub use adam::Adam;

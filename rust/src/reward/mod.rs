@@ -17,6 +17,7 @@ pub struct AbsoluteReward {
 }
 
 impl AbsoluteReward {
+    /// A reward for target rate `target` against `base_latency` seconds.
     pub fn new(beta: f64, target: f64, base_latency: f64) -> Self {
         assert!(beta < 0.0, "cost exponent must be negative");
         assert!(target > 0.0 && base_latency > 0.0);
@@ -39,12 +40,16 @@ impl AbsoluteReward {
 /// et al. discuss; regenerable via the reward ablation.
 #[derive(Clone, Copy, Debug)]
 pub struct HardExponentialReward {
+    /// Over-budget penalty exponent (negative).
     pub w: f64,
+    /// Target compression rate c.
     pub target: f64,
+    /// Uncompressed model latency (seconds).
     pub base_latency: f64,
 }
 
 impl HardExponentialReward {
+    /// r(P) for a validated policy.
     pub fn reward(&self, accuracy: f64, latency: f64) -> f64 {
         let budget = self.target * self.base_latency;
         if latency <= budget {

@@ -7,11 +7,14 @@ use anyhow::{bail, Context, Result};
 /// A host-side tensor destined for (or read from) the device.
 #[derive(Clone, Debug, PartialEq)]
 pub struct HostTensor {
+    /// Dimensions, row-major.
     pub shape: Vec<usize>,
+    /// Flat f32 payload.
     pub data: Vec<f32>,
 }
 
 impl HostTensor {
+    /// Wrap a buffer (shape product must match the data length).
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(
             shape.iter().product::<usize>().max(1),
@@ -22,6 +25,7 @@ impl HostTensor {
         Self { shape, data }
     }
 
+    /// A rank-0 tensor holding `v`.
     pub fn scalar(v: f32) -> Self {
         Self {
             shape: vec![],
@@ -29,6 +33,7 @@ impl HostTensor {
         }
     }
 
+    /// Element count (product of dims).
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -37,10 +42,12 @@ impl HostTensor {
 /// The PJRT CPU client.  Cloneable handle (the underlying client is
 /// reference-counted by the xla crate).
 pub struct PjrtRuntime {
+    /// The underlying PJRT client handle.
     pub client: xla::PjRtClient,
 }
 
 impl PjrtRuntime {
+    /// Bring up the PJRT CPU client.
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         log::info!(
@@ -81,12 +88,14 @@ impl PjrtRuntime {
         Ok(DeviceTensors { bufs })
     }
 
+    /// Upload an i32 tensor to the device.
     pub fn upload_i32(&self, data: &[i32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
         self.client
             .buffer_from_host_buffer::<i32>(data, shape, None)
             .map_err(|e| anyhow::anyhow!("uploading i32 tensor: {e:?}"))
     }
 
+    /// Upload one f32 tensor to the device.
     pub fn upload_one(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
         self.client
             .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
@@ -96,13 +105,16 @@ impl PjrtRuntime {
 
 /// Device-resident tensors (uploaded once, used by many executions).
 pub struct DeviceTensors {
+    /// The device buffers, in upload order.
     pub bufs: Vec<xla::PjRtBuffer>,
 }
 
 impl DeviceTensors {
+    /// Number of buffers.
     pub fn len(&self) -> usize {
         self.bufs.len()
     }
+    /// Whether no buffers are held.
     pub fn is_empty(&self) -> bool {
         self.bufs.is_empty()
     }
@@ -111,6 +123,7 @@ impl DeviceTensors {
 /// A compiled artifact.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// Artifact name (diagnostics).
     pub name: String,
 }
 

@@ -13,26 +13,39 @@ use crate::util::gten;
 
 /// Dataset splits exported by aot.py (normalized images + int labels).
 pub struct Dataset {
+    /// Validation images.
     pub val_x: HostTensor,
+    /// Validation labels.
     pub val_y: Vec<i32>,
+    /// Test images.
     pub test_x: HostTensor,
+    /// Test labels.
     pub test_y: Vec<i32>,
+    /// Retraining images.
     pub retrain_x: HostTensor,
+    /// Retraining labels.
     pub retrain_y: Vec<i32>,
 }
 
 /// All artifacts of one model variant.
 pub struct ArtifactRegistry {
+    /// Artifact directory the registry loaded from.
     pub dir: PathBuf,
+    /// Model variant name.
     pub variant: String,
+    /// The parsed manifest.
     pub meta: ModelMeta,
+    /// The structural IR built from the manifest.
     pub ir: ModelIr,
     /// Parameter tensors in manifest order.
     pub params: Vec<HostTensor>,
     /// name -> (shape, data) view of the parameters (ℓ1 ranking etc.).
     pub params_by_name: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+    /// Compiled forward graph.
     pub fwd: Executable,
+    /// Compiled train-step graph (absent for eval-only exports).
     pub train_step: Option<Executable>,
+    /// The exported dataset splits.
     pub dataset: Dataset,
 }
 

@@ -3,8 +3,10 @@
 use crate::agent::{AgentKind, DdpgConfig};
 use crate::util::json::Json;
 
+/// Hyper-parameters of one policy search.
 #[derive(Clone, Debug)]
 pub struct SearchConfig {
+    /// Which agent runs the search.
     pub agent: AgentKind,
     /// Target compression rate c (fraction of the original latency).
     pub target: f64,
@@ -20,13 +22,14 @@ pub struct SearchConfig {
     pub eval_batches: usize,
     /// RNG seed (forked per subsystem).
     pub seed: u64,
+    /// DDPG agent hyper-parameters.
     pub ddpg: DdpgConfig,
-    /// Start from this policy instead of the reference (sequential search
-    /// schemes, paper appendix Fig. 5).
+    /// Log a progress line every N episodes (0 = silent).
     pub log_every: usize,
 }
 
 impl SearchConfig {
+    /// CPU-budget defaults: 120 episodes with a rescaled exploration decay.
     pub fn new(agent: AgentKind, target: f64) -> Self {
         let mut ddpg = DdpgConfig::default();
         // The paper's sigma decay (0.95/episode) is tuned for 310-410
@@ -120,6 +123,7 @@ impl SearchConfig {
         }
     }
 
+    /// JSON form (the `config` block of a result record).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("agent", Json::str(self.agent.label())),

@@ -15,6 +15,7 @@ use crate::util::json::Json;
 /// PJRT evaluator or the fast synthetic model (`SimEvaluator`) in tests and
 /// simulator-only benches.
 pub trait PolicyEvaluator {
+    /// Validation accuracy of `policy` (or a deterministic proxy of it).
     fn accuracy(&self, policy: &DiscretePolicy) -> Result<f64>;
     /// Accuracy of the uncompressed model on the same split.
     fn base_accuracy(&self) -> f64;
@@ -38,10 +39,12 @@ impl PolicyEvaluator for (&crate::eval::Evaluator, crate::eval::Split, usize) {
 pub struct SimEvaluator {
     /// Original output widths per layer (pruning-damage baseline).
     pub couts: Vec<usize>,
+    /// Accuracy of the uncompressed model (damage baseline).
     pub base_acc: f64,
 }
 
 impl SimEvaluator {
+    /// A synthetic evaluator calibrated to `ir`'s layer widths.
     pub fn new(ir: &ModelIr) -> Self {
         Self {
             couts: ir.layers.iter().map(|l| l.cout).collect(),
@@ -92,15 +95,22 @@ impl PolicyEvaluator for SimEvaluator {
 /// One line of the search history.
 #[derive(Clone, Debug)]
 pub struct EpisodeSummary {
+    /// Episode index (0-based).
     pub episode: usize,
+    /// Absolute reward of the episode's policy (paper Eq. 6).
     pub reward: f64,
+    /// Validation accuracy (or synthetic proxy) of the policy.
     pub accuracy: f64,
+    /// Measured latency of the policy (seconds).
     pub latency_s: f64,
+    /// Multiply-accumulate count under the policy.
     pub macs: u64,
+    /// Bit operations (MACs x w_bits x a_bits) under the policy.
     pub bops: u64,
 }
 
 impl EpisodeSummary {
+    /// JSON form (one entry of a result record's `history` array).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("episode", Json::num(self.episode as f64)),
@@ -114,21 +124,29 @@ impl EpisodeSummary {
 }
 
 /// Result of a policy search.
+#[derive(Clone, Debug)]
 pub struct SearchOutcome {
+    /// The policy of the best (highest-reward) episode.
     pub best_policy: DiscretePolicy,
+    /// Summary line of the best episode.
     pub best: EpisodeSummary,
+    /// One summary per episode, in order.
     pub history: Vec<EpisodeSummary>,
+    /// Latency of the uncompressed reference policy (seconds).
     pub base_latency_s: f64,
+    /// Accuracy of the uncompressed model on the evaluation split.
     pub base_accuracy: f64,
     /// Which latency backend scored the search (`sim`/`measured`/`hybrid`).
     pub latency_backend: String,
 }
 
 impl SearchOutcome {
+    /// Best-episode latency as a fraction of the uncompressed reference.
     pub fn relative_latency(&self) -> f64 {
         self.best.latency_s / self.base_latency_s
     }
 
+    /// JSON form (the `outcome` block of a result record).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("best", self.best.to_json()),

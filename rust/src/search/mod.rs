@@ -1,12 +1,23 @@
-//! The episode loop (paper Figures 1 + 2): predict a full policy layer by
-//! layer, validate it (accuracy on the PJRT artifact + latency on the
-//! hardware simulator), compute the absolute reward, share it across the
-//! episode's transitions, and optimize the agent.
+//! The episode loop (paper Figures 1 + 2) and the sweep orchestrator.
+//!
+//! `run_search` predicts a full policy layer by layer, validates it
+//! (accuracy on the PJRT artifact + latency on the pluggable hardware
+//! backend), computes the absolute reward, shares it across the episode's
+//! transitions, and optimizes the agent.
+//!
+//! `orchestrator` fans whole grids of `(agent, latency target)` searches
+//! out across worker threads and folds the outcomes into a Pareto front —
+//! see `run_sweep` / `coordinator::Session::sweep_parallel`.
 
 mod config;
 mod episode;
+mod orchestrator;
 
 pub use config::SearchConfig;
 pub use episode::{
     quant_histogram, run_search, EpisodeSummary, PolicyEvaluator, SearchOutcome, SimEvaluator,
+};
+pub use orchestrator::{
+    job_seed, run_sweep, LatencyFactory, ParetoFront, ParetoPoint, SweepGrid, SweepJob,
+    SweepOutcome, SweepReport, SWEEP_SCHEMA_VERSION,
 };

@@ -1,0 +1,734 @@
+//! Parallel Pareto-sweep orchestrator.
+//!
+//! The paper's headline result is a *sweep*: one policy search per
+//! `(agent kind, latency target)` cell, repeated until the trade-off curve
+//! between accuracy and relative latency is mapped out.  Every cell is an
+//! independent `run_search` call, so the sweep is embarrassingly parallel —
+//! this module fans a [`SweepGrid`] of jobs out across a work queue of
+//! `GALEN_NUM_THREADS` workers (`util::parallel_map`) and folds the
+//! outcomes into a dominance-filtered [`ParetoFront`].
+//!
+//! Three properties make the fan-out safe and reproducible:
+//!
+//! * **Deterministic per-job seeding** — each job's RNG seed is a pure
+//!   function of `(base seed, agent, target, replicate)`
+//!   ([`job_seed`]), never of worker identity or scheduling order, so an
+//!   N-worker sweep is result-identical to the 1-worker sweep
+//!   (`tests/integration_sweep.rs` asserts bit-equality).
+//! * **Shared latency caches** — every worker's `LatencyProvider` hangs off
+//!   one [`LatencyFactory`], whose `hw::SharedCostCache` /
+//!   `hw::SharedProfileCache` let concurrent searches reuse each other's
+//!   per-layer costs and kernel measurements instead of re-deriving them.
+//! * **Accuracy proxy** — jobs score accuracy with the deterministic
+//!   `SimEvaluator` (the PJRT evaluator is not thread-safe), which is
+//!   exactly the trade-off the front records: accuracy-*proxy* versus
+//!   relative latency.  Validate the chosen front points afterwards with
+//!   `galen validate` / `Session::search`.
+//!
+//! Artifacts land in `sweeps/<target>/<model>.json` (schema-versioned,
+//! see [`ParetoFront::save`]), next to the PR 2 profile caches.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::agent::{mapper_for, AgentKind};
+use crate::compress::{DiscretePolicy, LayerCmp, QuantMode};
+use crate::eval::SensitivityTable;
+use crate::hw::{
+    CostModel, HwTarget, HybridProvider, LatencyKind, LatencyProvider, LatencySimulator,
+    MeasuredProfiler, ProfilerConfig, SharedCostCache, SharedProfileCache,
+};
+use crate::model::ModelIr;
+use crate::search::{run_search, SearchConfig, SearchOutcome, SimEvaluator};
+use crate::util::json::Json;
+use crate::util::{num_threads, parallel_map, Fnv1a};
+
+/// Version of the on-disk sweep-artifact layout; mismatched artifacts are
+/// rejected by [`ParetoFront::from_json`], never mis-parsed.
+pub const SWEEP_SCHEMA_VERSION: usize = 1;
+
+/// One cell of a sweep: a full policy search for `agent` towards latency
+/// target `target`, seeded with `seed`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepJob {
+    /// Which agent runs the search (pruning / quantization / joint).
+    pub agent: AgentKind,
+    /// Target compression rate c (fraction of the reference latency).
+    pub target: f64,
+    /// The job's search seed (pure function of the job description).
+    pub seed: u64,
+}
+
+/// The sweep grid: `agents x targets x replicates` jobs.
+#[derive(Clone, Debug)]
+pub struct SweepGrid {
+    /// Agent kinds to sweep (one curve per kind, as in the paper's Fig. 4).
+    pub agents: Vec<AgentKind>,
+    /// Latency targets c to sweep.
+    pub targets: Vec<f64>,
+    /// Independent seeds per `(agent, target)` cell (>= 1).
+    pub replicates: usize,
+}
+
+impl SweepGrid {
+    /// A grid of one job per `(agent, target)` pair.
+    pub fn new(agents: Vec<AgentKind>, targets: Vec<f64>) -> Self {
+        Self {
+            agents,
+            targets,
+            replicates: 1,
+        }
+    }
+
+    /// Run `n` independently seeded searches per cell (Pareto fronts
+    /// benefit from restarts; dominated replicates are filtered anyway).
+    pub fn with_replicates(mut self, n: usize) -> Self {
+        self.replicates = n.max(1);
+        self
+    }
+
+    /// Number of jobs in the grid.
+    pub fn len(&self) -> usize {
+        self.agents.len() * self.targets.len() * self.replicates.max(1)
+    }
+
+    /// Whether the grid has no jobs.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize the job list.  Job seeds derive from `base_seed` via
+    /// [`job_seed`], so the list — and therefore the whole sweep — is
+    /// independent of worker count and scheduling order.
+    pub fn jobs(&self, base_seed: u64) -> Vec<SweepJob> {
+        let mut out = Vec::with_capacity(self.len());
+        for &agent in &self.agents {
+            for &target in &self.targets {
+                for r in 0..self.replicates.max(1) {
+                    out.push(SweepJob {
+                        agent,
+                        target,
+                        seed: job_seed(base_seed, agent, target, r),
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Deterministic seed of one sweep job: a pure function of the job
+/// description (never of its position in the queue or the worker that
+/// runs it) — the cornerstone of worker-count-invariant sweeps.
+pub fn job_seed(base_seed: u64, agent: AgentKind, target: f64, replicate: usize) -> u64 {
+    let mut h = Fnv1a::seeded(base_seed ^ 0x9a1e_5eed_0b5e_55ed);
+    h.mix_bytes(agent.label().as_bytes());
+    h.mix(target.to_bits());
+    h.mix(replicate as u64);
+    h.finish()
+}
+
+/// Builds one `LatencyProvider` per sweep job, all sharing the same
+/// cross-worker caches (`hw::SharedCostCache` / `hw::SharedProfileCache`).
+///
+/// Cheap to construct from a `coordinator::Session`
+/// (`Session::latency_factory`); construct directly for harnesses that have
+/// no session (benches, tests).
+#[derive(Clone, Debug)]
+pub struct LatencyFactory {
+    kind: LatencyKind,
+    target: HwTarget,
+    variant: String,
+    profiler_cfg: ProfilerConfig,
+    profiles_dir: Option<PathBuf>,
+    cost_cache: SharedCostCache,
+    profile_cache: SharedProfileCache,
+}
+
+impl LatencyFactory {
+    /// A factory producing `kind` providers for `target`/`variant`, with
+    /// fresh (empty) shared caches.  `profiles_dir` is the on-disk profile
+    /// cache root for measured/hybrid providers (None keeps measurements in
+    /// memory only).
+    pub fn new(
+        kind: LatencyKind,
+        target: HwTarget,
+        variant: &str,
+        profiler_cfg: ProfilerConfig,
+        profiles_dir: Option<PathBuf>,
+    ) -> Self {
+        Self {
+            kind,
+            target,
+            variant: variant.to_string(),
+            profiler_cfg,
+            profiles_dir,
+            cost_cache: SharedCostCache::new(),
+            profile_cache: SharedProfileCache::new(),
+        }
+    }
+
+    /// Which latency backend this factory produces.
+    pub fn kind(&self) -> LatencyKind {
+        self.kind
+    }
+
+    fn simulator(&self, seed: u64) -> LatencySimulator {
+        LatencySimulator::new(CostModel::new(self.target.clone()), seed)
+            .with_shared_cache(self.cost_cache.clone())
+    }
+
+    fn profiler(&self) -> Result<MeasuredProfiler> {
+        let p = match &self.profiles_dir {
+            Some(dir) => MeasuredProfiler::with_cache(
+                self.target.clone(),
+                &self.variant,
+                self.profiler_cfg.clone(),
+                dir,
+            )?,
+            None => MeasuredProfiler::new(
+                self.target.clone(),
+                &self.variant,
+                self.profiler_cfg.clone(),
+            ),
+        };
+        Ok(p.with_shared_cache(self.profile_cache.clone()))
+    }
+
+    /// One latency provider for one job, wired to the shared caches.
+    /// Hybrid providers are calibrated against the default probe set (whose
+    /// measurements are themselves shared across workers).
+    pub fn provider(&self, seed: u64, ir: &ModelIr) -> Result<Box<dyn LatencyProvider>> {
+        match self.kind {
+            LatencyKind::Sim => Ok(Box::new(self.simulator(seed))),
+            LatencyKind::Measured => Ok(Box::new(self.profiler()?)),
+            LatencyKind::Hybrid => {
+                let mut hybrid = HybridProvider::new(self.profiler()?, self.simulator(seed));
+                hybrid.calibrate_default(ir);
+                Ok(Box::new(hybrid))
+            }
+        }
+    }
+
+    /// Write the sweep's pooled measurements to the on-disk profile cache,
+    /// once, after the fan-out barrier (so concurrent workers never race on
+    /// the manifest file).  No-op for the simulator backend or when the
+    /// factory has no profiles directory.
+    pub fn persist(&self) -> Result<Option<PathBuf>> {
+        if self.kind == LatencyKind::Sim || self.profiles_dir.is_none() {
+            return Ok(None);
+        }
+        let mut p = self.profiler()?;
+        p.absorb_shared();
+        p.save()
+    }
+}
+
+/// One finished sweep job.
+#[derive(Debug)]
+pub struct SweepOutcome {
+    /// The job that produced this outcome.
+    pub job: SweepJob,
+    /// The search result (best policy, history, backend label).
+    pub outcome: SearchOutcome,
+    /// Wall-clock seconds this job took on its worker.
+    pub wall_s: f64,
+}
+
+/// Everything a sweep produced: per-job outcomes plus the Pareto front.
+#[derive(Debug)]
+pub struct SweepReport {
+    /// Per-job outcomes, in deterministic grid order.
+    pub outcomes: Vec<SweepOutcome>,
+    /// The dominance-filtered accuracy-proxy / relative-latency front.
+    pub front: ParetoFront,
+    /// Worker threads the sweep actually used.
+    pub workers: usize,
+    /// End-to-end wall-clock seconds of the fan-out.
+    pub wall_s: f64,
+}
+
+impl SweepReport {
+    /// Per-job summary table (one row per job, grid order).
+    pub fn job_table(&self) -> String {
+        let mut s = format!(
+            "{:16} {:>5} {:>10} {:>10} {:>9} {:>8}\n",
+            "agent", "c", "rel.lat", "accuracy", "reward", "wall"
+        );
+        for o in &self.outcomes {
+            s.push_str(&format!(
+                "{:16} {:>5.2} {:>9.1}% {:>9.2}% {:>9.3} {:>7.1}s\n",
+                o.job.agent.label(),
+                o.job.target,
+                o.outcome.relative_latency() * 100.0,
+                o.outcome.best.accuracy * 100.0,
+                o.outcome.best.reward,
+                o.wall_s,
+            ));
+        }
+        s
+    }
+}
+
+/// Run a sweep: fan `grid`'s jobs across `workers` threads (0 = all cores,
+/// see `util::num_threads`), each job a full `run_search` with `proto`'s
+/// hyper-parameters, the factory's latency backend, and the synthetic
+/// accuracy proxy.  Returns per-job outcomes plus the Pareto front; pooled
+/// measurements are persisted once after the barrier.
+///
+/// With the simulator backend the result is bit-identical for every
+/// `workers` value: job seeds are pure functions of the grid, jobs do not
+/// interact, and every shared-cache value is a pure function of its
+/// configuration.  The measured/hybrid backends are consistent *within*
+/// one sweep (canonical-first sharing) but carry run-to-run timing
+/// jitter, so bit-identity across separate runs only holds for `sim`.
+pub fn run_sweep(
+    ir: &ModelIr,
+    sens: &SensitivityTable,
+    grid: &SweepGrid,
+    proto: &SearchConfig,
+    workers: usize,
+    factory: &LatencyFactory,
+) -> Result<SweepReport> {
+    let jobs = grid.jobs(proto.seed);
+    anyhow::ensure!(!jobs.is_empty(), "sweep grid has no (agent, target) jobs");
+    let workers = if workers == 0 { num_threads() } else { workers };
+    let workers = workers.min(jobs.len());
+    log::info!(
+        "sweep: {} jobs on {} workers ({} backend)",
+        jobs.len(),
+        workers,
+        factory.kind().label()
+    );
+    let t0 = Instant::now();
+    let results = parallel_map(jobs, workers, |job| run_job(ir, sens, proto, job, factory));
+    let mut outcomes = Vec::with_capacity(results.len());
+    for r in results {
+        outcomes.push(r?);
+    }
+    if let Some(path) = factory.persist()? {
+        log::info!("sweep: pooled profile cache written to {}", path.display());
+    }
+    let front = ParetoFront::from_outcomes(&outcomes);
+    Ok(SweepReport {
+        outcomes,
+        front,
+        workers,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// One worker's job: a full search with the job's agent/target/seed.
+fn run_job(
+    ir: &ModelIr,
+    sens: &SensitivityTable,
+    proto: &SearchConfig,
+    job: SweepJob,
+    factory: &LatencyFactory,
+) -> Result<SweepOutcome> {
+    let mut cfg = proto.clone();
+    cfg.agent = job.agent;
+    cfg.target = job.target;
+    cfg.seed = job.seed;
+    let mapper = mapper_for(cfg.agent);
+    let ev = SimEvaluator::new(ir);
+    // same seed split as Session::search, so a 1-worker sweep reproduces
+    // the sequential per-cell searches exactly
+    let mut provider = factory.provider(cfg.seed ^ 0x5117, ir)?;
+    let t0 = Instant::now();
+    let outcome = run_search(ir, sens, &ev, provider.as_mut(), mapper.as_ref(), &cfg, None)?;
+    Ok(SweepOutcome {
+        job,
+        outcome,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// One candidate point of the trade-off curve: a discretized policy with
+/// its accuracy proxy and latency relative to the uncompressed reference.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParetoPoint {
+    /// Agent kind label that found the policy.
+    pub agent: String,
+    /// The latency target c the search aimed for.
+    pub target: f64,
+    /// The search seed (for exact replay).
+    pub seed: u64,
+    /// Accuracy proxy of the best policy.
+    pub accuracy: f64,
+    /// Absolute latency (seconds) under the sweep's latency backend.
+    pub latency_s: f64,
+    /// Latency as a fraction of the uncompressed reference.
+    pub relative_latency: f64,
+    /// The search's reward for the best episode.
+    pub reward: f64,
+    /// The discretized compression policy itself.
+    pub policy: DiscretePolicy,
+}
+
+impl ParetoPoint {
+    /// Build a point from one finished sweep job.
+    pub fn from_outcome(o: &SweepOutcome) -> Self {
+        Self {
+            agent: o.job.agent.label().to_string(),
+            target: o.job.target,
+            seed: o.job.seed,
+            accuracy: o.outcome.best.accuracy,
+            latency_s: o.outcome.best.latency_s,
+            relative_latency: o.outcome.relative_latency(),
+            reward: o.outcome.best.reward,
+            policy: o.outcome.best_policy.clone(),
+        }
+    }
+
+    /// Strict Pareto dominance: at least as good on both axes (higher
+    /// accuracy, lower relative latency) and strictly better on one.
+    pub fn dominates(&self, other: &Self) -> bool {
+        self.accuracy >= other.accuracy
+            && self.relative_latency <= other.relative_latency
+            && (self.accuracy > other.accuracy || self.relative_latency < other.relative_latency)
+    }
+
+    /// Hash of the discretized policy — the dedup key: two jobs that land
+    /// on the same policy contribute one point.
+    pub fn policy_key(&self) -> u64 {
+        let mut h = Fnv1a::new();
+        for l in &self.policy.layers {
+            h.mix(l.kept_channels as u64);
+            h.mix(l.quant.class_id());
+            let (wb, ab) = l.quant.bits();
+            h.mix(((wb as u64) << 32) | ab as u64);
+        }
+        h.finish()
+    }
+
+    /// JSON form (one entry of the sweep artifact's `points` array).
+    pub fn to_json(&self) -> Json {
+        let policy = self
+            .policy
+            .layers
+            .iter()
+            .map(|l| {
+                let (wb, ab) = l.quant.bits();
+                Json::obj(vec![
+                    ("channels", Json::num(l.kept_channels as f64)),
+                    ("mode", Json::str(mode_tag(l.quant))),
+                    ("w_bits", Json::num(wb as f64)),
+                    ("a_bits", Json::num(ab as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("agent", Json::str(self.agent.clone())),
+            ("target", Json::num(self.target)),
+            // hex string: u64 seeds do not survive the f64 number path
+            ("seed", Json::str(format!("{:016x}", self.seed))),
+            ("accuracy", Json::num(self.accuracy)),
+            ("latency_s", Json::num(self.latency_s)),
+            ("relative_latency", Json::num(self.relative_latency)),
+            ("reward", Json::num(self.reward)),
+            ("policy", Json::Arr(policy)),
+        ])
+    }
+
+    /// Parse one artifact point back (inverse of `to_json`).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let seed_s = j.req_str("seed")?;
+        let seed = u64::from_str_radix(seed_s, 16)
+            .map_err(|_| anyhow::anyhow!("bad seed '{seed_s}'"))?;
+        let mut layers = Vec::new();
+        for e in j.req_arr("policy")? {
+            let channels = e.req_usize("channels")?;
+            let wb = e.req_f64("w_bits")? as u32;
+            let ab = e.req_f64("a_bits")? as u32;
+            let quant = match e.req_str("mode")? {
+                "fp32" => QuantMode::Fp32,
+                "int8" => QuantMode::Int8,
+                "mix" => QuantMode::Mix {
+                    w_bits: wb as u8,
+                    a_bits: ab as u8,
+                },
+                other => anyhow::bail!("unknown quant mode '{other}'"),
+            };
+            layers.push(LayerCmp {
+                kept_channels: channels,
+                quant,
+            });
+        }
+        Ok(Self {
+            agent: j.req_str("agent")?.to_string(),
+            target: j.req_f64("target")?,
+            seed,
+            accuracy: j.req_f64("accuracy")?,
+            latency_s: j.req_f64("latency_s")?,
+            relative_latency: j.req_f64("relative_latency")?,
+            reward: j.req_f64("reward")?,
+            policy: DiscretePolicy { layers },
+        })
+    }
+}
+
+/// Stable artifact tag of a quant mode class.
+fn mode_tag(q: QuantMode) -> &'static str {
+    match q {
+        QuantMode::Fp32 => "fp32",
+        QuantMode::Int8 => "int8",
+        QuantMode::Mix { .. } => "mix",
+    }
+}
+
+/// The dominance-filtered, policy-deduplicated accuracy-proxy vs.
+/// relative-latency front of a sweep, sorted by relative latency.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParetoFront {
+    /// Non-dominated points, ascending relative latency.
+    pub points: Vec<ParetoPoint>,
+}
+
+impl ParetoFront {
+    /// Build the front from finished sweep jobs (dedup then dominance
+    /// filter, see `from_points`).
+    pub fn from_outcomes(outs: &[SweepOutcome]) -> Self {
+        Self::from_points(outs.iter().map(ParetoPoint::from_outcome).collect())
+    }
+
+    /// Build the front from raw candidate points: duplicate policies keep
+    /// their first occurrence, dominated points are dropped, survivors are
+    /// sorted by (relative latency asc, accuracy desc, agent, target) —
+    /// a total order, so equal inputs give byte-equal fronts.
+    pub fn from_points(candidates: Vec<ParetoPoint>) -> Self {
+        let mut seen = std::collections::HashSet::new();
+        let candidates: Vec<ParetoPoint> = candidates
+            .into_iter()
+            .filter(|p| seen.insert(p.policy_key()))
+            .collect();
+        let mut points: Vec<ParetoPoint> = candidates
+            .iter()
+            .filter(|p| !candidates.iter().any(|q| q.dominates(p)))
+            .cloned()
+            .collect();
+        points.sort_by(|a, b| {
+            a.relative_latency
+                .total_cmp(&b.relative_latency)
+                .then(b.accuracy.total_cmp(&a.accuracy))
+                .then(a.agent.cmp(&b.agent))
+                .then(a.target.total_cmp(&b.target))
+        });
+        Self { points }
+    }
+
+    /// The versioned artifact form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::num(SWEEP_SCHEMA_VERSION as f64)),
+            (
+                "points",
+                Json::Arr(self.points.iter().map(|p| p.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Parse an artifact (inverse of `to_json`); rejects unknown schema
+    /// versions.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        anyhow::ensure!(
+            j.req_usize("schema_version")? == SWEEP_SCHEMA_VERSION,
+            "sweep artifact schema version mismatch"
+        );
+        let mut points = Vec::new();
+        for e in j.req_arr("points")? {
+            points.push(ParetoPoint::from_json(e)?);
+        }
+        Ok(Self { points })
+    }
+
+    /// Write the artifact to `dir/<target>/<model>.json` (the same
+    /// `<target>` directory naming as the profile caches).  Returns the
+    /// path written.
+    pub fn save(&self, dir: &Path, target: &str, model: &str) -> Result<PathBuf> {
+        let path = dir
+            .join(crate::hw::sanitize(target))
+            .join(format!("{model}.json"));
+        self.to_json().write_file(&path)?;
+        Ok(path)
+    }
+
+    /// Load an artifact written by `save`.
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_json(&Json::read_file(path)?)
+    }
+
+    /// Human-readable front (one row per point, ascending latency).
+    pub fn table(&self) -> String {
+        let mut s = format!(
+            "{:16} {:>5} {:>10} {:>10} {:>9}\n",
+            "agent", "c", "rel.lat", "accuracy", "reward"
+        );
+        for p in &self.points {
+            s.push_str(&format!(
+                "{:16} {:>5.2} {:>9.1}% {:>9.2}% {:>9.3}\n",
+                p.agent,
+                p.target,
+                p.relative_latency * 100.0,
+                p.accuracy * 100.0,
+                p.reward,
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::SensitivityConfig;
+    use crate::model::ir::test_fixtures::tiny_meta;
+
+    fn pt(agent: &str, acc: f64, rel: f64, channels: usize) -> ParetoPoint {
+        ParetoPoint {
+            agent: agent.to_string(),
+            target: rel,
+            seed: 7,
+            accuracy: acc,
+            latency_s: rel,
+            relative_latency: rel,
+            reward: acc - rel,
+            policy: DiscretePolicy {
+                layers: vec![LayerCmp {
+                    kept_channels: channels,
+                    quant: QuantMode::Int8,
+                }],
+            },
+        }
+    }
+
+    #[test]
+    fn dominance_filtering_keeps_only_the_front() {
+        // (acc, rel): (0.9, 0.5) dominates (0.8, 0.6); (0.95, 0.9) survives
+        // on accuracy, (0.7, 0.3) survives on latency.
+        let front = ParetoFront::from_points(vec![
+            pt("a", 0.9, 0.5, 1),
+            pt("b", 0.8, 0.6, 2),
+            pt("c", 0.95, 0.9, 3),
+            pt("d", 0.7, 0.3, 4),
+        ]);
+        let survivors: Vec<&str> = front.points.iter().map(|p| p.agent.as_str()).collect();
+        assert_eq!(survivors, vec!["d", "a", "c"], "sorted by relative latency");
+        assert!(front.points.iter().all(|p| p.agent != "b"));
+    }
+
+    #[test]
+    fn equal_points_with_distinct_policies_both_survive() {
+        let a = pt("a", 0.9, 0.5, 1);
+        let b = pt("b", 0.9, 0.5, 2); // same (acc, rel), different policy
+        assert!(!a.dominates(&b) && !b.dominates(&a));
+        let front = ParetoFront::from_points(vec![a, b]);
+        assert_eq!(front.points.len(), 2);
+    }
+
+    #[test]
+    fn duplicate_policies_deduplicate_to_first_occurrence() {
+        let first = pt("a", 0.9, 0.5, 1);
+        let dup = ParetoPoint {
+            agent: "b".to_string(),
+            seed: 99,
+            ..pt("b", 0.9, 0.5, 1)
+        };
+        assert_eq!(first.policy_key(), dup.policy_key());
+        let front = ParetoFront::from_points(vec![first, dup]);
+        assert_eq!(front.points.len(), 1);
+        assert_eq!(front.points[0].agent, "a", "first occurrence wins");
+    }
+
+    #[test]
+    fn policy_key_separates_modes_and_widths() {
+        let base = pt("a", 0.9, 0.5, 4);
+        let mut pruned = base.clone();
+        pruned.policy.layers[0].kept_channels = 3;
+        assert_ne!(base.policy_key(), pruned.policy_key());
+        let mut mix88 = base.clone();
+        mix88.policy.layers[0].quant = QuantMode::Mix { w_bits: 8, a_bits: 8 };
+        assert_ne!(
+            base.policy_key(),
+            mix88.policy_key(),
+            "MIX(8/8) must not collide with INT8"
+        );
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let mut p = pt("joint", 0.912345678901234, 0.3333333333333333, 2);
+        p.seed = 0xdead_beef_cafe_f00d; // > 2^53: must survive via hex
+        p.policy.layers.push(LayerCmp {
+            kept_channels: 5,
+            quant: QuantMode::Mix { w_bits: 3, a_bits: 5 },
+        });
+        p.policy.layers.push(LayerCmp {
+            kept_channels: 6,
+            quant: QuantMode::Fp32,
+        });
+        let front = ParetoFront::from_points(vec![p]);
+        let text = front.to_json().pretty(0);
+        let back = ParetoFront::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, front);
+    }
+
+    #[test]
+    fn from_json_rejects_schema_mismatch() {
+        let j = Json::parse(r#"{"schema_version": 999, "points": []}"#).unwrap();
+        assert!(ParetoFront::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn grid_jobs_are_deterministic_and_distinct() {
+        let grid = SweepGrid::new(
+            vec![AgentKind::Pruning, AgentKind::Joint],
+            vec![0.3, 0.5],
+        )
+        .with_replicates(2);
+        assert_eq!(grid.len(), 8);
+        let a = grid.jobs(7);
+        let b = grid.jobs(7);
+        assert_eq!(a, b, "job list is a pure function of grid and base seed");
+        let seeds: std::collections::HashSet<u64> = a.iter().map(|j| j.seed).collect();
+        assert_eq!(seeds.len(), 8, "every cell gets a distinct seed");
+        assert_ne!(grid.jobs(8)[0].seed, a[0].seed, "base seed feeds through");
+    }
+
+    #[test]
+    fn two_worker_sweep_matches_one_worker_sweep() {
+        let ir = ModelIr::from_meta(&tiny_meta()).unwrap();
+        let sens =
+            SensitivityTable::disabled(ir.layers.len(), &SensitivityConfig::default(), "tiny");
+        let mut proto = SearchConfig::fast(AgentKind::Joint, 0.5);
+        proto.episodes = 6;
+        proto.warmup_episodes = 2;
+        proto.opt_steps_per_episode = 4;
+        proto.log_every = 0;
+        let grid = SweepGrid::new(
+            vec![AgentKind::Quantization, AgentKind::Joint],
+            vec![0.4, 0.6],
+        );
+        let factory = |_: ()| {
+            LatencyFactory::new(
+                LatencyKind::Sim,
+                HwTarget::cortex_a72(),
+                "tiny",
+                ProfilerConfig::fast(),
+                None,
+            )
+        };
+        let seq = run_sweep(&ir, &sens, &grid, &proto, 1, &factory(())).unwrap();
+        let par = run_sweep(&ir, &sens, &grid, &proto, 2, &factory(())).unwrap();
+        assert_eq!(seq.outcomes.len(), 4);
+        assert_eq!(seq.front, par.front, "front must be worker-count invariant");
+        for (a, b) in seq.outcomes.iter().zip(&par.outcomes) {
+            assert_eq!(a.job, b.job);
+            assert_eq!(a.outcome.best_policy, b.outcome.best_policy);
+            assert_eq!(a.outcome.best.reward, b.outcome.best.reward);
+        }
+        assert!(!seq.front.points.is_empty());
+    }
+}

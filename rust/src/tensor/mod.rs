@@ -14,6 +14,7 @@
 //! `GALEN_NUM_THREADS` environment variable caps the worker count
 //! (`util::num_threads`).
 
+/// Quantized tensor types and the i8 GEMM kernels.
 pub mod quant;
 
 use crate::util::{num_threads, parallel_row_blocks};
@@ -167,14 +168,19 @@ fn gemm_t_rows(
     }
 }
 
+/// Dense row-major f32 matrix — the crate's workhorse tensor type.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Mat {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major storage, length rows * cols.
     pub data: Vec<f32>,
 }
 
 impl Mat {
+    /// A rows x cols matrix of zeros.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self {
             rows,
@@ -183,11 +189,13 @@ impl Mat {
         }
     }
 
+    /// Wrap an existing row-major buffer (length must be rows * cols).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(rows * cols, data.len(), "shape/data mismatch");
         Self { rows, cols, data }
     }
 
+    /// Build from row vectors (all must have equal length).
     pub fn from_rows(rows: &[Vec<f32>]) -> Self {
         let r = rows.len();
         let c = rows.first().map_or(0, |x| x.len());
@@ -199,22 +207,26 @@ impl Mat {
         Self { rows: r, cols: c, data }
     }
 
+    /// Element (i, j).
     #[inline]
     pub fn at(&self, i: usize, j: usize) -> f32 {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[i * self.cols + j]
     }
 
+    /// Mutable element (i, j).
     #[inline]
     pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
         debug_assert!(i < self.rows && j < self.cols);
         &mut self.data[i * self.cols + j]
     }
 
+    /// Row `i` as a slice.
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Row `i` as a mutable slice.
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
@@ -334,6 +346,7 @@ impl Mat {
         }
     }
 
+    /// Elementwise map into a new matrix.
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
         Mat {
             rows: self.rows,
@@ -342,6 +355,7 @@ impl Mat {
         }
     }
 
+    /// Elementwise map in place.
     pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
         for x in &mut self.data {
             *x = f(*x);
@@ -403,12 +417,14 @@ impl Mat {
         }
     }
 
+    /// Multiply every element by `s`.
     pub fn scale(&mut self, s: f32) {
         for x in &mut self.data {
             *x *= s;
         }
     }
 
+    /// Mean of all elements (0 for an empty matrix).
     pub fn mean(&self) -> f32 {
         if self.data.is_empty() {
             0.0

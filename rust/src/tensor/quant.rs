@@ -43,9 +43,13 @@ fn quantize_slice(src: &[f32], scale: f32, dst: &mut [i8]) {
 /// Per-tensor symmetrically quantized activation matrix (row-major).
 #[derive(Clone, Debug)]
 pub struct QuantizedTensor {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major i8 values.
     pub data: Vec<i8>,
+    /// The single symmetric scale (x ~= q * scale).
     pub scale: f32,
 }
 
@@ -73,6 +77,7 @@ impl QuantizedTensor {
         quantize_slice(&m.data, self.scale, &mut self.data);
     }
 
+    /// Back to f32 (q * scale), for parity tests.
     pub fn dequantize(&self) -> Mat {
         Mat {
             rows: self.rows,
@@ -86,14 +91,18 @@ impl QuantizedTensor {
 /// columns are output channels — the GEMM RHS layout).
 #[derive(Clone, Debug)]
 pub struct QuantizedMat {
+    /// Row count (the GEMM k dimension).
     pub rows: usize,
+    /// Column count (output channels).
     pub cols: usize,
+    /// Row-major i8 values.
     pub data: Vec<i8>,
     /// One scale per column (output channel).
     pub scales: Vec<f32>,
 }
 
 impl QuantizedMat {
+    /// Symmetric per-output-channel quantization (offline weight path).
     pub fn quantize_per_channel(m: &Mat) -> Self {
         let mut max_abs = vec![0.0f32; m.cols];
         for i in 0..m.rows {
@@ -118,6 +127,7 @@ impl QuantizedMat {
         }
     }
 
+    /// Back to f32 (q * per-column scale), for parity tests.
     pub fn dequantize(&self) -> Mat {
         let mut out = Mat::zeros(self.rows, self.cols);
         for i in 0..self.rows {
@@ -144,14 +154,18 @@ impl QuantizedMat {
 /// Layout: `data[panel * 4n + j * 4 + r] = rhs[(4*panel + r) * n + j]`.
 #[derive(Clone, Debug)]
 pub struct PackedRhsI8 {
+    /// Logical row count of the unpacked RHS.
     pub k: usize,
+    /// Column count (output channels).
     pub n: usize,
+    /// The interleaved panel storage.
     pub data: Vec<i8>,
     /// Per-column scales carried along from the quantized weights.
     pub scales: Vec<f32>,
 }
 
 impl PackedRhsI8 {
+    /// Pack a row-major k x n i8 RHS into the panel layout.
     pub fn pack(rhs: &[i8], k: usize, n: usize, scales: Vec<f32>) -> Self {
         assert_eq!(rhs.len(), k * n, "rhs shape mismatch");
         assert_eq!(scales.len(), n, "one scale per column");

@@ -11,7 +11,9 @@ use crate::util::rng::Pcg64;
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
 pub struct Config {
+    /// Number of generated cases per property.
     pub cases: usize,
+    /// Base seed of the per-case RNG streams.
     pub seed: u64,
 }
 

@@ -6,14 +6,20 @@
 
 use std::collections::BTreeMap;
 
+/// One declared option/flag.
 #[derive(Debug, Clone)]
 pub struct ArgSpec {
+    /// Option name (without the leading `--`).
     pub name: &'static str,
+    /// Help text shown in `usage`.
     pub help: &'static str,
+    /// Default value (None = required).
     pub default: Option<String>,
+    /// Whether this is a value-less flag.
     pub is_flag: bool,
 }
 
+/// Parsed arguments with typed accessors.
 #[derive(Debug, Default)]
 pub struct Args {
     values: BTreeMap<String, String>,
@@ -21,13 +27,17 @@ pub struct Args {
     positional: Vec<String>,
 }
 
+/// A declarative command-line interface (builder style).
 pub struct Cli {
+    /// Program/subcommand name (usage header).
     pub name: &'static str,
+    /// One-line description (usage header).
     pub about: &'static str,
     specs: Vec<ArgSpec>,
 }
 
 impl Cli {
+    /// A CLI with no options yet.
     pub fn new(name: &'static str, about: &'static str) -> Self {
         Self {
             name,
@@ -36,6 +46,7 @@ impl Cli {
         }
     }
 
+    /// Declare an option with a default value.
     pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
         self.specs.push(ArgSpec {
             name,
@@ -46,6 +57,7 @@ impl Cli {
         self
     }
 
+    /// Declare a required option.
     pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
         self.specs.push(ArgSpec {
             name,
@@ -56,6 +68,7 @@ impl Cli {
         self
     }
 
+    /// Declare a boolean flag.
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
         self.specs.push(ArgSpec {
             name,
@@ -66,6 +79,7 @@ impl Cli {
         self
     }
 
+    /// Generated `--help` text.
     pub fn usage(&self) -> String {
         let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
         for spec in &self.specs {
@@ -125,6 +139,7 @@ impl Cli {
         Ok(args)
     }
 
+    /// Parse the process arguments.
     pub fn parse(&self) -> anyhow::Result<Args> {
         let argv: Vec<String> = std::env::args().skip(1).collect();
         self.parse_from(&argv)
@@ -142,34 +157,40 @@ impl Cli {
 }
 
 impl Args {
+    /// String value of `name` (panics if the option was not declared).
     pub fn get(&self, name: &str) -> &str {
         self.values
             .get(name)
             .unwrap_or_else(|| panic!("option --{name} not declared"))
     }
 
+    /// `get` parsed as usize.
     pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
         self.get(name)
             .parse()
             .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
     }
 
+    /// `get` parsed as f64.
     pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
         self.get(name)
             .parse()
             .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
     }
 
+    /// `get` parsed as u64.
     pub fn get_u64(&self, name: &str) -> anyhow::Result<u64> {
         self.get(name)
             .parse()
             .map_err(|e| anyhow::anyhow!("--{name}: {e}"))
     }
 
+    /// Whether a declared flag was passed.
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Positional (non-option) arguments, in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
@@ -183,6 +204,7 @@ impl Args {
             .collect()
     }
 
+    /// Comma-separated list option parsed as f64s.
     pub fn get_f64_list(&self, name: &str) -> anyhow::Result<Vec<f64>> {
         self.get_list(name)
             .iter()

@@ -2,7 +2,7 @@
 //!
 //! Little-endian layout:
 //! `b"GTEN1\n"`, u32 count, then per tensor: u16 name-len, name, u8 dtype
-//! (0=f32, 1=i32), u8 ndim, u32 dims[ndim], raw row-major data.
+//! (0=f32, 1=i32), u8 ndim, `u32 dims[ndim]`, raw row-major data.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -15,17 +15,23 @@ const MAGIC: &[u8; 6] = b"GTEN1\n";
 /// A named tensor loaded from (or destined for) a GTEN file.
 #[derive(Clone, Debug, PartialEq)]
 pub enum GtenData {
+    /// 32-bit float payload.
     F32(Vec<f32>),
+    /// 32-bit integer payload.
     I32(Vec<i32>),
 }
 
+/// One named tensor: shape + typed payload.
 #[derive(Clone, Debug, PartialEq)]
 pub struct GtenTensor {
+    /// Dimensions, row-major.
     pub shape: Vec<usize>,
+    /// The payload.
     pub data: GtenData,
 }
 
 impl GtenTensor {
+    /// An f32 tensor (shape must match the data length).
     pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Self {
@@ -34,10 +40,12 @@ impl GtenTensor {
         }
     }
 
+    /// Element count (product of dims).
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// The f32 payload, or an error for i32 tensors.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             GtenData::F32(v) => Ok(v),
@@ -45,6 +53,7 @@ impl GtenTensor {
         }
     }
 
+    /// The i32 payload, or an error for f32 tensors.
     pub fn as_i32(&self) -> Result<&[i32]> {
         match &self.data {
             GtenData::I32(v) => Ok(v),
@@ -53,6 +62,7 @@ impl GtenTensor {
     }
 }
 
+/// A whole GTEN container: name -> tensor, sorted.
 pub type GtenFile = BTreeMap<String, GtenTensor>;
 
 fn read_u16(r: &mut impl Read) -> Result<u16> {

@@ -8,61 +8,79 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true`/`false`.
     Bool(bool),
+    /// Any number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure with its byte position.
 #[derive(Debug, thiserror::Error)]
 #[error("json error at byte {pos}: {msg}")]
 pub struct JsonError {
+    /// Byte offset of the failure.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
 impl Json {
     // ---------------- accessors ----------------
+    /// The number value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// The number value truncated to usize.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
+    /// The number value truncated to i64.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|n| n as i64)
     }
+    /// The bool value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// The key/value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
             _ => None,
         }
     }
+    /// Object field lookup (None for non-objects/missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_obj().and_then(|o| o.get(key))
     }
@@ -71,24 +89,29 @@ impl Json {
         self.get(key)
             .ok_or_else(|| anyhow::anyhow!("missing json key '{key}'"))
     }
+    /// Required numeric field.
     pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
         self.req(key)?
             .as_f64()
             .ok_or_else(|| anyhow::anyhow!("json key '{key}' is not a number"))
     }
+    /// Required numeric field truncated to usize.
     pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
         Ok(self.req_f64(key)? as usize)
     }
+    /// Required string field.
     pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
         self.req(key)?
             .as_str()
             .ok_or_else(|| anyhow::anyhow!("json key '{key}' is not a string"))
     }
+    /// Required boolean field.
     pub fn req_bool(&self, key: &str) -> anyhow::Result<bool> {
         self.req(key)?
             .as_bool()
             .ok_or_else(|| anyhow::anyhow!("json key '{key}' is not a bool"))
     }
+    /// Required array field.
     pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Json]> {
         self.req(key)?
             .as_arr()
@@ -96,25 +119,32 @@ impl Json {
     }
 
     // ---------------- constructors ----------------
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+    /// Build a number.
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }
+    /// Build a string.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
+    /// Build a number array from f64s.
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
+    /// Build a number array from f32s.
     pub fn arr_f32(xs: &[f32]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }
+    /// Build a number array from usizes.
     pub fn arr_usize(xs: &[usize]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
+    /// Parse a complete JSON document.
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             b: s.as_bytes(),
@@ -129,12 +159,14 @@ impl Json {
         Ok(v)
     }
 
+    /// Read and parse a JSON file.
     pub fn read_file(path: &std::path::Path) -> anyhow::Result<Json> {
         let s = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
         Ok(Json::parse(&s).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?)
     }
 
+    /// Pretty-print to a file, creating parent directories.
     pub fn write_file(&self, path: &std::path::Path) -> anyhow::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;

@@ -2,11 +2,17 @@
 //! RNG + samplers, JSON, GTEN tensor files, streaming stats, CLI, logging,
 //! and a small scoped-thread helper used for parallel experiment sweeps.
 
+/// Declarative CLI argument parsing (no clap offline).
 pub mod cli;
+/// GTEN tensor-file reader/writer.
 pub mod gten;
+/// Minimal JSON parser + serializer (no serde offline).
 pub mod json;
+/// Env-configurable logger (`GALEN_LOG`).
 pub mod logging;
+/// PCG64 PRNG + samplers.
 pub mod rng;
+/// Streaming statistics (Welford, EMA, median/percentile).
 pub mod stats;
 
 /// Incremental FNV-1a 64-bit hasher: the shared primitive behind the
@@ -17,6 +23,7 @@ pub mod stats;
 pub struct Fnv1a(u64);
 
 impl Fnv1a {
+    /// Hasher at the standard FNV-1a offset basis.
     pub fn new() -> Self {
         Self(0xcbf2_9ce4_8422_2325)
     }
@@ -26,12 +33,14 @@ impl Fnv1a {
         Self(h)
     }
 
+    /// Fold one 64-bit value into the hash.
     pub fn mix(&mut self, x: u64) -> &mut Self {
         self.0 ^= x;
         self.0 = self.0.wrapping_mul(0x0100_0000_01b3);
         self
     }
 
+    /// Fold a byte string into the hash (byte by byte).
     pub fn mix_bytes(&mut self, bytes: &[u8]) -> &mut Self {
         for &b in bytes {
             self.mix(b as u64);
@@ -39,6 +48,7 @@ impl Fnv1a {
         self
     }
 
+    /// The current hash value.
     pub fn finish(&self) -> u64 {
         self.0
     }

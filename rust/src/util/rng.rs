@@ -16,10 +16,13 @@ pub struct Pcg64 {
 const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
 
 impl Pcg64 {
+    /// Seeded generator on the default stream.
     pub fn new(seed: u64) -> Self {
         Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
     }
 
+    /// Seeded generator on an explicit stream (independent sequences
+    /// for equal seeds and distinct streams).
     pub fn with_stream(seed: u64, stream: u64) -> Self {
         let inc = ((stream as u128) << 1) | 1;
         let mut rng = Self { state: 0, inc };
@@ -34,6 +37,7 @@ impl Pcg64 {
         Pcg64::with_stream(self.next_u64() ^ tag, tag.wrapping_mul(0x9e37_79b9_7f4a_7c15))
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -48,6 +52,7 @@ impl Pcg64 {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Uniform f32 in [0, 1).
     #[inline]
     pub fn next_f32(&mut self) -> f32 {
         self.next_f64() as f32

@@ -16,6 +16,7 @@ pub struct RunningNorm {
 }
 
 impl RunningNorm {
+    /// A fresh estimator over `dim`-dimensional vectors.
     pub fn new(dim: usize) -> Self {
         Self {
             count: 0,
@@ -24,14 +25,17 @@ impl RunningNorm {
         }
     }
 
+    /// The vector dimension tracked.
     pub fn dim(&self) -> usize {
         self.mean.len()
     }
 
+    /// Number of samples seen.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Fold one sample into the running estimates.
     pub fn update(&mut self, x: &[f32]) {
         assert_eq!(x.len(), self.mean.len());
         self.count += 1;
@@ -44,6 +48,7 @@ impl RunningNorm {
         }
     }
 
+    /// Unbiased variance of component `i` (1.0 until 2 samples seen).
     pub fn variance(&self, i: usize) -> f64 {
         if self.count < 2 {
             1.0
@@ -73,11 +78,13 @@ pub struct Ema {
 }
 
 impl Ema {
+    /// A fresh average with smoothing factor `alpha` in [0, 1].
     pub fn new(alpha: f64) -> Self {
         assert!((0.0..=1.0).contains(&alpha));
         Self { alpha, value: None }
     }
 
+    /// Fold in one value and return the updated average.
     pub fn update(&mut self, x: f64) -> f64 {
         let v = match self.value {
             None => x,
@@ -87,6 +94,7 @@ impl Ema {
         v
     }
 
+    /// Current average (0 before the first update).
     pub fn get(&self) -> f64 {
         self.value.unwrap_or(0.0)
     }
@@ -120,6 +128,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Arithmetic mean (0 for an empty slice).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         0.0
@@ -128,6 +137,7 @@ pub fn mean(xs: &[f64]) -> f64 {
     }
 }
 
+/// Sample standard deviation (0 for fewer than 2 values).
 pub fn stddev(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
         return 0.0;

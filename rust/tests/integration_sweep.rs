@@ -1,0 +1,115 @@
+//! Parallel sweep orchestrator integration: worker-count invariance
+//! (4-worker front bit-identical to the sequential sweep), sweep-artifact
+//! round-trips, and measurement sharing under the measured backend.
+//! Everything runs on the in-code tiny fixture IR — no artifacts needed.
+
+use galen::agent::{AgentKind, DdpgConfig};
+use galen::coordinator::{Backend, Session, SessionOptions};
+use galen::hw::{LatencyKind, ProfilerConfig};
+use galen::model::ir::test_fixtures::tiny_meta;
+use galen::model::ModelIr;
+use galen::search::{ParetoFront, SearchConfig, SweepGrid};
+
+fn session() -> Session {
+    let ir = ModelIr::from_meta(&tiny_meta()).unwrap();
+    let mut opts = SessionOptions::new("tiny");
+    opts.backend = Backend::Synthetic;
+    opts.sensitivity_cache = None;
+    opts.profiles_dir = None; // tests must not write repo-level caches
+    opts.profiler = ProfilerConfig::fast();
+    Session::synthetic(ir, opts)
+}
+
+fn proto() -> SearchConfig {
+    let mut cfg = SearchConfig::fast(AgentKind::Joint, 0.5);
+    cfg.episodes = 16;
+    cfg.warmup_episodes = 4;
+    cfg.opt_steps_per_episode = 6;
+    cfg.log_every = 0;
+    cfg.ddpg = DdpgConfig {
+        hidden: (32, 24),
+        batch: 24,
+        replay_capacity: 400,
+        ..Default::default()
+    };
+    cfg
+}
+
+#[test]
+fn four_worker_sweep_is_bit_identical_to_sequential() {
+    let s = session();
+    // >= 6 jobs, as in the acceptance protocol: 3 agents x 2 targets
+    let grid = SweepGrid::new(
+        vec![AgentKind::Pruning, AgentKind::Quantization, AgentKind::Joint],
+        vec![0.4, 0.6],
+    );
+    let seq = s.sweep_parallel(&grid, &proto(), 1).unwrap();
+    let par = s.sweep_parallel(&grid, &proto(), 4).unwrap();
+
+    assert_eq!(seq.outcomes.len(), 6);
+    assert_eq!(par.outcomes.len(), 6);
+    assert_eq!(par.workers, 4);
+
+    // the front — the artifact-visible result — must be bit-identical
+    assert_eq!(seq.front, par.front);
+    assert!(!seq.front.points.is_empty());
+
+    // and so must every underlying job outcome, field by field
+    for (a, b) in seq.outcomes.iter().zip(&par.outcomes) {
+        assert_eq!(a.job, b.job);
+        assert_eq!(a.outcome.best_policy, b.outcome.best_policy);
+        assert_eq!(a.outcome.best.reward, b.outcome.best.reward);
+        assert_eq!(a.outcome.best.accuracy, b.outcome.best.accuracy);
+        assert_eq!(a.outcome.best.latency_s, b.outcome.best.latency_s);
+        assert_eq!(a.outcome.base_latency_s, b.outcome.base_latency_s);
+        assert_eq!(a.outcome.history.len(), b.outcome.history.len());
+    }
+
+    // serialized artifacts agree byte for byte
+    assert_eq!(
+        seq.front.to_json().pretty(0),
+        par.front.to_json().pretty(0),
+        "artifact bytes must be worker-count invariant"
+    );
+}
+
+#[test]
+fn sweep_artifact_writes_and_roundtrips() {
+    let s = session();
+    let grid = SweepGrid::new(vec![AgentKind::Quantization], vec![0.4, 0.6]);
+    let mut cfg = proto();
+    cfg.episodes = 8;
+    cfg.warmup_episodes = 3;
+    let report = s.sweep_parallel(&grid, &cfg, 2).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("galen_sweep_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = s.save_sweep(&report, &dir).unwrap();
+    assert!(path.exists(), "sweep artifact must be written");
+    assert!(
+        path.ends_with("raspberry-pi-4b-cortex-a72/tiny.json"),
+        "artifact layout is sweeps/<target>/<model>.json, got {}",
+        path.display()
+    );
+
+    let loaded = ParetoFront::load(&path).unwrap();
+    assert_eq!(loaded, report.front, "artifact must round-trip exactly");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn measured_backend_sweep_shares_measurements_across_workers() {
+    let mut s = session();
+    s.opts.latency = LatencyKind::Measured;
+    let grid = SweepGrid::new(vec![AgentKind::Quantization], vec![0.5, 0.7]);
+    let mut cfg = proto();
+    cfg.episodes = 5;
+    cfg.warmup_episodes = 2;
+    let report = s.sweep_parallel(&grid, &cfg, 2).unwrap();
+    assert_eq!(report.outcomes.len(), 2);
+    assert!(!report.front.points.is_empty());
+    for o in &report.outcomes {
+        assert_eq!(o.outcome.latency_backend, "measured");
+        assert!(o.outcome.best.latency_s > 0.0);
+    }
+}
