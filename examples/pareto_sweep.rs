@@ -17,9 +17,7 @@ use std::path::PathBuf;
 use anyhow::Result;
 use galen::agent::AgentKind;
 use galen::coordinator::{Backend, Session, SessionOptions};
-use galen::hw::{LatencyKind, ProfilerConfig};
-use galen::model::ir::test_fixtures::tiny_meta;
-use galen::model::ModelIr;
+use galen::hw::LatencyKind;
 use galen::search::{SearchConfig, SweepGrid};
 use galen::util::cli::Cli;
 
@@ -38,25 +36,20 @@ fn main() -> Result<()> {
         .parse()?;
 
     let session = if args.has_flag("fixture") {
-        let ir = ModelIr::from_meta(&tiny_meta())?;
-        let mut opts = SessionOptions::new("tiny");
-        opts.backend = Backend::Synthetic;
-        opts.sensitivity_cache = None;
-        opts.profiles_dir = None; // keep fixture runs artifact-free on disk
-        opts.profiler = ProfilerConfig::fast();
-        opts.latency = LatencyKind::parse(args.get("latency"))?;
-        Session::synthetic(ir, opts)
+        // the one fixture-session recipe (artifact-free tiny IR) lives in
+        // Session::fixture, shared with `galen serve --fixture`
+        Session::fixture(args.get("latency").parse()?, 7)?
     } else {
         let mut opts = SessionOptions::new(args.get("variant"));
         opts.backend = Backend::Synthetic; // accuracy proxy either way
-        opts.latency = LatencyKind::parse(args.get("latency"))?;
+        opts.latency = args.get("latency").parse()?;
         Session::open(opts)?
     };
 
     let agents = args
         .get_list("agents")
         .iter()
-        .map(|s| AgentKind::parse(s))
+        .map(|s| s.parse::<AgentKind>())
         .collect::<Result<Vec<_>>>()?;
     let targets = args.get_f64_list("targets")?;
     let grid = SweepGrid::new(agents, targets);
@@ -72,7 +65,7 @@ fn main() -> Result<()> {
         report.outcomes.len(),
         report.workers,
         report.wall_s,
-        session.opts.latency.label()
+        session.opts.latency
     );
     print!("{}", report.job_table());
     println!(

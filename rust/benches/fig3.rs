@@ -20,7 +20,7 @@ fn main() {
 
     for agent in [AgentKind::Pruning, AgentKind::Quantization, AgentKind::Joint] {
         let cfg = common::config(agent, target);
-        let outcome = b.once(&format!("fig3/{}", agent.label()), || {
+        let outcome = b.once(&format!("fig3/{agent}"), || {
             session.search(&cfg).expect("search")
         });
         println!(
@@ -30,13 +30,13 @@ fn main() {
                 AgentKind::Quantization => "b",
                 AgentKind::Joint => "c",
             },
-            agent.label(),
+            agent,
             outcome.best.accuracy * 100.0,
             outcome.relative_latency() * 100.0
         );
         println!("{}", policy_report(&session.ir, &outcome.best_policy));
         ExperimentRecord {
-            name: format!("fig3_{}_{}", common::variant(), agent.label()),
+            name: format!("fig3_{}_{agent}", common::variant()),
             config: cfg,
             outcome,
         }

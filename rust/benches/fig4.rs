@@ -33,12 +33,12 @@ fn main() {
     for agent in [AgentKind::Pruning, AgentKind::Quantization, AgentKind::Joint] {
         for &c in &targets {
             let cfg = common::config(agent, c);
-            let outcome = b.once(&format!("fig4/{}/c{c:.1}", agent.label()), || {
+            let outcome = b.once(&format!("fig4/{agent}/c{c:.1}"), || {
                 session.search(&cfg).expect("search")
             });
             rows.push(format!(
                 "{:16} {:>5.2} {:>9.1}% {:>9.2}% {:>9.3}",
-                agent.label(),
+                agent,
                 c,
                 outcome.relative_latency() * 100.0,
                 outcome.best.accuracy * 100.0,
@@ -49,7 +49,7 @@ fn main() {
                 name: format!(
                     "fig4_{}_{}_c{:03}",
                     common::variant(),
-                    agent.label(),
+                    agent,
                     (c * 100.0) as u32
                 ),
                 config: cfg,

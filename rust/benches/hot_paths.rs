@@ -9,6 +9,9 @@
 //!   * i8 vs f32 GEMM (the measured-latency profiler's kernel substrate)
 //!   * parallel sweep orchestrator vs the 1-worker sweep (speedup + the
 //!     front-equality determinism verdict, emitted into the JSON meta)
+//!   * search driver vs the pre-driver monolith shape: `run_search` (no
+//!     observers) vs a driver with a live event observer — the event
+//!     stream's overhead budget is < 2% (verdict + pct in the JSON meta)
 //!
 //!     cargo bench --bench hot_paths
 
@@ -150,6 +153,41 @@ fn main() {
         galen::search::run_search(&ir, &sens, &ev, &mut s, &mapper, &cfg, None).unwrap()
     });
 
+    // ---- search driver vs the pre-driver monolith shape ----
+    // Identical 3-episode searches: the bare run_search wrapper (the old
+    // monolith's call shape, zero observers) vs a manually built driver
+    // streaming every SearchEvent into an observer.  The delta is the cost
+    // of the event stream itself; the budget is < 2%.
+    let mut drv_cfg = galen::search::SearchConfig::fast(AgentKind::Joint, 0.3);
+    drv_cfg.episodes = 3;
+    drv_cfg.warmup_episodes = 1;
+    drv_cfg.log_every = 0;
+    let plain_ns = b
+        .iter("search/driver_vs_monolith/run_search (3 ep)", || {
+            let ev = galen::search::SimEvaluator::new(&ir);
+            let mut s = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 5);
+            galen::search::run_search(&ir, &sens, &ev, &mut s, &mapper, &drv_cfg, None).unwrap()
+        })
+        .median_ns();
+    let events_ns = b
+        .iter("search/driver_vs_monolith/driver+events (3 ep)", || {
+            let ev = galen::search::SimEvaluator::new(&ir);
+            let mut s = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 5);
+            let mut driver = galen::search::SearchBuilder::from_config(drv_cfg.clone())
+                .build(&ir, &sens, &ev, &mut s, &mapper)
+                .unwrap();
+            driver.add_observer(|e: &galen::search::SearchEvent| {
+                std::hint::black_box(e);
+            });
+            driver.run_to_completion().unwrap()
+        })
+        .median_ns();
+    let driver_event_overhead_pct = (events_ns / plain_ns - 1.0) * 100.0;
+    println!(
+        "search driver event-stream overhead: {driver_event_overhead_pct:+.2}% \
+         (budget < 2%)"
+    );
+
     // ---- parallel sweep orchestrator: N workers vs 1 on the same grid ----
     // 6 jobs (3 agents x 2 targets) of deliberately tiny searches: the
     // section tracks orchestrator throughput (fan-out overhead, shared
@@ -239,6 +277,14 @@ fn main() {
             ("sweep_workers", sweep_workers.to_string()),
             ("sweep_parallel_speedup", format!("{sweep_speedup:.3}")),
             ("sweep_fronts_identical", sweep_fronts_identical.to_string()),
+            (
+                "driver_event_overhead_pct",
+                format!("{driver_event_overhead_pct:.3}"),
+            ),
+            (
+                "driver_event_overhead_ok",
+                (driver_event_overhead_pct < 2.0).to_string(),
+            ),
         ],
     )
     .expect("write BENCH_hot_paths.json");

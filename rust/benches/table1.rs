@@ -37,14 +37,14 @@ fn main() {
         for agent in [AgentKind::Pruning, AgentKind::Quantization, AgentKind::Joint] {
             let cfg = common::config(agent, target);
             let outcome = b.once(
-                &format!("table1/{}/c{:.1}", agent.label(), target),
+                &format!("table1/{agent}/c{target:.1}"),
                 || session.search(&cfg).expect("search"),
             );
             let rec = ExperimentRecord {
                 name: format!(
                     "table1_{}_{}_c{:03}",
                     common::variant(),
-                    agent.label(),
+                    agent,
                     (target * 100.0) as u32
                 ),
                 config: cfg,

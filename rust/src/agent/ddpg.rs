@@ -80,6 +80,45 @@ impl Default for DdpgConfig {
     }
 }
 
+impl DdpgConfig {
+    /// Serialize every hyper-parameter (checkpoint format).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("hidden", Json::arr_usize(&[self.hidden.0, self.hidden.1])),
+            ("actor_lr", Json::num(self.actor_lr as f64)),
+            ("critic_lr", Json::num(self.critic_lr as f64)),
+            ("gamma", Json::num(self.gamma as f64)),
+            ("tau", Json::num(self.tau as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("replay_capacity", Json::num(self.replay_capacity as f64)),
+            ("sigma0", Json::num(self.sigma0)),
+            ("sigma_decay", Json::num(self.sigma_decay)),
+            ("reward_ema", Json::num(self.reward_ema)),
+            ("grad_clip", Json::num(self.grad_clip as f64)),
+        ])
+    }
+
+    /// Rebuild a configuration serialized by [`DdpgConfig::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        let hidden = j.req_f64s("hidden")?;
+        anyhow::ensure!(hidden.len() == 2, "ddpg 'hidden' must be [h1, h2]");
+        Ok(Self {
+            hidden: (hidden[0] as usize, hidden[1] as usize),
+            actor_lr: j.req_f64("actor_lr")? as f32,
+            critic_lr: j.req_f64("critic_lr")? as f32,
+            gamma: j.req_f64("gamma")? as f32,
+            tau: j.req_f64("tau")? as f32,
+            batch: j.req_usize("batch")?,
+            replay_capacity: j.req_usize("replay_capacity")?,
+            sigma0: j.req_f64("sigma0")?,
+            sigma_decay: j.req_f64("sigma_decay")?,
+            reward_ema: j.req_f64("reward_ema")?,
+            grad_clip: j.req_f64("grad_clip")? as f32,
+        })
+    }
+}
+
 /// Actor-critic pair with targets, replay, normalizers and exploration state.
 pub struct Ddpg {
     /// The hyper-parameters the agent was built with.
@@ -296,6 +335,102 @@ impl Ddpg {
         Some((critic_loss, mean_q))
     }
 
+    /// Serialize the complete agent — all four networks, both Adam states,
+    /// the replay buffer, reward/state normalizers, exploration sigma, and
+    /// the live RNG stream.  An agent restored via [`Ddpg::restore`]
+    /// produces bit-identical actions and optimization steps to this one,
+    /// which is what makes driver checkpoints resumable without drift.
+    pub fn checkpoint(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("cfg", self.cfg.to_json()),
+            ("state_dim", Json::num(self.state_dim as f64)),
+            ("action_dim", Json::num(self.action_dim as f64)),
+            ("sigma", Json::num(self.sigma)),
+            ("rng", self.rng.to_json()),
+            ("actor", self.actor.to_json()),
+            ("critic", self.critic.to_json()),
+            ("actor_target", self.actor_target.to_json()),
+            ("critic_target", self.critic_target.to_json()),
+            ("actor_opt", self.actor_opt.to_json()),
+            ("critic_opt", self.critic_opt.to_json()),
+            ("replay", self.replay.to_json()),
+            ("state_norm", self.state_norm.to_json()),
+            ("reward_mean", self.reward_mean.to_json()),
+            ("reward_scale", self.reward_scale.to_json()),
+        ])
+    }
+
+    /// Rebuild an agent serialized by [`Ddpg::checkpoint`].  The optimize
+    /// workspace is rebuilt empty — it is pure scratch, fully overwritten
+    /// by each step, so this does not affect the trajectory.
+    pub fn restore(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        let cfg = DdpgConfig::from_json(j.req("cfg")?)?;
+        let actor = Mlp::from_json(j.req("actor")?)?;
+        let critic = Mlp::from_json(j.req("critic")?)?;
+        let actor_target = Mlp::from_json(j.req("actor_target")?)?;
+        let critic_target = Mlp::from_json(j.req("critic_target")?)?;
+        let actor_opt = Adam::from_json(j.req("actor_opt")?, &actor)?;
+        let critic_opt = Adam::from_json(j.req("critic_opt")?, &critic)?;
+        let state_dim = j.req_usize("state_dim")?;
+        let action_dim = j.req_usize("action_dim")?;
+        anyhow::ensure!(
+            actor.input_dim() == state_dim && actor.output_dim() == action_dim,
+            "checkpoint actor shape does not match its recorded dimensions"
+        );
+        anyhow::ensure!(
+            critic.input_dim() == state_dim + action_dim && critic.output_dim() == 1,
+            "checkpoint critic shape does not match its recorded dimensions"
+        );
+        // target networks and replay transitions feed optimize() without
+        // further checks, so a malformed checkpoint must fail here (Err),
+        // not panic layers deep into the first optimization step
+        let same_shape = |a: &Mlp, b: &Mlp| {
+            a.layers.len() == b.layers.len()
+                && a.layers.iter().zip(&b.layers).all(|(x, y)| {
+                    x.w.rows == y.w.rows && x.w.cols == y.w.cols && x.b.len() == y.b.len()
+                })
+        };
+        anyhow::ensure!(
+            same_shape(&actor, &actor_target),
+            "checkpoint actor_target shape does not match the actor"
+        );
+        anyhow::ensure!(
+            same_shape(&critic, &critic_target),
+            "checkpoint critic_target shape does not match the critic"
+        );
+        let replay = ReplayBuffer::from_json(j.req("replay")?)?;
+        for i in 0..replay.len() {
+            let t = replay.get(i);
+            anyhow::ensure!(
+                t.state.len() == state_dim
+                    && t.next_state.len() == state_dim
+                    && t.action.len() == action_dim,
+                "checkpoint replay transition {i} has mismatched dimensions"
+            );
+        }
+        let state_norm = RunningNorm::from_json(j.req("state_norm")?)?;
+        anyhow::ensure!(state_norm.dim() == state_dim, "checkpoint state-norm dimension mismatch");
+        Ok(Self {
+            replay,
+            state_norm,
+            reward_mean: Ema::from_json(j.req("reward_mean")?)?,
+            reward_scale: Ema::from_json(j.req("reward_scale")?)?,
+            sigma: j.req_f64("sigma")?,
+            actor,
+            critic,
+            actor_target,
+            critic_target,
+            actor_opt,
+            critic_opt,
+            rng: Pcg64::from_json(j.req("rng")?)?,
+            state_dim,
+            action_dim,
+            cfg,
+            ws: OptimizeWorkspace::default(),
+        })
+    }
+
     /// (pointer, capacity) of every `optimize` workspace buffer.  After a
     /// warm-up step at a stable batch shape these must not change — the
     /// zero-allocation regression test pins exactly that.
@@ -442,6 +577,60 @@ mod tests {
             agent.workspace_fingerprint(),
             "optimize reallocated workspace buffers at steady state"
         );
+    }
+
+    /// The checkpoint/restore contract: a restored agent and the original
+    /// take bit-identical actions and optimization steps from the snapshot
+    /// point onward (exploration noise included — the RNG stream resumes).
+    #[test]
+    fn checkpoint_restore_continues_bit_identically() {
+        use crate::util::json::Json;
+        let mut agent = mk(4, 2, 17);
+        let mut rng = Pcg64::new(23);
+        for _ in 0..48 {
+            let s: Vec<f32> = (0..4).map(|_| rng.next_f32()).collect();
+            let a = agent.act(&s, true, false);
+            agent.store(Transition {
+                state: s.clone(),
+                action: a,
+                reward: rng.next_f32(),
+                next_state: s,
+                terminal: rng.below(5) == 0,
+            });
+            agent.optimize();
+        }
+        agent.end_episode();
+        // round-trip through serialized text, exactly as a checkpoint file
+        let text = agent.checkpoint().dump();
+        let mut restored = Ddpg::restore(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(restored.sigma.to_bits(), agent.sigma.to_bits());
+        assert_eq!(restored.replay.len(), agent.replay.len());
+        for step in 0..20 {
+            let s: Vec<f32> = (0..4).map(|_| rng.next_f32()).collect();
+            let a1 = agent.act(&s, true, false);
+            let a2 = restored.act(&s, true, false);
+            for (x, y) in a1.iter().zip(&a2) {
+                assert_eq!(x.to_bits(), y.to_bits(), "step {step} diverged");
+            }
+            let t = Transition {
+                state: s.clone(),
+                action: a1,
+                reward: 0.25,
+                next_state: s,
+                terminal: step % 3 == 0,
+            };
+            agent.store(t.clone());
+            restored.store(t);
+            let o1 = agent.optimize();
+            let o2 = restored.optimize();
+            match (o1, o2) {
+                (Some((l1, q1)), Some((l2, q2))) => {
+                    assert_eq!(l1.to_bits(), l2.to_bits());
+                    assert_eq!(q1.to_bits(), q2.to_bits());
+                }
+                (a, b) => assert_eq!(a.is_some(), b.is_some()),
+            }
+        }
     }
 
     #[test]

@@ -23,10 +23,12 @@ pub enum AgentKind {
     Joint,
 }
 
-impl AgentKind {
-    /// Parse a CLI label (`pruning`/`quantization`/`joint`, with short
-    /// aliases).
-    pub fn parse(s: &str) -> anyhow::Result<Self> {
+/// Parses the CLI labels `pruning`/`quantization`/`joint` (with the short
+/// aliases `prune`/`quant`) — the inverse of the `Display` labels.
+impl std::str::FromStr for AgentKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s {
             "pruning" | "prune" => Ok(Self::Pruning),
             "quantization" | "quant" => Ok(Self::Quantization),
@@ -34,14 +36,16 @@ impl AgentKind {
             other => anyhow::bail!("unknown agent kind '{other}' (pruning|quantization|joint)"),
         }
     }
+}
 
-    /// Stable lowercase label (CLI, records, artifacts).
-    pub fn label(&self) -> &'static str {
-        match self {
+/// Stable lowercase label (CLI, records, artifacts); honors format padding.
+impl std::fmt::Display for AgentKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(match self {
             Self::Pruning => "pruning",
             Self::Quantization => "quantization",
             Self::Joint => "joint",
-        }
+        })
     }
 }
 
@@ -289,9 +293,14 @@ mod tests {
     }
 
     #[test]
-    fn agent_kind_parsing() {
-        assert_eq!(AgentKind::parse("joint").unwrap(), AgentKind::Joint);
-        assert_eq!(AgentKind::parse("prune").unwrap(), AgentKind::Pruning);
-        assert!(AgentKind::parse("nope").is_err());
+    fn agent_kind_parse_display_roundtrip() {
+        assert_eq!("joint".parse::<AgentKind>().unwrap(), AgentKind::Joint);
+        assert_eq!("prune".parse::<AgentKind>().unwrap(), AgentKind::Pruning);
+        assert!("nope".parse::<AgentKind>().is_err());
+        for kind in [AgentKind::Pruning, AgentKind::Quantization, AgentKind::Joint] {
+            assert_eq!(kind.to_string().parse::<AgentKind>().unwrap(), kind);
+        }
+        // Display honors width specifiers (the report tables rely on it)
+        assert_eq!(format!("{:9}", AgentKind::Joint), "joint    ");
     }
 }

@@ -8,6 +8,7 @@ use anyhow::{bail, Result};
 
 use super::quant_mode::QuantMode;
 use crate::model::{LayerKind, ModelIr};
+use crate::util::json::Json;
 
 /// Continuous per-layer compression parameters r (paper Eq. 1): one entry
 /// per layer per method, all in [0, 1].  Kept for logging/analysis; the
@@ -27,6 +28,49 @@ pub struct LayerCmp {
     pub kept_channels: usize,
     /// Quantization mode of the layer.
     pub quant: QuantMode,
+}
+
+impl LayerCmp {
+    /// Serialize one layer decision (`channels`, `mode`, `w_bits`,
+    /// `a_bits`) — the per-layer entry of sweep artifacts and driver
+    /// checkpoints.
+    pub fn to_json(&self) -> Json {
+        let (wb, ab) = self.quant.bits();
+        Json::obj(vec![
+            ("channels", Json::num(self.kept_channels as f64)),
+            ("mode", Json::str(mode_tag(self.quant))),
+            ("w_bits", Json::num(wb as f64)),
+            ("a_bits", Json::num(ab as f64)),
+        ])
+    }
+
+    /// Rebuild a decision serialized by [`LayerCmp::to_json`].
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let wb = j.req_f64("w_bits")? as u32;
+        let ab = j.req_f64("a_bits")? as u32;
+        let quant = match j.req_str("mode")? {
+            "fp32" => QuantMode::Fp32,
+            "int8" => QuantMode::Int8,
+            "mix" => QuantMode::Mix {
+                w_bits: wb as u8,
+                a_bits: ab as u8,
+            },
+            other => bail!("unknown quant mode '{other}'"),
+        };
+        Ok(Self {
+            kept_channels: j.req_usize("channels")?,
+            quant,
+        })
+    }
+}
+
+/// Stable artifact tag of a quant mode class (`fp32`/`int8`/`mix`).
+fn mode_tag(q: QuantMode) -> &'static str {
+    match q {
+        QuantMode::Fp32 => "fp32",
+        QuantMode::Int8 => "int8",
+        QuantMode::Mix { .. } => "mix",
+    }
 }
 
 /// A complete discrete compression policy: one `LayerCmp` per IR layer.
@@ -96,6 +140,21 @@ impl DiscretePolicy {
                 l.params_at(cin, self.layers[l.index].kept_channels)
             })
             .sum()
+    }
+
+    /// Serialize the policy as an array of per-layer decisions (the
+    /// `policy` field of sweep artifacts and driver checkpoints).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.layers.iter().map(|l| l.to_json()).collect())
+    }
+
+    /// Rebuild a policy serialized by [`DiscretePolicy::to_json`].
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let arr = j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("policy json is not an array"))?;
+        let layers = arr.iter().map(LayerCmp::from_json).collect::<Result<Vec<_>>>()?;
+        Ok(Self { layers })
     }
 
     /// Human-readable per-layer summary (Fig 3 style).
@@ -331,6 +390,27 @@ mod tests {
         let mut p = DiscretePolicy::reference(&ir);
         p.layers[0].kept_channels = 0;
         assert!(PolicyInputs::build(&ir, &p, &weights).is_err());
+    }
+
+    #[test]
+    fn policy_json_roundtrip_all_modes() {
+        let mut p = DiscretePolicy {
+            layers: vec![
+                LayerCmp { kept_channels: 7, quant: QuantMode::Fp32 },
+                LayerCmp { kept_channels: 3, quant: QuantMode::Int8 },
+                LayerCmp {
+                    kept_channels: 64,
+                    quant: QuantMode::Mix { w_bits: 3, a_bits: 5 },
+                },
+            ],
+        };
+        let back =
+            DiscretePolicy::from_json(&crate::util::json::Json::parse(&p.to_json().dump()).unwrap())
+                .unwrap();
+        assert_eq!(back, p);
+        p.layers[0].quant = QuantMode::Int8;
+        assert_ne!(back, p);
+        assert!(DiscretePolicy::from_json(&crate::util::json::Json::Num(1.0)).is_err());
     }
 
     #[test]

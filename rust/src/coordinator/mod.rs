@@ -7,10 +7,15 @@
 //!   Figures 3-4).
 //! * `sequential` — the appendix's prune-then-quantize / quantize-then-prune
 //!   schemes (Figure 5).
+//! * `serve` — the long-running JSONL job service (`galen serve`):
+//!   submit/status/events/result/cancel over stdin/stdout, many concurrent
+//!   search jobs multiplexed over a worker pool with shared latency caches.
 //! * result records are serialized to `results/*.json` for EXPERIMENTS.md.
 
 mod report;
+mod service;
 mod session;
 
 pub use report::{policy_json, policy_report, table1_header, ExperimentRecord};
+pub use service::{serve, JobStatus, ServeOptions, ServeStats, SERVE_PROTOCOL_VERSION};
 pub use session::{Backend, Session, SessionOptions};

@@ -39,7 +39,7 @@ impl ExperimentRecord {
     pub fn table1_row(&self) -> String {
         format!(
             "{:16} {:>4.2} {:>10.3e} {:>10.3e} {:>8.2} ms {:>7.2} % {:>7.1} %",
-            self.config.agent.label(),
+            self.config.agent,
             self.config.target,
             self.outcome.best.macs as f64,
             self.outcome.best.bops as f64,

@@ -1,0 +1,638 @@
+//! The long-running search job service behind `galen serve`.
+//!
+//! Speaks a line-oriented JSONL protocol over any `BufRead`/`Write` pair
+//! (the CLI wires stdin/stdout; tests wire in-memory buffers).  Each
+//! request is one JSON object per line with an `op` field; each response is
+//! one JSON object per line with `ok` plus the request's `id` echoed back
+//! when present.  Operations:
+//!
+//! | op         | request fields                         | response                       |
+//! |------------|----------------------------------------|--------------------------------|
+//! | `submit`   | `spec{agent, target, preset?, config?}`| `job`, `state`                 |
+//! | `status`   | `job`                                  | `state`, `episode`, `episodes` |
+//! | `events`   | `job`, `since?`                        | `events[]`, `next`             |
+//! | `result`   | `job`, `wait?`                         | `state`, `outcome`, `policy`   |
+//! | `cancel`   | `job`                                  | `state`                        |
+//! | `forget`   | `job`                                  | `state` (events/outcome freed) |
+//! | `list`     |                                        | `jobs[]`                       |
+//! | `shutdown` |                                        | (serve loop exits)             |
+//!
+//! Jobs multiplex over a fixed worker pool: each worker drives a
+//! [`crate::search::SearchDriver`] episode by episode, streaming its
+//! [`crate::search::SearchEvent`]s into the job's event log (what `events`
+//! pages through) and honoring `cancel` at episode boundaries — the
+//! granularity the driver state machine provides.  All workers share one
+//! [`LatencyFactory`], so concurrent jobs reuse each other's latency-cache
+//! entries exactly like parallel sweep workers do.
+//!
+//! Accuracy is always the deterministic synthetic proxy
+//! ([`crate::search::SimEvaluator`]): the PJRT evaluator is not
+//! thread-safe, and stdout is the protocol channel.  Validate chosen
+//! policies afterwards with `galen validate`.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::io::{BufRead, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::agent::mapper_for;
+use crate::coordinator::ExperimentRecord;
+use crate::eval::SensitivityTable;
+use crate::model::ModelIr;
+use crate::search::{
+    LatencyFactory, SearchBuilder, SearchConfig, SearchEvent, SearchOutcome, SimEvaluator,
+};
+use crate::util::json::Json;
+
+/// Version of the JSONL protocol (the `hello`-less handshake: clients can
+/// check it via `list` responses).
+pub const SERVE_PROTOCOL_VERSION: usize = 1;
+
+/// Lifecycle state of one submitted job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    /// Waiting for a worker.
+    Queued,
+    /// A worker is driving its search.
+    Running,
+    /// Finished; the outcome is available.
+    Done,
+    /// The search errored; see the `error` field.
+    Failed,
+    /// Cancelled before completion.
+    Cancelled,
+}
+
+impl JobStatus {
+    /// Whether the job will never change state again.
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobStatus::Done | JobStatus::Failed | JobStatus::Cancelled)
+    }
+}
+
+/// Stable lowercase label (protocol responses); honors format padding.
+impl fmt::Display for JobStatus {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad(match self {
+            Self::Queued => "queued",
+            Self::Running => "running",
+            Self::Done => "done",
+            Self::Failed => "failed",
+            Self::Cancelled => "cancelled",
+        })
+    }
+}
+
+/// Knobs of one [`serve`] run.  The default runs on all cores and keeps
+/// results in memory only.
+#[derive(Clone, Debug, Default)]
+pub struct ServeOptions {
+    /// Worker threads driving searches (0 = all cores).
+    pub workers: usize,
+    /// Where finished jobs' result records land (None = in-memory only).
+    pub results_dir: Option<PathBuf>,
+    /// Default search seed for submitted jobs (None keeps the presets'
+    /// built-in seed); a spec's `config.seed` override always wins.
+    pub base_seed: Option<u64>,
+}
+
+/// Counters the serve loop reports when it exits.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Jobs accepted via `submit`.
+    pub submitted: usize,
+    /// Jobs that finished with an outcome.
+    pub completed: usize,
+    /// Jobs that errored.
+    pub failed: usize,
+    /// Jobs cancelled before completion.
+    pub cancelled: usize,
+}
+
+/// Mutable job state behind the per-job mutex.
+struct JobInner {
+    status: JobStatus,
+    episode: usize,
+    cancel: bool,
+    events: Vec<Json>,
+    outcome: Option<SearchOutcome>,
+    error: Option<String>,
+    artifact: Option<PathBuf>,
+}
+
+/// One submitted job: identity + config outside the lock, state inside.
+struct Job {
+    id: String,
+    cfg: SearchConfig,
+    inner: Mutex<JobInner>,
+    /// Signalled on every terminal transition (`result` with `wait` parks
+    /// here).
+    done: Condvar,
+}
+
+impl Job {
+    fn terminal_transition(&self, f: impl FnOnce(&mut JobInner)) {
+        let mut st = self.inner.lock().unwrap();
+        f(&mut st);
+        drop(st);
+        self.done.notify_all();
+    }
+}
+
+/// Shared service state: the environment jobs run against plus the queue.
+struct ServiceState<'a> {
+    ir: &'a ModelIr,
+    sens: &'a SensitivityTable,
+    factory: &'a LatencyFactory,
+    variant: String,
+    results_dir: Option<PathBuf>,
+    base_seed: Option<u64>,
+    jobs: Mutex<Vec<Arc<Job>>>,
+    queue: Mutex<VecDeque<usize>>,
+    /// Signalled on submit and shutdown; idle workers park here instead of
+    /// polling (a serve process is long-running — zero idle cost matters).
+    queue_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Run the job service until `input` is exhausted (or a `shutdown` op),
+/// then drain the queue and return the run's counters.
+///
+/// `ir`/`sens` describe the model every job searches; `factory` supplies
+/// each job's latency provider with caches shared across workers;
+/// `variant` names result records (`serve_<variant>_<job>.json`).
+pub fn serve<R: BufRead, W: Write>(
+    ir: &ModelIr,
+    sens: &SensitivityTable,
+    factory: &LatencyFactory,
+    variant: &str,
+    opts: &ServeOptions,
+    input: R,
+    output: &mut W,
+) -> Result<ServeStats> {
+    let workers = if opts.workers == 0 {
+        crate::util::num_threads()
+    } else {
+        opts.workers
+    };
+    let svc = ServiceState {
+        ir,
+        sens,
+        factory,
+        variant: variant.to_string(),
+        results_dir: opts.results_dir.clone(),
+        base_seed: opts.base_seed,
+        jobs: Mutex::new(Vec::new()),
+        queue: Mutex::new(VecDeque::new()),
+        queue_cv: Condvar::new(),
+        shutdown: AtomicBool::new(false),
+    };
+    log::info!("serve: {workers} workers, protocol v{SERVE_PROTOCOL_VERSION}");
+    let protocol_result: Result<()> = std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| worker_loop(&svc));
+        }
+        let r = protocol_loop(&svc, input, output);
+        // EOF (or error): let the workers drain the queue and exit.  The
+        // flag is published under the queue lock so a worker between its
+        // shutdown check and its wait cannot miss the wakeup.
+        svc.shutdown.store(true, Ordering::SeqCst);
+        let _queue = svc.queue.lock().unwrap();
+        svc.queue_cv.notify_all();
+        drop(_queue);
+        r
+    });
+    protocol_result?;
+    let mut stats = ServeStats::default();
+    for job in svc.jobs.lock().unwrap().iter() {
+        stats.submitted += 1;
+        match job.inner.lock().unwrap().status {
+            JobStatus::Done => stats.completed += 1,
+            JobStatus::Failed => stats.failed += 1,
+            JobStatus::Cancelled => stats.cancelled += 1,
+            // unreachable after the drain barrier, but don't miscount
+            JobStatus::Queued | JobStatus::Running => {}
+        }
+    }
+    log::info!(
+        "serve: exit — {} submitted, {} done, {} failed, {} cancelled",
+        stats.submitted,
+        stats.completed,
+        stats.failed,
+        stats.cancelled
+    );
+    Ok(stats)
+}
+
+/// Read requests line by line, answer each with exactly one response line.
+fn protocol_loop<R: BufRead, W: Write>(
+    svc: &ServiceState<'_>,
+    input: R,
+    output: &mut W,
+) -> Result<()> {
+    for line in input.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let error_response = |e: anyhow::Error| {
+            Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(format!("{e:#}"))),
+            ])
+        };
+        // parse up front so even failing requests echo their correlation
+        // id — pipelining clients must be able to match every response
+        let response = match Json::parse(line) {
+            Err(e) => error_response(anyhow::anyhow!("bad request json: {e}")),
+            Ok(req) => {
+                let mut r = match handle_request(svc, &req) {
+                    Ok(j) => j,
+                    Err(e) => error_response(e),
+                };
+                if let (Json::Obj(m), Some(id)) = (&mut r, req.get("id")) {
+                    m.insert("id".to_string(), id.clone());
+                }
+                r
+            }
+        };
+        writeln!(output, "{}", response.dump())?;
+        output.flush()?;
+        if svc.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn handle_request(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
+    let op = req.req_str("op")?;
+    match op {
+        "submit" => op_submit(svc, req),
+        "status" => op_status(svc, req),
+        "events" => op_events(svc, req),
+        "result" => op_result(svc, req),
+        "cancel" => op_cancel(svc, req),
+        "forget" => op_forget(svc, req),
+        "list" => op_list(svc),
+        "shutdown" => {
+            svc.shutdown.store(true, Ordering::SeqCst);
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("state", Json::str("shutdown")),
+            ]))
+        }
+        other => anyhow::bail!(
+            "unknown op '{other}' (submit|status|events|result|cancel|forget|list|shutdown)"
+        ),
+    }
+}
+
+/// Build a job's `SearchConfig` from a submit spec: required
+/// `agent`/`target`, optional `preset` (fast|default|paper) and a `config`
+/// override object routed through `SearchConfig::apply_json` (unknown keys
+/// rejected with the valid list).
+fn config_from_spec(spec: &Json, base_seed: Option<u64>) -> Result<SearchConfig> {
+    // same fail-loud contract as SearchConfig::apply_json: a typo like
+    // "cofig" must not silently run the defaults
+    const SPEC_KEYS: &[&str] = &["agent", "target", "preset", "config"];
+    let obj = spec
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("submit 'spec' must be a JSON object"))?;
+    for key in obj.keys() {
+        anyhow::ensure!(
+            SPEC_KEYS.contains(&key.as_str()),
+            "unknown spec key '{key}' (valid keys: {})",
+            SPEC_KEYS.join(", ")
+        );
+    }
+    let agent = spec.req_str("agent")?.parse()?;
+    let target = spec.req_f64("target")?;
+    let preset = match spec.get("preset") {
+        None => "default",
+        Some(p) => p
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("spec 'preset' must be a string"))?,
+    };
+    let mut cfg = match preset {
+        "fast" => SearchConfig::fast(agent, target),
+        "default" => SearchConfig::new(agent, target),
+        "paper" => SearchConfig::paper(agent, target),
+        other => anyhow::bail!("unknown preset '{other}' (fast|default|paper)"),
+    };
+    // progress flows through the event stream; episode logs would only
+    // clutter stderr for every concurrent job
+    cfg.log_every = 0;
+    // the service's --seed is the default; an explicit config.seed wins
+    if let Some(seed) = base_seed {
+        cfg.seed = seed;
+    }
+    if let Some(overrides) = spec.get("config") {
+        cfg.apply_json(overrides)?;
+    }
+    Ok(cfg)
+}
+
+fn op_submit(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
+    anyhow::ensure!(
+        !svc.shutdown.load(Ordering::SeqCst),
+        "service is shutting down"
+    );
+    let cfg = config_from_spec(req.req("spec")?, svc.base_seed)?;
+    let mut jobs = svc.jobs.lock().unwrap();
+    let index = jobs.len();
+    let id = format!("job-{index}");
+    jobs.push(Arc::new(Job {
+        id: id.clone(),
+        cfg,
+        inner: Mutex::new(JobInner {
+            status: JobStatus::Queued,
+            episode: 0,
+            cancel: false,
+            events: Vec::new(),
+            outcome: None,
+            error: None,
+            artifact: None,
+        }),
+        done: Condvar::new(),
+    }));
+    drop(jobs);
+    let mut queue = svc.queue.lock().unwrap();
+    queue.push_back(index);
+    svc.queue_cv.notify_one();
+    drop(queue);
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("job", Json::str(id)),
+        ("state", Json::str(JobStatus::Queued.to_string())),
+    ]))
+}
+
+/// O(1) lookup: ids are `job-<index>` into the append-only jobs vec, so a
+/// long-running service never pays a scan (under the global lock) per poll.
+fn find_job(svc: &ServiceState<'_>, req: &Json) -> Result<Arc<Job>> {
+    let id = req.req_str("job")?;
+    let index: Option<usize> = id.strip_prefix("job-").and_then(|n| n.parse().ok());
+    index
+        .and_then(|i| svc.jobs.lock().unwrap().get(i).cloned())
+        .ok_or_else(|| anyhow::anyhow!("unknown job '{id}'"))
+}
+
+fn op_status(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
+    let job = find_job(svc, req)?;
+    let st = job.inner.lock().unwrap();
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("job", Json::str(job.id.clone())),
+        ("state", Json::str(st.status.to_string())),
+        ("episode", Json::num(st.episode as f64)),
+        ("episodes", Json::num(job.cfg.episodes as f64)),
+    ];
+    if let Some(e) = &st.error {
+        fields.push(("error", Json::str(e.clone())));
+    }
+    Ok(Json::obj(fields))
+}
+
+fn op_events(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
+    let job = find_job(svc, req)?;
+    let since = req.get("since").and_then(Json::as_usize).unwrap_or(0);
+    let st = job.inner.lock().unwrap();
+    let from = since.min(st.events.len());
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("job", Json::str(job.id.clone())),
+        ("events", Json::Arr(st.events[from..].to_vec())),
+        ("next", Json::num(st.events.len() as f64)),
+    ]))
+}
+
+fn op_result(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
+    let job = find_job(svc, req)?;
+    let wait = req.get("wait").and_then(Json::as_bool).unwrap_or(false);
+    let mut st = job.inner.lock().unwrap();
+    if wait {
+        while !st.status.is_terminal() {
+            st = job.done.wait(st).unwrap();
+        }
+    }
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("job", Json::str(job.id.clone())),
+        ("state", Json::str(st.status.to_string())),
+    ];
+    if let Some(outcome) = &st.outcome {
+        fields.push(("outcome", outcome.to_json()));
+        fields.push(("policy", outcome.best_policy.to_json()));
+    }
+    if let Some(path) = &st.artifact {
+        fields.push(("artifact", Json::str(path.display().to_string())));
+    }
+    if let Some(e) = &st.error {
+        fields.push(("error", Json::str(e.clone())));
+    }
+    Ok(Json::obj(fields))
+}
+
+fn op_cancel(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
+    let job = find_job(svc, req)?;
+    let state = {
+        let mut st = job.inner.lock().unwrap();
+        st.cancel = true;
+        if st.status == JobStatus::Queued {
+            // never reached a worker: terminal immediately
+            st.status = JobStatus::Cancelled;
+            job.done.notify_all();
+        }
+        st.status
+    };
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("job", Json::str(job.id.clone())),
+        ("state", Json::str(state.to_string())),
+    ]))
+}
+
+/// Release a terminal job's event log and outcome (the status line
+/// survives).  A serve process is long-running and jobs are append-only,
+/// so clients that fetched what they need bound the service's memory by
+/// forgetting — without this every outcome and event stream would be
+/// retained for the process lifetime.
+fn op_forget(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
+    let job = find_job(svc, req)?;
+    let mut st = job.inner.lock().unwrap();
+    anyhow::ensure!(
+        st.status.is_terminal(),
+        "job '{}' is {} — only finished jobs can be forgotten",
+        job.id,
+        st.status
+    );
+    st.events = Vec::new();
+    st.outcome = None;
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("job", Json::str(job.id.clone())),
+        ("state", Json::str(st.status.to_string())),
+    ]))
+}
+
+fn op_list(svc: &ServiceState<'_>) -> Result<Json> {
+    let jobs = svc.jobs.lock().unwrap();
+    let rows = jobs
+        .iter()
+        .map(|job| {
+            let st = job.inner.lock().unwrap();
+            Json::obj(vec![
+                ("job", Json::str(job.id.clone())),
+                ("agent", Json::str(job.cfg.agent.to_string())),
+                ("target", Json::num(job.cfg.target)),
+                ("state", Json::str(st.status.to_string())),
+                ("episode", Json::num(st.episode as f64)),
+                ("episodes", Json::num(job.cfg.episodes as f64)),
+            ])
+        })
+        .collect();
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("protocol", Json::num(SERVE_PROTOCOL_VERSION as f64)),
+        ("jobs", Json::Arr(rows)),
+    ]))
+}
+
+/// Pull jobs off the queue until shutdown is flagged *and* the queue is
+/// empty — submitted work always drains, even when the client hangs up
+/// right after submitting.  Idle workers park on the queue condvar (no
+/// polling); submit and shutdown wake them.
+fn worker_loop(svc: &ServiceState<'_>) {
+    let mut queue = svc.queue.lock().unwrap();
+    loop {
+        if let Some(index) = queue.pop_front() {
+            let job = svc.jobs.lock().unwrap()[index].clone();
+            drop(queue);
+            run_job(svc, &job);
+            queue = svc.queue.lock().unwrap();
+            continue;
+        }
+        if svc.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        queue = svc.queue_cv.wait(queue).unwrap();
+    }
+}
+
+/// Drive one job start to finish on this worker thread.
+fn run_job(svc: &ServiceState<'_>, job: &Arc<Job>) {
+    {
+        let mut st = job.inner.lock().unwrap();
+        if st.status.is_terminal() {
+            return; // cancelled while queued
+        }
+        if st.cancel {
+            st.status = JobStatus::Cancelled;
+            drop(st);
+            job.done.notify_all();
+            return;
+        }
+        st.status = JobStatus::Running;
+    }
+    log::info!("serve: {} started ({} c={})", job.id, job.cfg.agent, job.cfg.target);
+    match drive_job(svc, job) {
+        Ok(Some((outcome, artifact))) => job.terminal_transition(|st| {
+            st.outcome = Some(outcome);
+            st.artifact = artifact;
+            st.status = JobStatus::Done;
+        }),
+        Ok(None) => job.terminal_transition(|st| st.status = JobStatus::Cancelled),
+        Err(e) => {
+            log::warn!("serve: {} failed: {e:#}", job.id);
+            job.terminal_transition(|st| {
+                st.error = Some(format!("{e:#}"));
+                st.status = JobStatus::Failed;
+            });
+        }
+    }
+}
+
+/// The worker-side search: a driver run episode by episode, events teed
+/// into the job log, cancellation honored between episodes.  Returns
+/// `Ok(None)` when cancelled.
+fn drive_job(
+    svc: &ServiceState<'_>,
+    job: &Arc<Job>,
+) -> Result<Option<(SearchOutcome, Option<PathBuf>)>> {
+    let evaluator = SimEvaluator::new(svc.ir);
+    // same per-search seed split as Session::search / sweep workers
+    let mut provider = svc.factory.provider(job.cfg.seed ^ 0x5117, svc.ir)?;
+    let mapper = mapper_for(job.cfg.agent);
+    let mut driver = SearchBuilder::from_config(job.cfg.clone()).build(
+        svc.ir,
+        svc.sens,
+        &evaluator,
+        provider.as_mut(),
+        mapper.as_ref(),
+    )?;
+    let sink = job.clone();
+    driver.add_observer(move |event: &SearchEvent| {
+        let mut st = sink.inner.lock().unwrap();
+        if let SearchEvent::EpisodeFinished(s) = event {
+            st.episode = s.episode + 1;
+        }
+        st.events.push(event.to_json());
+    });
+    let mut cancelled_at = None;
+    loop {
+        // completion wins over a cancel landing during the final episode:
+        // "cancel at the next episode boundary" has no boundary left, and
+        // the event stream has already announced `finished`
+        if driver.is_done() {
+            break;
+        }
+        if job.inner.lock().unwrap().cancel {
+            cancelled_at = Some(driver.episode());
+            break;
+        }
+        if driver.run_episode()?.is_none() {
+            break;
+        }
+    }
+    let outcome = if cancelled_at.is_none() {
+        Some(driver.outcome()?)
+    } else {
+        None
+    };
+    drop(driver);
+    // persist even on the cancel path: measured/hybrid backends already
+    // paid for their kernel measurements, the next job should reuse them
+    provider.persist()?;
+    let Some(outcome) = outcome else {
+        log::info!(
+            "serve: {} cancelled at episode {}",
+            job.id,
+            cancelled_at.unwrap_or(0)
+        );
+        return Ok(None);
+    };
+    let artifact = match &svc.results_dir {
+        None => None,
+        Some(dir) => {
+            let record = ExperimentRecord {
+                name: format!("serve_{}_{}", svc.variant, job.id),
+                config: job.cfg.clone(),
+                outcome: outcome.clone(),
+            };
+            Some(record.save(svc.ir, dir)?)
+        }
+    };
+    log::info!(
+        "serve: {} done (best reward {:+.4}, rel.lat {:.1}%)",
+        job.id,
+        outcome.best.reward,
+        outcome.relative_latency() * 100.0
+    );
+    Ok(Some((outcome, artifact)))
+}

@@ -27,6 +27,30 @@ pub enum Backend {
     Synthetic,
 }
 
+/// Parses the CLI labels `pjrt`/`synthetic` (with the aliases
+/// `real`/`sim`) — the inverse of the `Display` labels.
+impl std::str::FromStr for Backend {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "pjrt" | "real" => Ok(Self::Pjrt),
+            "synthetic" | "sim" => Ok(Self::Synthetic),
+            other => anyhow::bail!("unknown accuracy backend '{other}' (pjrt|synthetic)"),
+        }
+    }
+}
+
+/// Stable lowercase label (CLI, logs); honors format padding.
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(match self {
+            Self::Pjrt => "pjrt",
+            Self::Synthetic => "synthetic",
+        })
+    }
+}
+
 /// Everything configurable about a session, with sensible defaults from
 /// `SessionOptions::new`.
 #[derive(Clone, Debug)]
@@ -140,6 +164,22 @@ impl Session {
             evaluator: None,
             sens,
         }
+    }
+
+    /// An artifact-free session over the in-code tiny fixture IR:
+    /// synthetic accuracy, fast profiler settings, no on-disk caches.
+    /// What every `--fixture` mode (`galen serve`, the example smoke
+    /// runs) builds on, so the fixture wiring lives in exactly one place.
+    pub fn fixture(latency: LatencyKind, seed: u64) -> Result<Self> {
+        let ir = ModelIr::from_meta(&crate::model::ir::test_fixtures::tiny_meta())?;
+        let mut opts = SessionOptions::new("tiny");
+        opts.backend = Backend::Synthetic;
+        opts.latency = latency;
+        opts.seed = seed;
+        opts.sensitivity_cache = None;
+        opts.profiles_dir = None; // keep fixture runs artifact-free on disk
+        opts.profiler = ProfilerConfig::fast();
+        Ok(Self::synthetic(ir, opts))
     }
 
     /// An analytical latency simulator for this session's target.
@@ -377,6 +417,16 @@ mod tests {
             ..Default::default()
         };
         cfg
+    }
+
+    #[test]
+    fn backend_parse_display_roundtrip() {
+        assert_eq!("pjrt".parse::<Backend>().unwrap(), Backend::Pjrt);
+        assert_eq!("synthetic".parse::<Backend>().unwrap(), Backend::Synthetic);
+        assert!("nope".parse::<Backend>().is_err());
+        for b in [Backend::Pjrt, Backend::Synthetic] {
+            assert_eq!(b.to_string().parse::<Backend>().unwrap(), b);
+        }
     }
 
     #[test]

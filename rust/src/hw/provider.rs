@@ -102,9 +102,12 @@ pub enum LatencyKind {
     Hybrid,
 }
 
-impl LatencyKind {
-    /// Parse a CLI label (`sim`/`measured`/`hybrid`, with aliases).
-    pub fn parse(s: &str) -> Result<Self> {
+/// Parses the CLI labels `sim`/`measured`/`hybrid` (with the aliases
+/// `simulator`/`profiler`) — the inverse of the `Display` labels.
+impl std::str::FromStr for LatencyKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s {
             "sim" | "simulator" => Ok(Self::Sim),
             "measured" | "profiler" => Ok(Self::Measured),
@@ -112,14 +115,16 @@ impl LatencyKind {
             other => anyhow::bail!("unknown latency backend '{other}' (sim|measured|hybrid)"),
         }
     }
+}
 
-    /// Stable lowercase label (CLI, records, logs).
-    pub fn label(&self) -> &'static str {
-        match self {
+/// Stable lowercase label (CLI, records, logs); honors format padding.
+impl std::fmt::Display for LatencyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(match self {
             Self::Sim => "sim",
             Self::Measured => "measured",
             Self::Hybrid => "hybrid",
-        }
+        })
     }
 }
 
@@ -313,12 +318,14 @@ mod tests {
     }
 
     #[test]
-    fn latency_kind_parses() {
-        assert_eq!(LatencyKind::parse("sim").unwrap(), LatencyKind::Sim);
-        assert_eq!(LatencyKind::parse("measured").unwrap(), LatencyKind::Measured);
-        assert_eq!(LatencyKind::parse("hybrid").unwrap(), LatencyKind::Hybrid);
-        assert!(LatencyKind::parse("nope").is_err());
-        assert_eq!(LatencyKind::Hybrid.label(), "hybrid");
+    fn latency_kind_parse_display_roundtrip() {
+        assert_eq!("sim".parse::<LatencyKind>().unwrap(), LatencyKind::Sim);
+        assert_eq!("measured".parse::<LatencyKind>().unwrap(), LatencyKind::Measured);
+        assert_eq!("hybrid".parse::<LatencyKind>().unwrap(), LatencyKind::Hybrid);
+        assert!("nope".parse::<LatencyKind>().is_err());
+        for kind in [LatencyKind::Sim, LatencyKind::Measured, LatencyKind::Hybrid] {
+            assert_eq!(kind.to_string().parse::<LatencyKind>().unwrap(), kind);
+        }
     }
 
     #[test]

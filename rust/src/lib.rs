@@ -27,10 +27,15 @@
 //! * [`model`] / [`compress`] — the structural IR and compression policies;
 //! * [`hw`] — latency backends behind the pluggable `hw::LatencyProvider`:
 //!   analytical simulator, measured-kernel profiler, calibrated hybrid;
-//! * [`search`] — the episode loop (`search::run_search`) and the parallel
-//!   Pareto-sweep orchestrator (`search::run_sweep`);
+//! * [`search`] — the resumable episode-loop state machine
+//!   (`search::SearchDriver`: step/episode granularity, `SearchEvent`
+//!   observers, bit-identical checkpoint/resume), its one-call wrapper
+//!   `search::run_search`, and the parallel Pareto-sweep orchestrator
+//!   (`search::run_sweep`);
 //! * [`coordinator`] — `coordinator::Session` wires it all together and
-//!   persists results; the `galen` binary is a thin CLI over it.
+//!   persists results; `coordinator::serve` multiplexes concurrent search
+//!   jobs over a JSONL protocol (`galen serve`); the `galen` binary is a
+//!   thin CLI over both.
 //!
 //! ## Quick start (no artifacts required)
 //!

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   search       run a policy search (agent, target, episodes, ...)
 //!   sweep        parallel Pareto sweep across agents x targets (--jobs)
+//!   serve        long-running JSONL job service over stdin/stdout
 //!   sequential   prune->quant / quant->prune schemes (Figure 5 protocol)
 //!   sensitivity  compute + print the layer sensitivity table (Figure 6)
 //!   latency      profile the hardware simulator on a model variant
@@ -14,7 +15,9 @@
 use anyhow::Result;
 use galen::agent::AgentKind;
 use galen::compress::DiscretePolicy;
-use galen::coordinator::{policy_report, Backend, ExperimentRecord, Session, SessionOptions};
+use galen::coordinator::{
+    policy_report, serve, Backend, ExperimentRecord, ServeOptions, Session, SessionOptions,
+};
 use galen::eval::{retrain, RetrainCfg, SensitivityConfig, Split};
 use galen::hw::LatencyKind;
 use galen::search::{SearchConfig, SweepGrid};
@@ -34,6 +37,7 @@ fn main() {
     let r = match cmd {
         "search" => cmd_search(&rest),
         "sweep" => cmd_sweep(&rest),
+        "serve" => cmd_serve(&rest),
         "sequential" => cmd_sequential(&rest),
         "sensitivity" => cmd_sensitivity(&rest),
         "latency" => cmd_latency(&rest),
@@ -61,6 +65,7 @@ fn usage() -> &'static str {
      Commands:\n\
        search       run one policy search (pruning|quantization|joint)\n\
        sweep        parallel Pareto sweep across agents x targets (Fig 4)\n\
+       serve        JSONL job service over stdin/stdout (submit/status/events/result/cancel)\n\
        sequential   two-stage prune/quant schemes (Fig 5)\n\
        sensitivity  layer sensitivity analysis (Fig 6)\n\
        latency      hardware-simulator latency profile\n\
@@ -71,13 +76,14 @@ fn usage() -> &'static str {
 /// flags must be wired here exactly once).
 fn session_opts(args: &galen::util::cli::Args) -> Result<SessionOptions> {
     let mut opts = SessionOptions::new(args.get("variant"));
+    opts.backend = args.get("backend").parse()?;
     if args.has_flag("synthetic") {
         opts.backend = Backend::Synthetic;
     }
     if args.has_flag("paper-sensitivity") {
         opts.sensitivity = SensitivityConfig::paper();
     }
-    opts.latency = LatencyKind::parse(args.get("latency"))?;
+    opts.latency = args.get("latency").parse()?;
     opts.seed = args.get_u64("seed")?;
     Ok(opts)
 }
@@ -96,8 +102,9 @@ fn base_cli(name: &'static str, about: &'static str) -> Cli {
         .opt("beta", "-3.0", "reward cost exponent (Eq. 6)")
         .opt("results", "results", "results directory")
         .opt("latency", "sim", "latency backend: sim|measured|hybrid")
+        .opt("backend", "pjrt", "accuracy backend: pjrt|synthetic")
         .opt("config", "", "JSON config file with search overrides (configs/*.json)")
-        .flag("synthetic", "synthetic accuracy backend (no PJRT)")
+        .flag("synthetic", "synthetic accuracy backend (alias for --backend synthetic)")
         .flag("paper-sensitivity", "Fig-6 resolution sensitivity probes")
         .flag("paper-episodes", "use the paper's 310/410 episode counts")
 }
@@ -117,7 +124,7 @@ fn mk_config(args: &galen::util::cli::Args, agent: AgentKind, target: f64) -> Re
     let config_path = args.get("config");
     if !config_path.is_empty() {
         let j = Json::read_file(std::path::Path::new(config_path))?;
-        cfg.apply_json(&j);
+        cfg.apply_json(&j)?;
     }
     Ok(cfg)
 }
@@ -130,7 +137,7 @@ fn cmd_search(argv: &[String]) -> Result<()> {
         .flag("no-sensitivity", "ablation: constant sensitivity features");
     let args = cli.parse_from(argv)?;
     let session = common_session(&args)?;
-    let agent = AgentKind::parse(args.get("agent"))?;
+    let agent: AgentKind = args.get("agent").parse()?;
     let target = args.get_f64("target")?;
     let cfg = mk_config(&args, agent, target)?;
 
@@ -148,9 +155,8 @@ fn cmd_search(argv: &[String]) -> Result<()> {
     println!("{}", galen::coordinator::table1_header());
     let rec = ExperimentRecord {
         name: format!(
-            "search_{}_{}_c{:03}",
+            "search_{}_{agent}_c{:03}",
             session.opts.variant,
-            agent.label(),
             (target * 100.0) as u32
         ),
         config: cfg,
@@ -205,7 +211,7 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
     let agents = args
         .get_list("agents")
         .iter()
-        .map(|s| AgentKind::parse(s))
+        .map(|s| s.parse::<AgentKind>())
         .collect::<Result<Vec<_>>>()?;
     anyhow::ensure!(!agents.is_empty() && !targets.is_empty(), "empty sweep grid");
     let proto = mk_config(&args, agents[0], targets[0])?;
@@ -219,7 +225,7 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
             name: format!(
                 "sweep_{}_{}_c{:03}_{:08x}",
                 session.opts.variant,
-                o.job.agent.label(),
+                o.job.agent,
                 (o.job.target * 100.0) as u32,
                 o.job.seed as u32
             ),
@@ -253,7 +259,62 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         report.outcomes.len(),
         report.workers,
         report.wall_s,
-        session.opts.latency.label()
+        session.opts.latency
+    );
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let cli = Cli::new(
+        "galen serve",
+        "long-running search job service: JSONL requests on stdin, responses on stdout",
+    )
+    .opt("variant", "resnet18s", "model variant (micro|resnet18s|resnet18)")
+    .opt("seed", "7", "session seed")
+    .opt("latency", "sim", "latency backend: sim|measured|hybrid")
+    .opt("jobs", "0", "search worker threads (0 = all cores)")
+    .opt("results", "results", "record directory for finished jobs ('' disables)")
+    .flag("fixture", "use the in-code tiny fixture IR (no artifacts needed)");
+    let args = cli.parse_from(argv)?;
+    // Accuracy is always the synthetic proxy here: stdout is the protocol
+    // channel and the PJRT evaluator is not thread-safe — validate chosen
+    // policies afterwards with `galen validate`.
+    let session = if args.has_flag("fixture") {
+        Session::fixture(args.get("latency").parse()?, args.get_u64("seed")?)?
+    } else {
+        let mut opts = SessionOptions::new(args.get("variant"));
+        opts.backend = Backend::Synthetic;
+        opts.latency = args.get("latency").parse()?;
+        opts.seed = args.get_u64("seed")?;
+        Session::open(opts)?
+    };
+    let factory = session.latency_factory();
+    let results = args.get("results");
+    let opts = ServeOptions {
+        workers: args.get_usize("jobs")?,
+        results_dir: if results.is_empty() {
+            None
+        } else {
+            Some(std::path::PathBuf::from(results))
+        },
+        base_seed: Some(args.get_u64("seed")?),
+    };
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let stats = serve(
+        &session.ir,
+        &session.sens,
+        &factory,
+        &session.opts.variant,
+        &opts,
+        stdin.lock(),
+        &mut stdout.lock(),
+    )?;
+    anyhow::ensure!(
+        stats.failed == 0,
+        "{} of {} jobs failed (see the per-job error responses)",
+        stats.failed,
+        stats.submitted
     );
     Ok(())
 }
@@ -265,12 +326,11 @@ fn cmd_sequential(argv: &[String]) -> Result<()> {
     let args = cli.parse_from(argv)?;
     let session = common_session(&args)?;
     let target = args.get_f64("target")?;
-    let first = AgentKind::parse(args.get("first"))?;
+    let first: AgentKind = args.get("first").parse()?;
     let proto = mk_config(&args, first, target)?;
     let (s1, s2) = session.sequential(first, target, &proto)?;
     println!(
-        "stage 1 ({}): rel.lat {:.1}%  acc {:.2}%",
-        first.label(),
+        "stage 1 ({first}): rel.lat {:.1}%  acc {:.2}%",
         s1.relative_latency() * 100.0,
         s1.best.accuracy * 100.0
     );
@@ -311,7 +371,7 @@ fn cmd_latency(argv: &[String]) -> Result<()> {
     let args = cli.parse_from(argv)?;
     let mut opts = SessionOptions::new(args.get("variant"));
     opts.backend = Backend::Synthetic; // structure only
-    opts.latency = LatencyKind::parse(args.get("latency"))?;
+    opts.latency = args.get("latency").parse()?;
     opts.seed = args.get_u64("seed")?;
     let session = Session::open(opts)?;
     let p = DiscretePolicy::reference(&session.ir);

@@ -52,6 +52,68 @@ impl Adam {
         self.t
     }
 
+    /// Serialize the full optimizer state — hyper-parameters, step counter,
+    /// and both moment estimates (checkpoint format).  Moment tensors are
+    /// stored flat; their shapes are recovered from the paired model in
+    /// [`Adam::from_json`].
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mats = |ms: &[Mat]| Json::Arr(ms.iter().map(|m| Json::arr_f32(&m.data)).collect());
+        let vecs = |vs: &[Vec<f32>]| Json::Arr(vs.iter().map(|v| Json::arr_f32(v)).collect());
+        Json::obj(vec![
+            ("lr", Json::num(self.lr as f64)),
+            ("beta1", Json::num(self.beta1 as f64)),
+            ("beta2", Json::num(self.beta2 as f64)),
+            ("eps", Json::num(self.eps as f64)),
+            ("t", Json::num(self.t as f64)),
+            ("m_w", mats(&self.m_w)),
+            ("v_w", mats(&self.v_w)),
+            ("m_b", vecs(&self.m_b)),
+            ("v_b", vecs(&self.v_b)),
+        ])
+    }
+
+    /// Rebuild optimizer state serialized by [`Adam::to_json`], shaped for
+    /// `model` (the same network the state was saved against).
+    pub fn from_json(j: &crate::util::json::Json, model: &Mlp) -> anyhow::Result<Self> {
+        use super::mlp::Layer;
+        // one flat-f32 buffer per layer, shape-checked against `expect(l)`
+        let read = |key: &str, expect: fn(&Layer) -> usize| -> anyhow::Result<Vec<Vec<f32>>> {
+            let arr = j.req_arr(key)?;
+            anyhow::ensure!(arr.len() == model.layers.len(), "adam '{key}' layer count mismatch");
+            arr.iter()
+                .zip(&model.layers)
+                .map(|(e, l)| {
+                    let data = e
+                        .f32s()
+                        .map_err(|err| anyhow::anyhow!("adam '{key}': {err}"))?;
+                    anyhow::ensure!(data.len() == expect(l), "adam '{key}' shape mismatch");
+                    Ok(data)
+                })
+                .collect()
+        };
+        let to_mats = |flats: Vec<Vec<f32>>| -> Vec<Mat> {
+            flats
+                .into_iter()
+                .zip(&model.layers)
+                .map(|(data, l)| Mat::from_vec(l.w.rows, l.w.cols, data))
+                .collect()
+        };
+        let weight_len = |l: &Layer| l.w.rows * l.w.cols;
+        let bias_len = |l: &Layer| l.b.len();
+        Ok(Self {
+            lr: j.req_f64("lr")? as f32,
+            beta1: j.req_f64("beta1")? as f32,
+            beta2: j.req_f64("beta2")? as f32,
+            eps: j.req_f64("eps")? as f32,
+            t: j.req_f64("t")? as u64,
+            m_w: to_mats(read("m_w", weight_len)?),
+            v_w: to_mats(read("v_w", weight_len)?),
+            m_b: read("m_b", bias_len)?,
+            v_b: read("v_b", bias_len)?,
+        })
+    }
+
     /// Apply one Adam step of `grads` to `model` (grads = dLoss/dparam;
     /// descends).
     pub fn step(&mut self, model: &mut Mlp, grads: &MlpGrads) {
@@ -114,6 +176,41 @@ mod tests {
         assert!(losses[399] < 0.02, "final loss {}", losses[399]);
         assert!(losses[399] < 0.05 * losses[0]);
         assert_eq!(opt.steps(), 400);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_trajectory() {
+        use crate::util::json::Json;
+        // two optimizers that share state mid-training must take identical
+        // future steps — the checkpoint/resume contract
+        let mut rng = Pcg64::new(3);
+        let mut mlp = Mlp::new(&[2, 6, 1], &[Activation::Relu, Activation::Linear], &mut rng);
+        let mut opt = Adam::new(&mlp, 5e-3);
+        let grads = |mlp: &Mlp, x: &Mat| {
+            let cache = mlp.forward_cached(x);
+            let y = cache.activations.last().unwrap().clone();
+            mlp.backward(&cache, &y).0
+        };
+        let x = Mat::from_vec(4, 2, vec![0.1, -0.2, 0.5, 0.3, -0.7, 0.9, 0.0, 1.0]);
+        for _ in 0..25 {
+            let g = grads(&mlp, &x);
+            opt.step(&mut mlp, &g);
+        }
+        let restored = Adam::from_json(&Json::parse(&opt.to_json().dump()).unwrap(), &mlp).unwrap();
+        assert_eq!(restored.steps(), opt.steps());
+        let mut mlp2 = mlp.clone();
+        let mut opt2 = restored;
+        for _ in 0..10 {
+            let g = grads(&mlp, &x);
+            opt.step(&mut mlp, &g);
+            let g2 = grads(&mlp2, &x);
+            opt2.step(&mut mlp2, &g2);
+        }
+        for (a, b) in mlp.layers.iter().zip(&mlp2.layers) {
+            for (x, y) in a.w.data.iter().zip(&b.w.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "restored Adam diverged");
+            }
+        }
     }
 
     #[test]

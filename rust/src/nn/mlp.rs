@@ -17,6 +17,27 @@ pub enum Activation {
 }
 
 impl Activation {
+    /// Stable serialization tag (checkpoint format).
+    pub fn tag(self) -> &'static str {
+        match self {
+            Activation::Relu => "relu",
+            Activation::Sigmoid => "sigmoid",
+            Activation::Tanh => "tanh",
+            Activation::Linear => "linear",
+        }
+    }
+
+    /// Inverse of [`Activation::tag`].
+    pub fn from_tag(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "relu" => Ok(Activation::Relu),
+            "sigmoid" => Ok(Activation::Sigmoid),
+            "tanh" => Ok(Activation::Tanh),
+            "linear" => Ok(Activation::Linear),
+            other => anyhow::bail!("unknown activation tag '{other}'"),
+        }
+    }
+
     #[inline]
     fn apply(self, x: f32) -> f32 {
         match self {
@@ -322,6 +343,60 @@ impl Mlp {
         }
     }
 
+    /// Serialize every parameter (checkpoint format); round-trips
+    /// bit-exactly through [`Mlp::from_json`] — f32 weights embed exactly
+    /// into the JSON f64 number path.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![(
+            "layers",
+            Json::Arr(
+                self.layers
+                    .iter()
+                    .map(|l| {
+                        Json::obj(vec![
+                            ("in", Json::num(l.w.rows as f64)),
+                            ("out", Json::num(l.w.cols as f64)),
+                            ("act", Json::str(l.act.tag())),
+                            ("w", Json::arr_f32(&l.w.data)),
+                            ("b", Json::arr_f32(&l.b)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    /// Rebuild a network serialized by [`Mlp::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        let mut layers = Vec::new();
+        for e in j.req_arr("layers")? {
+            let rows = e.req_usize("in")?;
+            let cols = e.req_usize("out")?;
+            let w = e.req_f32s("w")?;
+            let b = e.req_f32s("b")?;
+            anyhow::ensure!(w.len() == rows * cols, "mlp layer weight shape mismatch");
+            anyhow::ensure!(b.len() == cols, "mlp layer bias shape mismatch");
+            // the chain must compose: a corrupted checkpoint fails here,
+            // not in a matmul shape assert on the first forward pass
+            if let Some(prev) = layers.last() {
+                anyhow::ensure!(
+                    rows == prev.w.cols,
+                    "mlp layer chain mismatch (in {} vs previous out {})",
+                    rows,
+                    prev.w.cols
+                );
+            }
+            layers.push(Layer {
+                w: Mat::from_vec(rows, cols, w),
+                b,
+                act: Activation::from_tag(e.req_str("act")?)?,
+            });
+        }
+        anyhow::ensure!(!layers.is_empty(), "mlp checkpoint has no layers");
+        Ok(Self { layers })
+    }
+
     /// Global L2 gradient-norm clipping; returns the pre-clip norm.
     pub fn clip_grads(grads: &mut MlpGrads, max_norm: f32) -> f32 {
         let mut sq = 0.0f64;
@@ -486,6 +561,24 @@ mod tests {
         mlp.forward_cached_ws(&x, &mut ws);
         mlp.backward_ws(&mut ws, &y);
         assert_eq!(fp, ws.buffer_fingerprint(), "workspace reallocated");
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_exact() {
+        use crate::util::json::Json;
+        let mlp = tiny_mlp(21);
+        let back = Mlp::from_json(&Json::parse(&mlp.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.layers.len(), mlp.layers.len());
+        for (a, b) in back.layers.iter().zip(&mlp.layers) {
+            assert_eq!(a.act, b.act);
+            assert_eq!((a.w.rows, a.w.cols), (b.w.rows, b.w.cols));
+            for (x, y) in a.w.data.iter().zip(&b.w.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for (x, y) in a.b.iter().zip(&b.b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
     }
 
     #[test]

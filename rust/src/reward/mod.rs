@@ -4,6 +4,94 @@
 //! (Eq. 6): `r(P) = acc + beta * |T_P / (c * T_M) - 1|` with beta < 0.
 //! Also provided: the *hard exponential reward* (MnasNet, Tan et al. 2019)
 //! the paper tried and rejected — kept for the ablation bench.
+//!
+//! Both implement the [`RewardModel`] trait so the search driver is
+//! reward-agnostic: pick one with [`RewardSpec`] on the
+//! `search::SearchBuilder` (or the `reward` key of a JSON config).
+
+use crate::util::json::Json;
+
+/// A scalar reward over one validated policy's (accuracy, latency) pair —
+/// the pluggable scoring function of the search driver.
+pub trait RewardModel: Send + Sync {
+    /// r(P) for a validated policy.
+    fn reward(&self, accuracy: f64, latency_s: f64) -> f64;
+
+    /// Which reward family (and shape parameters) this model implements.
+    fn spec(&self) -> RewardSpec;
+}
+
+/// Declarative choice of reward family, turned into a concrete
+/// [`RewardModel`] by [`RewardSpec::build`] once the reference latency is
+/// known.  Serializes into configs and driver checkpoints.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum RewardSpec {
+    /// The paper's absolute reward (Eq. 6) — the default.
+    #[default]
+    Absolute,
+    /// The hard exponential reward with over-budget exponent `w` (< 0).
+    HardExponential {
+        /// Over-budget penalty exponent (negative; MnasNet uses -2).
+        w: f64,
+    },
+}
+
+impl RewardSpec {
+    /// Instantiate the reward model for a search towards `target` with the
+    /// cost exponent `beta` against `base_latency` seconds.  (`beta` only
+    /// shapes the absolute reward; the hard exponential uses its own `w`.)
+    pub fn build(&self, beta: f64, target: f64, base_latency: f64) -> Box<dyn RewardModel> {
+        match *self {
+            RewardSpec::Absolute => Box::new(AbsoluteReward::new(beta, target, base_latency)),
+            RewardSpec::HardExponential { w } => {
+                Box::new(HardExponentialReward::new(w, target, base_latency))
+            }
+        }
+    }
+
+    /// Serialize the spec (config/checkpoint format).
+    pub fn to_json(&self) -> Json {
+        match *self {
+            RewardSpec::Absolute => Json::obj(vec![("kind", Json::str("absolute"))]),
+            RewardSpec::HardExponential { w } => Json::obj(vec![
+                ("kind", Json::str("hard_exponential")),
+                ("w", Json::num(w)),
+            ]),
+        }
+    }
+
+    /// Rebuild a spec serialized by [`RewardSpec::to_json`].
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        match j.req_str("kind")? {
+            "absolute" => Ok(RewardSpec::Absolute),
+            "hard_exponential" => Ok(RewardSpec::HardExponential { w: j.req_f64("w")? }),
+            other => anyhow::bail!("unknown reward kind '{other}' (absolute|hard_exponential)"),
+        }
+    }
+}
+
+/// Parses `absolute` / `hard_exponential` (alias `hardexp`, default w = -2).
+impl std::str::FromStr for RewardSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "absolute" => Ok(Self::Absolute),
+            "hard_exponential" | "hardexp" => Ok(Self::HardExponential { w: -2.0 }),
+            other => anyhow::bail!("unknown reward '{other}' (absolute|hard_exponential)"),
+        }
+    }
+}
+
+/// Stable lowercase family label; honors format padding.
+impl std::fmt::Display for RewardSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.pad(match self {
+            Self::Absolute => "absolute",
+            Self::HardExponential { .. } => "hard_exponential",
+        })
+    }
+}
 
 /// Absolute reward (paper Eq. 6).
 #[derive(Clone, Copy, Debug)]
@@ -35,6 +123,16 @@ impl AbsoluteReward {
     }
 }
 
+impl RewardModel for AbsoluteReward {
+    fn reward(&self, accuracy: f64, latency_s: f64) -> f64 {
+        AbsoluteReward::reward(self, accuracy, latency_s)
+    }
+
+    fn spec(&self) -> RewardSpec {
+        RewardSpec::Absolute
+    }
+}
+
 /// Hard exponential reward (Tan et al. 2019): acc * (T/T0)^w when over
 /// budget, acc otherwise.  The paper reports the same instabilities Bender
 /// et al. discuss; regenerable via the reward ablation.
@@ -49,6 +147,18 @@ pub struct HardExponentialReward {
 }
 
 impl HardExponentialReward {
+    /// A reward with over-budget exponent `w` (< 0) for target rate
+    /// `target` against `base_latency` seconds.
+    pub fn new(w: f64, target: f64, base_latency: f64) -> Self {
+        assert!(w < 0.0, "over-budget exponent must be negative");
+        assert!(target > 0.0 && base_latency > 0.0);
+        Self {
+            w,
+            target,
+            base_latency,
+        }
+    }
+
     /// r(P) for a validated policy.
     pub fn reward(&self, accuracy: f64, latency: f64) -> f64 {
         let budget = self.target * self.base_latency;
@@ -57,6 +167,16 @@ impl HardExponentialReward {
         } else {
             accuracy * (latency / budget).powf(self.w)
         }
+    }
+}
+
+impl RewardModel for HardExponentialReward {
+    fn reward(&self, accuracy: f64, latency_s: f64) -> f64 {
+        HardExponentialReward::reward(self, accuracy, latency_s)
+    }
+
+    fn spec(&self) -> RewardSpec {
+        RewardSpec::HardExponential { w: self.w }
     }
 }
 
@@ -96,6 +216,33 @@ mod tests {
     #[should_panic]
     fn positive_beta_rejected() {
         AbsoluteReward::new(1.0, 0.3, 1.0);
+    }
+
+    #[test]
+    fn reward_spec_builds_and_roundtrips() {
+        // the builder path produces the same numbers as direct construction
+        let m = RewardSpec::Absolute.build(-3.0, 0.3, 0.1);
+        assert_eq!(m.reward(0.9, 0.03), AbsoluteReward::new(-3.0, 0.3, 0.1).reward(0.9, 0.03));
+        assert_eq!(m.spec(), RewardSpec::Absolute);
+        let h = RewardSpec::HardExponential { w: -2.0 }.build(-3.0, 0.3, 1.0);
+        assert_eq!(h.reward(0.9, 0.2), 0.9);
+        assert!(h.reward(0.9, 0.6) < 0.9);
+        assert_eq!(h.spec(), RewardSpec::HardExponential { w: -2.0 });
+        // json + FromStr/Display roundtrips
+        for spec in [RewardSpec::Absolute, RewardSpec::HardExponential { w: -4.5 }] {
+            let back = RewardSpec::from_json(
+                &Json::parse(&spec.to_json().dump()).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(back, spec);
+        }
+        assert_eq!("absolute".parse::<RewardSpec>().unwrap(), RewardSpec::Absolute);
+        assert_eq!(
+            "hardexp".parse::<RewardSpec>().unwrap(),
+            RewardSpec::HardExponential { w: -2.0 }
+        );
+        assert!("nope".parse::<RewardSpec>().is_err());
+        assert_eq!(RewardSpec::Absolute.to_string(), "absolute");
     }
 
     #[test]

@@ -1,6 +1,9 @@
 //! Search configuration (paper defaults + CPU-budget scaling).
 
+use anyhow::Result;
+
 use crate::agent::{AgentKind, DdpgConfig};
+use crate::reward::RewardSpec;
 use crate::util::json::Json;
 
 /// Hyper-parameters of one policy search.
@@ -12,6 +15,8 @@ pub struct SearchConfig {
     pub target: f64,
     /// Reward cost exponent beta (paper: -3.0).
     pub beta: f64,
+    /// Which reward family scores episodes (default: the absolute reward).
+    pub reward: RewardSpec,
     /// Total episodes (paper: 310 quantization, 410 pruning/joint).
     pub episodes: usize,
     /// Random warm-up episodes filling the replay buffer (paper: 10).
@@ -28,6 +33,36 @@ pub struct SearchConfig {
     pub log_every: usize,
 }
 
+/// Keys `apply_json` accepts at the top level (unknown keys are an error).
+const CONFIG_KEYS: &[&str] = &[
+    "target",
+    "beta",
+    "reward",
+    "reward_w",
+    "episodes",
+    "warmup_episodes",
+    "opt_steps_per_episode",
+    "eval_batches",
+    "seed",
+    "log_every",
+    "ddpg",
+];
+
+/// Keys `apply_json` accepts inside the `ddpg` block.
+const DDPG_KEYS: &[&str] = &[
+    "hidden",
+    "actor_lr",
+    "critic_lr",
+    "gamma",
+    "tau",
+    "batch",
+    "replay_capacity",
+    "sigma0",
+    "sigma_decay",
+    "reward_ema",
+    "grad_clip",
+];
+
 impl SearchConfig {
     /// CPU-budget defaults: 120 episodes with a rescaled exploration decay.
     pub fn new(agent: AgentKind, target: f64) -> Self {
@@ -41,6 +76,7 @@ impl SearchConfig {
             agent,
             target,
             beta: -3.0,
+            reward: RewardSpec::Absolute,
             episodes: 120,
             warmup_episodes: 10,
             opt_steps_per_episode: 20,
@@ -73,68 +109,202 @@ impl SearchConfig {
         cfg
     }
 
-    /// Load overrides from a JSON config file (configs/*.json): any subset
-    /// of {target, beta, episodes, warmup_episodes, opt_steps_per_episode,
-    /// eval_batches, seed} plus optional ddpg.{sigma0, sigma_decay, batch,
-    /// replay_capacity, gamma, tau}.
-    pub fn apply_json(&mut self, j: &Json) {
-        let f = |k: &str| j.get(k).and_then(Json::as_f64);
-        if let Some(v) = f("target") {
+    /// Load overrides from a JSON config object (configs/*.json): any
+    /// subset of {target, beta, reward, reward_w, episodes,
+    /// warmup_episodes, opt_steps_per_episode, eval_batches, seed,
+    /// log_every} plus optional ddpg.{hidden, actor_lr, critic_lr, gamma,
+    /// tau, batch, replay_capacity, sigma0, sigma_decay, reward_ema,
+    /// grad_clip}.
+    ///
+    /// Unknown keys are an error (listing the valid ones), so a typo like
+    /// `episdoes` fails loudly instead of silently running the defaults.
+    ///
+    /// Atomic: on any error the configuration is left untouched — a failed
+    /// apply never leaves a half-applied hybrid behind.
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        let mut staged = self.clone();
+        staged.apply_json_staged(j)?;
+        *self = staged;
+        Ok(())
+    }
+
+    /// The mutating half of `apply_json`, run against a staged clone so
+    /// errors after early field writes cannot leak partial state.
+    fn apply_json_staged(&mut self, j: &Json) -> Result<()> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("config overrides must be a JSON object"))?;
+        for key in obj.keys() {
+            anyhow::ensure!(
+                CONFIG_KEYS.contains(&key.as_str()),
+                "unknown config key '{key}' (valid keys: {})",
+                CONFIG_KEYS.join(", ")
+            );
+        }
+        // a present key with the wrong type is as loud an error as an
+        // unknown key — `"episodes": "55"` must not silently run defaults
+        let f = |k: &str| -> Result<Option<f64>> {
+            match j.get(k) {
+                None => Ok(None),
+                Some(v) => Ok(Some(v.as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("config key '{k}' must be a number")
+                })?)),
+            }
+        };
+        if let Some(v) = f("target")? {
             self.target = v;
         }
-        if let Some(v) = f("beta") {
+        if let Some(v) = f("beta")? {
             self.beta = v;
         }
-        if let Some(v) = f("episodes") {
+        if let Some(v) = j.get("reward") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("config key 'reward' must be a string"))?;
+            self.reward = s.parse()?;
+        }
+        if let Some(w) = f("reward_w")? {
+            anyhow::ensure!(
+                matches!(self.reward, RewardSpec::HardExponential { .. }),
+                "'reward_w' only applies to the hard_exponential reward"
+            );
+            self.reward = RewardSpec::HardExponential { w };
+        }
+        if let Some(v) = f("episodes")? {
             self.episodes = v as usize;
         }
-        if let Some(v) = f("warmup_episodes") {
+        if let Some(v) = f("warmup_episodes")? {
             self.warmup_episodes = v as usize;
         }
-        if let Some(v) = f("opt_steps_per_episode") {
+        if let Some(v) = f("opt_steps_per_episode")? {
             self.opt_steps_per_episode = v as usize;
         }
-        if let Some(v) = f("eval_batches") {
+        if let Some(v) = f("eval_batches")? {
             self.eval_batches = v as usize;
         }
-        if let Some(v) = f("seed") {
+        if let Some(v) = f("seed")? {
             self.seed = v as u64;
         }
+        if let Some(v) = f("log_every")? {
+            self.log_every = v as usize;
+        }
         if let Some(d) = j.get("ddpg") {
-            let g = |k: &str| d.get(k).and_then(Json::as_f64);
-            if let Some(v) = g("sigma0") {
+            let dobj = d
+                .as_obj()
+                .ok_or_else(|| anyhow::anyhow!("config key 'ddpg' must be an object"))?;
+            for key in dobj.keys() {
+                anyhow::ensure!(
+                    DDPG_KEYS.contains(&key.as_str()),
+                    "unknown ddpg config key '{key}' (valid keys: {})",
+                    DDPG_KEYS.join(", ")
+                );
+            }
+            let g = |k: &str| -> Result<Option<f64>> {
+                match d.get(k) {
+                    None => Ok(None),
+                    Some(v) => Ok(Some(v.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!("ddpg config key '{k}' must be a number")
+                    })?)),
+                }
+            };
+            if let Some(h) = d.get("hidden") {
+                let h = h
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("ddpg 'hidden' must be [h1, h2]"))?;
+                anyhow::ensure!(h.len() == 2, "ddpg 'hidden' must be [h1, h2]");
+                let h1 = h[0]
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("ddpg 'hidden' holds a non-number"))?;
+                let h2 = h[1]
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("ddpg 'hidden' holds a non-number"))?;
+                self.ddpg.hidden = (h1, h2);
+            }
+            if let Some(v) = g("actor_lr")? {
+                self.ddpg.actor_lr = v as f32;
+            }
+            if let Some(v) = g("critic_lr")? {
+                self.ddpg.critic_lr = v as f32;
+            }
+            if let Some(v) = g("sigma0")? {
                 self.ddpg.sigma0 = v;
             }
-            if let Some(v) = g("sigma_decay") {
+            if let Some(v) = g("sigma_decay")? {
                 self.ddpg.sigma_decay = v;
             }
-            if let Some(v) = g("batch") {
+            if let Some(v) = g("batch")? {
                 self.ddpg.batch = v as usize;
             }
-            if let Some(v) = g("replay_capacity") {
+            if let Some(v) = g("replay_capacity")? {
                 self.ddpg.replay_capacity = v as usize;
             }
-            if let Some(v) = g("gamma") {
+            if let Some(v) = g("gamma")? {
                 self.ddpg.gamma = v as f32;
             }
-            if let Some(v) = g("tau") {
+            if let Some(v) = g("tau")? {
                 self.ddpg.tau = v as f32;
             }
+            if let Some(v) = g("reward_ema")? {
+                self.ddpg.reward_ema = v;
+            }
+            if let Some(v) = g("grad_clip")? {
+                self.ddpg.grad_clip = v as f32;
+            }
         }
+        Ok(())
     }
 
     /// JSON form (the `config` block of a result record).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
-            ("agent", Json::str(self.agent.label())),
+            ("agent", Json::str(self.agent.to_string())),
             ("target", Json::num(self.target)),
             ("beta", Json::num(self.beta)),
+            ("reward", Json::str(self.reward.to_string())),
             ("episodes", Json::num(self.episodes as f64)),
             ("warmup_episodes", Json::num(self.warmup_episodes as f64)),
             ("opt_steps_per_episode", Json::num(self.opt_steps_per_episode as f64)),
             ("eval_batches", Json::num(self.eval_batches as f64)),
             ("seed", Json::num(self.seed as f64)),
         ])
+    }
+
+    /// Full, loss-free serialization for driver checkpoints: every field
+    /// including the DDPG block, the reward spec's shape parameters, and
+    /// the exact u64 seed (hex — large sweep-job seeds do not survive the
+    /// f64 number path `to_json` uses for display).
+    pub fn to_checkpoint_json(&self) -> Json {
+        Json::obj(vec![
+            ("agent", Json::str(self.agent.to_string())),
+            ("target", Json::num(self.target)),
+            ("beta", Json::num(self.beta)),
+            ("reward", self.reward.to_json()),
+            ("episodes", Json::num(self.episodes as f64)),
+            ("warmup_episodes", Json::num(self.warmup_episodes as f64)),
+            ("opt_steps_per_episode", Json::num(self.opt_steps_per_episode as f64)),
+            ("eval_batches", Json::num(self.eval_batches as f64)),
+            ("seed", Json::hex64(self.seed)),
+            ("log_every", Json::num(self.log_every as f64)),
+            ("ddpg", self.ddpg.to_json()),
+        ])
+    }
+
+    /// Rebuild a configuration serialized by
+    /// [`SearchConfig::to_checkpoint_json`].
+    pub fn from_checkpoint_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            agent: j.req_str("agent")?.parse()?,
+            target: j.req_f64("target")?,
+            beta: j.req_f64("beta")?,
+            reward: RewardSpec::from_json(j.req("reward")?)?,
+            episodes: j.req_usize("episodes")?,
+            warmup_episodes: j.req_usize("warmup_episodes")?,
+            opt_steps_per_episode: j.req_usize("opt_steps_per_episode")?,
+            eval_batches: j.req_usize("eval_batches")?,
+            seed: j.req_hex64("seed")?,
+            log_every: j.req_usize("log_every")?,
+            ddpg: DdpgConfig::from_json(j.req("ddpg")?)?,
+        })
     }
 }
 
@@ -153,16 +323,65 @@ mod tests {
     fn apply_json_overrides() {
         let mut cfg = SearchConfig::new(AgentKind::Joint, 0.3);
         let j = Json::parse(
-            r#"{"episodes": 55, "beta": -6.0, "ddpg": {"sigma0": 0.7, "batch": 64}}"#,
+            r#"{"episodes": 55, "beta": -6.0, "log_every": 0, "ddpg": {"sigma0": 0.7, "batch": 64, "hidden": [48, 32]}}"#,
         )
         .unwrap();
-        cfg.apply_json(&j);
+        cfg.apply_json(&j).unwrap();
         assert_eq!(cfg.episodes, 55);
         assert_eq!(cfg.beta, -6.0);
+        assert_eq!(cfg.log_every, 0);
         assert_eq!(cfg.ddpg.sigma0, 0.7);
         assert_eq!(cfg.ddpg.batch, 64);
+        assert_eq!(cfg.ddpg.hidden, (48, 32));
         // untouched fields keep defaults
         assert_eq!(cfg.warmup_episodes, 10);
+    }
+
+    #[test]
+    fn apply_json_rejects_unknown_keys() {
+        let mut cfg = SearchConfig::new(AgentKind::Joint, 0.3);
+        // the classic typo: silently ignored before, a loud error now
+        let err = cfg
+            .apply_json(&Json::parse(r#"{"episdoes": 55}"#).unwrap())
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("episdoes"), "{msg}");
+        assert!(msg.contains("episodes"), "error must list the valid keys: {msg}");
+        // unknown nested ddpg keys fail too
+        let err = cfg
+            .apply_json(&Json::parse(r#"{"ddpg": {"sgima0": 0.7}}"#).unwrap())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("sgima0"));
+        // non-object configs fail
+        assert!(cfg.apply_json(&Json::parse("[1]").unwrap()).is_err());
+        // wrong-typed values for valid keys fail just as loudly
+        let err = cfg
+            .apply_json(&Json::parse(r#"{"episodes": "55"}"#).unwrap())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("must be a number"), "{err:#}");
+        assert!(cfg
+            .apply_json(&Json::parse(r#"{"ddpg": {"batch": true}}"#).unwrap())
+            .is_err());
+        assert!(cfg.apply_json(&Json::parse(r#"{"reward": 3}"#).unwrap()).is_err());
+        // a failed apply must not have touched the config, even when the
+        // error surfaces after valid fields (atomic staging)
+        let err = cfg
+            .apply_json(&Json::parse(r#"{"episodes": 55, "ddpg": {"bad": 1}}"#).unwrap())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("bad"));
+        assert_eq!(cfg.episodes, 120, "partial apply leaked");
+        assert_eq!(cfg.ddpg.sigma0, 0.5);
+    }
+
+    #[test]
+    fn apply_json_reward_selection() {
+        let mut cfg = SearchConfig::new(AgentKind::Joint, 0.3);
+        cfg.apply_json(&Json::parse(r#"{"reward": "hard_exponential", "reward_w": -4.0}"#).unwrap())
+            .unwrap();
+        assert_eq!(cfg.reward, crate::reward::RewardSpec::HardExponential { w: -4.0 });
+        // reward_w without the hard_exponential family is an error
+        let mut cfg = SearchConfig::new(AgentKind::Joint, 0.3);
+        assert!(cfg.apply_json(&Json::parse(r#"{"reward_w": -4.0}"#).unwrap()).is_err());
     }
 
     #[test]
@@ -172,7 +391,7 @@ mod tests {
             if path.exists() {
                 let j = Json::read_file(&path).unwrap();
                 let mut cfg = SearchConfig::new(AgentKind::Joint, 0.3);
-                cfg.apply_json(&j);
+                cfg.apply_json(&j).unwrap();
                 assert!(cfg.episodes > 0);
             }
         }
@@ -184,5 +403,33 @@ mod tests {
         assert_eq!(j.req_str("agent").unwrap(), "joint");
         assert_eq!(j.req_f64("target").unwrap(), 0.2);
         assert_eq!(j.req_f64("beta").unwrap(), -3.0);
+        assert_eq!(j.req_str("reward").unwrap(), "absolute");
+    }
+
+    #[test]
+    fn checkpoint_json_roundtrips_every_field() {
+        let mut cfg = SearchConfig::fast(AgentKind::Quantization, 0.37);
+        cfg.seed = 0xfeed_f00d_dead_beef; // > 2^53: must survive via hex
+        cfg.log_every = 3;
+        cfg.reward = crate::reward::RewardSpec::HardExponential { w: -2.5 };
+        cfg.ddpg.hidden = (48, 32);
+        cfg.ddpg.sigma_decay = 0.9125;
+        let back = SearchConfig::from_checkpoint_json(
+            &Json::parse(&cfg.to_checkpoint_json().dump()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.agent, cfg.agent);
+        assert_eq!(back.target, cfg.target);
+        assert_eq!(back.beta, cfg.beta);
+        assert_eq!(back.reward, cfg.reward);
+        assert_eq!(back.episodes, cfg.episodes);
+        assert_eq!(back.warmup_episodes, cfg.warmup_episodes);
+        assert_eq!(back.opt_steps_per_episode, cfg.opt_steps_per_episode);
+        assert_eq!(back.eval_batches, cfg.eval_batches);
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.log_every, cfg.log_every);
+        assert_eq!(back.ddpg.hidden, cfg.ddpg.hidden);
+        assert_eq!(back.ddpg.sigma_decay.to_bits(), cfg.ddpg.sigma_decay.to_bits());
+        assert_eq!(back.ddpg.batch, cfg.ddpg.batch);
     }
 }

@@ -1,0 +1,1012 @@
+//! The resumable search state machine.
+//!
+//! [`SearchDriver`] owns one policy search (paper Fig. 1 outer loop) as an
+//! explicit state machine instead of a blocking free function:
+//!
+//! * **granularity** — [`SearchDriver::step`] advances one layer decision,
+//!   [`SearchDriver::run_episode`] one full episode,
+//!   [`SearchDriver::run_to_completion`] the whole search; all three
+//!   interleave freely and produce bit-identical trajectories (the step
+//!   loop draws from exactly the same RNG streams in the same order).
+//! * **observability** — [`SearchObserver`]s registered with
+//!   [`SearchDriver::add_observer`] receive the [`SearchEvent`] stream
+//!   (search started / episode finished / best improved / finished), which
+//!   is what the `galen serve` job service multiplexes to clients.
+//! * **checkpoint/resume** — [`SearchDriver::save_checkpoint`] serializes
+//!   the complete search state (agent networks + optimizers + replay +
+//!   normalizers + RNG streams, history, best policy) into a
+//!   schema-versioned JSON document; [`SearchDriver::resume_from`] rebuilds
+//!   a driver that continues the search **bit-identically** to an
+//!   uninterrupted run (asserted in `tests/integration_driver.rs`).
+//!
+//! Construction goes through the typed [`SearchBuilder`] — the replacement
+//! for threading stringly-typed JSON knobs into the search.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::agent::{Ddpg, PolicyMapper, StateBuilder, Transition};
+use crate::compress::DiscretePolicy;
+use crate::eval::SensitivityTable;
+use crate::hw::LatencyProvider;
+use crate::model::ModelIr;
+use crate::reward::{RewardModel, RewardSpec};
+use crate::search::{EpisodeSummary, PolicyEvaluator, SearchConfig, SearchOutcome};
+use crate::util::json::Json;
+
+/// Version of the checkpoint document layout; mismatched checkpoints are
+/// rejected by [`SearchDriver::resume_from`], never mis-parsed.
+pub const CHECKPOINT_SCHEMA_VERSION: usize = 1;
+
+/// The `kind` tag every checkpoint document carries.
+const CHECKPOINT_KIND: &str = "galen_search_checkpoint";
+
+/// One notification from a running search.  Emitted synchronously by the
+/// driver; observers must not block (the search waits on them).
+#[derive(Clone, Debug)]
+pub enum SearchEvent {
+    /// The first step of the (possibly resumed) search is about to run.
+    Started {
+        /// First episode this driver will run (> 0 after a resume).
+        first_episode: usize,
+        /// Total episodes of the search.
+        episodes: usize,
+        /// Reference (uncompressed) latency in seconds.
+        base_latency_s: f64,
+        /// Reference (uncompressed) accuracy.
+        base_accuracy: f64,
+        /// Label of the latency backend scoring the search.
+        backend: String,
+    },
+    /// An episode was validated and folded into the agent.
+    EpisodeFinished(EpisodeSummary),
+    /// The episode's policy beat every previous episode's reward.
+    BestImproved(EpisodeSummary),
+    /// The final episode finished; `outcome()` is available.
+    Finished {
+        /// Episodes the search ran in total.
+        episodes: usize,
+        /// Reward of the best episode.
+        best_reward: f64,
+        /// Latency-backend cache hits over the whole search.
+        cache_hits: u64,
+        /// Latency-backend cache misses (or measurements) over the search.
+        cache_misses: u64,
+    },
+}
+
+impl SearchEvent {
+    /// Serialize the event (the `galen serve` event-stream format): a
+    /// `type` discriminant plus the event's fields.
+    pub fn to_json(&self) -> Json {
+        match self {
+            SearchEvent::Started {
+                first_episode,
+                episodes,
+                base_latency_s,
+                base_accuracy,
+                backend,
+            } => Json::obj(vec![
+                ("type", Json::str("started")),
+                ("first_episode", Json::num(*first_episode as f64)),
+                ("episodes", Json::num(*episodes as f64)),
+                ("base_latency_s", Json::num(*base_latency_s)),
+                ("base_accuracy", Json::num(*base_accuracy)),
+                ("backend", Json::str(backend.clone())),
+            ]),
+            SearchEvent::EpisodeFinished(s) => Json::obj(vec![
+                ("type", Json::str("episode")),
+                ("summary", s.to_json()),
+            ]),
+            SearchEvent::BestImproved(s) => Json::obj(vec![
+                ("type", Json::str("best")),
+                ("summary", s.to_json()),
+            ]),
+            SearchEvent::Finished {
+                episodes,
+                best_reward,
+                cache_hits,
+                cache_misses,
+            } => Json::obj(vec![
+                ("type", Json::str("finished")),
+                ("episodes", Json::num(*episodes as f64)),
+                ("best_reward", Json::num(*best_reward)),
+                ("cache_hits", Json::num(*cache_hits as f64)),
+                ("cache_misses", Json::num(*cache_misses as f64)),
+            ]),
+        }
+    }
+}
+
+/// A sink for [`SearchEvent`]s.  Implemented for every
+/// `FnMut(&SearchEvent)` closure, so `driver.add_observer(|e| ...)` works
+/// directly.
+pub trait SearchObserver {
+    /// Receive one event.  Called synchronously from the driver.
+    fn on_event(&mut self, event: &SearchEvent);
+}
+
+impl<F: FnMut(&SearchEvent)> SearchObserver for F {
+    fn on_event(&mut self, event: &SearchEvent) {
+        self(event)
+    }
+}
+
+/// What one [`SearchDriver::step`] call did.
+#[derive(Clone, Debug)]
+pub enum StepOutcome {
+    /// One layer decision was applied; the episode continues.
+    Stepped {
+        /// The episode the step belongs to.
+        episode: usize,
+        /// Layer decisions taken so far in this episode.
+        step: usize,
+    },
+    /// The episode's policy was validated and the agent optimized.
+    EpisodeFinished(EpisodeSummary),
+    /// Every episode has already run; see [`SearchDriver::outcome`].
+    SearchComplete,
+}
+
+/// Typed construction of a [`SearchDriver`] — every knob of
+/// [`SearchConfig`] as a method, replacing stringly-typed JSON plumbing.
+///
+/// ```no_run
+/// # use galen::agent::{mapper_for, AgentKind};
+/// # use galen::search::{SearchBuilder, SimEvaluator};
+/// # fn demo(ir: &galen::model::ModelIr, sens: &galen::eval::SensitivityTable,
+/// #         latency: &mut dyn galen::hw::LatencyProvider) -> anyhow::Result<()> {
+/// let ev = SimEvaluator::new(ir);
+/// let mapper = mapper_for(AgentKind::Joint);
+/// let outcome = SearchBuilder::new(AgentKind::Joint, 0.3)
+///     .episodes(60)
+///     .seed(11)
+///     .build(ir, sens, &ev, latency, mapper.as_ref())?
+///     .run_to_completion()?;
+/// # Ok(())
+/// # }
+/// ```
+#[derive(Clone, Debug)]
+pub struct SearchBuilder {
+    cfg: SearchConfig,
+    base: Option<DiscretePolicy>,
+}
+
+impl SearchBuilder {
+    /// A builder at the CPU-budget defaults for `agent` towards `target`.
+    pub fn new(agent: crate::agent::AgentKind, target: f64) -> Self {
+        Self::from_config(SearchConfig::new(agent, target))
+    }
+
+    /// A builder starting from an existing configuration.
+    pub fn from_config(cfg: SearchConfig) -> Self {
+        Self { cfg, base: None }
+    }
+
+    /// Total episodes to run.
+    pub fn episodes(mut self, n: usize) -> Self {
+        self.cfg.episodes = n;
+        self
+    }
+
+    /// Random warm-up episodes that fill the replay buffer.
+    pub fn warmup_episodes(mut self, n: usize) -> Self {
+        self.cfg.warmup_episodes = n;
+        self
+    }
+
+    /// Agent optimization steps per post-warmup episode.
+    pub fn opt_steps_per_episode(mut self, n: usize) -> Self {
+        self.cfg.opt_steps_per_episode = n;
+        self
+    }
+
+    /// Validation batches per accuracy evaluation.
+    pub fn eval_batches(mut self, n: usize) -> Self {
+        self.cfg.eval_batches = n;
+        self
+    }
+
+    /// RNG seed (forked per subsystem).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Reward cost exponent beta (< 0).
+    pub fn beta(mut self, beta: f64) -> Self {
+        self.cfg.beta = beta;
+        self
+    }
+
+    /// Which reward family scores episodes.
+    pub fn reward(mut self, spec: RewardSpec) -> Self {
+        self.cfg.reward = spec;
+        self
+    }
+
+    /// DDPG hyper-parameters.
+    pub fn ddpg(mut self, ddpg: crate::agent::DdpgConfig) -> Self {
+        self.cfg.ddpg = ddpg;
+        self
+    }
+
+    /// Progress-log cadence (0 = silent).
+    pub fn log_every(mut self, n: usize) -> Self {
+        self.cfg.log_every = n;
+        self
+    }
+
+    /// Start every episode from this pre-compressed policy instead of the
+    /// uncompressed reference (sequential two-stage schemes).
+    pub fn base_policy(mut self, base: DiscretePolicy) -> Self {
+        self.base = Some(base);
+        self
+    }
+
+    /// The configuration assembled so far.
+    pub fn config(&self) -> &SearchConfig {
+        &self.cfg
+    }
+
+    /// Wire the builder to a concrete environment and produce the driver.
+    ///
+    /// `mapper.kind()` must match the configured agent — the driver refuses
+    /// mismatched wiring instead of silently searching the wrong space.
+    pub fn build<'a>(
+        self,
+        ir: &'a ModelIr,
+        sens: &'a SensitivityTable,
+        evaluator: &'a dyn PolicyEvaluator,
+        latency: &'a mut dyn LatencyProvider,
+        mapper: &'a dyn PolicyMapper,
+    ) -> Result<SearchDriver<'a>> {
+        let Self { cfg, base } = self;
+        anyhow::ensure!(
+            mapper.kind() == cfg.agent,
+            "mapper implements the {} agent but the config asks for {}",
+            mapper.kind(),
+            cfg.agent
+        );
+        anyhow::ensure!(cfg.episodes > 0, "a search needs at least one episode");
+        // reject invalid reward shapes here (Result), not in the reward
+        // constructors (assert) — serve workers must never panic on a bad
+        // client spec
+        anyhow::ensure!(
+            cfg.beta < 0.0,
+            "reward cost exponent beta must be negative (got {})",
+            cfg.beta
+        );
+        anyhow::ensure!(
+            cfg.target > 0.0,
+            "target compression rate must be positive (got {})",
+            cfg.target
+        );
+        if let RewardSpec::HardExponential { w } = cfg.reward {
+            anyhow::ensure!(
+                w < 0.0,
+                "hard-exponential exponent w must be negative (got {w})"
+            );
+        }
+        // ... and the DDPG knobs whose constructors assert (ReplayBuffer
+        // capacity, Ema smoothing) — same no-panic contract
+        anyhow::ensure!(
+            cfg.ddpg.replay_capacity > 0,
+            "ddpg replay_capacity must be at least 1"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&cfg.ddpg.reward_ema),
+            "ddpg reward_ema must be in [0, 1] (got {})",
+            cfg.ddpg.reward_ema
+        );
+        let steps = mapper.steps(ir);
+        anyhow::ensure!(!steps.is_empty(), "mapper yields no actionable layers");
+        let sb = StateBuilder::new(ir, sens, mapper.action_dim());
+        let agent = Ddpg::new(sb.dim(), mapper.action_dim(), cfg.ddpg.clone(), cfg.seed);
+        let reference = DiscretePolicy::reference(ir);
+        let base_latency_s = latency.latency(ir, &reference);
+        let reward = cfg.reward.build(cfg.beta, cfg.target, base_latency_s);
+        let base_accuracy = evaluator.base_accuracy();
+        let episodes = cfg.episodes;
+        Ok(SearchDriver {
+            ir,
+            sens,
+            evaluator,
+            latency,
+            mapper,
+            cfg,
+            reward,
+            sb,
+            steps,
+            agent,
+            base,
+            base_latency_s,
+            base_accuracy,
+            episode: 0,
+            history: Vec::with_capacity(episodes),
+            best: None,
+            cur: None,
+            observers: Vec::new(),
+            started_emitted: false,
+            finished_emitted: false,
+        })
+    }
+}
+
+/// Mid-episode scratch: the partial policy plus the trajectory recorded so
+/// far.  Exists only between the first and last `step()` of an episode.
+struct EpisodeInProgress {
+    random: bool,
+    policy: DiscretePolicy,
+    states: Vec<Vec<f32>>,
+    actions: Vec<Vec<f32>>,
+    prev_action: Vec<f32>,
+    k: usize,
+}
+
+/// The resumable policy-search state machine (see the module docs).
+pub struct SearchDriver<'a> {
+    ir: &'a ModelIr,
+    sens: &'a SensitivityTable,
+    evaluator: &'a dyn PolicyEvaluator,
+    latency: &'a mut dyn LatencyProvider,
+    mapper: &'a dyn PolicyMapper,
+    cfg: SearchConfig,
+    reward: Box<dyn RewardModel>,
+    sb: StateBuilder,
+    steps: Vec<usize>,
+    agent: Ddpg,
+    base: Option<DiscretePolicy>,
+    base_latency_s: f64,
+    base_accuracy: f64,
+    episode: usize,
+    history: Vec<EpisodeSummary>,
+    best: Option<(EpisodeSummary, DiscretePolicy)>,
+    cur: Option<EpisodeInProgress>,
+    observers: Vec<Box<dyn SearchObserver + 'a>>,
+    started_emitted: bool,
+    finished_emitted: bool,
+}
+
+impl<'a> SearchDriver<'a> {
+    /// Register an event sink; every subsequent event reaches it.
+    pub fn add_observer(&mut self, observer: impl SearchObserver + 'a) {
+        self.observers.push(Box::new(observer));
+    }
+
+    /// The configuration the driver runs.
+    pub fn config(&self) -> &SearchConfig {
+        &self.cfg
+    }
+
+    /// Episodes finished so far.
+    pub fn episode(&self) -> usize {
+        self.episode
+    }
+
+    /// Whether every configured episode has run.
+    pub fn is_done(&self) -> bool {
+        self.episode >= self.cfg.episodes
+    }
+
+    /// Whether an episode is currently in flight (between its first and
+    /// last layer decision) — checkpoints are refused in this state.
+    pub fn mid_episode(&self) -> bool {
+        self.cur.is_some()
+    }
+
+    /// Per-episode summaries of every finished episode, in order.
+    pub fn history(&self) -> &[EpisodeSummary] {
+        &self.history
+    }
+
+    /// Summary of the best (highest-reward) episode so far.
+    pub fn best(&self) -> Option<&EpisodeSummary> {
+        self.best.as_ref().map(|(s, _)| s)
+    }
+
+    /// Reference (uncompressed) latency the search normalizes against.
+    pub fn base_latency_s(&self) -> f64 {
+        self.base_latency_s
+    }
+
+    fn emit(&mut self, event: &SearchEvent) {
+        for obs in &mut self.observers {
+            obs.on_event(event);
+        }
+    }
+
+    /// Advance the search by one layer decision.  When the decision
+    /// completes an episode, the policy is validated (accuracy + latency),
+    /// the shared episode reward is stored across the trajectory, and the
+    /// agent optimizes — exactly the work the monolithic loop did, at the
+    /// same point in the RNG streams.
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        if self.is_done() {
+            self.emit_finished();
+            return Ok(StepOutcome::SearchComplete);
+        }
+        if !self.started_emitted {
+            self.started_emitted = true;
+            let ev = SearchEvent::Started {
+                first_episode: self.episode,
+                episodes: self.cfg.episodes,
+                base_latency_s: self.base_latency_s,
+                base_accuracy: self.base_accuracy,
+                backend: self.latency.backend().to_string(),
+            };
+            self.emit(&ev);
+        }
+        if self.cur.is_none() {
+            self.cur = Some(EpisodeInProgress {
+                random: self.episode < self.cfg.warmup_episodes,
+                policy: self
+                    .base
+                    .clone()
+                    .unwrap_or_else(|| DiscretePolicy::reference(self.ir)),
+                states: Vec::with_capacity(self.steps.len()),
+                actions: Vec::with_capacity(self.steps.len()),
+                prev_action: vec![0.0f32; self.mapper.action_dim()],
+                k: 0,
+            });
+        }
+        {
+            let ep = self.cur.as_mut().expect("episode just ensured");
+            let idx = self.steps[ep.k];
+            let s = self.sb.build(
+                self.ir,
+                self.sens,
+                &ep.policy,
+                idx,
+                ep.k,
+                self.steps.len(),
+                &ep.prev_action,
+            );
+            let a = self.agent.act(&s, true, ep.random);
+            self.mapper.apply(self.ir, &mut ep.policy, idx, &a);
+            ep.prev_action.copy_from_slice(&a);
+            ep.states.push(s);
+            ep.actions.push(a);
+            ep.k += 1;
+            if ep.k < self.steps.len() {
+                return Ok(StepOutcome::Stepped {
+                    episode: self.episode,
+                    step: ep.k,
+                });
+            }
+        }
+        let summary = self.finish_episode()?;
+        Ok(StepOutcome::EpisodeFinished(summary))
+    }
+
+    /// Validate the completed episode and fold it into the agent.
+    fn finish_episode(&mut self) -> Result<EpisodeSummary> {
+        let ep = self.cur.take().expect("an episode is in flight");
+        // ---- validate the complete policy (paper Fig. 1) ----
+        let accuracy = self.evaluator.accuracy(&ep.policy)?;
+        let measured = self.latency.measure(self.ir, &ep.policy).latency_s;
+        let reward = self.reward.reward(accuracy, measured);
+
+        // ---- shared per-episode reward across all transitions ----
+        let n = ep.states.len();
+        for t in 0..n {
+            let terminal = t + 1 == n;
+            let next_state = if terminal {
+                vec![0.0; ep.states[t].len()]
+            } else {
+                ep.states[t + 1].clone()
+            };
+            self.agent.store(Transition {
+                state: ep.states[t].clone(),
+                action: ep.actions[t].clone(),
+                reward: reward as f32,
+                next_state,
+                terminal,
+            });
+        }
+        self.agent.end_episode();
+        if !ep.random {
+            for _ in 0..self.cfg.opt_steps_per_episode {
+                self.agent.optimize();
+            }
+        }
+
+        let summary = EpisodeSummary {
+            episode: self.episode,
+            reward,
+            accuracy,
+            latency_s: measured,
+            macs: ep.policy.macs(self.ir),
+            bops: ep.policy.bops(self.ir),
+        };
+        let improved = self
+            .best
+            .as_ref()
+            .map(|(b, _)| reward > b.reward)
+            .unwrap_or(true);
+        if improved {
+            self.best = Some((summary.clone(), ep.policy.clone()));
+        }
+        if self.cfg.log_every > 0
+            && (self.episode % self.cfg.log_every == 0 || self.episode + 1 == self.cfg.episodes)
+        {
+            log::info!(
+                "[{} c={:.2}] ep {:4} reward={reward:+.4} acc={accuracy:.4} lat={:.2}ms ({:.1}% of base) sigma={:.3}",
+                self.mapper.kind(),
+                self.cfg.target,
+                self.episode,
+                measured * 1e3,
+                100.0 * measured / self.base_latency_s,
+                self.agent.sigma,
+            );
+        }
+        self.history.push(summary.clone());
+        self.episode += 1;
+        let ev = SearchEvent::EpisodeFinished(summary.clone());
+        self.emit(&ev);
+        if improved {
+            let ev = SearchEvent::BestImproved(summary.clone());
+            self.emit(&ev);
+        }
+        if self.is_done() {
+            self.emit_finished();
+        }
+        Ok(summary)
+    }
+
+    fn emit_finished(&mut self) {
+        if self.finished_emitted {
+            return;
+        }
+        self.finished_emitted = true;
+        let (hits, misses) = self.latency.cache_stats();
+        log::debug!(
+            "search done: {} latency cache {hits} hits / {misses} misses ({:.1}% hit rate)",
+            self.latency.backend(),
+            100.0 * hits as f64 / (hits + misses).max(1) as f64
+        );
+        let best_reward = self.best.as_ref().map(|(s, _)| s.reward).unwrap_or(f64::NAN);
+        let ev = SearchEvent::Finished {
+            episodes: self.episode,
+            best_reward,
+            cache_hits: hits,
+            cache_misses: misses,
+        };
+        self.emit(&ev);
+    }
+
+    /// Run steps until the current episode finishes.  Returns `None` when
+    /// every episode has already run.
+    pub fn run_episode(&mut self) -> Result<Option<EpisodeSummary>> {
+        loop {
+            match self.step()? {
+                StepOutcome::Stepped { .. } => continue,
+                StepOutcome::EpisodeFinished(summary) => return Ok(Some(summary)),
+                StepOutcome::SearchComplete => return Ok(None),
+            }
+        }
+    }
+
+    /// Run every remaining episode and return the outcome.
+    pub fn run_to_completion(&mut self) -> Result<SearchOutcome> {
+        while self.run_episode()?.is_some() {}
+        self.outcome()
+    }
+
+    /// The search result.  Only available once every episode has run.
+    pub fn outcome(&self) -> Result<SearchOutcome> {
+        anyhow::ensure!(
+            self.is_done(),
+            "search outcome requested after {} of {} episodes",
+            self.episode,
+            self.cfg.episodes
+        );
+        let (best, best_policy) = self.best.clone().expect("at least one episode ran");
+        Ok(SearchOutcome {
+            best_policy,
+            best,
+            history: self.history.clone(),
+            base_latency_s: self.base_latency_s,
+            base_accuracy: self.base_accuracy,
+            latency_backend: self.latency.backend().to_string(),
+        })
+    }
+
+    // ---------------- checkpoint / resume ----------------
+
+    /// Serialize the complete search state into a schema-versioned JSON
+    /// document.  Only legal at an episode boundary — mid-episode scratch
+    /// (partial policies, un-stored trajectories) is deliberately not part
+    /// of the checkpoint format.
+    ///
+    /// The document captures the full config, progress (history, best
+    /// policy, reference latency/accuracy), and the agent's entire learning
+    /// state including its live RNG stream — a driver rebuilt from it via
+    /// [`SearchDriver::resume_from`] continues bit-identically to a run
+    /// that was never interrupted.
+    pub fn save_checkpoint(&self) -> Result<Json> {
+        anyhow::ensure!(
+            self.cur.is_none(),
+            "checkpoints are episode-aligned: finish the in-flight episode first \
+             (run_episode) and retry"
+        );
+        let best = match &self.best {
+            None => Json::Null,
+            Some((summary, policy)) => Json::obj(vec![
+                ("summary", summary.to_json()),
+                ("policy", policy.to_json()),
+            ]),
+        };
+        Ok(Json::obj(vec![
+            ("schema_version", Json::num(CHECKPOINT_SCHEMA_VERSION as f64)),
+            ("kind", Json::str(CHECKPOINT_KIND)),
+            ("config", self.cfg.to_checkpoint_json()),
+            ("episode", Json::num(self.episode as f64)),
+            ("base_latency_s", Json::num(self.base_latency_s)),
+            ("base_accuracy", Json::num(self.base_accuracy)),
+            (
+                "base_policy",
+                match &self.base {
+                    None => Json::Null,
+                    Some(p) => p.to_json(),
+                },
+            ),
+            (
+                "history",
+                Json::Arr(self.history.iter().map(|h| h.to_json()).collect()),
+            ),
+            ("best", best),
+            ("agent", self.agent.checkpoint()),
+        ]))
+    }
+
+    /// [`SearchDriver::save_checkpoint`] straight to a file.
+    pub fn write_checkpoint(&self, path: &Path) -> Result<()> {
+        self.save_checkpoint()?.write_file(path)
+    }
+
+    /// Rebuild a driver from a checkpoint document and a concrete
+    /// environment.  The environment must match the one the checkpoint was
+    /// taken in (same model, same mapper kind, a latency backend whose
+    /// estimates are reproducible — the simulator's are pure functions of
+    /// its seed); the configuration travels inside the checkpoint.
+    pub fn resume_from(
+        checkpoint: &Json,
+        ir: &'a ModelIr,
+        sens: &'a SensitivityTable,
+        evaluator: &'a dyn PolicyEvaluator,
+        latency: &'a mut dyn LatencyProvider,
+        mapper: &'a dyn PolicyMapper,
+    ) -> Result<SearchDriver<'a>> {
+        anyhow::ensure!(
+            checkpoint.req_str("kind")? == CHECKPOINT_KIND,
+            "not a search checkpoint document"
+        );
+        anyhow::ensure!(
+            checkpoint.req_usize("schema_version")? == CHECKPOINT_SCHEMA_VERSION,
+            "checkpoint schema version mismatch (have {}, support {})",
+            checkpoint.req_usize("schema_version")?,
+            CHECKPOINT_SCHEMA_VERSION
+        );
+        let cfg = SearchConfig::from_checkpoint_json(checkpoint.req("config")?)?;
+        anyhow::ensure!(
+            cfg.episodes > 0,
+            "checkpoint config has a zero-episode search"
+        );
+        anyhow::ensure!(
+            mapper.kind() == cfg.agent,
+            "mapper implements the {} agent but the checkpoint was taken with {}",
+            mapper.kind(),
+            cfg.agent
+        );
+        let steps = mapper.steps(ir);
+        anyhow::ensure!(!steps.is_empty(), "mapper yields no actionable layers");
+        let sb = StateBuilder::new(ir, sens, mapper.action_dim());
+        let agent = Ddpg::restore(checkpoint.req("agent")?)?;
+        anyhow::ensure!(
+            agent.state_dim() == sb.dim() && agent.action_dim() == mapper.action_dim(),
+            "checkpoint agent dimensions do not match this model/mapper \
+             (state {}x{} vs {}x{})",
+            agent.state_dim(),
+            agent.action_dim(),
+            sb.dim(),
+            mapper.action_dim()
+        );
+        let base = match checkpoint.req("base_policy")? {
+            Json::Null => None,
+            p => Some(DiscretePolicy::from_json(p)?),
+        };
+        if let Some(p) = &base {
+            anyhow::ensure!(
+                p.layers.len() == ir.layers.len(),
+                "checkpoint base policy does not match this model"
+            );
+        }
+        let base_latency_s = checkpoint.req_f64("base_latency_s")?;
+        let base_accuracy = checkpoint.req_f64("base_accuracy")?;
+        let w_ok = match cfg.reward {
+            RewardSpec::Absolute => true,
+            RewardSpec::HardExponential { w } => w < 0.0,
+        };
+        anyhow::ensure!(
+            w_ok && cfg.beta < 0.0 && cfg.target > 0.0 && base_latency_s > 0.0,
+            "checkpoint carries an invalid reward shape \
+             (beta {}, target {}, base latency {})",
+            cfg.beta,
+            cfg.target,
+            base_latency_s
+        );
+        let reward = cfg.reward.build(cfg.beta, cfg.target, base_latency_s);
+        let episode = checkpoint.req_usize("episode")?;
+        anyhow::ensure!(
+            episode <= cfg.episodes,
+            "checkpoint records episode {episode} past its {}-episode budget",
+            cfg.episodes
+        );
+        let mut history = Vec::with_capacity(cfg.episodes);
+        for h in checkpoint.req_arr("history")? {
+            history.push(EpisodeSummary::from_json(h)?);
+        }
+        anyhow::ensure!(
+            history.len() == episode,
+            "checkpoint history has {} entries but records episode {}",
+            history.len(),
+            episode
+        );
+        let best = match checkpoint.req("best")? {
+            Json::Null => None,
+            b => Some((
+                EpisodeSummary::from_json(b.req("summary")?)?,
+                DiscretePolicy::from_json(b.req("policy")?)?,
+            )),
+        };
+        anyhow::ensure!(
+            best.is_some() || episode == 0,
+            "checkpoint past episode 0 must carry a best policy"
+        );
+        Ok(SearchDriver {
+            ir,
+            sens,
+            evaluator,
+            latency,
+            mapper,
+            cfg,
+            reward,
+            sb,
+            steps,
+            agent,
+            base,
+            base_latency_s,
+            base_accuracy,
+            episode,
+            history,
+            best,
+            cur: None,
+            observers: Vec::new(),
+            started_emitted: false,
+            finished_emitted: false,
+        })
+    }
+
+    /// [`SearchDriver::resume_from`] straight from a file written by
+    /// [`SearchDriver::write_checkpoint`].
+    pub fn resume_from_file(
+        path: &Path,
+        ir: &'a ModelIr,
+        sens: &'a SensitivityTable,
+        evaluator: &'a dyn PolicyEvaluator,
+        latency: &'a mut dyn LatencyProvider,
+        mapper: &'a dyn PolicyMapper,
+    ) -> Result<SearchDriver<'a>> {
+        Self::resume_from(&Json::read_file(path)?, ir, sens, evaluator, latency, mapper)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::{mapper_for, AgentKind, DdpgConfig};
+    use crate::eval::SensitivityConfig;
+    use crate::hw::{CostModel, HwTarget, LatencySimulator};
+    use crate::model::ir::test_fixtures::tiny_meta;
+    use crate::search::SimEvaluator;
+
+    fn setup() -> (ModelIr, SensitivityTable) {
+        let ir = ModelIr::from_meta(&tiny_meta()).unwrap();
+        let sens =
+            SensitivityTable::disabled(ir.layers.len(), &SensitivityConfig::default(), "tiny");
+        (ir, sens)
+    }
+
+    fn sim(seed: u64) -> LatencySimulator {
+        LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), seed)
+    }
+
+    fn cfg(agent: AgentKind, episodes: usize) -> SearchConfig {
+        let mut cfg = SearchConfig::fast(agent, 0.5);
+        cfg.episodes = episodes;
+        cfg.warmup_episodes = 3;
+        cfg.opt_steps_per_episode = 4;
+        cfg.log_every = 0;
+        cfg.ddpg = DdpgConfig {
+            hidden: (24, 16),
+            batch: 16,
+            replay_capacity: 256,
+            ..Default::default()
+        };
+        cfg
+    }
+
+    #[test]
+    fn builder_rejects_mismatched_mapper() {
+        let (ir, sens) = setup();
+        let ev = SimEvaluator::new(&ir);
+        let mut s = sim(1);
+        let mapper = mapper_for(AgentKind::Pruning);
+        let err = SearchBuilder::from_config(cfg(AgentKind::Joint, 4))
+            .build(&ir, &sens, &ev, &mut s, mapper.as_ref())
+            .err()
+            .expect("mismatched mapper must be rejected");
+        assert!(format!("{err:#}").contains("pruning"));
+    }
+
+    #[test]
+    fn builder_typed_knobs_reach_the_config() {
+        let b = SearchBuilder::new(AgentKind::Joint, 0.4)
+            .episodes(9)
+            .warmup_episodes(2)
+            .opt_steps_per_episode(5)
+            .eval_batches(3)
+            .seed(42)
+            .beta(-2.0)
+            .reward(RewardSpec::HardExponential { w: -2.0 })
+            .log_every(0);
+        let c = b.config();
+        assert_eq!(c.episodes, 9);
+        assert_eq!(c.warmup_episodes, 2);
+        assert_eq!(c.opt_steps_per_episode, 5);
+        assert_eq!(c.eval_batches, 3);
+        assert_eq!(c.seed, 42);
+        assert_eq!(c.beta, -2.0);
+        assert_eq!(c.reward, RewardSpec::HardExponential { w: -2.0 });
+        assert_eq!(c.target, 0.4);
+    }
+
+    #[test]
+    fn event_stream_is_complete_and_ordered() {
+        let (ir, sens) = setup();
+        let ev = SimEvaluator::new(&ir);
+        let mut s = sim(7);
+        let mapper = mapper_for(AgentKind::Quantization);
+        let events = std::rc::Rc::new(std::cell::RefCell::new(Vec::<String>::new()));
+        let sink = events.clone();
+        let mut driver = SearchBuilder::from_config(cfg(AgentKind::Quantization, 6))
+            .build(&ir, &sens, &ev, &mut s, mapper.as_ref())
+            .unwrap();
+        driver.add_observer(move |e: &SearchEvent| {
+            sink.borrow_mut().push(match e {
+                SearchEvent::Started { .. } => "started".to_string(),
+                SearchEvent::EpisodeFinished(s) => format!("episode{}", s.episode),
+                SearchEvent::BestImproved(_) => "best".to_string(),
+                SearchEvent::Finished { episodes, .. } => format!("finished{episodes}"),
+            });
+        });
+        driver.run_to_completion().unwrap();
+        let log = events.borrow();
+        assert_eq!(log.first().unwrap(), "started");
+        assert_eq!(log.last().unwrap(), "finished6");
+        assert_eq!(log.iter().filter(|e| *e == "started").count(), 1);
+        assert_eq!(log.iter().filter(|e| e.starts_with("finished")).count(), 1);
+        let episodes: Vec<&String> = log.iter().filter(|e| e.starts_with("episode")).collect();
+        assert_eq!(episodes.len(), 6);
+        assert_eq!(episodes[0], "episode0");
+        assert_eq!(episodes[5], "episode5");
+        // episode 0 is always an improvement
+        assert!(log.iter().any(|e| e == "best"));
+    }
+
+    #[test]
+    fn event_jsons_carry_type_tags() {
+        let s = EpisodeSummary {
+            episode: 1,
+            reward: 0.5,
+            accuracy: 0.9,
+            latency_s: 0.01,
+            macs: 100,
+            bops: 200,
+        };
+        for (ev, tag) in [
+            (
+                SearchEvent::Started {
+                    first_episode: 0,
+                    episodes: 5,
+                    base_latency_s: 0.1,
+                    base_accuracy: 0.9,
+                    backend: "sim".into(),
+                },
+                "started",
+            ),
+            (SearchEvent::EpisodeFinished(s.clone()), "episode"),
+            (SearchEvent::BestImproved(s), "best"),
+            (
+                SearchEvent::Finished {
+                    episodes: 5,
+                    best_reward: 0.5,
+                    cache_hits: 1,
+                    cache_misses: 2,
+                },
+                "finished",
+            ),
+        ] {
+            assert_eq!(ev.to_json().req_str("type").unwrap(), tag);
+        }
+    }
+
+    #[test]
+    fn checkpoint_mid_episode_is_refused() {
+        let (ir, sens) = setup();
+        let ev = SimEvaluator::new(&ir);
+        let mut s = sim(3);
+        let mapper = mapper_for(AgentKind::Joint);
+        let mut driver = SearchBuilder::from_config(cfg(AgentKind::Joint, 4))
+            .build(&ir, &sens, &ev, &mut s, mapper.as_ref())
+            .unwrap();
+        // boundary: fine
+        driver.save_checkpoint().unwrap();
+        // one layer decision in: refused
+        match driver.step().unwrap() {
+            StepOutcome::Stepped { .. } => {}
+            other => panic!("expected a mid-episode step, got {other:?}"),
+        }
+        assert!(driver.mid_episode());
+        assert!(driver.save_checkpoint().is_err());
+        // episode boundary again: fine
+        while driver.mid_episode() {
+            driver.step().unwrap();
+        }
+        driver.save_checkpoint().unwrap();
+    }
+
+    #[test]
+    fn resume_rejects_wrong_documents() {
+        let (ir, sens) = setup();
+        let ev = SimEvaluator::new(&ir);
+        let mapper = mapper_for(AgentKind::Joint);
+        let mut s = sim(3);
+        let driver = SearchBuilder::from_config(cfg(AgentKind::Joint, 4))
+            .build(&ir, &sens, &ev, &mut s, mapper.as_ref())
+            .unwrap();
+        let good = driver.save_checkpoint().unwrap();
+        drop(driver);
+
+        // wrong schema version
+        let mut bad = good.clone();
+        if let Json::Obj(m) = &mut bad {
+            m.insert("schema_version".into(), Json::num(999.0));
+        }
+        let mut s2 = sim(3);
+        assert!(
+            SearchDriver::resume_from(&bad, &ir, &sens, &ev, &mut s2, mapper.as_ref()).is_err()
+        );
+
+        // wrong mapper for the checkpointed agent
+        let wrong = mapper_for(AgentKind::Pruning);
+        let mut s3 = sim(3);
+        assert!(
+            SearchDriver::resume_from(&good, &ir, &sens, &ev, &mut s3, wrong.as_ref()).is_err()
+        );
+
+        // not a checkpoint at all
+        let mut s4 = sim(3);
+        assert!(SearchDriver::resume_from(
+            &Json::obj(vec![("kind", Json::str("something_else"))]),
+            &ir,
+            &sens,
+            &ev,
+            &mut s4,
+            mapper.as_ref()
+        )
+        .is_err());
+    }
+}

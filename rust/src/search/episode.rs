@@ -1,14 +1,18 @@
-//! The Galen episode loop.
+//! Policy evaluation backends, search result records, and the
+//! `run_search` convenience wrapper.
+//!
+//! The episode loop itself lives in [`crate::search::SearchDriver`]
+//! (`driver.rs`); `run_search` is a thin run-to-completion wrapper over it,
+//! kept for callers that want the original one-call API.
 
 use anyhow::Result;
 
-use crate::agent::{Ddpg, PolicyMapper, StateBuilder, Transition};
+use crate::agent::PolicyMapper;
 use crate::compress::{DiscretePolicy, QuantMode};
 use crate::eval::SensitivityTable;
 use crate::hw::LatencyProvider;
 use crate::model::ModelIr;
-use crate::reward::AbsoluteReward;
-use crate::search::SearchConfig;
+use crate::search::{SearchBuilder, SearchConfig};
 use crate::util::json::Json;
 
 /// Accuracy provider, abstracted so the search runs against either the real
@@ -111,6 +115,11 @@ pub struct EpisodeSummary {
 
 impl EpisodeSummary {
     /// JSON form (one entry of a result record's `history` array).
+    ///
+    /// `macs`/`bops` are written twice: as plain numbers for human and
+    /// tooling consumption, and as hex twins (`macs_hex`/`bops_hex`) —
+    /// u64s above 2^53 do not survive the f64 number path, and checkpoint
+    /// resume must reproduce them bit-exactly.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("episode", Json::num(self.episode as f64)),
@@ -119,7 +128,23 @@ impl EpisodeSummary {
             ("latency_s", Json::num(self.latency_s)),
             ("macs", Json::num(self.macs as f64)),
             ("bops", Json::num(self.bops as f64)),
+            ("macs_hex", Json::hex64(self.macs)),
+            ("bops_hex", Json::hex64(self.bops)),
         ])
+    }
+
+    /// Rebuild a summary serialized by [`EpisodeSummary::to_json`]
+    /// (checkpoint history entries); every field round-trips bit-exactly
+    /// (the u64 counters decode from their hex twins).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            episode: j.req_usize("episode")?,
+            reward: j.req_f64("reward")?,
+            accuracy: j.req_f64("accuracy")?,
+            latency_s: j.req_f64("latency_s")?,
+            macs: j.req_hex64("macs_hex")?,
+            bops: j.req_hex64("bops_hex")?,
+        })
     }
 }
 
@@ -162,7 +187,14 @@ impl SearchOutcome {
     }
 }
 
-/// Run a full policy search (paper Fig. 1 outer loop).
+/// Run a full policy search (paper Fig. 1 outer loop) start to finish.
+///
+/// This is a thin wrapper over [`crate::search::SearchDriver`]: it builds
+/// the driver from `cfg` and runs it to completion, so the result is
+/// bit-identical to stepping the driver manually (asserted in
+/// `tests/integration_driver.rs`).  Use the driver directly for
+/// episode-granular control, the `SearchEvent` observer stream, or
+/// checkpoint/resume.
 ///
 /// `base` starts episodes from a fixed pre-compressed policy instead of the
 /// reference — the sequential search schemes of the appendix fix one
@@ -180,106 +212,13 @@ pub fn run_search(
     cfg: &SearchConfig,
     base: Option<&DiscretePolicy>,
 ) -> Result<SearchOutcome> {
-    let steps = mapper.steps(ir);
-    anyhow::ensure!(!steps.is_empty(), "mapper yields no actionable layers");
-    let sb = StateBuilder::new(ir, sens, mapper.action_dim());
-    let mut agent = Ddpg::new(sb.dim(), mapper.action_dim(), cfg.ddpg.clone(), cfg.seed);
-
-    let reference = DiscretePolicy::reference(ir);
-    let base_latency = latency.latency(ir, &reference);
-    let reward_fn = AbsoluteReward::new(cfg.beta, cfg.target, base_latency);
-    let base_accuracy = evaluator.base_accuracy();
-
-    let mut history = Vec::with_capacity(cfg.episodes);
-    let mut best: Option<(EpisodeSummary, DiscretePolicy)> = None;
-
-    for ep in 0..cfg.episodes {
-        let random = ep < cfg.warmup_episodes;
-        let mut policy = base.cloned().unwrap_or_else(|| reference.clone());
-        let mut states: Vec<Vec<f32>> = Vec::with_capacity(steps.len());
-        let mut actions: Vec<Vec<f32>> = Vec::with_capacity(steps.len());
-        let mut prev_action = vec![0.0f32; mapper.action_dim()];
-
-        for (k, &idx) in steps.iter().enumerate() {
-            let s = sb.build(ir, sens, &policy, idx, k, steps.len(), &prev_action);
-            let a = agent.act(&s, true, random);
-            mapper.apply(ir, &mut policy, idx, &a);
-            prev_action.copy_from_slice(&a);
-            states.push(s);
-            actions.push(a);
-        }
-
-        // ---- validate the complete policy (paper Fig. 1) ----
-        let accuracy = evaluator.accuracy(&policy)?;
-        let measured = latency.measure(ir, &policy).latency_s;
-        let reward = reward_fn.reward(accuracy, measured);
-
-        // ---- shared per-episode reward across all transitions ----
-        for t in 0..states.len() {
-            let terminal = t + 1 == states.len();
-            let next_state = if terminal {
-                vec![0.0; states[t].len()]
-            } else {
-                states[t + 1].clone()
-            };
-            agent.store(Transition {
-                state: states[t].clone(),
-                action: actions[t].clone(),
-                reward: reward as f32,
-                next_state,
-                terminal,
-            });
-        }
-        agent.end_episode();
-        if !random {
-            for _ in 0..cfg.opt_steps_per_episode {
-                agent.optimize();
-            }
-        }
-
-        let summary = EpisodeSummary {
-            episode: ep,
-            reward,
-            accuracy,
-            latency_s: measured,
-            macs: policy.macs(ir),
-            bops: policy.bops(ir),
-        };
-        let improved = best
-            .as_ref()
-            .map(|(b, _)| reward > b.reward)
-            .unwrap_or(true);
-        if improved {
-            best = Some((summary.clone(), policy.clone()));
-        }
-        if cfg.log_every > 0 && (ep % cfg.log_every == 0 || ep + 1 == cfg.episodes) {
-            log::info!(
-                "[{} c={:.2}] ep {ep:4} reward={reward:+.4} acc={accuracy:.4} lat={:.2}ms ({:.1}% of base) sigma={:.3}",
-                mapper.kind().label(),
-                cfg.target,
-                measured * 1e3,
-                100.0 * measured / base_latency,
-                agent.sigma,
-            );
-        }
-        history.push(summary);
+    let mut builder = SearchBuilder::from_config(cfg.clone());
+    if let Some(p) = base {
+        builder = builder.base_policy(p.clone());
     }
-
-    let (best, best_policy) = best.expect("at least one episode");
-    let (hits, misses) = latency.cache_stats();
-    log::debug!(
-        "search done: {} latency cache {hits} hits / {misses} misses ({:.1}% hit rate)",
-        latency.backend(),
-        100.0 * hits as f64 / (hits + misses).max(1) as f64
-    );
-    Ok(SearchOutcome {
-        best_policy,
-        best,
-        history,
-        base_latency_s: base_latency,
-        base_accuracy,
-        latency_backend: latency.backend().to_string(),
-    })
+    builder
+        .build(ir, sens, evaluator, latency, mapper)?
+        .run_to_completion()
 }
 
 /// Count MIX/INT8/FP32 usage of a policy (analysis helper).
@@ -424,6 +363,26 @@ mod tests {
             stats.hits > 0,
             "repeat configurations must be served from the cache"
         );
+    }
+
+    #[test]
+    fn episode_summary_json_roundtrip_is_exact() {
+        let s = EpisodeSummary {
+            episode: 41,
+            reward: 0.8612345678901234,
+            accuracy: 0.912345,
+            latency_s: 0.00123456789,
+            macs: 123_456_789,
+            bops: (1u64 << 53) + 1, // not representable in f64: needs the hex twin
+        };
+        let back =
+            EpisodeSummary::from_json(&Json::parse(&s.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.episode, s.episode);
+        assert_eq!(back.reward.to_bits(), s.reward.to_bits());
+        assert_eq!(back.accuracy.to_bits(), s.accuracy.to_bits());
+        assert_eq!(back.latency_s.to_bits(), s.latency_s.to_bits());
+        assert_eq!(back.macs, s.macs);
+        assert_eq!(back.bops, s.bops);
     }
 
     #[test]

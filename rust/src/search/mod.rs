@@ -1,19 +1,31 @@
-//! The episode loop (paper Figures 1 + 2) and the sweep orchestrator.
+//! The search subsystem: the resumable episode-loop driver (paper Figures
+//! 1 + 2), its one-call wrapper, and the sweep orchestrator.
 //!
-//! `run_search` predicts a full policy layer by layer, validates it
-//! (accuracy on the PJRT artifact + latency on the pluggable hardware
-//! backend), computes the absolute reward, shares it across the episode's
-//! transitions, and optimizes the agent.
+//! `SearchDriver` (built through the typed `SearchBuilder`) predicts a full
+//! policy layer by layer, validates it (accuracy on the PJRT artifact +
+//! latency on the pluggable hardware backend), computes the reward, shares
+//! it across the episode's transitions, and optimizes the agent — with
+//! explicit `step()`/`run_episode()` granularity, a `SearchEvent` observer
+//! stream, and schema-versioned checkpoint/resume whose resumed runs are
+//! bit-identical to uninterrupted ones.
 //!
-//! `orchestrator` fans whole grids of `(agent, latency target)` searches
-//! out across worker threads and folds the outcomes into a Pareto front —
-//! see `run_sweep` / `coordinator::Session::sweep_parallel`.
+//! `run_search` wraps the driver for callers that want the original
+//! blocking one-call API; `orchestrator` fans whole grids of
+//! `(agent, latency target)` searches out across worker threads and folds
+//! the outcomes into a Pareto front — see `run_sweep` /
+//! `coordinator::Session::sweep_parallel`.  The `coordinator::serve` job
+//! service multiplexes many concurrent drivers over the same machinery.
 
 mod config;
+mod driver;
 mod episode;
 mod orchestrator;
 
 pub use config::SearchConfig;
+pub use driver::{
+    SearchBuilder, SearchDriver, SearchEvent, SearchObserver, StepOutcome,
+    CHECKPOINT_SCHEMA_VERSION,
+};
 pub use episode::{
     quant_histogram, run_search, EpisodeSummary, PolicyEvaluator, SearchOutcome, SimEvaluator,
 };

@@ -34,7 +34,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::agent::{mapper_for, AgentKind};
-use crate::compress::{DiscretePolicy, LayerCmp, QuantMode};
+use crate::compress::DiscretePolicy;
 use crate::eval::SensitivityTable;
 use crate::hw::{
     CostModel, HwTarget, HybridProvider, LatencyKind, LatencyProvider, LatencySimulator,
@@ -124,7 +124,7 @@ impl SweepGrid {
 /// runs it) — the cornerstone of worker-count-invariant sweeps.
 pub fn job_seed(base_seed: u64, agent: AgentKind, target: f64, replicate: usize) -> u64 {
     let mut h = Fnv1a::seeded(base_seed ^ 0x9a1e_5eed_0b5e_55ed);
-    h.mix_bytes(agent.label().as_bytes());
+    h.mix_bytes(agent.to_string().as_bytes());
     h.mix(target.to_bits());
     h.mix(replicate as u64);
     h.finish()
@@ -260,7 +260,7 @@ impl SweepReport {
         for o in &self.outcomes {
             s.push_str(&format!(
                 "{:16} {:>5.2} {:>9.1}% {:>9.2}% {:>9.3} {:>7.1}s\n",
-                o.job.agent.label(),
+                o.job.agent,
                 o.job.target,
                 o.outcome.relative_latency() * 100.0,
                 o.outcome.best.accuracy * 100.0,
@@ -300,7 +300,7 @@ pub fn run_sweep(
         "sweep: {} jobs on {} workers ({} backend)",
         jobs.len(),
         workers,
-        factory.kind().label()
+        factory.kind()
     );
     let t0 = Instant::now();
     let results = parallel_map(jobs, workers, |job| run_job(ir, sens, proto, job, factory));
@@ -372,7 +372,7 @@ impl ParetoPoint {
     /// Build a point from one finished sweep job.
     pub fn from_outcome(o: &SweepOutcome) -> Self {
         Self {
-            agent: o.job.agent.label().to_string(),
+            agent: o.job.agent.to_string(),
             target: o.job.target,
             seed: o.job.seed,
             accuracy: o.outcome.best.accuracy,
@@ -406,76 +406,31 @@ impl ParetoPoint {
 
     /// JSON form (one entry of the sweep artifact's `points` array).
     pub fn to_json(&self) -> Json {
-        let policy = self
-            .policy
-            .layers
-            .iter()
-            .map(|l| {
-                let (wb, ab) = l.quant.bits();
-                Json::obj(vec![
-                    ("channels", Json::num(l.kept_channels as f64)),
-                    ("mode", Json::str(mode_tag(l.quant))),
-                    ("w_bits", Json::num(wb as f64)),
-                    ("a_bits", Json::num(ab as f64)),
-                ])
-            })
-            .collect();
         Json::obj(vec![
             ("agent", Json::str(self.agent.clone())),
             ("target", Json::num(self.target)),
             // hex string: u64 seeds do not survive the f64 number path
-            ("seed", Json::str(format!("{:016x}", self.seed))),
+            ("seed", Json::hex64(self.seed)),
             ("accuracy", Json::num(self.accuracy)),
             ("latency_s", Json::num(self.latency_s)),
             ("relative_latency", Json::num(self.relative_latency)),
             ("reward", Json::num(self.reward)),
-            ("policy", Json::Arr(policy)),
+            ("policy", self.policy.to_json()),
         ])
     }
 
     /// Parse one artifact point back (inverse of `to_json`).
     pub fn from_json(j: &Json) -> Result<Self> {
-        let seed_s = j.req_str("seed")?;
-        let seed = u64::from_str_radix(seed_s, 16)
-            .map_err(|_| anyhow::anyhow!("bad seed '{seed_s}'"))?;
-        let mut layers = Vec::new();
-        for e in j.req_arr("policy")? {
-            let channels = e.req_usize("channels")?;
-            let wb = e.req_f64("w_bits")? as u32;
-            let ab = e.req_f64("a_bits")? as u32;
-            let quant = match e.req_str("mode")? {
-                "fp32" => QuantMode::Fp32,
-                "int8" => QuantMode::Int8,
-                "mix" => QuantMode::Mix {
-                    w_bits: wb as u8,
-                    a_bits: ab as u8,
-                },
-                other => anyhow::bail!("unknown quant mode '{other}'"),
-            };
-            layers.push(LayerCmp {
-                kept_channels: channels,
-                quant,
-            });
-        }
         Ok(Self {
             agent: j.req_str("agent")?.to_string(),
             target: j.req_f64("target")?,
-            seed,
+            seed: j.req_hex64("seed")?,
             accuracy: j.req_f64("accuracy")?,
             latency_s: j.req_f64("latency_s")?,
             relative_latency: j.req_f64("relative_latency")?,
             reward: j.req_f64("reward")?,
-            policy: DiscretePolicy { layers },
+            policy: DiscretePolicy::from_json(j.req("policy")?)?,
         })
-    }
-}
-
-/// Stable artifact tag of a quant mode class.
-fn mode_tag(q: QuantMode) -> &'static str {
-    match q {
-        QuantMode::Fp32 => "fp32",
-        QuantMode::Int8 => "int8",
-        QuantMode::Mix { .. } => "mix",
     }
 }
 
@@ -583,6 +538,7 @@ impl ParetoFront {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::{LayerCmp, QuantMode};
     use crate::eval::SensitivityConfig;
     use crate::model::ir::test_fixtures::tiny_meta;
 

@@ -117,6 +117,44 @@ impl Json {
             .as_arr()
             .ok_or_else(|| anyhow::anyhow!("json key '{key}' is not an array"))
     }
+    /// Required numeric array field decoded as f64s.
+    pub fn req_f64s(&self, key: &str) -> anyhow::Result<Vec<f64>> {
+        self.req_arr(key)?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("json key '{key}' holds a non-number"))
+            })
+            .collect()
+    }
+    /// Required numeric array field decoded as f32s.
+    ///
+    /// Every f32 embeds exactly into f64 and the serializer prints the
+    /// shortest round-tripping decimal, so values written by `arr_f32`
+    /// decode bit-identically — the checkpoint code relies on this.
+    pub fn req_f32s(&self, key: &str) -> anyhow::Result<Vec<f32>> {
+        Ok(self.req_f64s(key)?.into_iter().map(|v| v as f32).collect())
+    }
+    /// This value decoded as a numeric array of f32s (for arrays nested
+    /// inside arrays, where no key is available; same bit-exactness
+    /// guarantee as [`Json::req_f32s`]).
+    pub fn f32s(&self) -> anyhow::Result<Vec<f32>> {
+        self.as_arr()
+            .ok_or_else(|| anyhow::anyhow!("expected a numeric array"))?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .map(|x| x as f32)
+                    .ok_or_else(|| anyhow::anyhow!("numeric array holds a non-number"))
+            })
+            .collect()
+    }
+    /// Required hex-encoded u64 field (see [`Json::hex64`]).
+    pub fn req_hex64(&self, key: &str) -> anyhow::Result<u64> {
+        let s = self.req_str(key)?;
+        u64::from_str_radix(s, 16)
+            .map_err(|_| anyhow::anyhow!("json key '{key}' is not a hex u64 ('{s}')"))
+    }
 
     // ---------------- constructors ----------------
     /// Build an object from key/value pairs.
@@ -142,6 +180,11 @@ impl Json {
     /// Build a number array from usizes.
     pub fn arr_usize(xs: &[usize]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+    /// Encode a u64 as a fixed-width hex string (u64s above 2^53 do not
+    /// survive the f64 number path, so seeds and hashes travel as hex).
+    pub fn hex64(v: u64) -> Json {
+        Json::Str(format!("{v:016x}"))
     }
 
     /// Parse a complete JSON document.
@@ -245,9 +288,12 @@ impl Json {
 }
 
 fn write_num(n: f64, out: &mut String) {
+    // negative zero must skip the integer fast path (`0` would decode as
+    // +0.0) — `{n}` prints "-0", which parses back sign-exact; the
+    // checkpoint format's bit-exactness guarantee depends on it
     if !n.is_finite() {
         out.push_str("null"); // JSON has no inf/nan
-    } else if n == n.trunc() && n.abs() < 1e15 {
+    } else if n == n.trunc() && n.abs() < 1e15 && !(n == 0.0 && n.is_sign_negative()) {
         fmt::Write::write_fmt(out, format_args!("{}", n as i64)).unwrap();
     } else {
         fmt::Write::write_fmt(out, format_args!("{n}")).unwrap();
@@ -503,6 +549,38 @@ mod tests {
     fn integer_formatting() {
         assert_eq!(Json::Num(42.0).dump(), "42");
         assert_eq!(Json::Num(0.5).dump(), "0.5");
+    }
+
+    #[test]
+    fn negative_zero_survives_the_roundtrip() {
+        assert_eq!(Json::Num(-0.0).dump(), "-0");
+        let back = Json::parse("-0").unwrap().as_f64().unwrap();
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits());
+        // positive zero keeps the integer fast path
+        assert_eq!(Json::Num(0.0).dump(), "0");
+    }
+
+    #[test]
+    fn typed_array_and_hex_helpers_roundtrip() {
+        let xs32 = [1.5f32, -0.25, 3.0e-7, f32::MIN_POSITIVE];
+        let xs64 = [0.1f64, -2.0, 1e-300];
+        let j = Json::obj(vec![
+            ("f32s", Json::arr_f32(&xs32)),
+            ("f64s", Json::arr_f64(&xs64)),
+            ("seed", Json::hex64(0xdead_beef_cafe_f00d)),
+        ]);
+        let back = Json::parse(&j.dump()).unwrap();
+        // bit-exact decode: the checkpoint format depends on this
+        let f32s = back.req_f32s("f32s").unwrap();
+        for (a, b) in f32s.iter().zip(&xs32) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let f64s = back.req_f64s("f64s").unwrap();
+        for (a, b) in f64s.iter().zip(&xs64) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.req_hex64("seed").unwrap(), 0xdead_beef_cafe_f00d);
+        assert!(back.req_hex64("f32s").is_err());
     }
 
     #[test]

@@ -67,6 +67,29 @@ impl RunningNorm {
             x[i] = ((x[i] as f64 - self.mean[i]) / self.variance(i).sqrt()) as f32;
         }
     }
+
+    /// Serialize the full estimator state (checkpoints); round-trips
+    /// bit-exactly through [`RunningNorm::from_json`].
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean", Json::arr_f64(&self.mean)),
+            ("m2", Json::arr_f64(&self.m2)),
+        ])
+    }
+
+    /// Rebuild an estimator serialized by [`RunningNorm::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        let mean = j.req_f64s("mean")?;
+        let m2 = j.req_f64s("m2")?;
+        anyhow::ensure!(mean.len() == m2.len(), "running-norm mean/m2 length mismatch");
+        Ok(Self {
+            count: j.req_f64("count")? as u64,
+            mean,
+            m2,
+        })
+    }
 }
 
 /// Exponential moving average (reward normalization: "the rewards within the
@@ -97,6 +120,37 @@ impl Ema {
     /// Current average (0 before the first update).
     pub fn get(&self) -> f64 {
         self.value.unwrap_or(0.0)
+    }
+
+    /// Serialize the average state (checkpoints); `null` value = no update
+    /// seen yet, so the first-sample seeding behavior survives the trip.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("alpha", Json::num(self.alpha)),
+            (
+                "value",
+                match self.value {
+                    None => Json::Null,
+                    Some(v) => Json::num(v),
+                },
+            ),
+        ])
+    }
+
+    /// Rebuild an average serialized by [`Ema::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        let value = match j.req("value")? {
+            crate::util::json::Json::Null => None,
+            v => Some(
+                v.as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("ema value is not a number"))?,
+            ),
+        };
+        Ok(Self {
+            alpha: j.req_f64("alpha")?,
+            value,
+        })
     }
 }
 
@@ -196,6 +250,35 @@ mod tests {
     fn ema_first_value_seeds() {
         let mut e = Ema::new(0.1);
         assert_eq!(e.update(4.0), 4.0);
+    }
+
+    #[test]
+    fn running_norm_and_ema_json_roundtrip_exactly() {
+        use crate::util::json::Json;
+        let mut norm = RunningNorm::new(3);
+        let mut rng = Pcg64::new(4);
+        for _ in 0..17 {
+            norm.update(&[
+                rng.normal() as f32,
+                rng.normal_scaled(3.0, 7.0) as f32,
+                rng.next_f32(),
+            ]);
+        }
+        let back = RunningNorm::from_json(&Json::parse(&norm.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.count(), norm.count());
+        for i in 0..3 {
+            assert_eq!(back.mean[i].to_bits(), norm.mean[i].to_bits());
+            assert_eq!(back.m2[i].to_bits(), norm.m2[i].to_bits());
+        }
+
+        let mut e = Ema::new(0.05);
+        let fresh = Ema::from_json(&Json::parse(&e.to_json().dump()).unwrap()).unwrap();
+        assert!(fresh.value.is_none(), "pre-update state must survive");
+        e.update(0.1234567890123);
+        e.update(-7.5);
+        let back = Ema::from_json(&Json::parse(&e.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.get().to_bits(), e.get().to_bits());
+        assert_eq!(back.alpha.to_bits(), e.alpha.to_bits());
     }
 
     #[test]

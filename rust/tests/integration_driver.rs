@@ -1,0 +1,240 @@
+//! Driver-vs-monolith and checkpoint/resume bit-identity.
+//!
+//! The two acceptance guarantees of the `SearchDriver` redesign:
+//!
+//! 1. stepping the driver one layer decision at a time produces the exact
+//!    outcome of the one-call `run_search` wrapper (same RNG streams, same
+//!    order) — for all three agents;
+//! 2. a search checkpointed mid-run and resumed (through an on-disk
+//!    round-trip) finishes bit-identical to one that was never
+//!    interrupted.
+
+use galen::agent::{mapper_for, AgentKind, DdpgConfig};
+use galen::eval::{SensitivityConfig, SensitivityTable};
+use galen::hw::{CostModel, HwTarget, LatencySimulator};
+use galen::model::ir::test_fixtures::tiny_meta;
+use galen::model::ModelIr;
+use galen::search::{
+    run_search, SearchBuilder, SearchConfig, SearchDriver, SearchOutcome, SimEvaluator,
+    StepOutcome,
+};
+
+fn setup() -> (ModelIr, SensitivityTable) {
+    let ir = ModelIr::from_meta(&tiny_meta()).unwrap();
+    let sens = SensitivityTable::disabled(ir.layers.len(), &SensitivityConfig::default(), "tiny");
+    (ir, sens)
+}
+
+fn sim(seed: u64) -> LatencySimulator {
+    LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), seed)
+}
+
+fn cfg(agent: AgentKind, episodes: usize) -> SearchConfig {
+    let mut cfg = SearchConfig::fast(agent, 0.5);
+    cfg.episodes = episodes;
+    cfg.warmup_episodes = 4;
+    cfg.opt_steps_per_episode = 4;
+    cfg.log_every = 0;
+    cfg.ddpg = DdpgConfig {
+        hidden: (32, 24),
+        batch: 24,
+        replay_capacity: 400,
+        ..Default::default()
+    };
+    cfg
+}
+
+/// Bitwise equality of two outcomes — `assert_eq!` on floats would accept
+/// -0.0 == 0.0 etc.; the resume guarantee is stronger than that.
+fn assert_outcomes_bit_identical(a: &SearchOutcome, b: &SearchOutcome, what: &str) {
+    assert_eq!(a.best_policy, b.best_policy, "{what}: best policy");
+    assert_eq!(a.best.episode, b.best.episode, "{what}: best episode index");
+    assert_eq!(a.best.reward.to_bits(), b.best.reward.to_bits(), "{what}: best reward");
+    assert_eq!(
+        a.base_latency_s.to_bits(),
+        b.base_latency_s.to_bits(),
+        "{what}: base latency"
+    );
+    assert_eq!(
+        a.base_accuracy.to_bits(),
+        b.base_accuracy.to_bits(),
+        "{what}: base accuracy"
+    );
+    assert_eq!(a.latency_backend, b.latency_backend, "{what}: backend label");
+    assert_eq!(a.history.len(), b.history.len(), "{what}: history length");
+    for (i, (x, y)) in a.history.iter().zip(&b.history).enumerate() {
+        assert_eq!(x.episode, y.episode, "{what}: history[{i}].episode");
+        assert_eq!(x.reward.to_bits(), y.reward.to_bits(), "{what}: history[{i}].reward");
+        assert_eq!(
+            x.accuracy.to_bits(),
+            y.accuracy.to_bits(),
+            "{what}: history[{i}].accuracy"
+        );
+        assert_eq!(
+            x.latency_s.to_bits(),
+            y.latency_s.to_bits(),
+            "{what}: history[{i}].latency"
+        );
+        assert_eq!(x.macs, y.macs, "{what}: history[{i}].macs");
+        assert_eq!(x.bops, y.bops, "{what}: history[{i}].bops");
+    }
+}
+
+/// Acceptance: for every agent, a driver advanced exclusively through
+/// single `step()` calls reproduces `run_search` bit for bit on the sim
+/// backend.
+#[test]
+fn stepped_driver_matches_run_search_for_all_agents() {
+    let (ir, sens) = setup();
+    for agent in [AgentKind::Pruning, AgentKind::Quantization, AgentKind::Joint] {
+        let cfg = cfg(agent, 14);
+        let ev = SimEvaluator::new(&ir);
+        let mapper = mapper_for(agent);
+
+        let mut sim_a = sim(5);
+        let legacy = run_search(&ir, &sens, &ev, &mut sim_a, mapper.as_ref(), &cfg, None).unwrap();
+
+        let mut sim_b = sim(5);
+        let mut driver = SearchBuilder::from_config(cfg.clone())
+            .build(&ir, &sens, &ev, &mut sim_b, mapper.as_ref())
+            .unwrap();
+        let mut episodes = 0;
+        let mut steps = 0;
+        loop {
+            match driver.step().unwrap() {
+                StepOutcome::Stepped { .. } => steps += 1,
+                StepOutcome::EpisodeFinished(_) => {
+                    steps += 1;
+                    episodes += 1;
+                }
+                StepOutcome::SearchComplete => break,
+            }
+        }
+        assert_eq!(episodes, cfg.episodes, "{agent}: episode count");
+        let steps_per_episode = mapper.steps(&ir).len();
+        assert_eq!(steps, cfg.episodes * steps_per_episode, "{agent}: step count");
+        let stepped = driver.outcome().unwrap();
+        assert_outcomes_bit_identical(&stepped, &legacy, &format!("{agent} stepped-vs-monolith"));
+    }
+}
+
+/// Acceptance: checkpoint at episode 6 of 16, resume through a file on
+/// disk, finish — bit-identical to the uninterrupted 16-episode run.
+#[test]
+fn checkpoint_resume_mid_search_is_bit_identical() {
+    let (ir, sens) = setup();
+    let cfg = cfg(AgentKind::Quantization, 16);
+    let ev = SimEvaluator::new(&ir);
+    let mapper = mapper_for(AgentKind::Quantization);
+
+    // uninterrupted reference run
+    let mut sim_a = sim(9);
+    let straight = run_search(&ir, &sens, &ev, &mut sim_a, mapper.as_ref(), &cfg, None).unwrap();
+
+    // interrupted run: 6 episodes, checkpoint to disk, drop everything
+    let path = std::env::temp_dir().join(format!(
+        "galen_driver_ckpt_{}_{:x}.json",
+        std::process::id(),
+        cfg.seed
+    ));
+    {
+        let mut sim_b = sim(9);
+        let mut driver = SearchBuilder::from_config(cfg.clone())
+            .build(&ir, &sens, &ev, &mut sim_b, mapper.as_ref())
+            .unwrap();
+        for _ in 0..6 {
+            driver.run_episode().unwrap().expect("episodes remain");
+        }
+        assert_eq!(driver.episode(), 6);
+        assert!(!driver.is_done());
+        driver.write_checkpoint(&path).unwrap();
+    }
+
+    // resume in a fresh process-like context: new driver, new simulator
+    // with the same seed (its noise is a pure function of (seed, policy))
+    let mut sim_c = sim(9);
+    let mut resumed =
+        SearchDriver::resume_from_file(&path, &ir, &sens, &ev, &mut sim_c, mapper.as_ref())
+            .unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(resumed.episode(), 6);
+    assert_eq!(resumed.history().len(), 6);
+    let out = resumed.run_to_completion().unwrap();
+
+    assert_outcomes_bit_identical(&out, &straight, "checkpoint-resume");
+}
+
+/// A resumed driver keeps honoring the remaining episode budget and
+/// re-checkpoints correctly (double interruption).
+#[test]
+fn double_resume_still_bit_identical() {
+    let (ir, sens) = setup();
+    let cfg = cfg(AgentKind::Joint, 12);
+    let ev = SimEvaluator::new(&ir);
+    let mapper = mapper_for(AgentKind::Joint);
+
+    let mut sim_a = sim(13);
+    let straight = run_search(&ir, &sens, &ev, &mut sim_a, mapper.as_ref(), &cfg, None).unwrap();
+
+    // run 4, checkpoint, run 4 more, checkpoint again, finish
+    let ckpt1 = {
+        let mut s = sim(13);
+        let mut d = SearchBuilder::from_config(cfg.clone())
+            .build(&ir, &sens, &ev, &mut s, mapper.as_ref())
+            .unwrap();
+        for _ in 0..4 {
+            d.run_episode().unwrap();
+        }
+        d.save_checkpoint().unwrap()
+    };
+    let ckpt2 = {
+        let mut s = sim(13);
+        let mut d = SearchDriver::resume_from(&ckpt1, &ir, &sens, &ev, &mut s, mapper.as_ref())
+            .unwrap();
+        for _ in 0..4 {
+            d.run_episode().unwrap();
+        }
+        assert_eq!(d.episode(), 8);
+        d.save_checkpoint().unwrap()
+    };
+    let mut s = sim(13);
+    let out = SearchDriver::resume_from(&ckpt2, &ir, &sens, &ev, &mut s, mapper.as_ref())
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+
+    assert_outcomes_bit_identical(&out, &straight, "double-resume");
+}
+
+/// The base-policy of sequential schemes travels inside the checkpoint.
+#[test]
+fn base_policy_survives_checkpoint_resume() {
+    let (ir, sens) = setup();
+    let cfg = cfg(AgentKind::Quantization, 8);
+    let ev = SimEvaluator::new(&ir);
+    let mapper = mapper_for(AgentKind::Quantization);
+
+    let mut base = galen::compress::DiscretePolicy::reference(&ir);
+    base.layers[1].kept_channels = 2;
+
+    let ckpt = {
+        let mut s = sim(3);
+        let mut d = SearchBuilder::from_config(cfg.clone())
+            .base_policy(base.clone())
+            .build(&ir, &sens, &ev, &mut s, mapper.as_ref())
+            .unwrap();
+        for _ in 0..3 {
+            d.run_episode().unwrap();
+        }
+        d.save_checkpoint().unwrap()
+    };
+    let mut s = sim(3);
+    let out = SearchDriver::resume_from(&ckpt, &ir, &sens, &ev, &mut s, mapper.as_ref())
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+    assert_eq!(
+        out.best_policy.layers[1].kept_channels, 2,
+        "pruning from the base policy must survive the resumed quantization run"
+    );
+}

@@ -1,0 +1,242 @@
+//! End-to-end `coordinator::serve` sessions over in-memory JSONL pipes:
+//! the exact protocol `galen serve` speaks on stdin/stdout.
+
+use std::io::Cursor;
+
+use galen::coordinator::{serve, ServeOptions};
+use galen::eval::{SensitivityConfig, SensitivityTable};
+use galen::hw::{HwTarget, LatencyKind, ProfilerConfig};
+use galen::model::ir::test_fixtures::tiny_meta;
+use galen::model::ModelIr;
+use galen::search::LatencyFactory;
+use galen::util::json::Json;
+
+fn fixture() -> (ModelIr, SensitivityTable) {
+    let ir = ModelIr::from_meta(&tiny_meta()).unwrap();
+    let sens = SensitivityTable::disabled(ir.layers.len(), &SensitivityConfig::default(), "tiny");
+    (ir, sens)
+}
+
+fn factory() -> LatencyFactory {
+    LatencyFactory::new(
+        LatencyKind::Sim,
+        HwTarget::cortex_a72(),
+        "tiny",
+        ProfilerConfig::fast(),
+        None,
+    )
+}
+
+/// A submit request line for a small-but-real search job: low episode
+/// count and a small agent so the whole scripted session stays fast.
+fn submit_line(id: &str, agent: &str, target: f64) -> String {
+    let overrides = r#"{"episodes": 8, "warmup_episodes": 3, "opt_steps_per_episode": 4, "log_every": 0, "ddpg": {"hidden": [24, 16], "batch": 16, "replay_capacity": 200}}"#;
+    format!(
+        r#"{{"op":"submit","id":"{id}","spec":{{"agent":"{agent}","target":{target},"preset":"fast","config":{overrides}}}}}"#
+    )
+}
+
+fn run_session(script: &str, opts: &ServeOptions) -> (galen::coordinator::ServeStats, Vec<Json>) {
+    let (ir, sens) = fixture();
+    let factory = factory();
+    let mut out = Vec::new();
+    let stats = serve(
+        &ir,
+        &sens,
+        &factory,
+        "tiny",
+        opts,
+        Cursor::new(script.to_string()),
+        &mut out,
+    )
+    .unwrap();
+    let text = String::from_utf8(out).unwrap();
+    let responses: Vec<Json> = text
+        .lines()
+        .map(|l| Json::parse(l).unwrap_or_else(|e| panic!("bad response line '{l}': {e}")))
+        .collect();
+    (stats, responses)
+}
+
+/// The acceptance-criteria session: submit 2 jobs, wait on both results,
+/// page the event stream — both jobs complete and both artifacts land.
+#[test]
+fn scripted_two_job_session_completes_with_artifacts() {
+    let dir = std::env::temp_dir().join(format!("galen_serve_it_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let script = format!(
+        "{}\n{}\n{}\n{}\n{}\n{}\n{}\n{}\n",
+        submit_line("a", "quantization", 0.5),
+        submit_line("b", "joint", 0.4),
+        r#"{"op":"result","id":"ra","job":"job-0","wait":true}"#,
+        r#"{"op":"result","id":"rb","job":"job-1","wait":true}"#,
+        r#"{"op":"events","id":"ev","job":"job-0"}"#,
+        r#"{"op":"forget","id":"fg","job":"job-0"}"#,
+        r#"{"op":"events","id":"ev2","job":"job-0"}"#,
+        r#"{"op":"list","id":"ls"}"#,
+    );
+    let opts = ServeOptions {
+        workers: 2,
+        results_dir: Some(dir.clone()),
+        base_seed: None,
+    };
+    let (stats, responses) = run_session(&script, &opts);
+
+    assert_eq!(stats.submitted, 2);
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(responses.len(), 8, "one response line per request line");
+    for r in &responses {
+        assert!(r.req_bool("ok").unwrap(), "{}", r.dump());
+    }
+    // submits echo ids and hand out job names
+    assert_eq!(responses[0].req_str("id").unwrap(), "a");
+    assert_eq!(responses[0].req_str("job").unwrap(), "job-0");
+    assert_eq!(responses[1].req_str("job").unwrap(), "job-1");
+
+    // both waited results are done and carry an outcome + policy + artifact
+    for (r, job) in [(&responses[2], "job-0"), (&responses[3], "job-1")] {
+        assert_eq!(r.req_str("state").unwrap(), "done", "{}", r.dump());
+        assert_eq!(r.req_str("job").unwrap(), job);
+        let outcome = r.req("outcome").unwrap();
+        assert_eq!(outcome.req("history").unwrap().as_arr().unwrap().len(), 8);
+        assert!(outcome.req_f64("base_latency_s").unwrap() > 0.0);
+        assert!(!r.req_arr("policy").unwrap().is_empty());
+        assert!(r.req_str("artifact").unwrap().contains(job));
+    }
+
+    // the event stream saw the whole search: started + 8 episodes + finished
+    let events = responses[4].req_arr("events").unwrap();
+    let types: Vec<&str> = events.iter().map(|e| e.req_str("type").unwrap()).collect();
+    assert_eq!(types.first().copied(), Some("started"));
+    assert_eq!(types.last().copied(), Some("finished"));
+    assert_eq!(types.iter().filter(|t| **t == "episode").count(), 8);
+    assert!(types.contains(&"best"));
+    assert_eq!(
+        responses[4].req_usize("next").unwrap(),
+        events.len(),
+        "cursor points past the returned events"
+    );
+
+    // forget frees job-0's events/outcome but keeps its status line
+    assert_eq!(responses[5].req_str("state").unwrap(), "done");
+    assert!(responses[6].req_arr("events").unwrap().is_empty());
+    assert_eq!(responses[6].req_usize("next").unwrap(), 0);
+
+    // list sees both jobs as done (forgotten or not)
+    let jobs = responses[7].req_arr("jobs").unwrap();
+    assert_eq!(jobs.len(), 2);
+    assert!(jobs.iter().all(|j| j.req_str("state").unwrap() == "done"));
+
+    // both result records were written
+    for job in ["job-0", "job-1"] {
+        let path = dir.join(format!("serve_tiny_{job}.json"));
+        assert!(path.exists(), "missing artifact {}", path.display());
+        let rec = Json::read_file(&path).unwrap();
+        assert_eq!(rec.req_str("name").unwrap(), format!("serve_tiny_{job}"));
+        rec.req("outcome").unwrap();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Events paging: `since` continues where the previous fetch stopped.
+#[test]
+fn events_cursor_pages_incrementally() {
+    let script = format!(
+        "{}\n{}\n{}\n",
+        submit_line("s", "pruning", 0.6),
+        r#"{"op":"result","job":"job-0","wait":true}"#,
+        r#"{"op":"events","job":"job-0","since":3}"#,
+    );
+    let (_, responses) = run_session(
+        &script,
+        &ServeOptions { workers: 1, results_dir: None, base_seed: None },
+    );
+    let page = &responses[2];
+    let next = page.req_usize("next").unwrap();
+    let events = page.req_arr("events").unwrap();
+    // started + 8 episodes + >=1 best + finished, minus the 3 skipped
+    assert_eq!(events.len(), next - 3);
+    assert!(next >= 10);
+}
+
+/// A queued job cancelled before any worker reaches it terminates as
+/// `cancelled` (the single worker is busy with the long first job).
+#[test]
+fn cancel_queued_job_terminates_without_running() {
+    let script = format!(
+        "{}\n{}\n{}\n{}\n",
+        submit_line("c0", "joint", 0.4),
+        submit_line("c1", "pruning", 0.5),
+        r#"{"op":"cancel","job":"job-1"}"#,
+        r#"{"op":"result","job":"job-1","wait":true}"#,
+    );
+    let (stats, responses) = run_session(
+        &script,
+        &ServeOptions { workers: 1, results_dir: None, base_seed: None },
+    );
+    assert_eq!(stats.submitted, 2);
+    assert_eq!(stats.cancelled, 1);
+    assert_eq!(stats.completed, 1, "the running job still finishes");
+    assert_eq!(responses[3].req_str("state").unwrap(), "cancelled");
+}
+
+/// Protocol robustness: bad requests answer with ok=false and never take
+/// the service down; good requests after them still work.
+#[test]
+fn bad_requests_get_error_responses() {
+    let script = format!(
+        "{}\n{}\n{}\n{}\n{}\n{}\n",
+        "this is not json",
+        r#"{"op":"frobnicate"}"#,
+        r#"{"op":"status","job":"job-99"}"#,
+        r#"{"op":"submit","spec":{"agent":"warp","target":0.5}}"#,
+        submit_line("ok", "pruning", 0.5),
+        r#"{"op":"result","job":"job-0","wait":true}"#,
+    );
+    let (stats, responses) = run_session(
+        &script,
+        &ServeOptions { workers: 1, results_dir: None, base_seed: None },
+    );
+    assert_eq!(responses.len(), 6);
+    assert!(!responses[0].req_bool("ok").unwrap());
+    assert!(!responses[1].req_bool("ok").unwrap());
+    assert!(responses[1].req_str("error").unwrap().contains("frobnicate"));
+    assert!(!responses[2].req_bool("ok").unwrap());
+    assert!(responses[2].req_str("error").unwrap().contains("job-99"));
+    assert!(!responses[3].req_bool("ok").unwrap());
+    // the service kept going: the good job completes
+    assert_eq!(responses[5].req_str("state").unwrap(), "done");
+    assert_eq!(stats.submitted, 1, "rejected submits never became jobs");
+    assert_eq!(stats.completed, 1);
+}
+
+/// Unknown keys in a submit spec — at the spec level and inside its
+/// `config` block — are rejected loudly (the apply_json contract reaches
+/// the protocol surface), and failing requests still echo their id.
+#[test]
+fn submit_rejects_unknown_keys_at_both_levels() {
+    let script = concat!(
+        r#"{"op":"submit","id":"k1","spec":{"agent":"joint","target":0.4,"config":{"episdoes": 5}}}"#,
+        "\n",
+        r#"{"op":"submit","id":"k2","spec":{"agent":"joint","target":0.4,"cofig":{"episodes": 5}}}"#,
+        "\n"
+    );
+    let (stats, responses) = run_session(
+        script,
+        &ServeOptions { workers: 1, results_dir: None, base_seed: None },
+    );
+    assert_eq!(stats.submitted, 0);
+
+    assert!(!responses[0].req_bool("ok").unwrap());
+    assert_eq!(responses[0].req_str("id").unwrap(), "k1", "errors must echo the id");
+    let err = responses[0].req_str("error").unwrap();
+    assert!(err.contains("episdoes"), "{err}");
+    assert!(err.contains("episodes"), "must list valid keys: {err}");
+
+    assert!(!responses[1].req_bool("ok").unwrap());
+    assert_eq!(responses[1].req_str("id").unwrap(), "k2");
+    let err = responses[1].req_str("error").unwrap();
+    assert!(err.contains("cofig"), "{err}");
+    assert!(err.contains("config"), "must list valid spec keys: {err}");
+}
