@@ -7,6 +7,7 @@
 //!   * policy -> runtime-input packing (masks + ℓ1 ranking)
 //!   * JSON parse of a meta manifest
 //!   * i8 vs f32 GEMM (the measured-latency profiler's kernel substrate)
+//!   * depthwise i8 vs f32 conv (the mobilenetv2s kernel substrate)
 //!   * parallel sweep orchestrator vs the 1-worker sweep (speedup + the
 //!     front-equality determinism verdict, emitted into the JSON meta)
 //!   * search driver vs the pre-driver monolith shape: `run_search` (no
@@ -24,6 +25,7 @@ use galen::hw::{CostModel, HwTarget, LatencyKind, LatencySimulator, ProfilerConf
 use galen::search::{run_sweep, LatencyFactory, SweepGrid};
 use galen::model::ir::test_fixtures::tiny_meta;
 use galen::model::{LayerKind, ModelIr};
+use galen::tensor::depthwise::{conv_dw_f32, conv_dw_i8, QuantizedDwWeights};
 use galen::tensor::quant::{gemm_i8, gemm_i8_packed, QuantizedMat, QuantizedTensor};
 use galen::tensor::Mat;
 use galen::util::rng::Pcg64;
@@ -253,6 +255,28 @@ fn main() {
     b.iter("tensor/i8_vs_f32_gemm/i8_packed 64x576x64", || {
         qa.requantize(&ga);
         gemm_i8_packed(&qa, &packed, &mut acc, &mut gout);
+    });
+
+    // ---- depthwise i8 vs f32 (mobilenetv2s kernel substrate) ----
+    // 96 channels at 16x16, 3x3 stride 1 — the s1b1.dw shape of the zoo's
+    // mobilenetv2s.  Both kernels are serial by construction; the i8 entry
+    // includes the per-call dynamic activation quantize, exactly as the
+    // measured-latency profiler times depthwise configs.
+    let (dc, dsp) = (96usize, 16usize);
+    let mut din = Mat::zeros(dc, dsp * dsp);
+    let mut dw_w = vec![0.0f32; dc * 9];
+    for x in din.data.iter_mut().chain(&mut dw_w) {
+        *x = rrng.next_f32() * 2.0 - 1.0;
+    }
+    let mut dout = vec![0.0f32; dc * dsp * dsp];
+    b.iter("tensor/depthwise_i8_vs_f32/f32 96x16x16 k3", || {
+        conv_dw_f32(&din.data, dc, dsp, dsp, 3, 1, &dw_w, &mut dout)
+    });
+    let qdw = QuantizedDwWeights::quantize(&dw_w, dc, 3);
+    let mut qdin = QuantizedTensor::quantize(&din);
+    b.iter("tensor/depthwise_i8_vs_f32/i8 96x16x16 k3", || {
+        qdin.requantize(&din);
+        conv_dw_i8(&qdin.data, qdin.scale, dc, dsp, dsp, 1, &qdw, &mut dout);
     });
 
     // ---- JSON manifest parse ----

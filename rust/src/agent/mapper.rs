@@ -110,7 +110,20 @@ impl PolicyMapper for PruningMapper {
             return; // dependency-coupled layers never accept pruning actions
         }
         let r = (action[0] as f64).clamp(0.0, 1.0) * self.max_ratio;
-        policy.layers[idx].kept_channels = discretize(r, l.cout, self.opts);
+        let kept = discretize(r, l.cout, self.opts);
+        policy.layers[idx].kept_channels = kept;
+        // Depthwise consumers are channel-coupled to their producer: a
+        // depthwise conv has one filter per input channel, so pruning the
+        // expand layer removes the matching depthwise filters.  Keep the
+        // coupled width in lockstep (the MobileNet analogue of the
+        // residual-group restriction — the agent never acts on the
+        // depthwise layer directly).
+        for &j in &ir.consumers[idx] {
+            let d = &ir.layers[j];
+            if d.depthwise {
+                policy.layers[j].kept_channels = kept.min(d.cout);
+            }
+        }
     }
 }
 
@@ -290,6 +303,68 @@ mod tests {
         let kept = p.layers[1].kept_channels;
         assert_eq!(kept % 32, 0, "kept={kept}");
         assert!(kept < 128 && kept >= 32);
+    }
+
+    #[test]
+    fn pruning_expand_propagates_to_depthwise_consumer() {
+        let ir = ModelIr::from_meta(&crate::model::zoo::meta("mobilenetv2s").unwrap()).unwrap();
+        let m = PruningMapper::default();
+        let expand = ir.layer_by_name("s1b1.expand").unwrap().index;
+        let dw = ir.layer_by_name("s1b1.dw").unwrap().index;
+        let mut p = DiscretePolicy::reference(&ir);
+        m.apply(&ir, &mut p, expand, &[0.5]);
+        let kept = p.layers[expand].kept_channels;
+        assert!(kept < ir.layers[expand].cout, "action 0.5 must prune");
+        assert_eq!(
+            p.layers[dw].kept_channels, kept,
+            "depthwise width must follow its expand producer"
+        );
+        // the project layer reads the depthwise width downstream
+        let project = ir.layer_by_name("s1b1.project").unwrap().index;
+        assert_eq!(p.effective_cin(&ir, project), kept);
+        // the depthwise layer itself refuses direct pruning actions
+        m.apply(&ir, &mut p, dw, &[1.0]);
+        assert_eq!(p.layers[dw].kept_channels, kept);
+    }
+
+    #[test]
+    fn quant_mapper_masks_mix_on_depthwise() {
+        let ir = ModelIr::from_meta(&crate::model::zoo::meta("mobilenetv2s").unwrap()).unwrap();
+        let m = QuantizationMapper::default();
+        let mut p = DiscretePolicy::reference(&ir);
+        for l in ir.layers.iter().filter(|l| l.depthwise) {
+            // strongest possible MIX request: still INT8 on depthwise
+            m.apply(&ir, &mut p, l.index, &[0.95, 0.95]);
+            assert_eq!(p.layers[l.index].quant, QuantMode::Int8, "{}", l.name);
+        }
+        // sanity: a dense layer satisfying the constraints does go MIX
+        let dense = ir.layer_by_name("s2b1.project").unwrap();
+        assert!(dense.cin % 32 == 0 && dense.cout % 8 == 0);
+        m.apply(&ir, &mut p, dense.index, &[0.95, 0.95]);
+        assert!(p.layers[dense.index].quant.is_mix());
+    }
+
+    #[test]
+    fn joint_mapper_keeps_depthwise_coupling() {
+        let ir = ModelIr::from_meta(&crate::model::zoo::meta("mobilenetv2s").unwrap()).unwrap();
+        let m = JointMapper::default();
+        let mut p = DiscretePolicy::reference(&ir);
+        // walk a whole episode's steps like the driver does
+        for (k, idx) in m.steps(&ir).iter().copied().enumerate() {
+            let a = [0.6 + 0.01 * (k % 5) as f32, 0.4, 0.4];
+            m.apply(&ir, &mut p, idx, &a);
+        }
+        for l in ir.layers.iter().filter(|l| l.depthwise) {
+            let producer = ir
+                .producer_of(l.index)
+                .expect("every depthwise conv has a producer");
+            assert_eq!(
+                p.layers[l.index].kept_channels, p.layers[producer].kept_channels,
+                "{} decoupled from its producer",
+                l.name
+            );
+            assert!(!p.layers[l.index].quant.is_mix(), "{}", l.name);
+        }
     }
 
     #[test]

@@ -34,7 +34,7 @@ impl StateBuilder {
 
     /// Dimension of the state vectors this builder emits.
     pub fn dim(&self) -> usize {
-        13 + self.action_dim + self.sens_dim
+        14 + self.action_dim + self.sens_dim
     }
 
     /// Build s_t for layer `idx` given the policy decided so far and the
@@ -78,6 +78,10 @@ impl StateBuilder {
 
         s.push(l.prunable as u8 as f32);
         s.push(mix_supported(l, l.cin, l.cout) as u8 as f32);
+        // depthwise flag: the agent must be able to tell channel-coupled
+        // depthwise layers (no MIX, width follows the producer) from dense
+        // convs of the same shape
+        s.push(l.depthwise as u8 as f32);
 
         debug_assert_eq!(prev_action.len(), self.action_dim);
         s.extend_from_slice(prev_action);
@@ -150,5 +154,26 @@ mod tests {
         assert_eq!(conv1[11], 1.0);
         // tiny model: cin=8 < 32 => MIX unsupported everywhere
         assert_eq!(stem[12], 0.0);
+        // tiny model has no depthwise layers
+        assert_eq!(stem[13], 0.0);
+        assert_eq!(conv1[13], 0.0);
+    }
+
+    #[test]
+    fn depthwise_flag_feature() {
+        let ir = ModelIr::from_meta(&crate::model::zoo::meta("mobilenetv2s").unwrap()).unwrap();
+        let sens = SensitivityTable::disabled(
+            ir.layers.len(),
+            &SensitivityConfig::default(),
+            "mobilenetv2s",
+        );
+        let sb = StateBuilder::new(&ir, &sens, 3);
+        let p = DiscretePolicy::reference(&ir);
+        let n = ir.layers.len();
+        for l in &ir.layers {
+            let s = sb.build(&ir, &sens, &p, l.index, l.index, n, &[0.0; 3]);
+            assert_eq!(s.len(), sb.dim());
+            assert_eq!(s[13], l.depthwise as u8 as f32, "{}", l.name);
+        }
     }
 }

@@ -97,14 +97,13 @@ impl DiscretePolicy {
 
     /// Effective input channels of layer `i` after pruning of its producers:
     /// conv1 layers read the (unpruned) residual stream; conv2 reads its
-    /// block's conv1.  Uses the IR consumer wiring in reverse.
+    /// block's conv1 (MobileNet: dw reads its expand, project its dw).
+    /// Uses the IR consumer wiring in reverse via `ModelIr::producer_of`.
     pub fn effective_cin(&self, ir: &ModelIr, i: usize) -> usize {
-        for (p, consumers) in ir.consumers.iter().enumerate() {
-            if consumers.contains(&i) {
-                return self.layers[p].kept_channels;
-            }
+        match ir.producer_of(i) {
+            Some(p) => self.layers[p].kept_channels,
+            None => ir.layers[i].cin,
         }
-        ir.layers[i].cin
     }
 
     /// Total MACs under this policy (pruning-aware; per sample).

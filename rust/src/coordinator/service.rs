@@ -8,7 +8,7 @@
 //!
 //! | op         | request fields                         | response                       |
 //! |------------|----------------------------------------|--------------------------------|
-//! | `submit`   | `spec{agent, target, preset?, config?}`| `job`, `state`                 |
+//! | `submit`   | `spec{agent, target, preset?, config?, variant?}` | `job`, `state`      |
 //! | `status`   | `job`                                  | `state`, `episode`, `episodes` |
 //! | `events`   | `job`, `since?`                        | `events[]`, `next`             |
 //! | `result`   | `job`, `wait?`                         | `state`, `outcome`, `policy`   |
@@ -294,13 +294,21 @@ fn handle_request(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
 }
 
 /// Build a job's `SearchConfig` from a submit spec: required
-/// `agent`/`target`, optional `preset` (fast|default|paper) and a `config`
+/// `agent`/`target`, optional `preset` (fast|default|paper), a `config`
 /// override object routed through `SearchConfig::apply_json` (unknown keys
-/// rejected with the valid list).
-fn config_from_spec(spec: &Json, base_seed: Option<u64>) -> Result<SearchConfig> {
+/// rejected with the valid list), and an optional `variant` assertion —
+/// a serve process hosts exactly one model, so a spec naming a different
+/// variant is rejected up front instead of silently searching the wrong
+/// model (clients submitting to a pool of serve processes pin their
+/// intent this way).
+fn config_from_spec(
+    spec: &Json,
+    base_seed: Option<u64>,
+    served_variant: &str,
+) -> Result<SearchConfig> {
     // same fail-loud contract as SearchConfig::apply_json: a typo like
     // "cofig" must not silently run the defaults
-    const SPEC_KEYS: &[&str] = &["agent", "target", "preset", "config"];
+    const SPEC_KEYS: &[&str] = &["agent", "target", "preset", "config", "variant"];
     let obj = spec
         .as_obj()
         .ok_or_else(|| anyhow::anyhow!("submit 'spec' must be a JSON object"))?;
@@ -309,6 +317,16 @@ fn config_from_spec(spec: &Json, base_seed: Option<u64>) -> Result<SearchConfig>
             SPEC_KEYS.contains(&key.as_str()),
             "unknown spec key '{key}' (valid keys: {})",
             SPEC_KEYS.join(", ")
+        );
+    }
+    if let Some(v) = spec.get("variant") {
+        let v = v
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("spec 'variant' must be a string"))?;
+        anyhow::ensure!(
+            v == served_variant,
+            "spec wants variant '{v}' but this service searches '{served_variant}' \
+             (start `galen serve --variant {v}` for that model)"
         );
     }
     let agent = spec.req_str("agent")?.parse()?;
@@ -343,7 +361,7 @@ fn op_submit(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
         !svc.shutdown.load(Ordering::SeqCst),
         "service is shutting down"
     );
-    let cfg = config_from_spec(req.req("spec")?, svc.base_seed)?;
+    let cfg = config_from_spec(req.req("spec")?, svc.base_seed, &svc.variant)?;
     let mut jobs = svc.jobs.lock().unwrap();
     let index = jobs.len();
     let id = format!("job-{index}");

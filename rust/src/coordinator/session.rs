@@ -134,10 +134,30 @@ impl Session {
                 })
             }
             Backend::Synthetic => {
-                // synthetic sessions only need the structural manifest
-                let meta = crate::model::load_meta(
-                    &opts.artifacts_dir.join(format!("meta_{}.json", opts.variant)),
-                )?;
+                // Synthetic sessions only need the structural manifest.  An
+                // artifact manifest wins when present (it carries the
+                // trained base accuracy); otherwise the built-in model zoo
+                // constructs it in-process, so `--synthetic` sessions (and
+                // sweeps, serve, tests) never require `aot.py` to have run.
+                let path = opts.artifacts_dir.join(format!("meta_{}.json", opts.variant));
+                let meta = if path.exists() {
+                    crate::model::load_meta(&path)?
+                } else if crate::model::zoo::has_variant(&opts.variant) {
+                    log::info!(
+                        "no artifact manifest at {}; using the built-in zoo manifest for '{}'",
+                        path.display(),
+                        opts.variant
+                    );
+                    crate::model::zoo::meta(&opts.variant)?
+                } else {
+                    anyhow::bail!(
+                        "variant '{}' has neither an artifact manifest ({}) nor a zoo \
+                         definition (built-in: {})",
+                        opts.variant,
+                        path.display(),
+                        crate::model::zoo::VARIANTS.join(", ")
+                    );
+                };
                 let ir = ModelIr::from_meta(&meta)?;
                 let sens = SensitivityTable::disabled(
                     ir.layers.len(),
@@ -417,6 +437,39 @@ mod tests {
             ..Default::default()
         };
         cfg
+    }
+
+    /// Synthetic sessions fall back to the zoo when artifacts are absent —
+    /// `galen search --synthetic --variant mobilenetv2s` end to end.
+    #[test]
+    fn synthetic_session_opens_zoo_variants_without_artifacts() {
+        let mut opts = SessionOptions::new("mobilenetv2s");
+        // point at a directory that cannot hold artifacts
+        opts.artifacts_dir = std::env::temp_dir().join(format!(
+            "galen_no_artifacts_{}",
+            std::process::id()
+        ));
+        opts.backend = Backend::Synthetic;
+        opts.sensitivity_cache = None;
+        opts.profiles_dir = None;
+        opts.profiler = ProfilerConfig::fast();
+        let s = Session::open(opts).unwrap();
+        assert_eq!(s.ir.variant, "mobilenetv2s");
+        assert!(s.ir.layers.iter().any(|l| l.depthwise));
+        let mut cfg = fast(AgentKind::Joint, 0.5);
+        cfg.episodes = 6;
+        cfg.warmup_episodes = 2;
+        let out = s.search(&cfg).unwrap();
+        assert_eq!(out.history.len(), 6);
+        assert!(out.best.latency_s > 0.0);
+
+        // unknown variants still fail loudly, listing the zoo
+        let mut opts = SessionOptions::new("resnet9000");
+        opts.artifacts_dir =
+            std::env::temp_dir().join(format!("galen_no_artifacts_{}", std::process::id()));
+        opts.backend = Backend::Synthetic;
+        let err = Session::open(opts).err().expect("unknown variant");
+        assert!(format!("{err:#}").contains("mobilenetv2s"));
     }
 
     #[test]

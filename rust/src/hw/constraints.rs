@@ -67,4 +67,57 @@ mod tests {
         fc.cout = 16;
         assert!(mix_supported(&fc, 256, 16));
     }
+
+    #[test]
+    fn mobilenetv2s_depthwise_layers_never_mix() {
+        // the zoo's depthwise convs satisfy every *numeric* constraint
+        // (channels are multiples of 32, spatial >= 2) — only the depthwise
+        // exclusion keeps them off the bit-serial path
+        let ir = crate::model::ModelIr::from_meta(
+            &crate::model::zoo::meta("mobilenetv2s").unwrap(),
+        )
+        .unwrap();
+        let dws: Vec<_> = ir.layers.iter().filter(|l| l.depthwise).collect();
+        assert!(!dws.is_empty());
+        for l in dws {
+            assert!(!mix_supported(l, l.cin, l.cout), "{}", l.name);
+            if l.cin % 32 == 0 && l.cout % 8 == 0 && l.out_spatial >= 2 {
+                // flipping only the flag flips the verdict
+                let mut dense = (*l).clone();
+                dense.depthwise = false;
+                assert!(mix_supported(&dense, l.cin, l.cout), "{}", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn mobilenetv2s_group_layout_couples_expand_and_project() {
+        use crate::compress::DiscretePolicy;
+        let ir = crate::model::ModelIr::from_meta(
+            &crate::model::zoo::meta("mobilenetv2s").unwrap(),
+        )
+        .unwrap();
+        // expand -> dw -> project coupling through effective_cin: pruning
+        // the expand shrinks what the depthwise and project layers read
+        let expand = ir.layer_by_name("s1b1.expand").unwrap().index;
+        let dw = ir.layer_by_name("s1b1.dw").unwrap().index;
+        let project = ir.layer_by_name("s1b1.project").unwrap().index;
+        let mut p = DiscretePolicy::reference(&ir);
+        p.layers[expand].kept_channels = 40;
+        p.layers[dw].kept_channels = 40; // the mapper keeps these in lockstep
+        assert_eq!(p.effective_cin(&ir, dw), 40);
+        assert_eq!(p.effective_cin(&ir, project), 40);
+        // project outputs are stream-coupled: group members share a width
+        // and none is independently prunable
+        for members in ir.groups.values() {
+            let w = ir.layers[members[0]].cout;
+            for &i in members {
+                assert_eq!(ir.layers[i].cout, w);
+                assert!(!ir.layers[i].prunable, "{}", ir.layers[i].name);
+            }
+        }
+        // a depthwise layer's channel count follows its group's (stream's)
+        // producer chain, not the stream width itself
+        assert_eq!(ir.layers[dw].cin, ir.layers[expand].cout);
+    }
 }

@@ -38,6 +38,14 @@ impl LayerCost {
     }
 }
 
+/// Sustained-efficiency derating of depthwise convolutions: one k x k
+/// filter per channel means no cross-channel weight reuse, so the GEMM-style
+/// multi-accumulator blocking never amortizes — depthwise operators run
+/// memory-bound at a fraction of the dense roofline (the classic MobileNet
+/// observation: great MAC counts, mediocre MAC rates).  Applied on top of
+/// the cache/shape efficiency factor in every compute arm.
+const DW_EFFICIENCY: f64 = 0.35;
+
 /// The analytical cost model for one hardware target.
 #[derive(Clone, Debug)]
 pub struct CostModel {
@@ -131,6 +139,9 @@ impl CostModel {
         let macs = l.macs_at(eff_cin, eff_cout) as f64;
         let in_e = l.in_elems(eff_cin) as f64;
         let out_e = l.out_elems(eff_cout) as f64;
+        // depthwise operators sustain a fraction of the dense roofline
+        // (no cross-channel weight reuse) — see `DW_EFFICIENCY`
+        let dw = if l.depthwise { DW_EFFICIENCY } else { 1.0 };
 
         let mut c = LayerCost {
             launch: t.layer_overhead_s,
@@ -142,7 +153,7 @@ impl CostModel {
         match quant {
             QuantMode::Fp32 => {
                 let ws = self.working_set(l, eff_cin, eff_cout, 4.0);
-                let eff = self.efficiency(ws, l.out_spatial, eff_cout);
+                let eff = dw * self.efficiency(ws, l.out_spatial, eff_cout);
                 c.compute = macs / (t.f32_peak() * eff);
                 // DRAM streaming term when the working set spills L2
                 if ws > t.l2_bytes as f64 {
@@ -151,7 +162,7 @@ impl CostModel {
             }
             QuantMode::Int8 => {
                 let ws = self.working_set(l, eff_cin, eff_cout, 1.0);
-                let eff = self.efficiency(ws, l.out_spatial, eff_cout);
+                let eff = dw * self.efficiency(ws, l.out_spatial, eff_cout);
                 c.compute = macs / (t.int8_peak() * eff);
                 // dynamic-range quantize of inputs + requantize of outputs
                 c.quant_overhead = (2.0 * in_e + 2.0 * out_e) / t.elemwise_per_sec;
@@ -162,9 +173,11 @@ impl CostModel {
             QuantMode::Mix { w_bits, a_bits } => {
                 let wb = w_bits as f64;
                 let ab = a_bits as f64;
-                // bit-serial popcount GEMM: one binary GEMM per bit-plane pair
+                // bit-serial popcount GEMM: one binary GEMM per bit-plane
+                // pair (never reached for depthwise layers — the operator
+                // constraints exclude them and `effective_mode` falls back)
                 let ws = self.working_set(l, eff_cin, eff_cout, (wb + ab) / 16.0);
-                let eff = self.efficiency(ws, l.out_spatial, eff_cout);
+                let eff = dw * self.efficiency(ws, l.out_spatial, eff_cout);
                 c.compute = macs * wb * ab / (t.binary_macs_per_sec * eff);
                 // activation bit-plane packing (weights packed offline)
                 c.pack_overhead = ab * in_e / t.pack_per_sec;
@@ -210,7 +223,10 @@ mod tests {
     use super::*;
     use crate::model::LayerKind;
 
-    fn conv(cin: usize, cout: usize, k: usize, sp: usize) -> Layer {
+    /// Conv helper, parameterized over the depthwise flag (the previous
+    /// version hardcoded `depthwise: false`, so no cost test could ever
+    /// exercise the depthwise path).
+    fn conv_dw(cin: usize, cout: usize, k: usize, sp: usize, depthwise: bool) -> Layer {
         Layer {
             index: 0,
             name: "t".into(),
@@ -223,8 +239,12 @@ mod tests {
             out_spatial: sp,
             prunable: true,
             group: -1,
-            depthwise: false,
+            depthwise,
         }
+    }
+
+    fn conv(cin: usize, cout: usize, k: usize, sp: usize) -> Layer {
+        conv_dw(cin, cout, k, sp, false)
     }
 
     fn model() -> CostModel {
@@ -337,6 +357,46 @@ mod tests {
         let c = m.layer_cost(&fc, 256, 10, QuantMode::Fp32);
         assert!(c.total() > 0.0);
         assert!(c.launch > 0.0);
+    }
+
+    #[test]
+    fn depthwise_cheaper_than_dense_but_dearer_per_mac() {
+        let m = model();
+        let dense = conv(128, 128, 3, 16);
+        let dw = conv_dw(128, 128, 3, 16, true);
+        // 128x fewer MACs...
+        assert_eq!(dense.macs(), 128 * dw.macs());
+        let dense_cost = m.layer_cost(&dense, 128, 128, QuantMode::Fp32).total();
+        let dw_cost = m.layer_cost(&dw, 128, 128, QuantMode::Fp32).total();
+        // ...buys less than 128x the latency: depthwise is memory-bound
+        assert!(dw_cost < dense_cost, "dw {dw_cost} vs dense {dense_cost}");
+        assert!(
+            dw_cost > 2.0 * dense_cost / 128.0,
+            "depthwise must not be costed MAC-proportionally: {dw_cost} vs {}",
+            dense_cost / 128.0
+        );
+        // the derating reaches the compute term itself
+        let dw_as_dense_macs = m.layer_cost(&dw, 128, 128, QuantMode::Fp32).compute;
+        let mut undw = dw.clone();
+        undw.depthwise = false;
+        let per_mac_dense =
+            m.layer_cost(&undw, 128, 128, QuantMode::Fp32).compute / undw.macs() as f64;
+        assert!(dw_as_dense_macs / dw.macs() as f64 > per_mac_dense);
+    }
+
+    #[test]
+    fn depthwise_never_runs_bitserial() {
+        let m = model();
+        let dw = conv_dw(128, 128, 3, 16, true);
+        // channels satisfy the %32/%8 rules, but depthwise is excluded
+        let mode = m.effective_mode(&dw, 128, 128, QuantMode::Mix { w_bits: 4, a_bits: 4 });
+        assert_eq!(mode, QuantMode::Int8);
+        // and the costed MIX request therefore equals the INT8 cost
+        let mix = m
+            .layer_cost(&dw, 128, 128, QuantMode::Mix { w_bits: 4, a_bits: 4 })
+            .total();
+        let int8 = m.layer_cost(&dw, 128, 128, QuantMode::Int8).total();
+        assert_eq!(mix, int8);
     }
 
     #[test]

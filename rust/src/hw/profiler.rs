@@ -33,6 +33,7 @@ use super::shared::SharedProfileCache;
 use super::target::HwTarget;
 use crate::compress::{DiscretePolicy, QuantMode};
 use crate::model::{Layer, LayerKind, ModelIr};
+use crate::tensor::depthwise::{conv_dw_f32, conv_dw_i8, QuantizedDwWeights};
 use crate::tensor::quant::{gemm_i8, gemm_i8_packed, QuantizedMat, QuantizedTensor};
 use crate::tensor::Mat;
 use crate::util::json::Json;
@@ -419,10 +420,12 @@ pub(crate) fn sanitize(name: &str) -> String {
         .collect()
 }
 
-/// GEMM shape a layer lowers to (im2col): `m x k x n` =
+/// GEMM shape a *dense* layer lowers to (im2col): `m x k x n` =
 /// `out_spatial^2 x kernel^2*cin x cout` for convs, `1 x cin x cout` for
 /// linear layers — `m*k*n` equals the layer's MAC count, so measured time
-/// and the analytical compute term describe the same work.
+/// and the analytical compute term describe the same work.  Depthwise convs
+/// do not lower to a GEMM; `bench_layer` runs the dedicated windowed
+/// kernels (`tensor::depthwise`) for them instead.
 fn gemm_shape(l: &Layer, eff_cin: usize, kept: usize) -> (usize, usize, usize) {
     match l.kind {
         LayerKind::Conv => (
@@ -431,6 +434,56 @@ fn gemm_shape(l: &Layer, eff_cin: usize, kept: usize) -> (usize, usize, usize) {
             kept,
         ),
         LayerKind::Linear => (1, eff_cin, kept),
+    }
+}
+
+/// Measure one lowered depthwise configuration in steady state: the
+/// surviving `min(eff_cin, kept)` channels run the real windowed kernels —
+/// `conv_dw_f32` for FP32, dynamic-quantize + `conv_dw_i8` for INT8 (MIX
+/// never reaches a depthwise layer: the operator constraints exclude it and
+/// `effective_mode` has already fallen back, but the INT8 kernel stands in
+/// defensively should a caller probe the raw mode).
+fn bench_depthwise_layer(
+    cfg: &ProfilerConfig,
+    l: &Layer,
+    eff_cin: usize,
+    kept: usize,
+    mode: QuantMode,
+    key: u64,
+) -> (f64, f64, usize) {
+    let channels = eff_cin.min(kept).max(1);
+    let (in_sp, out_sp) = (l.in_spatial, l.out_spatial);
+    let mut rng = Pcg64::with_stream(key, 0xd3f1);
+    let mut input = Mat::zeros(channels, in_sp * in_sp);
+    let mut weights = vec![0.0f32; channels * l.kernel * l.kernel];
+    for x in input.data.iter_mut().chain(&mut weights) {
+        *x = rng.next_f32() * 2.0 - 1.0;
+    }
+    let mut out = vec![0.0f32; channels * out_sp * out_sp];
+    match mode {
+        QuantMode::Fp32 => run_steady_state(cfg, || {
+            conv_dw_f32(
+                &input.data,
+                channels,
+                in_sp,
+                out_sp,
+                l.kernel,
+                l.stride,
+                &weights,
+                &mut out,
+            )
+        }),
+        QuantMode::Int8 | QuantMode::Mix { .. } => {
+            // weights quantized offline; activations dynamically per call
+            let qw = QuantizedDwWeights::quantize(&weights, channels, l.kernel);
+            let mut qa = QuantizedTensor::quantize(&input);
+            run_steady_state(cfg, || {
+                qa.requantize(&input);
+                conv_dw_i8(
+                    &qa.data, qa.scale, channels, in_sp, out_sp, l.stride, &qw, &mut out,
+                );
+            })
+        }
     }
 }
 
@@ -444,6 +497,9 @@ fn bench_layer(
     mode: QuantMode,
     key: u64,
 ) -> (f64, f64, usize) {
+    if l.depthwise {
+        return bench_depthwise_layer(cfg, l, eff_cin, kept, mode, key);
+    }
     let (m, k, n) = gemm_shape(l, eff_cin, kept);
     // deterministic operand fill so every process measures identical work
     let mut rng = Pcg64::with_stream(key, 0xbe9c);
@@ -701,8 +757,59 @@ mod tests {
     fn gemm_shape_preserves_mac_count() {
         let ir = ir();
         for l in &ir.layers {
+            assert!(!l.depthwise, "dense-lowering invariant only");
             let (m, k, n) = gemm_shape(l, l.cin, l.cout);
             assert_eq!((m * k * n) as u64, l.macs(), "layer {}", l.name);
+        }
+    }
+
+    #[test]
+    fn depthwise_configs_measure_and_cache() {
+        let ir = crate::model::ModelIr::from_meta(
+            &crate::model::zoo::meta("mobilenetv2s").unwrap(),
+        )
+        .unwrap();
+        let mut p = MeasuredProfiler::new(
+            HwTarget::cortex_a72(),
+            "mobilenetv2s",
+            ProfilerConfig::fast(),
+        );
+        let dw = ir.layers.iter().find(|l| l.depthwise).unwrap();
+        let fp32 = p.layer_latency(dw, dw.cin, dw.cout, QuantMode::Fp32);
+        assert!(fp32 > 0.0 && fp32.is_finite());
+        assert_eq!(p.stats().measured, 1);
+        // the same config is a cache hit, a pruned one is a new measurement
+        assert_eq!(p.layer_latency(dw, dw.cin, dw.cout, QuantMode::Fp32), fp32);
+        assert_eq!(p.stats().measured, 1);
+        let pruned = p.layer_latency(dw, dw.cin / 2, dw.cin / 2, QuantMode::Fp32);
+        assert!(pruned > 0.0);
+        assert_eq!(p.stats().measured, 2);
+        // INT8 measures its own entry; a MIX probe folds onto it (depthwise
+        // is excluded from bit-serial, so the effective mode is INT8)
+        let int8 = p.layer_latency(dw, dw.cin, dw.cout, QuantMode::Int8);
+        assert!(int8 > 0.0);
+        assert_eq!(p.stats().measured, 3);
+        let mix = p.layer_latency(dw, dw.cin, dw.cout, QuantMode::Mix { w_bits: 4, a_bits: 4 });
+        assert_eq!(mix, int8, "MIX on depthwise must resolve to the INT8 entry");
+        assert_eq!(p.stats().measured, 3);
+    }
+
+    #[test]
+    fn mobilenet_model_latency_includes_depthwise_layers() {
+        let ir = crate::model::ModelIr::from_meta(
+            &crate::model::zoo::meta("mobilenetv2s").unwrap(),
+        )
+        .unwrap();
+        let mut p = MeasuredProfiler::new(
+            HwTarget::cortex_a72(),
+            "mobilenetv2s",
+            ProfilerConfig::fast(),
+        );
+        let policy = DiscretePolicy::reference(&ir);
+        let per_layer = p.model_latency_per_layer(&ir, &policy);
+        assert_eq!(per_layer.len(), ir.layers.len());
+        for l in ir.layers.iter().filter(|l| l.depthwise) {
+            assert!(per_layer[l.index] > 0.0, "{} measured nothing", l.name);
         }
     }
 }

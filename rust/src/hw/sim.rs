@@ -450,6 +450,35 @@ mod tests {
     }
 
     #[test]
+    fn mobilenet_depthwise_layers_carry_nontrivial_costs() {
+        let ir = ModelIr::from_meta(&crate::model::zoo::meta("mobilenetv2s").unwrap()).unwrap();
+        let sim = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 7);
+        let p = DiscretePolicy::reference(&ir);
+        let per_layer = sim.latency_per_layer(&ir, &p);
+        let total: f64 = per_layer.iter().sum();
+        assert!(total > 0.0);
+        for l in ir.layers.iter().filter(|l| l.depthwise) {
+            let t = per_layer[l.index];
+            assert!(t > 0.0, "{}", l.name);
+            // more than MAC-proportionality would grant: depthwise MACs are
+            // a tiny fraction of the model, but launch/elementwise/memory
+            // terms keep the layers visible in the profile
+            let mac_share = l.macs() as f64 / ir.total_macs() as f64;
+            assert!(
+                t / total > mac_share,
+                "{}: latency share {:.4} vs MAC share {:.4}",
+                l.name,
+                t / total,
+                mac_share
+            );
+        }
+        // the memoized path agrees with a fresh evaluation (depthwise keys
+        // cache correctly alongside dense ones)
+        let again = sim.latency(&ir, &p);
+        assert_eq!(again, total);
+    }
+
+    #[test]
     fn invalidate_clears_and_stays_correct() {
         let (ir, sim) = setup();
         let p = DiscretePolicy::reference(&ir);

@@ -94,7 +94,7 @@ fn common_session(args: &galen::util::cli::Args) -> Result<Session> {
 
 fn base_cli(name: &'static str, about: &'static str) -> Cli {
     Cli::new(name, about)
-        .opt("variant", "resnet18s", "model variant (micro|resnet18s|resnet18)")
+        .opt("variant", "resnet18s", "model variant (micro|resnet18s|resnet18|mobilenetv2s)")
         .opt("seed", "7", "global seed")
         .opt("episodes", "120", "episodes per search")
         .opt("warmup", "10", "random warm-up episodes")
@@ -269,7 +269,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         "galen serve",
         "long-running search job service: JSONL requests on stdin, responses on stdout",
     )
-    .opt("variant", "resnet18s", "model variant (micro|resnet18s|resnet18)")
+    .opt("variant", "resnet18s", "model variant (micro|resnet18s|resnet18|mobilenetv2s)")
     .opt("seed", "7", "session seed")
     .opt("latency", "sim", "latency backend: sim|measured|hybrid")
     .opt("jobs", "0", "search worker threads (0 = all cores)")

@@ -52,13 +52,18 @@ impl Layer {
     }
 
     /// MACs with compressed channel counts.
+    ///
+    /// Depthwise convs apply one k x k filter per channel instead of a full
+    /// cin x cout cross product: their MAC count scales with the surviving
+    /// channel count `min(cin, cout)` (a depthwise layer is structurally
+    /// square, and under pruning its width follows its producer — the
+    /// `min` keeps probed asymmetric configurations conservative).
     pub fn macs_at(&self, cin: usize, cout: usize) -> u64 {
         match self.kind {
             LayerKind::Conv => {
                 (self.kernel as u64)
                     * (self.kernel as u64)
-                    * cin as u64
-                    * cout as u64
+                    * self.channel_product(cin, cout)
                     * (self.out_spatial as u64)
                     * (self.out_spatial as u64)
             }
@@ -66,11 +71,24 @@ impl Layer {
         }
     }
 
-    /// Parameter count (weights only) with compressed channels.
+    /// Parameter count (weights only) with compressed channels.  Depthwise
+    /// filter banks hold one k x k plane per surviving channel.
     pub fn params_at(&self, cin: usize, cout: usize) -> u64 {
         match self.kind {
-            LayerKind::Conv => (self.kernel * self.kernel * cin * cout) as u64,
+            LayerKind::Conv => {
+                (self.kernel * self.kernel) as u64 * self.channel_product(cin, cout)
+            }
             LayerKind::Linear => (cin * cout) as u64,
+        }
+    }
+
+    /// The channel term of conv MAC/parameter accounting: `cin * cout` for
+    /// dense convs, the surviving channel count for depthwise ones.
+    fn channel_product(&self, cin: usize, cout: usize) -> u64 {
+        if self.depthwise {
+            cin.min(cout) as u64
+        } else {
+            cin as u64 * cout as u64
         }
     }
 
@@ -178,31 +196,57 @@ impl ModelIr {
     }
 
     /// Wire up who consumes whose output channels, from the layer list
-    /// (manifest order is forward order).  conv1 -> its block's conv2.
-    /// A stream member (group >= 0) feeds every later conv1/down/linear
-    /// whose input width equals the stream width — stage widths are unique
-    /// in the ResNet family, so the width identifies the stream.
+    /// (manifest order is forward order).  Block-internal chains follow the
+    /// naming convention: conv1 -> its block's conv2 (ResNet family) and
+    /// expand -> dw -> project (MobileNet family); an independent conv with
+    /// no chain successor (the MobileNet `head`) feeds later linear layers
+    /// of matching width (the classifier).  A stream member (group >= 0)
+    /// feeds every later layer that *enters* a block — any conv that is
+    /// not itself a chain successor (conv1/down/expand/head-style), plus
+    /// linear layers — whose input width equals the stream width: stage
+    /// widths are unique within a family (the zoo asserts streams never
+    /// collide with expanded widths), so the width identifies the stream.
     fn infer_consumers(layers: &[Layer]) -> Vec<Vec<usize>> {
+        /// Block-internal successor suffixes: who a `group < 0` layer feeds.
+        const CHAIN: &[(&str, &str)] =
+            &[(".conv1", ".conv2"), (".expand", ".dw"), (".dw", ".project")];
+        /// A chain successor reads its block-internal producer, never a
+        /// residual stream directly.
+        fn is_chain_successor(name: &str) -> bool {
+            CHAIN.iter().any(|(_, to)| name.ends_with(to))
+        }
         let mut consumers = vec![Vec::new(); layers.len()];
         for (i, l) in layers.iter().enumerate() {
             if l.group < 0 {
-                // independent (conv1): its block's conv2 is the consumer
-                if let Some(prefix) = l.name.strip_suffix(".conv1") {
-                    if let Some(j) = layers
-                        .iter()
-                        .position(|m| m.name == format!("{prefix}.conv2"))
-                    {
-                        consumers[i].push(j);
+                let successor = CHAIN.iter().find_map(|(from, to)| {
+                    l.name
+                        .strip_suffix(from)
+                        .map(|prefix| format!("{prefix}{to}"))
+                });
+                match successor {
+                    Some(target) => {
+                        if let Some(j) = layers.iter().position(|m| m.name == target) {
+                            consumers[i].push(j);
+                        }
+                    }
+                    None => {
+                        // chainless independent conv (MobileNet head): its
+                        // readers are later linear layers of matching width
+                        for (j, m) in layers.iter().enumerate().skip(i + 1) {
+                            if m.kind == LayerKind::Linear && m.cin == l.cout {
+                                consumers[i].push(j);
+                            }
+                        }
                     }
                 }
                 continue;
             }
             for (j, m) in layers.iter().enumerate().skip(i + 1) {
-                let is_reader = (m.name.ends_with(".conv1")
-                    || m.name.ends_with(".down")
-                    || m.kind == LayerKind::Linear)
-                    && m.cin == l.cout;
-                if is_reader {
+                let enters_a_block = match m.kind {
+                    LayerKind::Linear => true,
+                    LayerKind::Conv => !is_chain_successor(&m.name),
+                };
+                if enters_a_block && m.cin == l.cout {
                     consumers[i].push(j);
                 }
             }
@@ -213,6 +257,15 @@ impl ModelIr {
     /// Find a layer by its manifest name.
     pub fn layer_by_name(&self, name: &str) -> Option<&Layer> {
         self.layers.iter().find(|l| l.name == name)
+    }
+
+    /// The producer whose output channels layer `i` reads: the first layer
+    /// listing `i` among its consumers (`None` for graph inputs).  This is
+    /// the lookup `DiscretePolicy::effective_cin` and the depthwise
+    /// coupling checks share, so the first-match convention lives in
+    /// exactly one place.
+    pub fn producer_of(&self, i: usize) -> Option<usize> {
+        self.consumers.iter().position(|cs| cs.contains(&i))
     }
 
     /// Total MACs at the original configuration (per sample).
@@ -428,5 +481,57 @@ mod tests {
         let mut meta = tiny_meta();
         meta.layers[2].cout = 4; // break group width invariant
         assert!(ModelIr::from_meta(&meta).is_err());
+    }
+
+    #[test]
+    fn depthwise_mac_and_param_accounting() {
+        let mut meta = tiny_meta();
+        // turn s0b0.conv1 (8 -> 8, 3x3 @ 16) into a depthwise conv
+        meta.layers[1].depthwise = true;
+        let ir = ModelIr::from_meta(&meta).unwrap();
+        let l = &ir.layers[1];
+        assert_eq!(l.macs(), 3 * 3 * 8 * 16 * 16, "k^2 * C * osp^2");
+        assert_eq!(l.params_at(l.cin, l.cout), 3 * 3 * 8);
+        // one-eighth of the dense layer's MACs (C vs C*C channels)
+        let mut dense = meta.clone();
+        dense.layers[1].depthwise = false;
+        let dense_ir = ModelIr::from_meta(&dense).unwrap();
+        assert_eq!(dense_ir.layers[1].macs(), 8 * l.macs());
+        // asymmetric probes use the surviving channel count
+        assert_eq!(l.macs_at(4, 8), l.macs_at(8, 4));
+        assert_eq!(l.macs_at(4, 8) * 2, l.macs_at(8, 8));
+    }
+
+    #[test]
+    fn mobilenet_consumer_wiring() {
+        let meta = crate::model::zoo::meta("mobilenetv2s").unwrap();
+        let ir = ModelIr::from_meta(&meta).unwrap();
+        let idx = |name: &str| ir.layer_by_name(name).unwrap().index;
+        // block-internal chain: expand -> dw -> project
+        assert_eq!(ir.consumers[idx("s0b0.expand")], vec![idx("s0b0.dw")]);
+        assert_eq!(ir.consumers[idx("s0b0.dw")], vec![idx("s0b0.project")]);
+        // the stage-0 stream (stem + s0b0.project) feeds both stage-0/1
+        // expands that read width 16
+        for p in [idx("stem"), idx("s0b0.project")] {
+            assert!(ir.consumers[p].contains(&idx("s1b0.expand")), "{p}");
+        }
+        // the last stream feeds the head, the head feeds the classifier
+        assert!(ir.consumers[idx("s2b1.project")].contains(&idx("head")));
+        assert_eq!(ir.consumers[idx("head")], vec![idx("fc")]);
+        // producer_of inverts the wiring (what effective_cin relies on)
+        assert_eq!(ir.producer_of(idx("s0b0.dw")), Some(idx("s0b0.expand")));
+        assert_eq!(ir.producer_of(idx("s0b0.project")), Some(idx("s0b0.dw")));
+        assert_eq!(ir.producer_of(idx("fc")), Some(idx("head")));
+        assert_eq!(ir.producer_of(idx("stem")), None, "graph input has no producer");
+        // depthwise convs never read a residual stream directly
+        for (p, cs) in ir.consumers.iter().enumerate() {
+            if ir.layers[p].group >= 0 {
+                assert!(
+                    cs.iter().all(|&j| !ir.layers[j].depthwise),
+                    "stream member {} wired into a depthwise conv",
+                    ir.layers[p].name
+                );
+            }
+        }
     }
 }

@@ -11,6 +11,8 @@
 pub mod ir;
 /// Manifest loader (`meta_<variant>.json`).
 pub mod meta;
+/// Built-in model zoo: manifests constructed in Rust (no artifacts needed).
+pub mod zoo;
 
 pub use ir::{Layer, LayerKind, ModelIr};
 pub use meta::{load_meta, ManifestEntry, ModelMeta};

@@ -1,0 +1,472 @@
+//! Built-in model zoo: structural manifests constructed in Rust.
+//!
+//! Synthetic-backend sessions only need a [`ModelMeta`] — the layer graph,
+//! pruning-dependency groups, and the parameter/policy input contract — not
+//! trained weights.  This module constructs those manifests directly, so
+//! `galen search --synthetic --variant mobilenetv2s` (and sweeps, serve,
+//! benches, tests) run without `python/compile/aot.py` ever having been
+//! invoked.  When `artifacts/meta_<variant>.json` *does* exist it still
+//! wins (it carries the trained `base_test_acc`); the zoo is the fallback —
+//! see `coordinator::Session::open`.
+//!
+//! Two model families:
+//!
+//! * **ResNet family** (`micro`, `resnet18s`, `resnet18`) — byte-for-byte
+//!   the same layer graph `python/compile/model.py::conv_specs` emits:
+//!   3x3 stem, stages of BasicBlocks, residual streams as dependency
+//!   groups, each block's conv1 independently prunable.
+//! * **MobileNetV2 family** (`mobilenetv2s`) — inverted-residual blocks of
+//!   expand (1x1) / depthwise (3x3, `depthwise: true`) / project (1x1)
+//!   convs sized for CIFAR-10.  The expanded inner width is the prunable
+//!   axis (the analogue of ResNet's conv1); the depthwise conv is
+//!   channel-coupled to its expand producer (its width *follows* — it is
+//!   never independently prunable, see `agent::PruningMapper`); every
+//!   project output joins its stage's residual stream group.  This is the
+//!   first built-in workload whose per-layer compression trade-offs differ
+//!   qualitatively from ResNet's: depthwise layers carry k^2-per-channel
+//!   MACs (not k^2 * cin * cout), are excluded from mixed precision by the
+//!   bit-serial operator constraints, and are memory- rather than
+//!   compute-bound on the target.
+
+use anyhow::{bail, Result};
+
+use super::meta::{ManifestEntry, MetaLayer, ModelMeta};
+
+/// Variants the zoo can construct (the CLI `--variant` values that work
+/// without artifacts; `tiny` additionally exists as the in-code test
+/// fixture, see `model::ir::test_fixtures`).
+pub const VARIANTS: &[&str] = &["micro", "resnet18s", "resnet18", "mobilenetv2s"];
+
+/// Whether `variant` is a zoo model.
+pub fn has_variant(variant: &str) -> bool {
+    VARIANTS.contains(&variant)
+}
+
+/// Construct the structural manifest of a zoo variant.
+///
+/// `base_test_acc` is a nominal placeholder (the synthetic accuracy proxy
+/// normalizes against it); artifact manifests written by `aot.py` carry the
+/// actually-trained accuracy and take precedence when present.
+pub fn meta(variant: &str) -> Result<ModelMeta> {
+    match variant {
+        "micro" => Ok(resnet_meta("micro", 8, &[1, 1, 1, 1], 0.88)),
+        "resnet18s" => Ok(resnet_meta("resnet18s", 32, &[2, 2, 2, 2], 0.92)),
+        "resnet18" => Ok(resnet_meta("resnet18", 64, &[2, 2, 2, 2], 0.93)),
+        "mobilenetv2s" => Ok(mobilenet_meta()),
+        other => bail!(
+            "unknown zoo variant '{other}' (built-in: {})",
+            VARIANTS.join(", ")
+        ),
+    }
+}
+
+const IMG: usize = 32;
+const CLASSES: usize = 10;
+const EVAL_BATCH: usize = 128;
+const TRAIN_BATCH: usize = 64;
+
+#[allow(clippy::too_many_arguments)]
+fn conv_layer(
+    name: String,
+    cin: usize,
+    cout: usize,
+    kernel: usize,
+    stride: usize,
+    in_spatial: usize,
+    out_spatial: usize,
+    prunable: bool,
+    group: i64,
+    depthwise: bool,
+) -> MetaLayer {
+    MetaLayer {
+        name,
+        kind: "conv".into(),
+        cin,
+        cout,
+        kernel,
+        stride,
+        in_spatial,
+        out_spatial,
+        prunable,
+        group,
+        depthwise,
+    }
+}
+
+/// Append the conv's parameter entries (weight + BN) and policy entries
+/// (mask + bit scalars) in the artifact order `model.py` emits.
+fn push_conv_manifests(
+    l: &MetaLayer,
+    params: &mut Vec<ManifestEntry>,
+    policy: &mut Vec<ManifestEntry>,
+) {
+    // depthwise filters have one k x k plane per channel (HWIO with I = 1)
+    let w_shape = if l.depthwise {
+        vec![l.kernel, l.kernel, 1, l.cout]
+    } else {
+        vec![l.kernel, l.kernel, l.cin, l.cout]
+    };
+    params.push(ManifestEntry {
+        name: format!("{}.w", l.name),
+        shape: w_shape,
+        trainable: true,
+    });
+    for (p, trainable) in [("gamma", true), ("beta", true), ("mean", false), ("var", false)] {
+        params.push(ManifestEntry {
+            name: format!("{}.bn.{p}", l.name),
+            shape: vec![l.cout],
+            trainable,
+        });
+    }
+    policy.push(ManifestEntry {
+        name: format!("{}.mask", l.name),
+        shape: vec![l.cout],
+        trainable: false,
+    });
+    for p in ["w_bits", "a_bits"] {
+        policy.push(ManifestEntry {
+            name: format!("{}.{p}", l.name),
+            shape: vec![],
+            trainable: false,
+        });
+    }
+}
+
+/// Finish a manifest: append the classifier entries and derive `trainable`.
+fn finish_meta(
+    variant: &str,
+    width: usize,
+    blocks: Vec<usize>,
+    base_test_acc: f64,
+    mut layers: Vec<MetaLayer>,
+    fc_cin: usize,
+) -> ModelMeta {
+    layers.push(MetaLayer {
+        name: "fc".into(),
+        kind: "linear".into(),
+        cin: fc_cin,
+        cout: CLASSES,
+        kernel: 1,
+        stride: 1,
+        in_spatial: 1,
+        out_spatial: 1,
+        prunable: false,
+        group: -1,
+        depthwise: false,
+    });
+    let mut params = Vec::new();
+    let mut policy = Vec::new();
+    for l in &layers {
+        if l.kind == "conv" {
+            push_conv_manifests(l, &mut params, &mut policy);
+        }
+    }
+    params.push(ManifestEntry {
+        name: "fc.w".into(),
+        shape: vec![fc_cin, CLASSES],
+        trainable: true,
+    });
+    params.push(ManifestEntry {
+        name: "fc.b".into(),
+        shape: vec![CLASSES],
+        trainable: true,
+    });
+    policy.push(ManifestEntry {
+        name: "fc.w_bits".into(),
+        shape: vec![],
+        trainable: false,
+    });
+    policy.push(ManifestEntry {
+        name: "fc.a_bits".into(),
+        shape: vec![],
+        trainable: false,
+    });
+    let trainable = params
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| e.trainable)
+        .map(|(i, _)| i)
+        .collect();
+    ModelMeta {
+        variant: variant.into(),
+        img: IMG,
+        classes: CLASSES,
+        width,
+        blocks,
+        eval_batch: EVAL_BATCH,
+        train_batch: TRAIN_BATCH,
+        base_test_acc,
+        layers,
+        params,
+        policy,
+        trainable,
+    }
+}
+
+/// The ResNet family: the exact layer graph `model.py::conv_specs` emits.
+/// Group g_i is the residual stream of stage i (stem or downsample plus
+/// every block's conv2); each block's conv1 is independently prunable.
+fn resnet_meta(variant: &str, width: usize, blocks: &[usize], base_test_acc: f64) -> ModelMeta {
+    let widths: Vec<usize> = (0..blocks.len()).map(|i| width << i).collect();
+    let mut layers = Vec::new();
+    let mut sp = IMG;
+    layers.push(conv_layer("stem".into(), 3, widths[0], 3, 1, sp, sp, false, 0, false));
+    let mut cin = widths[0];
+    for (si, (&w, &nb)) in widths.iter().zip(blocks).enumerate() {
+        let stage_stride = if si == 0 { 1 } else { 2 };
+        for bi in 0..nb {
+            let s = if bi == 0 { stage_stride } else { 1 };
+            let out_sp = sp / s;
+            let name = format!("s{si}b{bi}");
+            layers.push(conv_layer(
+                format!("{name}.conv1"),
+                cin,
+                w,
+                3,
+                s,
+                sp,
+                out_sp,
+                true,
+                -1,
+                false,
+            ));
+            layers.push(conv_layer(
+                format!("{name}.conv2"),
+                w,
+                w,
+                3,
+                1,
+                out_sp,
+                out_sp,
+                false,
+                si as i64,
+                false,
+            ));
+            if bi == 0 && (s != 1 || cin != w) {
+                layers.push(conv_layer(
+                    format!("{name}.down"),
+                    cin,
+                    w,
+                    1,
+                    s,
+                    sp,
+                    out_sp,
+                    false,
+                    si as i64,
+                    false,
+                ));
+            }
+            cin = w;
+            sp = out_sp;
+        }
+    }
+    finish_meta(variant, width, blocks.to_vec(), base_test_acc, layers, cin)
+}
+
+/// MobileNetV2-small for CIFAR-10: stem 3x3, three stages of
+/// inverted-residual blocks (expansion 4), a 1x1 head conv, classifier.
+///
+/// Stage widths are 16 / 24 / 48 with 1 / 2 / 2 blocks; the expanded inner
+/// widths (64 / 96 / 192) are deliberately distinct from every stream
+/// width, so the width-identifies-the-stream consumer wiring of
+/// `ModelIr::infer_consumers` stays unambiguous (same invariant the ResNet
+/// family relies on).
+fn mobilenet_meta() -> ModelMeta {
+    /// Channel expansion factor t of every inverted-residual block.
+    const EXPANSION: usize = 4;
+    let stage_widths: [usize; 3] = [16, 24, 48];
+    let stage_blocks: [usize; 3] = [1, 2, 2];
+    let head_cout = 96;
+
+    let mut layers = Vec::new();
+    let mut sp = IMG;
+    layers.push(conv_layer("stem".into(), 3, stage_widths[0], 3, 1, sp, sp, false, 0, false));
+    let mut cin = stage_widths[0];
+    for (si, (&w, &nb)) in stage_widths.iter().zip(&stage_blocks).enumerate() {
+        let stage_stride = if si == 0 { 1 } else { 2 };
+        for bi in 0..nb {
+            let s = if bi == 0 { stage_stride } else { 1 };
+            let out_sp = sp / s;
+            let name = format!("s{si}b{bi}");
+            let e = EXPANSION * cin;
+            // expand: the prunable inner width (the conv1 analogue)
+            layers.push(conv_layer(
+                format!("{name}.expand"),
+                cin,
+                e,
+                1,
+                1,
+                sp,
+                sp,
+                true,
+                -1,
+                false,
+            ));
+            // depthwise: channel-coupled to the expand producer — its
+            // width follows the expand's pruning decision, so it is never
+            // independently prunable
+            layers.push(conv_layer(
+                format!("{name}.dw"),
+                e,
+                e,
+                3,
+                s,
+                sp,
+                out_sp,
+                false,
+                -1,
+                true,
+            ));
+            // project: writes the stage's residual stream (group si), so
+            // all projects of a stage share one channel mask
+            layers.push(conv_layer(
+                format!("{name}.project"),
+                e,
+                w,
+                1,
+                1,
+                out_sp,
+                out_sp,
+                false,
+                si as i64,
+                false,
+            ));
+            cin = w;
+            sp = out_sp;
+        }
+    }
+    // head: independently prunable 1x1 feeding the classifier
+    layers.push(conv_layer(
+        "head".into(),
+        cin,
+        head_cout,
+        1,
+        1,
+        sp,
+        sp,
+        true,
+        -1,
+        false,
+    ));
+    finish_meta(
+        "mobilenetv2s",
+        stage_widths[0],
+        stage_blocks.to_vec(),
+        0.91,
+        layers,
+        head_cout,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelIr;
+
+    #[test]
+    fn every_variant_builds_a_valid_ir() {
+        for v in VARIANTS {
+            let meta = meta(v).unwrap();
+            let ir = ModelIr::from_meta(&meta).unwrap_or_else(|e| panic!("{v}: {e:#}"));
+            assert_eq!(&ir.variant, v);
+            assert!(ir.total_macs() > 0);
+            assert!(!ir.prunable_layers().is_empty(), "{v} has no prunable layers");
+            // the policy manifest covers every conv mask + all bit scalars
+            let convs = ir
+                .layers
+                .iter()
+                .filter(|l| l.kind == crate::model::LayerKind::Conv)
+                .count();
+            assert_eq!(ir.policy_index.len(), 3 * convs + 2, "{v} policy manifest");
+        }
+        assert!(meta("nope").is_err());
+        assert!(has_variant("mobilenetv2s") && !has_variant("tiny"));
+    }
+
+    #[test]
+    fn resnet_family_matches_the_python_generator_shape() {
+        // micro: stem + 4 stages x 1 block x (conv1+conv2) + 3 downsamples
+        // (stages 1..3 change stride/width) + fc = 1 + 8 + 3 + 1 = 13
+        let micro = meta("micro").unwrap();
+        assert_eq!(micro.layers.len(), 13);
+        // resnet18s: stem + 8 blocks x 2 + 3 downsamples + fc = 21
+        let r18s = meta("resnet18s").unwrap();
+        assert_eq!(r18s.layers.len(), 21);
+        assert_eq!(r18s.layers[0].cout, 32);
+        let fc = r18s.layers.last().unwrap();
+        assert_eq!((fc.cin, fc.cout), (256, 10));
+        // stage-0 has no downsample (stride 1, equal widths)
+        assert!(!r18s.layers.iter().any(|l| l.name == "s0b0.down"));
+        assert!(r18s.layers.iter().any(|l| l.name == "s1b0.down"));
+        // no ResNet layer is depthwise
+        assert!(r18s.layers.iter().all(|l| !l.depthwise));
+    }
+
+    #[test]
+    fn mobilenet_blocks_are_expand_dw_project() {
+        let m = meta("mobilenetv2s").unwrap();
+        let ir = ModelIr::from_meta(&m).unwrap();
+        // stem + 5 blocks x 3 + head + fc
+        assert_eq!(ir.layers.len(), 1 + 5 * 3 + 1 + 1);
+        let dw: Vec<_> = ir.layers.iter().filter(|l| l.depthwise).collect();
+        assert_eq!(dw.len(), 5, "one depthwise conv per block");
+        for l in &dw {
+            assert!(l.name.ends_with(".dw"));
+            assert_eq!(l.cin, l.cout, "depthwise convs are square");
+            assert_eq!(l.kernel, 3);
+            assert!(!l.prunable, "depthwise width follows its expand producer");
+            assert!(l.group < 0, "depthwise convs are not stream members");
+        }
+        // expanded widths: 4x the block input
+        let e = ir.layer_by_name("s0b0.expand").unwrap();
+        assert_eq!((e.cin, e.cout), (16, 64));
+        assert!(e.prunable);
+        let e = ir.layer_by_name("s2b1.expand").unwrap();
+        assert_eq!((e.cin, e.cout), (48, 192));
+        // spatial schedule: 32 -> 16 (stage 1) -> 8 (stage 2)
+        assert_eq!(ir.layer_by_name("s1b0.dw").unwrap().out_spatial, 16);
+        assert_eq!(ir.layer_by_name("s2b0.dw").unwrap().out_spatial, 8);
+        // head feeds the classifier
+        let head = ir.layer_by_name("head").unwrap();
+        assert!(head.prunable);
+        assert_eq!(ir.layers.last().unwrap().cin, head.cout);
+    }
+
+    #[test]
+    fn mobilenet_groups_are_per_stage_streams() {
+        let ir = ModelIr::from_meta(&meta("mobilenetv2s").unwrap()).unwrap();
+        // group 0: stem + s0b0.project (width 16)
+        let names = |g: i64| -> Vec<&str> {
+            ir.groups[&g].iter().map(|&i| ir.layers[i].name.as_str()).collect()
+        };
+        assert_eq!(names(0), vec!["stem", "s0b0.project"]);
+        assert_eq!(names(1), vec!["s1b0.project", "s1b1.project"]);
+        assert_eq!(names(2), vec!["s2b0.project", "s2b1.project"]);
+        // stream widths must be distinct from every expanded width (the
+        // consumer wiring identifies streams by width)
+        let stream_widths: Vec<usize> =
+            ir.groups.values().map(|m| ir.layers[m[0]].cout).collect();
+        for l in ir.layers.iter().filter(|l| l.name.ends_with(".expand")) {
+            assert!(
+                !stream_widths.contains(&l.cout),
+                "expanded width {} collides with a stream width",
+                l.cout
+            );
+        }
+    }
+
+    #[test]
+    fn mobilenet_depthwise_macs_are_not_dense_macs() {
+        let ir = ModelIr::from_meta(&meta("mobilenetv2s").unwrap()).unwrap();
+        for l in ir.layers.iter().filter(|l| l.depthwise) {
+            let dense = 9 * (l.cin as u64) * (l.cout as u64)
+                * (l.out_spatial as u64)
+                * (l.out_spatial as u64);
+            assert!(l.macs() < dense, "{}: dw {} vs dense {}", l.name, l.macs(), dense);
+            assert_eq!(
+                l.macs(),
+                9 * l.cout as u64 * (l.out_spatial as u64) * (l.out_spatial as u64)
+            );
+        }
+    }
+}

@@ -37,7 +37,12 @@ use crate::util::json::Json;
 
 /// Version of the checkpoint document layout; mismatched checkpoints are
 /// rejected by [`SearchDriver::resume_from`], never mis-parsed.
-pub const CHECKPOINT_SCHEMA_VERSION: usize = 1;
+///
+/// v2: the agent state vector gained a depthwise-flag feature (dim 13 ->
+/// 14), so v1 checkpoints carry agent networks of the wrong input width —
+/// the version bump rejects them with a clear schema error instead of the
+/// generic dimension mismatch.
+pub const CHECKPOINT_SCHEMA_VERSION: usize = 2;
 
 /// The `kind` tag every checkpoint document carries.
 const CHECKPOINT_KIND: &str = "galen_search_checkpoint";

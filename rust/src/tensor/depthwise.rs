@@ -1,0 +1,307 @@
+//! Depthwise convolution kernels (f32 and quantized i8): the executable
+//! substrate for MobileNet-style workloads in `hw::MeasuredProfiler`.
+//!
+//! A depthwise conv applies one `k x k` filter per channel — no cross-channel
+//! reduction — so it does *not* lower to the im2col GEMM the dense layers
+//! use.  These kernels run the windowed per-channel dot products directly,
+//! channel-major (`[c][y][x]`), with the same conventions as the GEMM
+//! substrate in this module's siblings:
+//!
+//! * zero padding of `kernel / 2` on each side, matching the spatial
+//!   schedule of the model IR (`out = in / stride` for odd kernels);
+//! * f32 and i8 paths compute each output element's contributions in the
+//!   identical fixed (ky, kx) order, so the i8 kernel is *exactly* the f32
+//!   kernel of the dequantized operands (integer accumulation is exact,
+//!   the per-channel scale epilogue is one multiply) — the property the
+//!   parity tests in `rust/tests/prop_depthwise.rs` pin down;
+//! * accumulator safety: |q| <= 127, so a k x k window sum fits i32 for any
+//!   kernel under ~133k taps — far beyond any depthwise layer here.
+
+use super::Mat;
+
+/// Per-channel symmetrically quantized depthwise filter bank
+/// (`[c][ky][kx]`, one scale per channel — the offline weight path).
+#[derive(Clone, Debug)]
+pub struct QuantizedDwWeights {
+    /// Channel count.
+    pub channels: usize,
+    /// Square kernel extent.
+    pub kernel: usize,
+    /// Channel-major i8 taps, length `channels * kernel * kernel`.
+    pub data: Vec<i8>,
+    /// One symmetric scale per channel (w ~= q * scale).
+    pub scales: Vec<f32>,
+}
+
+impl QuantizedDwWeights {
+    /// Quantize a channel-major f32 filter bank per channel.
+    pub fn quantize(weights: &[f32], channels: usize, kernel: usize) -> Self {
+        assert_eq!(weights.len(), channels * kernel * kernel, "filter bank shape");
+        let taps = kernel * kernel;
+        let mut data = vec![0i8; weights.len()];
+        let mut scales = vec![1.0f32; channels];
+        for c in 0..channels {
+            let w = &weights[c * taps..(c + 1) * taps];
+            let max_abs = w.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            let scale = if max_abs == 0.0 { 1.0 } else { max_abs / 127.0 };
+            scales[c] = scale;
+            let q = &mut data[c * taps..(c + 1) * taps];
+            for (qi, &x) in q.iter_mut().zip(w) {
+                *qi = (x / scale).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        Self {
+            channels,
+            kernel,
+            data,
+            scales,
+        }
+    }
+
+    /// Back to f32 (q * per-channel scale), for parity tests.
+    pub fn dequantize(&self) -> Vec<f32> {
+        let taps = self.kernel * self.kernel;
+        self.data
+            .iter()
+            .enumerate()
+            .map(|(i, &q)| q as f32 * self.scales[i / taps])
+            .collect()
+    }
+}
+
+/// f32 depthwise conv: `input` is `[channels][in_sp][in_sp]`, `weights`
+/// `[channels][kernel][kernel]`, `out` `[channels][out_sp][out_sp]` — all
+/// channel-major, zero-padded by `kernel / 2`.
+///
+/// Determinism contract: per output element the (ky, kx) taps accumulate in
+/// ascending fixed order (shared with the i8 kernel).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_dw_f32(
+    input: &[f32],
+    channels: usize,
+    in_sp: usize,
+    out_sp: usize,
+    kernel: usize,
+    stride: usize,
+    weights: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(input.len(), channels * in_sp * in_sp, "input shape");
+    assert_eq!(weights.len(), channels * kernel * kernel, "weight shape");
+    assert_eq!(out.len(), channels * out_sp * out_sp, "output shape");
+    let pad = kernel / 2;
+    for c in 0..channels {
+        let plane = &input[c * in_sp * in_sp..(c + 1) * in_sp * in_sp];
+        let w = &weights[c * kernel * kernel..(c + 1) * kernel * kernel];
+        let oplane = &mut out[c * out_sp * out_sp..(c + 1) * out_sp * out_sp];
+        for oy in 0..out_sp {
+            for ox in 0..out_sp {
+                let mut acc = 0.0f32;
+                for ky in 0..kernel {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= in_sp as isize {
+                        continue;
+                    }
+                    let row = &plane[iy as usize * in_sp..(iy as usize + 1) * in_sp];
+                    let wrow = &w[ky * kernel..(ky + 1) * kernel];
+                    for kx in 0..kernel {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= in_sp as isize {
+                            continue;
+                        }
+                        acc += row[ix as usize] * wrow[kx];
+                    }
+                }
+                oplane[oy * out_sp + ox] = acc;
+            }
+        }
+    }
+}
+
+/// Quantized depthwise conv with f32 epilogue:
+/// `out = (q_in (*) q_w) * a_scale * w_scale[c]` — i8 taps accumulated in
+/// i32 per output element (exact), scales applied once per element.  Taps
+/// visit the identical (ky, kx) order as [`conv_dw_f32`], so the result is
+/// exactly the f32 conv of the dequantized operands.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_dw_i8(
+    input: &[i8],
+    a_scale: f32,
+    channels: usize,
+    in_sp: usize,
+    out_sp: usize,
+    stride: usize,
+    w: &QuantizedDwWeights,
+    out: &mut [f32],
+) {
+    assert_eq!(w.channels, channels, "filter bank channels");
+    assert_eq!(input.len(), channels * in_sp * in_sp, "input shape");
+    assert_eq!(out.len(), channels * out_sp * out_sp, "output shape");
+    let kernel = w.kernel;
+    let pad = kernel / 2;
+    for c in 0..channels {
+        let plane = &input[c * in_sp * in_sp..(c + 1) * in_sp * in_sp];
+        let taps = &w.data[c * kernel * kernel..(c + 1) * kernel * kernel];
+        let scale = a_scale * w.scales[c];
+        let oplane = &mut out[c * out_sp * out_sp..(c + 1) * out_sp * out_sp];
+        for oy in 0..out_sp {
+            for ox in 0..out_sp {
+                let mut acc = 0i32;
+                for ky in 0..kernel {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= in_sp as isize {
+                        continue;
+                    }
+                    let row = &plane[iy as usize * in_sp..(iy as usize + 1) * in_sp];
+                    let wrow = &taps[ky * kernel..(ky + 1) * kernel];
+                    for kx in 0..kernel {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= in_sp as isize {
+                            continue;
+                        }
+                        acc += row[ix as usize] as i32 * wrow[kx] as i32;
+                    }
+                }
+                oplane[oy * out_sp + ox] = acc as f32 * scale;
+            }
+        }
+    }
+}
+
+/// Convenience wrapper over [`conv_dw_f32`] for `Mat` activations laid out
+/// as `channels x (sp * sp)` (one spatial plane per row).
+pub fn conv_dw_f32_mat(
+    input: &Mat,
+    in_sp: usize,
+    out_sp: usize,
+    kernel: usize,
+    stride: usize,
+    weights: &[f32],
+    out: &mut Mat,
+) {
+    assert_eq!(input.cols, in_sp * in_sp, "one spatial plane per row");
+    out.reshape_to(input.rows, out_sp * out_sp);
+    conv_dw_f32(
+        &input.data,
+        input.rows,
+        in_sp,
+        out_sp,
+        kernel,
+        stride,
+        weights,
+        &mut out.data,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::quant::QuantizedTensor;
+    use crate::util::rng::Pcg64;
+
+    fn random(rng: &mut Pcg64, n: usize, amp: f32) -> Vec<f32> {
+        (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * amp).collect()
+    }
+
+    #[test]
+    fn identity_kernel_passes_input_through() {
+        // 1x1 kernel with weight 1.0 at stride 1 is the identity
+        let (c, sp) = (3, 4);
+        let mut rng = Pcg64::new(5);
+        let input = random(&mut rng, c * sp * sp, 1.0);
+        let weights = vec![1.0f32; c];
+        let mut out = vec![0.0f32; c * sp * sp];
+        conv_dw_f32(&input, c, sp, sp, 1, 1, &weights, &mut out);
+        assert_eq!(out, input);
+    }
+
+    #[test]
+    fn known_3x3_window_sum() {
+        // single channel, 3x3 input of ones, 3x3 filter of ones: the center
+        // output sees all 9 taps, corners see 4 (zero padding)
+        let input = vec![1.0f32; 9];
+        let weights = vec![1.0f32; 9];
+        let mut out = vec![0.0f32; 9];
+        conv_dw_f32(&input, 1, 3, 3, 3, 1, &weights, &mut out);
+        assert_eq!(out[4], 9.0);
+        assert_eq!(out[0], 4.0);
+        assert_eq!(out[2], 4.0);
+        assert_eq!(out[1], 6.0);
+    }
+
+    #[test]
+    fn stride_two_halves_the_grid() {
+        let (c, in_sp, out_sp) = (2, 8, 4);
+        let mut rng = Pcg64::new(7);
+        let input = random(&mut rng, c * in_sp * in_sp, 1.0);
+        let weights = random(&mut rng, c * 9, 0.5);
+        let mut out = vec![0.0f32; c * out_sp * out_sp];
+        conv_dw_f32(&input, c, in_sp, out_sp, 3, 2, &weights, &mut out);
+        assert!(out.iter().all(|x| x.is_finite()));
+        // strided output (0,0) = full conv output (0,0)
+        let mut full = vec![0.0f32; c * in_sp * in_sp];
+        conv_dw_f32(&input, c, in_sp, in_sp, 3, 1, &weights, &mut full);
+        assert_eq!(out[0], full[0]);
+        // strided (oy, ox) samples the stride-2 grid of the full output
+        assert_eq!(out[1], full[2]);
+        assert_eq!(out[out_sp], full[2 * in_sp]);
+    }
+
+    #[test]
+    fn i8_matches_f32_of_dequantized_operands() {
+        let (c, in_sp, out_sp, k, stride) = (5, 6, 3, 3, 2);
+        let mut rng = Pcg64::new(11);
+        let input = Mat::from_vec(c, in_sp * in_sp, random(&mut rng, c * in_sp * in_sp, 2.0));
+        let weights = random(&mut rng, c * k * k, 0.8);
+        let qa = QuantizedTensor::quantize(&input);
+        let qw = QuantizedDwWeights::quantize(&weights, c, k);
+
+        let mut qout = vec![0.0f32; c * out_sp * out_sp];
+        conv_dw_i8(&qa.data, qa.scale, c, in_sp, out_sp, stride, &qw, &mut qout);
+
+        let mut reference = vec![0.0f32; c * out_sp * out_sp];
+        conv_dw_f32(
+            &qa.dequantize().data,
+            c,
+            in_sp,
+            out_sp,
+            k,
+            stride,
+            &qw.dequantize(),
+            &mut reference,
+        );
+        for (x, y) in qout.iter().zip(&reference) {
+            assert!((x - y).abs() <= 1e-4 * y.abs().max(1.0), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn weight_quantization_roundtrip_bounded_per_channel() {
+        let mut rng = Pcg64::new(13);
+        let (c, k) = (4, 3);
+        let mut w = random(&mut rng, c * k * k, 1.0);
+        // wildly different per-channel ranges
+        for ci in 0..c {
+            for t in 0..k * k {
+                w[ci * k * k + t] *= (ci + 1) as f32 * 10.0;
+            }
+        }
+        let q = QuantizedDwWeights::quantize(&w, c, k);
+        let back = q.dequantize();
+        for (i, (x, y)) in w.iter().zip(&back).enumerate() {
+            let tol = q.scales[i / (k * k)] * 0.5 * 1.0001;
+            assert!((x - y).abs() <= tol, "[{i}] {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn mat_wrapper_reshapes_output() {
+        let (c, sp) = (2, 4);
+        let mut rng = Pcg64::new(17);
+        let input = Mat::from_vec(c, sp * sp, random(&mut rng, c * sp * sp, 1.0));
+        let weights = random(&mut rng, c * 9, 1.0);
+        let mut out = Mat::zeros(0, 0);
+        conv_dw_f32_mat(&input, sp, sp / 2, 3, 2, &weights, &mut out);
+        assert_eq!((out.rows, out.cols), (c, 4));
+    }
+}

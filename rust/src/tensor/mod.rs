@@ -14,6 +14,8 @@
 //! `GALEN_NUM_THREADS` environment variable caps the worker count
 //! (`util::num_threads`).
 
+/// Depthwise convolution kernels (f32 and i8, MobileNet-style workloads).
+pub mod depthwise;
 /// Quantized tensor types and the i8 GEMM kernels.
 pub mod quant;
 

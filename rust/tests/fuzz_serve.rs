@@ -1,0 +1,200 @@
+//! Fuzz-style robustness test for the `coordinator::serve` JSONL protocol:
+//! hundreds of randomized malformed / truncated / wrong-typed request lines
+//! must each produce exactly one `ok:false` error response — with the
+//! request's `id` echoed whenever the line parsed as a JSON object carrying
+//! one — and must never panic a worker or wedge the service (a final valid
+//! request still succeeds).
+
+use std::io::Cursor;
+
+use galen::coordinator::{serve, ServeOptions};
+use galen::eval::{SensitivityConfig, SensitivityTable};
+use galen::hw::{HwTarget, LatencyKind, ProfilerConfig};
+use galen::model::ir::test_fixtures::tiny_meta;
+use galen::model::ModelIr;
+use galen::search::LatencyFactory;
+use galen::util::json::Json;
+use galen::util::rng::Pcg64;
+
+/// One generated request line plus the id we expect echoed back (None for
+/// lines that are not valid JSON objects with an `id`).
+struct FuzzLine {
+    line: String,
+    expect_id: Option<String>,
+}
+
+/// Random ASCII junk (printable, no newline) for op names and values.
+fn junk(rng: &mut Pcg64, max_len: usize) -> String {
+    const ALPHABET: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789-_ {}[]:\",.";
+    let n = 1 + rng.below(max_len);
+    (0..n)
+        .map(|_| ALPHABET[rng.below(ALPHABET.len())] as char)
+        .collect()
+}
+
+/// An op name guaranteed to be unknown to the protocol (never `shutdown`,
+/// which would stop the loop mid-script).
+fn unknown_op(rng: &mut Pcg64) -> String {
+    format!("zz-{}", junk(rng, 8).replace(['"', '{', '}', '[', ']', ':'], "x"))
+}
+
+fn gen_line(rng: &mut Pcg64, case: usize) -> FuzzLine {
+    let id = format!("fz{case}");
+    match rng.below(8) {
+        // plain garbage: never valid JSON objects (no braces survive; the
+        // leading '#' keeps the line non-empty and non-JSON)
+        0 => FuzzLine {
+            line: format!("#{}", junk(rng, 40).replace(['{', '}'], "#")),
+            expect_id: None,
+        },
+        // mid-object EOF: a valid submit line truncated before its end —
+        // proper prefixes of a JSON object never parse
+        1 => {
+            let full = format!(
+                r#"{{"op":"submit","id":"{id}","spec":{{"agent":"joint","target":0.4,"preset":"fast"}}}}"#
+            );
+            let cut = 1 + rng.below(full.len() - 1);
+            FuzzLine {
+                line: full[..cut].to_string(),
+                expect_id: None,
+            }
+        }
+        // unknown op with an id: the error must echo it
+        2 => FuzzLine {
+            line: format!(r#"{{"op":"{}","id":"{id}"}}"#, unknown_op(rng)),
+            expect_id: Some(id),
+        },
+        // wrong-typed op field
+        3 => FuzzLine {
+            line: format!(r#"{{"op":{},"id":"{id}"}}"#, rng.below(1000)),
+            expect_id: Some(id),
+        },
+        // submit with a non-object / wrong-typed spec
+        4 => FuzzLine {
+            line: format!(r#"{{"op":"submit","id":"{id}","spec":{}}}"#, rng.below(100)),
+            expect_id: Some(id),
+        },
+        // submit with bad types inside the spec (target as string, bogus
+        // agent, unknown spec keys, bad config types)
+        5 => {
+            let spec = match rng.below(4) {
+                0 => r#"{"agent":"joint","target":"half"}"#.to_string(),
+                1 => r#"{"agent":"warp-drive","target":0.5}"#.to_string(),
+                // the "q-" prefix guarantees the key is never a valid one
+                2 => format!(
+                    r#"{{"agent":"joint","target":0.5,"q-{}":1}}"#,
+                    junk(rng, 6).replace(['"', '{', '}', '[', ']', ':', ',', ' ', '.'], "k")
+                ),
+                _ => r#"{"agent":"joint","target":0.5,"config":{"episodes":"ten"}}"#.to_string(),
+            };
+            FuzzLine {
+                line: format!(r#"{{"op":"submit","id":"{id}","spec":{spec}}}"#),
+                expect_id: Some(id),
+            }
+        }
+        // ops aimed at jobs that do not exist / wrong-typed job field
+        6 => {
+            let op = ["status", "events", "result", "cancel", "forget"][rng.below(5)];
+            let job = match rng.below(3) {
+                0 => format!(r#""job-{}""#, 40 + rng.below(1000)),
+                1 => r#""not-a-job""#.to_string(),
+                _ => rng.below(50).to_string(),
+            };
+            FuzzLine {
+                line: format!(r#"{{"op":"{op}","id":"{id}","job":{job}}}"#),
+                expect_id: Some(id),
+            }
+        }
+        // valid JSON that is not an object at all
+        _ => FuzzLine {
+            line: match rng.below(3) {
+                0 => format!("[{}]", rng.below(9)),
+                1 => rng.below(1000).to_string(),
+                _ => "null".to_string(),
+            },
+            expect_id: None,
+        },
+    }
+}
+
+#[test]
+fn fuzzed_requests_each_get_an_error_response_and_never_wedge_the_service() {
+    let ir = ModelIr::from_meta(&tiny_meta()).unwrap();
+    let sens = SensitivityTable::disabled(ir.layers.len(), &SensitivityConfig::default(), "tiny");
+    let factory = LatencyFactory::new(
+        LatencyKind::Sim,
+        HwTarget::cortex_a72(),
+        "tiny",
+        ProfilerConfig::fast(),
+        None,
+    );
+
+    let mut rng = Pcg64::new(0xf0_2242);
+    let mut lines = Vec::new();
+    let mut script = String::new();
+    for case in 0..300 {
+        let l = gen_line(&mut rng, case);
+        assert!(!l.line.trim().is_empty(), "generator produced an empty line");
+        assert!(!l.line.contains('\n'), "generator produced a multi-line request");
+        script.push_str(&l.line);
+        script.push('\n');
+        lines.push(l);
+    }
+    // a final valid request proves the service survived the whole barrage
+    script.push_str(r#"{"op":"list","id":"survivor"}"#);
+    // ... delivered without a trailing newline: the protocol loop must
+    // still answer the final unterminated line (mid-stream EOF)
+
+    let mut out = Vec::new();
+    let stats = serve(
+        &ir,
+        &sens,
+        &factory,
+        "tiny",
+        &ServeOptions { workers: 2, results_dir: None, base_seed: None },
+        Cursor::new(script),
+        &mut out,
+    )
+    .expect("the serve loop itself must not error on malformed input");
+
+    assert_eq!(stats.submitted, 0, "no fuzz line may become a job");
+    assert_eq!(stats.failed, 0);
+
+    let text = String::from_utf8(out).unwrap();
+    let responses: Vec<Json> = text
+        .lines()
+        .map(|l| Json::parse(l).unwrap_or_else(|e| panic!("unparseable response '{l}': {e}")))
+        .collect();
+    assert_eq!(
+        responses.len(),
+        lines.len() + 1,
+        "exactly one response line per request line"
+    );
+    for (i, (l, r)) in lines.iter().zip(&responses).enumerate() {
+        assert!(
+            !r.req_bool("ok").unwrap(),
+            "fuzz line {i} ({}) was accepted: {}",
+            l.line,
+            r.dump()
+        );
+        let err = r.req_str("error").unwrap_or_else(|_| panic!("line {i}: no error field"));
+        assert!(!err.is_empty(), "line {i}: empty error message");
+        match &l.expect_id {
+            Some(id) => assert_eq!(
+                r.req_str("id").ok(),
+                Some(id.as_str()),
+                "line {i} must echo its id: {}",
+                r.dump()
+            ),
+            None => assert!(
+                r.get("id").is_none(),
+                "line {i} had no parseable id, yet one was echoed: {}",
+                r.dump()
+            ),
+        }
+    }
+    let last = responses.last().unwrap();
+    assert!(last.req_bool("ok").unwrap(), "service wedged: {}", last.dump());
+    assert_eq!(last.req_str("id").unwrap(), "survivor");
+    assert_eq!(last.req_arr("jobs").unwrap().len(), 0);
+}

@@ -206,6 +206,176 @@ fn double_resume_still_bit_identical() {
     assert_outcomes_bit_identical(&out, &straight, "double-resume");
 }
 
+// ---------------- golden-trajectory regression fixtures ----------------
+
+/// Bit-exact fingerprint of a search trajectory: every float as its raw
+/// f64 bit pattern (hex), every counter as a hex u64 — JSON round-trips
+/// cannot lose a single bit, so comparisons see exactly what the search
+/// computed (how strictly they compare is `assert_fingerprints_match`'s
+/// call).
+fn trajectory_fingerprint(out: &SearchOutcome) -> galen::util::json::Json {
+    use galen::util::json::Json;
+    let episodes = out
+        .history
+        .iter()
+        .map(|h| {
+            Json::obj(vec![
+                ("episode", Json::num(h.episode as f64)),
+                ("reward_bits", Json::hex64(h.reward.to_bits())),
+                ("accuracy_bits", Json::hex64(h.accuracy.to_bits())),
+                ("latency_bits", Json::hex64(h.latency_s.to_bits())),
+                ("macs", Json::hex64(h.macs)),
+                ("bops", Json::hex64(h.bops)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema_version", Json::num(1.0)),
+        ("base_latency_bits", Json::hex64(out.base_latency_s.to_bits())),
+        ("best_episode", Json::num(out.best.episode as f64)),
+        ("best_reward_bits", Json::hex64(out.best.reward.to_bits())),
+        ("best_policy", out.best_policy.to_json()),
+        ("history", Json::Arr(episodes)),
+    ])
+}
+
+/// Compare a recorded fixture against a freshly computed fingerprint.
+///
+/// Integer fields (episode indices, MACs, BOPs, the best policy) must be
+/// *exactly* equal.  Float fields compare by bit pattern first, with a
+/// 1e-9 relative fallback: the trajectory runs through platform libm
+/// (tanh/exp/powf/ln), whose last-ULP rounding may differ across libm
+/// versions — a real trajectory shift (different RNG stream, different
+/// reward math) moves these values by orders of magnitude more, so the
+/// tolerance costs the fence nothing.  Same-process replay determinism is
+/// asserted separately (and bit-exactly) by the double run above.
+fn assert_fingerprints_match(
+    golden: &galen::util::json::Json,
+    fresh: &galen::util::json::Json,
+    agent: AgentKind,
+    path: &std::path::Path,
+) {
+    let float_close = |g: u64, f: u64| {
+        if g == f {
+            return true;
+        }
+        let (g, f) = (f64::from_bits(g), f64::from_bits(f));
+        (g - f).abs() <= 1e-9 * g.abs().max(f.abs())
+    };
+    let ctx = |what: &str| {
+        format!(
+            "{agent}: {what} diverged from the checked-in fixture {} — if the change \
+             is intentional, delete the fixture and re-run to re-record",
+            path.display()
+        )
+    };
+    assert!(
+        float_close(
+            golden.req_hex64("base_latency_bits").unwrap(),
+            fresh.req_hex64("base_latency_bits").unwrap()
+        ),
+        "{}",
+        ctx("base latency")
+    );
+    assert_eq!(
+        golden.req_usize("best_episode").unwrap(),
+        fresh.req_usize("best_episode").unwrap(),
+        "{}",
+        ctx("best episode index")
+    );
+    assert!(
+        float_close(
+            golden.req_hex64("best_reward_bits").unwrap(),
+            fresh.req_hex64("best_reward_bits").unwrap()
+        ),
+        "{}",
+        ctx("best reward")
+    );
+    assert_eq!(
+        golden.req("best_policy").unwrap().dump(),
+        fresh.req("best_policy").unwrap().dump(),
+        "{}",
+        ctx("best policy")
+    );
+    let g_eps = golden.req_arr("history").unwrap();
+    let f_eps = fresh.req_arr("history").unwrap();
+    assert_eq!(g_eps.len(), f_eps.len(), "{}", ctx("episode count"));
+    for (k, (g, f)) in g_eps.iter().zip(f_eps).enumerate() {
+        assert_eq!(
+            g.req_usize("episode").unwrap(),
+            f.req_usize("episode").unwrap(),
+            "{}",
+            ctx(&format!("history[{k}].episode"))
+        );
+        for field in ["reward_bits", "accuracy_bits", "latency_bits"] {
+            assert!(
+                float_close(g.req_hex64(field).unwrap(), f.req_hex64(field).unwrap()),
+                "{}",
+                ctx(&format!("history[{k}].{field}"))
+            );
+        }
+        for field in ["macs", "bops"] {
+            assert_eq!(
+                g.req_hex64(field).unwrap(),
+                f.req_hex64(field).unwrap(),
+                "{}",
+                ctx(&format!("history[{k}].{field}"))
+            );
+        }
+    }
+}
+
+/// Golden-trajectory regression: one short search per agent kind on the
+/// zoo's `micro` variant, asserted against a checked-in JSON fixture in
+/// `tests/golden/` (integers/policies exactly, floats to 1e-9 — see
+/// `assert_fingerprints_match`; same-process replay is asserted
+/// bit-exactly).
+///
+/// Self-recording contract: when a fixture file is missing the test runs
+/// the search twice (asserting replay determinism), records the fixture,
+/// and passes — run `cargo test` once and commit the recorded files.  Once
+/// committed, any refactor that silently shifts RNG streams, state
+/// features, reward math, or the latency model fails this test with the
+/// first diverging episode.
+#[test]
+fn golden_trajectories_replay_bit_identical() {
+    let golden_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden");
+    let ir = ModelIr::from_meta(&galen::model::zoo::meta("micro").unwrap()).unwrap();
+    let sens =
+        SensitivityTable::disabled(ir.layers.len(), &SensitivityConfig::default(), "micro");
+    for agent in [AgentKind::Pruning, AgentKind::Quantization, AgentKind::Joint] {
+        let mut cfg = cfg(agent, 6);
+        cfg.warmup_episodes = 2;
+        cfg.seed = 0x601d; // one fixed fixture seed for all agents
+        let ev = SimEvaluator::new(&ir);
+        let mapper = mapper_for(agent);
+
+        let mut sim_a = sim(cfg.seed);
+        let a = run_search(&ir, &sens, &ev, &mut sim_a, mapper.as_ref(), &cfg, None).unwrap();
+        // replay determinism holds regardless of fixture presence
+        let mut sim_b = sim(cfg.seed);
+        let b = run_search(&ir, &sens, &ev, &mut sim_b, mapper.as_ref(), &cfg, None).unwrap();
+        assert_outcomes_bit_identical(&a, &b, &format!("{agent} golden replay"));
+
+        let fp = trajectory_fingerprint(&a);
+        let path = golden_dir.join(format!("trajectory_{agent}.json"));
+        if path.exists() {
+            let golden = galen::util::json::Json::read_file(&path).unwrap();
+            assert_fingerprints_match(&golden, &fp, agent, &path);
+        } else {
+            std::fs::create_dir_all(&golden_dir).unwrap();
+            fp.write_file(&path).unwrap();
+            eprintln!(
+                "golden fixture recorded: {} — commit this file so future refactors \
+                 are pinned to today's trajectory",
+                path.display()
+            );
+        }
+    }
+}
+
 /// The base-policy of sequential schemes travels inside the checkpoint.
 #[test]
 fn base_policy_survives_checkpoint_resume() {

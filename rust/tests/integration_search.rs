@@ -1,12 +1,17 @@
 //! End-to-end search integration: real PJRT accuracy + simulated hardware
-//! latency, on the micro variant (fast).  Skipped when artifacts are absent.
+//! latency on the micro variant (skipped when artifacts are absent), and
+//! artifact-free zoo searches on the depthwise mobilenetv2s workload with
+//! every agent under both the sim and measured latency backends.
 
 use std::path::PathBuf;
 
-use galen::agent::{AgentKind, DdpgConfig};
+use galen::agent::{mapper_for, AgentKind, DdpgConfig};
+use galen::compress::DiscretePolicy;
+use galen::eval::{SensitivityConfig, SensitivityTable};
 use galen::coordinator::{Backend, Session, SessionOptions};
-use galen::eval::SensitivityConfig;
-use galen::search::SearchConfig;
+use galen::hw::{CostModel, HwTarget, LatencySimulator, MeasuredProfiler, ProfilerConfig};
+use galen::model::ModelIr;
+use galen::search::{run_search, SearchConfig, SimEvaluator};
 
 fn opts(backend: Backend) -> Option<SessionOptions> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -43,6 +48,112 @@ fn small_cfg(agent: AgentKind, target: f64) -> SearchConfig {
         ..Default::default()
     };
     cfg
+}
+
+fn mobilenet_fixture() -> (ModelIr, SensitivityTable) {
+    let ir = ModelIr::from_meta(&galen::model::zoo::meta("mobilenetv2s").unwrap()).unwrap();
+    let sens = SensitivityTable::disabled(
+        ir.layers.len(),
+        &SensitivityConfig::default(),
+        "mobilenetv2s",
+    );
+    (ir, sens)
+}
+
+fn tiny_cfg(agent: AgentKind, target: f64) -> SearchConfig {
+    let mut cfg = SearchConfig::fast(agent, target);
+    cfg.episodes = 8;
+    cfg.warmup_episodes = 3;
+    cfg.opt_steps_per_episode = 4;
+    cfg.eval_batches = 1;
+    cfg.log_every = 0;
+    cfg.ddpg = DdpgConfig {
+        hidden: (32, 24),
+        batch: 24,
+        replay_capacity: 400,
+        ..Default::default()
+    };
+    cfg
+}
+
+/// Depthwise invariants every searched mobilenetv2s policy must satisfy:
+/// depthwise widths follow their expand producer, and no depthwise layer
+/// ever carries the bit-serial MIX mode.
+fn assert_depthwise_invariants(ir: &ModelIr, policy: &DiscretePolicy) {
+    for l in ir.layers.iter().filter(|l| l.depthwise) {
+        assert!(!policy.layers[l.index].quant.is_mix(), "{} went MIX", l.name);
+        let producer = ir.producer_of(l.index).expect("depthwise conv has a producer");
+        assert_eq!(
+            policy.layers[l.index].kept_channels, policy.layers[producer].kept_channels,
+            "{} decoupled from {}",
+            l.name,
+            ir.layers[producer].name
+        );
+    }
+}
+
+/// Acceptance: the mobilenetv2s workload searches end to end with all three
+/// agents on the simulator backend, with depthwise layers carrying
+/// non-trivial costs (depthwise MACs != dense MACs) and the coupling
+/// constraints respected by every best policy.
+#[test]
+fn mobilenetv2s_sim_search_all_agents() {
+    let (ir, sens) = mobilenet_fixture();
+    for agent in [AgentKind::Pruning, AgentKind::Quantization, AgentKind::Joint] {
+        let ev = SimEvaluator::new(&ir);
+        let mapper = mapper_for(agent);
+        let mut sim = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 11);
+        let cfg = tiny_cfg(agent, 0.5);
+        let out = run_search(&ir, &sens, &ev, &mut sim, mapper.as_ref(), &cfg, None)
+            .unwrap_or_else(|e| panic!("{agent}: {e:#}"));
+        assert_eq!(out.history.len(), 8, "{agent}");
+        assert!(out.best.latency_s > 0.0 && out.base_latency_s > 0.0, "{agent}");
+        assert_depthwise_invariants(&ir, &out.best_policy);
+        // depthwise MACs are not dense MACs: the policy's MAC accounting
+        // must stay below what dense accounting of the same shapes gives
+        let dense_equiv: u64 = ir
+            .layers
+            .iter()
+            .map(|l| {
+                let cin = out.best_policy.effective_cin(&ir, l.index);
+                let kept = out.best_policy.layers[l.index].kept_channels;
+                match l.kind {
+                    galen::model::LayerKind::Conv => {
+                        (l.kernel * l.kernel) as u64
+                            * cin as u64
+                            * kept as u64
+                            * (l.out_spatial * l.out_spatial) as u64
+                    }
+                    galen::model::LayerKind::Linear => (cin * kept) as u64,
+                }
+            })
+            .sum();
+        assert!(out.best.macs < dense_equiv, "{agent}: depthwise accounting inert");
+    }
+}
+
+/// Acceptance: the same workload searches under the measured-kernel
+/// profiler backend — depthwise configs lower to the real windowed kernels
+/// and get timed.
+#[test]
+fn mobilenetv2s_measured_search_runs() {
+    let (ir, sens) = mobilenet_fixture();
+    let ev = SimEvaluator::new(&ir);
+    let mapper = mapper_for(AgentKind::Joint);
+    let mut profiler = MeasuredProfiler::new(
+        HwTarget::cortex_a72(),
+        "mobilenetv2s",
+        ProfilerConfig::fast(),
+    );
+    let mut cfg = tiny_cfg(AgentKind::Joint, 0.5);
+    cfg.episodes = 5;
+    cfg.warmup_episodes = 2;
+    let out = run_search(&ir, &sens, &ev, &mut profiler, mapper.as_ref(), &cfg, None).unwrap();
+    assert_eq!(out.latency_backend, "measured");
+    assert_eq!(out.history.len(), 5);
+    assert!(out.best.latency_s > 0.0);
+    assert!(profiler.stats().measured > 0, "nothing was actually timed");
+    assert_depthwise_invariants(&ir, &out.best_policy);
 }
 
 #[test]

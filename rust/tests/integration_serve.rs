@@ -211,6 +211,32 @@ fn bad_requests_get_error_responses() {
     assert_eq!(stats.completed, 1);
 }
 
+/// The optional spec `variant` pins a submit to one model: matching the
+/// served variant is accepted, a mismatch is rejected with a message
+/// naming both sides (a serve process hosts exactly one model).
+#[test]
+fn submit_variant_assertion_matches_served_model() {
+    let script = concat!(
+        r#"{"op":"submit","id":"v1","spec":{"agent":"pruning","target":0.5,"variant":"tiny","preset":"fast","config":{"episodes":4,"warmup_episodes":2,"log_every":0,"ddpg":{"hidden":[24,16],"batch":16,"replay_capacity":200}}}}"#,
+        "\n",
+        r#"{"op":"submit","id":"v2","spec":{"agent":"pruning","target":0.5,"variant":"mobilenetv2s"}}"#,
+        "\n",
+        r#"{"op":"result","id":"rv","job":"job-0","wait":true}"#,
+        "\n"
+    );
+    let (stats, responses) = run_session(
+        script,
+        &ServeOptions { workers: 1, results_dir: None, base_seed: None },
+    );
+    assert!(responses[0].req_bool("ok").unwrap(), "{}", responses[0].dump());
+    assert!(!responses[1].req_bool("ok").unwrap());
+    assert_eq!(responses[1].req_str("id").unwrap(), "v2");
+    let err = responses[1].req_str("error").unwrap();
+    assert!(err.contains("mobilenetv2s") && err.contains("tiny"), "{err}");
+    assert_eq!(stats.submitted, 1);
+    assert_eq!(responses[2].req_str("state").unwrap(), "done");
+}
+
 /// Unknown keys in a submit spec — at the spec level and inside its
 /// `config` block — are rejected loudly (the apply_json contract reaches
 /// the protocol surface), and failing requests still echo their id.

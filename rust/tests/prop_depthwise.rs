@@ -1,0 +1,268 @@
+//! Property tests (via `testing::forall`) for the depthwise substrate:
+//!
+//! * i8 depthwise conv == f32 depthwise conv of the dequantized operands
+//!   (exact up to f32 epilogue rounding), and within the analytic
+//!   quantization-error bound of the true f32 conv, across randomized
+//!   shapes/strides;
+//! * the f32 kernel against a naive direct-convolution reference;
+//! * depthwise `macs_at` / `params_at` against a naive counting reference,
+//!   and strictly below dense accounting whenever it should be.
+
+use galen::model::{Layer, LayerKind};
+use galen::tensor::depthwise::{conv_dw_f32, conv_dw_i8, QuantizedDwWeights};
+use galen::tensor::quant::QuantizedTensor;
+use galen::tensor::Mat;
+use galen::testing::{forall, Config};
+use galen::util::rng::Pcg64;
+
+/// A randomized depthwise shape: channels, spatial extent, kernel, stride.
+#[derive(Debug)]
+struct DwCase {
+    channels: usize,
+    in_sp: usize,
+    kernel: usize,
+    stride: usize,
+    input: Vec<f32>,
+    weights: Vec<f32>,
+}
+
+fn gen_case(rng: &mut Pcg64) -> DwCase {
+    let channels = 1 + rng.below(24);
+    let kernel = [1, 3, 5][rng.below(3)];
+    let stride = 1 + rng.below(2);
+    // in_sp even and >= stride so out_sp = in_sp / stride stays consistent
+    // with the IR's spatial schedule
+    let in_sp = 2 * (1 + rng.below(6));
+    let amp = 0.25 + 4.0 * rng.next_f32();
+    let input = (0..channels * in_sp * in_sp)
+        .map(|_| (rng.next_f32() * 2.0 - 1.0) * amp)
+        .collect();
+    let weights = (0..channels * kernel * kernel)
+        .map(|_| rng.next_f32() * 2.0 - 1.0)
+        .collect();
+    DwCase {
+        channels,
+        in_sp,
+        kernel,
+        stride,
+        input,
+        weights,
+    }
+}
+
+/// Naive reference: direct triple loop straight from the definition,
+/// structured differently from the kernel (per-output gather with explicit
+/// bounds arithmetic on signed coordinates).
+fn naive_dw(case: &DwCase, input: &[f32], weights: &[f32]) -> Vec<f32> {
+    let (c, isp, k, s) = (case.channels, case.in_sp, case.kernel, case.stride);
+    let osp = isp / s;
+    let pad = (k / 2) as isize;
+    let mut out = vec![0.0f32; c * osp * osp];
+    for ci in 0..c {
+        for oy in 0..osp {
+            for ox in 0..osp {
+                let mut acc = 0.0f32;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        let iy = (oy * s + ky) as isize - pad;
+                        let ix = (ox * s + kx) as isize - pad;
+                        if iy >= 0 && iy < isp as isize && ix >= 0 && ix < isp as isize {
+                            acc += input[ci * isp * isp + iy as usize * isp + ix as usize]
+                                * weights[ci * k * k + ky * k + kx];
+                        }
+                    }
+                }
+                out[ci * osp * osp + oy * osp + ox] = acc;
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn f32_kernel_matches_naive_reference() {
+    forall(
+        Config { cases: 96, seed: 0xd3f1 },
+        gen_case,
+        |case| {
+            let osp = case.in_sp / case.stride;
+            let mut out = vec![0.0f32; case.channels * osp * osp];
+            conv_dw_f32(
+                &case.input,
+                case.channels,
+                case.in_sp,
+                osp,
+                case.kernel,
+                case.stride,
+                &case.weights,
+                &mut out,
+            );
+            let reference = naive_dw(case, &case.input, &case.weights);
+            for (i, (x, y)) in out.iter().zip(&reference).enumerate() {
+                // identical accumulation order is not guaranteed vs the
+                // naive loop; allow f32 reassociation slack only
+                if (x - y).abs() > 1e-4 * y.abs().max(1.0) {
+                    return Err(format!("[{i}] kernel {x} vs naive {y}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn i8_kernel_parity_with_f32_within_quantization_tolerance() {
+    forall(
+        Config { cases: 96, seed: 0x18_0a11 },
+        gen_case,
+        |case| {
+            let osp = case.in_sp / case.stride;
+            let n = case.channels * osp * osp;
+            let input = Mat::from_vec(case.channels, case.in_sp * case.in_sp, case.input.clone());
+            let qa = QuantizedTensor::quantize(&input);
+            let qw = QuantizedDwWeights::quantize(&case.weights, case.channels, case.kernel);
+
+            let mut qout = vec![0.0f32; n];
+            conv_dw_i8(
+                &qa.data, qa.scale, case.channels, case.in_sp, osp, case.stride, &qw, &mut qout,
+            );
+
+            // (a) exact parity with the f32 conv of the dequantized
+            // operands: integer accumulation is exact, epilogue is one
+            // multiply per element
+            let mut deq = vec![0.0f32; n];
+            conv_dw_f32(
+                &qa.dequantize().data,
+                case.channels,
+                case.in_sp,
+                osp,
+                case.kernel,
+                case.stride,
+                &qw.dequantize(),
+                &mut deq,
+            );
+            for (i, (x, y)) in qout.iter().zip(&deq).enumerate() {
+                if (x - y).abs() > 1e-4 * y.abs().max(1.0) {
+                    return Err(format!("[{i}] i8 {x} vs dequantized-f32 {y}"));
+                }
+            }
+
+            // (b) the true f32 conv within the analytic quantization error
+            // bound: each tap contributes |in_err * w| + |in~ * w_err|,
+            // with per-channel weight scales and the shared input scale
+            let mut full = vec![0.0f32; n];
+            conv_dw_f32(
+                &case.input,
+                case.channels,
+                case.in_sp,
+                osp,
+                case.kernel,
+                case.stride,
+                &case.weights,
+                &mut full,
+            );
+            let taps = (case.kernel * case.kernel) as f32;
+            for c in 0..case.channels {
+                let taps_per = case.kernel * case.kernel;
+                let w = &case.weights[c * taps_per..(c + 1) * taps_per];
+                let w_max = w.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+                let in_max = case.input.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+                // half-ULP per quantized value, every tap, plus slack
+                let bound = taps
+                    * (0.5 * qa.scale * (w_max + 0.5 * qw.scales[c])
+                        + 0.5 * qw.scales[c] * in_max)
+                    * 1.01
+                    + 1e-5;
+                for i in 0..osp * osp {
+                    let (x, y) = (qout[c * osp * osp + i], full[c * osp * osp + i]);
+                    if (x - y).abs() > bound {
+                        return Err(format!(
+                            "channel {c} [{i}]: i8 {x} vs f32 {y} exceeds bound {bound}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A randomized layer for the accounting property.
+#[derive(Debug)]
+struct AccountingCase {
+    kernel: usize,
+    out_spatial: usize,
+    cin: usize,
+    cout: usize,
+}
+
+#[test]
+fn depthwise_accounting_matches_naive_reference() {
+    forall(
+        Config { cases: 256, seed: 0xacc7 },
+        |rng| AccountingCase {
+            kernel: [1, 3, 5, 7][rng.below(4)],
+            out_spatial: 1 + rng.below(33),
+            cin: 1 + rng.below(256),
+            cout: 1 + rng.below(256),
+        },
+        |case| {
+            let layer = |depthwise: bool| Layer {
+                index: 0,
+                name: "t".into(),
+                kind: LayerKind::Conv,
+                cin: case.cin,
+                cout: case.cout,
+                kernel: case.kernel,
+                stride: 1,
+                in_spatial: case.out_spatial,
+                out_spatial: case.out_spatial,
+                prunable: false,
+                group: -1,
+                depthwise,
+            };
+            let dw = layer(true);
+            let dense = layer(false);
+
+            // naive reference: one k x k filter per surviving channel,
+            // applied at every output position
+            let channels = case.cin.min(case.cout) as u64;
+            let mut macs = 0u64;
+            let mut params = 0u64;
+            for _c in 0..channels {
+                params += (case.kernel * case.kernel) as u64;
+                for _p in 0..case.out_spatial * case.out_spatial {
+                    macs += (case.kernel * case.kernel) as u64;
+                }
+            }
+            if dw.macs_at(case.cin, case.cout) != macs {
+                return Err(format!(
+                    "macs_at {} vs naive {macs}",
+                    dw.macs_at(case.cin, case.cout)
+                ));
+            }
+            if dw.params_at(case.cin, case.cout) != params {
+                return Err(format!(
+                    "params_at {} vs naive {params}",
+                    dw.params_at(case.cin, case.cout)
+                ));
+            }
+            // depthwise < dense exactly when the dense channel cross
+            // product exceeds the surviving channel count
+            let dense_macs = dense.macs_at(case.cin, case.cout);
+            if (case.cin as u64 * case.cout as u64) > channels
+                && dw.macs_at(case.cin, case.cout) >= dense_macs
+            {
+                return Err(format!(
+                    "depthwise {} not below dense {dense_macs}",
+                    dw.macs_at(case.cin, case.cout)
+                ));
+            }
+            // symmetry: only the surviving count matters
+            if dw.macs_at(case.cin, case.cout) != dw.macs_at(case.cout, case.cin) {
+                return Err("macs_at not symmetric in (cin, cout)".into());
+            }
+            Ok(())
+        },
+    );
+}
