@@ -171,11 +171,21 @@ impl CostModel {
                 }
             }
             QuantMode::Mix { w_bits, a_bits } => {
+                // bit-serial popcount GEMM: one binary GEMM per bit-plane
+                // pair.  Unreachable for depthwise layers — the operator
+                // constraints exclude them and `effective_mode` falls back
+                // to Int8 — so assert the invariant rather than letting the
+                // `dw` derating silently absorb a future fallback change
+                // (the factor still applies in release builds as a
+                // belt-and-braces derating should this ever be reached).
+                debug_assert!(
+                    !l.depthwise,
+                    "{}: depthwise layer reached the bit-serial cost arm — \
+                     effective_mode should have folded Mix onto Int8",
+                    l.name
+                );
                 let wb = w_bits as f64;
                 let ab = a_bits as f64;
-                // bit-serial popcount GEMM: one binary GEMM per bit-plane
-                // pair (never reached for depthwise layers — the operator
-                // constraints exclude them and `effective_mode` falls back)
                 let ws = self.working_set(l, eff_cin, eff_cout, (wb + ab) / 16.0);
                 let eff = dw * self.efficiency(ws, l.out_spatial, eff_cout);
                 c.compute = macs * wb * ab / (t.binary_macs_per_sec * eff);
