@@ -44,6 +44,10 @@ impl QuantMode {
         matches!(self, QuantMode::Mix { .. })
     }
 
+    /// Number of distinct [`QuantMode::class_id`] values — the size of any
+    /// array indexed by mode class (hybrid calibration, profiler fallback).
+    pub const CLASSES: usize = 3;
+
     /// Stable discriminant of the mode *class* (FP32 / INT8 / MIX): shared
     /// by the simulator's measurement-noise streams, the profiler's cache
     /// keys, and the hybrid calibration classes, so those keyed structures

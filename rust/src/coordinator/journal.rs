@@ -1,0 +1,340 @@
+//! Durable write-ahead job journal for `galen serve`.
+//!
+//! Every job lifecycle transition is appended as one JSONL line and
+//! fsync'd before the service acts on it, so a crashed serve process can
+//! be restarted with `--resume-jobs`: [`replay_journal`] folds the journal
+//! into the last known state of every job, terminal jobs are restored as
+//! status records, and non-terminal jobs are re-queued — resuming from
+//! their per-episode checkpoints when present, or restarting from scratch
+//! (searches are deterministic, so either path reproduces the
+//! uninterrupted result bit for bit).
+//!
+//! Entry shapes (one compact JSON object per line, append-only):
+//!
+//! ```text
+//! {"schema_version":1,"kind":"galen_serve_journal","job":"job-0","event":"submitted","config":{...}}
+//! {"schema_version":1,"kind":"galen_serve_journal","job":"job-0","event":"status","status":"running"}
+//! {"schema_version":1,"kind":"galen_serve_journal","job":"job-0","event":"status","status":"failed","error":"..."}
+//! {"schema_version":1,"kind":"galen_serve_journal","job":"job-0","event":"resumed"}
+//! ```
+//!
+//! `submitted` carries the full search configuration in the loss-free
+//! checkpoint encoding (`SearchConfig::to_checkpoint_json`), so replay
+//! needs nothing but the journal.  Replay is strict about interior
+//! corruption (a clean, actionable error) but tolerates an unparseable
+//! *final* line: a crash mid-append is exactly the failure this file
+//! exists to survive.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use super::service::JobStatus;
+use crate::search::SearchConfig;
+use crate::util::json::Json;
+
+/// Bump when the journal line layout changes; mismatched journals are
+/// rejected at replay (never mis-parsed).
+pub const SERVE_JOURNAL_SCHEMA_VERSION: usize = 1;
+
+/// The `kind` tag of every journal line.
+const JOURNAL_KIND: &str = "galen_serve_journal";
+
+/// File name of the journal inside the serve results directory.
+pub const SERVE_JOURNAL_FILE: &str = "serve_journal.jsonl";
+
+/// Append-side handle: one open file, every record fsync'd before the
+/// append returns (write-ahead semantics — the journal always leads the
+/// in-memory state).
+#[derive(Debug)]
+pub struct ServeJournal {
+    path: PathBuf,
+    file: std::fs::File,
+}
+
+impl ServeJournal {
+    /// Open (or create) `dir/serve_journal.jsonl` for appending.
+    pub fn open_append(dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("creating journal dir {}: {e}", dir.display()))?;
+        let path = dir.join(SERVE_JOURNAL_FILE);
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| anyhow::anyhow!("opening serve journal {}: {e}", path.display()))?;
+        Ok(Self { path, file })
+    }
+
+    /// Where this journal lives.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Record a job accepted via `submit`, with its full configuration.
+    pub fn record_submitted(&mut self, job: &str, cfg: &SearchConfig) -> Result<()> {
+        self.append(job, "submitted", vec![("config", cfg.to_checkpoint_json())])
+    }
+
+    /// Record a status transition (running / done / failed / cancelled).
+    pub fn record_status(
+        &mut self,
+        job: &str,
+        status: JobStatus,
+        error: Option<&str>,
+    ) -> Result<()> {
+        let mut fields = vec![("status", Json::str(status.to_string()))];
+        if let Some(e) = error {
+            fields.push(("error", Json::str(e)));
+        }
+        self.append(job, "status", fields)
+    }
+
+    /// Record that a restarted service re-queued this interrupted job.
+    pub fn record_resumed(&mut self, job: &str) -> Result<()> {
+        self.append(job, "resumed", Vec::new())
+    }
+
+    fn append(&mut self, job: &str, event: &str, fields: Vec<(&str, Json)>) -> Result<()> {
+        use std::io::Write as _;
+        let mut all = vec![
+            ("schema_version", Json::num(SERVE_JOURNAL_SCHEMA_VERSION as f64)),
+            ("kind", Json::str(JOURNAL_KIND)),
+            ("job", Json::str(job)),
+            ("event", Json::str(event)),
+        ];
+        all.extend(fields);
+        let mut line = Json::obj(all).dump();
+        line.push('\n');
+        self.file
+            .write_all(line.as_bytes())
+            .map_err(|e| anyhow::anyhow!("appending to {}: {e}", self.path.display()))?;
+        // write-ahead: the record must be on disk before the transition is
+        // acted on, or a crash could lose a job the client was promised
+        self.file
+            .sync_data()
+            .map_err(|e| anyhow::anyhow!("syncing {}: {e}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+/// A job reconstructed from the journal: last status wins.
+#[derive(Clone, Debug)]
+pub struct ReplayedJob {
+    /// The job id (`job-<index>`, dense and ordered by submission).
+    pub id: String,
+    /// The submitted search configuration (checkpoint encoding, loss-free).
+    pub cfg: SearchConfig,
+    /// Last journaled status.
+    pub status: JobStatus,
+    /// Last journaled error payload, if the job failed.
+    pub error: Option<String>,
+}
+
+/// Fold `dir`'s journal into per-job final states (empty when no journal
+/// exists).  Interior corruption is a clean error naming the line; an
+/// unparseable final line is tolerated with a warning (crash mid-append).
+pub fn replay_journal(dir: &Path) -> Result<Vec<ReplayedJob>> {
+    let path = dir.join(SERVE_JOURNAL_FILE);
+    if !path.exists() {
+        return Ok(Vec::new());
+    }
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("reading serve journal {}: {e}", path.display()))?;
+    let lines: Vec<(usize, &str)> = text
+        .lines()
+        .enumerate()
+        .filter(|(_, l)| !l.trim().is_empty())
+        .collect();
+    let mut jobs: Vec<ReplayedJob> = Vec::new();
+    for (pos, (lineno, line)) in lines.iter().enumerate() {
+        let entry = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) if pos + 1 == lines.len() => {
+                log::warn!(
+                    "serve journal {}: ignoring truncated final line {} ({e})",
+                    path.display(),
+                    lineno + 1
+                );
+                break;
+            }
+            Err(e) => anyhow::bail!(
+                "serve journal {} is corrupt at line {}: {e} — move the file aside to \
+                 start fresh (interrupted jobs will be lost)",
+                path.display(),
+                lineno + 1
+            ),
+        };
+        apply(&mut jobs, &entry).map_err(|e| {
+            e.context(format!("serve journal {} line {}", path.display(), lineno + 1))
+        })?;
+    }
+    Ok(jobs)
+}
+
+fn apply(jobs: &mut Vec<ReplayedJob>, entry: &Json) -> Result<()> {
+    anyhow::ensure!(
+        entry.req_str("kind")? == JOURNAL_KIND,
+        "not a serve journal entry"
+    );
+    anyhow::ensure!(
+        entry.req_usize("schema_version")? == SERVE_JOURNAL_SCHEMA_VERSION,
+        "journal schema version mismatch"
+    );
+    let job_id = entry.req_str("job")?;
+    match entry.req_str("event")? {
+        "submitted" => {
+            let expect = format!("job-{}", jobs.len());
+            anyhow::ensure!(
+                job_id == expect,
+                "expected submission of '{expect}', found '{job_id}' \
+                 (job ids must be dense and in submission order)"
+            );
+            jobs.push(ReplayedJob {
+                id: job_id.to_string(),
+                cfg: SearchConfig::from_checkpoint_json(entry.req("config")?)?,
+                status: JobStatus::Queued,
+                error: None,
+            });
+        }
+        "status" => {
+            let job = find(jobs, job_id)?;
+            job.status = entry.req_str("status")?.parse()?;
+            job.error = entry.get("error").and_then(Json::as_str).map(str::to_string);
+        }
+        "resumed" => {
+            // a later session re-queued the job; its status starts over
+            let job = find(jobs, job_id)?;
+            job.status = JobStatus::Queued;
+            job.error = None;
+        }
+        other => anyhow::bail!("unknown journal event '{other}'"),
+    }
+    Ok(())
+}
+
+fn find<'a>(jobs: &'a mut [ReplayedJob], id: &str) -> Result<&'a mut ReplayedJob> {
+    jobs.iter_mut()
+        .find(|j| j.id == id)
+        .ok_or_else(|| anyhow::anyhow!("event for unknown job '{id}' (no submission seen)"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::AgentKind;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("galen_journal_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn cfg() -> SearchConfig {
+        SearchConfig::fast(AgentKind::Joint, 0.5)
+    }
+
+    #[test]
+    fn roundtrip_last_status_wins() {
+        let dir = tmp("roundtrip");
+        {
+            let mut j = ServeJournal::open_append(&dir).unwrap();
+            j.record_submitted("job-0", &cfg()).unwrap();
+            j.record_status("job-0", JobStatus::Running, None).unwrap();
+            j.record_submitted("job-1", &cfg()).unwrap();
+            j.record_status("job-0", JobStatus::Done, None).unwrap();
+            j.record_status("job-1", JobStatus::Failed, Some("boom")).unwrap();
+        }
+        let jobs = replay_journal(&dir).unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].status, JobStatus::Done);
+        assert_eq!(jobs[0].error, None);
+        assert_eq!(jobs[1].status, JobStatus::Failed);
+        assert_eq!(jobs[1].error.as_deref(), Some("boom"));
+        assert_eq!(
+            jobs[0].cfg.to_checkpoint_json().dump(),
+            cfg().to_checkpoint_json().dump(),
+            "the submitted config must survive replay loss-free"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_journal_replays_empty() {
+        assert!(replay_journal(&tmp("missing")).unwrap().is_empty());
+    }
+
+    #[test]
+    fn interrupted_job_replays_as_non_terminal() {
+        let dir = tmp("interrupted");
+        {
+            let mut j = ServeJournal::open_append(&dir).unwrap();
+            j.record_submitted("job-0", &cfg()).unwrap();
+            j.record_status("job-0", JobStatus::Running, None).unwrap();
+        }
+        let jobs = replay_journal(&dir).unwrap();
+        assert!(!jobs[0].status.is_terminal(), "crashed mid-run: must be resumable");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_final_line_is_tolerated() {
+        let dir = tmp("truncated");
+        {
+            let mut j = ServeJournal::open_append(&dir).unwrap();
+            j.record_submitted("job-0", &cfg()).unwrap();
+            j.record_status("job-0", JobStatus::Running, None).unwrap();
+        }
+        // simulate a crash mid-append: half a status line at the tail
+        let path = dir.join(SERVE_JOURNAL_FILE);
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str(r#"{"schema_version":1,"kind":"galen_serve_jour"#);
+        std::fs::write(&path, text).unwrap();
+        let jobs = replay_journal(&dir).unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].status, JobStatus::Running);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn interior_corruption_is_a_clean_error() {
+        let dir = tmp("interior");
+        {
+            let mut j = ServeJournal::open_append(&dir).unwrap();
+            j.record_submitted("job-0", &cfg()).unwrap();
+        }
+        let path = dir.join(SERVE_JOURNAL_FILE);
+        let mut text = "not json at all\n".to_string();
+        text.push_str(&std::fs::read_to_string(&path).unwrap());
+        std::fs::write(&path, text).unwrap();
+        let err = format!("{:#}", replay_journal(&dir).unwrap_err());
+        assert!(err.contains("line 1"), "{err}");
+        assert!(err.contains("corrupt"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn schema_and_order_violations_are_rejected() {
+        let dir = tmp("violations");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(SERVE_JOURNAL_FILE);
+
+        std::fs::write(
+            &path,
+            "{\"schema_version\":999,\"kind\":\"galen_serve_journal\",\"job\":\"job-0\",\"event\":\"resumed\"}\n",
+        )
+        .unwrap();
+        let err = format!("{:#}", replay_journal(&dir).unwrap_err());
+        assert!(err.contains("schema"), "{err}");
+
+        // a status line for a job that was never submitted
+        std::fs::write(
+            &path,
+            "{\"schema_version\":1,\"kind\":\"galen_serve_journal\",\"job\":\"job-3\",\"event\":\"status\",\"status\":\"done\"}\nx\n",
+        )
+        .unwrap();
+        let err = format!("{:#}", replay_journal(&dir).unwrap_err());
+        assert!(err.contains("unknown job"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -10,12 +10,18 @@
 //! * `serve` — the long-running JSONL job service (`galen serve`):
 //!   submit/status/events/result/cancel over stdin/stdout, many concurrent
 //!   search jobs multiplexed over a worker pool with shared latency caches.
+//! * `journal` — durable write-ahead job journal behind
+//!   `galen serve --resume-jobs` crash recovery.
 //! * result records are serialized to `results/*.json` for EXPERIMENTS.md.
 
+mod journal;
 mod report;
 mod service;
 mod session;
 
+pub use journal::{
+    replay_journal, ReplayedJob, ServeJournal, SERVE_JOURNAL_FILE, SERVE_JOURNAL_SCHEMA_VERSION,
+};
 pub use report::{policy_json, policy_report, table1_header, ExperimentRecord};
 pub use service::{serve, JobStatus, ServeOptions, ServeStats, SERVE_PROTOCOL_VERSION};
 pub use session::{Backend, Session, SessionOptions};

@@ -25,6 +25,27 @@
 //! [`LatencyFactory`], so concurrent jobs reuse each other's latency-cache
 //! entries exactly like parallel sweep workers do.
 //!
+//! # Failure model
+//!
+//! A worker is a fault boundary: each job runs under `catch_unwind`, so a
+//! panic marks only its own job `failed` (with the panic message as the
+//! error payload) while the service keeps accepting and completing other
+//! jobs.  All service locks go through the poison-recovering
+//! [`crate::util::sync`] helpers for the same reason.
+//!
+//! With a journal directory configured ([`ServeOptions::journal_dir`]),
+//! every job transition is appended write-ahead to a durable JSONL journal
+//! (see [`super::journal`]) and each job checkpoints its driver state every
+//! [`ServeOptions::checkpoint_every`] episodes.  After a crash,
+//! `galen serve --resume-jobs` replays the journal: terminal jobs are
+//! restored as status records (like forgotten jobs — status and error
+//! survive, events and outcomes do not), interrupted jobs are re-queued and
+//! resume from their last checkpoint — or restart from episode 0 when no
+//! usable checkpoint exists.  Both paths reproduce the uninterrupted run's
+//! results bit for bit, because searches are deterministic functions of
+//! their seed.  An unusable (truncated, corrupt, mismatched) checkpoint is
+//! logged and discarded, never fatal.
+//!
 //! Accuracy is always the deterministic synthetic proxy
 //! ([`crate::search::SimEvaluator`]): the PJRT evaluator is not
 //! thread-safe, and stdout is the protocol channel.  Validate chosen
@@ -33,20 +54,27 @@
 use std::collections::VecDeque;
 use std::fmt;
 use std::io::{BufRead, Write};
-use std::path::PathBuf;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::agent::mapper_for;
+use crate::coordinator::journal::{replay_journal, ServeJournal, SERVE_JOURNAL_FILE};
 use crate::coordinator::ExperimentRecord;
 use crate::eval::SensitivityTable;
 use crate::model::ModelIr;
 use crate::search::{
-    LatencyFactory, SearchBuilder, SearchConfig, SearchEvent, SearchOutcome, SimEvaluator,
+    validate_checkpoint, LatencyFactory, SearchBuilder, SearchConfig, SearchDriver, SearchEvent,
+    SearchOutcome, SimEvaluator,
 };
+use crate::testing::FaultPlan;
 use crate::util::json::Json;
+use crate::util::retry::Backoff;
+use crate::util::sync;
 
 /// Version of the JSONL protocol (the `hello`-less handshake: clients can
 /// check it via `list` responses).
@@ -87,8 +115,26 @@ impl fmt::Display for JobStatus {
     }
 }
 
-/// Knobs of one [`serve`] run.  The default runs on all cores and keeps
-/// results in memory only.
+/// Inverse of the [`fmt::Display`] labels (journal replay).
+impl std::str::FromStr for JobStatus {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "queued" => Self::Queued,
+            "running" => Self::Running,
+            "done" => Self::Done,
+            "failed" => Self::Failed,
+            "cancelled" => Self::Cancelled,
+            other => anyhow::bail!(
+                "unknown job status '{other}' (queued|running|done|failed|cancelled)"
+            ),
+        })
+    }
+}
+
+/// Knobs of one [`serve`] run.  The default runs on all cores, keeps
+/// results in memory only, and journals nothing.
 #[derive(Clone, Debug, Default)]
 pub struct ServeOptions {
     /// Worker threads driving searches (0 = all cores).
@@ -98,19 +144,45 @@ pub struct ServeOptions {
     /// Default search seed for submitted jobs (None keeps the presets'
     /// built-in seed); a spec's `config.seed` override always wins.
     pub base_seed: Option<u64>,
+    /// Where the durable job journal and per-job checkpoints live (None =
+    /// no durability: a crash loses in-flight jobs).
+    pub journal_dir: Option<PathBuf>,
+    /// Replay the journal on startup and re-queue interrupted jobs
+    /// (requires `journal_dir`).
+    pub resume_jobs: bool,
+    /// Checkpoint each running job's driver every N episodes (0 = never;
+    /// effective only with `journal_dir`).
+    pub checkpoint_every: usize,
+    /// Armed fault injections (tests; the CLI wires `GALEN_FAULTS`).
+    pub faults: FaultPlan,
 }
 
 /// Counters the serve loop reports when it exits.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ServeStats {
-    /// Jobs accepted via `submit`.
+    /// Jobs accepted via `submit` this session.
     pub submitted: usize,
+    /// Interrupted jobs re-queued from the journal by `--resume-jobs`.
+    pub resumed: usize,
     /// Jobs that finished with an outcome.
     pub completed: usize,
     /// Jobs that errored.
     pub failed: usize,
     /// Jobs cancelled before completion.
     pub cancelled: usize,
+}
+
+/// How a job entered this serve session — determines what the exit stats
+/// count (jobs already terminal in a replayed journal are bookkeeping, not
+/// this session's work).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum JobOrigin {
+    /// Accepted via `submit` this session.
+    Submitted,
+    /// Re-queued from the journal by `--resume-jobs`.
+    Resumed,
+    /// Replayed from the journal already terminal: a status record only.
+    Restored,
 }
 
 /// Mutable job state behind the per-job mutex.
@@ -128,6 +200,7 @@ struct JobInner {
 struct Job {
     id: String,
     cfg: SearchConfig,
+    origin: JobOrigin,
     inner: Mutex<JobInner>,
     /// Signalled on every terminal transition (`result` with `wait` parks
     /// here).
@@ -136,7 +209,7 @@ struct Job {
 
 impl Job {
     fn terminal_transition(&self, f: impl FnOnce(&mut JobInner)) {
-        let mut st = self.inner.lock().unwrap();
+        let mut st = sync::lock(&self.inner);
         f(&mut st);
         drop(st);
         self.done.notify_all();
@@ -151,12 +224,22 @@ struct ServiceState<'a> {
     variant: String,
     results_dir: Option<PathBuf>,
     base_seed: Option<u64>,
+    journal: Option<Mutex<ServeJournal>>,
+    checkpoint_dir: Option<PathBuf>,
+    checkpoint_every: usize,
+    faults: FaultPlan,
     jobs: Mutex<Vec<Arc<Job>>>,
     queue: Mutex<VecDeque<usize>>,
     /// Signalled on submit and shutdown; idle workers park here instead of
     /// polling (a serve process is long-running — zero idle cost matters).
     queue_cv: Condvar,
     shutdown: AtomicBool,
+}
+
+impl ServiceState<'_> {
+    fn checkpoint_path(&self, id: &str) -> Option<PathBuf> {
+        self.checkpoint_dir.as_ref().map(|d| d.join(format!("{id}.json")))
+    }
 }
 
 /// Run the job service until `input` is exhausted (or a `shutdown` op),
@@ -179,6 +262,53 @@ pub fn serve<R: BufRead, W: Write>(
     } else {
         opts.workers
     };
+    anyhow::ensure!(
+        !opts.resume_jobs || opts.journal_dir.is_some(),
+        "resuming jobs needs a journal: configure a results directory \
+         (the journal lives alongside the result records)"
+    );
+    let mut initial_jobs: Vec<Arc<Job>> = Vec::new();
+    let mut initial_queue: VecDeque<usize> = VecDeque::new();
+    let mut journal = None;
+    if let Some(dir) = &opts.journal_dir {
+        if opts.resume_jobs {
+            for (index, rj) in replay_journal(dir)?.into_iter().enumerate() {
+                let terminal = rj.status.is_terminal();
+                initial_jobs.push(Arc::new(Job {
+                    id: rj.id,
+                    cfg: rj.cfg,
+                    origin: if terminal { JobOrigin::Restored } else { JobOrigin::Resumed },
+                    inner: Mutex::new(JobInner {
+                        status: if terminal { rj.status } else { JobStatus::Queued },
+                        episode: 0,
+                        cancel: false,
+                        events: Vec::new(),
+                        outcome: None,
+                        error: rj.error,
+                        artifact: None,
+                    }),
+                    done: Condvar::new(),
+                }));
+                if !terminal {
+                    initial_queue.push_back(index);
+                }
+            }
+        } else {
+            refuse_or_clear_stale_journal(dir)?;
+        }
+        let mut j = ServeJournal::open_append(dir)?;
+        for &index in &initial_queue {
+            j.record_resumed(&initial_jobs[index].id)?;
+        }
+        journal = Some(Mutex::new(j));
+    }
+    if !initial_jobs.is_empty() {
+        log::info!(
+            "serve: journal replayed {} job(s), {} re-queued",
+            initial_jobs.len(),
+            initial_queue.len()
+        );
+    }
     let svc = ServiceState {
         ir,
         sens,
@@ -186,8 +316,12 @@ pub fn serve<R: BufRead, W: Write>(
         variant: variant.to_string(),
         results_dir: opts.results_dir.clone(),
         base_seed: opts.base_seed,
-        jobs: Mutex::new(Vec::new()),
-        queue: Mutex::new(VecDeque::new()),
+        journal,
+        checkpoint_dir: opts.journal_dir.as_ref().map(|d| d.join("checkpoints")),
+        checkpoint_every: opts.checkpoint_every,
+        faults: opts.faults.clone(),
+        jobs: Mutex::new(initial_jobs),
+        queue: Mutex::new(initial_queue),
         queue_cv: Condvar::new(),
         shutdown: AtomicBool::new(false),
     };
@@ -201,16 +335,21 @@ pub fn serve<R: BufRead, W: Write>(
         // flag is published under the queue lock so a worker between its
         // shutdown check and its wait cannot miss the wakeup.
         svc.shutdown.store(true, Ordering::SeqCst);
-        let _queue = svc.queue.lock().unwrap();
+        let _queue = sync::lock(&svc.queue);
         svc.queue_cv.notify_all();
         drop(_queue);
         r
     });
     protocol_result?;
     let mut stats = ServeStats::default();
-    for job in svc.jobs.lock().unwrap().iter() {
-        stats.submitted += 1;
-        match job.inner.lock().unwrap().status {
+    for job in sync::lock(&svc.jobs).iter() {
+        match job.origin {
+            // already terminal before this session: bookkeeping, not work
+            JobOrigin::Restored => continue,
+            JobOrigin::Resumed => stats.resumed += 1,
+            JobOrigin::Submitted => stats.submitted += 1,
+        }
+        match sync::lock(&job.inner).status {
             JobStatus::Done => stats.completed += 1,
             JobStatus::Failed => stats.failed += 1,
             JobStatus::Cancelled => stats.cancelled += 1,
@@ -219,13 +358,59 @@ pub fn serve<R: BufRead, W: Write>(
         }
     }
     log::info!(
-        "serve: exit — {} submitted, {} done, {} failed, {} cancelled",
+        "serve: exit — {} submitted, {} resumed, {} done, {} failed, {} cancelled",
         stats.submitted,
+        stats.resumed,
         stats.completed,
         stats.failed,
         stats.cancelled
     );
     Ok(stats)
+}
+
+/// A journal from a previous session, found while starting *without*
+/// `--resume-jobs`: refuse if it records interrupted (recoverable) jobs —
+/// never silently abandon work a client was promised — and otherwise clear
+/// it so this session starts fresh.
+fn refuse_or_clear_stale_journal(dir: &Path) -> Result<()> {
+    let path = dir.join(SERVE_JOURNAL_FILE);
+    if !path.exists() {
+        return Ok(());
+    }
+    let replayed = replay_journal(dir)?;
+    let interrupted: Vec<&str> = replayed
+        .iter()
+        .filter(|j| !j.status.is_terminal())
+        .map(|j| j.id.as_str())
+        .collect();
+    anyhow::ensure!(
+        interrupted.is_empty(),
+        "serve journal {} records {} interrupted job(s) [{}] — restart with \
+         --resume-jobs to recover them, or delete the journal to abandon them",
+        path.display(),
+        interrupted.len(),
+        interrupted.join(", ")
+    );
+    // every journaled job finished: the previous session ended cleanly
+    std::fs::remove_file(&path)
+        .map_err(|e| anyhow::anyhow!("clearing completed serve journal {}: {e}", path.display()))?;
+    let checkpoints = dir.join("checkpoints");
+    if checkpoints.exists() {
+        // stale checkpoints belong to the cleared journal's job ids
+        let _ = std::fs::remove_dir_all(&checkpoints);
+    }
+    Ok(())
+}
+
+/// Append a status transition to the journal, if one is configured.  A
+/// journal write failure degrades durability, not availability: it is
+/// logged and the job proceeds.
+fn journal_status(svc: &ServiceState<'_>, id: &str, status: JobStatus, error: Option<&str>) {
+    if let Some(journal) = &svc.journal {
+        if let Err(e) = sync::lock(journal).record_status(id, status, error) {
+            log::warn!("serve: {id}: journal write failed ({e:#})");
+        }
+    }
 }
 
 /// Read requests line by line, answer each with exactly one response line.
@@ -362,12 +547,20 @@ fn op_submit(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
         "service is shutting down"
     );
     let cfg = config_from_spec(req.req("spec")?, svc.base_seed, &svc.variant)?;
-    let mut jobs = svc.jobs.lock().unwrap();
+    let mut jobs = sync::lock(&svc.jobs);
     let index = jobs.len();
     let id = format!("job-{index}");
+    // write-ahead, under the jobs lock: the journal's submission order is
+    // the id order, and a job the journal cannot record is not accepted
+    if let Some(journal) = &svc.journal {
+        sync::lock(journal)
+            .record_submitted(&id, &cfg)
+            .map_err(|e| e.context("journaling submit (job not accepted)"))?;
+    }
     jobs.push(Arc::new(Job {
         id: id.clone(),
         cfg,
+        origin: JobOrigin::Submitted,
         inner: Mutex::new(JobInner {
             status: JobStatus::Queued,
             episode: 0,
@@ -380,7 +573,7 @@ fn op_submit(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
         done: Condvar::new(),
     }));
     drop(jobs);
-    let mut queue = svc.queue.lock().unwrap();
+    let mut queue = sync::lock(&svc.queue);
     queue.push_back(index);
     svc.queue_cv.notify_one();
     drop(queue);
@@ -397,13 +590,13 @@ fn find_job(svc: &ServiceState<'_>, req: &Json) -> Result<Arc<Job>> {
     let id = req.req_str("job")?;
     let index: Option<usize> = id.strip_prefix("job-").and_then(|n| n.parse().ok());
     index
-        .and_then(|i| svc.jobs.lock().unwrap().get(i).cloned())
+        .and_then(|i| sync::lock(&svc.jobs).get(i).cloned())
         .ok_or_else(|| anyhow::anyhow!("unknown job '{id}'"))
 }
 
 fn op_status(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
     let job = find_job(svc, req)?;
-    let st = job.inner.lock().unwrap();
+    let st = sync::lock(&job.inner);
     let mut fields = vec![
         ("ok", Json::Bool(true)),
         ("job", Json::str(job.id.clone())),
@@ -420,7 +613,7 @@ fn op_status(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
 fn op_events(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
     let job = find_job(svc, req)?;
     let since = req.get("since").and_then(Json::as_usize).unwrap_or(0);
-    let st = job.inner.lock().unwrap();
+    let st = sync::lock(&job.inner);
     let from = since.min(st.events.len());
     Ok(Json::obj(vec![
         ("ok", Json::Bool(true)),
@@ -433,10 +626,10 @@ fn op_events(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
 fn op_result(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
     let job = find_job(svc, req)?;
     let wait = req.get("wait").and_then(Json::as_bool).unwrap_or(false);
-    let mut st = job.inner.lock().unwrap();
+    let mut st = sync::lock(&job.inner);
     if wait {
         while !st.status.is_terminal() {
-            st = job.done.wait(st).unwrap();
+            st = sync::wait(&job.done, st);
         }
     }
     let mut fields = vec![
@@ -460,7 +653,7 @@ fn op_result(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
 fn op_cancel(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
     let job = find_job(svc, req)?;
     let state = {
-        let mut st = job.inner.lock().unwrap();
+        let mut st = sync::lock(&job.inner);
         st.cancel = true;
         if st.status == JobStatus::Queued {
             // never reached a worker: terminal immediately
@@ -469,6 +662,9 @@ fn op_cancel(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
         }
         st.status
     };
+    if state == JobStatus::Cancelled {
+        journal_status(svc, &job.id, JobStatus::Cancelled, None);
+    }
     Ok(Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("job", Json::str(job.id.clone())),
@@ -483,7 +679,7 @@ fn op_cancel(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
 /// retained for the process lifetime.
 fn op_forget(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
     let job = find_job(svc, req)?;
-    let mut st = job.inner.lock().unwrap();
+    let mut st = sync::lock(&job.inner);
     anyhow::ensure!(
         st.status.is_terminal(),
         "job '{}' is {} — only finished jobs can be forgotten",
@@ -500,11 +696,11 @@ fn op_forget(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
 }
 
 fn op_list(svc: &ServiceState<'_>) -> Result<Json> {
-    let jobs = svc.jobs.lock().unwrap();
+    let jobs = sync::lock(&svc.jobs);
     let rows = jobs
         .iter()
         .map(|job| {
-            let st = job.inner.lock().unwrap();
+            let st = sync::lock(&job.inner);
             Json::obj(vec![
                 ("job", Json::str(job.id.clone())),
                 ("agent", Json::str(job.cfg.agent.to_string())),
@@ -527,58 +723,158 @@ fn op_list(svc: &ServiceState<'_>) -> Result<Json> {
 /// right after submitting.  Idle workers park on the queue condvar (no
 /// polling); submit and shutdown wake them.
 fn worker_loop(svc: &ServiceState<'_>) {
-    let mut queue = svc.queue.lock().unwrap();
+    let mut queue = sync::lock(&svc.queue);
     loop {
         if let Some(index) = queue.pop_front() {
-            let job = svc.jobs.lock().unwrap()[index].clone();
+            let job = sync::lock(&svc.jobs)[index].clone();
             drop(queue);
             run_job(svc, &job);
-            queue = svc.queue.lock().unwrap();
+            queue = sync::lock(&svc.queue);
             continue;
         }
         if svc.shutdown.load(Ordering::SeqCst) {
             return;
         }
-        queue = svc.queue_cv.wait(queue).unwrap();
+        queue = sync::wait(&svc.queue_cv, queue);
     }
 }
 
-/// Drive one job start to finish on this worker thread.
+/// The panic payload's message, for the failed job's error field.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string())
+}
+
+/// Drive one job start to finish on this worker thread.  The job is a
+/// fault boundary: a panic anywhere in the search marks this job `failed`
+/// and the worker moves on to the next one.
 fn run_job(svc: &ServiceState<'_>, job: &Arc<Job>) {
     {
-        let mut st = job.inner.lock().unwrap();
+        let mut st = sync::lock(&job.inner);
         if st.status.is_terminal() {
-            return; // cancelled while queued
+            return; // cancelled while queued (op_cancel journaled it)
         }
         if st.cancel {
             st.status = JobStatus::Cancelled;
             drop(st);
+            journal_status(svc, &job.id, JobStatus::Cancelled, None);
             job.done.notify_all();
             return;
         }
         st.status = JobStatus::Running;
     }
+    journal_status(svc, &job.id, JobStatus::Running, None);
     log::info!("serve: {} started ({} c={})", job.id, job.cfg.agent, job.cfg.target);
-    match drive_job(svc, job) {
-        Ok(Some((outcome, artifact))) => job.terminal_transition(|st| {
-            st.outcome = Some(outcome);
-            st.artifact = artifact;
-            st.status = JobStatus::Done;
-        }),
-        Ok(None) => job.terminal_transition(|st| st.status = JobStatus::Cancelled),
-        Err(e) => {
-            log::warn!("serve: {} failed: {e:#}", job.id);
+    let result = match catch_unwind(AssertUnwindSafe(|| drive_job(svc, job))) {
+        Ok(r) => r,
+        Err(payload) => Err(anyhow::anyhow!(
+            "worker panicked: {}",
+            panic_message(&*payload)
+        )),
+    };
+    match result {
+        Ok(Some((outcome, artifact))) => {
+            journal_status(svc, &job.id, JobStatus::Done, None);
             job.terminal_transition(|st| {
-                st.error = Some(format!("{e:#}"));
+                st.outcome = Some(outcome);
+                st.artifact = artifact;
+                st.status = JobStatus::Done;
+            });
+        }
+        Ok(None) => {
+            journal_status(svc, &job.id, JobStatus::Cancelled, None);
+            job.terminal_transition(|st| st.status = JobStatus::Cancelled);
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            log::warn!("serve: {} failed: {msg}", job.id);
+            journal_status(svc, &job.id, JobStatus::Failed, Some(&msg));
+            job.terminal_transition(|st| {
+                st.error = Some(msg);
                 st.status = JobStatus::Failed;
             });
         }
     }
 }
 
+/// Load a resumed job's checkpoint leniently: any problem — missing file,
+/// unreadable, garbage JSON, schema/config mismatch — is logged and the
+/// job restarts from episode 0 (determinism makes both paths reproduce the
+/// same result; a bad checkpoint must never strand a recoverable job).
+fn load_checkpoint(svc: &ServiceState<'_>, job: &Job, path: &Path) -> Option<Json> {
+    if !path.exists() {
+        log::info!(
+            "serve: {}: no checkpoint at {}; restarting from episode 0",
+            job.id,
+            path.display()
+        );
+        return None;
+    }
+    let attempt = (|| -> Result<Json> {
+        let mut text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        svc.faults.corrupt("checkpoint-read", &mut text)?;
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        validate_checkpoint(&doc, &job.cfg)?;
+        Ok(doc)
+    })();
+    match attempt {
+        Ok(doc) => Some(doc),
+        Err(e) => {
+            log::warn!(
+                "serve: {}: unusable checkpoint ({e:#}); restarting from episode 0",
+                job.id
+            );
+            None
+        }
+    }
+}
+
+/// Write an episode-aligned checkpoint if one is due, retrying transient
+/// write failures with deterministic backoff.  A checkpoint that still
+/// fails is logged and skipped: it degrades crash recovery (resume falls
+/// back to an older checkpoint or episode 0), never the job itself.
+fn maybe_checkpoint(svc: &ServiceState<'_>, job: &Job, driver: &SearchDriver<'_>) {
+    let Some(path) = svc.checkpoint_path(&job.id) else {
+        return;
+    };
+    if svc.checkpoint_every == 0 || driver.episode() % svc.checkpoint_every != 0 {
+        return;
+    }
+    let doc = match driver.save_checkpoint() {
+        Ok(doc) => doc,
+        Err(e) => {
+            log::warn!("serve: {}: checkpoint build failed ({e:#})", job.id);
+            return;
+        }
+    };
+    let backoff = Backoff::new(
+        3,
+        Duration::from_millis(10),
+        Duration::from_millis(200),
+        job.cfg.seed,
+    );
+    let written = backoff.run(|_| {
+        svc.faults.trip("checkpoint-write")?;
+        doc.write_file_atomic(&path)
+    });
+    if let Err(e) = written {
+        log::warn!(
+            "serve: {}: checkpoint write to {} failed ({e:#}); continuing without",
+            job.id,
+            path.display()
+        );
+    }
+}
+
 /// The worker-side search: a driver run episode by episode, events teed
-/// into the job log, cancellation honored between episodes.  Returns
-/// `Ok(None)` when cancelled.
+/// into the job log, cancellation honored between episodes, driver state
+/// checkpointed at the configured cadence.  Returns `Ok(None)` when
+/// cancelled.
 fn drive_job(
     svc: &ServiceState<'_>,
     job: &Arc<Job>,
@@ -587,16 +883,39 @@ fn drive_job(
     // same per-search seed split as Session::search / sweep workers
     let mut provider = svc.factory.provider(job.cfg.seed ^ 0x5117, svc.ir)?;
     let mapper = mapper_for(job.cfg.agent);
-    let mut driver = SearchBuilder::from_config(job.cfg.clone()).build(
-        svc.ir,
-        svc.sens,
-        &evaluator,
-        provider.as_mut(),
-        mapper.as_ref(),
-    )?;
+    let resume_doc = match svc.checkpoint_path(&job.id) {
+        Some(path) if job.origin == JobOrigin::Resumed => load_checkpoint(svc, job, &path),
+        _ => None,
+    };
+    let mut driver = match &resume_doc {
+        Some(doc) => SearchDriver::resume_from(
+            doc,
+            svc.ir,
+            svc.sens,
+            &evaluator,
+            provider.as_mut(),
+            mapper.as_ref(),
+        )?,
+        None => SearchBuilder::from_config(job.cfg.clone()).build(
+            svc.ir,
+            svc.sens,
+            &evaluator,
+            provider.as_mut(),
+            mapper.as_ref(),
+        )?,
+    };
+    if driver.episode() > 0 {
+        log::info!(
+            "serve: {} resumed from checkpoint at episode {}/{}",
+            job.id,
+            driver.episode(),
+            job.cfg.episodes
+        );
+        sync::lock(&job.inner).episode = driver.episode();
+    }
     let sink = job.clone();
     driver.add_observer(move |event: &SearchEvent| {
-        let mut st = sink.inner.lock().unwrap();
+        let mut st = sync::lock(&sink.inner);
         if let SearchEvent::EpisodeFinished(s) = event {
             st.episode = s.episode + 1;
         }
@@ -610,13 +929,17 @@ fn drive_job(
         if driver.is_done() {
             break;
         }
-        if job.inner.lock().unwrap().cancel {
+        if sync::lock(&job.inner).cancel {
             cancelled_at = Some(driver.episode());
             break;
         }
         if driver.run_episode()?.is_none() {
             break;
         }
+        // fault site "episode": the worst-case crash window — the episode
+        // finished but its checkpoint has not been persisted yet
+        svc.faults.trip("episode")?;
+        maybe_checkpoint(svc, job, &driver);
     }
     let outcome = if cancelled_at.is_none() {
         Some(driver.outcome()?)
@@ -625,8 +948,12 @@ fn drive_job(
     };
     drop(driver);
     // persist even on the cancel path: measured/hybrid backends already
-    // paid for their kernel measurements, the next job should reuse them
-    provider.persist()?;
+    // paid for their kernel measurements, the next job should reuse them.
+    // A cache persist failure costs future cache hits, not this job's
+    // already-computed outcome.
+    if let Err(e) = provider.persist() {
+        log::warn!("serve: {}: latency cache persist failed ({e:#})", job.id);
+    }
     let Some(outcome) = outcome else {
         log::info!(
             "serve: {} cancelled at episode {}",

@@ -21,6 +21,17 @@
 //!   fingerprint, in the spirit of the RFC-0005 artifact format — a repeated
 //!   search against the same target re-measures nothing (asserted via
 //!   `stats().measured`).
+//!
+//! Measurement is fallible on real devices, so it degrades instead of
+//! failing: each configuration is retried with deterministic backoff
+//! (`retry_attempts`/`retry_base`), and a configuration whose measurement
+//! attempts are exhausted falls back to the *calibrated analytical* cost —
+//! the `CostModel` estimate scaled by the least-squares ratio fitted
+//! against this session's successful measurements (the same per-class fit
+//! `HybridProvider::calibrate` uses).  Degraded entries are flagged
+//! (`ProfileEntry::degraded`, counted by `stats().degraded`), excluded from
+//! the on-disk manifest (it must only contain real measurements), and
+//! surfaced in the provider's `backend()` provenance label.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -36,7 +47,9 @@ use crate::model::{Layer, LayerKind, ModelIr};
 use crate::tensor::depthwise::{conv_dw_f32, conv_dw_i8, QuantizedDwWeights};
 use crate::tensor::quant::{gemm_i8, gemm_i8_packed, QuantizedMat, QuantizedTensor};
 use crate::tensor::Mat;
+use crate::testing::FaultPlan;
 use crate::util::json::Json;
+use crate::util::retry::Backoff;
 use crate::util::rng::Pcg64;
 use crate::util::stats::median;
 use crate::util::Fnv1a;
@@ -62,6 +75,12 @@ pub struct ProfilerConfig {
     pub rel_mad_limit: f64,
     /// Re-measurement attempts before accepting the last (still-noisy) run.
     pub max_reruns: usize,
+    /// Attempts per configuration before degrading to the calibrated
+    /// analytical fallback (>= 1; transient failures are retried with
+    /// deterministic backoff).
+    pub retry_attempts: u32,
+    /// Base delay of the retry backoff (doubled per attempt, jittered).
+    pub retry_base: Duration,
 }
 
 impl Default for ProfilerConfig {
@@ -73,13 +92,17 @@ impl Default for ProfilerConfig {
             trim_frac: 0.2,
             rel_mad_limit: 0.10,
             max_reruns: 2,
+            retry_attempts: 3,
+            retry_base: Duration::from_millis(10),
         }
     }
 }
 
 impl ProfilerConfig {
     /// Minimal-cost settings for tests and CI smoke runs: single-shot
-    /// sampling, no re-run loop, near-zero batching floor.
+    /// sampling, no re-run loop, near-zero batching floor, near-zero retry
+    /// delays (the retry *count* stays, so fault-injection tests exercise
+    /// the same path the defaults run).
     pub fn fast() -> Self {
         Self {
             warmup_iters: 1,
@@ -88,6 +111,8 @@ impl ProfilerConfig {
             trim_frac: 0.34,
             rel_mad_limit: f64::INFINITY,
             max_reruns: 0,
+            retry_attempts: 3,
+            retry_base: Duration::from_micros(1),
         }
     }
 }
@@ -106,6 +131,10 @@ pub struct ProfileEntry {
     pub layer: String,
     /// Effective quantization mode label.
     pub mode: String,
+    /// True when measurement was exhausted and this value is the calibrated
+    /// analytical fallback, not a real measurement (never persisted to the
+    /// on-disk manifest).
+    pub degraded: bool,
 }
 
 /// Cache/measurement counters since construction.
@@ -119,6 +148,9 @@ pub struct ProfilerStats {
     pub loaded: usize,
     /// Total entries currently cached.
     pub entries: usize,
+    /// Configurations that exhausted measurement retries and fell back to
+    /// the calibrated analytical estimate.
+    pub degraded: u64,
 }
 
 /// Measures real kernel latencies per layer configuration, with an on-disk
@@ -137,9 +169,17 @@ pub struct MeasuredProfiler {
     /// Cross-worker measurement cache (sweep orchestrator); consulted after
     /// the local map, published to after every measurement.
     shared: Option<SharedProfileCache>,
+    /// Armed fault injections (tests; empty in production).
+    faults: FaultPlan,
+    /// Running least-squares sums of `sim/measured` ratios per mode class,
+    /// fitted from this session's successful measurements — the scale the
+    /// analytical fallback applies when measurement is exhausted.
+    calib_num: [f64; QuantMode::CLASSES],
+    calib_den: [f64; QuantMode::CLASSES],
     hits: u64,
     measured: u64,
     loaded: usize,
+    degraded: u64,
     dirty: bool,
 }
 
@@ -153,9 +193,13 @@ impl MeasuredProfiler {
             cache_path: None,
             entries: HashMap::new(),
             shared: None,
+            faults: FaultPlan::none(),
+            calib_num: [0.0; QuantMode::CLASSES],
+            calib_den: [0.0; QuantMode::CLASSES],
             hits: 0,
             measured: 0,
             loaded: 0,
+            degraded: 0,
             dirty: false,
         }
     }
@@ -166,6 +210,13 @@ impl MeasuredProfiler {
     /// is canonical for every worker.
     pub fn with_shared_cache(mut self, cache: SharedProfileCache) -> Self {
         self.shared = Some(cache);
+        self
+    }
+
+    /// Arm fault injections on the measurement and manifest-write paths
+    /// (site `measure` per attempt, `profile-write` per save).
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
         self
     }
 
@@ -212,6 +263,7 @@ impl MeasuredProfiler {
             measured: self.measured,
             loaded: self.loaded,
             entries: self.entries.len(),
+            degraded: self.degraded,
         }
     }
 
@@ -244,16 +296,7 @@ impl MeasuredProfiler {
             self.entries.insert(key, e);
             return latency_s;
         }
-        let (latency_s, mad_s, samples) = bench_layer(&self.cfg, l, eff_cin, kept, mode, key);
-        self.measured += 1;
-        self.dirty = true;
-        let mut entry = ProfileEntry {
-            latency_s,
-            mad_s,
-            samples,
-            layer: l.name.clone(),
-            mode: mode.label(),
-        };
+        let mut entry = self.bench_with_retry(l, eff_cin, kept, mode, key);
         if let Some(shared) = &self.shared {
             // first publication wins; a racing worker's entry supersedes ours
             entry = shared.insert_or_get(key, entry);
@@ -261,6 +304,84 @@ impl MeasuredProfiler {
         let latency_s = entry.latency_s;
         self.entries.insert(key, entry);
         latency_s
+    }
+
+    /// Measure one configuration, retrying transient failures with
+    /// deterministic backoff; when every attempt fails, degrade to the
+    /// calibrated analytical estimate instead of failing the search.
+    fn bench_with_retry(
+        &mut self,
+        l: &Layer,
+        eff_cin: usize,
+        kept: usize,
+        mode: QuantMode,
+        key: u64,
+    ) -> ProfileEntry {
+        let backoff = Backoff::new(
+            self.cfg.retry_attempts,
+            self.cfg.retry_base,
+            self.cfg.retry_base.saturating_mul(16),
+            key,
+        );
+        let faults = &self.faults;
+        let cfg = &self.cfg;
+        let measured = backoff.run(|_| {
+            faults.trip("measure")?;
+            let (latency_s, mad_s, samples) = bench_layer(cfg, l, eff_cin, kept, mode, key);
+            anyhow::ensure!(
+                latency_s.is_finite() && latency_s > 0.0,
+                "implausible measurement {latency_s}s for layer '{}'",
+                l.name
+            );
+            Ok((latency_s, mad_s, samples))
+        });
+        self.dirty = true;
+        match measured {
+            Ok((latency_s, mad_s, samples)) => {
+                self.measured += 1;
+                // feed the fallback calibration: least squares on the
+                // relative residual, per mode class (same fit as
+                // HybridProvider::calibrate)
+                let sim_t = self.cost.layer_total(l, eff_cin, kept, mode);
+                if sim_t > 0.0 {
+                    let r = sim_t / latency_s;
+                    let c = mode.class_id() as usize;
+                    self.calib_num[c] += r;
+                    self.calib_den[c] += r * r;
+                }
+                ProfileEntry {
+                    latency_s,
+                    mad_s,
+                    samples,
+                    layer: l.name.clone(),
+                    mode: mode.label(),
+                    degraded: false,
+                }
+            }
+            Err(e) => {
+                self.degraded += 1;
+                let c = mode.class_id() as usize;
+                let scale = if self.calib_den[c] > 0.0 {
+                    self.calib_num[c] / self.calib_den[c]
+                } else {
+                    1.0
+                };
+                let latency_s = scale * self.cost.layer_total(l, eff_cin, kept, mode);
+                log::warn!(
+                    "profiler: measurement of '{}' exhausted retries ({e:#}); \
+                     using calibrated analytical fallback {latency_s:.3e}s",
+                    l.name
+                );
+                ProfileEntry {
+                    latency_s,
+                    mad_s: 0.0,
+                    samples: 0,
+                    layer: l.name.clone(),
+                    mode: mode.label(),
+                    degraded: true,
+                }
+            }
+        }
     }
 
     /// Fold every entry of the attached shared cache into the local map
@@ -312,7 +433,9 @@ impl MeasuredProfiler {
     }
 
     /// Write the profile manifest (when disk-backed and dirty).  Returns the
-    /// path written, if any.
+    /// path written, if any.  Degraded (analytical-fallback) entries are
+    /// not persisted: the manifest is a record of real measurements, and a
+    /// fallback must be retried, not cached across sessions.
     pub fn save(&mut self) -> Result<Option<PathBuf>> {
         let Some(path) = self.cache_path.clone() else {
             return Ok(None);
@@ -321,7 +444,7 @@ impl MeasuredProfiler {
             return Ok(Some(path));
         }
         let mut entries = std::collections::BTreeMap::new();
-        for (key, e) in &self.entries {
+        for (key, e) in self.entries.iter().filter(|(_, e)| !e.degraded) {
             entries.insert(
                 format!("{key:016x}"),
                 Json::obj(vec![
@@ -343,7 +466,10 @@ impl MeasuredProfiler {
             ),
             ("entries", Json::Obj(entries)),
         ]);
-        manifest.write_file(&path)?;
+        self.faults.trip("profile-write")?;
+        // atomic: a crash mid-write must leave the previous manifest (or
+        // nothing), never a truncated one for the next session to choke on
+        manifest.write_file_atomic(&path)?;
         self.dirty = false;
         Ok(Some(path))
     }
@@ -367,14 +493,21 @@ impl MeasuredProfiler {
         for (key, e) in entries {
             let key = u64::from_str_radix(key, 16)
                 .map_err(|_| anyhow::anyhow!("bad entry key '{key}'"))?;
+            let latency_s = e.req_f64("latency_s")?;
+            anyhow::ensure!(
+                latency_s.is_finite() && latency_s > 0.0,
+                "entry {key:016x} has implausible latency {latency_s}"
+            );
             self.entries.insert(
                 key,
                 ProfileEntry {
-                    latency_s: e.req_f64("latency_s")?,
+                    latency_s,
                     mad_s: e.req_f64("mad_s")?,
                     samples: e.req_usize("samples")?,
                     layer: e.req_str("layer")?.to_string(),
                     mode: e.req_str("mode")?.to_string(),
+                    // only real measurements are persisted
+                    degraded: false,
                 },
             );
         }
@@ -741,6 +874,131 @@ mod tests {
         // float_only changes the directory (name changed) -> empty cache;
         // force the same path by writing a manifest with the wrong target
         assert_eq!(p3.unwrap().stats().loaded, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn exhausted_measurement_degrades_to_analytical_fallback() {
+        let ir = ir();
+        // first layer: 3 attempts all fail -> degraded; later layers
+        // measure normally (the armed faults are spent)
+        let mut p = fast_profiler()
+            .with_faults(FaultPlan::parse("measure:1:io-error,measure:2:io-error,measure:3:io-error").unwrap());
+        let policy = DiscretePolicy::reference(&ir);
+        let total = p.model_latency(&ir, &policy);
+        assert!(total > 0.0 && total.is_finite());
+        assert_eq!(p.stats().degraded, 1, "exactly one config exhausted its retries");
+        assert!(p.stats().measured >= 1, "the remaining configs still measure");
+        // the degraded value is served from the cache like any other
+        let again = p.model_latency(&ir, &policy);
+        assert_eq!(total, again);
+        assert_eq!(p.stats().degraded, 1);
+    }
+
+    #[test]
+    fn transient_measurement_failure_is_retried_not_degraded() {
+        let ir = ir();
+        // one armed failure, three attempts: the retry absorbs it
+        let mut p = fast_profiler().with_faults(FaultPlan::parse("measure:1:io-error").unwrap());
+        let policy = DiscretePolicy::reference(&ir);
+        assert!(p.model_latency(&ir, &policy) > 0.0);
+        assert_eq!(p.stats().degraded, 0);
+        assert!(p.stats().measured > 0);
+    }
+
+    #[test]
+    fn degraded_entries_are_not_persisted() {
+        let ir = ir();
+        let dir = std::env::temp_dir().join(format!("galen_profiler_degraded_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut p = MeasuredProfiler::with_cache(
+            HwTarget::cortex_a72(),
+            "tiny",
+            ProfilerConfig::fast(),
+            &dir,
+        )
+        .unwrap()
+        .with_faults(FaultPlan::parse("measure:1:io-error,measure:2:io-error,measure:3:io-error").unwrap());
+        let policy = DiscretePolicy::reference(&ir);
+        p.model_latency(&ir, &policy);
+        assert_eq!(p.stats().degraded, 1);
+        let entries = p.stats().entries;
+        p.save().unwrap().expect("disk-backed");
+        // reload: the degraded entry was dropped, so it will be re-measured
+        let p2 = MeasuredProfiler::with_cache(
+            HwTarget::cortex_a72(),
+            "tiny",
+            ProfilerConfig::fast(),
+            &dir,
+        )
+        .unwrap();
+        assert_eq!(p2.stats().loaded, entries - 1, "degraded entry must not persist");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn profile_write_fault_surfaces_as_error() {
+        let ir = ir();
+        let dir = std::env::temp_dir().join(format!("galen_profiler_wfault_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut p = MeasuredProfiler::with_cache(
+            HwTarget::cortex_a72(),
+            "tiny",
+            ProfilerConfig::fast(),
+            &dir,
+        )
+        .unwrap()
+        .with_faults(FaultPlan::parse("profile-write:1:io-error").unwrap());
+        p.model_latency(&ir, &DiscretePolicy::reference(&ir));
+        let e = p.save().unwrap_err();
+        assert!(format!("{e:#}").contains("injected fault"), "{e:#}");
+        // the fault fired once; the retried save succeeds and the manifest
+        // parses cleanly (atomic write: no truncated leftovers)
+        let path = p.save().unwrap().expect("disk-backed");
+        assert!(Json::read_file(&path).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_manifest_is_discarded_with_clean_restart() {
+        let ir = ir();
+        let dir = std::env::temp_dir().join(format!("galen_profiler_corrupt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut p = MeasuredProfiler::with_cache(
+            HwTarget::cortex_a72(),
+            "tiny",
+            ProfilerConfig::fast(),
+            &dir,
+        )
+        .unwrap();
+        p.model_latency(&ir, &DiscretePolicy::reference(&ir));
+        let path = p.save().unwrap().expect("disk-backed");
+        // truncate the manifest mid-document (simulated crash without the
+        // atomic writer) and reload: discarded with a warning, empty cache
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        let p2 = MeasuredProfiler::with_cache(
+            HwTarget::cortex_a72(),
+            "tiny",
+            ProfilerConfig::fast(),
+            &dir,
+        )
+        .unwrap();
+        assert_eq!(p2.stats().loaded, 0, "corrupt manifest must be discarded");
+        // implausible values are rejected too, not silently trusted
+        std::fs::write(
+            &path,
+            text.replace("\"latency_s\":", "\"latency_s\": -1.0, \"x\":"),
+        )
+        .unwrap();
+        let p3 = MeasuredProfiler::with_cache(
+            HwTarget::cortex_a72(),
+            "tiny",
+            ProfilerConfig::fast(),
+            &dir,
+        )
+        .unwrap();
+        assert_eq!(p3.stats().loaded, 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

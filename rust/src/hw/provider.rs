@@ -78,7 +78,13 @@ impl LatencyProvider for MeasuredProfiler {
     }
 
     fn backend(&self) -> &'static str {
-        "measured"
+        // provenance: record when any value in play is an analytical
+        // fallback rather than a real measurement
+        if self.stats().degraded > 0 {
+            "measured+analytical-fallback"
+        } else {
+            "measured"
+        }
     }
 
     fn cache_stats(&self) -> (u64, u64) {
@@ -130,7 +136,7 @@ impl std::fmt::Display for LatencyKind {
 
 /// Mode classes the hybrid calibration fits one coefficient for (the
 /// `QuantMode::class_id` discriminants: FP32 / INT8 / MIX).
-const CLASSES: usize = 3;
+const CLASSES: usize = QuantMode::CLASSES;
 
 fn mode_class(mode: QuantMode) -> usize {
     mode.class_id() as usize
@@ -286,7 +292,11 @@ impl LatencyProvider for HybridProvider {
     }
 
     fn backend(&self) -> &'static str {
-        "hybrid"
+        if self.profiler.stats().degraded > 0 {
+            "hybrid+analytical-fallback"
+        } else {
+            "hybrid"
+        }
     }
 
     fn cache_stats(&self) -> (u64, u64) {

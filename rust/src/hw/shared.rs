@@ -14,9 +14,15 @@
 //! measured profiler the first published measurement becomes canonical
 //! (`SharedProfileCache::insert_or_get`), so all workers of one sweep score
 //! a given configuration with the same number.
+//!
+//! Accesses go through the poison-recovering `util::sync` helpers: a
+//! worker that panics mid-publish leaves at worst one unpublished entry,
+//! never a poison that cascades into every other job of the service.
 
 use std::collections::HashMap;
 use std::sync::{Arc, RwLock};
+
+use crate::util::sync;
 
 use super::profiler::ProfileEntry;
 
@@ -39,21 +45,18 @@ impl SharedCostCache {
 
     /// Published cost for `key`, if any worker has resolved it.
     pub fn get(&self, key: u64) -> Option<f64> {
-        self.inner.read().expect("shared cost cache poisoned").get(&key).copied()
+        sync::read(&self.inner).get(&key).copied()
     }
 
     /// Publish a resolved cost.  Values are pure functions of the key, so
     /// concurrent double-inserts write the same number and either wins.
     pub fn insert(&self, key: u64, value: f64) {
-        self.inner
-            .write()
-            .expect("shared cost cache poisoned")
-            .insert(key, value);
+        sync::write(&self.inner).insert(key, value);
     }
 
     /// Number of published entries.
     pub fn len(&self) -> usize {
-        self.inner.read().expect("shared cost cache poisoned").len()
+        sync::read(&self.inner).len()
     }
 
     /// Whether no entry has been published yet.
@@ -82,30 +85,19 @@ impl SharedProfileCache {
 
     /// The canonical entry for `key`, if one was published.
     pub fn get(&self, key: u64) -> Option<ProfileEntry> {
-        self.inner
-            .read()
-            .expect("shared profile cache poisoned")
-            .get(&key)
-            .cloned()
+        sync::read(&self.inner).get(&key).cloned()
     }
 
     /// Publish `entry` unless some worker beat us to it; returns the
     /// canonical entry either way.
     pub fn insert_or_get(&self, key: u64, entry: ProfileEntry) -> ProfileEntry {
-        self.inner
-            .write()
-            .expect("shared profile cache poisoned")
-            .entry(key)
-            .or_insert(entry)
-            .clone()
+        sync::write(&self.inner).entry(key).or_insert(entry).clone()
     }
 
     /// A point-in-time copy of every published entry (used to fold a
     /// sweep's measurements into one disk manifest after the barrier).
     pub fn snapshot(&self) -> Vec<(u64, ProfileEntry)> {
-        self.inner
-            .read()
-            .expect("shared profile cache poisoned")
+        sync::read(&self.inner)
             .iter()
             .map(|(k, v)| (*k, v.clone()))
             .collect()
@@ -113,7 +105,7 @@ impl SharedProfileCache {
 
     /// Number of published entries.
     pub fn len(&self) -> usize {
-        self.inner.read().expect("shared profile cache poisoned").len()
+        sync::read(&self.inner).len()
     }
 
     /// Whether no entry has been published yet.
@@ -133,6 +125,7 @@ mod tests {
             samples: 1,
             layer: "l".into(),
             mode: "FP32".into(),
+            degraded: false,
         }
     }
 

@@ -274,6 +274,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     .opt("latency", "sim", "latency backend: sim|measured|hybrid")
     .opt("jobs", "0", "search worker threads (0 = all cores)")
     .opt("results", "results", "record directory for finished jobs ('' disables)")
+    .opt(
+        "checkpoint-every",
+        "1",
+        "episodes between driver checkpoints (0 disables; needs --results)",
+    )
+    .flag("resume-jobs", "replay the serve journal and resume interrupted jobs")
     .flag("fixture", "use the in-code tiny fixture IR (no artifacts needed)");
     let args = cli.parse_from(argv)?;
     // Accuracy is always the synthetic proxy here: stdout is the protocol
@@ -288,16 +294,28 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         opts.seed = args.get_u64("seed")?;
         Session::open(opts)?
     };
-    let factory = session.latency_factory();
+    // fault injection (GALEN_FAULTS) reaches both the job loop and the
+    // measured-latency providers; the plan is empty unless the env var is set
+    let faults = galen::testing::FaultPlan::from_env()?;
+    let factory = session.latency_factory().with_faults(faults.clone());
     let results = args.get("results");
+    let results_dir = if results.is_empty() {
+        None
+    } else {
+        Some(std::path::PathBuf::from(results))
+    };
+    anyhow::ensure!(
+        !(args.has_flag("resume-jobs") && results_dir.is_none()),
+        "--resume-jobs needs a results directory (the journal lives there)"
+    );
     let opts = ServeOptions {
         workers: args.get_usize("jobs")?,
-        results_dir: if results.is_empty() {
-            None
-        } else {
-            Some(std::path::PathBuf::from(results))
-        },
+        results_dir: results_dir.clone(),
         base_seed: Some(args.get_u64("seed")?),
+        journal_dir: results_dir,
+        resume_jobs: args.has_flag("resume-jobs"),
+        checkpoint_every: args.get_usize("checkpoint-every")?,
+        faults,
     };
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
@@ -314,7 +332,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         stats.failed == 0,
         "{} of {} jobs failed (see the per-job error responses)",
         stats.failed,
-        stats.submitted
+        stats.submitted + stats.resumed
     );
     Ok(())
 }

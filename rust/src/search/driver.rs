@@ -808,6 +808,45 @@ impl<'a> SearchDriver<'a> {
     }
 }
 
+/// Cheap integrity check of a checkpoint document against the
+/// configuration a resume expects, without building a driver (no model,
+/// evaluator, or latency backend needed).  Callers that fall back to a
+/// fresh search on a bad checkpoint (`galen serve --resume-jobs` after a
+/// crash mid-write) probe with this first, so the errors
+/// [`SearchDriver::resume_from`] raises stay hard.
+pub fn validate_checkpoint(checkpoint: &Json, cfg: &SearchConfig) -> Result<()> {
+    anyhow::ensure!(
+        checkpoint.req_str("kind")? == CHECKPOINT_KIND,
+        "not a search checkpoint document"
+    );
+    anyhow::ensure!(
+        checkpoint.req_usize("schema_version")? == CHECKPOINT_SCHEMA_VERSION,
+        "checkpoint schema version mismatch (have {}, support {})",
+        checkpoint.req_usize("schema_version")?,
+        CHECKPOINT_SCHEMA_VERSION
+    );
+    let ck_cfg = SearchConfig::from_checkpoint_json(checkpoint.req("config")?)?;
+    anyhow::ensure!(
+        ck_cfg.to_checkpoint_json().dump() == cfg.to_checkpoint_json().dump(),
+        "checkpoint was taken with a different search configuration"
+    );
+    let episode = checkpoint.req_usize("episode")?;
+    anyhow::ensure!(
+        episode <= cfg.episodes,
+        "checkpoint records episode {episode} past its {}-episode budget",
+        cfg.episodes
+    );
+    let history = checkpoint.req_arr("history")?.len();
+    anyhow::ensure!(
+        history == episode,
+        "checkpoint history has {history} entries but records episode {episode}"
+    );
+    // the agent blob must at least restore; dimension checks against the
+    // live model happen in resume_from
+    Ddpg::restore(checkpoint.req("agent")?)?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -23,7 +23,7 @@ mod orchestrator;
 
 pub use config::SearchConfig;
 pub use driver::{
-    SearchBuilder, SearchDriver, SearchEvent, SearchObserver, StepOutcome,
+    validate_checkpoint, SearchBuilder, SearchDriver, SearchEvent, SearchObserver, StepOutcome,
     CHECKPOINT_SCHEMA_VERSION,
 };
 pub use episode::{

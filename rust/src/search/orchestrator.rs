@@ -42,6 +42,7 @@ use crate::hw::{
 };
 use crate::model::ModelIr;
 use crate::search::{run_search, SearchConfig, SearchOutcome, SimEvaluator};
+use crate::testing::FaultPlan;
 use crate::util::json::Json;
 use crate::util::{num_threads, parallel_map, Fnv1a};
 
@@ -145,6 +146,7 @@ pub struct LatencyFactory {
     profiles_dir: Option<PathBuf>,
     cost_cache: SharedCostCache,
     profile_cache: SharedProfileCache,
+    faults: FaultPlan,
 }
 
 impl LatencyFactory {
@@ -167,7 +169,17 @@ impl LatencyFactory {
             profiles_dir,
             cost_cache: SharedCostCache::new(),
             profile_cache: SharedProfileCache::new(),
+            faults: FaultPlan::none(),
         }
+    }
+
+    /// Arm a fault-injection plan on every measured/hybrid provider this
+    /// factory builds (`measure` / `profile-write` sites).  Clones of the
+    /// plan share hit counters, so "fail the 3rd measurement of the run"
+    /// means the 3rd across all providers.
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
     }
 
     /// Which latency backend this factory produces.
@@ -194,7 +206,8 @@ impl LatencyFactory {
                 self.profiler_cfg.clone(),
             ),
         };
-        Ok(p.with_shared_cache(self.profile_cache.clone()))
+        Ok(p.with_shared_cache(self.profile_cache.clone())
+            .with_faults(self.faults.clone()))
     }
 
     /// One latency provider for one job, wired to the shared caches.

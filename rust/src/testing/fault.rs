@@ -1,0 +1,259 @@
+//! Deterministic fault injection for crash-recovery tests.
+//!
+//! A [`FaultPlan`] arms a fixed set of faults before a run: *"the 3rd hit
+//! on site `episode` panics"*, *"the 1st hit on site `checkpoint-write`
+//! fails with an IO error"*.  Production code threads a plan through its
+//! options (default: empty, zero-cost) and calls [`FaultPlan::trip`] /
+//! [`FaultPlan::corrupt`] at its fault sites; tests arm plans directly or
+//! via the `GALEN_FAULTS` environment variable (read only at the CLI
+//! boundary, [`FaultPlan::from_env`]).
+//!
+//! Plans are deterministic by construction: a fault fires when a site's
+//! hit *count* reaches the armed threshold — no clocks, no randomness — so
+//! the same plan against the same workload fires at the same point every
+//! run (with a single worker, bit-reproducibly so).
+//!
+//! Spec syntax (`GALEN_FAULTS` and [`FaultPlan::parse`]):
+//! `site[:n]:kind` entries separated by commas, where `kind` is one of
+//! `panic`, `abort`, `io-error` (alias `error`), `corrupt`, and `n`
+//! defaults to 1 (fire on the first hit).  Example:
+//! `episode:5:abort,measure:io-error`.
+//!
+//! Fault sites currently armed in the codebase:
+//!
+//! | site               | location                              | kinds        |
+//! |--------------------|---------------------------------------|--------------|
+//! | `episode`          | serve worker, after an episode runs and before its checkpoint persists | panic, abort, io-error |
+//! | `checkpoint-write` | serve worker, per-episode checkpoint write | io-error, panic |
+//! | `checkpoint-read`  | serve worker, checkpoint load on `--resume-jobs` | corrupt, io-error |
+//! | `measure`          | `hw::MeasuredProfiler`, one kernel measurement | io-error, panic |
+//! | `profile-write`    | `hw::MeasuredProfiler::save` manifest write | io-error |
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+/// What happens when an armed fault fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `panic!` on the calling thread (exercises `catch_unwind` isolation).
+    Panic,
+    /// `std::process::abort()` — a hard kill, as if the process died
+    /// mid-flight (exercises journal replay / checkpoint resume).
+    Abort,
+    /// Return an injected error (exercises retry/backoff and degradation).
+    Error,
+    /// Mangle the bytes a read site just read (exercises corrupt-artifact
+    /// hardening); at non-read sites it behaves like [`FaultKind::Error`].
+    Corrupt,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "panic" => Ok(Self::Panic),
+            "abort" => Ok(Self::Abort),
+            "error" | "io-error" => Ok(Self::Error),
+            "corrupt" => Ok(Self::Corrupt),
+            other => anyhow::bail!("unknown fault kind '{other}' (panic|abort|io-error|corrupt)"),
+        }
+    }
+}
+
+/// One armed fault: fires once, when `site`'s hit count reaches `at`.
+#[derive(Debug)]
+struct Armed {
+    site: String,
+    at: u64,
+    kind: FaultKind,
+    hits: AtomicU64,
+}
+
+/// A set of armed faults, shared by handle (cloning shares the counters, so
+/// every component of a run observes one consistent plan).  The default
+/// plan is empty and never fires.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    armed: Arc<Vec<Armed>>,
+}
+
+impl FaultPlan {
+    /// The empty plan (no faults; every check is a cheap no-op).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Whether any fault is armed.
+    pub fn is_empty(&self) -> bool {
+        self.armed.is_empty()
+    }
+
+    /// Parse a comma-separated `site[:n]:kind` spec (see module docs).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut armed = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let fields: Vec<&str> = part.split(':').collect();
+            let (site, at, kind) = match fields.as_slice() {
+                [site, kind] => (*site, 1u64, FaultKind::parse(kind)?),
+                [site, n, kind] => {
+                    let at: u64 = n
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad fault count '{n}' in '{part}'"))?;
+                    anyhow::ensure!(at >= 1, "fault count must be >= 1 in '{part}'");
+                    (*site, at, FaultKind::parse(kind)?)
+                }
+                _ => anyhow::bail!("bad fault spec '{part}' (expected site[:n]:kind)"),
+            };
+            anyhow::ensure!(!site.is_empty(), "empty fault site in '{part}'");
+            armed.push(Armed {
+                site: site.to_string(),
+                at,
+                kind,
+                hits: AtomicU64::new(0),
+            });
+        }
+        Ok(Self { armed: Arc::new(armed) })
+    }
+
+    /// The plan armed by the `GALEN_FAULTS` environment variable (empty or
+    /// unset = no faults).  Read this once at the CLI boundary and thread
+    /// the plan explicitly — library code never touches the environment.
+    pub fn from_env() -> Result<Self> {
+        match std::env::var("GALEN_FAULTS") {
+            Ok(spec) if !spec.trim().is_empty() => Self::parse(&spec)
+                .map_err(|e| e.context("parsing GALEN_FAULTS")),
+            _ => Ok(Self::none()),
+        }
+    }
+
+    /// Count one hit at `site`; returns the armed kind exactly when some
+    /// armed fault's threshold is reached (each armed fault fires at most
+    /// once).  Most callers want [`FaultPlan::trip`] instead.
+    pub fn hit(&self, site: &str) -> Option<FaultKind> {
+        let mut fired = None;
+        for a in self.armed.iter().filter(|a| a.site == site) {
+            if a.hits.fetch_add(1, Ordering::SeqCst) + 1 == a.at {
+                fired = fired.or(Some(a.kind));
+            }
+        }
+        fired
+    }
+
+    /// Count one hit at `site` and apply the consequence if a fault fires:
+    /// `panic` panics, `abort` kills the process, `io-error`/`corrupt`
+    /// return an injected error for the caller to handle like any other
+    /// fallible operation.
+    pub fn trip(&self, site: &str) -> Result<()> {
+        match self.hit(site) {
+            None => Ok(()),
+            Some(kind) => consequence(kind, site),
+        }
+    }
+
+    /// Read-site variant of [`FaultPlan::trip`]: a firing `corrupt` fault
+    /// mangles `data` in place (truncates and appends garbage, so the
+    /// result is never valid JSON); other kinds behave as in `trip`.
+    pub fn corrupt(&self, site: &str, data: &mut String) -> Result<()> {
+        match self.hit(site) {
+            None => Ok(()),
+            Some(FaultKind::Corrupt) => {
+                data.truncate(data.len() / 2);
+                data.push_str("\u{0}garbage{{{");
+                Ok(())
+            }
+            Some(kind) => consequence(kind, site),
+        }
+    }
+}
+
+fn consequence(kind: FaultKind, site: &str) -> Result<()> {
+    match kind {
+        FaultKind::Panic => panic!("injected fault: panic at site '{site}'"),
+        FaultKind::Abort => {
+            // eprint (not log) so the kill is visible even without a logger
+            eprintln!("injected fault: abort at site '{site}'");
+            std::process::abort();
+        }
+        FaultKind::Error | FaultKind::Corrupt => {
+            anyhow::bail!("injected fault: io error at site '{site}'")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_forms_and_defaults() {
+        let p = FaultPlan::parse("episode:5:abort, measure:io-error,ckpt:2:corrupt").unwrap();
+        assert!(!p.is_empty());
+        // measure defaults to n=1: the very first hit fires
+        assert_eq!(p.hit("measure"), Some(FaultKind::Error));
+        assert_eq!(p.hit("measure"), None, "each armed fault fires once");
+        // episode fires on the 5th hit only
+        for _ in 0..4 {
+            assert_eq!(p.hit("episode"), None);
+        }
+        assert_eq!(p.hit("episode"), Some(FaultKind::Abort));
+        assert_eq!(p.hit("episode"), None);
+        // unknown sites never fire
+        assert_eq!(p.hit("nope"), None);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FaultPlan::parse("episode:zero:panic").is_err());
+        assert!(FaultPlan::parse("episode:0:panic").is_err(), "counts are 1-based");
+        assert!(FaultPlan::parse("episode:1:explode").is_err());
+        assert!(FaultPlan::parse("justasite").is_err());
+        assert!(FaultPlan::parse(":1:panic").is_err());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" , ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn clones_share_counters() {
+        let p = FaultPlan::parse("s:2:io-error").unwrap();
+        let q = p.clone();
+        assert_eq!(p.hit("s"), None);
+        assert_eq!(q.hit("s"), Some(FaultKind::Error), "clone sees the first hit");
+    }
+
+    #[test]
+    fn trip_returns_injected_error() {
+        let p = FaultPlan::parse("w:1:io-error").unwrap();
+        let e = p.trip("w").unwrap_err();
+        assert!(format!("{e:#}").contains("injected fault"), "{e:#}");
+        p.trip("w").unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "injected fault: panic at site 'boom'")]
+    fn trip_panics_on_panic_kind() {
+        FaultPlan::parse("boom:panic").unwrap().trip("boom").unwrap();
+    }
+
+    #[test]
+    fn corrupt_mangles_read_data() {
+        let p = FaultPlan::parse("r:1:corrupt").unwrap();
+        let mut s = r#"{"ok": true}"#.to_string();
+        p.corrupt("r", &mut s).unwrap();
+        assert!(crate::util::json::Json::parse(&s).is_err(), "mangled: {s}");
+        // second hit: untouched
+        let mut t = "[1]".to_string();
+        p.corrupt("r", &mut t).unwrap();
+        assert_eq!(t, "[1]");
+    }
+
+    #[test]
+    fn empty_plan_is_free_of_consequences() {
+        let p = FaultPlan::none();
+        assert!(p.is_empty());
+        p.trip("anything").unwrap();
+        let mut s = "x".to_string();
+        p.corrupt("anything", &mut s).unwrap();
+        assert_eq!(s, "x");
+    }
+}

@@ -8,6 +8,11 @@
 
 use crate::util::rng::Pcg64;
 
+/// Deterministic fault injection (`GALEN_FAULTS`) for crash-recovery tests.
+pub mod fault;
+
+pub use fault::{FaultKind, FaultPlan};
+
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
 pub struct Config {

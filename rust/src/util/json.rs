@@ -218,6 +218,30 @@ impl Json {
         Ok(())
     }
 
+    /// Durable variant of [`Json::write_file`]: pretty-print to a sibling
+    /// temp file, fsync it, and atomically rename it over `path`.  A crash
+    /// mid-write can never leave a torn or half-written document behind —
+    /// readers see either the old file or the complete new one.  Used for
+    /// crash-recovery artifacts (search checkpoints, profile manifests).
+    pub fn write_file_atomic(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        use std::io::Write as _;
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .map_err(|e| anyhow::anyhow!("creating {}: {e}", tmp.display()))?;
+            f.write_all(self.pretty(0).as_bytes())
+                .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+            f.sync_data()
+                .map_err(|e| anyhow::anyhow!("syncing {}: {e}", tmp.display()))?;
+        }
+        std::fs::rename(&tmp, path)
+            .map_err(|e| anyhow::anyhow!("renaming {} -> {}: {e}", tmp.display(), path.display()))?;
+        Ok(())
+    }
+
     /// Compact serialization.
     pub fn dump(&self) -> String {
         let mut s = String::new();
@@ -581,6 +605,21 @@ mod tests {
         }
         assert_eq!(back.req_hex64("seed").unwrap(), 0xdead_beef_cafe_f00d);
         assert!(back.req_hex64("f32s").is_err());
+    }
+
+    #[test]
+    fn write_file_atomic_replaces_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join(format!("galen_json_atomic_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("doc.json");
+        let a = Json::obj(vec![("v", Json::num(1.0))]);
+        a.write_file_atomic(&path).unwrap();
+        assert_eq!(Json::read_file(&path).unwrap(), a);
+        let b = Json::obj(vec![("v", Json::num(2.0))]);
+        b.write_file_atomic(&path).unwrap();
+        assert_eq!(Json::read_file(&path).unwrap(), b);
+        assert!(!path.with_extension("tmp").exists(), "temp file must not survive");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -10,10 +10,14 @@ pub mod gten;
 pub mod json;
 /// Env-configurable logger (`GALEN_LOG`).
 pub mod logging;
+/// Bounded exponential backoff with deterministic jitter.
+pub mod retry;
 /// PCG64 PRNG + samplers.
 pub mod rng;
 /// Streaming statistics (Welford, EMA, median/percentile).
 pub mod stats;
+/// Poison-recovering lock helpers.
+pub mod sync;
 
 /// Incremental FNV-1a 64-bit hasher: the shared primitive behind the
 /// hardware layer's cache keys and fingerprints (`hw::sim` measurement
@@ -130,12 +134,12 @@ where
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
-                let job = queue.lock().unwrap().pop_front();
+                let job = sync::lock(&queue).pop_front();
                 match job {
                     None => break,
                     Some((i, item)) => {
                         let r = f(item);
-                        slots_mx.lock().unwrap()[i] = Some(r);
+                        sync::lock(&slots_mx)[i] = Some(r);
                     }
                 }
             });

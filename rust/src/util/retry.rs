@@ -1,0 +1,156 @@
+//! Bounded exponential backoff with deterministic jitter.
+//!
+//! Transient faults (a glitched kernel measurement, a busy filesystem)
+//! deserve a few retries before anyone degrades or fails — but retry
+//! timing must not become a hidden source of nondeterminism in an
+//! otherwise bit-reproducible system.  The jitter here is a pure function
+//! of `(seed, attempt)` via the shared [`Fnv1a`] hasher (the same recipe
+//! as `search::job_seed`), so two runs with the same seed back off on the
+//! identical schedule.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::Fnv1a;
+
+/// Domain-separation salt so backoff streams never collide with other
+/// `Fnv1a`-derived streams (job seeds, cache keys) built from the same seed.
+const JITTER_SALT: u64 = 0xb0ff_5eed_7e57_a11e;
+
+/// A bounded exponential backoff schedule: `delay(a) = jitter * min(cap,
+/// base * 2^a)` with deterministic jitter in `[0.5, 1.0)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Backoff {
+    /// Total attempts (>= 1); `run` sleeps between attempts, never after
+    /// the last.
+    pub attempts: u32,
+    /// Delay before the first retry (attempt 0's failure).
+    pub base: Duration,
+    /// Upper bound on the un-jittered delay.
+    pub cap: Duration,
+    /// Seed of the jitter stream (pure function — no wall clock involved).
+    pub seed: u64,
+}
+
+impl Backoff {
+    /// A schedule of `attempts` tries backing off from `base` up to `cap`.
+    pub fn new(attempts: u32, base: Duration, cap: Duration, seed: u64) -> Self {
+        Self {
+            attempts: attempts.max(1),
+            base,
+            cap,
+            seed,
+        }
+    }
+
+    /// The delay slept after failed attempt `attempt` (0-based): pure in
+    /// `(self, attempt)`, monotone in expectation, capped at `cap`.
+    pub fn delay(&self, attempt: u32) -> Duration {
+        let exp = self
+            .base
+            .saturating_mul(1u32.checked_shl(attempt.min(20)).unwrap_or(u32::MAX))
+            .min(self.cap);
+        let mut h = Fnv1a::seeded(self.seed ^ JITTER_SALT);
+        h.mix(attempt as u64);
+        // top 53 bits -> uniform f64 in [0, 1), mapped onto [0.5, 1.0)
+        let frac = (h.finish() >> 11) as f64 / (1u64 << 53) as f64;
+        exp.mul_f64(0.5 + 0.5 * frac)
+    }
+
+    /// Run `op` up to `attempts` times, sleeping `delay(attempt)` between
+    /// failures; returns the first success or the last error annotated with
+    /// the attempt count.
+    pub fn run<T>(&self, mut op: impl FnMut(u32) -> Result<T>) -> Result<T> {
+        let mut last = None;
+        for attempt in 0..self.attempts {
+            match op(attempt) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    if attempt + 1 < self.attempts {
+                        log::debug!(
+                            "retry: attempt {} failed ({e:#}); backing off {:?}",
+                            attempt + 1,
+                            self.delay(attempt)
+                        );
+                        std::thread::sleep(self.delay(attempt));
+                    }
+                    last = Some(e);
+                }
+            }
+        }
+        // attempts >= 1, so at least one op ran and last is populated
+        Err(last
+            .unwrap_or_else(|| anyhow::anyhow!("no attempts were made"))
+            .context(format!("after {} attempt(s)", self.attempts)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast(attempts: u32, seed: u64) -> Backoff {
+        Backoff::new(attempts, Duration::from_micros(1), Duration::from_micros(8), seed)
+    }
+
+    #[test]
+    fn delay_is_deterministic_bounded_and_jittered() {
+        let b = Backoff::new(5, Duration::from_millis(10), Duration::from_millis(80), 42);
+        for a in 0..32 {
+            let d = b.delay(a);
+            assert_eq!(d, b.delay(a), "pure function of (seed, attempt)");
+            let exp = Duration::from_millis(10)
+                .saturating_mul(1u32 << a.min(20))
+                .min(Duration::from_millis(80));
+            assert!(d >= exp.mul_f64(0.5) && d < exp, "attempt {a}: {d:?} vs cap {exp:?}");
+        }
+        // different seeds jitter differently (some attempt must differ)
+        let c = Backoff::new(5, Duration::from_millis(10), Duration::from_millis(80), 43);
+        assert!((0..8).any(|a| b.delay(a) != c.delay(a)));
+    }
+
+    #[test]
+    fn huge_attempt_index_saturates_at_cap() {
+        let b = Backoff::new(3, Duration::from_millis(1), Duration::from_secs(1), 7);
+        assert!(b.delay(u32::MAX) <= Duration::from_secs(1));
+    }
+
+    #[test]
+    fn run_returns_first_success() {
+        let mut calls = 0;
+        let r: Result<i32> = fast(5, 1).run(|attempt| {
+            calls += 1;
+            if attempt < 2 {
+                anyhow::bail!("transient");
+            }
+            Ok(99)
+        });
+        assert_eq!(r.unwrap(), 99);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn run_exhausts_attempts_and_reports_count() {
+        let mut calls = 0;
+        let r: Result<()> = fast(4, 2).run(|_| {
+            calls += 1;
+            anyhow::bail!("always down")
+        });
+        assert_eq!(calls, 4);
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.contains("4 attempt(s)"), "{msg}");
+        assert!(msg.contains("always down"), "{msg}");
+    }
+
+    #[test]
+    fn single_attempt_never_sleeps_or_retries() {
+        let mut calls = 0;
+        let r: Result<()> = Backoff::new(0, Duration::ZERO, Duration::ZERO, 0).run(|_| {
+            calls += 1;
+            anyhow::bail!("down")
+        });
+        assert!(r.is_err());
+        assert_eq!(calls, 1, "attempts clamps to >= 1");
+    }
+}

@@ -1,0 +1,102 @@
+//! Poison-recovering synchronization helpers.
+//!
+//! A panicking worker poisons every `Mutex`/`RwLock` it holds; with the
+//! standard library's default behavior, every later `.lock().unwrap()` on
+//! that lock panics too, cascading one job's failure into the whole
+//! process.  The serve worker pool isolates panics per job
+//! (`coordinator::service`), so the rest of the service must keep operating
+//! on state a panicked worker touched — these helpers recover the guard
+//! from a poisoned lock instead of propagating the poison.
+//!
+//! Recovery is sound here because every structure guarded by these locks is
+//! kept consistent under single `lock` calls (no multi-step invariants that
+//! a mid-update panic could tear): job state transitions happen in one
+//! critical section, and the shared latency caches are insert-only maps of
+//! values that are pure functions of their keys.
+
+use std::sync::{
+    Condvar, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Read-lock `l`, recovering the guard if a previous writer panicked.
+pub fn read<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Write-lock `l`, recovering the guard if a previous writer panicked.
+pub fn write<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Park on `cv`, recovering the re-acquired guard if another holder of the
+/// mutex panicked while we slept.
+pub fn wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    /// Panic while holding `m` so it is poisoned (from a scoped thread, so
+    /// the panic does not fail the test itself).
+    fn poison(m: &Arc<Mutex<i32>>) {
+        let m = m.clone();
+        let h = std::thread::spawn(move || {
+            let _guard = m.lock().unwrap();
+            panic!("poison the lock");
+        });
+        assert!(h.join().is_err());
+    }
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7));
+        poison(&m);
+        assert!(m.lock().is_err(), "the mutex must actually be poisoned");
+        assert_eq!(*lock(&m), 7, "recovery sees the pre-panic value");
+        *lock(&m) = 8;
+        assert_eq!(*lock(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_recovers_from_poison() {
+        let l = Arc::new(RwLock::new(1));
+        {
+            let l = l.clone();
+            let h = std::thread::spawn(move || {
+                let _guard = l.write().unwrap();
+                panic!("poison the rwlock");
+            });
+            assert!(h.join().is_err());
+        }
+        assert_eq!(*read(&l), 1);
+        *write(&l) = 2;
+        assert_eq!(*read(&l), 2);
+    }
+
+    #[test]
+    fn wait_returns_signalled_guard() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let waiter = {
+            let pair = pair.clone();
+            std::thread::spawn(move || {
+                let (m, cv) = &*pair;
+                let mut ready = lock(m);
+                while !*ready {
+                    ready = wait(cv, ready);
+                }
+            })
+        };
+        let (m, cv) = &*pair;
+        *lock(m) = true;
+        cv.notify_all();
+        waiter.join().unwrap();
+    }
+}

@@ -1,0 +1,388 @@
+//! Chaos tests for the fault-tolerant serve layer: panic isolation,
+//! journal-driven crash recovery (in-process and against the real binary),
+//! checkpoint self-healing, and corrupt-artifact hardening.
+//!
+//! The recovery tests all assert the acceptance criterion of the failure
+//! model: an interrupted session restarted with `--resume-jobs` produces
+//! *bit-identical* job results to the uninterrupted run.
+
+use std::io::Cursor;
+use std::path::{Path, PathBuf};
+
+use galen::agent::AgentKind;
+use galen::coordinator::{serve, JobStatus, ServeJournal, ServeOptions, ServeStats};
+use galen::eval::{SensitivityConfig, SensitivityTable};
+use galen::hw::{HwTarget, LatencyKind, ProfilerConfig};
+use galen::model::ir::test_fixtures::tiny_meta;
+use galen::model::ModelIr;
+use galen::search::{LatencyFactory, SearchConfig, SearchDriver};
+use galen::testing::FaultPlan;
+use galen::util::json::Json;
+
+/// The same config override block `submit_line` sends, reused to hand-build
+/// the identical `SearchConfig` when crafting journals directly.
+const OVERRIDES: &str = r#"{"episodes": 8, "warmup_episodes": 3, "opt_steps_per_episode": 4, "log_every": 0, "ddpg": {"hidden": [24, 16], "batch": 16, "replay_capacity": 200}}"#;
+
+fn fixture() -> (ModelIr, SensitivityTable) {
+    let ir = ModelIr::from_meta(&tiny_meta()).unwrap();
+    let sens = SensitivityTable::disabled(ir.layers.len(), &SensitivityConfig::default(), "tiny");
+    (ir, sens)
+}
+
+fn factory() -> LatencyFactory {
+    LatencyFactory::new(
+        LatencyKind::Sim,
+        HwTarget::cortex_a72(),
+        "tiny",
+        ProfilerConfig::fast(),
+        None,
+    )
+}
+
+fn submit_line(id: &str, agent: &str, target: f64) -> String {
+    format!(
+        r#"{{"op":"submit","id":"{id}","spec":{{"agent":"{agent}","target":{target},"preset":"fast","config":{OVERRIDES}}}}}"#
+    )
+}
+
+/// What `config_from_spec` builds for `submit_line`'s spec (preset `fast`,
+/// `log_every` forced to 0, no base seed, then the overrides).
+fn job_cfg(agent: AgentKind, target: f64) -> SearchConfig {
+    let mut cfg = SearchConfig::fast(agent, target);
+    cfg.log_every = 0;
+    cfg.apply_json(&Json::parse(OVERRIDES).unwrap()).unwrap();
+    cfg
+}
+
+fn run_session(script: &str, opts: &ServeOptions) -> (ServeStats, Vec<Json>) {
+    let (ir, sens) = fixture();
+    let factory = factory();
+    let mut out = Vec::new();
+    let stats = serve(
+        &ir,
+        &sens,
+        &factory,
+        "tiny",
+        opts,
+        Cursor::new(script.to_string()),
+        &mut out,
+    )
+    .unwrap();
+    let responses = String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| Json::parse(l).unwrap_or_else(|e| panic!("bad response line '{l}': {e}")))
+        .collect();
+    (stats, responses)
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("galen_chaos_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// Craft the on-disk state a crash leaves behind: a journal whose job was
+/// submitted and running but never reached a terminal status.
+fn crashed_journal(dir: &Path, cfg: &SearchConfig) {
+    let mut j = ServeJournal::open_append(dir).unwrap();
+    j.record_submitted("job-0", cfg).unwrap();
+    j.record_status("job-0", JobStatus::Running, None).unwrap();
+}
+
+/// Acceptance criterion: a worker panic marks only its own job `failed`
+/// (with the panic message as the error payload) while the service keeps
+/// accepting and completing new jobs.
+#[test]
+fn worker_panic_fails_one_job_and_service_keeps_going() {
+    let script = format!(
+        "{}\n{}\n{}\n{}\n{}\n{}\n{}\n",
+        submit_line("a", "pruning", 0.5),
+        submit_line("b", "joint", 0.4),
+        r#"{"op":"result","id":"ra","job":"job-0","wait":true}"#,
+        r#"{"op":"result","id":"rb","job":"job-1","wait":true}"#,
+        // the service must still accept and finish work after the panic
+        submit_line("c", "quantization", 0.6),
+        r#"{"op":"result","id":"rc","job":"job-2","wait":true}"#,
+        r#"{"op":"list","id":"ls"}"#,
+    );
+    let opts = ServeOptions {
+        workers: 1, // deterministic: job-0 hits the armed episode fault
+        faults: FaultPlan::parse("episode:1:panic").unwrap(),
+        ..Default::default()
+    };
+    let (stats, responses) = run_session(&script, &opts);
+
+    assert_eq!(responses[2].req_str("state").unwrap(), "failed");
+    let err = responses[2].req_str("error").unwrap();
+    assert!(err.contains("injected fault: panic"), "{err}");
+    assert!(err.contains("panicked"), "{err}");
+    assert_eq!(responses[3].req_str("state").unwrap(), "done");
+    assert_eq!(responses[5].req_str("state").unwrap(), "done");
+    assert_eq!(stats.submitted, 3);
+    assert_eq!(stats.failed, 1, "only the panicking job fails");
+    assert_eq!(stats.completed, 2);
+}
+
+/// Acceptance criterion, in-process: resuming an interrupted session
+/// reproduces the uninterrupted session's artifact bit for bit — both when
+/// no checkpoint survived (restart from episode 0) and when the surviving
+/// checkpoint is garbage (discarded, then restart from episode 0).
+#[test]
+fn resumed_interrupted_job_is_bit_identical_to_clean_run() {
+    let cfg = job_cfg(AgentKind::Pruning, 0.5);
+
+    // reference: one uninterrupted protocol-submitted session
+    let ref_dir = tmp_dir("ref");
+    let script = format!(
+        "{}\n{}\n",
+        submit_line("a", "pruning", 0.5),
+        r#"{"op":"result","job":"job-0","wait":true}"#,
+    );
+    let (stats, _) = run_session(
+        &script,
+        &ServeOptions {
+            workers: 1,
+            results_dir: Some(ref_dir.clone()),
+            journal_dir: Some(ref_dir.clone()),
+            checkpoint_every: 2,
+            ..Default::default()
+        },
+    );
+    assert_eq!(stats.completed, 1);
+    let reference = std::fs::read(ref_dir.join("serve_tiny_job-0.json")).unwrap();
+
+    for (tag, garbage_checkpoint) in [("plain", false), ("garbage_ckpt", true)] {
+        let dir = tmp_dir(tag);
+        crashed_journal(&dir, &cfg);
+        if garbage_checkpoint {
+            let ckpt = dir.join("checkpoints");
+            std::fs::create_dir_all(&ckpt).unwrap();
+            std::fs::write(ckpt.join("job-0.json"), b"{\"kind\": \"galen_sear").unwrap();
+        }
+        let (stats, responses) = run_session(
+            r#"{"op":"result","job":"job-0","wait":true}"#,
+            &ServeOptions {
+                workers: 1,
+                results_dir: Some(dir.clone()),
+                journal_dir: Some(dir.clone()),
+                resume_jobs: true,
+                checkpoint_every: 2,
+                ..Default::default()
+            },
+        );
+        assert_eq!(stats.resumed, 1, "{tag}");
+        assert_eq!(stats.completed, 1, "{tag}");
+        assert_eq!(responses[0].req_str("state").unwrap(), "done", "{tag}");
+        let resumed = std::fs::read(dir.join("serve_tiny_job-0.json")).unwrap();
+        assert_eq!(resumed, reference, "{tag}: artifacts must be bit-identical");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    std::fs::remove_dir_all(&ref_dir).ok();
+}
+
+/// A corrupt-on-read checkpoint (injected at the `checkpoint-read` site) is
+/// discarded and the job restarts from episode 0 — same bit-identical
+/// outcome, never a panic or a stranded job.
+#[test]
+fn injected_checkpoint_corruption_self_heals() {
+    let cfg = job_cfg(AgentKind::Joint, 0.4);
+
+    let ref_dir = tmp_dir("ckptref");
+    crashed_journal(&ref_dir, &cfg);
+    let resume_opts = |dir: &Path, faults: FaultPlan| ServeOptions {
+        workers: 1,
+        results_dir: Some(dir.to_path_buf()),
+        journal_dir: Some(dir.to_path_buf()),
+        resume_jobs: true,
+        checkpoint_every: 1,
+        faults,
+        ..Default::default()
+    };
+    let (stats, _) = run_session(
+        r#"{"op":"result","job":"job-0","wait":true}"#,
+        &resume_opts(&ref_dir, FaultPlan::none()),
+    );
+    assert_eq!(stats.completed, 1);
+    let reference = std::fs::read(ref_dir.join("serve_tiny_job-0.json")).unwrap();
+
+    // same crashed state, but this time a checkpoint file exists (copied
+    // from the reference run) and the read of it is corrupted in flight
+    let dir = tmp_dir("ckptcorrupt");
+    crashed_journal(&dir, &cfg);
+    std::fs::create_dir_all(dir.join("checkpoints")).unwrap();
+    std::fs::copy(
+        ref_dir.join("checkpoints/job-0.json"),
+        dir.join("checkpoints/job-0.json"),
+    )
+    .unwrap();
+    let (stats, responses) = run_session(
+        r#"{"op":"result","job":"job-0","wait":true}"#,
+        &resume_opts(&dir, FaultPlan::parse("checkpoint-read:1:corrupt").unwrap()),
+    );
+    assert_eq!(stats.completed, 1);
+    assert_eq!(responses[0].req_str("state").unwrap(), "done");
+    let resumed = std::fs::read(dir.join("serve_tiny_job-0.json")).unwrap();
+    assert_eq!(resumed, reference, "discard-and-restart must reproduce the result");
+
+    std::fs::remove_dir_all(&ref_dir).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Injected checkpoint-write IO errors are absorbed by the retry/backoff
+/// (transient) or logged and skipped (persistent) — either way the job
+/// finishes with the same artifact.
+#[test]
+fn checkpoint_write_failures_never_fail_the_job() {
+    let cfg = job_cfg(AgentKind::Quantization, 0.5);
+    let run = |tag: &str, faults: FaultPlan| -> Vec<u8> {
+        let dir = tmp_dir(tag);
+        crashed_journal(&dir, &cfg);
+        let (stats, responses) = run_session(
+            r#"{"op":"result","job":"job-0","wait":true}"#,
+            &ServeOptions {
+                workers: 1,
+                results_dir: Some(dir.clone()),
+                journal_dir: Some(dir.clone()),
+                resume_jobs: true,
+                checkpoint_every: 1,
+                faults,
+                ..Default::default()
+            },
+        );
+        assert_eq!(stats.completed, 1, "{tag}");
+        assert_eq!(responses[0].req_str("state").unwrap(), "done", "{tag}");
+        let bytes = std::fs::read(dir.join("serve_tiny_job-0.json")).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        bytes
+    };
+    let clean = run("cw_clean", FaultPlan::none());
+    // one transient failure: absorbed by the backoff retries
+    let transient = run("cw_transient", FaultPlan::parse("checkpoint-write:1:io-error").unwrap());
+    // three consecutive failures exhaust the retries: checkpoint skipped
+    let persistent = run(
+        "cw_persistent",
+        FaultPlan::parse(
+            "checkpoint-write:1:io-error,checkpoint-write:2:io-error,checkpoint-write:3:io-error",
+        )
+        .unwrap(),
+    );
+    assert_eq!(transient, clean);
+    assert_eq!(persistent, clean);
+}
+
+/// Corrupt-artifact hardening: truncated or garbage JSON in a checkpoint
+/// or sweep artifact surfaces as a clean error, never a panic.
+#[test]
+fn corrupt_artifacts_error_cleanly() {
+    let dir = tmp_dir("corrupt_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    let (ir, sens) = fixture();
+    let ev = galen::search::SimEvaluator::new(&ir);
+    let mut provider = factory().provider(7, &ir).unwrap();
+    let mapper = galen::agent::mapper_for(AgentKind::Pruning);
+
+    for (name, bytes) in [
+        ("truncated.json", &br#"{"kind": "galen_search_checkpoint", "schema"#[..]),
+        ("garbage.json", &b"\x00\xffnot json at all"[..]),
+        ("wrong_kind.json", &br#"{"kind": "something_else", "schema_version": 1}"#[..]),
+    ] {
+        let path = dir.join(name);
+        std::fs::write(&path, bytes).unwrap();
+        let err = SearchDriver::resume_from_file(
+            &path,
+            &ir,
+            &sens,
+            &ev,
+            provider.as_mut(),
+            mapper.as_ref(),
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(!msg.is_empty(), "{name}: {msg}");
+    }
+
+    // a garbage sweep artifact is a clean load error too
+    let sweep = dir.join("front.json");
+    std::fs::write(&sweep, b"]]]{{{").unwrap();
+    assert!(galen::search::ParetoFront::load(&sweep).is_err());
+    std::fs::write(&sweep, r#"{"schema_version": 999, "points": []}"#).unwrap();
+    let err = format!("{:#}", galen::search::ParetoFront::load(&sweep).unwrap_err());
+    assert!(err.contains("schema"), "{err}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The full acceptance scenario against the real binary: a serve process is
+/// hard-killed mid-search (injected abort), a plain restart refuses the
+/// interrupted journal, and a `--resume-jobs` restart finishes the job with
+/// an artifact bit-identical to an uninterrupted run.
+#[test]
+fn killed_serve_process_resumes_bit_identically() {
+    use std::io::Write as _;
+    use std::process::{Command, Stdio};
+
+    let run = |dir: &Path, extra: &[&str], faults: Option<&str>, script: &str| {
+        let mut cmd = Command::new(env!("CARGO_BIN_EXE_galen"));
+        cmd.arg("serve")
+            .args(["--fixture", "--jobs", "1", "--seed", "7", "--checkpoint-every", "2"])
+            .arg("--results")
+            .arg(dir)
+            .args(extra)
+            .env_remove("GALEN_FAULTS")
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped());
+        if let Some(f) = faults {
+            cmd.env("GALEN_FAULTS", f);
+        }
+        let mut child = cmd.spawn().unwrap();
+        // the crash run dies mid-script: a broken pipe here is expected
+        let _ = child.stdin.take().unwrap().write_all(script.as_bytes());
+        child.wait_with_output().unwrap()
+    };
+    let submit_and_wait = format!(
+        "{}\n{}\n",
+        submit_line("a", "joint", 0.4),
+        r#"{"op":"result","job":"job-0","wait":true}"#,
+    );
+
+    // reference: an uninterrupted run
+    let ref_dir = tmp_dir("bin_ref");
+    let out = run(&ref_dir, &[], None, &submit_and_wait);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let reference = std::fs::read(ref_dir.join("serve_tiny_job-0.json")).unwrap();
+
+    // crash: the 4th episode aborts the process before its checkpoint
+    // lands, leaving an interrupted journal and the episode-2 checkpoint
+    let dir = tmp_dir("bin_crash");
+    let out = run(&dir, &[], Some("episode:4:abort"), &submit_and_wait);
+    assert!(!out.status.success(), "the abort must kill the process");
+    assert!(!dir.join("serve_tiny_job-0.json").exists());
+    let replayed = galen::coordinator::replay_journal(&dir).unwrap();
+    assert_eq!(replayed.len(), 1);
+    assert!(!replayed[0].status.is_terminal(), "journal records the interruption");
+
+    // a plain restart must refuse to silently abandon the interrupted job
+    let out = run(&dir, &[], None, "");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--resume-jobs"), "stderr: {stderr}");
+
+    // --resume-jobs finishes the job from the surviving checkpoint
+    let out = run(
+        &dir,
+        &["--resume-jobs"],
+        None,
+        "{\"op\":\"result\",\"job\":\"job-0\",\"wait\":true}\n",
+    );
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let result = Json::parse(stdout.lines().next().unwrap()).unwrap();
+    assert_eq!(result.req_str("state").unwrap(), "done");
+    let resumed = std::fs::read(dir.join("serve_tiny_job-0.json")).unwrap();
+    assert_eq!(resumed, reference, "resumed artifact must be bit-identical");
+
+    std::fs::remove_dir_all(&ref_dir).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -151,7 +151,7 @@ fn fuzzed_requests_each_get_an_error_response_and_never_wedge_the_service() {
         &sens,
         &factory,
         "tiny",
-        &ServeOptions { workers: 2, results_dir: None, base_seed: None },
+        &ServeOptions { workers: 2, ..Default::default() },
         Cursor::new(script),
         &mut out,
     )

@@ -78,7 +78,7 @@ fn scripted_two_job_session_completes_with_artifacts() {
     let opts = ServeOptions {
         workers: 2,
         results_dir: Some(dir.clone()),
-        base_seed: None,
+        ..Default::default()
     };
     let (stats, responses) = run_session(&script, &opts);
 
@@ -150,7 +150,7 @@ fn events_cursor_pages_incrementally() {
     );
     let (_, responses) = run_session(
         &script,
-        &ServeOptions { workers: 1, results_dir: None, base_seed: None },
+        &ServeOptions { workers: 1, ..Default::default() },
     );
     let page = &responses[2];
     let next = page.req_usize("next").unwrap();
@@ -173,7 +173,7 @@ fn cancel_queued_job_terminates_without_running() {
     );
     let (stats, responses) = run_session(
         &script,
-        &ServeOptions { workers: 1, results_dir: None, base_seed: None },
+        &ServeOptions { workers: 1, ..Default::default() },
     );
     assert_eq!(stats.submitted, 2);
     assert_eq!(stats.cancelled, 1);
@@ -196,7 +196,7 @@ fn bad_requests_get_error_responses() {
     );
     let (stats, responses) = run_session(
         &script,
-        &ServeOptions { workers: 1, results_dir: None, base_seed: None },
+        &ServeOptions { workers: 1, ..Default::default() },
     );
     assert_eq!(responses.len(), 6);
     assert!(!responses[0].req_bool("ok").unwrap());
@@ -226,7 +226,7 @@ fn submit_variant_assertion_matches_served_model() {
     );
     let (stats, responses) = run_session(
         script,
-        &ServeOptions { workers: 1, results_dir: None, base_seed: None },
+        &ServeOptions { workers: 1, ..Default::default() },
     );
     assert!(responses[0].req_bool("ok").unwrap(), "{}", responses[0].dump());
     assert!(!responses[1].req_bool("ok").unwrap());
@@ -235,6 +235,68 @@ fn submit_variant_assertion_matches_served_model() {
     assert!(err.contains("mobilenetv2s") && err.contains("tiny"), "{err}");
     assert_eq!(stats.submitted, 1);
     assert_eq!(responses[2].req_str("state").unwrap(), "done");
+}
+
+/// Journal replay across sessions: a journaled session's finished job is
+/// restored as a status record by `--resume-jobs`, new submissions continue
+/// the id sequence, and a cleanly-finished journal is cleared by the next
+/// plain (non-resuming) session.
+#[test]
+fn journal_restores_finished_jobs_across_sessions() {
+    let dir = std::env::temp_dir().join(format!("galen_serve_journal_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+
+    let script1 = format!(
+        "{}\n{}\n",
+        submit_line("a", "pruning", 0.5),
+        r#"{"op":"result","job":"job-0","wait":true}"#,
+    );
+    let opts1 = ServeOptions {
+        workers: 1,
+        journal_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let (stats1, _) = run_session(&script1, &opts1);
+    assert_eq!(stats1.completed, 1);
+    assert!(dir.join("serve_journal.jsonl").exists());
+
+    // session 2 resumes: job-0 is a restored status record, a new submit
+    // continues the id sequence at job-1
+    let script2 = format!(
+        "{}\n{}\n{}\n",
+        r#"{"op":"list","id":"ls"}"#,
+        submit_line("b", "joint", 0.4),
+        r#"{"op":"result","job":"job-1","wait":true}"#,
+    );
+    let opts2 = ServeOptions {
+        workers: 1,
+        journal_dir: Some(dir.clone()),
+        resume_jobs: true,
+        ..Default::default()
+    };
+    let (stats2, responses2) = run_session(&script2, &opts2);
+    let jobs = responses2[0].req_arr("jobs").unwrap();
+    assert_eq!(jobs.len(), 1, "the finished job survives as a status row");
+    assert_eq!(jobs[0].req_str("job").unwrap(), "job-0");
+    assert_eq!(jobs[0].req_str("state").unwrap(), "done");
+    assert_eq!(responses2[1].req_str("job").unwrap(), "job-1");
+    assert_eq!(responses2[2].req_str("state").unwrap(), "done");
+    assert_eq!(stats2.submitted, 1, "restored jobs are not this session's work");
+    assert_eq!(stats2.resumed, 0);
+    assert_eq!(stats2.completed, 1);
+
+    // session 3 without --resume-jobs: every journaled job is terminal, so
+    // the stale journal is cleared and ids restart from job-0
+    let script3 = format!(
+        "{}\n{}\n",
+        submit_line("c", "pruning", 0.6),
+        r#"{"op":"result","job":"job-0","wait":true}"#,
+    );
+    let (stats3, responses3) = run_session(&script3, &opts1);
+    assert_eq!(responses3[0].req_str("job").unwrap(), "job-0");
+    assert_eq!(stats3.completed, 1);
+
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// Unknown keys in a submit spec — at the spec level and inside its
@@ -250,7 +312,7 @@ fn submit_rejects_unknown_keys_at_both_levels() {
     );
     let (stats, responses) = run_session(
         script,
-        &ServeOptions { workers: 1, results_dir: None, base_seed: None },
+        &ServeOptions { workers: 1, ..Default::default() },
     );
     assert_eq!(stats.submitted, 0);
 
