@@ -23,7 +23,10 @@
 //! needs nothing but the journal.  Replay is strict about interior
 //! corruption (a clean, actionable error) but tolerates an unparseable
 //! *final* line: a crash mid-append is exactly the failure this file
-//! exists to survive.
+//! exists to survive.  [`ServeJournal::open_append`] truncates such a torn
+//! tail before appending, so a resumed session's first record starts a
+//! fresh line instead of concatenating onto the fragment (which would turn
+//! a tolerated tail into hard interior corruption one restart later).
 
 use std::path::{Path, PathBuf};
 
@@ -31,7 +34,8 @@ use anyhow::Result;
 
 use super::service::JobStatus;
 use crate::search::SearchConfig;
-use crate::util::json::Json;
+use crate::testing::FaultPlan;
+use crate::util::json::{fsync_dir, Json};
 
 /// Bump when the journal line layout changes; mismatched journals are
 /// rejected at replay (never mis-parsed).
@@ -50,20 +54,51 @@ pub const SERVE_JOURNAL_FILE: &str = "serve_journal.jsonl";
 pub struct ServeJournal {
     path: PathBuf,
     file: std::fs::File,
+    /// Set when a failed append could not be rolled back: the on-disk tail
+    /// is a partial line, and appending more would corrupt the interior.
+    poisoned: bool,
+    /// Armed fault injections (tests; site `journal-append`).
+    faults: FaultPlan,
 }
 
 impl ServeJournal {
-    /// Open (or create) `dir/serve_journal.jsonl` for appending.
+    /// Open (or create) `dir/serve_journal.jsonl` for appending.  An
+    /// existing journal whose final line is torn (crash mid-append) is
+    /// truncated back to its last complete record first — otherwise the
+    /// first record this session appends would concatenate onto the torn
+    /// fragment and become unparseable *interior* corruption.
     pub fn open_append(dir: &Path) -> Result<Self> {
         std::fs::create_dir_all(dir)
             .map_err(|e| anyhow::anyhow!("creating journal dir {}: {e}", dir.display()))?;
         let path = dir.join(SERVE_JOURNAL_FILE);
+        let existed = path.exists();
+        if existed {
+            truncate_torn_tail(&path)?;
+        }
         let file = std::fs::OpenOptions::new()
             .create(true)
             .append(true)
             .open(&path)
             .map_err(|e| anyhow::anyhow!("opening serve journal {}: {e}", path.display()))?;
-        Ok(Self { path, file })
+        if !existed {
+            // the file's *existence* must survive power loss too, or the
+            // first fsynced record could vanish with its directory entry
+            fsync_dir(dir)
+                .map_err(|e| anyhow::anyhow!("syncing journal dir {}: {e}", dir.display()))?;
+        }
+        Ok(Self {
+            path,
+            file,
+            poisoned: false,
+            faults: FaultPlan::none(),
+        })
+    }
+
+    /// Arm fault injections on the append path (site `journal-append`,
+    /// fired between the write and its fsync).
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
     }
 
     /// Where this journal lives.
@@ -96,7 +131,12 @@ impl ServeJournal {
     }
 
     fn append(&mut self, job: &str, event: &str, fields: Vec<(&str, Json)>) -> Result<()> {
-        use std::io::Write as _;
+        anyhow::ensure!(
+            !self.poisoned,
+            "serve journal {} may end in a partial line (an earlier failed \
+             append could not be rolled back); refusing further appends",
+            self.path.display()
+        );
         let mut all = vec![
             ("schema_version", Json::num(SERVE_JOURNAL_SCHEMA_VERSION as f64)),
             ("kind", Json::str(JOURNAL_KIND)),
@@ -106,9 +146,39 @@ impl ServeJournal {
         all.extend(fields);
         let mut line = Json::obj(all).dump();
         line.push('\n');
+        let len_before = self
+            .file
+            .metadata()
+            .map(|m| m.len())
+            .map_err(|e| anyhow::anyhow!("stat of {}: {e}", self.path.display()))?;
+        if let Err(e) = self.write_and_sync(&line) {
+            // a failed append may have left part of the line on disk; roll
+            // back to the pre-append offset so later records cannot
+            // concatenate onto it (interior corruption at the next replay)
+            match self.file.set_len(len_before).and_then(|()| self.file.sync_data()) {
+                Ok(()) => {}
+                Err(te) => {
+                    self.poisoned = true;
+                    log::error!(
+                        "serve journal {}: rollback of a failed append also failed \
+                         ({te}); journal closed to further appends",
+                        self.path.display()
+                    );
+                }
+            }
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    fn write_and_sync(&mut self, line: &str) -> Result<()> {
+        use std::io::Write as _;
         self.file
             .write_all(line.as_bytes())
             .map_err(|e| anyhow::anyhow!("appending to {}: {e}", self.path.display()))?;
+        // fault site between write and fsync: the worst case — bytes may
+        // have reached the disk, but the append must still report failure
+        self.faults.trip("journal-append")?;
         // write-ahead: the record must be on disk before the transition is
         // acted on, or a crash could lose a job the client was promised
         self.file
@@ -116,6 +186,32 @@ impl ServeJournal {
             .map_err(|e| anyhow::anyhow!("syncing {}: {e}", self.path.display()))?;
         Ok(())
     }
+}
+
+/// Truncate `path` back to the end of its last complete (newline-terminated)
+/// record, dropping a torn final line left by a crash mid-append.
+fn truncate_torn_tail(path: &Path) -> Result<()> {
+    let bytes =
+        std::fs::read(path).map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    if bytes.is_empty() || bytes.ends_with(b"\n") {
+        return Ok(());
+    }
+    let keep = bytes.iter().rposition(|&b| b == b'\n').map_or(0, |i| i + 1) as u64;
+    log::warn!(
+        "serve journal {}: dropping torn final line (crash mid-append): \
+         truncating {} -> {keep} bytes",
+        path.display(),
+        bytes.len()
+    );
+    let f = std::fs::OpenOptions::new()
+        .write(true)
+        .open(path)
+        .map_err(|e| anyhow::anyhow!("opening {} for truncation: {e}", path.display()))?;
+    f.set_len(keep)
+        .map_err(|e| anyhow::anyhow!("truncating {}: {e}", path.display()))?;
+    f.sync_data()
+        .map_err(|e| anyhow::anyhow!("syncing {}: {e}", path.display()))?;
+    Ok(())
 }
 
 /// A job reconstructed from the journal: last status wins.
@@ -293,6 +389,56 @@ mod tests {
         let jobs = replay_journal(&dir).unwrap();
         assert_eq!(jobs.len(), 1);
         assert_eq!(jobs[0].status, JobStatus::Running);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopening_truncates_torn_tail_before_appending() {
+        let dir = tmp("torn_reopen");
+        {
+            let mut j = ServeJournal::open_append(&dir).unwrap();
+            j.record_submitted("job-0", &cfg()).unwrap();
+            j.record_status("job-0", JobStatus::Running, None).unwrap();
+        }
+        // crash mid-append: half a line, no trailing newline
+        let path = dir.join(SERVE_JOURNAL_FILE);
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str(r#"{"schema_version":1,"kind":"galen_serve_jour"#);
+        std::fs::write(&path, &text).unwrap();
+        // the resumed session appends over the torn tail...
+        {
+            let mut j = ServeJournal::open_append(&dir).unwrap();
+            j.record_resumed("job-0").unwrap();
+            j.record_status("job-0", JobStatus::Done, None).unwrap();
+        }
+        // ...and the *next* restart still replays cleanly: the fragment was
+        // truncated, not fused into an unparseable interior line
+        let jobs = replay_journal(&dir).unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].status, JobStatus::Done);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_append_rolls_back_partial_line() {
+        let dir = tmp("rollback");
+        let mut j = ServeJournal::open_append(&dir)
+            .unwrap()
+            .with_faults(FaultPlan::parse("journal-append:1:io-error").unwrap());
+        // the fault fires after the bytes are written: the append must
+        // report failure AND leave no partial line behind
+        let err = j.record_submitted("job-0", &cfg()).unwrap_err();
+        assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+        let raw = std::fs::read_to_string(dir.join(SERVE_JOURNAL_FILE)).unwrap();
+        assert!(raw.is_empty(), "rolled-back append left bytes: {raw:?}");
+        // the journal stays usable and the job id can be reused — replay's
+        // dense-id invariant holds
+        j.record_submitted("job-0", &cfg()).unwrap();
+        j.record_status("job-0", JobStatus::Done, None).unwrap();
+        drop(j);
+        let jobs = replay_journal(&dir).unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].status, JobStatus::Done);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -296,7 +296,7 @@ pub fn serve<R: BufRead, W: Write>(
         } else {
             refuse_or_clear_stale_journal(dir)?;
         }
-        let mut j = ServeJournal::open_append(dir)?;
+        let mut j = ServeJournal::open_append(dir)?.with_faults(opts.faults.clone());
         for &index in &initial_queue {
             j.record_resumed(&initial_jobs[index].id)?;
         }
@@ -551,7 +551,9 @@ fn op_submit(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
     let index = jobs.len();
     let id = format!("job-{index}");
     // write-ahead, under the jobs lock: the journal's submission order is
-    // the id order, and a job the journal cannot record is not accepted
+    // the id order, and a job the journal cannot record is not accepted (a
+    // failed append rolls the file back to its pre-append length, so the
+    // unburned id is safely reused by the next submit)
     if let Some(journal) = &svc.journal {
         sync::lock(journal)
             .record_submitted(&id, &cfg)
@@ -805,6 +807,8 @@ fn run_job(svc: &ServiceState<'_>, job: &Arc<Job>) {
 /// job restarts from episode 0 (determinism makes both paths reproduce the
 /// same result; a bad checkpoint must never strand a recoverable job).
 fn load_checkpoint(svc: &ServiceState<'_>, job: &Job, path: &Path) -> Option<Json> {
+    // reap temps a crashed process left between create and rename
+    crate::util::json::cleanup_stale_temps(path);
     if !path.exists() {
         log::info!(
             "serve: {}: no checkpoint at {}; restarting from episode 0",

@@ -30,8 +30,11 @@
 //! against this session's successful measurements (the same per-class fit
 //! `HybridProvider::calibrate` uses).  Degraded entries are flagged
 //! (`ProfileEntry::degraded`, counted by `stats().degraded`), excluded from
-//! the on-disk manifest (it must only contain real measurements), and
-//! surfaced in the provider's `backend()` provenance label.
+//! the on-disk manifest (it must only contain real measurements), never
+//! published to the shared sweep cache (a healthier worker should measure
+//! for real; a worker that nevertheless *adopts* a degraded entry counts it
+//! toward its own `degraded` stat), and surfaced in the provider's
+//! `backend()` provenance label.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -148,8 +151,9 @@ pub struct ProfilerStats {
     pub loaded: usize,
     /// Total entries currently cached.
     pub entries: usize,
-    /// Configurations that exhausted measurement retries and fell back to
-    /// the calibrated analytical estimate.
+    /// Configurations served by the calibrated analytical fallback — either
+    /// measured here with exhausted retries, or adopted from a sweep peer's
+    /// degraded entry.  Nonzero flips `backend()` to the fallback label.
     pub degraded: u64,
 }
 
@@ -233,6 +237,8 @@ impl MeasuredProfiler {
             .join(format!("{model}.json"));
         let mut p = Self::new(target, model, cfg);
         p.cache_path = Some(path.clone());
+        // reap temp files a crashed process left between create and rename
+        crate::util::json::cleanup_stale_temps(&path);
         if path.exists() {
             match p.load_manifest(&path) {
                 Ok(n) => {
@@ -289,17 +295,28 @@ impl MeasuredProfiler {
         }
         if let Some(e) = self.shared.as_ref().and_then(|s| s.get(key)) {
             // another sweep worker already measured this configuration;
-            // adopt its canonical entry (and persist it with ours)
+            // adopt its canonical entry (and persist it with ours).  An
+            // adopted fallback value counts toward OUR degraded stat too —
+            // provenance (`backend()`) must report that this provider serves
+            // analytical values, whoever computed them
             self.hits += 1;
             self.dirty = true;
+            if e.degraded {
+                self.degraded += 1;
+            }
             let latency_s = e.latency_s;
             self.entries.insert(key, e);
             return latency_s;
         }
         let mut entry = self.bench_with_retry(l, eff_cin, kept, mode, key);
-        if let Some(shared) = &self.shared {
-            // first publication wins; a racing worker's entry supersedes ours
-            entry = shared.insert_or_get(key, entry);
+        if !entry.degraded {
+            if let Some(shared) = &self.shared {
+                // first publication wins; a racing worker's entry supersedes
+                // ours.  Degraded (analytical-fallback) entries are never
+                // published: a fallback must not become canonical for the
+                // whole sweep when a healthier worker could still measure
+                entry = shared.insert_or_get(key, entry);
+            }
         }
         let latency_s = entry.latency_s;
         self.entries.insert(key, entry);
@@ -904,6 +921,55 @@ mod tests {
         assert!(p.model_latency(&ir, &policy) > 0.0);
         assert_eq!(p.stats().degraded, 0);
         assert!(p.stats().measured > 0);
+    }
+
+    #[test]
+    fn degraded_entries_are_not_published_to_the_shared_cache() {
+        let ir = ir();
+        let shared = SharedProfileCache::new();
+        // worker A degrades its first config (3 exhausted attempts)
+        let mut a = fast_profiler()
+            .with_shared_cache(shared.clone())
+            .with_faults(FaultPlan::parse("measure:1:io-error,measure:2:io-error,measure:3:io-error").unwrap());
+        let policy = DiscretePolicy::reference(&ir);
+        a.model_latency(&ir, &policy);
+        assert_eq!(a.stats().degraded, 1);
+        // the fallback was NOT published: the shared cache only carries A's
+        // real measurements
+        assert_eq!(shared.len(), a.stats().entries - 1);
+        // worker B re-measures the config A degraded on, for real
+        let mut b = fast_profiler().with_shared_cache(shared.clone());
+        b.model_latency(&ir, &policy);
+        assert_eq!(b.stats().degraded, 0, "B must not inherit A's fallback");
+        assert_eq!(b.stats().measured, 1, "B re-measures only the degraded config");
+        assert_eq!(shared.len(), a.stats().entries, "B published the missing entry");
+    }
+
+    #[test]
+    fn adopted_degraded_entry_counts_toward_provenance() {
+        use crate::hw::LatencyProvider as _;
+        let ir = ir();
+        let shared = SharedProfileCache::new();
+        // simulate a (hypothetical) degraded entry published to the shared
+        // cache: any adopter must count it and flip its provenance label
+        let l = &ir.layers[0];
+        let key = config_key(l, l.cin, l.cout, QuantMode::Fp32);
+        shared.insert_or_get(
+            key,
+            ProfileEntry {
+                latency_s: 1e-6,
+                mad_s: 0.0,
+                samples: 0,
+                layer: l.name.clone(),
+                mode: "FP32".into(),
+                degraded: true,
+            },
+        );
+        let mut p = fast_profiler().with_shared_cache(shared);
+        assert_eq!(p.backend(), "measured");
+        p.layer_latency(l, l.cin, l.cout, QuantMode::Fp32);
+        assert_eq!(p.stats().degraded, 1, "adoption must bump the adopter's stat");
+        assert_eq!(p.backend(), "measured+analytical-fallback");
     }
 
     #[test]

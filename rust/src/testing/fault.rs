@@ -28,6 +28,7 @@
 //! | `checkpoint-read`  | serve worker, checkpoint load on `--resume-jobs` | corrupt, io-error |
 //! | `measure`          | `hw::MeasuredProfiler`, one kernel measurement | io-error, panic |
 //! | `profile-write`    | `hw::MeasuredProfiler::save` manifest write | io-error |
+//! | `journal-append`   | `coordinator::ServeJournal`, between a record's write and its fsync | io-error |
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;

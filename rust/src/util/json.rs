@@ -219,26 +219,53 @@ impl Json {
     }
 
     /// Durable variant of [`Json::write_file`]: pretty-print to a sibling
-    /// temp file, fsync it, and atomically rename it over `path`.  A crash
+    /// temp file, fsync it, atomically rename it over `path`, and fsync the
+    /// parent directory so the rename itself survives power loss.  A crash
     /// mid-write can never leave a torn or half-written document behind —
-    /// readers see either the old file or the complete new one.  Used for
-    /// crash-recovery artifacts (search checkpoints, profile manifests).
+    /// readers see either the old file or the complete new one.  The temp
+    /// name is unique per process and call, so concurrent writers (e.g.
+    /// serve workers persisting profilers that share one manifest path)
+    /// each rename their *own* complete file instead of interleaving into a
+    /// shared one.  Used for crash-recovery artifacts (search checkpoints,
+    /// profile manifests); pair load sites with [`cleanup_stale_temps`] to
+    /// reap temps orphaned by a crash between create and rename.
     pub fn write_file_atomic(&self, path: &std::path::Path) -> anyhow::Result<()> {
         use std::io::Write as _;
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SEQ: AtomicU64 = AtomicU64::new(0);
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let tmp = path.with_extension("tmp");
-        {
+        let file_name = path
+            .file_name()
+            .ok_or_else(|| anyhow::anyhow!("no file name in {}", path.display()))?
+            .to_string_lossy()
+            .into_owned();
+        let tmp = path.with_file_name(format!(
+            ".{file_name}.{}-{}.tmp",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let write = (|| -> anyhow::Result<()> {
             let mut f = std::fs::File::create(&tmp)
                 .map_err(|e| anyhow::anyhow!("creating {}: {e}", tmp.display()))?;
             f.write_all(self.pretty(0).as_bytes())
                 .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
             f.sync_data()
                 .map_err(|e| anyhow::anyhow!("syncing {}: {e}", tmp.display()))?;
+            std::fs::rename(&tmp, path).map_err(|e| {
+                anyhow::anyhow!("renaming {} -> {}: {e}", tmp.display(), path.display())
+            })?;
+            Ok(())
+        })();
+        if write.is_err() {
+            // don't leave our own temp behind on a failed write/rename
+            let _ = std::fs::remove_file(&tmp);
+            return write;
         }
-        std::fs::rename(&tmp, path)
-            .map_err(|e| anyhow::anyhow!("renaming {} -> {}: {e}", tmp.display(), path.display()))?;
+        if let Some(dir) = path.parent() {
+            fsync_dir(dir).map_err(|e| anyhow::anyhow!("syncing dir {}: {e}", dir.display()))?;
+        }
         Ok(())
     }
 
@@ -307,6 +334,53 @@ impl Json {
                 format!("{{\n{}\n{pad}}}", items.join(",\n"))
             }
             _ => self.dump(),
+        }
+    }
+}
+
+/// Fsync a directory so a rename or file creation inside it is durable
+/// (POSIX requires syncing the directory for the *entry* to survive power
+/// loss; the file's own fsync only covers its contents).  A no-op on
+/// platforms where directories cannot be opened for syncing.
+pub fn fsync_dir(dir: &std::path::Path) -> std::io::Result<()> {
+    #[cfg(unix)]
+    {
+        std::fs::File::open(dir)?.sync_all()?;
+    }
+    #[cfg(not(unix))]
+    let _ = dir;
+    Ok(())
+}
+
+/// Best-effort reaper for temp files orphaned by a crash between
+/// [`Json::write_file_atomic`]'s create and rename: removes siblings of
+/// `path` matching its `.<name>.<pid>-<seq>.tmp` pattern whose pid is not
+/// this process (a live writer in this process may still rename its temp).
+/// Call at load sites (manifest/checkpoint readers), never on hot paths.
+pub fn cleanup_stale_temps(path: &std::path::Path) {
+    let (Some(dir), Some(name)) = (path.parent(), path.file_name()) else {
+        return;
+    };
+    let prefix = format!(".{}.", name.to_string_lossy());
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    let own_pid = std::process::id().to_string();
+    for entry in entries.flatten() {
+        let fname = entry.file_name();
+        let fname = fname.to_string_lossy();
+        let Some(middle) = fname
+            .strip_prefix(prefix.as_str())
+            .and_then(|r| r.strip_suffix(".tmp"))
+        else {
+            continue;
+        };
+        match middle.split_once('-') {
+            Some((pid, seq)) if pid != own_pid && !pid.is_empty() && !seq.is_empty() => {
+                log::info!("removing orphaned temp file {}", entry.path().display());
+                let _ = std::fs::remove_file(entry.path());
+            }
+            _ => {}
         }
     }
 }
@@ -607,6 +681,17 @@ mod tests {
         assert!(back.req_hex64("f32s").is_err());
     }
 
+    fn temp_siblings(dir: &std::path::Path) -> Vec<String> {
+        std::fs::read_dir(dir)
+            .map(|rd| {
+                rd.flatten()
+                    .map(|e| e.file_name().to_string_lossy().into_owned())
+                    .filter(|n| n.ends_with(".tmp"))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
     #[test]
     fn write_file_atomic_replaces_and_leaves_no_temp() {
         let dir = std::env::temp_dir().join(format!("galen_json_atomic_{}", std::process::id()));
@@ -618,7 +703,56 @@ mod tests {
         let b = Json::obj(vec![("v", Json::num(2.0))]);
         b.write_file_atomic(&path).unwrap();
         assert_eq!(Json::read_file(&path).unwrap(), b);
-        assert!(!path.with_extension("tmp").exists(), "temp file must not survive");
+        assert_eq!(temp_siblings(&dir), Vec::<String>::new(), "temp files must not survive");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn write_file_atomic_concurrent_writers_never_tear() {
+        let dir = std::env::temp_dir().join(format!("galen_json_race_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("shared.json");
+        // many threads hammer the same destination path: every writer owns
+        // a distinct temp, so the published file is always one writer's
+        // complete document, never an interleaving
+        std::thread::scope(|scope| {
+            for t in 0..8u32 {
+                let path = path.clone();
+                scope.spawn(move || {
+                    for i in 0..16 {
+                        let doc = Json::obj(vec![
+                            ("writer", Json::num(t as f64)),
+                            ("iter", Json::num(i as f64)),
+                            ("pad", Json::str("x".repeat(512))),
+                        ]);
+                        doc.write_file_atomic(&path).unwrap();
+                        let seen = Json::read_file(&path).unwrap();
+                        assert_eq!(seen.req_str("pad").unwrap().len(), 512);
+                    }
+                });
+            }
+        });
+        assert_eq!(temp_siblings(&dir), Vec::<String>::new());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cleanup_reaps_foreign_orphans_only() {
+        let dir = std::env::temp_dir().join(format!("galen_json_reap_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("doc.json");
+        // a dead process's orphan, our own in-flight temp, and a bystander
+        let foreign = dir.join(format!(".doc.json.{}-0.tmp", std::process::id().wrapping_add(1)));
+        let ours = dir.join(format!(".doc.json.{}-7.tmp", std::process::id()));
+        let bystander = dir.join("other.tmp");
+        for f in [&foreign, &ours, &bystander] {
+            std::fs::write(f, "x").unwrap();
+        }
+        cleanup_stale_temps(&path);
+        assert!(!foreign.exists(), "foreign orphan must be reaped");
+        assert!(ours.exists(), "this process's temp may still be renamed");
+        assert!(bystander.exists(), "unrelated files are untouched");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
