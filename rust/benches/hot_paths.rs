@@ -13,6 +13,9 @@
 //!   * search driver vs the pre-driver monolith shape: `run_search` (no
 //!     observers) vs a driver with a live event observer — the event
 //!     stream's overhead budget is < 2% (verdict + pct in the JSON meta)
+//!   * observability overhead: the same search with the process-wide
+//!     metrics gate ON (the shipped default) vs OFF — the instrumentation
+//!     budget is < 2% with metrics on (verdict + pct in the JSON meta)
 //!
 //!     cargo bench --bench hot_paths
 
@@ -190,6 +193,34 @@ fn main() {
          (budget < 2%)"
     );
 
+    // ---- observability overhead: metrics on vs everything off ----
+    // The same 3-episode search with the process-wide metrics gate OFF vs
+    // ON (the shipped default); tracing is off in both runs (GALEN_TRACE
+    // is never set here).  The delta is the full cost of the registry
+    // instrumentation on the hottest path we ship — step counters, reward
+    // gauges, cache counters, measurement histograms.  Budget: < 2% with
+    // metrics on; the off run demonstrates the disabled gate costs one
+    // relaxed load + branch per site.  The gate is restored to its default
+    // (on) before any later section runs.
+    galen::obs::metrics::set_enabled(false);
+    let metrics_off_ns = b
+        .iter("search/obs_overhead/metrics-off (3 ep)", || {
+            let ev = galen::search::SimEvaluator::new(&ir);
+            let mut s = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 5);
+            galen::search::run_search(&ir, &sens, &ev, &mut s, &mapper, &drv_cfg, None).unwrap()
+        })
+        .median_ns();
+    galen::obs::metrics::set_enabled(true);
+    let metrics_on_ns = b
+        .iter("search/obs_overhead/metrics-on (3 ep)", || {
+            let ev = galen::search::SimEvaluator::new(&ir);
+            let mut s = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 5);
+            galen::search::run_search(&ir, &sens, &ev, &mut s, &mapper, &drv_cfg, None).unwrap()
+        })
+        .median_ns();
+    let obs_overhead_pct = (metrics_on_ns / metrics_off_ns - 1.0) * 100.0;
+    println!("observability metrics overhead: {obs_overhead_pct:+.2}% (budget < 2%)");
+
     // ---- parallel sweep orchestrator: N workers vs 1 on the same grid ----
     // 6 jobs (3 agents x 2 targets) of deliberately tiny searches: the
     // section tracks orchestrator throughput (fan-out overhead, shared
@@ -309,6 +340,8 @@ fn main() {
                 "driver_event_overhead_ok",
                 (driver_event_overhead_pct < 2.0).to_string(),
             ),
+            ("obs_overhead_pct", format!("{obs_overhead_pct:.3}")),
+            ("obs_overhead_ok", (obs_overhead_pct < 2.0).to_string()),
         ],
     )
     .expect("write BENCH_hot_paths.json");

@@ -29,13 +29,32 @@
 //! a tolerated tail into hard interior corruption one restart later).
 
 use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+use std::time::Instant;
 
 use anyhow::Result;
 
 use super::service::JobStatus;
+use crate::obs;
 use crate::search::SearchConfig;
 use crate::testing::FaultPlan;
 use crate::util::json::{fsync_dir, Json};
+
+/// Write+fsync latency of one journal append (the durability cost every
+/// job transition pays; `metrics` verb / `galen report --metrics`).
+fn obs_append_seconds() -> &'static obs::Histogram {
+    static H: OnceLock<obs::Histogram> = OnceLock::new();
+    H.get_or_init(|| {
+        obs::Histogram::register("serve_journal_append_seconds", &[], &obs::latency_bounds())
+    })
+}
+
+/// Jobs reconstructed by journal replays this process — the registry
+/// aggregate behind the per-call `replay_journal(..).len()` view.
+fn obs_replayed() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| obs::Counter::register("serve_journal_replayed_jobs_total", &[]))
+}
 
 /// Bump when the journal line layout changes; mismatched journals are
 /// rejected at replay (never mis-parsed).
@@ -151,7 +170,10 @@ impl ServeJournal {
             .metadata()
             .map(|m| m.len())
             .map_err(|e| anyhow::anyhow!("stat of {}: {e}", self.path.display()))?;
-        if let Err(e) = self.write_and_sync(&line) {
+        let t0 = Instant::now();
+        let written = self.write_and_sync(&line);
+        obs_append_seconds().observe_duration(t0.elapsed());
+        if let Err(e) = written {
             // a failed append may have left part of the line on disk; roll
             // back to the pre-append offset so later records cannot
             // concatenate onto it (interior corruption at the next replay)
@@ -265,6 +287,7 @@ pub fn replay_journal(dir: &Path) -> Result<Vec<ReplayedJob>> {
             e.context(format!("serve journal {} line {}", path.display(), lineno + 1))
         })?;
     }
+    obs_replayed().add(jobs.len() as u64);
     Ok(jobs)
 }
 

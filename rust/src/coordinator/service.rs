@@ -15,6 +15,7 @@
 //! | `cancel`   | `job`                                  | `state`                        |
 //! | `forget`   | `job`                                  | `state` (events/outcome freed) |
 //! | `list`     |                                        | `jobs[]`                       |
+//! | `metrics`  |                                        | `metrics` (registry snapshot)  |
 //! | `shutdown` |                                        | (serve loop exits)             |
 //!
 //! Jobs multiplex over a fixed worker pool: each worker drives a
@@ -57,8 +58,8 @@ use std::io::{BufRead, Write};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -67,14 +68,51 @@ use crate::coordinator::journal::{replay_journal, ServeJournal, SERVE_JOURNAL_FI
 use crate::coordinator::ExperimentRecord;
 use crate::eval::SensitivityTable;
 use crate::model::ModelIr;
+use crate::obs;
 use crate::search::{
     validate_checkpoint, LatencyFactory, SearchBuilder, SearchConfig, SearchDriver, SearchEvent,
     SearchOutcome, SimEvaluator,
 };
 use crate::testing::FaultPlan;
 use crate::util::json::Json;
+use crate::util::logging;
 use crate::util::retry::Backoff;
 use crate::util::sync;
+
+// Registry handles for the service's process-wide series, resolved once
+// per process.  Per-request verb histograms register through the map on
+// each request instead — the protocol loop parses JSON and flushes a
+// socket per line, so one cold map lookup is noise there, and verbs are a
+// closed set so series cardinality stays bounded.
+fn obs_queue_depth() -> &'static obs::Gauge {
+    static G: OnceLock<obs::Gauge> = OnceLock::new();
+    G.get_or_init(|| obs::Gauge::register("serve_queue_depth", &[]))
+}
+
+fn obs_active_jobs() -> &'static obs::Gauge {
+    static G: OnceLock<obs::Gauge> = OnceLock::new();
+    G.get_or_init(|| obs::Gauge::register("serve_active_jobs", &[]))
+}
+
+fn obs_jobs_completed() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| obs::Counter::register("serve_jobs_completed_total", &[]))
+}
+
+fn obs_jobs_failed() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| obs::Counter::register("serve_jobs_failed_total", &[]))
+}
+
+fn obs_jobs_resumed() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| obs::Counter::register("serve_jobs_resumed_total", &[]))
+}
+
+fn obs_checkpoint_retries() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| obs::Counter::register("serve_checkpoint_retries_total", &[]))
+}
 
 /// Version of the JSONL protocol (the `hello`-less handshake: clients can
 /// check it via `list` responses).
@@ -309,6 +347,10 @@ pub fn serve<R: BufRead, W: Write>(
             initial_queue.len()
         );
     }
+    if !initial_queue.is_empty() {
+        obs_jobs_resumed().add(initial_queue.len() as u64);
+    }
+    obs_queue_depth().set(initial_queue.len() as f64);
     let svc = ServiceState {
         ir,
         sens,
@@ -327,8 +369,9 @@ pub fn serve<R: BufRead, W: Write>(
     };
     log::info!("serve: {workers} workers, protocol v{SERVE_PROTOCOL_VERSION}");
     let protocol_result: Result<()> = std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| worker_loop(&svc));
+        for w in 0..workers {
+            let svc = &svc;
+            scope.spawn(move || worker_loop(svc, w));
         }
         let r = protocol_loop(&svc, input, output);
         // EOF (or error): let the workers drain the queue and exit.  The
@@ -436,10 +479,24 @@ fn protocol_loop<R: BufRead, W: Write>(
         let response = match Json::parse(line) {
             Err(e) => error_response(anyhow::anyhow!("bad request json: {e}")),
             Ok(req) => {
+                // label by verb only for the closed op set — arbitrary
+                // client strings must not mint unbounded metric series
+                let verb = match req.get("op").and_then(Json::as_str) {
+                    Some(op) if SERVE_OPS.contains(&op) => op.to_string(),
+                    _ => "other".to_string(),
+                };
+                let _sp = obs::trace::span("serve_request").arg("verb", verb.clone());
+                let t0 = Instant::now();
                 let mut r = match handle_request(svc, &req) {
                     Ok(j) => j,
                     Err(e) => error_response(e),
                 };
+                obs::Histogram::register(
+                    "serve_request_seconds",
+                    &[("verb", &verb)],
+                    &obs::latency_bounds(),
+                )
+                .observe_duration(t0.elapsed());
                 if let (Json::Obj(m), Some(id)) = (&mut r, req.get("id")) {
                     m.insert("id".to_string(), id.clone());
                 }
@@ -455,6 +512,12 @@ fn protocol_loop<R: BufRead, W: Write>(
     Ok(())
 }
 
+/// The closed set of protocol operations (also the valid per-verb metric
+/// labels for `serve_request_seconds`).
+const SERVE_OPS: &[&str] = &[
+    "submit", "status", "events", "result", "cancel", "forget", "list", "metrics", "shutdown",
+];
+
 fn handle_request(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
     let op = req.req_str("op")?;
     match op {
@@ -465,6 +528,7 @@ fn handle_request(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
         "cancel" => op_cancel(svc, req),
         "forget" => op_forget(svc, req),
         "list" => op_list(svc),
+        "metrics" => op_metrics(req),
         "shutdown" => {
             svc.shutdown.store(true, Ordering::SeqCst);
             Ok(Json::obj(vec![
@@ -473,7 +537,7 @@ fn handle_request(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
             ]))
         }
         other => anyhow::bail!(
-            "unknown op '{other}' (submit|status|events|result|cancel|forget|list|shutdown)"
+            "unknown op '{other}' (submit|status|events|result|cancel|forget|list|metrics|shutdown)"
         ),
     }
 }
@@ -577,6 +641,7 @@ fn op_submit(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
     drop(jobs);
     let mut queue = sync::lock(&svc.queue);
     queue.push_back(index);
+    obs_queue_depth().set(queue.len() as f64);
     svc.queue_cv.notify_one();
     drop(queue);
     Ok(Json::obj(vec![
@@ -720,17 +785,47 @@ fn op_list(svc: &ServiceState<'_>) -> Result<Json> {
     ]))
 }
 
+/// The live registry snapshot (`op: "metrics"`): everything the process
+/// has recorded — this service's request/queue/job series, the drivers'
+/// search series, the latency backends' cache and measurement series.
+/// Strict like every other op: only `op` and `id` are valid keys, so a
+/// typoed filter field fails loudly instead of silently returning the
+/// whole snapshot.
+fn op_metrics(req: &Json) -> Result<Json> {
+    const KEYS: &[&str] = &["op", "id"];
+    let obj = req
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("metrics request must be a JSON object"))?;
+    for key in obj.keys() {
+        anyhow::ensure!(
+            KEYS.contains(&key.as_str()),
+            "unknown metrics key '{key}' (valid keys: {})",
+            KEYS.join(", ")
+        );
+    }
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("metrics", obs::MetricsSnapshot::capture().to_json()),
+    ]))
+}
+
 /// Pull jobs off the queue until shutdown is flagged *and* the queue is
 /// empty — submitted work always drains, even when the client hangs up
 /// right after submitting.  Idle workers park on the queue condvar (no
-/// polling); submit and shutdown wake them.
-fn worker_loop(svc: &ServiceState<'_>) {
+/// polling); submit and shutdown wake them.  Every log line from this
+/// thread carries the worker's id (`w<n>`, or `w<n>/<job>` while driving
+/// a job) via the thread-local logging context.
+fn worker_loop(svc: &ServiceState<'_>, worker: usize) {
+    let _ctx = logging::push_context(format!("w{worker}"));
     let mut queue = sync::lock(&svc.queue);
     loop {
         if let Some(index) = queue.pop_front() {
+            obs_queue_depth().set(queue.len() as f64);
             let job = sync::lock(&svc.jobs)[index].clone();
             drop(queue);
+            let _job_ctx = logging::push_context(format!("w{worker}/{}", job.id));
             run_job(svc, &job);
+            drop(_job_ctx);
             queue = sync::lock(&svc.queue);
             continue;
         }
@@ -769,6 +864,10 @@ fn run_job(svc: &ServiceState<'_>, job: &Arc<Job>) {
         st.status = JobStatus::Running;
     }
     journal_status(svc, &job.id, JobStatus::Running, None);
+    obs_active_jobs().add(1.0);
+    let _sp = obs::trace::span("serve_job")
+        .arg("job", job.id.clone())
+        .arg("agent", job.cfg.agent.to_string());
     log::info!("serve: {} started ({} c={})", job.id, job.cfg.agent, job.cfg.target);
     let result = match catch_unwind(AssertUnwindSafe(|| drive_job(svc, job))) {
         Ok(r) => r,
@@ -780,6 +879,7 @@ fn run_job(svc: &ServiceState<'_>, job: &Arc<Job>) {
     match result {
         Ok(Some((outcome, artifact))) => {
             journal_status(svc, &job.id, JobStatus::Done, None);
+            obs_jobs_completed().inc();
             job.terminal_transition(|st| {
                 st.outcome = Some(outcome);
                 st.artifact = artifact;
@@ -794,12 +894,14 @@ fn run_job(svc: &ServiceState<'_>, job: &Arc<Job>) {
             let msg = format!("{e:#}");
             log::warn!("serve: {} failed: {msg}", job.id);
             journal_status(svc, &job.id, JobStatus::Failed, Some(&msg));
+            obs_jobs_failed().inc();
             job.terminal_transition(|st| {
                 st.error = Some(msg);
                 st.status = JobStatus::Failed;
             });
         }
     }
+    obs_active_jobs().add(-1.0);
 }
 
 /// Load a resumed job's checkpoint leniently: any problem — missing file,
@@ -862,7 +964,10 @@ fn maybe_checkpoint(svc: &ServiceState<'_>, job: &Job, driver: &SearchDriver<'_>
         Duration::from_millis(200),
         job.cfg.seed,
     );
-    let written = backoff.run(|_| {
+    let written = backoff.run(|attempt| {
+        if attempt > 0 {
+            obs_checkpoint_retries().inc();
+        }
         svc.faults.trip("checkpoint-write")?;
         doc.write_file_atomic(&path)
     });

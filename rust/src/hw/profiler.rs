@@ -38,6 +38,7 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -47,6 +48,7 @@ use super::shared::SharedProfileCache;
 use super::target::HwTarget;
 use crate::compress::{DiscretePolicy, QuantMode};
 use crate::model::{Layer, LayerKind, ModelIr};
+use crate::obs;
 use crate::tensor::depthwise::{conv_dw_f32, conv_dw_i8, QuantizedDwWeights};
 use crate::tensor::quant::{gemm_i8, gemm_i8_packed, QuantizedMat, QuantizedTensor};
 use crate::tensor::Mat;
@@ -60,6 +62,45 @@ use crate::util::Fnv1a;
 /// Bump when the on-disk manifest layout changes; mismatched caches are
 /// ignored (never mis-parsed).
 pub const PROFILE_SCHEMA_VERSION: usize = 1;
+
+// Process-wide registry aggregates of the per-instance `ProfilerStats`
+// counters: every profiler increments the same series at the same sites,
+// so the `metrics` snapshot is the one process-level source of truth
+// while `stats()` remains the exact per-object view the tests (and the
+// `backend()` provenance label) rely on.
+
+fn obs_cache_hits() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| obs::Counter::register("latency_cache_hits_total", &[("cache", "profile")]))
+}
+
+fn obs_measurements() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| obs::Counter::register("profiler_measurements_total", &[]))
+}
+
+fn obs_degraded() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| obs::Counter::register("profiler_degraded_total", &[]))
+}
+
+fn obs_reruns() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| obs::Counter::register("profiler_outlier_reruns_total", &[]))
+}
+
+/// Per-mode-class steady-state measurement latency histograms
+/// (`class_id` 0/1/2 = fp32/int8/mix), standard deterministic layout.
+fn obs_measure_hist(class_id: u64) -> &'static obs::Histogram {
+    static H: OnceLock<[obs::Histogram; QuantMode::CLASSES]> = OnceLock::new();
+    let all = H.get_or_init(|| {
+        let bounds = obs::latency_bounds();
+        ["fp32", "int8", "mix"].map(|class| {
+            obs::Histogram::register("profiler_measure_seconds", &[("class", class)], &bounds)
+        })
+    });
+    &all[(class_id as usize).min(QuantMode::CLASSES - 1)]
+}
 
 /// Measurement-harness knobs.
 #[derive(Clone, Debug)]
@@ -141,6 +182,15 @@ pub struct ProfileEntry {
 }
 
 /// Cache/measurement counters since construction.
+///
+/// This is the exact **per-instance** view (what `backend()` provenance
+/// and the unit tests rely on); every event behind it also increments the
+/// process-wide metrics registry at the same site
+/// (`profiler_measurements_total`, `profiler_degraded_total`,
+/// `profiler_outlier_reruns_total`,
+/// `latency_cache_hits_total{cache="profile"}` and the per-class
+/// `profiler_measure_seconds` histograms), which is the aggregate the
+/// `metrics` serve verb and `galen report --metrics` surface.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ProfilerStats {
     /// Lookups served from the cache (memory or disk-loaded).
@@ -291,6 +341,7 @@ impl MeasuredProfiler {
         let key = config_key(l, eff_cin, kept, mode);
         if let Some(e) = self.entries.get(&key) {
             self.hits += 1;
+            obs_cache_hits().inc();
             return e.latency_s;
         }
         if let Some(e) = self.shared.as_ref().and_then(|s| s.get(key)) {
@@ -300,9 +351,11 @@ impl MeasuredProfiler {
             // provenance (`backend()`) must report that this provider serves
             // analytical values, whoever computed them
             self.hits += 1;
+            obs_cache_hits().inc();
             self.dirty = true;
             if e.degraded {
                 self.degraded += 1;
+                obs_degraded().inc();
             }
             let latency_s = e.latency_s;
             self.entries.insert(key, e);
@@ -334,6 +387,9 @@ impl MeasuredProfiler {
         mode: QuantMode,
         key: u64,
     ) -> ProfileEntry {
+        let _sp = obs::trace::span("measure")
+            .arg("layer", l.name.clone())
+            .arg("mode", mode.label());
         let backoff = Backoff::new(
             self.cfg.retry_attempts,
             self.cfg.retry_base,
@@ -356,6 +412,8 @@ impl MeasuredProfiler {
         match measured {
             Ok((latency_s, mad_s, samples)) => {
                 self.measured += 1;
+                obs_measurements().inc();
+                obs_measure_hist(mode.class_id()).observe(latency_s);
                 // feed the fallback calibration: least squares on the
                 // relative residual, per mode class (same fit as
                 // HybridProvider::calibrate)
@@ -377,6 +435,7 @@ impl MeasuredProfiler {
             }
             Err(e) => {
                 self.degraded += 1;
+                obs_degraded().inc();
                 let c = mode.class_id() as usize;
                 let scale = if self.calib_den[c] > 0.0 {
                     self.calib_num[c] / self.calib_den[c]
@@ -714,6 +773,9 @@ fn run_steady_state(cfg: &ProfilerConfig, mut run: impl FnMut()) -> (f64, f64, u
         }
         let (med, mad) = trimmed_median_mad(&samples, cfg.trim_frac);
         if mad <= cfg.rel_mad_limit * med || attempt >= cfg.max_reruns {
+            if attempt > 0 {
+                obs_reruns().add(attempt as u64);
+            }
             return (med, mad, samples.len());
         }
         attempt += 1;

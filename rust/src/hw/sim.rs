@@ -20,13 +20,30 @@
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 
+use std::sync::OnceLock;
+
 use super::cost::CostModel;
 use super::shared::SharedCostCache;
 use crate::compress::{DiscretePolicy, QuantMode};
 use crate::model::{LayerKind, ModelIr};
+use crate::obs;
 use crate::util::rng::Pcg64;
 use crate::util::stats::median;
 use crate::util::Fnv1a;
+
+/// Process-wide aggregates of the per-instance `cache_stats()` counters:
+/// every simulator increments the same `cache="sim"` registry series, so
+/// the `metrics` snapshot shows sweep-wide cache effectiveness while the
+/// per-instance `Cell`s stay the exact per-object view the tests assert.
+fn sim_cache_hits() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| obs::Counter::register("latency_cache_hits_total", &[("cache", "sim")]))
+}
+
+fn sim_cache_misses() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| obs::Counter::register("latency_cache_misses_total", &[("cache", "sim")]))
+}
 
 /// One latency measurement (seconds) with its raw samples.
 #[derive(Clone, Debug)]
@@ -181,6 +198,9 @@ impl LatencySimulator {
 
     /// (cache hits, cache misses) since construction / `reset_cache_stats`.
     /// Shared-cache hits count as hits (no analytical evaluation happened).
+    /// This is the exact per-instance view; the same events also aggregate
+    /// process-wide into the metrics registry as
+    /// `latency_cache_hits_total{cache="sim"}` / `..misses_total{..}`.
     pub fn cache_stats(&self) -> (u64, u64) {
         (self.hits.get(), self.misses.get())
     }
@@ -204,6 +224,7 @@ impl LatencySimulator {
         let key = (i, eff_cin, cmp.kept_channels, cmp.quant);
         if let Some(&v) = cache.get(&key) {
             self.hits.set(self.hits.get() + 1);
+            sim_cache_hits().inc();
             return v;
         }
         if let Some(shared) = &self.shared {
@@ -211,16 +232,19 @@ impl LatencySimulator {
             if let Some(v) = shared.get(sk) {
                 // another sweep worker already paid for this configuration
                 self.hits.set(self.hits.get() + 1);
+                sim_cache_hits().inc();
                 cache.insert(key, v);
                 return v;
             }
             self.misses.set(self.misses.get() + 1);
+            sim_cache_misses().inc();
             let v = self.cost.layer_total(l, eff_cin, cmp.kept_channels, cmp.quant);
             cache.insert(key, v);
             shared.insert(sk, v);
             return v;
         }
         self.misses.set(self.misses.get() + 1);
+        sim_cache_misses().inc();
         let v = self.cost.layer_total(l, eff_cin, cmp.kept_channels, cmp.quant);
         cache.insert(key, v);
         v

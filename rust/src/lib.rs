@@ -82,6 +82,8 @@ pub mod hw;
 pub mod model;
 /// From-scratch neural-network substrate (MLP + Adam) for the agents.
 pub mod nn;
+/// Observability: metrics registry, span tracing, snapshots.
+pub mod obs;
 /// The absolute reward function (paper Eq. 6).
 pub mod reward;
 /// PJRT runtime: loads and executes the AOT artifacts.

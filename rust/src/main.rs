@@ -8,6 +8,11 @@
 //!   sensitivity  compute + print the layer sensitivity table (Figure 6)
 //!   latency      profile the hardware simulator on a model variant
 //!   validate     evaluate a saved policy (accuracy + latency + retrain)
+//!   report       render saved observability artifacts (--metrics)
+//!
+//! Every subcommand honors `GALEN_TRACE`: set it to trace the run's spans
+//! into `results/trace_<command>.json` (Chrome trace-event format) and
+//! write the final metrics snapshot to `results/metrics_<command>.json`.
 //!
 //! Python never runs here: everything executes against AOT artifacts in
 //! `artifacts/` and the analytical hardware substrate.
@@ -34,6 +39,9 @@ fn main() {
             std::process::exit(2);
         }
     };
+    if let Some(path) = galen::obs::trace::init_from_env(cmd) {
+        log::info!("GALEN_TRACE: tracing spans to {}", path.display());
+    }
     let r = match cmd {
         "search" => cmd_search(&rest),
         "sweep" => cmd_sweep(&rest),
@@ -42,6 +50,7 @@ fn main() {
         "sensitivity" => cmd_sensitivity(&rest),
         "latency" => cmd_latency(&rest),
         "validate" => cmd_validate(&rest),
+        "report" => cmd_report(&rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             Ok(())
@@ -51,10 +60,34 @@ fn main() {
             std::process::exit(2);
         }
     };
+    finish_observability(cmd);
     if let Err(e) = r {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// Exit-time observability flush: with `GALEN_TRACE` active, write the
+/// final metrics snapshot next to the trace
+/// (`results/metrics_<command>.json`) and the Chrome trace itself, then
+/// drain buffered stderr.  Best-effort by design — a full disk must not
+/// turn a finished search into a failure.
+fn finish_observability(cmd: &str) {
+    if galen::obs::trace::enabled() {
+        let path = galen::results_dir().join(format!("metrics_{cmd}.json"));
+        let snap = galen::obs::MetricsSnapshot::capture();
+        if let Err(e) = snap.to_json().write_file(&path) {
+            log::warn!("metrics snapshot write to {} failed ({e:#})", path.display());
+        } else {
+            log::info!("metrics snapshot written to {}", path.display());
+        }
+        match galen::obs::trace::flush() {
+            Ok(Some(p)) => log::info!("trace written to {}", p.display()),
+            Ok(None) => {}
+            Err(e) => log::warn!("trace flush failed ({e:#})"),
+        }
+    }
+    galen::util::logging::flush();
 }
 
 fn usage() -> &'static str {
@@ -69,7 +102,8 @@ fn usage() -> &'static str {
        sequential   two-stage prune/quant schemes (Fig 5)\n\
        sensitivity  layer sensitivity analysis (Fig 6)\n\
        latency      hardware-simulator latency profile\n\
-       validate     evaluate a saved policy json (accuracy, latency, retrain)"
+       validate     evaluate a saved policy json (accuracy, latency, retrain)\n\
+       report       render saved observability artifacts (--metrics --file <snapshot>)"
 }
 
 /// Session options from the shared base-CLI flags (every subcommand's
@@ -448,6 +482,26 @@ fn cmd_validate(argv: &[String]) -> Result<()> {
         }
     }
     println!("{}", policy_report(&session.ir, &policy));
+    Ok(())
+}
+
+fn cmd_report(argv: &[String]) -> Result<()> {
+    let cli = Cli::new(
+        "galen report",
+        "render saved observability artifacts as human-readable tables",
+    )
+    .opt("file", "", "metrics snapshot json (results/metrics_<command>.json)")
+    .flag("metrics", "render a metrics snapshot (schema-checked) as a table");
+    let args = cli.parse_from(argv)?;
+    anyhow::ensure!(
+        args.has_flag("metrics"),
+        "nothing to report: pass --metrics --file <metrics_<command>.json>"
+    );
+    let file = args.get("file");
+    anyhow::ensure!(!file.is_empty(), "--metrics needs --file <path>");
+    let doc = Json::read_file(std::path::Path::new(file))?;
+    let snap = galen::obs::MetricsSnapshot::from_json(&doc)?;
+    print!("{}", snap.table());
     Ok(())
 }
 

@@ -1,0 +1,450 @@
+//! Process-wide metrics registry: labeled counters, gauges, and
+//! fixed-bucket histograms behind lock-free hot-path handles.
+//!
+//! Design invariants (see ARCHITECTURE.md §Observability):
+//!
+//! * **Registration is the cold path, recording is the hot path.**  A
+//!   handle is obtained once (one mutex-guarded map lookup keyed by the
+//!   canonical `name{label="value"}` string) and then recorded through
+//!   with nothing but relaxed atomics — counters shard their cells across
+//!   cache-line-padded slots indexed by a per-thread id so concurrent
+//!   workers never contend on one line, gauges store `f64` bits in a
+//!   single atomic, histograms bucket into a fixed, deterministic layout
+//!   chosen at registration.
+//! * **One global enable gate.**  `set_enabled(false)` turns every
+//!   `inc`/`set`/`observe` into a single relaxed load + branch; handles
+//!   stay valid and registration still works, so instrumented code never
+//!   needs its own conditionals.  Metrics are ON by default — recording
+//!   is cheap enough to leave running (budget asserted by the
+//!   `search/obs_overhead` hot-paths section, < 2%).
+//! * **Observability is inert.**  Nothing in this module feeds back into
+//!   computed values or RNG streams; instrumented code produces
+//!   bit-identical results with metrics on or off (asserted per-agent in
+//!   `tests/obs_inertness.rs`).
+//!
+//! The registry is process-global so independent subsystems (driver,
+//! profiler, serve workers) aggregate into one snapshot; per-instance
+//! counters such as `ProfilerStats` remain the exact per-object views the
+//! tests assert on, while the registry carries the process-wide totals
+//! surfaced by the `metrics` serve verb and `galen report --metrics`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::util::sync::lock;
+
+/// Counter shard count: enough slots that a sweep's worker threads land
+/// on distinct cache lines with high probability, small enough that
+/// summing a snapshot stays trivial.  Must be a power of two.
+const SHARDS: usize = 16;
+
+/// Global recording gate (ON by default).  Gates *recording* only:
+/// registration, handle cloning, and snapshot reads always work.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Enable or disable metric recording process-wide.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether metric recording is currently enabled.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Small dense process-unique id of the calling thread (0, 1, 2, ... in
+/// first-use order).  Shared by the counter shard selector and the trace
+/// writer's `tid` field so a thread's spans and its metric activity
+/// correlate.
+pub fn thread_id() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static ID: usize = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    ID.with(|id| *id)
+}
+
+/// One cache line per shard so concurrent `fetch_add`s from different
+/// threads do not false-share.
+#[derive(Debug)]
+#[repr(align(64))]
+struct Shard(AtomicU64);
+
+#[derive(Debug)]
+struct CounterInner {
+    shards: [Shard; SHARDS],
+}
+
+/// Monotonic event counter.  Cloning shares the underlying cells.
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<CounterInner>);
+
+impl Counter {
+    /// Obtain (registering on first use) the counter `name` with `labels`.
+    /// Panics if the same full key is already registered as a different
+    /// instrument type — that is a programming error, not a runtime
+    /// condition.
+    pub fn register(name: &str, labels: &[(&str, &str)]) -> Counter {
+        registry().counter(&full_key(name, labels))
+    }
+
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n` (relaxed fetch-add on this thread's shard; no-op while
+    /// recording is disabled).
+    pub fn add(&self, n: u64) {
+        if !enabled() {
+            return;
+        }
+        self.0.shards[thread_id() & (SHARDS - 1)]
+            .0
+            .fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current total across all shards.
+    pub fn value(&self) -> u64 {
+        self.0
+            .shards
+            .iter()
+            .map(|s| s.0.load(Ordering::Relaxed))
+            .sum()
+    }
+}
+
+/// Last-write-wins instantaneous value (stored as `f64` bits in one
+/// atomic).  Cloning shares the cell.
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Obtain (registering on first use) the gauge `name` with `labels`.
+    /// Panics on an instrument-type conflict, like `Counter::register`.
+    pub fn register(name: &str, labels: &[(&str, &str)]) -> Gauge {
+        registry().gauge(&full_key(name, labels))
+    }
+
+    /// Set the value (no-op while recording is disabled).
+    pub fn set(&self, v: f64) {
+        if !enabled() {
+            return;
+        }
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Add `d` to the value (lock-free compare-exchange loop; no-op while
+    /// recording is disabled).
+    pub fn add(&self, d: f64) {
+        if !enabled() {
+            return;
+        }
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + d).to_bits();
+            match self
+                .0
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Current value.
+    pub fn value(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Debug)]
+struct HistogramInner {
+    /// Ascending bucket upper bounds; an implicit overflow bucket catches
+    /// everything above the last bound.
+    bounds: Vec<f64>,
+    /// `bounds.len() + 1` cells: `buckets[i]` counts observations
+    /// `<= bounds[i]`, the final cell counts the overflow.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Running sum as `f64` bits, accumulated by compare-exchange.
+    sum_bits: AtomicU64,
+}
+
+/// Fixed-bucket histogram with a deterministic layout chosen at
+/// registration.  Cloning shares the cells.
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<HistogramInner>);
+
+impl Histogram {
+    /// Obtain (registering on first use) the histogram `name` with
+    /// `labels` and ascending `bounds`.  Panics on an instrument-type
+    /// conflict or when re-registering the same key with different bounds
+    /// — bucket layouts are part of the metric's identity.
+    pub fn register(name: &str, labels: &[(&str, &str)], bounds: &[f64]) -> Histogram {
+        registry().histogram(&full_key(name, labels), bounds)
+    }
+
+    /// Record one observation (two relaxed fetch-adds + one
+    /// compare-exchange loop; no-op while recording is disabled).
+    pub fn observe(&self, v: f64) {
+        if !enabled() {
+            return;
+        }
+        let i = self.0.bounds.partition_point(|b| v > *b);
+        self.0.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.0.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.0.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Record a wall-clock duration in seconds.
+    pub fn observe_duration(&self, d: Duration) {
+        self.observe(d.as_secs_f64());
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observed values.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// The bucket upper bounds (ascending; overflow bucket implicit).
+    pub fn bounds(&self) -> &[f64] {
+        &self.0.bounds
+    }
+
+    /// Per-bucket counts (`bounds().len() + 1` cells, overflow last).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.0
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect()
+    }
+}
+
+/// The standard latency bucket layout: powers of two from 1 microsecond
+/// to ~8.4 seconds (24 buckets + overflow).  Deterministic — every
+/// process, every run, the same edges — so snapshots from different
+/// sessions are directly comparable.
+pub fn latency_bounds() -> Vec<f64> {
+    let mut bounds = Vec::with_capacity(24);
+    let mut edge = 1e-6;
+    for _ in 0..24 {
+        bounds.push(edge);
+        edge *= 2.0;
+    }
+    bounds
+}
+
+/// A registered instrument (snapshot visitor's view).
+#[derive(Clone, Debug)]
+pub(crate) enum Instrument {
+    /// Monotonic counter.
+    Counter(Counter),
+    /// Instantaneous gauge.
+    Gauge(Gauge),
+    /// Fixed-bucket histogram.
+    Histogram(Histogram),
+}
+
+struct Registry {
+    map: Mutex<BTreeMap<String, Instrument>>,
+}
+
+fn registry() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(|| Registry {
+        map: Mutex::new(BTreeMap::new()),
+    })
+}
+
+impl Registry {
+    fn counter(&self, key: &str) -> Counter {
+        let mut map = lock(&self.map);
+        match map.get(key) {
+            Some(Instrument::Counter(c)) => c.clone(),
+            Some(_) => panic!("metric '{key}' is already registered as a non-counter"),
+            None => {
+                let c = Counter(Arc::new(CounterInner {
+                    shards: std::array::from_fn(|_| Shard(AtomicU64::new(0))),
+                }));
+                map.insert(key.to_string(), Instrument::Counter(c.clone()));
+                c
+            }
+        }
+    }
+
+    fn gauge(&self, key: &str) -> Gauge {
+        let mut map = lock(&self.map);
+        match map.get(key) {
+            Some(Instrument::Gauge(g)) => g.clone(),
+            Some(_) => panic!("metric '{key}' is already registered as a non-gauge"),
+            None => {
+                let g = Gauge(Arc::new(AtomicU64::new(0.0f64.to_bits())));
+                map.insert(key.to_string(), Instrument::Gauge(g.clone()));
+                g
+            }
+        }
+    }
+
+    fn histogram(&self, key: &str, bounds: &[f64]) -> Histogram {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]) && !bounds.is_empty(),
+            "histogram '{key}': bounds must be non-empty and strictly ascending"
+        );
+        let mut map = lock(&self.map);
+        match map.get(key) {
+            Some(Instrument::Histogram(h)) => {
+                assert_eq!(
+                    h.bounds(),
+                    bounds,
+                    "metric '{key}' re-registered with different bucket bounds"
+                );
+                h.clone()
+            }
+            Some(_) => panic!("metric '{key}' is already registered as a non-histogram"),
+            None => {
+                let h = Histogram(Arc::new(HistogramInner {
+                    bounds: bounds.to_vec(),
+                    buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+                    count: AtomicU64::new(0),
+                    sum_bits: AtomicU64::new(0.0f64.to_bits()),
+                }));
+                map.insert(key.to_string(), Instrument::Histogram(h.clone()));
+                h
+            }
+        }
+    }
+}
+
+/// Canonical full key: `name` alone without labels, otherwise
+/// `name{k1="v1",k2="v2"}` with the label pairs sorted by key — the same
+/// labels in any order address the same instrument, and `BTreeMap`
+/// ordering makes every snapshot deterministic.
+pub(crate) fn full_key(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let mut pairs: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{v}\""))
+        .collect();
+    pairs.sort();
+    format!("{name}{{{}}}", pairs.join(","))
+}
+
+/// Visit every registered instrument in key order (snapshot capture).
+/// Holds the registry lock for the duration of the walk; callers must
+/// not register from inside `f`.
+pub(crate) fn visit(mut f: impl FnMut(&str, &Instrument)) {
+    let map = lock(&registry().map);
+    for (key, inst) in map.iter() {
+        f(key, inst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_sums_across_threads() {
+        let c = Counter::register("test_obs_counter_threads_total", &[]);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let c = c.clone();
+                scope.spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.value(), 4000);
+        // the handle is shared: re-registering addresses the same cells
+        assert_eq!(
+            Counter::register("test_obs_counter_threads_total", &[]).value(),
+            4000
+        );
+    }
+
+    #[test]
+    fn labels_address_distinct_series_in_any_order() {
+        let a = Counter::register("test_obs_labeled_total", &[("cache", "sim"), ("x", "1")]);
+        let b = Counter::register("test_obs_labeled_total", &[("x", "1"), ("cache", "sim")]);
+        let other = Counter::register("test_obs_labeled_total", &[("cache", "profile"), ("x", "1")]);
+        a.add(3);
+        assert_eq!(b.value(), 3, "label order must not split the series");
+        assert_eq!(other.value(), 0);
+        assert_eq!(
+            full_key("m", &[("b", "2"), ("a", "1")]),
+            "m{a=\"1\",b=\"2\"}"
+        );
+        assert_eq!(full_key("m", &[]), "m");
+    }
+
+    #[test]
+    fn gauge_set_and_add() {
+        let g = Gauge::register("test_obs_gauge", &[]);
+        g.set(2.5);
+        assert_eq!(g.value(), 2.5);
+        g.add(-1.0);
+        assert_eq!(g.value(), 1.5);
+    }
+
+    #[test]
+    fn histogram_buckets_and_moments() {
+        let h = Histogram::register("test_obs_hist_seconds", &[], &[1.0, 2.0, 4.0]);
+        for v in [0.5, 1.0, 1.5, 3.0, 100.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 106.0);
+        // <=1.0 catches 0.5 and the exactly-on-edge 1.0; overflow catches 100
+        assert_eq!(h.bucket_counts(), vec![2, 1, 1, 1]);
+        assert_eq!(h.bounds(), &[1.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn latency_bounds_are_deterministic_and_ascending() {
+        let b = latency_bounds();
+        assert_eq!(b, latency_bounds());
+        assert_eq!(b.len(), 24);
+        assert_eq!(b[0], 1e-6);
+        assert!(b.windows(2).all(|w| w[0] < w[1]));
+        assert!(b[23] > 8.0 && b[23] < 9.0);
+    }
+
+    // NOTE: the enable-gate semantics are asserted in
+    // tests/obs_inertness.rs, which runs in its own process — toggling the
+    // process-global gate here would race the exact-count assertions of
+    // sibling unit tests running in parallel.
+
+    #[test]
+    fn thread_ids_are_small_and_stable() {
+        let here = thread_id();
+        assert_eq!(here, thread_id(), "stable within a thread");
+        let other = std::thread::spawn(thread_id).join().unwrap();
+        assert_ne!(here, other);
+    }
+}

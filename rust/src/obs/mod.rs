@@ -1,0 +1,29 @@
+//! Observability: process-wide metrics registry, Chrome-trace span
+//! tracing, and schema-versioned snapshots.
+//!
+//! Three pieces, wired through every hot layer (driver, profiler, latency
+//! caches, serve service, sweep orchestrator):
+//!
+//! * `metrics` — labeled counters / gauges / fixed-bucket histograms
+//!   behind a global registry; registration is the cold path, recording
+//!   is relaxed atomics on sharded cells.  ON by default, gated
+//!   process-wide by `metrics::set_enabled`.
+//! * `trace` — RAII spans emitted as Chrome trace-event JSON
+//!   (Perfetto-loadable), opt-in via `GALEN_TRACE`; a single relaxed
+//!   atomic load when disabled.
+//! * `snapshot` — `MetricsSnapshot`: the schema-versioned JSON form that
+//!   crosses process boundaries (the `metrics` serve verb,
+//!   `galen report --metrics`).
+//!
+//! The subsystem-wide invariant is **inertness**: nothing here feeds back
+//! into computed values or RNG streams, so searches are bit-identical
+//! with observability on or off (`tests/obs_inertness.rs`) and the
+//! hot-path overhead stays under the 2% budget
+//! (`search/obs_overhead` in `benches/hot_paths.rs`).
+
+pub mod metrics;
+pub mod snapshot;
+pub mod trace;
+
+pub use metrics::{latency_bounds, Counter, Gauge, Histogram};
+pub use snapshot::{HistogramSnapshot, MetricsSnapshot, METRICS_SCHEMA_VERSION};

@@ -1,0 +1,308 @@
+//! Point-in-time metrics snapshots: schema-versioned JSON round-trip and
+//! a fixed-width human table.
+//!
+//! A snapshot is what crosses process boundaries — the `metrics` serve
+//! verb returns one, `GALEN_TRACE` sessions write one next to the trace
+//! file, and `galen report --metrics` parses one back (`from_json`, which
+//! validates the schema version) to render the table.  Keys are the
+//! registry's canonical `name{label="value"}` strings in `BTreeMap`
+//! order, so two snapshots of the same state serialize identically.
+//!
+//! Counter values travel as JSON numbers; they are exact up to 2^53,
+//! far beyond any realistic event count, and `from_json(to_json(s)) == s`
+//! is asserted in tests.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+use super::metrics::{self, Instrument};
+
+/// Bump when the snapshot JSON layout changes; `from_json` rejects
+/// mismatched documents instead of mis-parsing them.
+pub const METRICS_SCHEMA_VERSION: usize = 1;
+
+/// Frozen state of one histogram.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Ascending bucket upper bounds (overflow bucket implicit).
+    pub bounds: Vec<f64>,
+    /// Per-bucket counts (`bounds.len() + 1` cells, overflow last).
+    pub buckets: Vec<u64>,
+    /// Total observations.
+    pub count: u64,
+    /// Sum of observed values.
+    pub sum: f64,
+}
+
+impl HistogramSnapshot {
+    /// Mean observed value (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Upper bound of the bucket containing the `q`-quantile observation
+    /// (`q` in [0, 1]); infinity when it landed in the overflow bucket,
+    /// 0 when empty.  A bucketed bound, not an interpolation — exact
+    /// enough for a glanceable table.
+    pub fn quantile_upper_bound(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return self.bounds.get(i).copied().unwrap_or(f64::INFINITY);
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// Frozen state of the whole registry.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Counter totals by canonical key.
+    pub counters: BTreeMap<String, u64>,
+    /// Gauge values by canonical key.
+    pub gauges: BTreeMap<String, f64>,
+    /// Histogram states by canonical key.
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Freeze the current state of every registered instrument.
+    pub fn capture() -> Self {
+        let mut snap = Self::default();
+        metrics::visit(|key, inst| match inst {
+            Instrument::Counter(c) => {
+                snap.counters.insert(key.to_string(), c.value());
+            }
+            Instrument::Gauge(g) => {
+                snap.gauges.insert(key.to_string(), g.value());
+            }
+            Instrument::Histogram(h) => {
+                snap.histograms.insert(
+                    key.to_string(),
+                    HistogramSnapshot {
+                        bounds: h.bounds().to_vec(),
+                        buckets: h.bucket_counts(),
+                        count: h.count(),
+                        sum: h.sum(),
+                    },
+                );
+            }
+        });
+        snap
+    }
+
+    /// Convenience lookup for tests and assertions.
+    pub fn counter(&self, key: &str) -> Option<u64> {
+        self.counters.get(key).copied()
+    }
+
+    /// Serialize (schema-versioned; deterministic key order).
+    pub fn to_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::num(*v)))
+            .collect();
+        let histograms: BTreeMap<String, Json> = self
+            .histograms
+            .iter()
+            .map(|(k, h)| {
+                (
+                    k.clone(),
+                    Json::obj(vec![
+                        ("bounds", Json::arr_f64(&h.bounds)),
+                        (
+                            "buckets",
+                            Json::arr_usize(
+                                &h.buckets.iter().map(|&n| n as usize).collect::<Vec<_>>(),
+                            ),
+                        ),
+                        ("count", Json::num(h.count as f64)),
+                        ("sum", Json::num(h.sum)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema_version", Json::num(METRICS_SCHEMA_VERSION as f64)),
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(histograms)),
+        ])
+    }
+
+    /// Parse a snapshot back, rejecting unknown schema versions.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let version = j.req_usize("schema_version")?;
+        anyhow::ensure!(
+            version == METRICS_SCHEMA_VERSION,
+            "metrics snapshot schema v{version} (this build reads v{METRICS_SCHEMA_VERSION})"
+        );
+        let mut snap = Self::default();
+        let section = |key: &str| -> Result<&BTreeMap<String, Json>> {
+            j.req(key)?
+                .as_obj()
+                .ok_or_else(|| anyhow::anyhow!("'{key}' is not an object"))
+        };
+        for (k, v) in section("counters")? {
+            let v = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("counter '{k}' is not a number"))?;
+            snap.counters.insert(k.clone(), v as u64);
+        }
+        for (k, v) in section("gauges")? {
+            let v = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("gauge '{k}' is not a number"))?;
+            snap.gauges.insert(k.clone(), v);
+        }
+        for (k, h) in section("histograms")? {
+            let bounds = h.req_f64s("bounds")?;
+            let buckets: Vec<u64> = h
+                .req_arr("buckets")?
+                .iter()
+                .map(|b| {
+                    b.as_usize()
+                        .map(|n| n as u64)
+                        .ok_or_else(|| anyhow::anyhow!("histogram '{k}': bad bucket count"))
+                })
+                .collect::<Result<_>>()?;
+            anyhow::ensure!(
+                buckets.len() == bounds.len() + 1,
+                "histogram '{k}': {} buckets for {} bounds",
+                buckets.len(),
+                bounds.len()
+            );
+            snap.histograms.insert(
+                k.clone(),
+                HistogramSnapshot {
+                    bounds,
+                    buckets,
+                    count: h.req_usize("count")? as u64,
+                    sum: h.req_f64("sum")?,
+                },
+            );
+        }
+        Ok(snap)
+    }
+
+    /// Render as a fixed-width human table (what `galen report --metrics`
+    /// prints): counters, gauges, then histograms with count / mean /
+    /// bucketed p50 / p95.
+    pub fn table(&self) -> String {
+        let mut out = format!(
+            "metrics snapshot (schema v{METRICS_SCHEMA_VERSION}): {} counters, {} gauges, {} histograms\n",
+            self.counters.len(),
+            self.gauges.len(),
+            self.histograms.len()
+        );
+        if !self.counters.is_empty() {
+            out.push_str("\ncounters\n");
+            for (k, v) in &self.counters {
+                out.push_str(&format!("  {k:<56} {v:>14}\n"));
+            }
+        }
+        if !self.gauges.is_empty() {
+            out.push_str("\ngauges\n");
+            for (k, v) in &self.gauges {
+                out.push_str(&format!("  {k:<56} {v:>14.6}\n"));
+            }
+        }
+        if !self.histograms.is_empty() {
+            out.push_str("\nhistograms\n");
+            for (k, h) in &self.histograms {
+                out.push_str(&format!(
+                    "  {k:<56} count={:<8} mean={:<12.3e} p50<={:<12.3e} p95<={:.3e}\n",
+                    h.count,
+                    h.mean(),
+                    h.quantile_upper_bound(0.5),
+                    h.quantile_upper_bound(0.95),
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::{Counter, Gauge, Histogram};
+
+    #[test]
+    fn snapshot_roundtrips_through_json() {
+        // unique names: the registry is process-global and tests share it
+        let c = Counter::register("test_obs_snap_total", &[("kind", "roundtrip")]);
+        c.add(42);
+        let g = Gauge::register("test_obs_snap_gauge", &[]);
+        g.set(1.25);
+        let h = Histogram::register("test_obs_snap_seconds", &[], &[0.1, 1.0]);
+        h.observe(0.05);
+        h.observe(5.0);
+
+        let snap = MetricsSnapshot::capture();
+        assert_eq!(snap.counter("test_obs_snap_total{kind=\"roundtrip\"}"), Some(42));
+        let text = snap.to_json().dump();
+        let back = MetricsSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, snap, "snapshot must round-trip bit-exactly");
+
+        // wrong schema version is rejected, not mis-parsed
+        let wrong = text.replacen("\"schema_version\":1", "\"schema_version\":99", 1);
+        assert!(MetricsSnapshot::from_json(&Json::parse(&wrong).unwrap()).is_err());
+    }
+
+    #[test]
+    fn histogram_snapshot_moments() {
+        let h = HistogramSnapshot {
+            bounds: vec![1.0, 2.0, 4.0],
+            buckets: vec![5, 3, 1, 1],
+            count: 10,
+            sum: 15.0,
+        };
+        assert_eq!(h.mean(), 1.5);
+        assert_eq!(h.quantile_upper_bound(0.5), 1.0);
+        assert_eq!(h.quantile_upper_bound(0.9), 4.0);
+        assert_eq!(h.quantile_upper_bound(1.0), f64::INFINITY);
+        assert_eq!(HistogramSnapshot::default().quantile_upper_bound(0.5), 0.0);
+        assert_eq!(HistogramSnapshot::default().mean(), 0.0);
+    }
+
+    #[test]
+    fn table_renders_every_section() {
+        let c = Counter::register("test_obs_table_total", &[]);
+        c.inc();
+        let g = Gauge::register("test_obs_table_gauge", &[]);
+        g.set(3.0);
+        let h = Histogram::register("test_obs_table_seconds", &[], &[1.0]);
+        h.observe(0.5);
+        let table = MetricsSnapshot::capture().table();
+        for needle in [
+            "counters",
+            "gauges",
+            "histograms",
+            "test_obs_table_total",
+            "test_obs_table_gauge",
+            "test_obs_table_seconds",
+        ] {
+            assert!(table.contains(needle), "missing '{needle}' in:\n{table}");
+        }
+    }
+}

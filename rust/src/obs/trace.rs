@@ -1,0 +1,170 @@
+//! Hierarchical span tracing emitted as Chrome trace-event JSON.
+//!
+//! Spans are RAII guards: `trace::span("episode")` starts one, dropping
+//! it records a complete ("ph":"X") event with microsecond `ts`/`dur`
+//! relative to trace start, `pid` 0, and `tid` set to the process-unique
+//! thread id shared with the metrics shard selector — so the resulting
+//! `trace_<session>.json` loads directly in Perfetto / `chrome://tracing`
+//! with one lane per worker thread, and nesting falls out of the
+//! `ts`/`dur` containment of spans opened within spans.
+//!
+//! Tracing is opt-in via `GALEN_TRACE` and **off by default**: when
+//! disabled, `span()` is a single relaxed atomic load returning an inert
+//! guard, so the hot path costs ~nothing (part of the
+//! `search/obs_overhead` budget).  When enabled, finished spans buffer in
+//! memory and `flush()` writes the whole document — tracing never does
+//! I/O inside instrumented code.
+//!
+//! Like the metrics registry, tracing is provably inert: it reads
+//! wall-clock time and already-computed labels, never an RNG stream or a
+//! value that feeds back into the search (`tests/obs_inertness.rs`).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::sync::lock;
+
+use super::metrics::thread_id;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+struct TraceBuf {
+    path: PathBuf,
+    start: Instant,
+    events: Vec<Json>,
+}
+
+static BUF: Mutex<Option<TraceBuf>> = Mutex::new(None);
+
+/// Whether span recording is active (one relaxed load — this is the
+/// entire disabled-path cost of `span()`).
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Start recording spans, to be written to `path` by `flush()`.  Replaces
+/// any previous trace buffer (its unflushed events are dropped).
+pub fn enable_to(path: &Path) {
+    *lock(&BUF) = Some(TraceBuf {
+        path: path.to_path_buf(),
+        start: Instant::now(),
+        events: Vec::new(),
+    });
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Stop recording and drop any unflushed events.
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+    *lock(&BUF) = None;
+}
+
+/// Honor `GALEN_TRACE`: when set to anything but ``/`0`/`false`/`off`,
+/// enable tracing to `<results dir>/trace_<session>.json` and return that
+/// path.  The CLI calls this once per invocation with the command name as
+/// the session label.
+pub fn init_from_env(session: &str) -> Option<PathBuf> {
+    let v = std::env::var("GALEN_TRACE").ok()?;
+    if matches!(v.as_str(), "" | "0" | "false" | "off") {
+        return None;
+    }
+    let path = crate::results_dir().join(format!("trace_{session}.json"));
+    enable_to(&path);
+    Some(path)
+}
+
+/// Write everything recorded so far as a Chrome trace-event document
+/// (`{"traceEvents": [...]}`) to the path given at `enable_to`.  Returns
+/// the path written, or `None` when tracing was never enabled.  Keeps the
+/// buffer, so later flushes rewrite the file with a superset of events —
+/// call it on every exit path; crashing between flushes only loses spans
+/// since the last one.
+pub fn flush() -> Result<Option<PathBuf>> {
+    let guard = lock(&BUF);
+    let Some(buf) = guard.as_ref() else {
+        return Ok(None);
+    };
+    let doc = Json::obj(vec![
+        ("traceEvents", Json::Arr(buf.events.clone())),
+        ("displayTimeUnit", Json::str("ms")),
+    ]);
+    doc.write_file(&buf.path)?;
+    Ok(Some(buf.path.clone()))
+}
+
+/// RAII span guard: records a complete event on drop.  Inert (a `None`)
+/// when tracing is disabled at creation.
+pub struct Span(Option<SpanData>);
+
+struct SpanData {
+    name: String,
+    start: Instant,
+    args: Vec<(&'static str, String)>,
+}
+
+/// Open a span named `name`; the span covers until the guard drops.
+pub fn span(name: &str) -> Span {
+    if !enabled() {
+        return Span(None);
+    }
+    Span(Some(SpanData {
+        name: name.to_string(),
+        start: Instant::now(),
+        args: Vec::new(),
+    }))
+}
+
+impl Span {
+    /// Attach a key/value argument shown in the trace viewer's detail
+    /// pane.  No-op (and no allocation beyond the caller's) when the span
+    /// is inert.
+    pub fn arg(mut self, key: &'static str, value: impl Into<String>) -> Span {
+        if let Some(d) = self.0.as_mut() {
+            d.args.push((key, value.into()));
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(d) = self.0.take() else {
+            return;
+        };
+        let end = Instant::now();
+        let mut guard = lock(&BUF);
+        // tracing may have been disabled while the span was open
+        let Some(buf) = guard.as_mut() else {
+            return;
+        };
+        // saturates to 0 for spans opened before enable_to
+        let ts = d.start.duration_since(buf.start).as_secs_f64() * 1e6;
+        let dur = end.duration_since(d.start).as_secs_f64() * 1e6;
+        let mut ev = vec![
+            ("name", Json::str(d.name)),
+            ("cat", Json::str("galen")),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(ts)),
+            ("dur", Json::num(dur)),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(thread_id() as f64)),
+        ];
+        if !d.args.is_empty() {
+            ev.push((
+                "args",
+                Json::Obj(
+                    d.args
+                        .into_iter()
+                        .map(|(k, v)| (k.to_string(), Json::str(v)))
+                        .collect(),
+                ),
+            ));
+        }
+        buf.events.push(Json::obj(ev));
+    }
+}

@@ -23,6 +23,7 @@
 //! for threading stringly-typed JSON knobs into the search.
 
 use std::path::Path;
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -31,6 +32,7 @@ use crate::compress::DiscretePolicy;
 use crate::eval::SensitivityTable;
 use crate::hw::LatencyProvider;
 use crate::model::ModelIr;
+use crate::obs;
 use crate::reward::{RewardModel, RewardSpec};
 use crate::search::{EpisodeSummary, PolicyEvaluator, SearchConfig, SearchOutcome};
 use crate::util::json::Json;
@@ -314,6 +316,7 @@ impl SearchBuilder {
         let reward = cfg.reward.build(cfg.beta, cfg.target, base_latency_s);
         let base_accuracy = evaluator.base_accuracy();
         let episodes = cfg.episodes;
+        let metrics = DriverMetrics::for_agent(cfg.agent);
         Ok(SearchDriver {
             ir,
             sens,
@@ -335,7 +338,40 @@ impl SearchBuilder {
             observers: Vec::new(),
             started_emitted: false,
             finished_emitted: false,
+            metrics,
         })
+    }
+}
+
+/// Registry handles for the driver's metric series, resolved once per
+/// driver against the process-wide `obs` registry and labeled by agent
+/// kind so concurrent sweep jobs searching different spaces keep separate
+/// series.  Deliberately *not* part of the checkpoint format —
+/// observability state never enters the schema, so checkpoints taken with
+/// metrics on and off stay bit-identical.
+struct DriverMetrics {
+    steps: obs::Counter,
+    episodes: obs::Counter,
+    last_reward: obs::Gauge,
+    best_reward: obs::Gauge,
+    checkpoint_write_seconds: obs::Histogram,
+}
+
+impl DriverMetrics {
+    fn for_agent(agent: crate::agent::AgentKind) -> Self {
+        let a = agent.to_string();
+        let labels: &[(&str, &str)] = &[("agent", &a)];
+        DriverMetrics {
+            steps: obs::Counter::register("search_steps_total", labels),
+            episodes: obs::Counter::register("search_episodes_total", labels),
+            last_reward: obs::Gauge::register("search_last_reward", labels),
+            best_reward: obs::Gauge::register("search_best_reward", labels),
+            checkpoint_write_seconds: obs::Histogram::register(
+                "search_checkpoint_write_seconds",
+                labels,
+                &obs::latency_bounds(),
+            ),
+        }
     }
 }
 
@@ -372,6 +408,7 @@ pub struct SearchDriver<'a> {
     observers: Vec<Box<dyn SearchObserver + 'a>>,
     started_emitted: bool,
     finished_emitted: bool,
+    metrics: DriverMetrics,
 }
 
 impl<'a> SearchDriver<'a> {
@@ -474,6 +511,7 @@ impl<'a> SearchDriver<'a> {
             ep.states.push(s);
             ep.actions.push(a);
             ep.k += 1;
+            self.metrics.steps.inc();
             if ep.k < self.steps.len() {
                 return Ok(StepOutcome::Stepped {
                     episode: self.episode,
@@ -487,6 +525,9 @@ impl<'a> SearchDriver<'a> {
 
     /// Validate the completed episode and fold it into the agent.
     fn finish_episode(&mut self) -> Result<EpisodeSummary> {
+        let _sp = obs::trace::span("episode")
+            .arg("agent", self.cfg.agent.to_string())
+            .arg("episode", self.episode.to_string());
         let ep = self.cur.take().expect("an episode is in flight");
         // ---- validate the complete policy (paper Fig. 1) ----
         let accuracy = self.evaluator.accuracy(&ep.policy)?;
@@ -545,6 +586,11 @@ impl<'a> SearchDriver<'a> {
                 100.0 * measured / self.base_latency_s,
                 self.agent.sigma,
             );
+        }
+        self.metrics.episodes.inc();
+        self.metrics.last_reward.set(reward);
+        if improved {
+            self.metrics.best_reward.set(reward);
         }
         self.history.push(summary.clone());
         self.episode += 1;
@@ -666,9 +712,17 @@ impl<'a> SearchDriver<'a> {
         ]))
     }
 
-    /// [`SearchDriver::save_checkpoint`] straight to a file.
+    /// [`SearchDriver::save_checkpoint`] straight to a file.  The write
+    /// latency (serialize + atomic write) feeds the registry's
+    /// `search_checkpoint_write_seconds` histogram.
     pub fn write_checkpoint(&self, path: &Path) -> Result<()> {
-        self.save_checkpoint()?.write_file(path)
+        let _sp = obs::trace::span("checkpoint_write");
+        let t0 = Instant::now();
+        let res = self.save_checkpoint()?.write_file(path);
+        self.metrics
+            .checkpoint_write_seconds
+            .observe_duration(t0.elapsed());
+        res
     }
 
     /// Rebuild a driver from a checkpoint document and a concrete
@@ -770,6 +824,7 @@ impl<'a> SearchDriver<'a> {
             best.is_some() || episode == 0,
             "checkpoint past episode 0 must carry a best policy"
         );
+        let metrics = DriverMetrics::for_agent(cfg.agent);
         Ok(SearchDriver {
             ir,
             sens,
@@ -791,6 +846,7 @@ impl<'a> SearchDriver<'a> {
             observers: Vec::new(),
             started_emitted: false,
             finished_emitted: false,
+            metrics,
         })
     }
 

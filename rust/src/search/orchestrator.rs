@@ -29,6 +29,7 @@
 //! see [`ParetoFront::save`]), next to the PR 2 profile caches.
 
 use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -41,10 +42,25 @@ use crate::hw::{
     MeasuredProfiler, ProfilerConfig, SharedCostCache, SharedProfileCache,
 };
 use crate::model::ModelIr;
+use crate::obs;
 use crate::search::{run_search, SearchConfig, SearchOutcome, SimEvaluator};
 use crate::testing::FaultPlan;
 use crate::util::json::Json;
+use crate::util::sync::lock;
 use crate::util::{num_threads, parallel_map, Fnv1a};
+
+// Registry handles for the sweep's process-wide series.  Resolved lazily
+// (one registry lookup, ever) so the fan-out hot path touches nothing but
+// the shared atomic cells.
+fn obs_jobs_completed() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| obs::Counter::register("sweep_jobs_completed_total", &[]))
+}
+
+fn obs_jobs_stolen() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| obs::Counter::register("sweep_jobs_stolen_total", &[]))
+}
 
 /// Version of the on-disk sweep-artifact layout; mismatched artifacts are
 /// rejected by [`ParetoFront::from_json`], never mis-parsed.
@@ -316,11 +332,28 @@ pub fn run_sweep(
         factory.kind()
     );
     let t0 = Instant::now();
-    let results = parallel_map(jobs, workers, |job| run_job(ir, sens, proto, job, factory));
+    // (job index, executing thread, busy seconds) per job, folded into
+    // per-worker utilization gauges after the barrier — never on the hot
+    // path, and never into the results (worker identity must not leak
+    // into outcomes, or N-worker bit-identity would break).
+    let timings: Mutex<Vec<(usize, usize, f64)>> = Mutex::new(Vec::new());
+    let indexed: Vec<(usize, SweepJob)> = jobs.into_iter().enumerate().collect();
+    let results = parallel_map(indexed, workers, |(idx, job)| {
+        let _sp = obs::trace::span("sweep_job")
+            .arg("agent", job.agent.to_string())
+            .arg("target", format!("{}", job.target));
+        let tid = obs::metrics::thread_id();
+        let jt0 = Instant::now();
+        let out = run_job(ir, sens, proto, job, factory);
+        lock(&timings).push((idx, tid, jt0.elapsed().as_secs_f64()));
+        obs_jobs_completed().inc();
+        out
+    });
     let mut outcomes = Vec::with_capacity(results.len());
     for r in results {
         outcomes.push(r?);
     }
+    record_worker_metrics(&lock(&timings), workers, t0.elapsed().as_secs_f64());
     if let Some(path) = factory.persist()? {
         log::info!("sweep: pooled profile cache written to {}", path.display());
     }
@@ -331,6 +364,41 @@ pub fn run_sweep(
         workers,
         wall_s: t0.elapsed().as_secs_f64(),
     })
+}
+
+/// Post-barrier worker metrics: per-worker utilization gauges
+/// (`sweep_worker_utilization{worker="<slot>"}`, busy seconds over sweep
+/// wall seconds) plus the stolen-jobs counter.  A job counts as *stolen*
+/// when the work queue let a worker other than its round-robin owner
+/// (slot `index % workers`) execute it — the signature of the imbalance
+/// the shared queue exists to absorb.  Worker slots are assigned by
+/// sorting the distinct executing thread ids, so the labels are stable
+/// within a process regardless of spawn order.
+fn record_worker_metrics(timings: &[(usize, usize, f64)], workers: usize, wall_s: f64) {
+    if timings.is_empty() {
+        return;
+    }
+    let mut tids: Vec<usize> = timings.iter().map(|&(_, tid, _)| tid).collect();
+    tids.sort_unstable();
+    tids.dedup();
+    let slot_of = |tid: usize| tids.iter().position(|&t| t == tid).unwrap_or(0);
+    let mut busy = vec![0.0f64; tids.len()];
+    let mut stolen = 0u64;
+    for &(idx, tid, s) in timings {
+        let slot = slot_of(tid);
+        busy[slot] += s;
+        if slot != idx % workers {
+            stolen += 1;
+        }
+    }
+    if stolen > 0 {
+        obs_jobs_stolen().add(stolen);
+    }
+    for (slot, &b) in busy.iter().enumerate() {
+        let worker = slot.to_string();
+        obs::Gauge::register("sweep_worker_utilization", &[("worker", &worker)])
+            .set(if wall_s > 0.0 { b / wall_s } else { 0.0 });
+    }
 }
 
 /// One worker's job: a full search with the job's agent/target/seed.

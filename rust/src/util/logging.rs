@@ -1,11 +1,50 @@
-//! Minimal timestamped stderr logger backing the `log` crate facade.
+//! Minimal timestamped stderr logger backing the `log` crate facade,
+//! with a thread-local context tag for worker threads.
+//!
+//! The serve worker pool sets a context like `w0/job-3` on each worker
+//! thread (`push_context` guard), and every log line emitted from that
+//! thread carries it — so interleaved multi-worker stderr remains
+//! attributable without threading ids through every call site.
 
+use std::cell::RefCell;
+use std::io::Write as _;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
 
 use log::{Level, LevelFilter, Metadata, Record};
 
 static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+thread_local! {
+    static CONTEXT: RefCell<Option<String>> = const { RefCell::new(None) };
+}
+
+/// Tag every log line from this thread with `ctx` (e.g. `w0/job-3`)
+/// until the returned guard drops, which restores the previous context.
+/// Contexts nest: a job-scoped context inside a worker-scoped one
+/// replaces it for the job's duration only.
+pub fn push_context(ctx: impl Into<String>) -> ContextGuard {
+    let prev = CONTEXT.with(|c| c.replace(Some(ctx.into())));
+    ContextGuard { prev }
+}
+
+/// Restores the previous thread-local log context on drop.
+pub struct ContextGuard {
+    prev: Option<String>,
+}
+
+impl Drop for ContextGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        CONTEXT.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+/// Drain buffered stderr.  Call before process exit/abort paths so the
+/// final lines of a crashing or completing run are never lost.
+pub fn flush() {
+    log::logger().flush();
+}
 
 struct StderrLogger {
     start: Instant,
@@ -28,10 +67,20 @@ impl log::Log for StderrLogger {
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
         };
-        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+        let ctx = CONTEXT.with(|c| c.borrow().clone());
+        match ctx {
+            Some(ctx) => eprintln!(
+                "[{t:9.3}s {lvl} {} {ctx}] {}",
+                record.target(),
+                record.args()
+            ),
+            None => eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args()),
+        }
     }
 
-    fn flush(&self) {}
+    fn flush(&self) {
+        let _ = std::io::stderr().flush();
+    }
 }
 
 /// Install the logger once; respects `GALEN_LOG` (error|warn|info|debug|trace).
@@ -63,5 +112,22 @@ mod tests {
         init(LevelFilter::Info);
         init(LevelFilter::Debug); // second call must not panic
         log::info!("logging smoke test");
+        flush();
+    }
+
+    #[test]
+    fn context_nests_and_restores() {
+        let read = || CONTEXT.with(|c| c.borrow().clone());
+        assert_eq!(read(), None);
+        {
+            let _w = push_context("w0");
+            assert_eq!(read().as_deref(), Some("w0"));
+            {
+                let _j = push_context("w0/job-1");
+                assert_eq!(read().as_deref(), Some("w0/job-1"));
+            }
+            assert_eq!(read().as_deref(), Some("w0"), "inner pop restores outer");
+        }
+        assert_eq!(read(), None, "outer pop restores none");
     }
 }

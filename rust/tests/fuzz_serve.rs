@@ -40,7 +40,7 @@ fn unknown_op(rng: &mut Pcg64) -> String {
 
 fn gen_line(rng: &mut Pcg64, case: usize) -> FuzzLine {
     let id = format!("fz{case}");
-    match rng.below(8) {
+    match rng.below(9) {
         // plain garbage: never valid JSON objects (no braces survive; the
         // leading '#' keeps the line non-empty and non-JSON)
         0 => FuzzLine {
@@ -104,6 +104,21 @@ fn gen_line(rng: &mut Pcg64, case: usize) -> FuzzLine {
                 line: format!(r#"{{"op":"{op}","id":"{id}","job":{job}}}"#),
                 expect_id: Some(id),
             }
+        }
+        // malformed metrics requests: the verb takes no operands, so any
+        // extra key (the "q-" prefix keeps it unknown) or a wrong-typed id
+        // must be rejected — well-formed ones would succeed and belong in
+        // the integration test, not here
+        7 => {
+            let line = match rng.below(3) {
+                0 => format!(
+                    r#"{{"op":"metrics","id":"{id}","q-{}":1}}"#,
+                    junk(rng, 6).replace(['"', '{', '}', '[', ']', ':', ',', ' ', '.'], "k")
+                ),
+                1 => format!(r#"{{"op":"metrics","id":"{id}","job":"job-1"}}"#),
+                _ => format!(r#"{{"op":"metrics","id":"{id}","metrics":true}}"#),
+            };
+            FuzzLine { line, expect_id: Some(id) }
         }
         // valid JSON that is not an object at all
         _ => FuzzLine {

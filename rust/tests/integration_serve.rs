@@ -299,6 +299,44 @@ fn journal_restores_finished_jobs_across_sessions() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The `metrics` verb returns a live schema-versioned registry snapshot:
+/// ok=true with the id echoed, parseable by `MetricsSnapshot::from_json`,
+/// and — because the waited job finished before the request was handled —
+/// it already contains the serve-side counters and per-verb latency
+/// histograms.  Counters are process-global and tests run concurrently,
+/// so assertions are lower bounds, never exact counts.
+#[test]
+fn metrics_verb_returns_parseable_registry_snapshot() {
+    let script = format!(
+        "{}\n{}\n{}\n",
+        submit_line("m", "pruning", 0.5),
+        r#"{"op":"result","id":"rm","job":"job-0","wait":true}"#,
+        r#"{"op":"metrics","id":"mx"}"#,
+    );
+    let (stats, responses) = run_session(
+        &script,
+        &ServeOptions { workers: 1, ..Default::default() },
+    );
+    assert_eq!(stats.completed, 1);
+    let r = &responses[2];
+    assert!(r.req_bool("ok").unwrap(), "{}", r.dump());
+    assert_eq!(r.req_str("id").unwrap(), "mx");
+
+    let body = r.req("metrics").unwrap();
+    assert_eq!(body.req_usize("schema_version").unwrap(), 1);
+    let snap = galen::obs::MetricsSnapshot::from_json(body)
+        .expect("the wire snapshot must parse with this build's schema");
+    assert!(
+        snap.counter("serve_jobs_completed_total").unwrap_or(0) >= 1,
+        "the finished job must be visible: {snap:?}"
+    );
+    assert!(
+        snap.histograms
+            .contains_key(r#"serve_request_seconds{verb="submit"}"#),
+        "per-verb request latency must be recorded: {snap:?}"
+    );
+}
+
 /// Unknown keys in a submit spec — at the spec level and inside its
 /// `config` block — are rejected loudly (the apply_json contract reaches
 /// the protocol surface), and failing requests still echo their id.

@@ -1,0 +1,197 @@
+//! Observability must be provably inert.
+//!
+//! The tentpole invariant of the `obs` subsystem: turning metrics and
+//! span tracing on or off never changes what the search computes — no
+//! RNG stream is consumed, no float is touched, no branch depends on a
+//! recorded value.  This test runs every agent kind with observability
+//! fully off and again with the metrics registry *and* trace recording
+//! on, and asserts the two outcomes are bit-identical (every f64
+//! compared through `to_bits`).
+//!
+//! It also pins the gate semantics themselves (instruments recorded
+//! while disabled stay at zero) and validates the artifacts the "on"
+//! runs produce: a well-formed Chrome trace-event JSON and a
+//! schema-versioned metrics snapshot that round-trips through text.
+//!
+//! Everything lives in ONE `#[test]` function on purpose: the metrics
+//! gate and the trace sink are process-global, and `#[test]` functions
+//! inside one integration binary run on parallel threads — two tests
+//! toggling the gate would race.  Unit tests in the library crate
+//! therefore never touch the gate either (see `obs::metrics`); this
+//! binary is the single owner of that state.
+
+use galen::agent::{mapper_for, AgentKind, DdpgConfig};
+use galen::eval::{SensitivityConfig, SensitivityTable};
+use galen::hw::{CostModel, HwTarget, LatencySimulator};
+use galen::model::ir::test_fixtures::tiny_meta;
+use galen::model::ModelIr;
+use galen::obs;
+use galen::search::{run_search, SearchConfig, SearchOutcome, SimEvaluator};
+use galen::util::json::Json;
+
+fn setup() -> (ModelIr, SensitivityTable) {
+    let ir = ModelIr::from_meta(&tiny_meta()).unwrap();
+    let sens = SensitivityTable::disabled(ir.layers.len(), &SensitivityConfig::default(), "tiny");
+    (ir, sens)
+}
+
+fn sim(seed: u64) -> LatencySimulator {
+    LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), seed)
+}
+
+fn cfg(agent: AgentKind, episodes: usize) -> SearchConfig {
+    let mut cfg = SearchConfig::fast(agent, 0.5);
+    cfg.episodes = episodes;
+    cfg.warmup_episodes = 3;
+    cfg.opt_steps_per_episode = 4;
+    cfg.log_every = 0;
+    cfg.ddpg = DdpgConfig {
+        hidden: (32, 24),
+        batch: 24,
+        replay_capacity: 400,
+        ..Default::default()
+    };
+    cfg
+}
+
+/// Bitwise equality — `assert_eq!` on floats would accept -0.0 == 0.0;
+/// the inertness guarantee is stronger than that.
+fn assert_outcomes_bit_identical(a: &SearchOutcome, b: &SearchOutcome, what: &str) {
+    assert_eq!(a.best_policy, b.best_policy, "{what}: best policy");
+    assert_eq!(a.best.episode, b.best.episode, "{what}: best episode index");
+    assert_eq!(a.best.reward.to_bits(), b.best.reward.to_bits(), "{what}: best reward");
+    assert_eq!(
+        a.base_latency_s.to_bits(),
+        b.base_latency_s.to_bits(),
+        "{what}: base latency"
+    );
+    assert_eq!(a.history.len(), b.history.len(), "{what}: history length");
+    for (i, (x, y)) in a.history.iter().zip(&b.history).enumerate() {
+        assert_eq!(x.episode, y.episode, "{what}: history[{i}].episode");
+        assert_eq!(x.reward.to_bits(), y.reward.to_bits(), "{what}: history[{i}].reward");
+        assert_eq!(
+            x.accuracy.to_bits(),
+            y.accuracy.to_bits(),
+            "{what}: history[{i}].accuracy"
+        );
+        assert_eq!(
+            x.latency_s.to_bits(),
+            y.latency_s.to_bits(),
+            "{what}: history[{i}].latency"
+        );
+        assert_eq!(x.macs, y.macs, "{what}: history[{i}].macs");
+        assert_eq!(x.bops, y.bops, "{what}: history[{i}].bops");
+    }
+}
+
+/// A trace file must be a well-formed Chrome trace-event document whose
+/// complete events carry every field the viewer needs, including at
+/// least one `episode` span from the search driver.
+fn assert_trace_well_formed(path: &std::path::Path, what: &str) {
+    let doc = Json::read_file(path).unwrap_or_else(|e| panic!("{what}: unreadable trace ({e:#})"));
+    assert_eq!(
+        doc.req_str("displayTimeUnit").unwrap(),
+        "ms",
+        "{what}: displayTimeUnit"
+    );
+    let events = doc.req_arr("traceEvents").unwrap();
+    assert!(!events.is_empty(), "{what}: trace recorded no events");
+    let mut episode_spans = 0usize;
+    for (i, e) in events.iter().enumerate() {
+        assert_eq!(e.req_str("ph").unwrap(), "X", "{what}: event[{i}].ph");
+        assert_eq!(e.req_str("cat").unwrap(), "galen", "{what}: event[{i}].cat");
+        let name = e.req_str("name").unwrap();
+        assert!(!name.is_empty(), "{what}: event[{i}] has an empty name");
+        for field in ["ts", "dur"] {
+            let v = e.req_f64(field).unwrap();
+            assert!(v >= 0.0, "{what}: event[{i}].{field} = {v}");
+        }
+        e.req_usize("pid").unwrap();
+        e.req_usize("tid").unwrap();
+        if name == "episode" {
+            episode_spans += 1;
+            let args = e.req("args").unwrap();
+            assert!(
+                args.get("agent").and_then(Json::as_str).is_some(),
+                "{what}: episode span without an agent arg"
+            );
+        }
+    }
+    assert!(episode_spans > 0, "{what}: no `episode` span in the trace");
+}
+
+/// One test function — see the module doc for why this cannot be split.
+#[test]
+fn observability_is_inert_and_gates_record() {
+    // -------- gate semantics: a disabled registry records nothing --------
+    let probe = obs::Counter::register("test_obs_gate_total", &[]);
+    obs::metrics::set_enabled(false);
+    assert!(!obs::metrics::enabled());
+    probe.inc();
+    probe.add(10);
+    assert_eq!(probe.value(), 0, "disabled counter must stay at zero");
+    let probe_g = obs::Gauge::register("test_obs_gate_gauge", &[]);
+    probe_g.set(7.0);
+    probe_g.add(1.0);
+    assert_eq!(probe_g.value(), 0.0, "disabled gauge must stay at zero");
+    let probe_h = obs::Histogram::register("test_obs_gate_seconds", &[], &obs::latency_bounds());
+    probe_h.observe(0.5);
+    assert_eq!(probe_h.count(), 0, "disabled histogram must stay empty");
+    obs::metrics::set_enabled(true);
+    probe.inc();
+    assert_eq!(probe.value(), 1, "re-enabled counter must record again");
+
+    // -------- per-agent bit-identity: all off vs metrics + trace on --------
+    let (ir, sens) = setup();
+    for agent in [AgentKind::Pruning, AgentKind::Quantization, AgentKind::Joint] {
+        let cfg = cfg(agent, 8);
+        let ev = SimEvaluator::new(&ir);
+        let mapper = mapper_for(agent);
+
+        // reference run: registry gated off, no trace sink
+        obs::metrics::set_enabled(false);
+        obs::trace::disable();
+        let mut sim_off = sim(11);
+        let off = run_search(&ir, &sens, &ev, &mut sim_off, mapper.as_ref(), &cfg, None).unwrap();
+
+        // instrumented run: registry on AND every span recorded to disk
+        let trace_path = std::env::temp_dir().join(format!(
+            "galen_obs_inert_{}_{agent}.json",
+            std::process::id()
+        ));
+        obs::metrics::set_enabled(true);
+        obs::trace::enable_to(&trace_path);
+        let mut sim_on = sim(11);
+        let on = run_search(&ir, &sens, &ev, &mut sim_on, mapper.as_ref(), &cfg, None).unwrap();
+        let flushed = obs::trace::flush().unwrap();
+        obs::trace::disable();
+        assert_eq!(flushed.as_deref(), Some(trace_path.as_path()));
+
+        assert_outcomes_bit_identical(&on, &off, &format!("{agent} obs-on vs obs-off"));
+        assert_trace_well_formed(&trace_path, &format!("{agent} trace"));
+        std::fs::remove_file(&trace_path).ok();
+    }
+
+    // -------- the instrumented runs actually populated the registry --------
+    let snap = obs::MetricsSnapshot::capture();
+    for agent in ["pruning", "quantization", "joint"] {
+        let key = format!("search_episodes_total{{agent=\"{agent}\"}}");
+        assert_eq!(
+            snap.counter(&key),
+            Some(8),
+            "episode counter for {agent}: {snap:?}"
+        );
+        let steps = snap
+            .counter(&format!("search_steps_total{{agent=\"{agent}\"}}"))
+            .unwrap_or(0);
+        assert!(steps >= 8, "step counter for {agent} ({steps})");
+    }
+
+    // -------- snapshot text round-trip --------
+    let text = snap.to_json().dump();
+    let back = obs::MetricsSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back.to_json().dump(), text, "snapshot must round-trip");
+
+    // leave the process-global gate the way production code expects it
+    obs::metrics::set_enabled(true);
+}
