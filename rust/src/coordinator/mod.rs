@@ -10,11 +10,15 @@
 //! * `serve` — the long-running JSONL job service (`galen serve`):
 //!   submit/status/events/result/cancel over stdin/stdout, many concurrent
 //!   search jobs multiplexed over a worker pool with shared latency caches.
+//! * `net` — the socket front (`galen serve --listen`): the same protocol
+//!   over TCP or Unix-socket connections, thread-per-connection with a
+//!   versioned `hello` handshake and bounded admission.
 //! * `journal` — durable write-ahead job journal behind
 //!   `galen serve --resume-jobs` crash recovery.
 //! * result records are serialized to `results/*.json` for EXPERIMENTS.md.
 
 mod journal;
+mod net;
 mod report;
 mod service;
 mod session;
@@ -22,6 +26,9 @@ mod session;
 pub use journal::{
     replay_journal, ReplayedJob, ServeJournal, SERVE_JOURNAL_FILE, SERVE_JOURNAL_SCHEMA_VERSION,
 };
+pub use net::{serve_listener, BoundListener, NetOptions};
 pub use report::{policy_json, policy_report, table1_header, ExperimentRecord};
-pub use service::{serve, JobStatus, ServeOptions, ServeStats, SERVE_PROTOCOL_VERSION};
+pub use service::{
+    serve, JobStatus, ServeOptions, ServeStats, MAX_REQUEST_LINE, SERVE_PROTOCOL_VERSION,
+};
 pub use session::{Backend, Session, SessionOptions};

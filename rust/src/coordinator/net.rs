@@ -1,0 +1,306 @@
+//! Socket front for the serve job service: `galen serve --listen <addr>`.
+//!
+//! Accepts TCP (`host:port`) or Unix-socket (`unix:<path>`) connections
+//! and runs the same transport-agnostic [`super::service`] protocol loop
+//! for each one, thread-per-connection, over one shared job pool — the
+//! conformance suite asserts the wire behavior is byte-identical to the
+//! stdio path.  Every socket connection must open with a successful
+//! `hello` handshake (see the service module docs) before any other op.
+//!
+//! # Admission and drain
+//!
+//! Connections above [`NetOptions::max_connections`] receive exactly one
+//! structured `ok:false` line carrying `retry_after_ms`, then the socket
+//! closes — the accept loop itself never stalls on an overloaded pool.
+//! When any client sends `shutdown`, the listener stops accepting, every
+//! connection's next (possibly timed-out) read observes the drain flag and
+//! closes, in-flight jobs finish or checkpoint, and each transition is
+//! journaled exactly as on the stdio path.  A connection dying mid-request
+//! is that client's problem: the error is logged, its jobs keep running,
+//! and the service keeps serving everyone else.
+
+use std::io::{BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+#[cfg(unix)]
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::service::{
+    obs_admission_rejected, protocol_loop, serve_with_front, ConnCtx, ServeOptions, ServeStats,
+    ServiceState,
+};
+use crate::eval::SensitivityTable;
+use crate::model::ModelIr;
+use crate::search::LatencyFactory;
+use crate::util::json::Json;
+
+/// Knobs of the socket front.
+#[derive(Clone, Debug)]
+pub struct NetOptions {
+    /// Concurrent client connections admitted (0 = unlimited); excess
+    /// connections get one structured rejection line and are closed.
+    pub max_connections: usize,
+}
+
+/// 64 concurrent connections — far above a sharded sweep's client count,
+/// low enough that a reconnect storm cannot exhaust threads.
+impl Default for NetOptions {
+    fn default() -> Self {
+        Self { max_connections: 64 }
+    }
+}
+
+/// How often blocked reads and idle accept polls re-check the drain flag:
+/// the bound on how long shutdown waits for parked connections.
+const POLL_INTERVAL: Duration = Duration::from_millis(100);
+
+/// A bound serve listener, ready for [`serve_listener`].
+pub enum BoundListener {
+    /// A TCP listener (`host:port`, port 0 picks a free one).
+    Tcp(TcpListener),
+    /// A Unix-domain socket listener and the path it is bound to (removed
+    /// again when the listener drops).
+    #[cfg(unix)]
+    Unix(UnixListener, PathBuf),
+}
+
+impl BoundListener {
+    /// Bind `spec`: `unix:<path>` for a Unix-domain socket, anything else
+    /// as a TCP address.  A stale socket file left by a crashed serve is
+    /// removed before binding (a live server holds the listener, so its
+    /// file is never "stale").
+    pub fn bind(spec: &str) -> Result<Self> {
+        if let Some(path) = spec.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                let path = PathBuf::from(path);
+                if path.exists() {
+                    std::fs::remove_file(&path).map_err(|e| {
+                        anyhow::anyhow!("removing stale socket {}: {e}", path.display())
+                    })?;
+                }
+                let listener = UnixListener::bind(&path).map_err(|e| {
+                    anyhow::anyhow!("binding unix socket {}: {e}", path.display())
+                })?;
+                return Ok(Self::Unix(listener, path));
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                anyhow::bail!("unix sockets are not supported on this platform ('{spec}')");
+            }
+        }
+        let listener = TcpListener::bind(spec)
+            .map_err(|e| anyhow::anyhow!("binding tcp {spec}: {e}"))?;
+        Ok(Self::Tcp(listener))
+    }
+
+    /// The bound address, in the same form `bind` accepts — with port 0
+    /// the caller needs this to learn the ephemeral port it actually got.
+    pub fn local_addr(&self) -> String {
+        match self {
+            Self::Tcp(listener) => listener
+                .local_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "tcp:?".to_string()),
+            #[cfg(unix)]
+            Self::Unix(_, path) => format!("unix:{}", path.display()),
+        }
+    }
+}
+
+impl Drop for BoundListener {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Self::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// One accepted client stream.  Both socket types clone into an owned
+/// reader half (the writer keeps the original) and take a read timeout so
+/// a parked connection re-checks the drain flag every [`POLL_INTERVAL`].
+trait Conn: Read + Write + Send + Sized + 'static {
+    /// Metric label (closed set: `tcp` | `unix`).
+    const TRANSPORT: &'static str;
+
+    /// An independently-owned handle to the same stream, for the read half.
+    fn split(&self) -> std::io::Result<Self>;
+
+    /// Blocking mode + read timeout (accepted sockets can inherit the
+    /// listener's non-blocking flag on some platforms).
+    fn configure(&self) -> std::io::Result<()>;
+}
+
+impl Conn for TcpStream {
+    const TRANSPORT: &'static str = "tcp";
+
+    fn split(&self) -> std::io::Result<Self> {
+        self.try_clone()
+    }
+
+    fn configure(&self) -> std::io::Result<()> {
+        self.set_nonblocking(false)?;
+        self.set_read_timeout(Some(POLL_INTERVAL))?;
+        // request/response lines are small; never trade latency for batching
+        self.set_nodelay(true)
+    }
+}
+
+#[cfg(unix)]
+impl Conn for UnixStream {
+    const TRANSPORT: &'static str = "unix";
+
+    fn split(&self) -> std::io::Result<Self> {
+        self.try_clone()
+    }
+
+    fn configure(&self) -> std::io::Result<()> {
+        self.set_nonblocking(false)?;
+        self.set_read_timeout(Some(POLL_INTERVAL))
+    }
+}
+
+/// Run the job service behind a socket listener until a client sends
+/// `shutdown`, then drain and return the run's counters — the networked
+/// sibling of [`super::serve`], sharing its worker pool, journal and
+/// checkpoint machinery via the same service core.
+pub fn serve_listener(
+    ir: &ModelIr,
+    sens: &SensitivityTable,
+    factory: &LatencyFactory,
+    variant: &str,
+    opts: &ServeOptions,
+    net: &NetOptions,
+    listener: BoundListener,
+) -> Result<ServeStats> {
+    serve_with_front(ir, sens, factory, variant, opts, |svc| {
+        log::info!("serve: listening on {}", listener.local_addr());
+        match &listener {
+            BoundListener::Tcp(l) => {
+                l.set_nonblocking(true)?;
+                accept_loop(svc, net, || match l.accept() {
+                    Ok((stream, peer)) => Ok(Some((stream, peer.to_string()))),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+                    Err(e) => Err(e),
+                })
+            }
+            #[cfg(unix)]
+            BoundListener::Unix(l, path) => {
+                l.set_nonblocking(true)?;
+                let peer = format!("unix:{}", path.display());
+                accept_loop(svc, net, || match l.accept() {
+                    Ok((stream, _)) => Ok(Some((stream, peer.clone()))),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+                    Err(e) => Err(e),
+                })
+            }
+        }
+    })
+}
+
+/// Accept until drain: admit up to the connection cap, spawn one protocol
+/// thread per client, reject the rest with a structured line.  Scoped
+/// threads guarantee every connection is joined before the front returns —
+/// the drain barrier the stats tally depends on.
+fn accept_loop<S: Conn>(
+    svc: &ServiceState<'_>,
+    net: &NetOptions,
+    mut accept: impl FnMut() -> std::io::Result<Option<(S, String)>>,
+) -> Result<()> {
+    let active = AtomicUsize::new(0);
+    // connection 0 is the stdio transport's identity; sockets start at 1
+    let mut next_conn: u64 = 1;
+    let mut consecutive_errors = 0usize;
+    std::thread::scope(|scope| -> Result<()> {
+        loop {
+            if svc.draining() {
+                log::info!("serve: draining — no longer accepting connections");
+                return Ok(());
+            }
+            let (stream, peer) = match accept() {
+                Ok(None) => {
+                    std::thread::sleep(POLL_INTERVAL);
+                    continue;
+                }
+                Ok(Some(accepted)) => {
+                    consecutive_errors = 0;
+                    accepted
+                }
+                Err(e) => {
+                    // transient accept failures (e.g. fd exhaustion) heal;
+                    // a listener that only errors is dead — give up loudly
+                    consecutive_errors += 1;
+                    if consecutive_errors >= 100 {
+                        // flag the drain first: live connection threads
+                        // must observe it and exit, or the scope join
+                        // below this loop would wait on them forever
+                        svc.begin_drain();
+                        anyhow::bail!(
+                            "accept failed {consecutive_errors} times in a row: {e}"
+                        );
+                    }
+                    log::warn!("serve: accept failed ({e}); retrying");
+                    std::thread::sleep(POLL_INTERVAL);
+                    continue;
+                }
+            };
+            if net.max_connections > 0
+                && active.load(Ordering::SeqCst) >= net.max_connections
+            {
+                reject_connection(svc, stream, net.max_connections, &peer);
+                continue;
+            }
+            let reader = match stream.configure().and_then(|()| stream.split()) {
+                Ok(reader) => reader,
+                Err(e) => {
+                    log::warn!("serve: {peer}: socket setup failed ({e}); dropping");
+                    continue;
+                }
+            };
+            let conn = ConnCtx {
+                id: next_conn,
+                transport: S::TRANSPORT,
+                require_hello: true,
+            };
+            next_conn += 1;
+            active.fetch_add(1, Ordering::SeqCst);
+            let active = &active;
+            scope.spawn(move || {
+                let mut stream = stream;
+                log::info!("serve: connection {} accepted from {peer}", conn.id);
+                if let Err(e) = protocol_loop(svc, &conn, BufReader::new(reader), &mut stream) {
+                    log::info!("serve: connection {} dropped: {e:#}", conn.id);
+                }
+                active.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+    })
+}
+
+/// Over-capacity: answer one structured rejection line and hang up.  Write
+/// failures are ignored — the client is being turned away either way.
+fn reject_connection<S: Conn>(svc: &ServiceState<'_>, mut stream: S, cap: usize, peer: &str) {
+    obs_admission_rejected("connections").inc();
+    log::warn!("serve: rejecting {peer}: at the connection cap ({cap})");
+    // best-effort blocking mode so the one-line write goes through
+    let _ = stream.configure();
+    let line = Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        (
+            "error",
+            Json::str(format!(
+                "server is at its connection capacity ({cap}); retry later"
+            )),
+        ),
+        ("retry_after_ms", Json::num(svc.retry_hint_ms() as f64)),
+    ]);
+    let _ = writeln!(stream, "{}", line.dump());
+    let _ = stream.flush();
+}

@@ -1,22 +1,49 @@
 //! The long-running search job service behind `galen serve`.
 //!
-//! Speaks a line-oriented JSONL protocol over any `BufRead`/`Write` pair
-//! (the CLI wires stdin/stdout; tests wire in-memory buffers).  Each
-//! request is one JSON object per line with an `op` field; each response is
-//! one JSON object per line with `ok` plus the request's `id` echoed back
-//! when present.  Operations:
+//! Speaks a line-oriented JSONL protocol over any `BufRead`/`Write` pair.
+//! The protocol loop is transport-agnostic: the CLI wires stdin/stdout,
+//! [`super::net`] wires TCP and Unix-socket connections over the same
+//! shared job pool, and tests wire in-memory buffers — all three transports
+//! produce byte-identical responses (the conformance suite asserts this).
+//! Each request is one JSON object per line with an `op` field; each
+//! response is one JSON object per line with `ok` plus the request's `id`
+//! echoed back when present.  Operations:
 //!
 //! | op         | request fields                         | response                       |
 //! |------------|----------------------------------------|--------------------------------|
-//! | `submit`   | `spec{agent, target, preset?, config?, variant?}` | `job`, `state`      |
-//! | `status`   | `job`                                  | `state`, `episode`, `episodes` |
-//! | `events`   | `job`, `since?`                        | `events[]`, `next`             |
-//! | `result`   | `job`, `wait?`                         | `state`, `outcome`, `policy`   |
-//! | `cancel`   | `job`                                  | `state`                        |
-//! | `forget`   | `job`                                  | `state` (events/outcome freed) |
+//! | `hello`    | `protocol`, `require?`                 | `protocol`, `capabilities[]`   |
+//! | `submit`   | `spec{agent, target, preset?, config?, variant?}` | `job`, `token`, `state` |
+//! | `status`   | `job`, `token?`                        | `state`, `episode`, `episodes` |
+//! | `events`   | `job`, `since?`, `token?`              | `events[]`, `next`             |
+//! | `result`   | `job`, `wait?`, `token?`               | `state`, `outcome`, `policy`   |
+//! | `cancel`   | `job`, `token?`                        | `state`                        |
+//! | `forget`   | `job`, `token?`                        | `state` (events/outcome freed) |
 //! | `list`     |                                        | `jobs[]`                       |
 //! | `metrics`  |                                        | `metrics` (registry snapshot)  |
 //! | `shutdown` |                                        | (serve loop exits)             |
+//!
+//! # Handshake, scoping and admission
+//!
+//! `hello` negotiates the protocol: the client sends the schema version it
+//! speaks and optionally a `require` list of capabilities it depends on; a
+//! mismatch is rejected with both versions echoed (`client_protocol` /
+//! `server_protocol`) and the client may retry with a supported version.
+//! Socket transports require a successful `hello` before any other op;
+//! stdio keeps the handshake optional for backward compatibility with
+//! pipeline scripts.
+//!
+//! Jobs are scoped to the connection that submitted them: `submit` returns
+//! a capability `token`, and other connections can only observe or cancel
+//! the job by presenting that token (`list` likewise shows only your own
+//! and journal-restored jobs).  Tokens are deterministic per (seed, index)
+//! — an access-scoping capability, not a cryptographic secret.
+//!
+//! Admission is bounded so overload degrades loudly instead of stalling:
+//! when [`ServeOptions::max_queued_jobs`] is reached, `submit` answers a
+//! structured `ok:false` carrying `retry_after_ms` (the connection cap in
+//! [`super::net`] rejects the same way).  Request lines are capped at
+//! [`MAX_REQUEST_LINE`] bytes; an oversized or non-UTF-8 line gets exactly
+//! one `ok:false` and the connection keeps serving.
 //!
 //! Jobs multiplex over a fixed worker pool: each worker drives a
 //! [`crate::search::SearchDriver`] episode by episode, streaming its
@@ -114,9 +141,26 @@ fn obs_checkpoint_retries() -> &'static obs::Counter {
     C.get_or_init(|| obs::Counter::register("serve_checkpoint_retries_total", &[]))
 }
 
-/// Version of the JSONL protocol (the `hello`-less handshake: clients can
-/// check it via `list` responses).
-pub const SERVE_PROTOCOL_VERSION: usize = 1;
+fn obs_connections_active() -> &'static obs::Gauge {
+    static G: OnceLock<obs::Gauge> = OnceLock::new();
+    G.get_or_init(|| obs::Gauge::register("serve_connections_active", &[]))
+}
+
+// Admission rejections by reason ("queue" here, "connections" in net.rs) —
+// a closed label set, registered on the cold rejection path only.
+pub(super) fn obs_admission_rejected(reason: &str) -> obs::Counter {
+    obs::Counter::register("serve_admission_rejected_total", &[("reason", reason)])
+}
+
+/// Version of the JSONL protocol schema, negotiated by the `hello`
+/// handshake (also echoed in `list` responses).  v2 added `hello`, job
+/// tokens and bounded admission.
+pub const SERVE_PROTOCOL_VERSION: usize = 2;
+
+/// Upper bound on one request line, in bytes.  A line past the cap is
+/// discarded up to its newline and answered with exactly one `ok:false` —
+/// one hostile or broken client must not balloon service memory.
+pub const MAX_REQUEST_LINE: usize = 256 * 1024;
 
 /// Lifecycle state of one submitted job.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -191,6 +235,13 @@ pub struct ServeOptions {
     /// Checkpoint each running job's driver every N episodes (0 = never;
     /// effective only with `journal_dir`).
     pub checkpoint_every: usize,
+    /// Reject `submit` once this many jobs are waiting for a worker
+    /// (0 = unbounded).  Rejections are structured `ok:false` responses
+    /// carrying `retry_after_ms`, never a stalled protocol loop.
+    pub max_queued_jobs: usize,
+    /// The `retry_after_ms` hint sent with admission rejections
+    /// (0 = the 500 ms default).
+    pub retry_after_ms: u64,
     /// Armed fault injections (tests; the CLI wires `GALEN_FAULTS`).
     pub faults: FaultPlan,
 }
@@ -239,10 +290,41 @@ struct Job {
     id: String,
     cfg: SearchConfig,
     origin: JobOrigin,
+    /// Connection that submitted it.  `None` for journal-replayed jobs —
+    /// they pre-date every live connection, so any client may access them.
+    owner: Option<u64>,
+    /// Capability for cross-connection access: handed out in the submit
+    /// response, required from every other connection.
+    token: String,
     inner: Mutex<JobInner>,
     /// Signalled on every terminal transition (`result` with `wait` parks
     /// here).
     done: Condvar,
+}
+
+/// A job's capability token: a pure function of (service seed, job index),
+/// so resumed sessions re-derive the same tokens their clients already
+/// hold.  This is access *scoping* (which connection may touch which job),
+/// not cryptography — serve listens on trusted interfaces.
+fn job_token(seed: u64, index: usize) -> String {
+    let mut h = crate::util::Fnv1a::seeded(seed ^ 0x9e37_79b9_7f4a_7c15);
+    h.mix(0x6a6f_625f_746f_6b65); // "job_toke(n)"
+    h.mix(index as u64);
+    format!("{:016x}", h.finish())
+}
+
+/// Identity of one protocol connection.  The stdio transport is connection
+/// 0 and skips the mandatory handshake (pipeline scripts pre-date `hello`);
+/// socket connections get unique ids from the accept loop and must
+/// handshake before any other op.
+#[derive(Clone, Copy, Debug)]
+pub(super) struct ConnCtx {
+    /// Unique within one serve session; owner of the jobs it submits.
+    pub(super) id: u64,
+    /// Metric label: `stdio` | `tcp` | `unix` (closed set).
+    pub(super) transport: &'static str,
+    /// Whether ops before a successful `hello` are rejected.
+    pub(super) require_hello: bool,
 }
 
 impl Job {
@@ -255,7 +337,9 @@ impl Job {
 }
 
 /// Shared service state: the environment jobs run against plus the queue.
-struct ServiceState<'a> {
+/// `pub(super)` so the socket front in [`super::net`] can run
+/// [`protocol_loop`]s against it; fields stay private to this module.
+pub(super) struct ServiceState<'a> {
     ir: &'a ModelIr,
     sens: &'a SensitivityTable,
     factory: &'a LatencyFactory,
@@ -265,6 +349,9 @@ struct ServiceState<'a> {
     journal: Option<Mutex<ServeJournal>>,
     checkpoint_dir: Option<PathBuf>,
     checkpoint_every: usize,
+    max_queued: usize,
+    retry_after_ms: u64,
+    token_seed: u64,
     faults: FaultPlan,
     jobs: Mutex<Vec<Arc<Job>>>,
     queue: Mutex<VecDeque<usize>>,
@@ -277,6 +364,26 @@ struct ServiceState<'a> {
 impl ServiceState<'_> {
     fn checkpoint_path(&self, id: &str) -> Option<PathBuf> {
         self.checkpoint_dir.as_ref().map(|d| d.join(format!("{id}.json")))
+    }
+
+    /// Whether shutdown has been requested: fronts stop accepting, blocked
+    /// reads give up their connections, workers drain the queue and exit.
+    pub(super) fn draining(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// The backoff hint attached to admission rejections.
+    pub(super) fn retry_hint_ms(&self) -> u64 {
+        if self.retry_after_ms == 0 { 500 } else { self.retry_after_ms }
+    }
+
+    /// Flag the drain and wake parked workers.  The flag is published
+    /// under the queue lock so a worker between its shutdown check and its
+    /// wait cannot miss the wakeup.  Idempotent.
+    pub(super) fn begin_drain(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _queue = sync::lock(&self.queue);
+        self.queue_cv.notify_all();
     }
 }
 
@@ -295,6 +402,28 @@ pub fn serve<R: BufRead, W: Write>(
     input: R,
     output: &mut W,
 ) -> Result<ServeStats> {
+    serve_with_front(ir, sens, factory, variant, opts, move |svc| {
+        let conn = ConnCtx { id: 0, transport: "stdio", require_hello: false };
+        protocol_loop(svc, &conn, input, output)
+    })
+}
+
+/// The transport-generic service core: build the shared state, start the
+/// worker pool, hand the state to `front` (a stdio protocol loop, or the
+/// socket accept loop in [`super::net`]), then drain and tally.  When
+/// `front` returns, shutdown is flagged (idempotent if the front already
+/// did) so submitted work always drains before the stats are counted.
+pub(super) fn serve_with_front<F>(
+    ir: &ModelIr,
+    sens: &SensitivityTable,
+    factory: &LatencyFactory,
+    variant: &str,
+    opts: &ServeOptions,
+    front: F,
+) -> Result<ServeStats>
+where
+    F: FnOnce(&ServiceState<'_>) -> Result<()>,
+{
     let workers = if opts.workers == 0 {
         crate::util::num_threads()
     } else {
@@ -305,6 +434,9 @@ pub fn serve<R: BufRead, W: Write>(
         "resuming jobs needs a journal: configure a results directory \
          (the journal lives alongside the result records)"
     );
+    // tokens derive from the service seed so a resumed session re-derives
+    // the tokens the previous session handed out
+    let token_seed = opts.base_seed.unwrap_or(0x6761_6c65_6e);
     let mut initial_jobs: Vec<Arc<Job>> = Vec::new();
     let mut initial_queue: VecDeque<usize> = VecDeque::new();
     let mut journal = None;
@@ -316,6 +448,8 @@ pub fn serve<R: BufRead, W: Write>(
                     id: rj.id,
                     cfg: rj.cfg,
                     origin: if terminal { JobOrigin::Restored } else { JobOrigin::Resumed },
+                    owner: None,
+                    token: job_token(token_seed, index),
                     inner: Mutex::new(JobInner {
                         status: if terminal { rj.status } else { JobStatus::Queued },
                         episode: 0,
@@ -361,6 +495,9 @@ pub fn serve<R: BufRead, W: Write>(
         journal,
         checkpoint_dir: opts.journal_dir.as_ref().map(|d| d.join("checkpoints")),
         checkpoint_every: opts.checkpoint_every,
+        max_queued: opts.max_queued_jobs,
+        retry_after_ms: opts.retry_after_ms,
+        token_seed,
         faults: opts.faults.clone(),
         jobs: Mutex::new(initial_jobs),
         queue: Mutex::new(initial_queue),
@@ -373,14 +510,9 @@ pub fn serve<R: BufRead, W: Write>(
             let svc = &svc;
             scope.spawn(move || worker_loop(svc, w));
         }
-        let r = protocol_loop(&svc, input, output);
-        // EOF (or error): let the workers drain the queue and exit.  The
-        // flag is published under the queue lock so a worker between its
-        // shutdown check and its wait cannot miss the wakeup.
-        svc.shutdown.store(true, Ordering::SeqCst);
-        let _queue = sync::lock(&svc.queue);
-        svc.queue_cv.notify_all();
-        drop(_queue);
+        let r = front(&svc);
+        // EOF (or front error): let the workers drain the queue and exit
+        svc.begin_drain();
         r
     });
     protocol_result?;
@@ -456,78 +588,325 @@ fn journal_status(svc: &ServiceState<'_>, id: &str, status: JobStatus, error: Op
     }
 }
 
+/// What one [`LineReader::next_line`] call produced.
+enum LineRead {
+    /// One complete request line (without its newline).
+    Line(Vec<u8>),
+    /// A line past [`MAX_REQUEST_LINE`] was discarded; answer once.
+    Oversized,
+    /// Input exhausted.
+    Eof,
+    /// The service is draining; the connection gives up its read.
+    Drained,
+}
+
+/// Incremental line framing over any [`BufRead`].  Unlike `read_line`, it
+/// keeps a partial line across read timeouts — socket transports set one
+/// so blocked connections notice shutdown, and clients legitimately split
+/// writes mid-line (or dribble bytes, slow-loris style) — bounds line
+/// length without buffering the excess, and serves a final unterminated
+/// line at EOF.  Bytes are framed before UTF-8 conversion, so a multi-byte
+/// character split across writes reassembles correctly.
+struct LineReader {
+    pending: Vec<u8>,
+    /// Inside an over-long line: discard up to the next newline.
+    overflowing: bool,
+}
+
+impl LineReader {
+    fn new() -> Self {
+        Self { pending: Vec::new(), overflowing: false }
+    }
+
+    fn next_line<R: BufRead>(
+        &mut self,
+        input: &mut R,
+        draining: impl Fn() -> bool,
+    ) -> std::io::Result<LineRead> {
+        use std::io::ErrorKind;
+        loop {
+            let buf = match input.fill_buf() {
+                Ok(buf) => buf,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                    ) =>
+                {
+                    if draining() {
+                        return Ok(LineRead::Drained);
+                    }
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            if buf.is_empty() {
+                // EOF: a final unterminated line is still a request (a
+                // pipe script's last line often lacks its newline)
+                if self.overflowing {
+                    self.overflowing = false;
+                    return Ok(LineRead::Oversized);
+                }
+                if self.pending.is_empty() {
+                    return Ok(LineRead::Eof);
+                }
+                return Ok(LineRead::Line(std::mem::take(&mut self.pending)));
+            }
+            match buf.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    if self.overflowing {
+                        input.consume(pos + 1);
+                        self.overflowing = false;
+                        return Ok(LineRead::Oversized);
+                    }
+                    self.pending.extend_from_slice(&buf[..pos]);
+                    input.consume(pos + 1);
+                    if self.pending.len() > MAX_REQUEST_LINE {
+                        self.pending.clear();
+                        return Ok(LineRead::Oversized);
+                    }
+                    return Ok(LineRead::Line(std::mem::take(&mut self.pending)));
+                }
+                None => {
+                    let n = buf.len();
+                    if !self.overflowing {
+                        self.pending.extend_from_slice(buf);
+                        if self.pending.len() > MAX_REQUEST_LINE {
+                            self.pending.clear();
+                            self.overflowing = true;
+                        }
+                    }
+                    input.consume(n);
+                }
+            }
+        }
+    }
+}
+
+fn protocol_error(message: String) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(message)),
+    ])
+}
+
 /// Read requests line by line, answer each with exactly one response line.
-fn protocol_loop<R: BufRead, W: Write>(
+/// One loop serves every transport: stdio ([`serve`]), TCP and Unix
+/// sockets ([`super::net`]) — responses are byte-identical across them.
+pub(super) fn protocol_loop<R: BufRead, W: Write>(
     svc: &ServiceState<'_>,
+    conn: &ConnCtx,
     input: R,
     output: &mut W,
 ) -> Result<()> {
-    for line in input.lines() {
-        let line = line?;
+    obs::Counter::register("serve_connections_total", &[("transport", conn.transport)]).inc();
+    obs_connections_active().add(1.0);
+    let result = protocol_loop_inner(svc, conn, input, output);
+    obs_connections_active().add(-1.0);
+    result
+}
+
+fn protocol_loop_inner<R: BufRead, W: Write>(
+    svc: &ServiceState<'_>,
+    conn: &ConnCtx,
+    mut input: R,
+    output: &mut W,
+) -> Result<()> {
+    // per-connection request counter, labelled by transport (closed set)
+    let requests =
+        obs::Counter::register("serve_requests_total", &[("transport", conn.transport)]);
+    let mut reader = LineReader::new();
+    let mut hello_done = false;
+    loop {
+        let bytes = match reader.next_line(&mut input, || svc.draining())? {
+            LineRead::Eof | LineRead::Drained => break,
+            LineRead::Oversized => {
+                requests.inc();
+                let r = protocol_error(format!(
+                    "request line exceeds {MAX_REQUEST_LINE} bytes"
+                ));
+                writeln!(output, "{}", r.dump())?;
+                output.flush()?;
+                continue;
+            }
+            LineRead::Line(bytes) => bytes,
+        };
+        let Ok(line) = String::from_utf8(bytes) else {
+            requests.inc();
+            let r = protocol_error("request line is not valid utf-8".to_string());
+            writeln!(output, "{}", r.dump())?;
+            output.flush()?;
+            continue;
+        };
         let line = line.trim();
         if line.is_empty() {
             continue;
         }
-        let error_response = |e: anyhow::Error| {
-            Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::str(format!("{e:#}"))),
-            ])
-        };
-        // parse up front so even failing requests echo their correlation
-        // id — pipelining clients must be able to match every response
-        let response = match Json::parse(line) {
-            Err(e) => error_response(anyhow::anyhow!("bad request json: {e}")),
-            Ok(req) => {
-                // label by verb only for the closed op set — arbitrary
-                // client strings must not mint unbounded metric series
-                let verb = match req.get("op").and_then(Json::as_str) {
-                    Some(op) if SERVE_OPS.contains(&op) => op.to_string(),
-                    _ => "other".to_string(),
-                };
-                let _sp = obs::trace::span("serve_request").arg("verb", verb.clone());
-                let t0 = Instant::now();
-                let mut r = match handle_request(svc, &req) {
-                    Ok(j) => j,
-                    Err(e) => error_response(e),
-                };
-                obs::Histogram::register(
-                    "serve_request_seconds",
-                    &[("verb", &verb)],
-                    &obs::latency_bounds(),
-                )
-                .observe_duration(t0.elapsed());
-                if let (Json::Obj(m), Some(id)) = (&mut r, req.get("id")) {
-                    m.insert("id".to_string(), id.clone());
-                }
-                r
-            }
-        };
+        requests.inc();
+        let response = respond_to_line(svc, conn, &mut hello_done, line);
         writeln!(output, "{}", response.dump())?;
         output.flush()?;
-        if svc.shutdown.load(Ordering::SeqCst) {
+        if svc.draining() {
             break;
         }
     }
     Ok(())
 }
 
+/// One request line to one response object: parse, handshake-gate,
+/// dispatch, time, echo the id.
+fn respond_to_line(
+    svc: &ServiceState<'_>,
+    conn: &ConnCtx,
+    hello_done: &mut bool,
+    line: &str,
+) -> Json {
+    let error_response = |e: anyhow::Error| protocol_error(format!("{e:#}"));
+    // parse up front so even failing requests echo their correlation
+    // id — pipelining clients must be able to match every response
+    match Json::parse(line) {
+        Err(e) => error_response(anyhow::anyhow!("bad request json: {e}")),
+        Ok(req) => {
+            // label by verb only for the closed op set — arbitrary
+            // client strings must not mint unbounded metric series
+            let verb = match req.get("op").and_then(Json::as_str) {
+                Some(op) if SERVE_OPS.contains(&op) => op.to_string(),
+                _ => "other".to_string(),
+            };
+            let _sp = obs::trace::span("serve_request").arg("verb", verb.clone());
+            let t0 = Instant::now();
+            let mut r = if verb == "hello" {
+                match op_hello(svc, &req) {
+                    Ok((r, accepted)) => {
+                        *hello_done |= accepted;
+                        r
+                    }
+                    Err(e) => error_response(e),
+                }
+            } else if conn.require_hello && !*hello_done {
+                // a rejected or missing handshake gates everything else,
+                // but the connection stays open: the client may retry
+                // `hello` with a version this server speaks
+                error_response(anyhow::anyhow!(
+                    "handshake required: send {{\"op\":\"hello\",\"protocol\":{SERVE_PROTOCOL_VERSION}}} first"
+                ))
+            } else {
+                match handle_request(svc, conn, &req) {
+                    Ok(r) => r,
+                    Err(e) => error_response(e),
+                }
+            };
+            obs::Histogram::register(
+                "serve_request_seconds",
+                &[("verb", &verb)],
+                &obs::latency_bounds(),
+            )
+            .observe_duration(t0.elapsed());
+            if let (Json::Obj(m), Some(id)) = (&mut r, req.get("id")) {
+                m.insert("id".to_string(), id.clone());
+            }
+            r
+        }
+    }
+}
+
 /// The closed set of protocol operations (also the valid per-verb metric
-/// labels for `serve_request_seconds`).
+/// labels for `serve_request_seconds`, and the `hello` capability list).
 const SERVE_OPS: &[&str] = &[
-    "submit", "status", "events", "result", "cancel", "forget", "list", "metrics", "shutdown",
+    "hello", "submit", "status", "events", "result", "cancel", "forget", "list", "metrics",
+    "shutdown",
 ];
 
-fn handle_request(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
+/// The `hello` handshake: the client states the protocol schema version it
+/// speaks (and optionally capabilities it requires); a mismatch is
+/// rejected with both versions echoed so the client can decide what to do.
+/// Returns the response plus whether the handshake succeeded.
+fn op_hello(svc: &ServiceState<'_>, req: &Json) -> Result<(Json, bool)> {
+    const KEYS: &[&str] = &["op", "id", "protocol", "require"];
+    let obj = req
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("hello request must be a JSON object"))?;
+    for key in obj.keys() {
+        anyhow::ensure!(
+            KEYS.contains(&key.as_str()),
+            "unknown hello key '{key}' (valid keys: {})",
+            KEYS.join(", ")
+        );
+    }
+    let client = req.req_usize("protocol")?;
+    if client != SERVE_PROTOCOL_VERSION {
+        return Ok((
+            Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                (
+                    "error",
+                    Json::str(format!(
+                        "protocol version mismatch: client speaks v{client}, \
+                         server speaks v{SERVE_PROTOCOL_VERSION}"
+                    )),
+                ),
+                ("client_protocol", Json::num(client as f64)),
+                ("server_protocol", Json::num(SERVE_PROTOCOL_VERSION as f64)),
+            ]),
+            false,
+        ));
+    }
+    if let Some(required) = req.get("require") {
+        let required = required.as_arr().ok_or_else(|| {
+            anyhow::anyhow!("hello 'require' must be an array of capability strings")
+        })?;
+        let mut missing = Vec::new();
+        for cap in required {
+            let cap = cap.as_str().ok_or_else(|| {
+                anyhow::anyhow!("hello 'require' must be an array of capability strings")
+            })?;
+            if !SERVE_OPS.contains(&cap) {
+                missing.push(cap.to_string());
+            }
+        }
+        if !missing.is_empty() {
+            return Ok((
+                Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    (
+                        "error",
+                        Json::str(format!(
+                            "unsupported capabilities: {}",
+                            missing.join(", ")
+                        )),
+                    ),
+                    ("capabilities", capabilities_json()),
+                ]),
+                false,
+            ));
+        }
+    }
+    Ok((
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("protocol", Json::num(SERVE_PROTOCOL_VERSION as f64)),
+            ("capabilities", capabilities_json()),
+            ("variant", Json::str(svc.variant.clone())),
+        ]),
+        true,
+    ))
+}
+
+fn capabilities_json() -> Json {
+    Json::Arr(SERVE_OPS.iter().map(|op| Json::str(*op)).collect())
+}
+
+fn handle_request(svc: &ServiceState<'_>, conn: &ConnCtx, req: &Json) -> Result<Json> {
     let op = req.req_str("op")?;
     match op {
-        "submit" => op_submit(svc, req),
-        "status" => op_status(svc, req),
-        "events" => op_events(svc, req),
-        "result" => op_result(svc, req),
-        "cancel" => op_cancel(svc, req),
-        "forget" => op_forget(svc, req),
-        "list" => op_list(svc),
+        // "hello" never reaches here: the loop dispatches it pre-gate
+        "submit" => op_submit(svc, conn, req),
+        "status" => op_status(svc, conn, req),
+        "events" => op_events(svc, conn, req),
+        "result" => op_result(svc, conn, req),
+        "cancel" => op_cancel(svc, conn, req),
+        "forget" => op_forget(svc, conn, req),
+        "list" => op_list(svc, conn),
         "metrics" => op_metrics(req),
         "shutdown" => {
             svc.shutdown.store(true, Ordering::SeqCst);
@@ -537,7 +916,8 @@ fn handle_request(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
             ]))
         }
         other => anyhow::bail!(
-            "unknown op '{other}' (submit|status|events|result|cancel|forget|list|metrics|shutdown)"
+            "unknown op '{other}' \
+             (hello|submit|status|events|result|cancel|forget|list|metrics|shutdown)"
         ),
     }
 }
@@ -605,13 +985,34 @@ fn config_from_spec(
     Ok(cfg)
 }
 
-fn op_submit(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
-    anyhow::ensure!(
-        !svc.shutdown.load(Ordering::SeqCst),
-        "service is shutting down"
-    );
+fn op_submit(svc: &ServiceState<'_>, conn: &ConnCtx, req: &Json) -> Result<Json> {
     let cfg = config_from_spec(req.req("spec")?, svc.base_seed, &svc.variant)?;
+    // Admission and enqueue are one critical section over BOTH maps.  The
+    // drain check must be authoritative at enqueue time: with it outside
+    // the lock, a submit racing a concurrent connection's `shutdown` could
+    // journal-and-queue a job after the workers have already observed
+    // (shutdown && queue empty) and exited — an accepted job nobody will
+    // ever run, which the next session's journal replay would see as
+    // interrupted work that never existed.  Lock order jobs -> queue is
+    // deadlock-free: workers release the queue lock before touching jobs.
     let mut jobs = sync::lock(&svc.jobs);
+    let mut queue = sync::lock(&svc.queue);
+    anyhow::ensure!(!svc.draining(), "service is shutting down");
+    if svc.max_queued > 0 && queue.len() >= svc.max_queued {
+        obs_admission_rejected("queue").inc();
+        return Ok(Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            (
+                "error",
+                Json::str(format!(
+                    "job queue is full ({} queued, max {}); retry later",
+                    queue.len(),
+                    svc.max_queued
+                )),
+            ),
+            ("retry_after_ms", Json::num(svc.retry_hint_ms() as f64)),
+        ]));
+    }
     let index = jobs.len();
     let id = format!("job-{index}");
     // write-ahead, under the jobs lock: the journal's submission order is
@@ -623,10 +1024,13 @@ fn op_submit(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
             .record_submitted(&id, &cfg)
             .map_err(|e| e.context("journaling submit (job not accepted)"))?;
     }
+    let token = job_token(svc.token_seed, index);
     jobs.push(Arc::new(Job {
         id: id.clone(),
         cfg,
         origin: JobOrigin::Submitted,
+        owner: Some(conn.id),
+        token: token.clone(),
         inner: Mutex::new(JobInner {
             status: JobStatus::Queued,
             episode: 0,
@@ -639,7 +1043,6 @@ fn op_submit(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
         done: Condvar::new(),
     }));
     drop(jobs);
-    let mut queue = sync::lock(&svc.queue);
     queue.push_back(index);
     obs_queue_depth().set(queue.len() as f64);
     svc.queue_cv.notify_one();
@@ -647,22 +1050,38 @@ fn op_submit(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
     Ok(Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("job", Json::str(id)),
+        ("token", Json::str(token)),
         ("state", Json::str(JobStatus::Queued.to_string())),
     ]))
 }
 
 /// O(1) lookup: ids are `job-<index>` into the append-only jobs vec, so a
 /// long-running service never pays a scan (under the global lock) per poll.
-fn find_job(svc: &ServiceState<'_>, req: &Json) -> Result<Arc<Job>> {
+/// Enforces the scoping rule: a job is visible to the connection that
+/// submitted it, to anyone presenting its `token`, and — for journal-
+/// replayed jobs with no live owner — to everyone.
+fn find_job(svc: &ServiceState<'_>, conn: &ConnCtx, req: &Json) -> Result<Arc<Job>> {
     let id = req.req_str("job")?;
     let index: Option<usize> = id.strip_prefix("job-").and_then(|n| n.parse().ok());
-    index
+    let job = index
         .and_then(|i| sync::lock(&svc.jobs).get(i).cloned())
-        .ok_or_else(|| anyhow::anyhow!("unknown job '{id}'"))
+        .ok_or_else(|| anyhow::anyhow!("unknown job '{id}'"))?;
+    let authorized = match job.owner {
+        None => true,
+        Some(owner) => {
+            owner == conn.id
+                || req.get("token").and_then(Json::as_str) == Some(job.token.as_str())
+        }
+    };
+    anyhow::ensure!(
+        authorized,
+        "job '{id}' belongs to another connection (present its 'token' to access it)"
+    );
+    Ok(job)
 }
 
-fn op_status(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
-    let job = find_job(svc, req)?;
+fn op_status(svc: &ServiceState<'_>, conn: &ConnCtx, req: &Json) -> Result<Json> {
+    let job = find_job(svc, conn, req)?;
     let st = sync::lock(&job.inner);
     let mut fields = vec![
         ("ok", Json::Bool(true)),
@@ -677,8 +1096,8 @@ fn op_status(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
     Ok(Json::obj(fields))
 }
 
-fn op_events(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
-    let job = find_job(svc, req)?;
+fn op_events(svc: &ServiceState<'_>, conn: &ConnCtx, req: &Json) -> Result<Json> {
+    let job = find_job(svc, conn, req)?;
     let since = req.get("since").and_then(Json::as_usize).unwrap_or(0);
     let st = sync::lock(&job.inner);
     let from = since.min(st.events.len());
@@ -690,8 +1109,8 @@ fn op_events(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
     ]))
 }
 
-fn op_result(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
-    let job = find_job(svc, req)?;
+fn op_result(svc: &ServiceState<'_>, conn: &ConnCtx, req: &Json) -> Result<Json> {
+    let job = find_job(svc, conn, req)?;
     let wait = req.get("wait").and_then(Json::as_bool).unwrap_or(false);
     let mut st = sync::lock(&job.inner);
     if wait {
@@ -717,8 +1136,8 @@ fn op_result(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
     Ok(Json::obj(fields))
 }
 
-fn op_cancel(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
-    let job = find_job(svc, req)?;
+fn op_cancel(svc: &ServiceState<'_>, conn: &ConnCtx, req: &Json) -> Result<Json> {
+    let job = find_job(svc, conn, req)?;
     let state = {
         let mut st = sync::lock(&job.inner);
         st.cancel = true;
@@ -744,8 +1163,8 @@ fn op_cancel(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
 /// so clients that fetched what they need bound the service's memory by
 /// forgetting — without this every outcome and event stream would be
 /// retained for the process lifetime.
-fn op_forget(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
-    let job = find_job(svc, req)?;
+fn op_forget(svc: &ServiceState<'_>, conn: &ConnCtx, req: &Json) -> Result<Json> {
+    let job = find_job(svc, conn, req)?;
     let mut st = sync::lock(&job.inner);
     anyhow::ensure!(
         st.status.is_terminal(),
@@ -762,10 +1181,13 @@ fn op_forget(svc: &ServiceState<'_>, req: &Json) -> Result<Json> {
     ]))
 }
 
-fn op_list(svc: &ServiceState<'_>) -> Result<Json> {
+fn op_list(svc: &ServiceState<'_>, conn: &ConnCtx) -> Result<Json> {
     let jobs = sync::lock(&svc.jobs);
     let rows = jobs
         .iter()
+        // the scoping rule, applied to enumeration: you see your own jobs
+        // and ownerless journal-restored ones, never another client's
+        .filter(|job| job.owner.is_none() || job.owner == Some(conn.id))
         .map(|job| {
             let st = sync::lock(&job.inner);
             Json::obj(vec![
@@ -821,8 +1243,11 @@ fn worker_loop(svc: &ServiceState<'_>, worker: usize) {
     loop {
         if let Some(index) = queue.pop_front() {
             obs_queue_depth().set(queue.len() as f64);
-            let job = sync::lock(&svc.jobs)[index].clone();
             drop(queue);
+            // the jobs lock is taken only after the queue guard is gone:
+            // op_submit holds jobs -> queue, so holding queue -> jobs here
+            // would be an ABBA deadlock
+            let job = sync::lock(&svc.jobs)[index].clone();
             let _job_ctx = logging::push_context(format!("w{worker}/{}", job.id));
             run_job(svc, &job);
             drop(_job_ctx);
@@ -1089,4 +1514,148 @@ fn drive_job(
         outcome.relative_latency() * 100.0
     );
     Ok(Some((outcome, artifact)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::VecDeque as Deque;
+    use std::io::{self, Read};
+
+    /// A scripted `BufRead`: yields chunks (or errors) one `fill_buf` at a
+    /// time, the way a socket delivers split writes and read timeouts.
+    struct Feed {
+        chunks: Deque<io::Result<Vec<u8>>>,
+        cur: Vec<u8>,
+        pos: usize,
+    }
+
+    impl Feed {
+        fn new(chunks: Vec<io::Result<Vec<u8>>>) -> Self {
+            Self { chunks: chunks.into_iter().collect(), cur: Vec::new(), pos: 0 }
+        }
+    }
+
+    impl Read for Feed {
+        fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+            let avail = self.fill_buf()?;
+            let n = avail.len().min(out.len());
+            out[..n].copy_from_slice(&avail[..n]);
+            self.consume(n);
+            Ok(n)
+        }
+    }
+
+    impl BufRead for Feed {
+        fn fill_buf(&mut self) -> io::Result<&[u8]> {
+            if self.pos >= self.cur.len() {
+                match self.chunks.pop_front() {
+                    None => {
+                        self.cur.clear();
+                        self.pos = 0;
+                    }
+                    Some(Ok(chunk)) => {
+                        self.cur = chunk;
+                        self.pos = 0;
+                    }
+                    Some(Err(e)) => return Err(e),
+                }
+            }
+            Ok(&self.cur[self.pos..])
+        }
+
+        fn consume(&mut self, n: usize) {
+            self.pos += n;
+        }
+    }
+
+    fn timeout() -> io::Error {
+        io::Error::new(io::ErrorKind::WouldBlock, "read timed out")
+    }
+
+    fn line(reader: &mut LineReader, feed: &mut Feed) -> String {
+        match reader.next_line(feed, || false).unwrap() {
+            LineRead::Line(bytes) => String::from_utf8(bytes).unwrap(),
+            other => panic!("expected a line, got {}", kind(&other)),
+        }
+    }
+
+    fn kind(r: &LineRead) -> &'static str {
+        match r {
+            LineRead::Line(_) => "line",
+            LineRead::Oversized => "oversized",
+            LineRead::Eof => "eof",
+            LineRead::Drained => "drained",
+        }
+    }
+
+    #[test]
+    fn split_writes_and_timeouts_reassemble_one_line() {
+        // a request split across 3 writes with timeouts in between, and a
+        // multi-byte UTF-8 character ("é" = 0xC3 0xA9) split mid-character
+        let mut feed = Feed::new(vec![
+            Ok(b"{\"op\":\"li".to_vec()),
+            Err(timeout()),
+            Ok(vec![0xC3]),
+            Err(timeout()),
+            Ok(vec![0xA9]),
+            Ok(b"st\"}\n".to_vec()),
+        ]);
+        let mut reader = LineReader::new();
+        assert_eq!(line(&mut reader, &mut feed), "{\"op\":\"li\u{e9}st\"}");
+        assert!(matches!(reader.next_line(&mut feed, || false).unwrap(), LineRead::Eof));
+    }
+
+    #[test]
+    fn timeout_while_draining_gives_up_but_keeps_nothing_half_read() {
+        let mut feed = Feed::new(vec![Ok(b"{\"op\"".to_vec()), Err(timeout())]);
+        let mut reader = LineReader::new();
+        assert!(matches!(
+            reader.next_line(&mut feed, || true).unwrap(),
+            LineRead::Drained
+        ));
+    }
+
+    #[test]
+    fn final_unterminated_line_is_served_at_eof() {
+        let mut feed = Feed::new(vec![Ok(b"a\nb".to_vec())]);
+        let mut reader = LineReader::new();
+        assert_eq!(line(&mut reader, &mut feed), "a");
+        assert_eq!(line(&mut reader, &mut feed), "b");
+        assert!(matches!(reader.next_line(&mut feed, || false).unwrap(), LineRead::Eof));
+    }
+
+    #[test]
+    fn oversized_line_is_discarded_without_buffering_and_stream_recovers() {
+        let mut huge = vec![b'x'; MAX_REQUEST_LINE + 10];
+        huge.push(b'\n');
+        huge.extend_from_slice(b"ok\n");
+        let mut feed = Feed::new(vec![Ok(huge)]);
+        let mut reader = LineReader::new();
+        assert!(matches!(
+            reader.next_line(&mut feed, || false).unwrap(),
+            LineRead::Oversized
+        ));
+        assert!(reader.pending.capacity() <= 2 * MAX_REQUEST_LINE, "excess was buffered");
+        assert_eq!(line(&mut reader, &mut feed), "ok");
+    }
+
+    #[test]
+    fn oversized_line_cut_by_eof_still_reports_once() {
+        let mut feed = Feed::new(vec![Ok(vec![b'x'; MAX_REQUEST_LINE + 1])]);
+        let mut reader = LineReader::new();
+        assert!(matches!(
+            reader.next_line(&mut feed, || false).unwrap(),
+            LineRead::Oversized
+        ));
+        assert!(matches!(reader.next_line(&mut feed, || false).unwrap(), LineRead::Eof));
+    }
+
+    #[test]
+    fn job_tokens_are_deterministic_and_distinct() {
+        assert_eq!(job_token(7, 0), job_token(7, 0), "resume must re-derive tokens");
+        assert_ne!(job_token(7, 0), job_token(7, 1));
+        assert_ne!(job_token(7, 0), job_token(8, 0));
+        assert_eq!(job_token(7, 3).len(), 16, "16 hex chars");
+    }
 }

@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   search       run a policy search (agent, target, episodes, ...)
 //!   sweep        parallel Pareto sweep across agents x targets (--jobs)
-//!   serve        long-running JSONL job service over stdin/stdout
+//!   serve        long-running JSONL job service (stdin/stdout or --listen)
 //!   sequential   prune->quant / quant->prune schemes (Figure 5 protocol)
 //!   sensitivity  compute + print the layer sensitivity table (Figure 6)
 //!   latency      profile the hardware simulator on a model variant
@@ -21,7 +21,8 @@ use anyhow::Result;
 use galen::agent::AgentKind;
 use galen::compress::DiscretePolicy;
 use galen::coordinator::{
-    policy_report, serve, Backend, ExperimentRecord, ServeOptions, Session, SessionOptions,
+    policy_report, serve, serve_listener, Backend, BoundListener, ExperimentRecord, NetOptions,
+    ServeOptions, Session, SessionOptions,
 };
 use galen::eval::{retrain, RetrainCfg, SensitivityConfig, Split};
 use galen::hw::LatencyKind;
@@ -98,7 +99,7 @@ fn usage() -> &'static str {
      Commands:\n\
        search       run one policy search (pruning|quantization|joint)\n\
        sweep        parallel Pareto sweep across agents x targets (Fig 4)\n\
-       serve        JSONL job service over stdin/stdout (submit/status/events/result/cancel)\n\
+       serve        JSONL job service over stdin/stdout or --listen sockets\n\
        sequential   two-stage prune/quant schemes (Fig 5)\n\
        sensitivity  layer sensitivity analysis (Fig 6)\n\
        latency      hardware-simulator latency profile\n\
@@ -301,7 +302,8 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let cli = Cli::new(
         "galen serve",
-        "long-running search job service: JSONL requests on stdin, responses on stdout",
+        "long-running search job service: JSONL over stdin/stdout, or TCP/Unix \
+         sockets with --listen",
     )
     .opt("variant", "resnet18s", "model variant (micro|resnet18s|resnet18|mobilenetv2s)")
     .opt("seed", "7", "session seed")
@@ -313,6 +315,14 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         "1",
         "episodes between driver checkpoints (0 disables; needs --results)",
     )
+    .opt(
+        "listen",
+        "",
+        "accept socket clients: host:port (TCP) or unix:<path> ('' = stdio)",
+    )
+    .opt("max-connections", "64", "concurrent socket clients (0 = unlimited; needs --listen)")
+    .opt("max-queued", "0", "reject submits past this queue depth (0 = unbounded)")
+    .opt("retry-after-ms", "500", "backoff hint attached to admission rejections")
     .flag("resume-jobs", "replay the serve journal and resume interrupted jobs")
     .flag("fixture", "use the in-code tiny fixture IR (no artifacts needed)");
     let args = cli.parse_from(argv)?;
@@ -349,19 +359,42 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         journal_dir: results_dir,
         resume_jobs: args.has_flag("resume-jobs"),
         checkpoint_every: args.get_usize("checkpoint-every")?,
+        max_queued_jobs: args.get_usize("max-queued")?,
+        retry_after_ms: args.get_u64("retry-after-ms")?,
         faults,
     };
-    let stdin = std::io::stdin();
-    let stdout = std::io::stdout();
-    let stats = serve(
-        &session.ir,
-        &session.sens,
-        &factory,
-        &session.opts.variant,
-        &opts,
-        stdin.lock(),
-        &mut stdout.lock(),
-    )?;
+    let listen = args.get("listen");
+    let stats = if listen.is_empty() {
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        serve(
+            &session.ir,
+            &session.sens,
+            &factory,
+            &session.opts.variant,
+            &opts,
+            stdin.lock(),
+            &mut stdout.lock(),
+        )?
+    } else {
+        let net = NetOptions { max_connections: args.get_usize("max-connections")? };
+        let listener = BoundListener::bind(listen)?;
+        // the protocol moved to the socket, so stdout is free: announce
+        // the resolved address (port 0 binds an ephemeral port — scripts
+        // parse this line to find it)
+        println!("listening on {}", listener.local_addr());
+        use std::io::Write as _;
+        std::io::stdout().flush()?;
+        serve_listener(
+            &session.ir,
+            &session.sens,
+            &factory,
+            &session.opts.variant,
+            &opts,
+            &net,
+            listener,
+        )?
+    };
     anyhow::ensure!(
         stats.failed == 0,
         "{} of {} jobs failed (see the per-job error responses)",

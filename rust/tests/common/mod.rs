@@ -1,0 +1,181 @@
+//! Shared helpers for the serve test surface: the tiny fixture session,
+//! an in-process socket server harness, and a line-oriented test client.
+//!
+//! Compiled into each test binary that declares `mod common;` — helpers
+//! unused by a given binary are expected, hence the `dead_code` allow.
+
+#![allow(dead_code)]
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+use std::time::Duration;
+
+use galen::coordinator::{
+    serve_listener, BoundListener, NetOptions, ServeOptions, ServeStats, SERVE_PROTOCOL_VERSION,
+};
+use galen::eval::{SensitivityConfig, SensitivityTable};
+use galen::hw::{HwTarget, LatencyKind, ProfilerConfig};
+use galen::model::ir::test_fixtures::tiny_meta;
+use galen::model::ModelIr;
+use galen::search::LatencyFactory;
+use galen::util::json::Json;
+
+pub fn fixture() -> (ModelIr, SensitivityTable) {
+    let ir = ModelIr::from_meta(&tiny_meta()).unwrap();
+    let sens = SensitivityTable::disabled(ir.layers.len(), &SensitivityConfig::default(), "tiny");
+    (ir, sens)
+}
+
+pub fn factory() -> LatencyFactory {
+    LatencyFactory::new(
+        LatencyKind::Sim,
+        HwTarget::cortex_a72(),
+        "tiny",
+        ProfilerConfig::fast(),
+        None,
+    )
+}
+
+/// A submit request line for a small-but-real search job: low episode
+/// count and a small agent so scripted sessions stay fast.
+pub fn submit_line(id: &str, agent: &str, target: f64) -> String {
+    let overrides = r#"{"episodes": 8, "warmup_episodes": 3, "opt_steps_per_episode": 4, "log_every": 0, "ddpg": {"hidden": [24, 16], "batch": 16, "replay_capacity": 200}}"#;
+    format!(
+        r#"{{"op":"submit","id":"{id}","spec":{{"agent":"{agent}","target":{target},"preset":"fast","config":{overrides}}}}}"#
+    )
+}
+
+/// A well-formed `hello` line for this build's protocol version.
+pub fn hello_line(id: &str) -> String {
+    format!(r#"{{"op":"hello","id":"{id}","protocol":{SERVE_PROTOCOL_VERSION}}}"#)
+}
+
+/// Run a socket serve session around `body`: bind, serve on a scoped
+/// thread, hand `body` the resolved address, then return the drained
+/// session's stats alongside `body`'s result.
+///
+/// `body` MUST make the server exit (send `shutdown` on some connection)
+/// or this blocks forever — the harness intentionally has no kill switch,
+/// mirroring how `galen serve --listen` runs.
+pub fn with_server<T>(
+    spec: &str,
+    opts: &ServeOptions,
+    net: &NetOptions,
+    body: impl FnOnce(&str) -> T,
+) -> (ServeStats, T) {
+    let (ir, sens) = fixture();
+    let factory = factory();
+    let listener = BoundListener::bind(spec).unwrap();
+    let addr = listener.local_addr();
+    let mut stats = None;
+    let mut out = None;
+    std::thread::scope(|scope| {
+        let server =
+            scope.spawn(|| serve_listener(&ir, &sens, &factory, "tiny", opts, net, listener));
+        out = Some(body(&addr));
+        stats = Some(server.join().expect("server thread panicked").expect("serve failed"));
+    });
+    (stats.unwrap(), out.unwrap())
+}
+
+/// A line-oriented protocol client over any socket stream.
+pub struct Client<S: Read + Write> {
+    reader: BufReader<S>,
+    writer: S,
+}
+
+/// Client-side read timeout: long enough for a `result wait` on a real
+/// (tiny) search job, short enough that a wedged test fails, not hangs.
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(120);
+
+impl Client<TcpStream> {
+    /// Connect to a TCP address (`local_addr` form: `host:port`).
+    pub fn connect_tcp(addr: &str) -> Self {
+        let writer = TcpStream::connect(addr)
+            .unwrap_or_else(|e| panic!("connecting to {addr}: {e}"));
+        writer.set_read_timeout(Some(CLIENT_TIMEOUT)).unwrap();
+        writer.set_nodelay(true).unwrap();
+        let reader = BufReader::new(writer.try_clone().unwrap());
+        Self { reader, writer }
+    }
+}
+
+#[cfg(unix)]
+impl Client<UnixStream> {
+    /// Connect to a Unix socket address (`local_addr` form: `unix:<path>`).
+    pub fn connect_unix(addr: &str) -> Self {
+        let path = addr.strip_prefix("unix:").unwrap_or(addr);
+        let writer = UnixStream::connect(path)
+            .unwrap_or_else(|e| panic!("connecting to {path}: {e}"));
+        writer.set_read_timeout(Some(CLIENT_TIMEOUT)).unwrap();
+        let reader = BufReader::new(writer.try_clone().unwrap());
+        Self { reader, writer }
+    }
+}
+
+impl<S: Read + Write> Client<S> {
+    /// Send one request line (newline appended) and flush.
+    pub fn send(&mut self, line: &str) {
+        self.writer.write_all(line.as_bytes()).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    /// Send raw bytes exactly as given (no newline added) and flush —
+    /// for split writes, partial frames and non-UTF-8 payloads.
+    pub fn send_bytes(&mut self, bytes: &[u8]) {
+        self.writer.write_all(bytes).unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    /// Like [`Client::send`] but surfaces the write error instead of
+    /// panicking — for tests that race the server's drain, where losing
+    /// the connection mid-send is an expected outcome.
+    pub fn try_send(&mut self, line: &str) -> std::io::Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()
+    }
+
+    /// Read one line, tolerating a dead peer: `None` on EOF *and* on read
+    /// errors (a crashed server resets the connection rather than closing
+    /// it cleanly).
+    pub fn recv_or_dead(&mut self) -> Option<String> {
+        let mut line = String::new();
+        match self.reader.read_line(&mut line) {
+            Ok(0) | Err(_) => None,
+            Ok(_) => Some(line.trim_end_matches('\n').to_string()),
+        }
+    }
+
+    /// Read one raw response line; `None` at EOF (server hung up).
+    pub fn recv_raw(&mut self) -> Option<String> {
+        let mut line = String::new();
+        match self.reader.read_line(&mut line) {
+            Ok(0) => None,
+            Ok(_) => Some(line.trim_end_matches('\n').to_string()),
+            Err(e) => panic!("reading response: {e}"),
+        }
+    }
+
+    /// Read one response line and parse it.
+    pub fn recv(&mut self) -> Json {
+        let line = self.recv_raw().expect("server closed the connection mid-conversation");
+        Json::parse(&line).unwrap_or_else(|e| panic!("bad response line '{line}': {e}"))
+    }
+
+    /// Lock-step request/response: one line out, one line back.
+    pub fn roundtrip(&mut self, line: &str) -> Json {
+        self.send(line);
+        self.recv()
+    }
+
+    /// Complete the mandatory socket handshake, asserting success.
+    pub fn hello(&mut self) -> Json {
+        let r = self.roundtrip(&hello_line("hello"));
+        assert!(r.req_bool("ok").unwrap(), "handshake refused: {}", r.dump());
+        r
+    }
+}

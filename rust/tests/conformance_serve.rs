@@ -1,0 +1,327 @@
+//! Protocol conformance: one table of request/response scenarios — every
+//! verb and every documented error — executed against all three transports
+//! (stdio pipes, TCP, Unix sockets), asserting the response lines are
+//! byte-identical across them.  The protocol loop is shared code, but this
+//! suite is what keeps it that way: any transport-specific formatting,
+//! ordering or field drift fails here before a client sees it.
+
+mod common;
+
+use std::io::Cursor;
+
+use common::{factory, fixture, hello_line, submit_line, with_server, Client};
+use galen::coordinator::{serve, NetOptions, ServeOptions, SERVE_PROTOCOL_VERSION};
+use galen::util::json::Json;
+
+/// One protocol exchange: a request line and how to check its response.
+struct Scenario {
+    /// What the scenario covers (assertion messages).
+    name: &'static str,
+    /// The request line sent verbatim on every transport.
+    line: String,
+    /// Byte-compare the response across transports.  Off only for
+    /// `metrics`: its counters legitimately differ per transport (each
+    /// transport label is its own series), so it gets a structural check.
+    byte_identical: bool,
+}
+
+impl Scenario {
+    fn new(name: &'static str, line: impl Into<String>) -> Self {
+        Self { name, line: line.into(), byte_identical: true }
+    }
+
+    fn structural(name: &'static str, line: impl Into<String>) -> Self {
+        Self { name, line: line.into(), byte_identical: false }
+    }
+}
+
+/// The conformance table.  Order matters: job scenarios run after the
+/// submitted job has been waited to completion, so every response is
+/// deterministic — which is exactly what makes byte-comparison possible.
+fn scenarios() -> Vec<Scenario> {
+    vec![
+        // -- handshake -------------------------------------------------
+        Scenario::new("hello ok", hello_line("h1")),
+        Scenario::new(
+            "hello version mismatch",
+            r#"{"op":"hello","id":"h2","protocol":99}"#,
+        ),
+        Scenario::new(
+            "hello bad require capability",
+            r#"{"op":"hello","id":"h3","protocol":2,"require":["submit","teleport"]}"#,
+        ),
+        Scenario::new(
+            "hello unknown key",
+            r#"{"op":"hello","id":"h4","protocol":2,"auth":"hunter2"}"#,
+        ),
+        Scenario::new(
+            "hello retry after mismatch succeeds",
+            format!(
+                r#"{{"op":"hello","id":"h5","protocol":{SERVE_PROTOCOL_VERSION},"require":["submit","result"]}}"#
+            ),
+        ),
+        // -- malformed requests ----------------------------------------
+        Scenario::new("bad json", r#"{"op": "status", "#.to_string()),
+        Scenario::new("non-object request", "42".to_string()),
+        Scenario::new("null request", "null".to_string()),
+        Scenario::new("missing op", r#"{"id":"m1"}"#),
+        Scenario::new("wrong-typed op", r#"{"op":7,"id":"m2"}"#),
+        Scenario::new("unknown op", r#"{"op":"frobnicate","id":"m3"}"#),
+        // -- submit error surface --------------------------------------
+        Scenario::new(
+            "submit without spec",
+            r#"{"op":"submit","id":"e1"}"#,
+        ),
+        Scenario::new(
+            "submit bad agent",
+            r#"{"op":"submit","id":"e2","spec":{"agent":"nope","target":0.5}}"#,
+        ),
+        Scenario::new(
+            "submit bad preset",
+            r#"{"op":"submit","id":"e3","spec":{"agent":"quantization","target":0.5,"preset":"slow"}}"#,
+        ),
+        Scenario::new(
+            "submit unknown spec key",
+            r#"{"op":"submit","id":"e4","spec":{"agent":"quantization","target":0.5,"cofig":{}}}"#,
+        ),
+        Scenario::new(
+            "submit unknown config key",
+            r#"{"op":"submit","id":"e5","spec":{"agent":"quantization","target":0.5,"config":{"episoddes":5}}}"#,
+        ),
+        Scenario::new(
+            "submit wrong-typed target",
+            r#"{"op":"submit","id":"e6","spec":{"agent":"quantization","target":"half"}}"#,
+        ),
+        Scenario::new(
+            "submit variant mismatch",
+            r#"{"op":"submit","id":"e7","spec":{"agent":"quantization","target":0.5,"variant":"resnet"}}"#,
+        ),
+        // -- the happy path --------------------------------------------
+        Scenario::new("submit ok", submit_line("s1", "quantization", 0.5)),
+        Scenario::new(
+            "result wait",
+            r#"{"op":"result","id":"r1","job":"job-0","wait":true}"#,
+        ),
+        Scenario::new("status after done", r#"{"op":"status","id":"st1","job":"job-0"}"#),
+        Scenario::new("events full", r#"{"op":"events","id":"ev1","job":"job-0"}"#),
+        Scenario::new(
+            "events paged",
+            r#"{"op":"events","id":"ev2","job":"job-0","since":3}"#,
+        ),
+        Scenario::new(
+            "cancel after done is a no-op",
+            r#"{"op":"cancel","id":"c1","job":"job-0"}"#,
+        ),
+        // -- job error surface -----------------------------------------
+        Scenario::new(
+            "status unknown job",
+            r#"{"op":"status","id":"e8","job":"job-9"}"#,
+        ),
+        Scenario::new(
+            "forget unknown job",
+            r#"{"op":"forget","id":"e9","job":"nope"}"#,
+        ),
+        Scenario::new("forget ok", r#"{"op":"forget","id":"f1","job":"job-0"}"#),
+        Scenario::new(
+            "events after forget are empty",
+            r#"{"op":"events","id":"ev3","job":"job-0"}"#,
+        ),
+        Scenario::new("list", r#"{"op":"list","id":"ls1"}"#),
+        Scenario::structural("metrics", r#"{"op":"metrics","id":"mx1"}"#),
+        Scenario::new(
+            "metrics unknown key",
+            r#"{"op":"metrics","id":"mx2","filter":"serve"}"#,
+        ),
+        Scenario::new("shutdown", r#"{"op":"shutdown","id":"sd1"}"#),
+    ]
+}
+
+/// Options shared by every transport run: one worker (deterministic
+/// scheduling), in-memory results, no journal, the default seed — so job
+/// tokens and search outcomes agree byte-for-byte across transports.
+fn conformance_opts() -> ServeOptions {
+    ServeOptions { workers: 1, ..Default::default() }
+}
+
+/// Run the table over stdio: the whole script goes in as one pipe, the
+/// response lines come back in order — `galen serve` without `--listen`.
+fn run_stdio(table: &[Scenario]) -> Vec<String> {
+    let (ir, sens) = fixture();
+    let factory = factory();
+    let script: String = table.iter().map(|s| format!("{}\n", s.line)).collect();
+    let mut out = Vec::new();
+    serve(
+        &ir,
+        &sens,
+        &factory,
+        "tiny",
+        &conformance_opts(),
+        Cursor::new(script),
+        &mut out,
+    )
+    .unwrap();
+    String::from_utf8(out).unwrap().lines().map(str::to_string).collect()
+}
+
+/// Run the table over one socket client, lock-step (send a line, read its
+/// response) so no transport buffering can reorder or coalesce anything.
+fn run_client<S: std::io::Read + std::io::Write>(
+    client: &mut Client<S>,
+    table: &[Scenario],
+) -> Vec<String> {
+    table
+        .iter()
+        .map(|s| {
+            client.send(&s.line);
+            client
+                .recv_raw()
+                .unwrap_or_else(|| panic!("no response for scenario '{}'", s.name))
+        })
+        .collect()
+}
+
+fn run_tcp(table: &[Scenario]) -> Vec<String> {
+    let (_stats, responses) =
+        with_server("127.0.0.1:0", &conformance_opts(), &NetOptions::default(), |addr| {
+            let mut client = Client::connect_tcp(addr);
+            run_client(&mut client, table)
+        });
+    responses
+}
+
+#[cfg(unix)]
+fn run_unix(table: &[Scenario]) -> Vec<String> {
+    let path = std::env::temp_dir().join(format!("galen_conf_{}.sock", std::process::id()));
+    let spec = format!("unix:{}", path.display());
+    let (_stats, responses) =
+        with_server(&spec, &conformance_opts(), &NetOptions::default(), |addr| {
+            let mut client = Client::connect_unix(addr);
+            run_client(&mut client, table)
+        });
+    responses
+}
+
+/// Structural checks every transport's responses must satisfy regardless
+/// of byte-comparison — the table is self-describing enough to spot-check
+/// the interesting rows by name.
+fn check_semantics(transport: &str, table: &[Scenario], responses: &[String]) {
+    assert_eq!(
+        responses.len(),
+        table.len(),
+        "{transport}: every request line gets exactly one response line"
+    );
+    for (scenario, raw) in table.iter().zip(responses) {
+        let r = Json::parse(raw)
+            .unwrap_or_else(|e| panic!("{transport}: '{}' response not json: {e}", scenario.name));
+        let ok = r.req_bool("ok").unwrap_or_else(|_| {
+            panic!("{transport}: '{}' response missing ok: {raw}", scenario.name)
+        });
+        match scenario.name {
+            "hello ok" | "hello retry after mismatch succeeds" => {
+                assert!(ok);
+                assert_eq!(
+                    r.get("protocol").and_then(Json::as_usize),
+                    Some(SERVE_PROTOCOL_VERSION)
+                );
+                assert!(r.get("capabilities").and_then(Json::as_arr).is_some());
+            }
+            "hello version mismatch" => {
+                assert!(!ok);
+                assert_eq!(r.get("client_protocol").and_then(Json::as_usize), Some(99));
+                assert_eq!(
+                    r.get("server_protocol").and_then(Json::as_usize),
+                    Some(SERVE_PROTOCOL_VERSION)
+                );
+                assert_eq!(r.get("id").and_then(Json::as_str), Some("h2"));
+            }
+            "hello bad require capability" => {
+                assert!(!ok);
+                assert!(r.req_str("error").unwrap().contains("teleport"), "{raw}");
+            }
+            "bad json" | "non-object request" | "null request" => {
+                assert!(!ok);
+                // unparseable or id-less requests cannot echo an id
+                assert!(r.get("id").is_none(), "{raw}");
+            }
+            "unknown op" => {
+                assert!(!ok);
+                let err = r.req_str("error").unwrap();
+                assert!(err.contains("hello|submit"), "op list missing: {err}");
+                assert_eq!(r.get("id").and_then(Json::as_str), Some("m3"));
+            }
+            "submit ok" => {
+                assert!(ok);
+                assert_eq!(r.req_str("job").unwrap(), "job-0");
+                let token = r.req_str("token").unwrap();
+                assert_eq!(token.len(), 16, "token is 16 hex chars: {token}");
+                assert!(token.chars().all(|c| c.is_ascii_hexdigit()));
+            }
+            "result wait" => {
+                assert!(ok);
+                assert_eq!(r.req_str("state").unwrap(), "done");
+                assert!(r.get("outcome").is_some() && r.get("policy").is_some());
+            }
+            "events full" => {
+                assert!(ok);
+                assert!(!r.get("events").and_then(Json::as_arr).unwrap().is_empty());
+            }
+            "events after forget are empty" => {
+                assert!(ok);
+                assert!(r.get("events").and_then(Json::as_arr).unwrap().is_empty());
+            }
+            "list" => {
+                assert!(ok);
+                assert_eq!(r.get("jobs").and_then(Json::as_arr).unwrap().len(), 1);
+            }
+            "metrics" => {
+                assert!(ok);
+                assert!(r.get("metrics").is_some());
+            }
+            "shutdown" => {
+                assert!(ok);
+                assert_eq!(r.req_str("state").unwrap(), "shutdown");
+            }
+            name if name.starts_with("submit ") || name.contains("unknown") => {
+                assert!(!ok, "{transport}: '{name}' should be refused: {raw}");
+            }
+            _ => {}
+        }
+    }
+}
+
+/// The acceptance criterion: the same script produces byte-identical
+/// response lines on stdio, TCP and (on unix) Unix-socket transports —
+/// `metrics` excepted, whose per-transport counters legitimately differ.
+#[test]
+fn responses_are_byte_identical_across_transports() {
+    let table = scenarios();
+    let stdio = run_stdio(&table);
+    let tcp = run_tcp(&table);
+    check_semantics("stdio", &table, &stdio);
+    check_semantics("tcp", &table, &tcp);
+    for (i, scenario) in table.iter().enumerate() {
+        if !scenario.byte_identical {
+            continue;
+        }
+        assert_eq!(
+            stdio[i], tcp[i],
+            "scenario '{}' differs between stdio and tcp",
+            scenario.name
+        );
+    }
+    #[cfg(unix)]
+    {
+        let unix = run_unix(&table);
+        check_semantics("unix", &table, &unix);
+        for (i, scenario) in table.iter().enumerate() {
+            if !scenario.byte_identical {
+                continue;
+            }
+            assert_eq!(
+                stdio[i], unix[i],
+                "scenario '{}' differs between stdio and unix",
+                scenario.name
+            );
+        }
+    }
+}

@@ -4,10 +4,18 @@
 //! request's `id` echoed whenever the line parsed as a JSON object carrying
 //! one — and must never panic a worker or wedge the service (a final valid
 //! request still succeeds).
+//!
+//! The network arm replays the same hostility over a real TCP socket plus
+//! the abuse only a socket can deliver: writes split mid-line and mid-UTF-8
+//! sequence, slow-loris dribble, oversized lines, invalid UTF-8 frames, and
+//! abrupt disconnects mid-request.
+
+mod common;
 
 use std::io::Cursor;
 
-use galen::coordinator::{serve, ServeOptions};
+use common::{hello_line, submit_line, with_server, Client};
+use galen::coordinator::{serve, NetOptions, ServeOptions, MAX_REQUEST_LINE};
 use galen::eval::{SensitivityConfig, SensitivityTable};
 use galen::hw::{HwTarget, LatencyKind, ProfilerConfig};
 use galen::model::ir::test_fixtures::tiny_meta;
@@ -212,4 +220,167 @@ fn fuzzed_requests_each_get_an_error_response_and_never_wedge_the_service() {
     assert!(last.req_bool("ok").unwrap(), "service wedged: {}", last.dump());
     assert_eq!(last.req_str("id").unwrap(), "survivor");
     assert_eq!(last.req_arr("jobs").unwrap().len(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Network arm: the same protocol abuse over a real TCP connection, plus the
+// framing hostility only a socket can deliver.
+// ---------------------------------------------------------------------------
+
+fn net_opts() -> ServeOptions {
+    ServeOptions { workers: 2, ..Default::default() }
+}
+
+/// The stdio fuzz corpus, replayed lock-step over TCP: every parseable
+/// malformed line still gets exactly one `ok:false` with its id echoed
+/// when it carried one, and the connection survives the whole barrage.
+#[test]
+fn network_fuzzed_requests_each_get_one_error_response() {
+    let (stats, ()) = with_server("127.0.0.1:0", &net_opts(), &NetOptions::default(), |addr| {
+        let mut client = Client::connect_tcp(addr);
+        client.hello();
+        let mut rng = Pcg64::new(0x7c9_2242);
+        for case in 0..120 {
+            let l = gen_line(&mut rng, case);
+            let r = client.roundtrip(&l.line);
+            assert!(
+                !r.req_bool("ok").unwrap(),
+                "fuzz line {case} ({}) was accepted: {}",
+                l.line,
+                r.dump()
+            );
+            assert!(!r.req_str("error").unwrap().is_empty());
+            match &l.expect_id {
+                Some(id) => assert_eq!(r.req_str("id").ok(), Some(id.as_str())),
+                None => assert!(r.get("id").is_none(), "{}", r.dump()),
+            }
+        }
+        let survivor = client.roundtrip(r#"{"op":"list","id":"survivor"}"#);
+        assert!(survivor.req_bool("ok").unwrap(), "service wedged: {}", survivor.dump());
+        assert_eq!(survivor.req_arr("jobs").unwrap().len(), 0);
+        client.send(r#"{"op":"shutdown"}"#);
+    });
+    assert_eq!(stats.submitted, 0, "no fuzz line may become a job");
+}
+
+/// Split writes — including a flush-and-pause inside a multi-byte UTF-8
+/// character — and slow-loris byte dribble must reassemble into exactly
+/// one request each; the pauses straddle the server's read timeout so the
+/// partial line provably survives `WouldBlock`/`TimedOut` wakeups.
+#[test]
+fn network_split_writes_and_slow_loris_dribble_reassemble() {
+    let pause = std::time::Duration::from_millis(150); // > the server's poll interval
+    let (stats, ()) = with_server("127.0.0.1:0", &net_opts(), &NetOptions::default(), |addr| {
+        let mut client = Client::connect_tcp(addr);
+        // the handshake itself arrives in three flushed fragments
+        let hello = hello_line("frag");
+        client.send_bytes(hello[..10].as_bytes());
+        std::thread::sleep(pause);
+        client.send_bytes(hello[10..].as_bytes());
+        client.send_bytes(b"\n");
+        let r = client.recv();
+        assert!(r.req_bool("ok").unwrap(), "fragmented hello refused: {}", r.dump());
+
+        // split in the middle of 'é' (0xC3 0xA9): byte-level framing must
+        // hold the first half until the second arrives
+        let line = r#"{"op":"list","id":"client-é"}"#.as_bytes();
+        let cut = line.iter().position(|&b| b == 0xC3).unwrap() + 1;
+        client.send_bytes(&line[..cut]);
+        std::thread::sleep(pause);
+        client.send_bytes(&line[cut..]);
+        client.send_bytes(b"\n");
+        let r = client.recv();
+        assert!(r.req_bool("ok").unwrap(), "split-char line refused: {}", r.dump());
+        assert_eq!(r.req_str("id").unwrap(), "client-é");
+
+        // slow-loris: one byte per write, each flushed separately
+        for &b in br#"{"op":"list","id":"loris"}"# {
+            client.send_bytes(&[b]);
+        }
+        client.send_bytes(b"\n");
+        let r = client.recv();
+        assert!(r.req_bool("ok").unwrap(), "dribbled line refused: {}", r.dump());
+        assert_eq!(r.req_str("id").unwrap(), "loris");
+
+        client.send(r#"{"op":"shutdown"}"#);
+    });
+    assert_eq!(stats.submitted, 0);
+}
+
+/// An oversized line gets exactly one structured rejection without the
+/// service buffering the excess, an invalid UTF-8 frame gets exactly one
+/// rejection without an id echo (there is no id to recover), and the
+/// connection keeps working after both.
+#[test]
+fn network_oversized_and_invalid_utf8_lines_recoverable() {
+    let (stats, ()) = with_server("127.0.0.1:0", &net_opts(), &NetOptions::default(), |addr| {
+        let mut client = Client::connect_tcp(addr);
+        client.hello();
+
+        let huge = vec![b'a'; MAX_REQUEST_LINE + 40_000];
+        client.send_bytes(&huge);
+        client.send_bytes(b"\n");
+        let r = client.recv();
+        assert!(!r.req_bool("ok").unwrap());
+        assert!(
+            r.req_str("error").unwrap().contains("exceeds"),
+            "unexpected oversize error: {}",
+            r.dump()
+        );
+
+        client.send_bytes(b"{\"op\":\"status\",\"id\":\"bin\",\"job\":\"job-\xff\"}\n");
+        let r = client.recv();
+        assert!(!r.req_bool("ok").unwrap());
+        assert!(
+            r.req_str("error").unwrap().contains("utf-8"),
+            "unexpected utf-8 error: {}",
+            r.dump()
+        );
+        assert!(r.get("id").is_none(), "an unreadable line cannot echo an id");
+
+        let r = client.roundtrip(r#"{"op":"list","id":"after"}"#);
+        assert!(r.req_bool("ok").unwrap(), "stream did not recover: {}", r.dump());
+        assert_eq!(r.req_str("id").unwrap(), "after");
+
+        client.send(r#"{"op":"shutdown"}"#);
+    });
+    assert_eq!(stats.submitted, 0);
+}
+
+/// A client vanishing mid-request takes down neither the service nor the
+/// job it already submitted: a second client finishes its own work and the
+/// orphaned job still runs to completion.
+#[test]
+fn network_abrupt_disconnect_mid_request_leaves_service_serving() {
+    let (stats, ()) = with_server("127.0.0.1:0", &net_opts(), &NetOptions::default(), |addr| {
+        let (orphan_job, orphan_token) = {
+            let mut doomed = Client::connect_tcp(addr);
+            doomed.hello();
+            let r = doomed.roundtrip(&submit_line("doomed", "quantization", 0.5));
+            assert!(r.req_bool("ok").unwrap(), "{}", r.dump());
+            let job = r.req_str("job").unwrap().to_string();
+            let token = r.req_str("token").unwrap().to_string();
+            // half a request, never finished: the connection drops here
+            doomed.send_bytes(b"{\"op\":\"status\",\"id\":\"never");
+            (job, token)
+        };
+        let mut client = Client::connect_tcp(addr);
+        client.hello();
+        let r = client.roundtrip(&submit_line("mine", "quantization", 0.4));
+        assert!(r.req_bool("ok").unwrap(), "{}", r.dump());
+        let my_job = r.req_str("job").unwrap().to_string();
+        let r = client
+            .roundtrip(&format!(r#"{{"op":"result","id":"rw","job":"{my_job}","wait":true}}"#));
+        assert_eq!(r.req_str("state").unwrap(), "done", "{}", r.dump());
+        // the orphan keeps running under its own steam; its token is the
+        // only key the dead connection left behind
+        let r = client.roundtrip(&format!(
+            r#"{{"op":"result","id":"ro","job":"{orphan_job}","token":"{orphan_token}","wait":true}}"#
+        ));
+        assert_eq!(r.req_str("state").unwrap(), "done", "{}", r.dump());
+        client.send(r#"{"op":"shutdown"}"#);
+    });
+    assert_eq!(stats.submitted, 2);
+    assert_eq!(stats.completed, 2);
+    assert_eq!(stats.failed, 0);
 }

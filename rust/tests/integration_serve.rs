@@ -139,6 +139,65 @@ fn scripted_two_job_session_completes_with_artifacts() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// On stdio the `hello` handshake is optional (pipeline scripts pre-date
+/// it) but fully supported: a correct hello succeeds, a mismatch is
+/// refused with both versions echoed, and ops work regardless.
+#[test]
+fn stdio_hello_is_optional_but_supported() {
+    use galen::coordinator::SERVE_PROTOCOL_VERSION;
+    let hello_ok = format!(r#"{{"op":"hello","id":"h","protocol":{SERVE_PROTOCOL_VERSION}}}"#);
+    let script = format!(
+        "{}\n{}\n{}\n",
+        // ops before any hello work on stdio — no handshake gate here
+        r#"{"op":"list","id":"pre"}"#,
+        hello_ok,
+        r#"{"op":"hello","id":"old","protocol":1}"#,
+    );
+    let (_, responses) = run_session(
+        &script,
+        &ServeOptions { workers: 1, ..Default::default() },
+    );
+    assert!(responses[0].req_bool("ok").unwrap());
+    assert!(responses[1].req_bool("ok").unwrap());
+    assert_eq!(
+        responses[1].req_usize("protocol").unwrap(),
+        SERVE_PROTOCOL_VERSION
+    );
+    assert!(responses[1].req_arr("capabilities").unwrap().len() >= 10);
+    assert_eq!(responses[1].req_str("variant").unwrap(), "tiny");
+    assert!(!responses[2].req_bool("ok").unwrap());
+    assert_eq!(responses[2].req_usize("client_protocol").unwrap(), 1);
+    assert_eq!(
+        responses[2].req_usize("server_protocol").unwrap(),
+        SERVE_PROTOCOL_VERSION
+    );
+}
+
+/// Every accepted submit hands back the job's access token: 16 hex chars,
+/// stable for a given (seed, job index) so a resumed session re-derives
+/// the tokens its clients already hold.
+#[test]
+fn submit_response_carries_a_deterministic_job_token() {
+    let script = format!(
+        "{}\n{}\n",
+        submit_line("a", "quantization", 0.5),
+        r#"{"op":"cancel","job":"job-0"}"#,
+    );
+    let opts = ServeOptions { workers: 1, ..Default::default() };
+    let (_, first) = run_session(&script, &opts);
+    let (_, second) = run_session(&script, &opts);
+    for responses in [&first, &second] {
+        let token = responses[0].req_str("token").unwrap();
+        assert_eq!(token.len(), 16, "{token}");
+        assert!(token.chars().all(|c| c.is_ascii_hexdigit()), "{token}");
+    }
+    assert_eq!(
+        first[0].req_str("token").unwrap(),
+        second[0].req_str("token").unwrap(),
+        "same seed + same index must derive the same token"
+    );
+}
+
 /// Events paging: `since` continues where the previous fetch stopped.
 #[test]
 fn events_cursor_pages_incrementally() {

@@ -1,0 +1,464 @@
+//! Networked serve: handshake gating, admission control, multi-client job
+//! isolation, and durability under concurrent connections.
+//!
+//! The acceptance scenarios for `galen serve --listen`: N concurrent
+//! clients never see each other's jobs without the job token, a submit
+//! racing a drain can never journal a never-accepted job, and a serve
+//! process hard-killed mid-session over TCP resumes with `--resume-jobs`
+//! to a bit-identical artifact.
+
+mod common;
+
+use std::io::{BufRead, BufReader, Cursor};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::{Barrier, Mutex};
+use std::time::Duration;
+
+use common::{factory, fixture, hello_line, submit_line, with_server, Client};
+use galen::coordinator::{
+    replay_journal, serve, NetOptions, ServeOptions, SERVE_PROTOCOL_VERSION,
+};
+use galen::util::json::Json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("galen_net_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// A deliberately long job (many episodes) — keeps a single worker busy
+/// while the test lines up queue-cap scenarios behind it.
+fn slow_submit_line(id: &str) -> String {
+    format!(
+        r#"{{"op":"submit","id":"{id}","spec":{{"agent":"quantization","target":0.5,"preset":"fast","config":{{"episodes":60,"warmup_episodes":3,"opt_steps_per_episode":4,"log_every":0,"ddpg":{{"hidden":[24,16],"batch":16,"replay_capacity":200}}}}}}}}"#
+    )
+}
+
+/// A deliberately tiny job — lets the drain-race test accept many jobs and
+/// still finish them all while the service drains.
+fn quick_submit_line(id: &str) -> String {
+    format!(
+        r#"{{"op":"submit","id":"{id}","spec":{{"agent":"quantization","target":0.5,"preset":"fast","config":{{"episodes":2,"warmup_episodes":1,"opt_steps_per_episode":1,"log_every":0,"ddpg":{{"hidden":[16,12],"batch":8,"replay_capacity":64}}}}}}}}"#
+    )
+}
+
+/// Socket connections must open with a successful `hello`: every op before
+/// one is refused, a version mismatch echoes both versions and leaves the
+/// connection open for a retry, and a later correct hello unlocks the
+/// session.
+#[test]
+fn socket_ops_are_gated_on_the_versioned_handshake() {
+    let opts = ServeOptions { workers: 1, ..Default::default() };
+    with_server("127.0.0.1:0", &opts, &NetOptions::default(), |addr| {
+        let mut client = Client::connect_tcp(addr);
+
+        let r = client.roundtrip(r#"{"op":"list","id":"early"}"#);
+        assert!(!r.req_bool("ok").unwrap());
+        assert!(r.req_str("error").unwrap().contains("handshake required"), "{}", r.dump());
+        assert_eq!(r.req_str("id").unwrap(), "early");
+
+        let r = client.roundtrip(r#"{"op":"hello","id":"old","protocol":1}"#);
+        assert!(!r.req_bool("ok").unwrap());
+        assert!(r.req_str("error").unwrap().contains("protocol version mismatch"));
+        assert_eq!(r.get("client_protocol").and_then(Json::as_usize), Some(1));
+        assert_eq!(
+            r.get("server_protocol").and_then(Json::as_usize),
+            Some(SERVE_PROTOCOL_VERSION)
+        );
+
+        // the mismatch did not unlock anything
+        let r = client.roundtrip(r#"{"op":"list","id":"still"}"#);
+        assert!(!r.req_bool("ok").unwrap());
+        assert!(r.req_str("error").unwrap().contains("handshake required"));
+
+        // ... but the connection stayed open: a correct retry succeeds
+        let r = client.roundtrip(&hello_line("retry"));
+        assert!(r.req_bool("ok").unwrap(), "{}", r.dump());
+        let r = client.roundtrip(r#"{"op":"list","id":"after"}"#);
+        assert!(r.req_bool("ok").unwrap(), "{}", r.dump());
+
+        client.send(r#"{"op":"shutdown"}"#);
+    });
+}
+
+/// Above the connection cap, a client gets exactly one structured
+/// rejection line carrying `retry_after_ms`, then the socket closes — and
+/// the admitted client is entirely unaffected.
+#[test]
+fn connections_above_the_cap_get_one_rejection_line() {
+    let opts = ServeOptions { workers: 1, ..Default::default() };
+    let net = NetOptions { max_connections: 1 };
+    with_server("127.0.0.1:0", &opts, &net, |addr| {
+        let mut admitted = Client::connect_tcp(addr);
+        // a served response proves this connection's thread is live (and
+        // counted) before the second connection races the cap check
+        admitted.hello();
+
+        let mut rejected = Client::connect_tcp(addr);
+        let r = rejected.recv();
+        assert!(!r.req_bool("ok").unwrap());
+        assert!(r.req_str("error").unwrap().contains("connection capacity"), "{}", r.dump());
+        assert_eq!(r.get("retry_after_ms").and_then(Json::as_usize), Some(500));
+        assert!(rejected.recv_or_dead().is_none(), "rejected socket must close");
+
+        let r = admitted.roundtrip(r#"{"op":"list","id":"fine"}"#);
+        assert!(r.req_bool("ok").unwrap(), "{}", r.dump());
+        admitted.send(r#"{"op":"shutdown"}"#);
+    });
+}
+
+/// Once `max_queued_jobs` submissions are waiting for a worker, further
+/// submits are refused with a structured `ok:false` + the configured
+/// `retry_after_ms` — the connection and the running work are untouched.
+#[test]
+fn submits_above_the_queue_cap_are_rejected_with_retry_hint() {
+    let opts = ServeOptions {
+        workers: 1,
+        max_queued_jobs: 1,
+        retry_after_ms: 123,
+        ..Default::default()
+    };
+    let (stats, ()) = with_server("127.0.0.1:0", &opts, &NetOptions::default(), |addr| {
+        let mut client = Client::connect_tcp(addr);
+        client.hello();
+
+        let r = client.roundtrip(&slow_submit_line("a"));
+        assert!(r.req_bool("ok").unwrap(), "{}", r.dump());
+        // wait until the worker picked job-0 up: only then is the queue
+        // provably empty, making the next two submits deterministic
+        loop {
+            let r = client.roundtrip(r#"{"op":"status","id":"p","job":"job-0"}"#);
+            if r.req_str("state").unwrap() == "running" {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+
+        let r = client.roundtrip(&slow_submit_line("b"));
+        assert!(r.req_bool("ok").unwrap(), "one queued job is within the cap: {}", r.dump());
+
+        let r = client.roundtrip(&slow_submit_line("c"));
+        assert!(!r.req_bool("ok").unwrap(), "the cap must refuse the second: {}", r.dump());
+        assert!(r.req_str("error").unwrap().contains("queue is full"), "{}", r.dump());
+        assert_eq!(r.get("retry_after_ms").and_then(Json::as_usize), Some(123));
+        assert_eq!(r.req_str("id").unwrap(), "c");
+
+        // unwind: cancel both accepted jobs and wait them terminal
+        for job in ["job-1", "job-0"] {
+            let r = client.roundtrip(&format!(r#"{{"op":"cancel","id":"cx","job":"{job}"}}"#));
+            assert!(r.req_bool("ok").unwrap(), "{}", r.dump());
+        }
+        for job in ["job-0", "job-1"] {
+            let r = client
+                .roundtrip(&format!(r#"{{"op":"result","id":"rw","job":"{job}","wait":true}}"#));
+            assert_eq!(r.req_str("state").unwrap(), "cancelled", "{}", r.dump());
+        }
+        client.send(r#"{"op":"shutdown"}"#);
+    });
+    assert_eq!(stats.submitted, 2, "the rejected submit must not count as accepted");
+    assert_eq!(stats.cancelled, 2);
+}
+
+/// The multi-client acceptance scenario: N concurrent clients submit,
+/// poll and cancel interleaved jobs.  No client can see or touch another
+/// client's job without its token; with the token, everything works; a
+/// late connection's `list` shows none of them.
+#[test]
+fn concurrent_clients_cannot_touch_each_others_jobs_without_the_token() {
+    const N: usize = 4;
+    let opts = ServeOptions { workers: 2, ..Default::default() };
+    let (stats, ()) = with_server("127.0.0.1:0", &opts, &NetOptions::default(), |addr| {
+        let published: Mutex<Vec<Option<(String, String)>>> = Mutex::new(vec![None; N]);
+        let barrier = Barrier::new(N);
+        std::thread::scope(|scope| {
+            for i in 0..N {
+                let published = &published;
+                let barrier = &barrier;
+                scope.spawn(move || {
+                    let mut client = Client::connect_tcp(addr);
+                    client.hello();
+                    let r = client.roundtrip(&submit_line(
+                        &format!("t{i}"),
+                        "quantization",
+                        0.3 + 0.1 * i as f64,
+                    ));
+                    assert!(r.req_bool("ok").unwrap(), "client {i}: {}", r.dump());
+                    let job = r.req_str("job").unwrap().to_string();
+                    let token = r.req_str("token").unwrap().to_string();
+                    published.lock().unwrap()[i] = Some((job.clone(), token));
+                    barrier.wait();
+
+                    // the neighbour's job: invisible without its token ...
+                    let (their_job, their_token) =
+                        published.lock().unwrap()[(i + 1) % N].clone().unwrap();
+                    let r = client.roundtrip(&format!(
+                        r#"{{"op":"status","id":"spy","job":"{their_job}"}}"#
+                    ));
+                    assert!(
+                        !r.req_bool("ok").unwrap(),
+                        "client {i} saw a foreign job: {}",
+                        r.dump()
+                    );
+                    assert!(
+                        r.req_str("error").unwrap().contains("belongs to another connection"),
+                        "{}",
+                        r.dump()
+                    );
+                    // ... fully accessible with it
+                    let r = client.roundtrip(&format!(
+                        r#"{{"op":"status","id":"tok","job":"{their_job}","token":"{their_token}"}}"#
+                    ));
+                    assert!(r.req_bool("ok").unwrap(), "client {i}: token refused: {}", r.dump());
+
+                    // list enumerates exactly this client's own work
+                    let r = client.roundtrip(r#"{"op":"list","id":"mine"}"#);
+                    let jobs = r.req_arr("jobs").unwrap();
+                    assert_eq!(jobs.len(), 1, "client {i}: {}", r.dump());
+                    assert_eq!(jobs[0].req_str("job").unwrap(), job);
+
+                    // odd clients cancel mid-flight; even ones run to the end
+                    if i % 2 == 1 {
+                        let r = client
+                            .roundtrip(&format!(r#"{{"op":"cancel","id":"c","job":"{job}"}}"#));
+                        assert!(r.req_bool("ok").unwrap(), "{}", r.dump());
+                    }
+                    let r = client.roundtrip(&format!(
+                        r#"{{"op":"result","id":"r","job":"{job}","wait":true}}"#
+                    ));
+                    let state = r.req_str("state").unwrap();
+                    assert!(
+                        state == "done" || state == "cancelled",
+                        "client {i}: job ended {state}: {}",
+                        r.dump()
+                    );
+                });
+            }
+        });
+        let mut late = Client::connect_tcp(addr);
+        late.hello();
+        let r = late.roundtrip(r#"{"op":"list","id":"late"}"#);
+        assert_eq!(
+            r.req_arr("jobs").unwrap().len(),
+            0,
+            "a fresh connection must see no foreign jobs: {}",
+            r.dump()
+        );
+        late.send(r#"{"op":"shutdown"}"#);
+    });
+    assert_eq!(stats.submitted, N);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.completed + stats.cancelled, N, "{stats:?}");
+}
+
+/// The drain-race regression: submits hammering the service while another
+/// connection triggers shutdown.  Every journaled job must be one the
+/// service actually accepted *and* ran to a terminal state — a submit
+/// racing the drain can neither journal a never-accepted job nor leave an
+/// accepted one stranded.  A follow-up plain session over the same journal
+/// dir starts clean.
+#[test]
+fn submit_racing_drain_never_journals_a_never_accepted_job() {
+    const SUBMITTERS: usize = 2;
+    let dir = tmp_dir("drainrace");
+    let opts = ServeOptions {
+        workers: 2,
+        journal_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let (stats, accepted) = with_server("127.0.0.1:0", &opts, &NetOptions::default(), |addr| {
+        let accepted: Mutex<usize> = Mutex::new(0);
+        std::thread::scope(|scope| {
+            for t in 0..SUBMITTERS {
+                let accepted = &accepted;
+                scope.spawn(move || {
+                    let mut client = Client::connect_tcp(addr);
+                    client.hello();
+                    for case in 0..20 {
+                        if client.try_send(&quick_submit_line(&format!("s{t}-{case}"))).is_err() {
+                            break;
+                        }
+                        match client.recv_or_dead() {
+                            None => break, // drained: the connection closed
+                            Some(line) => {
+                                let r = Json::parse(&line).unwrap();
+                                if r.req_bool("ok").unwrap() {
+                                    *accepted.lock().unwrap() += 1;
+                                } else {
+                                    // the drain beat this submit to the locks
+                                    assert!(
+                                        r.req_str("error").unwrap().contains("shutting down"),
+                                        "{line}"
+                                    );
+                                    break;
+                                }
+                            }
+                        }
+                        std::thread::sleep(Duration::from_millis(25));
+                    }
+                });
+            }
+            // let some submits land, then pull the plug mid-hammering
+            std::thread::sleep(Duration::from_millis(250));
+            let mut killer = Client::connect_tcp(addr);
+            killer.hello();
+            let r = killer.roundtrip(r#"{"op":"shutdown","id":"kill"}"#);
+            assert!(r.req_bool("ok").unwrap(), "{}", r.dump());
+        });
+        let accepted = *accepted.lock().unwrap();
+        assert!(accepted > 0, "the race needs at least one accepted submit");
+        accepted
+    });
+
+    // acceptance == journal == terminal: nothing phantom, nothing stranded
+    assert_eq!(stats.submitted, accepted, "every ok:true submit is an accepted job");
+    assert_eq!(stats.completed + stats.cancelled, stats.submitted, "{stats:?}");
+    assert_eq!(stats.failed, 0, "{stats:?}");
+    let replayed = replay_journal(&dir).unwrap();
+    assert_eq!(
+        replayed.len(),
+        accepted,
+        "the journal must record exactly the accepted jobs"
+    );
+    for job in &replayed {
+        assert!(
+            job.status.is_terminal(),
+            "journaled job {} left non-terminal: {:?}",
+            job.id,
+            job.status
+        );
+    }
+
+    // the journal is all-terminal, so a plain (non-resume) session over the
+    // same dir must start clean instead of refusing
+    let (ir, sens) = fixture();
+    let factory = factory();
+    let mut out = Vec::new();
+    let stats = serve(
+        &ir,
+        &sens,
+        &factory,
+        "tiny",
+        &ServeOptions {
+            workers: 1,
+            journal_dir: Some(dir.clone()),
+            ..Default::default()
+        },
+        Cursor::new(r#"{"op":"list","id":"clean"}"#.to_string()),
+        &mut out,
+    )
+    .expect("a cleanly-drained journal must not block the next session");
+    assert_eq!(stats.submitted + stats.resumed, 0);
+    let r = Json::parse(String::from_utf8(out).unwrap().lines().next().unwrap()).unwrap();
+    assert_eq!(r.req_arr("jobs").unwrap().len(), 0);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Spawn the real binary with `--listen 127.0.0.1:0` and return the child
+/// plus the address it announced on stdout.
+fn spawn_serve_bin(dir: &Path, extra: &[&str], faults: Option<&str>) -> (Child, String) {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_galen"));
+    cmd.arg("serve")
+        .args(["--fixture", "--jobs", "1", "--seed", "7", "--checkpoint-every", "2"])
+        .arg("--results")
+        .arg(dir)
+        .args(["--listen", "127.0.0.1:0"])
+        .args(extra)
+        .env_remove("GALEN_FAULTS")
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped());
+    if let Some(f) = faults {
+        cmd.env("GALEN_FAULTS", f);
+    }
+    let mut child = cmd.spawn().unwrap();
+    let mut line = String::new();
+    BufReader::new(child.stdout.as_mut().unwrap())
+        .read_line(&mut line)
+        .unwrap();
+    let addr = line
+        .trim()
+        .strip_prefix("listening on ")
+        .unwrap_or_else(|| panic!("unexpected announcement: {line:?}"))
+        .to_string();
+    (child, addr)
+}
+
+/// The durability acceptance scenario over TCP against the real binary:
+/// hard-kill a networked serve mid-session (injected abort), verify the
+/// journal recorded the interruption, verify a plain restart refuses it,
+/// then `--resume-jobs` over TCP again — the finished artifact is
+/// bit-identical to an uninterrupted networked run.
+#[test]
+fn killed_tcp_serve_resumes_bit_identically() {
+    // reference: an uninterrupted networked session
+    let ref_dir = tmp_dir("bin_ref");
+    let (child, addr) = spawn_serve_bin(&ref_dir, &[], None);
+    {
+        let mut client = Client::connect_tcp(&addr);
+        client.hello();
+        let r = client.roundtrip(&submit_line("a", "joint", 0.4));
+        assert!(r.req_bool("ok").unwrap(), "{}", r.dump());
+        let r = client.roundtrip(r#"{"op":"result","id":"r","job":"job-0","wait":true}"#);
+        assert_eq!(r.req_str("state").unwrap(), "done", "{}", r.dump());
+        client.send(r#"{"op":"shutdown"}"#);
+    }
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let reference = std::fs::read(ref_dir.join("serve_tiny_job-0.json")).unwrap();
+
+    // crash: the 4th episode aborts the process under a live TCP client
+    let dir = tmp_dir("bin_crash");
+    let (child, addr) = spawn_serve_bin(&dir, &[], Some("episode:4:abort"));
+    {
+        let mut client = Client::connect_tcp(&addr);
+        client.hello();
+        let r = client.roundtrip(&submit_line("a", "joint", 0.4));
+        assert!(r.req_bool("ok").unwrap(), "{}", r.dump());
+        client.send(r#"{"op":"result","id":"r","job":"job-0","wait":true}"#);
+        assert!(
+            client.recv_or_dead().is_none(),
+            "the injected abort must sever the connection"
+        );
+    }
+    let out = child.wait_with_output().unwrap();
+    assert!(!out.status.success(), "the abort must kill the process");
+    assert!(!dir.join("serve_tiny_job-0.json").exists());
+    let replayed = replay_journal(&dir).unwrap();
+    assert_eq!(replayed.len(), 1);
+    assert!(!replayed[0].status.is_terminal(), "journal records the interruption");
+
+    // a plain restart must refuse the interrupted journal, --listen or not
+    let out = Command::new(env!("CARGO_BIN_EXE_galen"))
+        .arg("serve")
+        .args(["--fixture", "--jobs", "1", "--seed", "7", "--checkpoint-every", "2"])
+        .arg("--results")
+        .arg(&dir)
+        .args(["--listen", "127.0.0.1:0"])
+        .env_remove("GALEN_FAULTS")
+        .stdin(Stdio::null())
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--resume-jobs"), "stderr: {stderr}");
+
+    // --resume-jobs finishes the job; replayed jobs are ownerless, so the
+    // new connection reads the result without any token
+    let (child, addr) = spawn_serve_bin(&dir, &["--resume-jobs"], None);
+    {
+        let mut client = Client::connect_tcp(&addr);
+        client.hello();
+        let r = client.roundtrip(r#"{"op":"result","id":"r","job":"job-0","wait":true}"#);
+        assert_eq!(r.req_str("state").unwrap(), "done", "{}", r.dump());
+        client.send(r#"{"op":"shutdown"}"#);
+    }
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let resumed = std::fs::read(dir.join("serve_tiny_job-0.json")).unwrap();
+    assert_eq!(resumed, reference, "resumed artifact must be bit-identical");
+
+    std::fs::remove_dir_all(&ref_dir).ok();
+    std::fs::remove_dir_all(&dir).ok();
+}
