@@ -1,0 +1,338 @@
+//! The artifact manifest: everything a consumer must know *before*
+//! touching weights.
+//!
+//! The manifest is schema-versioned JSON (hand-rolled `util::json`, so key
+//! order is canonical via `BTreeMap`) carrying the model variant, the full
+//! discretized policy with layer names, the target identity (name +
+//! fingerprint), the latency claim with its backend label, packaging
+//! provenance, and a content digest (SHA-256 + byte length) of every
+//! payload section.  Those digests form the middle of the artifact's hash
+//! tree: the whole-file checksum covers the manifest bytes, the manifest
+//! covers each section, and each section encoding covers its own name,
+//! dtype, shape and data.
+
+use std::collections::BTreeMap;
+
+use crate::compress::{DiscretePolicy, LayerCmp};
+use crate::util::json::Json;
+use crate::util::Fnv1a;
+
+use super::ArtifactError;
+
+/// Manifest schema version this build writes and reads.
+pub const ARTIFACT_SCHEMA_VERSION: usize = 1;
+
+/// Content digest of one encoded payload section.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SectionDigest {
+    /// Lowercase-hex SHA-256 of the section's canonical encoding.
+    pub sha256: String,
+    /// Length of that encoding in bytes.
+    pub bytes: u64,
+}
+
+/// The latency the producer claims for this artifact, with enough context
+/// to re-measure it: `galen run-artifact` replays the same policy through
+/// a `LatencyProvider` and reports drift against `latency_s`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencyClaim {
+    /// Claimed policy latency in seconds (the search's best episode).
+    pub latency_s: f64,
+    /// Uncompressed-reference latency in seconds (for relative numbers).
+    pub base_latency_s: f64,
+    /// Which latency backend produced the claim (`sim`/`measured`/`hybrid`).
+    pub backend: String,
+}
+
+/// Where the packaged bytes came from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Provenance {
+    /// Weight origin: `gten:<path>` for real AOT-exported weights,
+    /// `synthetic:<seed hex>` for the deterministic in-process fallback.
+    pub weights: String,
+    /// Profile-cache root the latency backend ran against (`none` for the
+    /// in-memory simulator path).
+    pub profile_cache: String,
+    /// Schema version of that profile cache format
+    /// (`hw::PROFILE_SCHEMA_VERSION` at pack time).
+    pub profile_schema_version: usize,
+    /// Producing tool and version (`galen <crate version>`).
+    pub tool: String,
+}
+
+/// The parsed, schema-checked artifact manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactManifest {
+    /// Format version (see [`ARTIFACT_SCHEMA_VERSION`]).
+    pub schema_version: usize,
+    /// Model variant the policy compresses (`micro`/`resnet18s`/...).
+    pub variant: String,
+    /// IR layer names, in order — pairs with `policy.layers` and lets a
+    /// consumer validate against its own IR before trusting shapes.
+    pub layer_names: Vec<String>,
+    /// The discretized compression policy (kept channels + quant modes).
+    pub policy: DiscretePolicy,
+    /// Stable 64-bit hex hash of the canonical policy JSON; also the
+    /// `<policyhash>` component of the artifact file name.
+    pub policy_hash: String,
+    /// Hardware target name the claim was produced on.
+    pub target: String,
+    /// `hw` target fingerprint (16-hex): kernel-selection identity, so a
+    /// device can refuse artifacts packaged for different support flags.
+    pub target_fingerprint: String,
+    /// Claimed latency with backend label.
+    pub claim: LatencyClaim,
+    /// Packaging provenance (weights origin, profile cache, tool).
+    pub provenance: Provenance,
+    /// Per-section content digests, keyed by section name.
+    pub sections: BTreeMap<String, SectionDigest>,
+}
+
+/// Stable 16-hex policy hash over the canonical policy serialization.
+/// A *fingerprint* (file naming, dedup), not an integrity check — the
+/// SHA-256 tree does integrity; verification still recomputes this to
+/// catch a policy edited without updating the name-bearing hash.
+pub fn policy_hash(policy: &DiscretePolicy) -> String {
+    let mut h = Fnv1a::new();
+    h.mix_bytes(policy.to_json().dump().as_bytes());
+    format!("{:016x}", h.finish())
+}
+
+impl ArtifactManifest {
+    /// Canonical JSON form (BTreeMap key order → deterministic bytes).
+    pub fn to_json(&self) -> Json {
+        let policy: Vec<Json> = self
+            .layer_names
+            .iter()
+            .zip(&self.policy.layers)
+            .map(|(name, l)| {
+                let mut j = l.to_json();
+                if let Json::Obj(o) = &mut j {
+                    o.insert("layer".into(), Json::str(name.clone()));
+                }
+                j
+            })
+            .collect();
+        let sections = Json::Obj(
+            self.sections
+                .iter()
+                .map(|(name, d)| {
+                    (
+                        name.clone(),
+                        Json::obj(vec![
+                            ("sha256", Json::str(d.sha256.clone())),
+                            ("bytes", Json::num(d.bytes as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("schema_version", Json::num(self.schema_version as f64)),
+            ("variant", Json::str(self.variant.clone())),
+            ("policy", Json::Arr(policy)),
+            ("policy_hash", Json::str(self.policy_hash.clone())),
+            ("target", Json::str(self.target.clone())),
+            ("target_fingerprint", Json::str(self.target_fingerprint.clone())),
+            (
+                "claim",
+                Json::obj(vec![
+                    ("latency_s", Json::num(self.claim.latency_s)),
+                    ("base_latency_s", Json::num(self.claim.base_latency_s)),
+                    ("backend", Json::str(self.claim.backend.clone())),
+                ]),
+            ),
+            (
+                "provenance",
+                Json::obj(vec![
+                    ("weights", Json::str(self.provenance.weights.clone())),
+                    ("profile_cache", Json::str(self.provenance.profile_cache.clone())),
+                    (
+                        "profile_schema_version",
+                        Json::num(self.provenance.profile_schema_version as f64),
+                    ),
+                    ("tool", Json::str(self.provenance.tool.clone())),
+                ]),
+            ),
+            ("sections", sections),
+        ])
+    }
+
+    /// Parse and structurally validate a manifest document.  The caller
+    /// (`artifact::verify`) checks `schema_version` *before* this full
+    /// parse so an artifact from a future format fails with the precise
+    /// [`ArtifactError::SchemaVersion`] rather than a field-level error.
+    pub fn from_json(j: &Json) -> Result<Self, ArtifactError> {
+        (|| -> anyhow::Result<Self> {
+            let schema_version = j.req_usize("schema_version")?;
+            let variant = j.req_str("variant")?.to_string();
+            let mut layer_names = Vec::new();
+            let mut layers = Vec::new();
+            for e in j.req_arr("policy")? {
+                layer_names.push(e.req_str("layer")?.to_string());
+                layers.push(LayerCmp::from_json(e)?);
+            }
+            anyhow::ensure!(!layers.is_empty(), "policy has no layers");
+            let claim = j.req("claim")?;
+            let prov = j.req("provenance")?;
+            let mut sections = BTreeMap::new();
+            let secs = j.req("sections")?;
+            let obj = secs
+                .as_obj()
+                .ok_or_else(|| anyhow::anyhow!("'sections' is not an object"))?;
+            for (name, d) in obj {
+                sections.insert(
+                    name.clone(),
+                    SectionDigest {
+                        sha256: d.req_str("sha256")?.to_string(),
+                        bytes: d.req_f64("bytes")? as u64,
+                    },
+                );
+            }
+            Ok(Self {
+                schema_version,
+                variant,
+                layer_names,
+                policy: DiscretePolicy { layers },
+                policy_hash: j.req_str("policy_hash")?.to_string(),
+                target: j.req_str("target")?.to_string(),
+                target_fingerprint: j.req_str("target_fingerprint")?.to_string(),
+                claim: LatencyClaim {
+                    latency_s: claim.req_f64("latency_s")?,
+                    base_latency_s: claim.req_f64("base_latency_s")?,
+                    backend: claim.req_str("backend")?.to_string(),
+                },
+                provenance: Provenance {
+                    weights: prov.req_str("weights")?.to_string(),
+                    profile_cache: prov.req_str("profile_cache")?.to_string(),
+                    profile_schema_version: prov.req_usize("profile_schema_version")?,
+                    tool: prov.req_str("tool")?.to_string(),
+                },
+                sections,
+            })
+        })()
+        .map_err(|e| ArtifactError::Manifest(format!("{e:#}")))
+    }
+
+    /// Human-readable provenance / claims table (`galen report --artifact`).
+    pub fn table(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "artifact manifest (schema v{})", self.schema_version);
+        let _ = writeln!(s, "  variant             {}", self.variant);
+        let _ = writeln!(s, "  layers              {}", self.policy.layers.len());
+        let _ = writeln!(s, "  policy hash         {}", self.policy_hash);
+        let _ = writeln!(s, "  target              {}", self.target);
+        let _ = writeln!(s, "  target fingerprint  {}", self.target_fingerprint);
+        let _ = writeln!(
+            s,
+            "  claimed latency     {:.3} ms ({} backend; {:.1}% of the {:.3} ms reference)",
+            self.claim.latency_s * 1e3,
+            self.claim.backend,
+            100.0 * self.claim.latency_s / self.claim.base_latency_s,
+            self.claim.base_latency_s * 1e3,
+        );
+        let _ = writeln!(s, "  weights             {}", self.provenance.weights);
+        let _ = writeln!(
+            s,
+            "  profile cache       {} (schema v{})",
+            self.provenance.profile_cache, self.provenance.profile_schema_version
+        );
+        let _ = writeln!(s, "  packaged by         {}", self.provenance.tool);
+        let total: u64 = self.sections.values().map(|d| d.bytes).sum();
+        let _ = writeln!(s, "  payload             {} sections, {total} bytes", self.sections.len());
+        let mut quant = BTreeMap::new();
+        for l in &self.policy.layers {
+            *quant.entry(l.quant.label()).or_insert(0usize) += 1;
+        }
+        let modes: Vec<String> = quant.iter().map(|(m, n)| format!("{n} x {m}")).collect();
+        let _ = writeln!(s, "  quant modes         {}", modes.join(", "));
+        let _ = writeln!(s, "  sections:");
+        for (name, d) in &self.sections {
+            // chars().take, not byte slicing: report can render manifests
+            // that never went through digest verification
+            let head: String = d.sha256.chars().take(16).collect();
+            let _ = writeln!(s, "    {:24} {:>10} B  sha256 {head}…", name, d.bytes);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::QuantMode;
+
+    fn sample() -> ArtifactManifest {
+        let policy = DiscretePolicy {
+            layers: vec![
+                LayerCmp { kept_channels: 8, quant: QuantMode::Fp32 },
+                LayerCmp { kept_channels: 6, quant: QuantMode::Int8 },
+                LayerCmp {
+                    kept_channels: 4,
+                    quant: QuantMode::Mix { w_bits: 4, a_bits: 6 },
+                },
+            ],
+        };
+        let policy_hash = policy_hash(&policy);
+        let mut sections = BTreeMap::new();
+        sections.insert(
+            "stem.w".to_string(),
+            SectionDigest { sha256: "ab".repeat(32), bytes: 1234 },
+        );
+        ArtifactManifest {
+            schema_version: ARTIFACT_SCHEMA_VERSION,
+            variant: "tiny".into(),
+            layer_names: vec!["stem".into(), "b0".into(), "fc".into()],
+            policy,
+            policy_hash,
+            target: "raspberry-pi-4b/cortex-a72".into(),
+            target_fingerprint: "0123456789abcdef".into(),
+            claim: LatencyClaim {
+                latency_s: 1.5e-3,
+                base_latency_s: 4.0e-3,
+                backend: "sim".into(),
+            },
+            provenance: Provenance {
+                weights: "synthetic:00000000deadbeef".into(),
+                profile_cache: "none".into(),
+                profile_schema_version: 1,
+                tool: "galen test".into(),
+            },
+            sections,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless_and_canonical() {
+        let m = sample();
+        let text = m.to_json().pretty(0);
+        let back = ArtifactManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(m, back);
+        assert_eq!(back.to_json().pretty(0), text);
+    }
+
+    #[test]
+    fn policy_hash_tracks_policy_content() {
+        let m = sample();
+        let mut other = m.policy.clone();
+        other.layers[0].kept_channels = 7;
+        assert_ne!(policy_hash(&m.policy), policy_hash(&other));
+        assert_eq!(policy_hash(&m.policy), m.policy_hash);
+    }
+
+    #[test]
+    fn from_json_reports_missing_fields_structurally() {
+        let e = ArtifactManifest::from_json(&Json::parse("{}").unwrap()).unwrap_err();
+        assert!(matches!(e, ArtifactError::Manifest(_)));
+        assert!(!format!("{e}").is_empty());
+    }
+
+    #[test]
+    fn table_mentions_claims_and_provenance() {
+        let t = sample().table();
+        assert!(t.contains("claimed latency"));
+        assert!(t.contains("synthetic:00000000deadbeef"));
+        assert!(t.contains("MIX(w4/a6)"));
+    }
+}

@@ -1,0 +1,205 @@
+//! Deployable compression artifacts: a signed, checksummed container
+//! that carries a discretized policy together with the weights it
+//! prescribes, ready to hand to a device fleet.
+//!
+//! A search (or sweep, or serve job) ends with a policy and a latency
+//! claim; everything else needed to reproduce that operating point on a
+//! device — which channels survive, which layers quantize to what grid,
+//! the per-channel scales, which hardware target the claim was profiled
+//! on — lives in the session's caches.  The artifact freezes all of it
+//! into one relocatable `.galen` file:
+//!
+//! ```text
+//! "GLNART1\n"  (8 bytes)
+//! manifest len (u64 LE) | manifest JSON          — schema-versioned
+//! payload len  (u64 LE) | payload container      — see [`payload`]
+//! sig flag (u8)         | HMAC-SHA256(key, manifest) when flag = 1
+//! SHA-256 over every preceding byte (32 bytes)
+//! ```
+//!
+//! Integrity forms a tree: the trailing checksum covers the whole file,
+//! the manifest stores a digest of every payload section, and each
+//! section encoding covers its own name/dtype/shape/data.  A flipped
+//! bit anywhere is caught by at least one level; a *re-encoded* file
+//! with a recomputed trailer is caught by the section digests (payload
+//! edits) or the HMAC (manifest edits, when signed).  Encoding is
+//! deterministic — same inputs, byte-identical artifact, regardless of
+//! `GALEN_NUM_THREADS`.
+//!
+//! Module map: [`hash`] (SHA-256/HMAC), [`payload`] (tensor container),
+//! [`manifest`] (schema + JSON), [`pack`] (policy+weights → artifact),
+//! [`verify`] (untrusted bytes → [`verify::LoadedArtifact`]).
+
+use std::sync::OnceLock;
+
+use crate::obs;
+
+pub mod hash;
+pub mod manifest;
+pub mod pack;
+pub mod payload;
+pub mod verify;
+
+pub use manifest::{
+    policy_hash, ArtifactManifest, LatencyClaim, Provenance, SectionDigest,
+    ARTIFACT_SCHEMA_VERSION,
+};
+pub use pack::{artifact_path, pack, synthetic_weights, Artifact, PackInputs, WeightMap};
+pub use payload::{Payload, Section, SectionData};
+pub use verify::{
+    check_against_ir, load, load_with, verify_bytes, DriftReport, LoadedArtifact, VerifyOptions,
+};
+
+/// Leading magic of an encoded artifact file.
+pub const ARTIFACT_MAGIC: [u8; 8] = *b"GLNART1\n";
+
+/// Why an artifact was rejected.  Every loader failure is one of these —
+/// hostile input must produce a structured error, never a panic, and
+/// never a partially-loaded artifact.
+#[derive(Debug, thiserror::Error)]
+pub enum ArtifactError {
+    /// The file could not be read at all.
+    #[error("artifact io at {path}: {source}")]
+    Io {
+        /// Path we attempted to read.
+        path: String,
+        /// Underlying filesystem error.
+        #[source]
+        source: std::io::Error,
+    },
+    /// The leading magic is wrong — not an artifact file.
+    #[error("not a galen artifact (bad magic)")]
+    BadMagic,
+    /// The outer framing (lengths, flags, total size) is inconsistent.
+    #[error("artifact framing: {0}")]
+    Header(String),
+    /// The trailing whole-file checksum does not match the content.
+    #[error("artifact checksum mismatch: stored {expected}, computed {computed}")]
+    Checksum {
+        /// Digest stored in the file trailer.
+        expected: String,
+        /// Digest recomputed over the file body.
+        computed: String,
+    },
+    /// The manifest failed to parse or is structurally invalid.
+    #[error("artifact manifest: {0}")]
+    Manifest(String),
+    /// The manifest declares a schema this build does not speak.
+    #[error("artifact schema version {found} unsupported (this build reads {supported})")]
+    SchemaVersion {
+        /// Version the file declares.
+        found: usize,
+        /// Version this build supports.
+        supported: usize,
+    },
+    /// Signature policy violation: missing, unverifiable, or wrong HMAC.
+    #[error("artifact signature: {0}")]
+    Signature(String),
+    /// The payload container is malformed.
+    #[error("artifact payload: {0}")]
+    Payload(String),
+    /// A specific payload section is missing, undeclared, or corrupt.
+    #[error("artifact section '{name}': {reason}")]
+    Section {
+        /// Section name (e.g. `s0b0.conv1.w_q`).
+        name: String,
+        /// What is wrong with it.
+        reason: String,
+    },
+    /// Cross-field or artifact-vs-IR inconsistency.
+    #[error("artifact semantics: {0}")]
+    Semantics(String),
+}
+
+/// The fixed rejection-stage vocabulary, shared by [`ArtifactError::stage`]
+/// and the labelled rejection counters.
+const STAGES: [&str; 10] = [
+    "io",
+    "magic",
+    "header",
+    "checksum",
+    "manifest",
+    "schema",
+    "signature",
+    "payload",
+    "section",
+    "semantics",
+];
+
+impl ArtifactError {
+    /// Which verification stage rejected the artifact (a stable label for
+    /// metrics and for tests asserting *where* corruption was caught).
+    pub fn stage(&self) -> &'static str {
+        match self {
+            ArtifactError::Io { .. } => STAGES[0],
+            ArtifactError::BadMagic => STAGES[1],
+            ArtifactError::Header(_) => STAGES[2],
+            ArtifactError::Checksum { .. } => STAGES[3],
+            ArtifactError::Manifest(_) => STAGES[4],
+            ArtifactError::SchemaVersion { .. } => STAGES[5],
+            ArtifactError::Signature(_) => STAGES[6],
+            ArtifactError::Payload(_) => STAGES[7],
+            ArtifactError::Section { .. } => STAGES[8],
+            ArtifactError::Semantics(_) => STAGES[9],
+        }
+    }
+}
+
+pub(crate) fn obs_packaged() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| obs::Counter::register("artifact_packaged_total", &[]))
+}
+
+pub(crate) fn obs_verify_ok() -> &'static obs::Counter {
+    static C: OnceLock<obs::Counter> = OnceLock::new();
+    C.get_or_init(|| obs::Counter::register("artifact_verify_total", &[("outcome", "ok")]))
+}
+
+/// Rejections labelled by the verification stage that caught them.
+pub(crate) fn obs_verify_rejected(stage: &'static str) -> &'static obs::Counter {
+    static C: OnceLock<[obs::Counter; STAGES.len()]> = OnceLock::new();
+    let all = C.get_or_init(|| {
+        STAGES.map(|s| obs::Counter::register("artifact_verify_rejected_total", &[("stage", s)]))
+    });
+    let idx = STAGES.iter().position(|s| *s == stage).unwrap_or(0);
+    &all[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_error_maps_to_a_declared_stage() {
+        let errs: Vec<ArtifactError> = vec![
+            ArtifactError::Io {
+                path: "x".into(),
+                source: std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+            },
+            ArtifactError::BadMagic,
+            ArtifactError::Header("h".into()),
+            ArtifactError::Checksum {
+                expected: "a".into(),
+                computed: "b".into(),
+            },
+            ArtifactError::Manifest("m".into()),
+            ArtifactError::SchemaVersion {
+                found: 9,
+                supported: ARTIFACT_SCHEMA_VERSION,
+            },
+            ArtifactError::Signature("s".into()),
+            ArtifactError::Payload("p".into()),
+            ArtifactError::Section {
+                name: "n".into(),
+                reason: "r".into(),
+            },
+            ArtifactError::Semantics("z".into()),
+        ];
+        assert_eq!(errs.len(), STAGES.len());
+        for (e, want) in errs.iter().zip(STAGES) {
+            assert_eq!(e.stage(), want);
+            // Display must mention enough to debug from a log line
+            assert!(!format!("{e}").is_empty());
+        }
+    }
+}

@@ -1,0 +1,513 @@
+//! Packing: policy + weights → a deterministic `.galen` artifact.
+//!
+//! The packer slices each layer's weight tensor down to the policy's kept
+//! channels (output channels by the same ℓ1 keep-first ranking the search
+//! uses — `compress::l1_channel_ranking` — input channels following the
+//! producer's kept set, exactly like `DiscretePolicy::effective_cin`),
+//! then stores it per quant mode:
+//!
+//! * `FP32`  → `<layer>.w` (f32, sliced HWIO/IO shape);
+//! * `INT8` / `MIX` → `<layer>.w_q` (symmetric per-output-channel i8 via
+//!   `tensor::quant::QuantizedMat`, MIX clamped to its narrower
+//!   `w_bits` grid) + `<layer>.w_scales` (one f32 per kept channel);
+//! * pruned layers additionally carry `<layer>.kept_idx` (i32, ascending
+//!   original output-channel indices) so a consumer can place the kept
+//!   filters in the uncompressed coordinate system.
+//!
+//! Everything downstream of the inputs is a pure function: same IR,
+//! policy and weights → byte-identical artifact (RNG only enters through
+//! [`synthetic_weights`], itself a pure function of the variant name), so
+//! artifacts are diffable, cacheable and content-addressable.
+//!
+//! Container layout (integers little-endian):
+//!
+//! ```text
+//! magic  b"GLNART1\n"                              8 bytes
+//! u64    manifest length; canonical manifest JSON  (see `manifest`)
+//! u64    payload length; payload container         (see `payload`)
+//! u8     signature flag (0 | 1)
+//! [32]   HMAC-SHA256(key, manifest bytes) when flagged
+//! 32     SHA-256 over every preceding byte
+//! ```
+//!
+//! The trailing checksum makes any single-byte corruption detectable; the
+//! optional HMAC authenticates the manifest (and, transitively through the
+//! manifest's section digests, the payload) against deliberate tampering
+//! by re-encoders who can recompute the plain checksum but not the keyed
+//! signature.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::compress::{l1_channel_ranking, DiscretePolicy, QuantMode};
+use crate::hw::HwTarget;
+use crate::model::{Layer, LayerKind, ModelIr};
+use crate::tensor::quant::QuantizedMat;
+use crate::tensor::Mat;
+use crate::util::json::{cleanup_stale_temps, write_bytes_atomic};
+use crate::util::rng::Pcg64;
+use crate::util::Fnv1a;
+
+use super::hash;
+use super::manifest::{
+    policy_hash, ArtifactManifest, LatencyClaim, Provenance, SectionDigest,
+    ARTIFACT_SCHEMA_VERSION,
+};
+use super::payload::{encode_section, Payload, SectionData};
+use super::ARTIFACT_MAGIC;
+
+/// Weight tensors by parameter name (`<layer>.w` → shape + f32 data), the
+/// same view `runtime::ArtifactRegistry::params_by_name` exposes.
+pub type WeightMap = BTreeMap<String, (Vec<usize>, Vec<f32>)>;
+
+/// Everything [`pack`] consumes.
+pub struct PackInputs<'a> {
+    /// Structural IR of the model being packaged.
+    pub ir: &'a ModelIr,
+    /// The discretized policy to bake in.
+    pub policy: &'a DiscretePolicy,
+    /// Weight tensors (`<layer>.w` entries; extra names are ignored).
+    pub weights: &'a WeightMap,
+    /// Provenance label for the weights (`gten:<path>` / `synthetic:<hex>`).
+    pub weights_source: String,
+    /// Hardware target the latency claim refers to.
+    pub target: &'a HwTarget,
+    /// The claimed latency with backend label.
+    pub claim: LatencyClaim,
+    /// Profile-cache root label for provenance (`none` for sim).
+    pub profile_cache: String,
+}
+
+/// A packed artifact: manifest + payload, ready to encode or write.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Artifact {
+    /// The schema-versioned manifest.
+    pub manifest: ArtifactManifest,
+    /// The binary section container the manifest's digests cover.
+    pub payload: Payload,
+}
+
+/// Build the artifact for `inputs.policy`.  Deterministic; fails (with
+/// context) on missing weights, shape mismatches, or an invalid claim —
+/// never on a well-formed session.
+pub fn pack(inputs: &PackInputs<'_>) -> Result<Artifact> {
+    let _sp = crate::obs::trace::span("artifact_pack")
+        .arg("variant", inputs.ir.variant.clone());
+    let ir = inputs.ir;
+    let policy = inputs.policy;
+    anyhow::ensure!(
+        policy.layers.len() == ir.layers.len(),
+        "policy has {} layers, IR '{}' has {}",
+        policy.layers.len(),
+        ir.variant,
+        ir.layers.len()
+    );
+    anyhow::ensure!(
+        inputs.claim.latency_s.is_finite()
+            && inputs.claim.latency_s > 0.0
+            && inputs.claim.base_latency_s.is_finite()
+            && inputs.claim.base_latency_s > 0.0,
+        "latency claim must be finite and positive (got {} / base {})",
+        inputs.claim.latency_s,
+        inputs.claim.base_latency_s
+    );
+
+    // pass 1: kept output channels per layer (ℓ1 keep-first, stored in
+    // ascending original-index order — canonical and mask-equivalent)
+    let mut kept_out: Vec<Vec<usize>> = Vec::with_capacity(ir.layers.len());
+    for (l, cmp) in ir.layers.iter().zip(&policy.layers) {
+        let (shape, w) = layer_weight(inputs.weights, l)?;
+        anyhow::ensure!(
+            (1..=l.cout).contains(&cmp.kept_channels),
+            "layer {}: kept_channels {} outside 1..={}",
+            l.name,
+            cmp.kept_channels,
+            l.cout
+        );
+        let mut keep: Vec<usize> =
+            l1_channel_ranking(w, shape).into_iter().take(cmp.kept_channels).collect();
+        keep.sort_unstable();
+        kept_out.push(keep);
+    }
+
+    // pass 2: slice + quantize into payload sections
+    let mut payload = Payload::default();
+    for (i, (l, cmp)) in ir.layers.iter().zip(&policy.layers).enumerate() {
+        let (shape, w) = layer_weight(inputs.weights, l)?;
+        let keep = &kept_out[i];
+        let (ci, co) = match l.kind {
+            LayerKind::Conv => (shape[2], shape[3]),
+            LayerKind::Linear => (shape[0], shape[1]),
+        };
+        let spatial = w.len() / (ci * co); // kernel^2 for convs, 1 otherwise
+        let kept_in: Vec<usize> = match ir.producer_of(i) {
+            // depthwise filters have a single input plane; the channel
+            // coupling to the producer lives in the output-channel axis
+            _ if ci == 1 => vec![0],
+            Some(p) => {
+                anyhow::ensure!(
+                    ci == ir.layers[p].cout,
+                    "layer {}: weight input dim {ci} does not match producer {} cout {}",
+                    l.name,
+                    ir.layers[p].name,
+                    ir.layers[p].cout
+                );
+                kept_out[p].clone()
+            }
+            None => (0..ci).collect(),
+        };
+        let mut sliced = Vec::with_capacity(spatial * kept_in.len() * keep.len());
+        for s in 0..spatial {
+            for &cin in &kept_in {
+                for &cout in keep {
+                    sliced.push(w[(s * ci + cin) * co + cout]);
+                }
+            }
+        }
+        let sliced_shape = match l.kind {
+            LayerKind::Conv => vec![l.kernel, l.kernel, kept_in.len(), keep.len()],
+            LayerKind::Linear => vec![kept_in.len(), keep.len()],
+        };
+        match cmp.quant {
+            QuantMode::Fp32 => {
+                payload.insert(&format!("{}.w", l.name), sliced_shape, SectionData::F32(sliced));
+            }
+            mode => {
+                let m = Mat::from_vec(spatial * kept_in.len(), keep.len(), sliced);
+                let q = QuantizedMat::quantize_per_channel_qmax(&m, weight_qmax(mode));
+                payload.insert(&format!("{}.w_q", l.name), sliced_shape, SectionData::I8(q.data));
+                payload.insert(
+                    &format!("{}.w_scales", l.name),
+                    vec![keep.len()],
+                    SectionData::F32(q.scales),
+                );
+            }
+        }
+        if keep.len() < l.cout {
+            payload.insert(
+                &format!("{}.kept_idx", l.name),
+                vec![keep.len()],
+                SectionData::I32(keep.iter().map(|&c| c as i32).collect()),
+            );
+        }
+    }
+
+    let manifest = ArtifactManifest {
+        schema_version: ARTIFACT_SCHEMA_VERSION,
+        variant: ir.variant.clone(),
+        layer_names: ir.layers.iter().map(|l| l.name.clone()).collect(),
+        policy: policy.clone(),
+        policy_hash: policy_hash(policy),
+        target: inputs.target.name.clone(),
+        target_fingerprint: inputs.target.fingerprint_hex(),
+        claim: inputs.claim.clone(),
+        provenance: Provenance {
+            weights: inputs.weights_source.clone(),
+            profile_cache: inputs.profile_cache.clone(),
+            profile_schema_version: crate::hw::PROFILE_SCHEMA_VERSION,
+            tool: format!("galen {}", env!("CARGO_PKG_VERSION")),
+        },
+        sections: section_digests(&payload),
+    };
+    super::obs_packaged().inc();
+    Ok(Artifact { manifest, payload })
+}
+
+impl Artifact {
+    /// Canonical byte encoding; with `hmac_key`, the manifest is signed.
+    pub fn encode(&self, hmac_key: Option<&[u8]>) -> Vec<u8> {
+        let mut manifest_bytes = self.manifest.to_json().pretty(0).into_bytes();
+        manifest_bytes.push(b'\n'); // `head -c` friendliness
+        let payload_bytes = self.payload.to_bytes();
+        let mut out = Vec::with_capacity(manifest_bytes.len() + payload_bytes.len() + 128);
+        out.extend_from_slice(&ARTIFACT_MAGIC);
+        out.extend_from_slice(&(manifest_bytes.len() as u64).to_le_bytes());
+        out.extend_from_slice(&manifest_bytes);
+        out.extend_from_slice(&(payload_bytes.len() as u64).to_le_bytes());
+        out.extend_from_slice(&payload_bytes);
+        match hmac_key {
+            Some(key) => {
+                out.push(1);
+                out.extend_from_slice(&hash::hmac_sha256(key, &manifest_bytes));
+            }
+            None => out.push(0),
+        }
+        let checksum = hash::sha256(&out);
+        out.extend_from_slice(&checksum);
+        out
+    }
+
+    /// Write the encoded artifact durably: reap orphaned temps from a
+    /// previous crash, then temp-file + fsync + atomic rename via
+    /// `util::json::write_bytes_atomic` — a reader never observes a torn
+    /// `.galen` file.
+    pub fn write(&self, path: &Path, hmac_key: Option<&[u8]>) -> Result<()> {
+        cleanup_stale_temps(path);
+        write_bytes_atomic(path, &self.encode(hmac_key))
+    }
+}
+
+/// Content digests of every payload section (the manifest's hash-tree
+/// middle layer).
+pub fn section_digests(payload: &Payload) -> BTreeMap<String, SectionDigest> {
+    payload
+        .sections
+        .iter()
+        .map(|(name, sec)| {
+            let enc = encode_section(name, sec);
+            (
+                name.clone(),
+                SectionDigest {
+                    sha256: hash::hex(&hash::sha256(&enc)),
+                    bytes: enc.len() as u64,
+                },
+            )
+        })
+        .collect()
+}
+
+/// The symmetric-quantization ceiling for a weight grid of `mode`:
+/// 127 for INT8, `2^(w_bits-1) - 1` for MIX (min 1).
+pub fn weight_qmax(mode: QuantMode) -> i32 {
+    let (w_bits, _) = mode.bits();
+    if w_bits >= 8 {
+        127
+    } else {
+        ((1i32 << (w_bits.max(1) - 1)) - 1).max(1)
+    }
+}
+
+/// `<variant>-<policyhash>.galen` — the artifact file name.
+pub fn file_name(variant: &str, policy_hash: &str) -> String {
+    format!("{variant}-{policy_hash}.galen")
+}
+
+/// Canonical output path `root/<sanitized target>/<variant>-<hash>.galen`
+/// (the same per-target directory sanitization the profile and sweep
+/// stores use).
+pub fn artifact_path(
+    root: &Path,
+    target: &HwTarget,
+    variant: &str,
+    policy: &DiscretePolicy,
+) -> PathBuf {
+    root.join(crate::hw::sanitize(&target.name))
+        .join(file_name(variant, &policy_hash(policy)))
+}
+
+/// The expected weight-tensor shape of a layer (HWIO for convs — one
+/// input plane for depthwise — `[cin, cout]` for linear), matching the
+/// AOT artifact manifests and the model zoo.
+pub fn weight_shape(l: &Layer) -> Vec<usize> {
+    match l.kind {
+        LayerKind::Conv if l.depthwise => vec![l.kernel, l.kernel, 1, l.cout],
+        LayerKind::Conv => vec![l.kernel, l.kernel, l.cin, l.cout],
+        LayerKind::Linear => vec![l.cin, l.cout],
+    }
+}
+
+/// Deterministic synthetic weights for sessions without AOT-exported
+/// tensors: per-layer Kaiming-uniform-style values from a PCG stream
+/// seeded purely by `(variant, layer name)` — two processes packaging the
+/// same variant produce bit-identical tensors, which the artifact
+/// format's byte-identical guarantee builds on.
+pub fn synthetic_weights(ir: &ModelIr) -> WeightMap {
+    let seed = synthetic_seed(&ir.variant);
+    let mut out = BTreeMap::new();
+    for l in &ir.layers {
+        let shape = weight_shape(l);
+        let numel: usize = shape.iter().product();
+        let fan_in = (numel / l.cout).max(1) as f32;
+        let lim = (1.0 / fan_in).sqrt();
+        let mut h = Fnv1a::seeded(seed);
+        h.mix_bytes(l.name.as_bytes());
+        let mut rng = Pcg64::new(h.finish());
+        let data: Vec<f32> = (0..numel).map(|_| (rng.next_f32() * 2.0 - 1.0) * lim).collect();
+        out.insert(format!("{}.w", l.name), (shape, data));
+    }
+    out
+}
+
+/// The seed [`synthetic_weights`] derives everything from — recorded in
+/// the manifest's provenance as `synthetic:<this, in hex>`.
+pub fn synthetic_seed(variant: &str) -> u64 {
+    let mut h = Fnv1a::new();
+    h.mix_bytes(b"galen.artifact.synthetic-weights");
+    h.mix_bytes(variant.as_bytes());
+    h.finish()
+}
+
+fn layer_weight<'w>(weights: &'w WeightMap, l: &Layer) -> Result<(&'w [usize], &'w [f32])> {
+    let key = format!("{}.w", l.name);
+    let (shape, w) = weights
+        .get(&key)
+        .ok_or_else(|| anyhow::anyhow!("no weight tensor '{key}' to package"))?;
+    let expect = weight_shape(l);
+    anyhow::ensure!(
+        *shape == expect,
+        "weight '{key}' has shape {shape:?}, expected {expect:?}"
+    );
+    anyhow::ensure!(
+        w.len() == expect.iter().product::<usize>(),
+        "weight '{key}' data length {} does not match shape {shape:?}",
+        w.len()
+    );
+    Ok((shape.as_slice(), w.as_slice()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::LayerCmp;
+    use crate::model::ir::test_fixtures::tiny_meta;
+
+    fn tiny() -> ModelIr {
+        ModelIr::from_meta(&tiny_meta()).unwrap()
+    }
+
+    fn mixed_policy(ir: &ModelIr) -> DiscretePolicy {
+        let mut p = DiscretePolicy::reference(ir);
+        p.layers[1] = LayerCmp { kept_channels: 6, quant: QuantMode::Int8 };
+        p.layers[3] = LayerCmp {
+            kept_channels: 12,
+            quant: QuantMode::Mix { w_bits: 4, a_bits: 6 },
+        };
+        p
+    }
+
+    fn inputs<'a>(
+        ir: &'a ModelIr,
+        policy: &'a DiscretePolicy,
+        weights: &'a WeightMap,
+        target: &'a HwTarget,
+    ) -> PackInputs<'a> {
+        PackInputs {
+            ir,
+            policy,
+            weights,
+            weights_source: format!("synthetic:{:016x}", synthetic_seed(&ir.variant)),
+            target,
+            claim: LatencyClaim {
+                latency_s: 1.0e-3,
+                base_latency_s: 2.0e-3,
+                backend: "sim".into(),
+            },
+            profile_cache: "none".into(),
+        }
+    }
+
+    #[test]
+    fn pack_is_byte_identical_across_calls() {
+        let ir = tiny();
+        let policy = mixed_policy(&ir);
+        let weights = synthetic_weights(&ir);
+        let target = HwTarget::cortex_a72();
+        let a = pack(&inputs(&ir, &policy, &weights, &target)).unwrap();
+        let b = pack(&inputs(&ir, &policy, &weights, &target)).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.encode(None), b.encode(None));
+        assert_eq!(a.encode(Some(b"k")), b.encode(Some(b"k")));
+        // signing changes the bytes (flag + HMAC), not the manifest
+        assert_ne!(a.encode(None), a.encode(Some(b"k")));
+    }
+
+    #[test]
+    fn sections_follow_quant_modes_and_pruning() {
+        let ir = tiny();
+        let policy = mixed_policy(&ir);
+        let weights = synthetic_weights(&ir);
+        let target = HwTarget::cortex_a72();
+        let art = pack(&inputs(&ir, &policy, &weights, &target)).unwrap();
+        let s = &art.payload.sections;
+        // fp32 layer keeps a plain weight section
+        assert!(s.contains_key("stem.w") && !s.contains_key("stem.w_q"));
+        // int8 layer gets quantized data + per-channel scales + kept_idx
+        assert!(s.contains_key("s0b0.conv1.w_q"));
+        assert_eq!(s["s0b0.conv1.w_scales"].shape, vec![6]);
+        let SectionData::I32(idx) = &s["s0b0.conv1.kept_idx"].data else {
+            panic!("kept_idx dtype");
+        };
+        assert_eq!(idx.len(), 6);
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "kept_idx ascending");
+        // its consumer's input dim follows the producer's kept set
+        assert_eq!(s["s0b0.conv2.w"].shape, vec![3, 3, 6, 8]);
+        // every section is digested in the manifest
+        assert_eq!(
+            art.manifest.sections.keys().collect::<Vec<_>>(),
+            s.keys().collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn fp32_sections_are_bit_identical_slices_of_the_input() {
+        let ir = tiny();
+        let policy = DiscretePolicy::reference(&ir);
+        let weights = synthetic_weights(&ir);
+        let target = HwTarget::cortex_a72();
+        let art = pack(&inputs(&ir, &policy, &weights, &target)).unwrap();
+        // reference policy: no pruning, no quantization — the packaged
+        // tensors must be the inputs, bit for bit
+        for l in &ir.layers {
+            let SectionData::F32(got) = &art.payload.sections[&format!("{}.w", l.name)].data
+            else {
+                panic!("dtype");
+            };
+            let (_, want) = &weights[&format!("{}.w", l.name)];
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "layer {}", l.name);
+            }
+            assert!(!art.payload.sections.contains_key(&format!("{}.kept_idx", l.name)));
+        }
+    }
+
+    #[test]
+    fn mix_weights_respect_the_narrow_grid() {
+        assert_eq!(weight_qmax(QuantMode::Int8), 127);
+        assert_eq!(weight_qmax(QuantMode::Mix { w_bits: 4, a_bits: 4 }), 7);
+        assert_eq!(weight_qmax(QuantMode::Mix { w_bits: 2, a_bits: 2 }), 1);
+        let ir = tiny();
+        let policy = mixed_policy(&ir);
+        let weights = synthetic_weights(&ir);
+        let target = HwTarget::cortex_a72();
+        let art = pack(&inputs(&ir, &policy, &weights, &target)).unwrap();
+        let SectionData::I8(q) = &art.payload.sections["s1b0.conv1.w_q"].data else {
+            panic!("dtype");
+        };
+        assert!(q.iter().all(|&v| (-7..=7).contains(&v)), "4-bit grid");
+        assert!(q.iter().any(|&v| v != 0));
+    }
+
+    #[test]
+    fn pack_rejects_bad_inputs_with_context() {
+        let ir = tiny();
+        let weights = synthetic_weights(&ir);
+        let target = HwTarget::cortex_a72();
+        let mut policy = DiscretePolicy::reference(&ir);
+        policy.layers.pop();
+        let e = pack(&inputs(&ir, &policy, &weights, &target)).unwrap_err();
+        assert!(format!("{e:#}").contains("layers"));
+
+        let policy = DiscretePolicy::reference(&ir);
+        let mut missing = weights.clone();
+        missing.remove("fc.w");
+        let e = pack(&inputs(&ir, &policy, &missing, &target)).unwrap_err();
+        assert!(format!("{e:#}").contains("fc.w"));
+
+        let mut bad_claim = inputs(&ir, &policy, &weights, &target);
+        bad_claim.claim.latency_s = f64::NAN;
+        assert!(pack(&bad_claim).is_err());
+    }
+
+    #[test]
+    fn artifact_path_sanitizes_the_target_directory() {
+        let ir = tiny();
+        let policy = DiscretePolicy::reference(&ir);
+        let p = artifact_path(Path::new("deploy"), &HwTarget::cortex_a72(), "tiny", &policy);
+        let s = p.to_string_lossy();
+        assert!(s.starts_with("deploy/raspberry-pi-4b-cortex-a72/tiny-"));
+        assert!(s.ends_with(".galen"));
+    }
+}

@@ -1,0 +1,368 @@
+//! The artifact's binary payload: a deterministic named-section container.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic  b"GLNPAY1\n"                           8 bytes
+//! u32    section count
+//! per section, in strictly ascending name order:
+//!   u16  name length, then the UTF-8 name bytes
+//!   u8   dtype (0 = i8, 1 = f32, 2 = i32)
+//!   u8   ndim, then ndim x u32 dims
+//!   u64  raw data length in bytes (= numel x dtype size)
+//!   raw  element data, little-endian
+//! ```
+//!
+//! Sections live in a `BTreeMap`, so encoding is canonical: the same
+//! tensors always serialize to the same bytes, and the decoder *rejects*
+//! out-of-order or duplicate names rather than silently re-sorting — an
+//! artifact either is in canonical form or is not an artifact.  f32 data
+//! round-trips via `to_le_bytes`/`from_le_bytes`, so weights and scales
+//! survive bit-exactly (the pack→unpack property test pins this).
+//!
+//! Decoding is strict and total: every length is bounds-checked against
+//! the buffer, dimension products use checked arithmetic, and trailing
+//! bytes are an error.  A hostile payload yields an
+//! `ArtifactError::Payload`, never a panic or a partial container.
+
+use std::collections::BTreeMap;
+
+use super::ArtifactError;
+
+/// Magic bytes opening an encoded payload.
+pub const PAYLOAD_MAGIC: [u8; 8] = *b"GLNPAY1\n";
+
+/// Most dimensions a section may declare (shapes here are ≤ 4-D HWIO).
+pub const MAX_NDIM: usize = 8;
+
+/// Raw element storage of one section.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SectionData {
+    /// Quantized weights (per-channel symmetric i8).
+    I8(Vec<i8>),
+    /// Full-precision weights and per-channel scales.
+    F32(Vec<f32>),
+    /// Index vectors (kept output-channel indices).
+    I32(Vec<i32>),
+}
+
+impl SectionData {
+    /// Wire dtype tag (0/1/2 = i8/f32/i32).
+    pub fn dtype(&self) -> u8 {
+        match self {
+            SectionData::I8(_) => 0,
+            SectionData::F32(_) => 1,
+            SectionData::I32(_) => 2,
+        }
+    }
+
+    /// Bytes per element for this dtype.
+    pub fn elem_size(&self) -> usize {
+        match self {
+            SectionData::I8(_) => 1,
+            SectionData::F32(_) | SectionData::I32(_) => 4,
+        }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            SectionData::I8(v) => v.len(),
+            SectionData::F32(v) => v.len(),
+            SectionData::I32(v) => v.len(),
+        }
+    }
+
+    /// True when the section holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One named tensor in the payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Section {
+    /// Tensor shape; the product must equal the data length.
+    pub shape: Vec<usize>,
+    /// Element storage.
+    pub data: SectionData,
+}
+
+impl Section {
+    /// Element count implied by the shape.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A canonical, ordered collection of named sections.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Payload {
+    /// Sections by name (BTreeMap order == wire order).
+    pub sections: BTreeMap<String, Section>,
+}
+
+impl Payload {
+    /// Add a section, enforcing the shape/data consistency the encoder
+    /// relies on.  Panics on programmer error (inconsistent shape), which
+    /// can only originate in-process — decoded payloads go through the
+    /// checked [`Payload::from_bytes`] path instead.
+    pub fn insert(&mut self, name: &str, shape: Vec<usize>, data: SectionData) {
+        let numel: usize = shape.iter().product();
+        assert_eq!(numel, data.len(), "section '{name}': shape/data mismatch");
+        assert!(shape.len() <= MAX_NDIM, "section '{name}': too many dims");
+        let prev = self.sections.insert(name.to_string(), Section { shape, data });
+        assert!(prev.is_none(), "section '{name}' inserted twice");
+    }
+
+    /// Canonical encoding of the whole container.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&PAYLOAD_MAGIC);
+        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        for (name, sec) in &self.sections {
+            out.extend_from_slice(&encode_section(name, sec));
+        }
+        out
+    }
+
+    /// Strict decode; inverse of [`Payload::to_bytes`] on valid input,
+    /// a structured [`ArtifactError::Payload`] on anything else.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Payload, ArtifactError> {
+        let mut r = Reader { bytes, pos: 0 };
+        let magic = r.take(8, "magic")?;
+        if magic != PAYLOAD_MAGIC {
+            return Err(err("bad payload magic"));
+        }
+        let count = u32::from_le_bytes(r.take(4, "section count")?.try_into().unwrap());
+        let mut sections = BTreeMap::new();
+        let mut last_name: Option<String> = None;
+        for i in 0..count {
+            let (name, sec) = decode_section(&mut r, i)?;
+            if let Some(prev) = &last_name {
+                if *prev >= name {
+                    return Err(err(&format!(
+                        "section '{name}' out of canonical order (after '{prev}')"
+                    )));
+                }
+            }
+            last_name = Some(name.clone());
+            sections.insert(name, sec);
+        }
+        if r.pos != bytes.len() {
+            return Err(err(&format!(
+                "{} trailing bytes after the last section",
+                bytes.len() - r.pos
+            )));
+        }
+        Ok(Payload { sections })
+    }
+}
+
+/// Canonical encoding of one named section — also the unit the manifest's
+/// per-section content hashes cover, so a digest protects the name, dtype,
+/// shape *and* data of its section.
+pub fn encode_section(name: &str, sec: &Section) -> Vec<u8> {
+    assert!(name.len() <= u16::MAX as usize, "section name too long");
+    assert!(
+        sec.shape.iter().all(|&d| d <= u32::MAX as usize),
+        "section '{name}': dimension exceeds u32"
+    );
+    let mut out = Vec::new();
+    out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    out.extend_from_slice(name.as_bytes());
+    out.push(sec.data.dtype());
+    out.push(sec.shape.len() as u8);
+    for &d in &sec.shape {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    let byte_len = (sec.data.len() * sec.data.elem_size()) as u64;
+    out.extend_from_slice(&byte_len.to_le_bytes());
+    match &sec.data {
+        SectionData::I8(v) => out.extend(v.iter().map(|&x| x as u8)),
+        SectionData::F32(v) => {
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        SectionData::I32(v) => {
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+fn decode_section(r: &mut Reader<'_>, index: u32) -> Result<(String, Section), ArtifactError> {
+    let ctx = format!("section #{index}");
+    let name_len = u16::from_le_bytes(r.take(2, &ctx)?.try_into().unwrap()) as usize;
+    let name = std::str::from_utf8(r.take(name_len, &ctx)?)
+        .map_err(|_| err(&format!("{ctx}: name is not UTF-8")))?
+        .to_string();
+    if name.is_empty() {
+        return Err(err(&format!("{ctx}: empty name")));
+    }
+    let dtype = r.take(1, &name)?[0];
+    let ndim = r.take(1, &name)?[0] as usize;
+    if ndim > MAX_NDIM {
+        return Err(err(&format!("section '{name}': {ndim} dims (max {MAX_NDIM})")));
+    }
+    let mut shape = Vec::with_capacity(ndim);
+    let mut numel: usize = 1;
+    for _ in 0..ndim {
+        let d = u32::from_le_bytes(r.take(4, &name)?.try_into().unwrap()) as usize;
+        numel = numel
+            .checked_mul(d)
+            .ok_or_else(|| err(&format!("section '{name}': shape overflows")))?;
+        shape.push(d);
+    }
+    let byte_len = u64::from_le_bytes(r.take(8, &name)?.try_into().unwrap());
+    let elem_size: usize = match dtype {
+        0 => 1,
+        1 | 2 => 4,
+        other => return Err(err(&format!("section '{name}': unknown dtype {other}"))),
+    };
+    let expect = numel
+        .checked_mul(elem_size)
+        .ok_or_else(|| err(&format!("section '{name}': byte length overflows")))?;
+    if byte_len != expect as u64 {
+        return Err(err(&format!(
+            "section '{name}': declares {byte_len} data bytes, shape implies {expect}"
+        )));
+    }
+    let raw = r.take(expect, &name)?;
+    let data = match dtype {
+        0 => SectionData::I8(raw.iter().map(|&b| b as i8).collect()),
+        1 => SectionData::F32(
+            raw.chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+        ),
+        _ => SectionData::I32(
+            raw.chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+        ),
+    };
+    Ok((name, Section { shape, data }))
+}
+
+fn err(msg: &str) -> ArtifactError {
+    ArtifactError::Payload(msg.to_string())
+}
+
+/// Bounds-checked forward reader over the encoded bytes.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], ArtifactError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or_else(|| err(&format!("truncated reading {what} ({n} bytes)")))?;
+        let out = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Payload {
+        let mut p = Payload::default();
+        p.insert("a.w_q", vec![2, 3], SectionData::I8(vec![1, -2, 3, -4, 5, -128]));
+        p.insert("a.w_scales", vec![3], SectionData::F32(vec![0.5, -0.0, 1.5e-3]));
+        p.insert("a.kept_idx", vec![2], SectionData::I32(vec![0, 7]));
+        p
+    }
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let p = sample();
+        let bytes = p.to_bytes();
+        let q = Payload::from_bytes(&bytes).unwrap();
+        assert_eq!(p, q);
+        // and the re-encode is byte-identical (canonical form)
+        assert_eq!(q.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn f32_payload_preserves_sign_and_subnormals() {
+        let mut p = Payload::default();
+        let vals = vec![-0.0f32, f32::MIN_POSITIVE / 2.0, 1.0e-40, 3.4e38];
+        p.insert("w", vec![4], SectionData::F32(vals.clone()));
+        let q = Payload::from_bytes(&p.to_bytes()).unwrap();
+        let SectionData::F32(got) = &q.sections["w"].data else {
+            panic!("dtype changed");
+        };
+        for (a, b) in vals.iter().zip(got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_boundary_is_an_error() {
+        let bytes = sample().to_bytes();
+        for cut in 0..bytes.len() {
+            let e = Payload::from_bytes(&bytes[..cut]).unwrap_err();
+            assert!(matches!(e, ArtifactError::Payload(_)), "cut at {cut}: {e}");
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage_and_bad_magic() {
+        let mut bytes = sample().to_bytes();
+        bytes.push(0);
+        assert!(Payload::from_bytes(&bytes).is_err());
+        let mut bad = sample().to_bytes();
+        bad[0] ^= 0xff;
+        assert!(Payload::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_non_canonical_order() {
+        // hand-build "b" before "a": decoder must refuse to re-sort
+        let mut one = Payload::default();
+        one.insert("b", vec![1], SectionData::I8(vec![1]));
+        let mut two = Payload::default();
+        two.insert("a", vec![1], SectionData::I8(vec![2]));
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&PAYLOAD_MAGIC);
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&encode_section("b", &one.sections["b"]));
+        bytes.extend_from_slice(&encode_section("a", &two.sections["a"]));
+        let e = Payload::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{e}").contains("canonical order"));
+    }
+
+    #[test]
+    fn rejects_shape_data_mismatch_and_unknown_dtype() {
+        let sec = Section { shape: vec![3], data: SectionData::I8(vec![1, 2, 3]) };
+        let mut enc = encode_section("w", &sec);
+        // corrupt the declared byte length (u64 right before the 3 data bytes)
+        let len_off = enc.len() - 3 - 8;
+        enc[len_off] = 99;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&PAYLOAD_MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&enc);
+        assert!(Payload::from_bytes(&bytes).is_err());
+
+        let mut enc2 = encode_section("w", &sec);
+        let dtype_off = 2 + 1; // u16 name len + name "w"
+        enc2[dtype_off] = 9; // unknown dtype
+        let mut bytes2 = Vec::new();
+        bytes2.extend_from_slice(&PAYLOAD_MAGIC);
+        bytes2.extend_from_slice(&1u32.to_le_bytes());
+        bytes2.extend_from_slice(&enc2);
+        let e = Payload::from_bytes(&bytes2).unwrap_err();
+        assert!(format!("{e}").contains("unknown dtype"));
+    }
+}

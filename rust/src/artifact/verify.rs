@@ -1,0 +1,441 @@
+//! Loading and verifying `.galen` artifacts.
+//!
+//! Verification is strictly ordered, cheapest-and-outermost first, and
+//! nothing is exposed to the caller until *every* applicable check has
+//! passed — there is no partially-loaded artifact state:
+//!
+//! 1. container framing: magic, bounds-checked lengths, exact total size;
+//! 2. whole-file SHA-256 checksum (catches any corruption byte);
+//! 3. schema version, then full manifest parse;
+//! 4. signature policy: HMAC verified when a key is supplied, presence
+//!    enforced when required;
+//! 5. payload container decode (structural);
+//! 6. per-section content digests against the manifest (catches a
+//!    re-encoded payload whose file checksum was recomputed);
+//! 7. internal consistency: recomputed policy hash, finite positive
+//!    claims, section/manifest key agreement.
+//!
+//! IR-dependent checks ([`check_against_ir`]) run separately because the
+//! loader may not have a session yet — `galen run-artifact` opens its
+//! session *from* the verified manifest's variant.
+//!
+//! Every failure is a structured [`ArtifactError`]; hostile bytes must
+//! never panic (pinned by `tests/fuzz_artifact.rs`).
+
+use std::path::Path;
+
+use crate::compress::QuantMode;
+use crate::model::ModelIr;
+
+use super::hash;
+use super::manifest::{policy_hash, ArtifactManifest, ARTIFACT_SCHEMA_VERSION};
+use super::pack::{section_digests, weight_qmax};
+use super::payload::{Payload, SectionData};
+use super::{ArtifactError, ARTIFACT_MAGIC};
+
+/// Signature policy for [`load_with`].
+#[derive(Clone, Debug, Default)]
+pub struct VerifyOptions {
+    /// HMAC key: when set, a present signature must verify against it.
+    pub hmac_key: Option<Vec<u8>>,
+    /// Reject unsigned artifacts (deployment fleets set this).
+    pub require_signature: bool,
+}
+
+/// A fully verified artifact.  Constructing one outside this module is
+/// possible (the fields are public for packing and tests) but a loader
+/// only ever returns instances whose every checksum passed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoadedArtifact {
+    /// The verified manifest.
+    pub manifest: ArtifactManifest,
+    /// The verified payload.
+    pub payload: Payload,
+    /// Whether the artifact carried a signature that was verified against
+    /// the supplied key.
+    pub signature_verified: bool,
+}
+
+/// Load and fully verify an artifact file with default options (no key,
+/// signatures optional).
+pub fn load(path: &Path) -> Result<LoadedArtifact, ArtifactError> {
+    load_with(path, &VerifyOptions::default())
+}
+
+/// Load and fully verify an artifact file.
+pub fn load_with(path: &Path, opts: &VerifyOptions) -> Result<LoadedArtifact, ArtifactError> {
+    // reap temps a crashed packager may have left next to the artifact
+    crate::util::json::cleanup_stale_temps(path);
+    let bytes = std::fs::read(path).map_err(|e| ArtifactError::Io {
+        path: path.display().to_string(),
+        source: e,
+    })?;
+    verify_bytes(&bytes, opts)
+}
+
+/// Verify an encoded artifact from memory (the file-free core of
+/// [`load_with`]; what the fuzz harness drives).
+pub fn verify_bytes(bytes: &[u8], opts: &VerifyOptions) -> Result<LoadedArtifact, ArtifactError> {
+    let _sp = crate::obs::trace::span("artifact_verify");
+    let r = verify_bytes_inner(bytes, opts);
+    match &r {
+        Ok(_) => super::obs_verify_ok().inc(),
+        Err(e) => super::obs_verify_rejected(e.stage()).inc(),
+    }
+    r
+}
+
+fn verify_bytes_inner(
+    bytes: &[u8],
+    opts: &VerifyOptions,
+) -> Result<LoadedArtifact, ArtifactError> {
+    // 1. framing
+    if bytes.len() < ARTIFACT_MAGIC.len() || bytes[..ARTIFACT_MAGIC.len()] != ARTIFACT_MAGIC {
+        return Err(ArtifactError::BadMagic);
+    }
+    let header = |msg: String| ArtifactError::Header(msg);
+    let need = |off: usize, n: usize| -> Result<&[u8], ArtifactError> {
+        off.checked_add(n)
+            .filter(|&e| e <= bytes.len())
+            .map(|e| &bytes[off..e])
+            .ok_or_else(|| header(format!("truncated at byte {off} (need {n} more)")))
+    };
+    let mut off = ARTIFACT_MAGIC.len();
+    let manifest_len =
+        u64::from_le_bytes(need(off, 8)?.try_into().unwrap()) as usize;
+    off += 8;
+    let manifest_bytes = need(off, manifest_len)?;
+    off += manifest_len;
+    let payload_len = u64::from_le_bytes(need(off, 8)?.try_into().unwrap()) as usize;
+    off += 8;
+    let payload_bytes = need(off, payload_len)?;
+    off += payload_len;
+    let sig_flag = need(off, 1)?[0];
+    off += 1;
+    let signature: Option<[u8; hash::DIGEST_LEN]> = match sig_flag {
+        0 => None,
+        1 => {
+            let s = need(off, hash::DIGEST_LEN)?;
+            off += hash::DIGEST_LEN;
+            Some(s.try_into().unwrap())
+        }
+        other => return Err(header(format!("unknown signature flag {other}"))),
+    };
+    if bytes.len() != off + hash::DIGEST_LEN {
+        return Err(header(format!(
+            "file is {} bytes, framing implies {}",
+            bytes.len(),
+            off + hash::DIGEST_LEN
+        )));
+    }
+
+    // 2. whole-file checksum (covers everything up to the trailer)
+    let stored = &bytes[off..];
+    let computed = hash::sha256(&bytes[..off]);
+    if !hash::digest_eq(stored, &computed) {
+        return Err(ArtifactError::Checksum {
+            expected: hash::hex(stored),
+            computed: hash::hex(&computed),
+        });
+    }
+
+    // 3. schema version first (precise error for future formats), then
+    // the full manifest parse
+    let text = std::str::from_utf8(manifest_bytes)
+        .map_err(|_| ArtifactError::Manifest("manifest is not UTF-8".into()))?;
+    let doc = crate::util::json::Json::parse(text)
+        .map_err(|e| ArtifactError::Manifest(format!("manifest parse: {e}")))?;
+    let found = doc
+        .req_usize("schema_version")
+        .map_err(|e| ArtifactError::Manifest(format!("{e:#}")))?;
+    if found != ARTIFACT_SCHEMA_VERSION {
+        return Err(ArtifactError::SchemaVersion {
+            found,
+            supported: ARTIFACT_SCHEMA_VERSION,
+        });
+    }
+    let manifest = ArtifactManifest::from_json(&doc)?;
+
+    // 4. signature policy
+    let signature_verified = match (&signature, &opts.hmac_key) {
+        (None, _) if opts.require_signature => {
+            return Err(ArtifactError::Signature("artifact is unsigned".into()));
+        }
+        (None, _) => false,
+        (Some(_), None) => {
+            // present but unverifiable without a key: only acceptable
+            // when signatures are not required
+            if opts.require_signature {
+                return Err(ArtifactError::Signature(
+                    "signature present but no key supplied to verify it".into(),
+                ));
+            }
+            false
+        }
+        (Some(sig), Some(key)) => {
+            let expect = hash::hmac_sha256(key, manifest_bytes);
+            if !hash::digest_eq(sig, &expect) {
+                return Err(ArtifactError::Signature(
+                    "HMAC mismatch: manifest was altered or the key differs".into(),
+                ));
+            }
+            true
+        }
+    };
+
+    // 5. payload structure
+    let payload = Payload::from_bytes(payload_bytes)?;
+
+    // 6. per-section digests, both directions: every manifest digest must
+    // match, and the payload may not smuggle undigested sections
+    let computed = section_digests(&payload);
+    for (name, want) in &manifest.sections {
+        let Some(got) = computed.get(name) else {
+            return Err(ArtifactError::Section {
+                name: name.clone(),
+                reason: "listed in the manifest but missing from the payload".into(),
+            });
+        };
+        if got.bytes != want.bytes {
+            return Err(ArtifactError::Section {
+                name: name.clone(),
+                reason: format!("{} encoded bytes, manifest says {}", got.bytes, want.bytes),
+            });
+        }
+        if got.sha256 != want.sha256 {
+            return Err(ArtifactError::Section {
+                name: name.clone(),
+                reason: format!(
+                    "content hash {} does not match the manifest's {}",
+                    got.sha256, want.sha256
+                ),
+            });
+        }
+    }
+    for name in computed.keys() {
+        if !manifest.sections.contains_key(name) {
+            return Err(ArtifactError::Section {
+                name: name.clone(),
+                reason: "present in the payload but not digested by the manifest".into(),
+            });
+        }
+    }
+
+    // 7. internal consistency
+    let recomputed = policy_hash(&manifest.policy);
+    if recomputed != manifest.policy_hash {
+        return Err(ArtifactError::Semantics(format!(
+            "policy hash {} does not match the policy content ({recomputed})",
+            manifest.policy_hash
+        )));
+    }
+    if manifest.layer_names.len() != manifest.policy.layers.len() {
+        return Err(ArtifactError::Semantics("layer name / policy length mismatch".into()));
+    }
+    if !(manifest.claim.latency_s.is_finite() && manifest.claim.latency_s > 0.0)
+        || !(manifest.claim.base_latency_s.is_finite() && manifest.claim.base_latency_s > 0.0)
+    {
+        return Err(ArtifactError::Semantics(format!(
+            "claimed latency must be finite and positive (got {} / base {})",
+            manifest.claim.latency_s, manifest.claim.base_latency_s
+        )));
+    }
+
+    Ok(LoadedArtifact {
+        manifest,
+        payload,
+        signature_verified,
+    })
+}
+
+/// Validate a verified artifact against a session's IR: layer names in
+/// order, channel budgets, and the per-mode section inventory with
+/// consistent shapes and value grids.  Run before executing or
+/// re-measuring the policy.
+pub fn check_against_ir(art: &LoadedArtifact, ir: &ModelIr) -> Result<(), ArtifactError> {
+    let m = &art.manifest;
+    let sem = |msg: String| ArtifactError::Semantics(msg);
+    if m.variant != ir.variant {
+        return Err(sem(format!(
+            "artifact is for variant '{}', session IR is '{}'",
+            m.variant, ir.variant
+        )));
+    }
+    if m.layer_names.len() != ir.layers.len() {
+        return Err(sem(format!(
+            "artifact has {} layers, IR has {}",
+            m.layer_names.len(),
+            ir.layers.len()
+        )));
+    }
+    for (l, (name, cmp)) in ir.layers.iter().zip(m.layer_names.iter().zip(&m.policy.layers)) {
+        if *name != l.name {
+            return Err(sem(format!("layer {} is '{name}' in the artifact, '{}' in the IR", l.index, l.name)));
+        }
+        if !(1..=l.cout).contains(&cmp.kept_channels) {
+            return Err(sem(format!(
+                "layer {}: kept_channels {} outside 1..={}",
+                l.name, cmp.kept_channels, l.cout
+            )));
+        }
+        let kept = cmp.kept_channels;
+        let section = |suffix: &str| -> Result<&super::payload::Section, ArtifactError> {
+            let key = format!("{}.{suffix}", l.name);
+            art.payload.sections.get(&key).ok_or_else(|| ArtifactError::Section {
+                name: key,
+                reason: "required by the policy but absent".into(),
+            })
+        };
+        let check_cout = |sec: &super::payload::Section, key: &str| {
+            match sec.shape.last() {
+                Some(&c) if c == kept => Ok(()),
+                other => Err(ArtifactError::Section {
+                    name: key.to_string(),
+                    reason: format!(
+                        "output-channel dim {other:?} does not match kept_channels {kept}"
+                    ),
+                }),
+            }
+        };
+        match cmp.quant {
+            QuantMode::Fp32 => {
+                let sec = section("w")?;
+                if !matches!(sec.data, SectionData::F32(_)) {
+                    return Err(ArtifactError::Section {
+                        name: format!("{}.w", l.name),
+                        reason: "fp32 layer stored with a non-f32 section".into(),
+                    });
+                }
+                check_cout(sec, &format!("{}.w", l.name))?;
+            }
+            mode => {
+                let wq = section("w_q")?;
+                let SectionData::I8(q) = &wq.data else {
+                    return Err(ArtifactError::Section {
+                        name: format!("{}.w_q", l.name),
+                        reason: "quantized layer stored with a non-i8 section".into(),
+                    });
+                };
+                check_cout(wq, &format!("{}.w_q", l.name))?;
+                let qmax = weight_qmax(mode) as i8;
+                if q.iter().any(|&v| v < -qmax || v > qmax) {
+                    return Err(ArtifactError::Section {
+                        name: format!("{}.w_q", l.name),
+                        reason: format!("values exceed the ±{qmax} grid of {}", mode.label()),
+                    });
+                }
+                let sc = section("w_scales")?;
+                let SectionData::F32(scales) = &sc.data else {
+                    return Err(ArtifactError::Section {
+                        name: format!("{}.w_scales", l.name),
+                        reason: "scales stored with a non-f32 section".into(),
+                    });
+                };
+                if scales.len() != kept {
+                    return Err(ArtifactError::Section {
+                        name: format!("{}.w_scales", l.name),
+                        reason: format!("{} scales for {kept} kept channels", scales.len()),
+                    });
+                }
+                if scales.iter().any(|s| !s.is_finite() || *s <= 0.0) {
+                    return Err(ArtifactError::Section {
+                        name: format!("{}.w_scales", l.name),
+                        reason: "scales must be finite and positive".into(),
+                    });
+                }
+            }
+        }
+        if kept < l.cout {
+            let sec = section("kept_idx")?;
+            let SectionData::I32(idx) = &sec.data else {
+                return Err(ArtifactError::Section {
+                    name: format!("{}.kept_idx", l.name),
+                    reason: "kept_idx stored with a non-i32 section".into(),
+                });
+            };
+            let ascending_in_range = idx.len() == kept
+                && idx.windows(2).all(|w| w[0] < w[1])
+                && idx.iter().all(|&c| (0..l.cout as i32).contains(&c));
+            if !ascending_in_range {
+                return Err(ArtifactError::Section {
+                    name: format!("{}.kept_idx", l.name),
+                    reason: format!(
+                        "must be {kept} strictly ascending indices below {}",
+                        l.cout
+                    ),
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Measured-vs-claimed latency comparison (`galen run-artifact`'s gate).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftReport {
+    /// The manifest's claimed latency (seconds).
+    pub claimed_s: f64,
+    /// What this host just measured/simulated (seconds).
+    pub measured_s: f64,
+    /// Relative drift `|measured - claimed| / claimed`.
+    pub drift: f64,
+    /// The configured acceptance threshold on `drift`.
+    pub tolerance: f64,
+}
+
+impl DriftReport {
+    /// Compare `measured_s` against `claimed_s` under `tolerance`.
+    pub fn new(claimed_s: f64, measured_s: f64, tolerance: f64) -> Self {
+        let drift = if claimed_s > 0.0 {
+            (measured_s - claimed_s).abs() / claimed_s
+        } else {
+            f64::INFINITY
+        };
+        Self {
+            claimed_s,
+            measured_s,
+            drift,
+            tolerance,
+        }
+    }
+
+    /// Whether the measurement confirms the claim.
+    pub fn within_tolerance(&self) -> bool {
+        self.drift.is_finite() && self.drift <= self.tolerance
+    }
+}
+
+impl std::fmt::Display for DriftReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "claimed {:.3} ms, measured {:.3} ms, drift {:.1}% (tolerance {:.1}%) — {}",
+            self.claimed_s * 1e3,
+            self.measured_s * 1e3,
+            self.drift * 100.0,
+            self.tolerance * 100.0,
+            if self.within_tolerance() { "PASS" } else { "FAIL" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drift_report_gates_symmetrically() {
+        let ok = DriftReport::new(1.0e-3, 1.1e-3, 0.25);
+        assert!(ok.within_tolerance());
+        assert!((ok.drift - 0.1).abs() < 1e-9);
+        let slow = DriftReport::new(1.0e-3, 1.4e-3, 0.25);
+        assert!(!slow.within_tolerance());
+        // a *faster* measurement than claimed is drift too: the claim is
+        // wrong either way, and fleets schedule against it
+        let fast = DriftReport::new(1.0e-3, 0.5e-3, 0.25);
+        assert!(!fast.within_tolerance());
+        assert!(format!("{slow}").contains("FAIL"));
+        assert!(format!("{ok}").contains("PASS"));
+        assert!(!DriftReport::new(0.0, 1.0, 0.5).within_tolerance());
+    }
+}

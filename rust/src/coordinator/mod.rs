@@ -31,4 +31,4 @@ pub use report::{policy_json, policy_report, table1_header, ExperimentRecord};
 pub use service::{
     serve, JobStatus, ServeOptions, ServeStats, MAX_REQUEST_LINE, SERVE_PROTOCOL_VERSION,
 };
-pub use session::{Backend, Session, SessionOptions};
+pub use session::{Backend, Packager, Session, SessionOptions};

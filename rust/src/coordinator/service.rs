@@ -244,6 +244,11 @@ pub struct ServeOptions {
     pub retry_after_ms: u64,
     /// Armed fault injections (tests; the CLI wires `GALEN_FAULTS`).
     pub faults: FaultPlan,
+    /// Package each completed job's outcome into a `.galen` artifact
+    /// (`galen serve --package-dir`; built via `Session::packager`).
+    /// Packaging failures are logged, never fail the job, and never alter
+    /// protocol responses.
+    pub packager: Option<super::Packager>,
 }
 
 /// Counters the serve loop reports when it exits.
@@ -345,6 +350,7 @@ pub(super) struct ServiceState<'a> {
     factory: &'a LatencyFactory,
     variant: String,
     results_dir: Option<PathBuf>,
+    packager: Option<super::Packager>,
     base_seed: Option<u64>,
     journal: Option<Mutex<ServeJournal>>,
     checkpoint_dir: Option<PathBuf>,
@@ -491,6 +497,7 @@ where
         factory,
         variant: variant.to_string(),
         results_dir: opts.results_dir.clone(),
+        packager: opts.packager.clone(),
         base_seed: opts.base_seed,
         journal,
         checkpoint_dir: opts.journal_dir.as_ref().map(|d| d.join("checkpoints")),
@@ -1507,6 +1514,14 @@ fn drive_job(
             Some(record.save(svc.ir, dir)?)
         }
     };
+    if let Some(packager) = &svc.packager {
+        // packaging is a best-effort extra deliverable: a failure (e.g. an
+        // unwritable package dir) must not fail a job whose search succeeded
+        match packager.package(&outcome) {
+            Ok(path) => log::info!("serve: {} packaged -> {}", job.id, path.display()),
+            Err(e) => log::warn!("serve: {} packaging failed: {e:#}", job.id),
+        }
+    }
     log::info!(
         "serve: {} done (best reward {:+.4}, rel.lat {:.1}%)",
         job.id,

@@ -5,6 +5,7 @@ use std::path::{Path, PathBuf};
 use anyhow::Result;
 
 use crate::agent::{mapper_for, AgentKind, PruningMapper, QuantizationMapper};
+use crate::artifact;
 use crate::compress::DiscretePolicy;
 use crate::eval::{Evaluator, SensitivityConfig, SensitivityTable, Split};
 use crate::hw::{
@@ -342,6 +343,121 @@ impl Session {
             .save(dir, &self.opts.target_hw.name, &self.opts.variant)
     }
 
+    /// Resolve the weight tensors to package, with a provenance label: the
+    /// AOT-exported `weights_<variant>.gten` when present, otherwise the
+    /// deterministic synthetic fallback (`artifact::synthetic_weights`).
+    pub fn packaging_weights(&self) -> Result<(artifact::WeightMap, String)> {
+        let path = self
+            .opts
+            .artifacts_dir
+            .join(format!("weights_{}.gten", self.opts.variant));
+        if path.exists() {
+            let file = crate::util::gten::read(&path)?;
+            let mut map = artifact::WeightMap::new();
+            for (name, t) in file {
+                // packaging consumes only the conv/linear weight tensors;
+                // BN stats etc. stay in the AOT artifact
+                if !name.ends_with(".w") {
+                    continue;
+                }
+                if let crate::util::gten::GtenData::F32(data) = t.data {
+                    map.insert(name, (t.shape, data));
+                }
+            }
+            Ok((map, format!("gten:{}", path.display())))
+        } else {
+            Ok((
+                artifact::synthetic_weights(&self.ir),
+                format!(
+                    "synthetic:{:016x}",
+                    artifact::pack::synthetic_seed(&self.ir.variant)
+                ),
+            ))
+        }
+    }
+
+    /// The profile-cache provenance label artifact manifests record.
+    fn profile_cache_label(&self) -> String {
+        match &self.opts.profiles_dir {
+            Some(d) => d.display().to_string(),
+            None => "none".to_string(),
+        }
+    }
+
+    /// Package a finished search outcome into
+    /// `root/<sanitized target>/<variant>-<policyhash>.galen` (written
+    /// atomically) and return the path.  With `hmac_key`, the manifest is
+    /// signed so consumers can detect tampered latency claims.
+    pub fn package_outcome(
+        &self,
+        outcome: &SearchOutcome,
+        root: &Path,
+        hmac_key: Option<&[u8]>,
+    ) -> Result<PathBuf> {
+        let (weights, weights_source) = self.packaging_weights()?;
+        let claim = artifact::LatencyClaim {
+            latency_s: outcome.best.latency_s,
+            base_latency_s: outcome.base_latency_s,
+            backend: outcome.latency_backend.clone(),
+        };
+        self.package(&outcome.best_policy, claim, &weights, weights_source, root, hmac_key)
+    }
+
+    /// Package an explicit policy + latency claim (the building block of
+    /// [`Session::package_outcome`]; `galen package` uses this directly so
+    /// it can rebuild the claim from a persisted experiment record).
+    pub fn package(
+        &self,
+        policy: &DiscretePolicy,
+        claim: artifact::LatencyClaim,
+        weights: &artifact::WeightMap,
+        weights_source: String,
+        root: &Path,
+        hmac_key: Option<&[u8]>,
+    ) -> Result<PathBuf> {
+        let art = artifact::pack(&artifact::PackInputs {
+            ir: &self.ir,
+            policy,
+            weights,
+            weights_source,
+            target: &self.opts.target_hw,
+            claim,
+            profile_cache: self.profile_cache_label(),
+        })?;
+        let path = artifact::artifact_path(root, &self.opts.target_hw, &self.opts.variant, policy);
+        art.write(&path, hmac_key)?;
+        Ok(path)
+    }
+
+    /// A thread-safe packaging callback for `galen serve`: captures
+    /// everything it needs by value (IR, target, resolved weights), so
+    /// workers can package terminal jobs without touching the session.
+    pub fn packager(&self, root: PathBuf, hmac_key: Option<Vec<u8>>) -> Result<Packager> {
+        let (weights, weights_source) = self.packaging_weights()?;
+        let ir = self.ir.clone();
+        let target = self.opts.target_hw.clone();
+        let variant = self.opts.variant.clone();
+        let profile_cache = self.profile_cache_label();
+        Ok(Packager::new(move |outcome: &SearchOutcome| {
+            let art = artifact::pack(&artifact::PackInputs {
+                ir: &ir,
+                policy: &outcome.best_policy,
+                weights: &weights,
+                weights_source: weights_source.clone(),
+                target: &target,
+                claim: artifact::LatencyClaim {
+                    latency_s: outcome.best.latency_s,
+                    base_latency_s: outcome.base_latency_s,
+                    backend: outcome.latency_backend.clone(),
+                },
+                profile_cache: profile_cache.clone(),
+            })?;
+            let path = artifact::artifact_path(&root, &target, &variant, &outcome.best_policy);
+            art.write(&path, hmac_key.as_deref())?;
+            Ok(path)
+        }))
+    }
+
     /// Sequential two-stage search (appendix, Figure 5): run `first` to the
     /// intermediate target c1 = (1 + c) / 2, freeze its policy, then run the
     /// other method to the final target c.
@@ -406,6 +522,33 @@ impl Session {
         )?;
         provider2.persist()?;
         Ok((out1, out2))
+    }
+}
+
+/// A thread-safe callback that packages a finished search outcome into a
+/// `.galen` artifact and returns the path written.  Built by
+/// [`Session::packager`] and handed to `galen serve`
+/// (`ServeOptions::packager`) so workers can package terminal jobs.
+#[derive(Clone)]
+pub struct Packager(
+    std::sync::Arc<dyn Fn(&SearchOutcome) -> Result<PathBuf> + Send + Sync>,
+);
+
+impl Packager {
+    /// Wrap a packaging closure.
+    pub fn new(f: impl Fn(&SearchOutcome) -> Result<PathBuf> + Send + Sync + 'static) -> Self {
+        Self(std::sync::Arc::new(f))
+    }
+
+    /// Package `outcome`, returning the artifact path written.
+    pub fn package(&self, outcome: &SearchOutcome) -> Result<PathBuf> {
+        (self.0)(outcome)
+    }
+}
+
+impl std::fmt::Debug for Packager {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Packager(..)")
     }
 }
 
@@ -506,6 +649,30 @@ mod tests {
         let out = s.search(&cfg).unwrap();
         assert_eq!(out.latency_backend, "hybrid");
         assert!(out.best.latency_s > 0.0);
+    }
+
+    #[test]
+    fn package_outcome_writes_a_loadable_artifact() {
+        let s = session();
+        let out = s.search(&fast(AgentKind::Joint, 0.5)).unwrap();
+        let root = std::env::temp_dir().join(format!("galen_pkg_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let path = s.package_outcome(&out, &root, None).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let loaded = crate::artifact::load(&path).unwrap();
+        assert_eq!(loaded.manifest.variant, "tiny");
+        assert_eq!(loaded.manifest.claim.latency_s, out.best.latency_s);
+        assert!(loaded
+            .manifest
+            .provenance
+            .weights
+            .starts_with("synthetic:"));
+        crate::artifact::check_against_ir(&loaded, &s.ir).unwrap();
+        // the serve-path packager writes byte-identical output
+        let p2 = s.packager(root.clone(), None).unwrap().package(&out).unwrap();
+        assert_eq!(p2, path, "same policy -> same content-addressed path");
+        assert_eq!(std::fs::read(&p2).unwrap(), bytes);
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

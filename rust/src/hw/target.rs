@@ -88,6 +88,13 @@ impl HwTarget {
     pub fn int8_peak(&self) -> f64 {
         self.f32_peak() * self.int8_speedup
     }
+
+    /// Hex form of the profiler's capability fingerprint — the same value
+    /// that invalidates profile caches guards artifact manifests against
+    /// replaying a latency claim on a differently-configured target.
+    pub fn fingerprint_hex(&self) -> String {
+        format!("{:016x}", super::profiler::target_fingerprint(self))
+    }
 }
 
 #[cfg(test)]
@@ -107,5 +114,15 @@ mod tests {
         let t = HwTarget::cortex_a72().float_only();
         assert!(!t.supports_int8 && !t.supports_bitserial);
         assert!(t.name.contains("float-only"));
+    }
+
+    #[test]
+    fn fingerprint_hex_tracks_capabilities() {
+        let a = HwTarget::cortex_a72();
+        let fp = a.fingerprint_hex();
+        assert_eq!(fp.len(), 16);
+        assert!(fp.chars().all(|c| c.is_ascii_hexdigit()));
+        assert_eq!(fp, HwTarget::cortex_a72().fingerprint_hex(), "stable");
+        assert_ne!(fp, a.float_only().fingerprint_hex(), "capability-sensitive");
     }
 }

@@ -35,7 +35,9 @@
 //! * [`coordinator`] — `coordinator::Session` wires it all together and
 //!   persists results; `coordinator::serve` multiplexes concurrent search
 //!   jobs over a JSONL protocol (`galen serve`); the `galen` binary is a
-//!   thin CLI over both.
+//!   thin CLI over both;
+//! * [`artifact`] — packages a finished search into a deployable,
+//!   checksummed `.galen` file (`galen package` / `galen run-artifact`).
 //!
 //! ## Quick start (no artifacts required)
 //!
@@ -68,6 +70,8 @@
 
 /// The three RL agents (DDPG core, action->policy mappers, replay, state).
 pub mod agent;
+/// Deployable `.galen` artifacts: signed, checksummed policy + weights.
+pub mod artifact;
 /// Mini-criterion benchmark harness behind `cargo bench`.
 pub mod bench;
 /// Policy representations and discretization along the mapping chain.

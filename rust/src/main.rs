@@ -8,7 +8,10 @@
 //!   sensitivity  compute + print the layer sensitivity table (Figure 6)
 //!   latency      profile the hardware simulator on a model variant
 //!   validate     evaluate a saved policy (accuracy + latency + retrain)
-//!   report       render saved observability artifacts (--metrics)
+//!   package      freeze a finished search record into a .galen artifact
+//!   run-artifact verify a .galen artifact and re-measure its latency claim
+//!   report       render saved observability artifacts (--metrics) or an
+//!                artifact manifest (--artifact)
 //!
 //! Every subcommand honors `GALEN_TRACE`: set it to trace the run's spans
 //! into `results/trace_<command>.json` (Chrome trace-event format) and
@@ -51,6 +54,8 @@ fn main() {
         "sensitivity" => cmd_sensitivity(&rest),
         "latency" => cmd_latency(&rest),
         "validate" => cmd_validate(&rest),
+        "package" => cmd_package(&rest),
+        "run-artifact" => cmd_run_artifact(&rest),
         "report" => cmd_report(&rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
@@ -104,7 +109,10 @@ fn usage() -> &'static str {
        sensitivity  layer sensitivity analysis (Fig 6)\n\
        latency      hardware-simulator latency profile\n\
        validate     evaluate a saved policy json (accuracy, latency, retrain)\n\
-       report       render saved observability artifacts (--metrics --file <snapshot>)"
+       package      freeze a search record into a deployable .galen artifact\n\
+       run-artifact verify an artifact and re-measure its latency claim\n\
+       report       render saved observability artifacts (--metrics --file <snapshot>)\n\
+                    or an artifact manifest (--artifact <file.galen>)"
 }
 
 /// Session options from the shared base-CLI flags (every subcommand's
@@ -323,6 +331,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     .opt("max-connections", "64", "concurrent socket clients (0 = unlimited; needs --listen)")
     .opt("max-queued", "0", "reject submits past this queue depth (0 = unbounded)")
     .opt("retry-after-ms", "500", "backoff hint attached to admission rejections")
+    .opt(
+        "package-dir",
+        "",
+        "package each finished job into this artifact root ('' disables)",
+    )
+    .opt("sign-key", "", "HMAC key for signing packaged artifacts (or GALEN_SIGN_KEY)")
     .flag("resume-jobs", "replay the serve journal and resume interrupted jobs")
     .flag("fixture", "use the in-code tiny fixture IR (no artifacts needed)");
     let args = cli.parse_from(argv)?;
@@ -352,6 +366,12 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         !(args.has_flag("resume-jobs") && results_dir.is_none()),
         "--resume-jobs needs a results directory (the journal lives there)"
     );
+    let package_dir = args.get("package-dir");
+    let packager = if package_dir.is_empty() {
+        None
+    } else {
+        Some(session.packager(std::path::PathBuf::from(package_dir), sign_key(&args))?)
+    };
     let opts = ServeOptions {
         workers: args.get_usize("jobs")?,
         results_dir: results_dir.clone(),
@@ -362,6 +382,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         max_queued_jobs: args.get_usize("max-queued")?,
         retry_after_ms: args.get_u64("retry-after-ms")?,
         faults,
+        packager,
     };
     let listen = args.get("listen");
     let stats = if listen.is_empty() {
@@ -518,23 +539,157 @@ fn cmd_validate(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Synthetic-backend session for artifact packaging and verification: the
+/// `tiny` variant maps to the in-code fixture IR, everything else resolves
+/// through the artifact meta manifests / model zoo.
+fn artifact_session(variant: &str, latency: &str, seed: u64) -> Result<Session> {
+    if variant == "tiny" {
+        Session::fixture(latency.parse()?, seed)
+    } else {
+        let mut opts = SessionOptions::new(variant);
+        opts.backend = Backend::Synthetic;
+        opts.latency = latency.parse()?;
+        opts.seed = seed;
+        Session::open(opts)
+    }
+}
+
+/// Resolve the artifact HMAC signing key: `--sign-key` wins, else the
+/// `GALEN_SIGN_KEY` environment variable; empty means unsigned.
+fn sign_key(args: &galen::util::cli::Args) -> Option<Vec<u8>> {
+    let k = args.get("sign-key");
+    if !k.is_empty() {
+        return Some(k.as_bytes().to_vec());
+    }
+    std::env::var("GALEN_SIGN_KEY")
+        .ok()
+        .filter(|s| !s.is_empty())
+        .map(String::into_bytes)
+}
+
+fn cmd_package(argv: &[String]) -> Result<()> {
+    let cli = Cli::new(
+        "galen package",
+        "freeze a finished search record into a deployable .galen artifact",
+    )
+    .req("record", "path to a results/*.json search record")
+    .opt("variant", "resnet18s", "model variant the record was searched on (tiny = fixture)")
+    .opt("seed", "7", "session seed")
+    .opt("latency", "sim", "session latency backend: sim|measured|hybrid")
+    .opt("out", "", "artifact root (default artifacts/, or GALEN_ARTIFACTS)")
+    .opt("sign-key", "", "HMAC-SHA256 manifest signing key (or GALEN_SIGN_KEY)");
+    let args = cli.parse_from(argv)?;
+    let session =
+        artifact_session(args.get("variant"), args.get("latency"), args.get_u64("seed")?)?;
+    let j = Json::read_file(std::path::Path::new(args.get("record")))?;
+    let policy = parse_policy(&session, &j)?;
+    // rebuild the latency claim from the record's persisted outcome so the
+    // artifact carries exactly what the search reported, not a re-measurement
+    let outcome = j.req("outcome")?;
+    let claim = galen::artifact::LatencyClaim {
+        latency_s: outcome.req("best")?.req_f64("latency_s")?,
+        base_latency_s: outcome.req_f64("base_latency_s")?,
+        backend: outcome.req_str("latency_backend")?.to_string(),
+    };
+    let (weights, weights_source) = session.packaging_weights()?;
+    let root = if args.get("out").is_empty() {
+        galen::artifacts_dir()
+    } else {
+        std::path::PathBuf::from(args.get("out"))
+    };
+    let key = sign_key(&args);
+    let path = session.package(&policy, claim, &weights, weights_source, &root, key.as_deref())?;
+    println!("artifact: {}", path.display());
+    Ok(())
+}
+
+fn cmd_run_artifact(argv: &[String]) -> Result<()> {
+    use galen::artifact::{self, DriftReport, VerifyOptions};
+    let cli = Cli::new(
+        "galen run-artifact",
+        "verify a .galen artifact end to end and re-measure its latency claim",
+    )
+    .req("artifact", "path to a .galen artifact")
+    .opt("seed", "7", "session seed for the re-measurement")
+    .opt("latency", "sim", "re-measurement backend: sim|measured|hybrid")
+    .opt("drift-tolerance", "0.25", "max |measured-claimed|/claimed before failing")
+    .opt("sign-key", "", "HMAC key the manifest signature must verify against (or GALEN_SIGN_KEY)")
+    .flag("require-signature", "reject unsigned artifacts")
+    .flag("allow-foreign-target", "only warn when the target fingerprint differs");
+    let args = cli.parse_from(argv)?;
+    let vopts = VerifyOptions {
+        hmac_key: sign_key(&args),
+        require_signature: args.has_flag("require-signature"),
+    };
+    // every checksum, the schema version, and (when keyed) the signature are
+    // checked before any weight bytes are interpreted
+    let loaded = artifact::load_with(std::path::Path::new(args.get("artifact")), &vopts)?;
+    let m = &loaded.manifest;
+    print!("{}", m.table());
+    let session = artifact_session(&m.variant, args.get("latency"), args.get_u64("seed")?)?;
+    artifact::check_against_ir(&loaded, &session.ir)?;
+    let fp = session.opts.target_hw.fingerprint_hex();
+    if m.target_fingerprint != fp {
+        let msg = format!(
+            "target fingerprint mismatch: artifact {} vs session {fp} ({})",
+            m.target_fingerprint, session.opts.target_hw.name
+        );
+        anyhow::ensure!(
+            args.has_flag("allow-foreign-target"),
+            "{msg} (pass --allow-foreign-target to override)"
+        );
+        log::warn!("{msg}");
+    }
+    println!(
+        "verified: {} payload sections, signature {}",
+        loaded.payload.sections.len(),
+        if loaded.signature_verified { "verified" } else { "absent" }
+    );
+    let mut provider = session.latency_provider(args.get_u64("seed")?)?;
+    let measured = provider.latency(&session.ir, &m.policy);
+    provider.persist()?;
+    let report =
+        DriftReport::new(m.claim.latency_s, measured, args.get_f64("drift-tolerance")?);
+    println!(
+        "latency [{} backend vs claimed {}]: {report}",
+        provider.backend(),
+        m.claim.backend
+    );
+    anyhow::ensure!(report.within_tolerance(), "latency drift gate failed: {report}");
+    Ok(())
+}
+
 fn cmd_report(argv: &[String]) -> Result<()> {
     let cli = Cli::new(
         "galen report",
         "render saved observability artifacts as human-readable tables",
     )
     .opt("file", "", "metrics snapshot json (results/metrics_<command>.json)")
+    .opt("artifact", "", "render the verified manifest of a .galen artifact")
+    .opt("sign-key", "", "HMAC key for --artifact signature checking (or GALEN_SIGN_KEY)")
     .flag("metrics", "render a metrics snapshot (schema-checked) as a table");
     let args = cli.parse_from(argv)?;
+    let artifact_path = args.get("artifact");
     anyhow::ensure!(
-        args.has_flag("metrics"),
-        "nothing to report: pass --metrics --file <metrics_<command>.json>"
+        args.has_flag("metrics") || !artifact_path.is_empty(),
+        "nothing to report: pass --metrics --file <snapshot> and/or --artifact <file.galen>"
     );
-    let file = args.get("file");
-    anyhow::ensure!(!file.is_empty(), "--metrics needs --file <path>");
-    let doc = Json::read_file(std::path::Path::new(file))?;
-    let snap = galen::obs::MetricsSnapshot::from_json(&doc)?;
-    print!("{}", snap.table());
+    if args.has_flag("metrics") {
+        let file = args.get("file");
+        anyhow::ensure!(!file.is_empty(), "--metrics needs --file <path>");
+        let doc = Json::read_file(std::path::Path::new(file))?;
+        let snap = galen::obs::MetricsSnapshot::from_json(&doc)?;
+        print!("{}", snap.table());
+    }
+    if !artifact_path.is_empty() {
+        let vopts = galen::artifact::VerifyOptions {
+            hmac_key: sign_key(&args),
+            require_signature: false,
+        };
+        let loaded =
+            galen::artifact::load_with(std::path::Path::new(artifact_path), &vopts)?;
+        print!("{}", loaded.manifest.table());
+    }
     Ok(())
 }
 

@@ -23,14 +23,19 @@
 
 use super::{Mat, KC};
 
-/// Symmetric scale for values in [-max_abs, max_abs] onto [-127, 127].
+/// Symmetric scale for values in [-max_abs, max_abs] onto [-qmax, qmax].
 /// An all-zero tensor gets scale 1.0 (every value quantizes to 0).
-fn scale_for(max_abs: f32) -> f32 {
+fn scale_for_qmax(max_abs: f32, qmax: i32) -> f32 {
     if max_abs == 0.0 {
         1.0
     } else {
-        max_abs / 127.0
+        max_abs / qmax as f32
     }
+}
+
+/// The i8 special case (`qmax = 127`) used by the activation path.
+fn scale_for(max_abs: f32) -> f32 {
+    scale_for_qmax(max_abs, 127)
 }
 
 fn quantize_slice(src: &[f32], scale: f32, dst: &mut [i8]) {
@@ -104,19 +109,32 @@ pub struct QuantizedMat {
 impl QuantizedMat {
     /// Symmetric per-output-channel quantization (offline weight path).
     pub fn quantize_per_channel(m: &Mat) -> Self {
+        Self::quantize_per_channel_qmax(m, 127)
+    }
+
+    /// Per-output-channel quantization onto a narrower symmetric grid
+    /// `[-qmax, qmax]` — the artifact packer's sub-8-bit weight path
+    /// (e.g. `qmax = 7` for 4-bit mixed-precision weights).  Values still
+    /// live in i8 storage; only the grid shrinks.
+    pub fn quantize_per_channel_qmax(m: &Mat, qmax: i32) -> Self {
+        assert!((1..=127).contains(&qmax), "qmax must be in 1..=127");
         let mut max_abs = vec![0.0f32; m.cols];
         for i in 0..m.rows {
             for (mx, &x) in max_abs.iter_mut().zip(m.row(i)) {
                 *mx = mx.max(x.abs());
             }
         }
-        let scales: Vec<f32> = max_abs.into_iter().map(scale_for).collect();
+        let scales: Vec<f32> = max_abs
+            .into_iter()
+            .map(|mx| scale_for_qmax(mx, qmax))
+            .collect();
+        let lim = qmax as f32;
         let mut data = vec![0i8; m.data.len()];
         for i in 0..m.rows {
             let row = m.row(i);
             let qrow = &mut data[i * m.cols..(i + 1) * m.cols];
             for ((q, &x), &s) in qrow.iter_mut().zip(row).zip(&scales) {
-                *q = (x / s).round().clamp(-127.0, 127.0) as i8;
+                *q = (x / s).round().clamp(-lim, lim) as i8;
             }
         }
         Self {
@@ -335,6 +353,31 @@ mod tests {
                 assert!((x - y).abs() <= tol, "[{i},{j}] {x} vs {y}");
             }
         }
+    }
+
+    #[test]
+    fn qmax_grid_bounds_values_and_error() {
+        let mut rng = Pcg64::new(13);
+        let m = random_mat(&mut rng, 12, 5, 3.0);
+        for qmax in [1i32, 7, 31, 127] {
+            let q = QuantizedMat::quantize_per_channel_qmax(&m, qmax);
+            assert!(
+                q.data.iter().all(|&v| (v as i32).abs() <= qmax),
+                "values escape the ±{qmax} grid"
+            );
+            let back = q.dequantize();
+            for j in 0..m.cols {
+                let tol = q.scales[j] * 0.5 * 1.0001;
+                for i in 0..m.rows {
+                    assert!((m.at(i, j) - back.at(i, j)).abs() <= tol, "qmax {qmax} [{i},{j}]");
+                }
+            }
+        }
+        // the default path is exactly the 127 grid
+        let a = QuantizedMat::quantize_per_channel(&m);
+        let b = QuantizedMat::quantize_per_channel_qmax(&m, 127);
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.scales, b.scales);
     }
 
     #[test]

@@ -230,43 +230,7 @@ impl Json {
     /// profile manifests); pair load sites with [`cleanup_stale_temps`] to
     /// reap temps orphaned by a crash between create and rename.
     pub fn write_file_atomic(&self, path: &std::path::Path) -> anyhow::Result<()> {
-        use std::io::Write as _;
-        use std::sync::atomic::{AtomicU64, Ordering};
-        static SEQ: AtomicU64 = AtomicU64::new(0);
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let file_name = path
-            .file_name()
-            .ok_or_else(|| anyhow::anyhow!("no file name in {}", path.display()))?
-            .to_string_lossy()
-            .into_owned();
-        let tmp = path.with_file_name(format!(
-            ".{file_name}.{}-{}.tmp",
-            std::process::id(),
-            SEQ.fetch_add(1, Ordering::Relaxed)
-        ));
-        let write = (|| -> anyhow::Result<()> {
-            let mut f = std::fs::File::create(&tmp)
-                .map_err(|e| anyhow::anyhow!("creating {}: {e}", tmp.display()))?;
-            f.write_all(self.pretty(0).as_bytes())
-                .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
-            f.sync_data()
-                .map_err(|e| anyhow::anyhow!("syncing {}: {e}", tmp.display()))?;
-            std::fs::rename(&tmp, path).map_err(|e| {
-                anyhow::anyhow!("renaming {} -> {}: {e}", tmp.display(), path.display())
-            })?;
-            Ok(())
-        })();
-        if write.is_err() {
-            // don't leave our own temp behind on a failed write/rename
-            let _ = std::fs::remove_file(&tmp);
-            return write;
-        }
-        if let Some(dir) = path.parent() {
-            fsync_dir(dir).map_err(|e| anyhow::anyhow!("syncing dir {}: {e}", dir.display()))?;
-        }
-        Ok(())
+        write_bytes_atomic(path, self.pretty(0).as_bytes())
     }
 
     /// Compact serialization.
@@ -349,6 +313,58 @@ pub fn fsync_dir(dir: &std::path::Path) -> std::io::Result<()> {
     }
     #[cfg(not(unix))]
     let _ = dir;
+    Ok(())
+}
+
+/// Atomically and durably write raw bytes to `path`: write to a sibling
+/// temp file, fsync it, rename it over `path`, and fsync the parent
+/// directory so the rename itself survives power loss.  A crash mid-write
+/// can never leave a torn or half-written file behind — readers see either
+/// the old file or the complete new one.  The temp name is unique per
+/// process and call, so concurrent writers (e.g. serve workers packaging
+/// artifacts into a shared output directory) each rename their *own*
+/// complete file instead of interleaving into a shared one.  This is the
+/// byte-level core of [`Json::write_file_atomic`]; binary writers (the
+/// artifact packer) use it directly.  Pair load sites with
+/// [`cleanup_stale_temps`] to reap temps orphaned by a crash between
+/// create and rename.
+pub fn write_bytes_atomic(path: &std::path::Path, bytes: &[u8]) -> anyhow::Result<()> {
+    use std::io::Write as _;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| anyhow::anyhow!("no file name in {}", path.display()))?
+        .to_string_lossy()
+        .into_owned();
+    let tmp = path.with_file_name(format!(
+        ".{file_name}.{}-{}.tmp",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let write = (|| -> anyhow::Result<()> {
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| anyhow::anyhow!("creating {}: {e}", tmp.display()))?;
+        f.write_all(bytes)
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+        f.sync_data()
+            .map_err(|e| anyhow::anyhow!("syncing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            anyhow::anyhow!("renaming {} -> {}: {e}", tmp.display(), path.display())
+        })?;
+        Ok(())
+    })();
+    if write.is_err() {
+        // don't leave our own temp behind on a failed write/rename
+        let _ = std::fs::remove_file(&tmp);
+        return write;
+    }
+    if let Some(dir) = path.parent() {
+        fsync_dir(dir).map_err(|e| anyhow::anyhow!("syncing dir {}: {e}", dir.display()))?;
+    }
     Ok(())
 }
 

@@ -1,0 +1,174 @@
+//! Fuzz-style robustness test for `.galen` artifact loading: hundreds of
+//! seeded random corruptions — truncations, bit flips, zeroed and
+//! duplicated ranges, insertions, length-field rewrites, appended garbage —
+//! must every one be rejected by `artifact::verify_bytes` with a structured
+//! error carrying a declared stage, and must never panic or return a
+//! partially-loaded artifact.  A second arm plays the stronger adversary:
+//! the manifest region is mutated and the container consistently reframed
+//! (lengths and trailing checksum recomputed), which the HMAC signature
+//! must still catch.
+
+use galen::artifact::{self, hash, LatencyClaim, PackInputs, VerifyOptions};
+use galen::compress::{DiscretePolicy, QuantMode};
+use galen::coordinator::Session;
+use galen::hw::LatencyKind;
+use galen::util::rng::Pcg64;
+
+const KEY: &[u8] = b"fuzz-fleet-key";
+
+/// One canonical signed artifact over a mixed policy on the fixture IR.
+fn base_artifact() -> Vec<u8> {
+    let session = Session::fixture(LatencyKind::Sim, 7).unwrap();
+    let mut policy = DiscretePolicy::reference(&session.ir);
+    for (i, l) in policy.layers.iter_mut().enumerate() {
+        l.quant = match i % 3 {
+            0 => QuantMode::Fp32,
+            1 => QuantMode::Int8,
+            _ => QuantMode::Mix { w_bits: 4, a_bits: 8 },
+        };
+        if i % 2 == 1 {
+            l.kept_channels = (l.kept_channels + 1) / 2;
+        }
+    }
+    let (weights, weights_source) = session.packaging_weights().unwrap();
+    let art = artifact::pack(&PackInputs {
+        ir: &session.ir,
+        policy: &policy,
+        weights: &weights,
+        weights_source,
+        target: &session.opts.target_hw,
+        claim: LatencyClaim {
+            latency_s: 2.0e-3,
+            base_latency_s: 3.5e-3,
+            backend: "sim".to_string(),
+        },
+        profile_cache: "none".to_string(),
+    })
+    .unwrap();
+    art.encode(Some(KEY))
+}
+
+/// Apply one random corruption; returns a human-readable tag for failures.
+fn mutate(bytes: &mut Vec<u8>, rng: &mut Pcg64) -> String {
+    let len = bytes.len();
+    match rng.below(7) {
+        0 => {
+            let cut = rng.below(len);
+            bytes.truncate(cut);
+            format!("truncate to {cut}")
+        }
+        1 => {
+            let flips = 1 + rng.below(4);
+            let mut tags = Vec::new();
+            for _ in 0..flips {
+                let off = rng.below(len);
+                bytes[off] ^= 1 << rng.below(8);
+                tags.push(off.to_string());
+            }
+            format!("flip bits at {}", tags.join(","))
+        }
+        2 => {
+            let start = rng.below(len);
+            let span = 1 + rng.below((len - start).min(64));
+            bytes[start..start + span].fill(0);
+            format!("zero {span} bytes at {start}")
+        }
+        3 => {
+            let at = rng.below(len + 1);
+            let n = 1 + rng.below(16);
+            let junk: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            bytes.splice(at..at, junk);
+            format!("insert {n} bytes at {at}")
+        }
+        4 => {
+            // rewrite one of the two u64 length fields (manifest length at
+            // offset 8, payload length right after the manifest)
+            let mlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+            let at = if rng.below(2) == 0 || 16 + mlen + 8 > len { 8 } else { 16 + mlen };
+            let v = rng.next_u64();
+            bytes[at..at + 8].copy_from_slice(&v.to_le_bytes());
+            format!("length field at {at} := {v}")
+        }
+        5 => {
+            let start = rng.below(len.saturating_sub(16));
+            let span = 1 + rng.below(32.min(len - start - 1));
+            let chunk = bytes[start..start + span].to_vec();
+            let dst = rng.below(len - span);
+            bytes[dst..dst + span].copy_from_slice(&chunk);
+            format!("copy {span} bytes {start} -> {dst}")
+        }
+        _ => {
+            let n = 1 + rng.below(32);
+            bytes.extend((0..n).map(|_| rng.next_u64() as u8));
+            format!("append {n} garbage bytes")
+        }
+    }
+}
+
+#[test]
+fn fuzzed_corruptions_are_all_rejected_and_never_panic() {
+    let original = base_artifact();
+    let opts = VerifyOptions { hmac_key: Some(KEY.to_vec()), require_signature: true };
+    assert!(artifact::verify_bytes(&original, &opts).is_ok(), "the base artifact must load");
+
+    let mut rng = Pcg64::new(0xa27_2242);
+    for case in 0..400 {
+        let mut mutant = original.clone();
+        let tag = mutate(&mut mutant, &mut rng);
+        if mutant == original {
+            continue; // e.g. zeroing a range that was already zero
+        }
+        let err = artifact::verify_bytes(&mutant, &opts)
+            .expect_err(&format!("case {case} ({tag}) was accepted"));
+        assert!(!err.stage().is_empty(), "case {case} ({tag}): empty stage");
+        assert!(!err.to_string().is_empty(), "case {case} ({tag}): empty message");
+    }
+    // the corpus loop never corrupted shared state: the original still loads
+    assert!(artifact::verify_bytes(&original, &opts).is_ok());
+}
+
+/// The stronger adversary: mutate the manifest region, then *consistently*
+/// reframe the container — correct manifest length, correct payload
+/// framing, recomputed trailing checksum, original signature bytes kept.
+/// Only the HMAC (or, for unparseable manifests, the manifest stage) stands
+/// between this and a forged latency claim.
+#[test]
+fn reframed_manifest_tampering_never_verifies_against_the_key() {
+    let original = base_artifact();
+    let opts = VerifyOptions { hmac_key: Some(KEY.to_vec()), require_signature: true };
+    let mlen = u64::from_le_bytes(original[8..16].try_into().unwrap()) as usize;
+    let manifest = original[16..16 + mlen].to_vec();
+
+    let mut rng = Pcg64::new(0x5167_2242);
+    for case in 0..200 {
+        let mut mb = manifest.clone();
+        match rng.below(3) {
+            0 => {
+                let off = rng.below(mb.len());
+                mb[off] ^= 1 << rng.below(8);
+            }
+            1 => mb.truncate(1 + rng.below(mb.len())),
+            _ => {
+                let at = rng.below(mb.len());
+                mb.splice(at..at, (0..1 + rng.below(8)).map(|_| rng.next_u64() as u8));
+            }
+        }
+        if mb == manifest {
+            continue;
+        }
+        // reframe: magic + new length + new manifest + untouched remainder
+        // (payload, signature flag, signature), checksum recomputed
+        let mut forged = Vec::with_capacity(original.len());
+        forged.extend_from_slice(&original[..8]);
+        forged.extend_from_slice(&(mb.len() as u64).to_le_bytes());
+        forged.extend_from_slice(&mb);
+        forged.extend_from_slice(&original[16 + mlen..original.len() - 32]);
+        let checksum = hash::sha256(&forged);
+        forged.extend_from_slice(&checksum);
+
+        let err = artifact::verify_bytes(&forged, &opts)
+            .expect_err(&format!("case {case}: a reframed manifest forgery was accepted"));
+        assert!(!err.stage().is_empty(), "case {case}: empty stage");
+    }
+    assert!(artifact::verify_bytes(&original, &opts).is_ok());
+}

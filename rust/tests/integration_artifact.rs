@@ -1,0 +1,334 @@
+//! End-to-end tests for the `.galen` deployment artifact subsystem:
+//! a fixture-session search is packaged, the artifact is loaded back with
+//! full verification, checked against the IR, and its latency claim is
+//! re-measured through the drift gate.  The corruption matrix then proves
+//! the container rejects every truncation, every sampled bit flip, stale
+//! section digests, wrong schema versions, and — on signed artifacts —
+//! consistently-reframed latency-claim tampering, always with a structured
+//! error and never a panic.
+
+use std::path::PathBuf;
+
+use galen::agent::AgentKind;
+use galen::artifact::{
+    self, ArtifactManifest, DriftReport, LatencyClaim, PackInputs, VerifyOptions,
+};
+use galen::artifact::hash;
+use galen::compress::{DiscretePolicy, QuantMode};
+use galen::coordinator::Session;
+use galen::hw::LatencyKind;
+use galen::model::ModelIr;
+use galen::search::{SearchConfig, SearchOutcome};
+use galen::util::rng::Pcg64;
+
+const KEY: &[u8] = b"fleet-key";
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("galen_artifact_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn fixture_session() -> Session {
+    Session::fixture(LatencyKind::Sim, 7).unwrap()
+}
+
+/// A short real search on the fixture session (the artifact's normal
+/// producer).
+fn searched_outcome(session: &Session) -> SearchOutcome {
+    let mut cfg = SearchConfig::fast(AgentKind::Joint, 0.5);
+    cfg.episodes = 6;
+    cfg.warmup_episodes = 2;
+    session.search(&cfg).unwrap()
+}
+
+/// A deterministic mixed policy exercising all three section layouts
+/// (fp32, quantized, pruned) without paying for a search.
+fn mixed_policy(ir: &ModelIr) -> DiscretePolicy {
+    let mut p = DiscretePolicy::reference(ir);
+    for (i, l) in p.layers.iter_mut().enumerate() {
+        l.quant = match i % 3 {
+            0 => QuantMode::Fp32,
+            1 => QuantMode::Int8,
+            _ => QuantMode::Mix { w_bits: 4, a_bits: 8 },
+        };
+        if i % 2 == 0 {
+            l.kept_channels = (l.kept_channels + 1) / 2;
+        }
+    }
+    p
+}
+
+/// Pack `policy` on the fixture session with a claim taken from the actual
+/// simulator measurement, so drift-gate assertions are meaningful.
+fn packed(
+    session: &Session,
+    policy: &DiscretePolicy,
+    key: Option<&[u8]>,
+) -> (artifact::Artifact, Vec<u8>) {
+    let (weights, weights_source) = session.packaging_weights().unwrap();
+    let mut provider = session.latency_provider(7).unwrap();
+    let claim = LatencyClaim {
+        latency_s: provider.latency(&session.ir, policy),
+        base_latency_s: provider.latency(&session.ir, &DiscretePolicy::reference(&session.ir)),
+        backend: provider.backend().to_string(),
+    };
+    let art = artifact::pack(&PackInputs {
+        ir: &session.ir,
+        policy,
+        weights: &weights,
+        weights_source,
+        target: &session.opts.target_hw,
+        claim,
+        profile_cache: "none".to_string(),
+    })
+    .unwrap();
+    let bytes = art.encode(key);
+    (art, bytes)
+}
+
+/// Rebuild a container around a (tampered) manifest, keeping the payload
+/// and signature bytes and recomputing only the trailing checksum —
+/// exactly what an attacker without the HMAC key can do.
+fn reframe(bytes: &[u8], manifest: &ArtifactManifest) -> Vec<u8> {
+    let mut mb = manifest.to_json().pretty(0).into_bytes();
+    mb.push(b'\n');
+    reframe_raw(bytes, &mb)
+}
+
+/// Byte-level variant of [`reframe`] for manifests that are not valid JSON.
+fn reframe_raw(bytes: &[u8], manifest_bytes: &[u8]) -> Vec<u8> {
+    let mlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+    let mend = 16 + mlen;
+    let mut out = Vec::with_capacity(bytes.len());
+    out.extend_from_slice(&bytes[..8]);
+    out.extend_from_slice(&(manifest_bytes.len() as u64).to_le_bytes());
+    out.extend_from_slice(manifest_bytes);
+    out.extend_from_slice(&bytes[mend..bytes.len() - 32]);
+    let checksum = hash::sha256(&out);
+    out.extend_from_slice(&checksum);
+    out
+}
+
+#[test]
+fn packaged_search_round_trips_end_to_end() {
+    let session = fixture_session();
+    let outcome = searched_outcome(&session);
+    let root = tmp_dir("e2e");
+
+    let path = session.package_outcome(&outcome, &root, None).unwrap();
+    assert!(path.starts_with(&root), "artifact landed outside the root: {}", path.display());
+    assert_eq!(path.extension().and_then(|e| e.to_str()), Some("galen"));
+
+    let loaded = artifact::load(&path).unwrap();
+    artifact::check_against_ir(&loaded, &session.ir).unwrap();
+    let m = &loaded.manifest;
+    assert_eq!(m.variant, "tiny");
+    assert_eq!(m.policy, outcome.best_policy);
+    assert_eq!(m.claim.latency_s, outcome.best.latency_s);
+    assert_eq!(m.claim.base_latency_s, outcome.base_latency_s);
+    assert_eq!(m.target_fingerprint, session.opts.target_hw.fingerprint_hex());
+    assert!(!loaded.signature_verified, "unsigned artifact cannot claim a verified signature");
+
+    // the `galen run-artifact` path: re-measure and gate the claim
+    let mut provider = session.latency_provider(7).unwrap();
+    let measured = provider.latency(&session.ir, &m.policy);
+    let report = DriftReport::new(m.claim.latency_s, measured, 0.25);
+    assert!(report.within_tolerance(), "sim re-measurement drifted: {report}");
+
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn packaging_is_deterministic_and_signatures_gate_loading() {
+    let s1 = fixture_session();
+    let outcome = searched_outcome(&s1);
+    let (r1, r2, r3) = (tmp_dir("det1"), tmp_dir("det2"), tmp_dir("det3"));
+
+    let p1 = s1.package_outcome(&outcome, &r1, None).unwrap();
+    let s2 = fixture_session();
+    let p2 = s2.package_outcome(&outcome, &r2, None).unwrap();
+    assert_eq!(p1.file_name(), p2.file_name(), "content-addressed names must agree");
+    assert_eq!(
+        std::fs::read(&p1).unwrap(),
+        std::fs::read(&p2).unwrap(),
+        "identical inputs must produce byte-identical artifacts across sessions"
+    );
+
+    let p3 = s1.package_outcome(&outcome, &r3, Some(KEY)).unwrap();
+    assert_ne!(
+        std::fs::read(&p1).unwrap(),
+        std::fs::read(&p3).unwrap(),
+        "signing must change the bytes"
+    );
+    let strict = VerifyOptions { hmac_key: Some(KEY.to_vec()), require_signature: true };
+    let signed = artifact::load_with(&p3, &strict).unwrap();
+    assert!(signed.signature_verified);
+    assert_eq!(signed.manifest.policy, outcome.best_policy);
+
+    // wrong key and missing signature are both structured rejections
+    let wrong = VerifyOptions { hmac_key: Some(b"wrong".to_vec()), require_signature: true };
+    assert_eq!(artifact::load_with(&p3, &wrong).unwrap_err().stage(), "signature");
+    let unsigned_strict = VerifyOptions { hmac_key: None, require_signature: true };
+    assert_eq!(artifact::load_with(&p1, &unsigned_strict).unwrap_err().stage(), "signature");
+
+    for r in [r1, r2, r3] {
+        std::fs::remove_dir_all(&r).unwrap();
+    }
+}
+
+#[test]
+fn every_truncation_is_rejected_without_panic() {
+    let session = fixture_session();
+    let (_, bytes) = packed(&session, &mixed_policy(&session.ir), None);
+    let opts = VerifyOptions::default();
+    // every byte of the header region, then a stride through the body, then
+    // every byte of the trailer region
+    let mut cuts: Vec<usize> = (0..128.min(bytes.len())).collect();
+    cuts.extend((128..bytes.len()).step_by(23));
+    cuts.extend(bytes.len().saturating_sub(64)..bytes.len());
+    for cut in cuts {
+        assert!(
+            artifact::verify_bytes(&bytes[..cut], &opts).is_err(),
+            "truncation to {cut} of {} bytes was accepted",
+            bytes.len()
+        );
+    }
+    // trailing garbage is also a framing violation, not ignored padding
+    let mut padded = bytes.clone();
+    padded.push(0);
+    assert!(artifact::verify_bytes(&padded, &opts).is_err());
+    assert!(artifact::verify_bytes(&bytes, &opts).is_ok(), "the unmodified artifact must load");
+}
+
+#[test]
+fn sampled_single_bit_flips_are_rejected_with_structured_errors() {
+    let session = fixture_session();
+    let (_, bytes) = packed(&session, &mixed_policy(&session.ir), Some(KEY));
+    let opts = VerifyOptions { hmac_key: Some(KEY.to_vec()), require_signature: true };
+    // dense over the framing-sensitive head and tail, strided over the body
+    let mut offsets: Vec<usize> = (0..64).collect();
+    offsets.extend((64..bytes.len()).step_by(97));
+    offsets.extend(bytes.len() - 70..bytes.len());
+    for (i, &off) in offsets.iter().enumerate() {
+        let mut mutant = bytes.clone();
+        mutant[off] ^= 1 << (i % 8);
+        let err = artifact::verify_bytes(&mutant, &opts)
+            .expect_err(&format!("bit flip at byte {off} was accepted"));
+        assert!(!err.stage().is_empty());
+        assert!(!err.to_string().is_empty(), "error at byte {off} has no message");
+    }
+    assert!(artifact::verify_bytes(&bytes, &opts).is_ok());
+}
+
+#[test]
+fn wrong_schema_version_is_rejected_before_anything_else_is_trusted() {
+    let session = fixture_session();
+    let (art, bytes) = packed(&session, &mixed_policy(&session.ir), None);
+    let mut m = art.manifest.clone();
+    m.schema_version = 999;
+    let err = artifact::verify_bytes(&reframe(&bytes, &m), &VerifyOptions::default())
+        .expect_err("unknown schema version was accepted");
+    assert_eq!(err.stage(), "schema", "got: {err}");
+    assert!(err.to_string().contains("999"), "error must name the found version: {err}");
+}
+
+#[test]
+fn stale_section_digest_is_rejected() {
+    let session = fixture_session();
+    let (art, bytes) = packed(&session, &mixed_policy(&session.ir), None);
+    let mut m = art.manifest.clone();
+    m.sections.values_mut().next().unwrap().sha256 = "0".repeat(64);
+    let err = artifact::verify_bytes(&reframe(&bytes, &m), &VerifyOptions::default())
+        .expect_err("stale section digest was accepted");
+    assert_eq!(err.stage(), "section", "got: {err}");
+}
+
+#[test]
+fn tampered_latency_claim_is_caught() {
+    let session = fixture_session();
+    let policy = mixed_policy(&session.ir);
+
+    // on a signed artifact, a consistent reframe (manifest rewritten, file
+    // checksum recomputed, original signature kept) dies at the signature
+    let (sart, sbytes) = packed(&session, &policy, Some(KEY));
+    let mut m = sart.manifest.clone();
+    m.claim.latency_s *= 4.0;
+    let strict = VerifyOptions { hmac_key: Some(KEY.to_vec()), require_signature: true };
+    let err = artifact::verify_bytes(&reframe(&sbytes, &m), &strict)
+        .expect_err("signed artifact with a rewritten claim was accepted");
+    assert_eq!(err.stage(), "signature", "got: {err}");
+
+    // an unsigned artifact cannot protect its claim cryptographically —
+    // the reframe loads — but the drift gate still fails the deployment
+    let (uart, ubytes) = packed(&session, &policy, None);
+    let mut m = uart.manifest.clone();
+    m.claim.latency_s *= 4.0;
+    let loaded = artifact::verify_bytes(&reframe(&ubytes, &m), &VerifyOptions::default()).unwrap();
+    let mut provider = session.latency_provider(7).unwrap();
+    let measured = provider.latency(&session.ir, &loaded.manifest.policy);
+    let report = DriftReport::new(loaded.manifest.claim.latency_s, measured, 0.25);
+    assert!(
+        !report.within_tolerance(),
+        "a 4x-inflated claim must fail the drift gate: {report}"
+    );
+}
+
+#[test]
+fn prop_pack_verify_roundtrip_is_bit_exact() {
+    let session = fixture_session();
+    let (weights, weights_source) = session.packaging_weights().unwrap();
+    let gen = |rng: &mut Pcg64| {
+        let mut p = DiscretePolicy::reference(&session.ir);
+        for (l, cmp) in session.ir.layers.iter().zip(p.layers.iter_mut()) {
+            cmp.kept_channels = 1 + rng.below(l.cout);
+            cmp.quant = match rng.below(3) {
+                0 => QuantMode::Fp32,
+                1 => QuantMode::Int8,
+                _ => QuantMode::Mix { w_bits: 2 + rng.below(7) as u8, a_bits: 8 },
+            };
+        }
+        p
+    };
+    galen::testing::forall(
+        galen::testing::Config { cases: 24, seed: 0xA27_1F },
+        gen,
+        |policy| {
+            let art = artifact::pack(&PackInputs {
+                ir: &session.ir,
+                policy,
+                weights: &weights,
+                weights_source: weights_source.clone(),
+                target: &session.opts.target_hw,
+                claim: LatencyClaim {
+                    latency_s: 2.5e-3,
+                    base_latency_s: 4.0e-3,
+                    backend: "sim".to_string(),
+                },
+                profile_cache: "none".to_string(),
+            })
+            .map_err(|e| format!("pack failed: {e:#}"))?;
+            let bytes = art.encode(None);
+            let loaded = artifact::verify_bytes(&bytes, &VerifyOptions::default())
+                .map_err(|e| format!("verify failed: {e}"))?;
+            artifact::check_against_ir(&loaded, &session.ir)
+                .map_err(|e| format!("ir check failed: {e}"))?;
+            if loaded.manifest != art.manifest {
+                return Err("manifest did not round-trip losslessly".to_string());
+            }
+            if loaded.payload != art.payload {
+                return Err("payload did not round-trip bit-exactly".to_string());
+            }
+            let re = artifact::Artifact {
+                manifest: loaded.manifest,
+                payload: loaded.payload,
+            }
+            .encode(None);
+            if re != bytes {
+                return Err("re-encoding the loaded artifact changed bytes".to_string());
+            }
+            Ok(())
+        },
+    );
+}
