@@ -6,8 +6,11 @@
 //!   * replay buffer sampling
 //!   * policy -> runtime-input packing (masks + ℓ1 ranking)
 //!   * JSON parse of a meta manifest
-//!   * i8 vs f32 GEMM (the measured-latency profiler's kernel substrate)
-//!   * depthwise i8 vs f32 conv (the mobilenetv2s kernel substrate)
+//!   * i8 vs f32 GEMM (the measured-latency profiler's kernel substrate),
+//!     under the shipped SIMD dispatch and with the scalar oracle forced —
+//!     the per-kernel speedups land in the JSON meta block
+//!   * depthwise i8 vs f32 conv (the mobilenetv2s kernel substrate), same
+//!     auto/scalar twin structure
 //!   * parallel sweep orchestrator vs the 1-worker sweep (speedup + the
 //!     front-equality determinism verdict, emitted into the JSON meta)
 //!   * search driver vs the pre-driver monolith shape: `run_search` (no
@@ -30,6 +33,7 @@ use galen::model::ir::test_fixtures::tiny_meta;
 use galen::model::{LayerKind, ModelIr};
 use galen::tensor::depthwise::{conv_dw_f32, conv_dw_i8, QuantizedDwWeights};
 use galen::tensor::quant::{gemm_i8, gemm_i8_packed, QuantizedMat, QuantizedTensor};
+use galen::tensor::simd::{self, SimdMode};
 use galen::tensor::Mat;
 use galen::util::rng::Pcg64;
 
@@ -264,7 +268,18 @@ fn main() {
     // a mid-sized resnet18s layer.  All three kernels run serially so the
     // numbers track kernel quality, not thread-pool behavior.  The i8
     // entries include the per-call dynamic activation quantize, exactly as
-    // the profiler times them.
+    // the profiler times them.  Each kernel runs twice: under the shipped
+    // `GALEN_SIMD=auto` dispatch (the unsuffixed labels the bench gate
+    // tracks) and with the scalar oracle forced, so the emitted meta block
+    // carries the measured SIMD speedups.  Results are bit-identical
+    // either way — only the timings differ.
+    let prev_mode = simd::mode();
+    simd::set_mode(SimdMode::Auto);
+    let tile = simd::autotune();
+    simd::set_tile_config(tile);
+    let simd_isa = simd::isa_label().to_string();
+    println!("kernel dispatch: {simd_isa} (tile kc={} mc={} par_min_macs={})",
+        tile.kc, tile.mc, tile.par_min_macs);
     let (gm, gk, gn) = (64, 576, 64);
     let mut ga = Mat::zeros(gm, gk);
     let mut gw = Mat::zeros(gk, gn);
@@ -272,27 +287,56 @@ fn main() {
         *x = rrng.next_f32() * 2.0 - 1.0;
     }
     let mut gout = Mat::zeros(gm, gn);
-    b.iter("tensor/i8_vs_f32_gemm/f32 64x576x64", || {
-        ga.matmul_into_threaded(&gw, &mut gout, 1)
-    });
+    let f32_auto_ns = b
+        .iter("tensor/i8_vs_f32_gemm/f32 64x576x64", || {
+            ga.matmul_into_threaded(&gw, &mut gout, 1)
+        })
+        .median_ns();
     let qw = QuantizedMat::quantize_per_channel(&gw);
     let packed = qw.pack();
     let mut qa = QuantizedTensor::quantize(&ga);
     let mut acc: Vec<i32> = Vec::new();
-    b.iter("tensor/i8_vs_f32_gemm/i8 64x576x64", || {
-        qa.requantize(&ga);
-        gemm_i8(&qa, &qw, &mut acc, &mut gout);
-    });
-    b.iter("tensor/i8_vs_f32_gemm/i8_packed 64x576x64", || {
-        qa.requantize(&ga);
-        gemm_i8_packed(&qa, &packed, &mut acc, &mut gout);
-    });
+    let i8_auto_ns = b
+        .iter("tensor/i8_vs_f32_gemm/i8 64x576x64", || {
+            qa.requantize(&ga);
+            gemm_i8(&qa, &qw, &mut acc, &mut gout);
+        })
+        .median_ns();
+    let i8_packed_auto_ns = b
+        .iter("tensor/i8_vs_f32_gemm/i8_packed 64x576x64", || {
+            qa.requantize(&ga);
+            gemm_i8_packed(&qa, &packed, &mut acc, &mut gout);
+        })
+        .median_ns();
+    simd::set_mode(SimdMode::Scalar);
+    let f32_scalar_ns = b
+        .iter("tensor/i8_vs_f32_gemm/f32 64x576x64 (scalar oracle)", || {
+            ga.matmul_into_threaded(&gw, &mut gout, 1)
+        })
+        .median_ns();
+    let i8_scalar_ns = b
+        .iter("tensor/i8_vs_f32_gemm/i8 64x576x64 (scalar oracle)", || {
+            qa.requantize(&ga);
+            gemm_i8(&qa, &qw, &mut acc, &mut gout);
+        })
+        .median_ns();
+    let i8_packed_scalar_ns = b
+        .iter(
+            "tensor/i8_vs_f32_gemm/i8_packed 64x576x64 (scalar oracle)",
+            || {
+                qa.requantize(&ga);
+                gemm_i8_packed(&qa, &packed, &mut acc, &mut gout);
+            },
+        )
+        .median_ns();
+    simd::set_mode(SimdMode::Auto);
 
     // ---- depthwise i8 vs f32 (mobilenetv2s kernel substrate) ----
     // 96 channels at 16x16, 3x3 stride 1 — the s1b1.dw shape of the zoo's
     // mobilenetv2s.  Both kernels are serial by construction; the i8 entry
     // includes the per-call dynamic activation quantize, exactly as the
-    // measured-latency profiler times depthwise configs.
+    // measured-latency profiler times depthwise configs.  Scalar-forced
+    // twins follow the auto entries, as in the GEMM section.
     let (dc, dsp) = (96usize, 16usize);
     let mut din = Mat::zeros(dc, dsp * dsp);
     let mut dw_w = vec![0.0f32; dc * 9];
@@ -300,15 +344,42 @@ fn main() {
         *x = rrng.next_f32() * 2.0 - 1.0;
     }
     let mut dout = vec![0.0f32; dc * dsp * dsp];
-    b.iter("tensor/depthwise_i8_vs_f32/f32 96x16x16 k3", || {
-        conv_dw_f32(&din.data, dc, dsp, dsp, 3, 1, &dw_w, &mut dout)
-    });
+    let dw_f32_auto_ns = b
+        .iter("tensor/depthwise_i8_vs_f32/f32 96x16x16 k3", || {
+            conv_dw_f32(&din.data, dc, dsp, dsp, 3, 1, &dw_w, &mut dout)
+        })
+        .median_ns();
     let qdw = QuantizedDwWeights::quantize(&dw_w, dc, 3);
     let mut qdin = QuantizedTensor::quantize(&din);
-    b.iter("tensor/depthwise_i8_vs_f32/i8 96x16x16 k3", || {
-        qdin.requantize(&din);
-        conv_dw_i8(&qdin.data, qdin.scale, dc, dsp, dsp, 1, &qdw, &mut dout);
-    });
+    let dw_i8_auto_ns = b
+        .iter("tensor/depthwise_i8_vs_f32/i8 96x16x16 k3", || {
+            qdin.requantize(&din);
+            conv_dw_i8(&qdin.data, qdin.scale, dc, dsp, dsp, 1, &qdw, &mut dout);
+        })
+        .median_ns();
+    simd::set_mode(SimdMode::Scalar);
+    let dw_f32_scalar_ns = b
+        .iter("tensor/depthwise_i8_vs_f32/f32 96x16x16 k3 (scalar oracle)", || {
+            conv_dw_f32(&din.data, dc, dsp, dsp, 3, 1, &dw_w, &mut dout)
+        })
+        .median_ns();
+    let dw_i8_scalar_ns = b
+        .iter("tensor/depthwise_i8_vs_f32/i8 96x16x16 k3 (scalar oracle)", || {
+            qdin.requantize(&din);
+            conv_dw_i8(&qdin.data, qdin.scale, dc, dsp, dsp, 1, &qdw, &mut dout);
+        })
+        .median_ns();
+    simd::set_mode(prev_mode);
+    let simd_f32_gemm_speedup = f32_scalar_ns / f32_auto_ns;
+    let simd_i8_gemm_speedup = i8_scalar_ns / i8_auto_ns;
+    let simd_i8_packed_speedup = i8_packed_scalar_ns / i8_packed_auto_ns;
+    let simd_dw_f32_speedup = dw_f32_scalar_ns / dw_f32_auto_ns;
+    let simd_dw_i8_speedup = dw_i8_scalar_ns / dw_i8_auto_ns;
+    println!(
+        "SIMD speedups vs scalar oracle ({simd_isa}): f32 gemm {simd_f32_gemm_speedup:.2}x, \
+         i8 gemm {simd_i8_gemm_speedup:.2}x, i8 packed {simd_i8_packed_speedup:.2}x, \
+         dw f32 {simd_dw_f32_speedup:.2}x, dw i8 {simd_dw_i8_speedup:.2}x"
+    );
 
     // ---- JSON manifest parse ----
     let meta_path = galen::artifacts_dir().join("meta_resnet18s.json");
@@ -342,6 +413,15 @@ fn main() {
             ),
             ("obs_overhead_pct", format!("{obs_overhead_pct:.3}")),
             ("obs_overhead_ok", (obs_overhead_pct < 2.0).to_string()),
+            ("simd_isa", simd_isa),
+            ("tile_kc", tile.kc.to_string()),
+            ("tile_mc", tile.mc.to_string()),
+            ("tile_par_min_macs", tile.par_min_macs.to_string()),
+            ("simd_f32_gemm_speedup", format!("{simd_f32_gemm_speedup:.3}")),
+            ("simd_i8_gemm_speedup", format!("{simd_i8_gemm_speedup:.3}")),
+            ("simd_i8_packed_speedup", format!("{simd_i8_packed_speedup:.3}")),
+            ("simd_dw_f32_speedup", format!("{simd_dw_f32_speedup:.3}")),
+            ("simd_dw_i8_speedup", format!("{simd_dw_i8_speedup:.3}")),
         ],
     )
     .expect("write BENCH_hot_paths.json");

@@ -235,6 +235,11 @@ pub struct MeasuredProfiler {
     loaded: usize,
     degraded: u64,
     dirty: bool,
+    /// Autotuned kernel tile config for this host/target (Some for
+    /// disk-backed profilers: loaded from the manifest, or measured once
+    /// by `tensor::simd::autotune` and persisted — zero re-tune on the
+    /// second run).
+    tile: Option<crate::tensor::simd::TileConfig>,
 }
 
 impl MeasuredProfiler {
@@ -255,6 +260,7 @@ impl MeasuredProfiler {
             loaded: 0,
             degraded: 0,
             dirty: false,
+            tile: None,
         }
     }
 
@@ -275,7 +281,12 @@ impl MeasuredProfiler {
     }
 
     /// Profiler backed by `dir/<target>/<model>.json`; loads any existing
-    /// manifest whose schema version and target fingerprint match.
+    /// manifest whose schema version, target fingerprint, and host kernel
+    /// ISA match.  If the manifest carries no tile config (fresh cache, or
+    /// one recorded by an older session), the kernel autotuner runs once
+    /// here and the winner is persisted with the measurements — so every
+    /// later `bench_layer` times the tuned kernels and second runs re-tune
+    /// nothing.
     pub fn with_cache(
         target: HwTarget,
         model: &str,
@@ -297,6 +308,7 @@ impl MeasuredProfiler {
                 }
                 Err(e) => {
                     p.entries.clear(); // drop any partially loaded state
+                    p.tile = None;
                     log::warn!(
                         "profile cache {} ignored ({e:#}); starting empty",
                         path.display()
@@ -304,7 +316,22 @@ impl MeasuredProfiler {
                 }
             }
         }
+        match p.tile {
+            Some(t) => crate::tensor::simd::set_tile_config(t),
+            None => {
+                let t = crate::tensor::simd::autotune();
+                crate::tensor::simd::set_tile_config(t);
+                p.tile = Some(t);
+                p.dirty = true; // persist the tuning with the measurements
+            }
+        }
         Ok(p)
+    }
+
+    /// The kernel tile config this profiler runs under (None for in-memory
+    /// profilers, which never autotune).
+    pub fn tile_config(&self) -> Option<crate::tensor::simd::TileConfig> {
+        self.tile
     }
 
     /// The hardware target whose kernel selection this profiler mirrors.
@@ -532,7 +559,7 @@ impl MeasuredProfiler {
                 ]),
             );
         }
-        let manifest = Json::obj(vec![
+        let mut fields = vec![
             ("schema_version", Json::num(PROFILE_SCHEMA_VERSION as f64)),
             ("model", Json::str(self.model.clone())),
             ("target", Json::str(self.cost.target.name.clone())),
@@ -541,7 +568,29 @@ impl MeasuredProfiler {
                 Json::str(format!("{:016x}", target_fingerprint(&self.cost.target))),
             ),
             ("entries", Json::Obj(entries)),
-        ]);
+        ];
+        // Optional tuning provenance (same schema version — old readers
+        // ignore unknown keys).  `host_isa` guards the measurements: a
+        // cache timed under one kernel backend must not feed latencies to
+        // another, so loads reject on mismatch.  The tile config is NOT
+        // part of the target fingerprint — it is a host-side perf hint,
+        // never results-affecting, and artifacts must stay byte-identical
+        // across dispatch modes.
+        if let Some(t) = self.tile {
+            fields.push((
+                "tile",
+                Json::obj(vec![
+                    ("kc", Json::num(t.kc as f64)),
+                    ("mc", Json::num(t.mc as f64)),
+                    ("par_min_macs", Json::num(t.par_min_macs as f64)),
+                ]),
+            ));
+            fields.push((
+                "host_isa",
+                Json::str(crate::tensor::simd::isa_label().to_string()),
+            ));
+        }
+        let manifest = Json::obj(fields);
         self.faults.trip("profile-write")?;
         // atomic: a crash mid-write must leave the previous manifest (or
         // nothing), never a truncated one for the next session to choke on
@@ -562,6 +611,24 @@ impl MeasuredProfiler {
             j.req_str("target_fingerprint")? == fp,
             "target fingerprint mismatch (target parameters changed)"
         );
+        if let Some(hi) = j.get("host_isa").and_then(Json::as_str) {
+            anyhow::ensure!(
+                hi == crate::tensor::simd::isa_label(),
+                "host ISA mismatch (cache measured under '{hi}', kernels now \
+                 dispatch to '{}')",
+                crate::tensor::simd::isa_label()
+            );
+        }
+        if let Some(t) = j.get("tile") {
+            self.tile = Some(
+                crate::tensor::simd::TileConfig {
+                    kc: t.req_usize("kc")?,
+                    mc: t.req_usize("mc")?,
+                    par_min_macs: t.req_usize("par_min_macs")?,
+                }
+                .sanitized(),
+            );
+        }
         let entries = j
             .req("entries")?
             .as_obj()
@@ -953,6 +1020,87 @@ mod tests {
         // float_only changes the directory (name changed) -> empty cache;
         // force the same path by writing a manifest with the wrong target
         assert_eq!(p3.unwrap().stats().loaded, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The autotune contract: a disk-backed profiler tunes once, persists
+    /// the tile next to the fingerprint, and a second run loads it without
+    /// re-tuning; a cache measured under a different kernel ISA is
+    /// rejected wholesale (its latencies timed different kernels).
+    #[test]
+    fn tile_config_is_persisted_and_not_retuned() {
+        let _g = crate::tensor::simd::TEST_GLOBALS_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let saved_tile = crate::tensor::simd::tile_config();
+        let dir = std::env::temp_dir().join(format!("galen_profiler_tile_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut p1 = MeasuredProfiler::with_cache(
+            HwTarget::cortex_a72(),
+            "tiny",
+            ProfilerConfig::fast(),
+            &dir,
+        )
+        .unwrap();
+        let tile = p1.tile_config().expect("disk-backed profilers autotune");
+        assert_eq!(tile.kc % 4, 0);
+        assert!(fast_profiler().tile_config().is_none(), "in-memory: no autotune");
+        let path = p1.save().unwrap().expect("disk-backed");
+
+        let manifest = Json::read_file(&path).unwrap();
+        assert!(manifest.get("tile").is_some(), "tile must be persisted");
+        assert_eq!(
+            manifest.get("host_isa").and_then(Json::as_str),
+            Some(crate::tensor::simd::isa_label())
+        );
+
+        // Plant a distinctive (results-neutral) tile in the manifest: the
+        // only way a second run can come up with it is by loading it, so
+        // this proves zero-re-tune even though autotune() is memoized.
+        let planted = crate::tensor::simd::TileConfig { kc: 12, mc: 7, par_min_macs: 999_424 };
+        let mut j = manifest;
+        if let Json::Obj(m) = &mut j {
+            m.insert(
+                "tile".into(),
+                Json::obj(vec![
+                    ("kc", Json::num(planted.kc as f64)),
+                    ("mc", Json::num(planted.mc as f64)),
+                    ("par_min_macs", Json::num(planted.par_min_macs as f64)),
+                ]),
+            );
+        }
+        j.write_file_atomic(&path).unwrap();
+        let runs = crate::tensor::simd::autotune_runs();
+        let p2 = MeasuredProfiler::with_cache(
+            HwTarget::cortex_a72(),
+            "tiny",
+            ProfilerConfig::fast(),
+            &dir,
+        )
+        .unwrap();
+        assert_eq!(
+            p2.tile_config(),
+            Some(planted),
+            "second run must load the persisted tile, not re-tune"
+        );
+        assert_eq!(crate::tensor::simd::autotune_runs(), runs);
+
+        // tamper the recorded ISA: the whole cache must be rejected
+        if let Json::Obj(m) = &mut j {
+            m.insert("host_isa".into(), Json::str("mips-msa"));
+        }
+        j.write_file_atomic(&path).unwrap();
+        let p3 = MeasuredProfiler::with_cache(
+            HwTarget::cortex_a72(),
+            "tiny",
+            ProfilerConfig::fast(),
+            &dir,
+        )
+        .unwrap();
+        assert_eq!(p3.stats().loaded, 0, "foreign-ISA cache must not be loaded");
+        assert_ne!(p3.tile_config(), Some(planted), "rejected cache must not supply the tile");
+
+        crate::tensor::simd::set_tile_config(saved_tile);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -92,6 +92,13 @@ impl HwTarget {
     /// Hex form of the profiler's capability fingerprint — the same value
     /// that invalidates profile caches guards artifact manifests against
     /// replaying a latency claim on a differently-configured target.
+    ///
+    /// Host-side kernel properties (dispatch ISA, autotuned tile config)
+    /// are deliberately *not* part of the fingerprint: they never change
+    /// what the kernels compute, and folding them in would make `.galen`
+    /// artifacts differ byte-for-byte across `GALEN_SIMD` modes.  The
+    /// profile-cache manifest records the host ISA separately and rejects
+    /// caches measured under a different kernel backend.
     pub fn fingerprint_hex(&self) -> String {
         format!("{:016x}", super::profiler::target_fingerprint(self))
     }

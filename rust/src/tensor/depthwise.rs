@@ -74,9 +74,29 @@ impl QuantizedDwWeights {
 /// channel-major, zero-padded by `kernel / 2`.
 ///
 /// Determinism contract: per output element the (ky, kx) taps accumulate in
-/// ascending fixed order (shared with the i8 kernel).
+/// ascending fixed order (shared with the i8 kernel).  Dispatches to the
+/// active SIMD ISA (`tensor::simd`) at stride 1 — SIMD output is
+/// bit-identical to the scalar oracle; other strides always run scalar.
 #[allow(clippy::too_many_arguments)]
 pub fn conv_dw_f32(
+    input: &[f32],
+    channels: usize,
+    in_sp: usize,
+    out_sp: usize,
+    kernel: usize,
+    stride: usize,
+    weights: &[f32],
+    out: &mut [f32],
+) {
+    let isa = super::simd::dispatch(super::simd::Kernel::DwF32);
+    super::simd::conv_dw_f32(
+        isa, input, channels, in_sp, out_sp, kernel, stride, weights, out,
+    );
+}
+
+/// Scalar oracle of [`conv_dw_f32`] (also the path for strides != 1).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv_dw_f32_scalar(
     input: &[f32],
     channels: usize,
     in_sp: usize,
@@ -122,9 +142,29 @@ pub fn conv_dw_f32(
 /// `out = (q_in (*) q_w) * a_scale * w_scale[c]` — i8 taps accumulated in
 /// i32 per output element (exact), scales applied once per element.  Taps
 /// visit the identical (ky, kx) order as [`conv_dw_f32`], so the result is
-/// exactly the f32 conv of the dequantized operands.
+/// exactly the f32 conv of the dequantized operands.  Dispatches to the
+/// active SIMD ISA (`tensor::simd`) at stride 1 (exact — integer
+/// accumulation); other strides always run scalar.
 #[allow(clippy::too_many_arguments)]
 pub fn conv_dw_i8(
+    input: &[i8],
+    a_scale: f32,
+    channels: usize,
+    in_sp: usize,
+    out_sp: usize,
+    stride: usize,
+    w: &QuantizedDwWeights,
+    out: &mut [f32],
+) {
+    let isa = super::simd::dispatch(super::simd::Kernel::DwI8);
+    super::simd::conv_dw_i8(
+        isa, input, a_scale, channels, in_sp, out_sp, stride, w, out,
+    );
+}
+
+/// Scalar oracle of [`conv_dw_i8`] (also the path for strides != 1).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv_dw_i8_scalar(
     input: &[i8],
     a_scale: f32,
     channels: usize,

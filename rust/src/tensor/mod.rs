@@ -18,25 +18,41 @@
 pub mod depthwise;
 /// Quantized tensor types and the i8 GEMM kernels.
 pub mod quant;
+/// Runtime-dispatched SIMD kernels (AVX2/NEON) with the scalar kernels in
+/// this file as the bit-exactness oracle, plus the tile autotuner.
+pub mod simd;
 
 use crate::util::{num_threads, parallel_row_blocks};
 
-/// K-panel height of the blocked GEMM: a `KC x n` slab of the right-hand
-/// matrix is streamed repeatedly while it is still cache-resident.  Shared
-/// with the quantized integer kernels in `quant`.
+/// K-panel height of the blocked *scalar* GEMM: a `KC x n` slab of the
+/// right-hand matrix is streamed repeatedly while it is still
+/// cache-resident.  Shared with the scalar quantized kernels in `quant`.
+/// The SIMD kernels read their (autotuned) panel height from
+/// `simd::TileConfig` instead; the scalar oracle keeps this fixed constant
+/// so its output — the reference every SIMD path must match bit-for-bit —
+/// never shifts under tuning.
 const KC: usize = 256;
 
-/// Minimum MAC count before the row-parallel path amortizes its scoped
-/// threads (thread spawn is ~tens of microseconds; below this the serial
-/// kernel wins).
-const PAR_MIN_MACS: usize = 1 << 21;
-
-/// Worker count for a GEMM of `macs` multiply-accumulates: scaled so every
-/// thread gets at least ~`PAR_MIN_MACS` of work (a just-over-threshold GEMM
-/// must not fan out to a many-core machine's full width, where per-call
-/// thread-spawn overhead would dominate the kernel).
+/// Worker count for a GEMM of `macs` multiply-accumulates, scaled so every
+/// thread gets at least ~`par_min_macs` of work (thread spawn is ~tens of
+/// microseconds; a just-over-threshold GEMM must not fan out to a
+/// many-core machine's full width, where per-call spawn overhead would
+/// dominate the kernel).
+///
+/// The threshold comes from the autotuned `simd::TileConfig` (measured per
+/// target at first profiler use; `1 << 21` as the untuned default — the
+/// historical compile-time constant).  The old
+/// `(macs / PAR_MIN_MACS).clamp(1, ..)` formula left every GEMM with
+/// `t <= macs < 2t` on a single worker; now the crossover goes straight to
+/// two workers.  Worker count never affects results (each worker owns
+/// disjoint output rows), so the threshold is a pure perf knob.
 fn gemm_workers(macs: usize) -> usize {
-    (macs / PAR_MIN_MACS).clamp(1, num_threads())
+    let t = simd::tile_config().par_min_macs.max(1);
+    if macs < t {
+        1
+    } else {
+        (macs / t).max(2).min(num_threads())
+    }
 }
 
 /// Rows `r0..` of `A @ B` into `out_block` (`A` is `m x k_dim`, `B` is
@@ -264,12 +280,15 @@ impl Mat {
 
     /// `matmul_into` with an explicit worker count (1 = serial).  Exposed so
     /// tests and benches can assert thread-count determinism directly.
+    /// Dispatches to the active SIMD ISA (`tensor::simd`); bit-identical to
+    /// the scalar kernel for any ISA and worker count.
     pub fn matmul_into_threaded(&self, other: &Mat, out: &mut Mat, workers: usize) {
         assert_eq!(self.cols, other.rows, "matmul inner dim");
         out.reshape_to(self.rows, other.cols);
         let (k, n) = (self.cols, other.cols);
+        let isa = simd::dispatch(simd::Kernel::GemmF32);
         parallel_row_blocks(&mut out.data, self.rows, workers, |r0, block| {
-            gemm_rows(&self.data, k, &other.data, n, r0, block);
+            simd::gemm_rows(isa, &self.data, k, &other.data, n, r0, block);
         });
     }
 
@@ -291,8 +310,9 @@ impl Mat {
         assert_eq!(self.rows, other.rows, "t_matmul outer dim");
         out.reshape_to(self.cols, other.cols);
         let (ka, n, m) = (self.cols, other.cols, self.rows);
+        let isa = simd::dispatch(simd::Kernel::TGemmF32);
         parallel_row_blocks(&mut out.data, self.cols, workers, |i0, block| {
-            t_gemm_rows(&self.data, ka, &other.data, n, m, i0, block);
+            simd::t_gemm_rows(isa, &self.data, ka, &other.data, n, m, i0, block);
         });
     }
 
@@ -314,8 +334,9 @@ impl Mat {
         assert_eq!(self.cols, other.cols, "matmul_t inner dim");
         out.reshape_to(self.rows, other.rows);
         let (k, b_rows) = (self.cols, other.rows);
+        let isa = simd::dispatch(simd::Kernel::GemmTF32);
         parallel_row_blocks(&mut out.data, self.rows, workers, |r0, block| {
-            gemm_t_rows(&self.data, k, &other.data, b_rows, r0, block);
+            simd::gemm_t_rows(isa, &self.data, k, &other.data, b_rows, r0, block);
         });
     }
 
@@ -555,6 +576,25 @@ mod tests {
                 assert_eq!(s.data, p.data, "matmul_t {rows}x{k}x{n} w={workers}");
             }
         }
+    }
+
+    /// The dispatch-threshold fix: a GEMM at or just above `par_min_macs`
+    /// goes straight to two workers (the old formula kept everything in
+    /// `[t, 2t)` serial), and the threshold follows the tile config.
+    #[test]
+    fn gemm_workers_crossover_uses_tile_config() {
+        if num_threads() < 2 {
+            return; // GALEN_NUM_THREADS=1: everything is serial by design
+        }
+        let _g = simd::TEST_GLOBALS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = simd::tile_config();
+        let t = 1 << 20;
+        simd::set_tile_config(simd::TileConfig { par_min_macs: t, ..prev });
+        assert_eq!(gemm_workers(t - 1), 1, "below threshold stays serial");
+        assert_eq!(gemm_workers(t), 2, "crossover goes parallel immediately");
+        assert_eq!(gemm_workers(2 * t - 1), 2);
+        assert!(gemm_workers(64 * t) <= num_threads());
+        simd::set_tile_config(prev);
     }
 
     #[test]

@@ -20,6 +20,11 @@
 //!
 //! Accumulator safety: |q| <= 127, so one product is <= 16129 and a k-deep
 //! sum fits i32 for any k < 2^31 / 16129 ≈ 133k — far beyond any layer here.
+//!
+//! Both integer entries dispatch through `tensor::simd` (AVX2/NEON when
+//! detected, `GALEN_SIMD` to override); the scalar cores stay verbatim as
+//! the `*_scalar` oracles.  Integer accumulation is associative, so every
+//! ISA returns the identical `out` — equality, not tolerance.
 
 use super::{Mat, KC};
 
@@ -205,10 +210,17 @@ impl PackedRhsI8 {
 }
 
 /// Integer core: `out[m x n] = a[m x k] @ b[k x n]` in i32, row-major i8
-/// operands.  Same i-k-j loop, `KC` k-panels and 4-wide unroll as the f32
-/// `gemm_rows` kernel; per output element the k contributions accumulate in
-/// ascending order in fixed groups of four.
+/// operands.  Dispatches to the active SIMD ISA (`tensor::simd`); integer
+/// accumulation is exact, so every ISA produces the identical result.
 pub fn gemm_i8_i32(a: &[i8], k: usize, b: &[i8], n: usize, out: &mut [i32]) {
+    let isa = super::simd::dispatch(super::simd::Kernel::GemmI8);
+    super::simd::gemm_i8_i32(isa, a, k, b, n, out);
+}
+
+/// Scalar oracle of [`gemm_i8_i32`]: same i-k-j loop, `KC` k-panels and
+/// 4-wide unroll as the f32 `gemm_rows` kernel; per output element the k
+/// contributions accumulate in ascending order in fixed groups of four.
+pub(crate) fn gemm_i8_i32_scalar(a: &[i8], k: usize, b: &[i8], n: usize, out: &mut [i32]) {
     out.fill(0);
     if n == 0 || k == 0 {
         return;
@@ -250,7 +262,15 @@ pub fn gemm_i8_i32(a: &[i8], k: usize, b: &[i8], n: usize, out: &mut [i32]) {
 
 /// Integer core over a packed RHS: bit-identical to `gemm_i8_i32` on the
 /// same logical operands (zero-padded tail rows contribute nothing).
+/// Dispatches to the active SIMD ISA (`tensor::simd`).
 pub fn gemm_i8_packed_i32(a: &[i8], k: usize, packed: &PackedRhsI8, out: &mut [i32]) {
+    assert_eq!(packed.k, k, "packed k mismatch");
+    let isa = super::simd::dispatch(super::simd::Kernel::GemmI8Packed);
+    super::simd::gemm_i8_packed_i32(isa, a, k, packed, out);
+}
+
+/// Scalar oracle of [`gemm_i8_packed_i32`].
+pub(crate) fn gemm_i8_packed_i32_scalar(a: &[i8], k: usize, packed: &PackedRhsI8, out: &mut [i32]) {
     assert_eq!(packed.k, k, "packed k mismatch");
     let n = packed.n;
     out.fill(0);

@@ -1,0 +1,539 @@
+//! AVX2 kernel bodies (x86_64, runtime-dispatched by `tensor::simd`).
+//!
+//! Every f32 kernel here mirrors its scalar oracle loop-for-loop: SIMD
+//! lanes run across the `n`/output-column dimension, each lane evaluating
+//! the scalar per-element expression with separate `_mm256_mul_ps` /
+//! `_mm256_add_ps` instructions (no FMA — fusing would skip the
+//! intermediate rounding the scalar kernels perform), so results are
+//! bit-identical to scalar for every shape.  The i8 kernels accumulate in
+//! i32 where addition is associative, so their reductions use the wider
+//! tricks (`_mm256_madd_epi16` pair sums) freely — equal to scalar by
+//! exact integer arithmetic.
+//!
+//! Safety: every function is `#[target_feature(enable = "avx2")]` and must
+//! only be called after `is_x86_feature_detected!("avx2")` succeeded —
+//! `tensor::simd::dispatch` guarantees that.  All loads/stores are
+//! unaligned-safe (`loadu`/`storeu`) and stay inside the slice bounds
+//! checked by the vector-width guards.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use std::arch::x86_64::*;
+
+use super::super::depthwise::QuantizedDwWeights;
+
+/// Rows `r0..` of `A @ B` (bit-identical to `tensor::gemm_rows`), with
+/// explicit tile parameters: `kc` k-panels (multiple of 4 — the caller
+/// sanitizes) and `mc` row sub-blocks.
+///
+/// # Safety
+/// Requires AVX2 (runtime-detected by the dispatcher).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn gemm_rows(
+    a: &[f32],
+    k_dim: usize,
+    b: &[f32],
+    n: usize,
+    r0: usize,
+    out_block: &mut [f32],
+    kc: usize,
+    mc: usize,
+) {
+    out_block.fill(0.0);
+    if n == 0 || k_dim == 0 {
+        return;
+    }
+    let rows = out_block.len() / n;
+    for k0 in (0..k_dim).step_by(kc) {
+        let k1 = (k0 + kc).min(k_dim);
+        for i0 in (0..rows).step_by(mc) {
+            let i1 = (i0 + mc).min(rows);
+            for i in i0..i1 {
+                let arow = &a[(r0 + i) * k_dim..(r0 + i) * k_dim + k_dim];
+                let orow = &mut out_block[i * n..(i + 1) * n];
+                let op = orow.as_mut_ptr();
+                let mut k = k0;
+                while k + 4 <= k1 {
+                    let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
+                    let (va0, va1) = (_mm256_set1_ps(a0), _mm256_set1_ps(a1));
+                    let (va2, va3) = (_mm256_set1_ps(a2), _mm256_set1_ps(a3));
+                    let b0 = b.as_ptr().add(k * n);
+                    let b1 = b.as_ptr().add((k + 1) * n);
+                    let b2 = b.as_ptr().add((k + 2) * n);
+                    let b3 = b.as_ptr().add((k + 3) * n);
+                    let mut j = 0;
+                    while j + 8 <= n {
+                        // (((a0*v0 + a1*v1) + a2*v2) + a3*v3), then o + t:
+                        // the scalar expression, lane-for-lane, no FMA.
+                        let t = _mm256_add_ps(
+                            _mm256_add_ps(
+                                _mm256_add_ps(
+                                    _mm256_mul_ps(va0, _mm256_loadu_ps(b0.add(j))),
+                                    _mm256_mul_ps(va1, _mm256_loadu_ps(b1.add(j))),
+                                ),
+                                _mm256_mul_ps(va2, _mm256_loadu_ps(b2.add(j))),
+                            ),
+                            _mm256_mul_ps(va3, _mm256_loadu_ps(b3.add(j))),
+                        );
+                        _mm256_storeu_ps(op.add(j), _mm256_add_ps(_mm256_loadu_ps(op.add(j)), t));
+                        j += 8;
+                    }
+                    while j < n {
+                        *op.add(j) +=
+                            a0 * *b0.add(j) + a1 * *b1.add(j) + a2 * *b2.add(j) + a3 * *b3.add(j);
+                        j += 1;
+                    }
+                    k += 4;
+                }
+                while k < k1 {
+                    let av = arow[k];
+                    let vav = _mm256_set1_ps(av);
+                    let bp = b.as_ptr().add(k * n);
+                    let mut j = 0;
+                    while j + 8 <= n {
+                        let t = _mm256_mul_ps(vav, _mm256_loadu_ps(bp.add(j)));
+                        _mm256_storeu_ps(op.add(j), _mm256_add_ps(_mm256_loadu_ps(op.add(j)), t));
+                        j += 8;
+                    }
+                    while j < n {
+                        *op.add(j) += av * *bp.add(j);
+                        j += 1;
+                    }
+                    k += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Rows `i0..` of `A^T @ B` (bit-identical to `tensor::t_gemm_rows`).
+///
+/// # Safety
+/// Requires AVX2 (runtime-detected by the dispatcher).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn t_gemm_rows(
+    a: &[f32],
+    ka: usize,
+    b: &[f32],
+    n: usize,
+    m: usize,
+    i0: usize,
+    out_block: &mut [f32],
+) {
+    out_block.fill(0.0);
+    if n == 0 {
+        return;
+    }
+    let rows = out_block.len() / n;
+    let mut r = 0;
+    while r + 4 <= m {
+        for i in 0..rows {
+            let c = i0 + i;
+            let (a0, a1) = (a[r * ka + c], a[(r + 1) * ka + c]);
+            let (a2, a3) = (a[(r + 2) * ka + c], a[(r + 3) * ka + c]);
+            let (va0, va1) = (_mm256_set1_ps(a0), _mm256_set1_ps(a1));
+            let (va2, va3) = (_mm256_set1_ps(a2), _mm256_set1_ps(a3));
+            let op = out_block.as_mut_ptr().add(i * n);
+            let b0 = b.as_ptr().add(r * n);
+            let b1 = b.as_ptr().add((r + 1) * n);
+            let b2 = b.as_ptr().add((r + 2) * n);
+            let b3 = b.as_ptr().add((r + 3) * n);
+            let mut j = 0;
+            while j + 8 <= n {
+                let t = _mm256_add_ps(
+                    _mm256_add_ps(
+                        _mm256_add_ps(
+                            _mm256_mul_ps(va0, _mm256_loadu_ps(b0.add(j))),
+                            _mm256_mul_ps(va1, _mm256_loadu_ps(b1.add(j))),
+                        ),
+                        _mm256_mul_ps(va2, _mm256_loadu_ps(b2.add(j))),
+                    ),
+                    _mm256_mul_ps(va3, _mm256_loadu_ps(b3.add(j))),
+                );
+                _mm256_storeu_ps(op.add(j), _mm256_add_ps(_mm256_loadu_ps(op.add(j)), t));
+                j += 8;
+            }
+            while j < n {
+                *op.add(j) +=
+                    a0 * *b0.add(j) + a1 * *b1.add(j) + a2 * *b2.add(j) + a3 * *b3.add(j);
+                j += 1;
+            }
+        }
+        r += 4;
+    }
+    while r < m {
+        for i in 0..rows {
+            let av = a[r * ka + i0 + i];
+            let vav = _mm256_set1_ps(av);
+            let op = out_block.as_mut_ptr().add(i * n);
+            let bp = b.as_ptr().add(r * n);
+            let mut j = 0;
+            while j + 8 <= n {
+                let t = _mm256_mul_ps(vav, _mm256_loadu_ps(bp.add(j)));
+                _mm256_storeu_ps(op.add(j), _mm256_add_ps(_mm256_loadu_ps(op.add(j)), t));
+                j += 8;
+            }
+            while j < n {
+                *op.add(j) += av * *bp.add(j);
+                j += 1;
+            }
+        }
+        r += 1;
+    }
+}
+
+/// Rows `r0..` of `A @ B^T` (bit-identical to `tensor::gemm_t_rows`).
+///
+/// The scalar kernel keeps 4 independent dot-product accumulators over
+/// `chunks_exact(4)`; a 128-bit `__m128` maps onto them lane-for-lane
+/// (`acc[l] += ca[l] * cb[l]` per lane, mul then add — no FMA), and the
+/// horizontal sum extracts the lanes in the scalar's exact
+/// `((acc0 + acc1) + acc2) + acc3` order.  256-bit lanes would change the
+/// accumulator split, and with it the bits.
+///
+/// # Safety
+/// Requires AVX2 (runtime-detected by the dispatcher).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn gemm_t_rows(
+    a: &[f32],
+    k_dim: usize,
+    b: &[f32],
+    b_rows: usize,
+    r0: usize,
+    out_block: &mut [f32],
+) {
+    if b_rows == 0 {
+        return;
+    }
+    let rows = out_block.len() / b_rows;
+    for i in 0..rows {
+        let arow = &a[(r0 + i) * k_dim..(r0 + i) * k_dim + k_dim];
+        let orow = &mut out_block[i * b_rows..(i + 1) * b_rows];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k_dim..(j + 1) * k_dim];
+            let mut vacc = _mm_setzero_ps();
+            let chunks = k_dim / 4;
+            for t in 0..chunks {
+                let ca = _mm_loadu_ps(arow.as_ptr().add(4 * t));
+                let cb = _mm_loadu_ps(brow.as_ptr().add(4 * t));
+                vacc = _mm_add_ps(vacc, _mm_mul_ps(ca, cb));
+            }
+            let mut acc = [0.0f32; 4];
+            _mm_storeu_ps(acc.as_mut_ptr(), vacc);
+            let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+            for t in 4 * chunks..k_dim {
+                s += arow[t] * brow[t];
+            }
+            *o = s;
+        }
+    }
+}
+
+/// i8×i8→i32 GEMM, unpacked row-major RHS (equal to
+/// `quant::gemm_i8_i32_scalar` — integer accumulation is exact, so the
+/// vectorized reduction is equality, not just bit-luck).  8 output columns
+/// per iteration: sign-extend 8 RHS bytes to i32 lanes, `_mm256_mullo_epi32`
+/// against the broadcast LHS value.
+///
+/// # Safety
+/// Requires AVX2 (runtime-detected by the dispatcher).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn gemm_i8_i32(
+    a: &[i8],
+    k: usize,
+    b: &[i8],
+    n: usize,
+    out: &mut [i32],
+    kc: usize,
+) {
+    out.fill(0);
+    if n == 0 || k == 0 {
+        return;
+    }
+    let m = out.len() / n;
+    for k0 in (0..k).step_by(kc) {
+        let k1 = (k0 + kc).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..i * k + k];
+            let op = out.as_mut_ptr().add(i * n);
+            let mut kk = k0;
+            while kk + 4 <= k1 {
+                let a0 = arow[kk] as i32;
+                let a1 = arow[kk + 1] as i32;
+                let a2 = arow[kk + 2] as i32;
+                let a3 = arow[kk + 3] as i32;
+                let (va0, va1) = (_mm256_set1_epi32(a0), _mm256_set1_epi32(a1));
+                let (va2, va3) = (_mm256_set1_epi32(a2), _mm256_set1_epi32(a3));
+                let b0 = b.as_ptr().add(kk * n);
+                let b1 = b.as_ptr().add((kk + 1) * n);
+                let b2 = b.as_ptr().add((kk + 2) * n);
+                let b3 = b.as_ptr().add((kk + 3) * n);
+                let mut j = 0;
+                while j + 8 <= n {
+                    let t = _mm256_add_epi32(
+                        _mm256_add_epi32(
+                            _mm256_mullo_epi32(va0, widen8(b0.add(j))),
+                            _mm256_mullo_epi32(va1, widen8(b1.add(j))),
+                        ),
+                        _mm256_add_epi32(
+                            _mm256_mullo_epi32(va2, widen8(b2.add(j))),
+                            _mm256_mullo_epi32(va3, widen8(b3.add(j))),
+                        ),
+                    );
+                    let o = op.add(j) as *mut __m256i;
+                    _mm256_storeu_si256(o, _mm256_add_epi32(_mm256_loadu_si256(o), t));
+                    j += 8;
+                }
+                while j < n {
+                    *op.add(j) += a0 * *b0.add(j) as i32
+                        + a1 * *b1.add(j) as i32
+                        + a2 * *b2.add(j) as i32
+                        + a3 * *b3.add(j) as i32;
+                    j += 1;
+                }
+                kk += 4;
+            }
+            while kk < k1 {
+                let av = arow[kk] as i32;
+                let vav = _mm256_set1_epi32(av);
+                let bp = b.as_ptr().add(kk * n);
+                let mut j = 0;
+                while j + 8 <= n {
+                    let t = _mm256_mullo_epi32(vav, widen8(bp.add(j)));
+                    let o = op.add(j) as *mut __m256i;
+                    _mm256_storeu_si256(o, _mm256_add_epi32(_mm256_loadu_si256(o), t));
+                    j += 8;
+                }
+                while j < n {
+                    *op.add(j) += av * *bp.add(j) as i32;
+                    j += 1;
+                }
+                kk += 1;
+            }
+        }
+    }
+}
+
+/// Sign-extend 8 consecutive i8 values to 8 i32 lanes.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn widen8(p: *const i8) -> __m256i {
+    _mm256_cvtepi8_epi32(_mm_loadl_epi64(p as *const __m128i))
+}
+
+/// i8×i8→i32 GEMM over the 4-row interleaved panel layout of
+/// `quant::PackedRhsI8` (equal to `quant::gemm_i8_packed_i32_scalar`).
+///
+/// A 32-byte load covers 8 output columns × 4 interleaved k-taps; the four
+/// LHS taps are packed into the i16 lanes of a broadcast quadword so one
+/// `_mm256_madd_epi16` yields per-column pair sums (|i8×i8| ≤ 16129, two of
+/// them fit i16-pair madd into i32 exactly), which
+/// `_mm256_hadd_epi32` + a 64-bit lane permute fold back into column order.
+///
+/// # Safety
+/// Requires AVX2 (runtime-detected by the dispatcher).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn gemm_i8_packed_i32(
+    a: &[i8],
+    k: usize,
+    packed: &[i8],
+    n: usize,
+    out: &mut [i32],
+) {
+    out.fill(0);
+    if n == 0 || k == 0 {
+        return;
+    }
+    let m = out.len() / n;
+    let panels = k.div_ceil(4);
+    for i in 0..m {
+        let arow = &a[i * k..i * k + k];
+        let op = out.as_mut_ptr().add(i * n);
+        for p in 0..panels {
+            let k0 = 4 * p;
+            let a0 = arow[k0] as i32;
+            let a1 = if k0 + 1 < k { arow[k0 + 1] as i32 } else { 0 };
+            let a2 = if k0 + 2 < k { arow[k0 + 2] as i32 } else { 0 };
+            let a3 = if k0 + 3 < k { arow[k0 + 3] as i32 } else { 0 };
+            // i16 lane pattern [a0, a1, a2, a3] repeated across the vector.
+            let pat = (a0 as i16 as u16 as u64)
+                | ((a1 as i16 as u16 as u64) << 16)
+                | ((a2 as i16 as u16 as u64) << 32)
+                | ((a3 as i16 as u16 as u64) << 48);
+            let coeff = _mm256_set1_epi64x(pat as i64);
+            let panel = packed.as_ptr().add(p * 4 * n);
+            let mut j = 0;
+            while j + 8 <= n {
+                let q = _mm256_loadu_si256(panel.add(j * 4) as *const __m256i);
+                let lo = _mm256_cvtepi8_epi16(_mm256_castsi256_si128(q));
+                let hi = _mm256_cvtepi8_epi16(_mm256_extracti128_si256::<1>(q));
+                // madd: per column c, lanes hold (q0*a0 + q1*a1) and
+                // (q2*a2 + q3*a3); hadd folds the pairs, but interleaves
+                // the 128-bit halves: [c0 c1 c4 c5 | c2 c3 c6 c7].
+                let plo = _mm256_madd_epi16(lo, coeff);
+                let phi = _mm256_madd_epi16(hi, coeff);
+                let h = _mm256_hadd_epi32(plo, phi);
+                // 64-bit lane permute (0, 2, 1, 3) restores column order.
+                let t = _mm256_permute4x64_epi64::<0b11_01_10_00>(h);
+                let o = op.add(j) as *mut __m256i;
+                _mm256_storeu_si256(o, _mm256_add_epi32(_mm256_loadu_si256(o), t));
+                j += 8;
+            }
+            while j < n {
+                let q = panel.add(j * 4);
+                *op.add(j) += a0 * *q as i32
+                    + a1 * *q.add(1) as i32
+                    + a2 * *q.add(2) as i32
+                    + a3 * *q.add(3) as i32;
+                j += 1;
+            }
+        }
+    }
+}
+
+/// f32 depthwise conv at stride 1 (bit-identical to
+/// `depthwise::conv_dw_f32_scalar`): the (ky, kx) tap loops move outside
+/// the output-x loop, which vectorizes 8-wide — each output element still
+/// receives its taps in ascending (ky, kx) order, starting from 0.0, so
+/// the f32 sum sequence is exactly the scalar one.
+///
+/// # Safety
+/// Requires AVX2 (runtime-detected by the dispatcher).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn conv_dw_f32(
+    input: &[f32],
+    channels: usize,
+    in_sp: usize,
+    out_sp: usize,
+    kernel: usize,
+    weights: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(input.len(), channels * in_sp * in_sp, "input shape");
+    assert_eq!(weights.len(), channels * kernel * kernel, "weight shape");
+    assert_eq!(out.len(), channels * out_sp * out_sp, "output shape");
+    let pad = kernel / 2;
+    for c in 0..channels {
+        let plane = &input[c * in_sp * in_sp..(c + 1) * in_sp * in_sp];
+        let w = &weights[c * kernel * kernel..(c + 1) * kernel * kernel];
+        let oplane = &mut out[c * out_sp * out_sp..(c + 1) * out_sp * out_sp];
+        for oy in 0..out_sp {
+            let orow = &mut oplane[oy * out_sp..(oy + 1) * out_sp];
+            orow.fill(0.0);
+            let op = orow.as_mut_ptr();
+            for ky in 0..kernel {
+                let iy = (oy + ky) as isize - pad as isize;
+                if iy < 0 || iy >= in_sp as isize {
+                    continue;
+                }
+                let row = plane.as_ptr().add(iy as usize * in_sp);
+                let wrow = &w[ky * kernel..(ky + 1) * kernel];
+                for (kx, &wv) in wrow.iter().enumerate() {
+                    // valid ox range: 0 <= ox + kx - pad < in_sp
+                    let lo = pad.saturating_sub(kx);
+                    let hi = (in_sp + pad).saturating_sub(kx).min(out_sp);
+                    if lo >= hi {
+                        continue;
+                    }
+                    let vw = _mm256_set1_ps(wv);
+                    let src = row.add(lo + kx - pad);
+                    let mut j = lo;
+                    while j + 8 <= hi {
+                        let t = _mm256_mul_ps(vw, _mm256_loadu_ps(src.add(j - lo)));
+                        _mm256_storeu_ps(op.add(j), _mm256_add_ps(_mm256_loadu_ps(op.add(j)), t));
+                        j += 8;
+                    }
+                    while j < hi {
+                        *op.add(j) += *src.add(j - lo) * wv;
+                        j += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// i8 depthwise conv at stride 1 (equal to
+/// `depthwise::conv_dw_i8_scalar`): groups of 8 output columns accumulate
+/// a full (ky, kx) window in i32 register lanes, with the scalar
+/// per-element path covering border groups where a tap column would fall
+/// outside the input.
+///
+/// # Safety
+/// Requires AVX2 (runtime-detected by the dispatcher).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn conv_dw_i8(
+    input: &[i8],
+    a_scale: f32,
+    channels: usize,
+    in_sp: usize,
+    out_sp: usize,
+    w: &QuantizedDwWeights,
+    out: &mut [f32],
+) {
+    assert_eq!(w.channels, channels, "filter bank channels");
+    assert_eq!(input.len(), channels * in_sp * in_sp, "input shape");
+    assert_eq!(out.len(), channels * out_sp * out_sp, "output shape");
+    let kernel = w.kernel;
+    let pad = kernel / 2;
+    // interior groups: all kernel columns of all 8 lanes land inside the
+    // input row (0 <= ox + kx - pad and ox + 7 + kx - pad < in_sp for all
+    // kx in 0..kernel)
+    let int_lo = pad;
+    let int_hi = (in_sp + pad).saturating_sub(kernel + 6);
+    for c in 0..channels {
+        let plane = &input[c * in_sp * in_sp..(c + 1) * in_sp * in_sp];
+        let taps = &w.data[c * kernel * kernel..(c + 1) * kernel * kernel];
+        let scale = a_scale * w.scales[c];
+        let oplane = &mut out[c * out_sp * out_sp..(c + 1) * out_sp * out_sp];
+        for oy in 0..out_sp {
+            let orow = &mut oplane[oy * out_sp..(oy + 1) * out_sp];
+            let mut ox = 0;
+            while ox < out_sp {
+                if ox >= int_lo && ox < int_hi && ox + 8 <= out_sp {
+                    let mut vacc = _mm256_setzero_si256();
+                    for ky in 0..kernel {
+                        let iy = (oy + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= in_sp as isize {
+                            continue;
+                        }
+                        let row = plane.as_ptr().add(iy as usize * in_sp);
+                        for kx in 0..kernel {
+                            let coeff =
+                                _mm256_set1_epi32(taps[ky * kernel + kx] as i32);
+                            let v = widen8(row.add(ox + kx - pad));
+                            vacc = _mm256_add_epi32(vacc, _mm256_mullo_epi32(coeff, v));
+                        }
+                    }
+                    let mut acc = [0i32; 8];
+                    _mm256_storeu_si256(acc.as_mut_ptr() as *mut __m256i, vacc);
+                    for (l, &q) in acc.iter().enumerate() {
+                        orow[ox + l] = q as f32 * scale;
+                    }
+                    ox += 8;
+                } else {
+                    // border / tail: the scalar per-element path, verbatim
+                    let mut acc = 0i32;
+                    for ky in 0..kernel {
+                        let iy = (oy + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= in_sp as isize {
+                            continue;
+                        }
+                        let row = &plane[iy as usize * in_sp..(iy as usize + 1) * in_sp];
+                        let wrow = &taps[ky * kernel..(ky + 1) * kernel];
+                        for (kx, &tv) in wrow.iter().enumerate() {
+                            let ix = (ox + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= in_sp as isize {
+                                continue;
+                            }
+                            acc += row[ix as usize] as i32 * tv as i32;
+                        }
+                    }
+                    orow[ox] = acc as f32 * scale;
+                    ox += 1;
+                }
+            }
+        }
+    }
+}

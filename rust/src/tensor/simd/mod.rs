@@ -1,0 +1,642 @@
+//! Runtime-dispatched SIMD kernels with a scalar bit-exactness oracle.
+//!
+//! Every hot kernel in `tensor` (the f32 GEMM family, the i8×i8→i32 GEMMs,
+//! and the depthwise convolutions) dispatches through this module: at each
+//! public kernel entry the active ISA is resolved once
+//! ([`dispatch`] — AVX2 on x86_64, NEON on aarch64, detected at runtime via
+//! `is_x86_feature_detected!` / `is_aarch64_feature_detected!`) and the
+//! per-row kernel body runs either the scalar implementation (the verbatim
+//! PR-1 loops, kept as the correctness oracle) or the `std::arch` SIMD
+//! variant in [`avx2`] / [`neon`].
+//!
+//! ## The bit-exactness invariant
+//!
+//! The f32 SIMD kernels vectorize **across the `n`/output-column dimension
+//! only** and use separate multiply + add instructions (never FMA): each
+//! SIMD lane computes exactly the scalar per-element expression
+//! `*o += a0*v0 + a1*v1 + a2*v2 + a3*v3` in the same ascending-k
+//! groups-of-four order, so SIMD output is **bit-identical** to scalar by
+//! construction.  Vectorizing the k-reduction instead (or letting the
+//! compiler contract to FMA) would reassociate the float sum and change
+//! low-order bits — which would silently shift golden trajectories,
+//! `.galen` artifact bytes, and every N-thread == 1-thread fence.  The i8
+//! kernels accumulate in i32, where addition *is* associative, so their
+//! reductions vectorize freely (`_mm256_madd_epi16` pair-sums, NEON
+//! widening multiply-accumulates) — order-exactness is automatic.
+//!
+//! Depthwise convolutions vectorize across the output-x dimension at
+//! stride 1 (each lane keeps the scalar ascending (ky, kx) tap order);
+//! other strides fall back to the scalar kernels.
+//!
+//! ## Mode override and observability
+//!
+//! `GALEN_SIMD=off|scalar|auto` selects the dispatch mode process-wide
+//! (`off` and `scalar` both force the scalar oracle; `auto`, the default,
+//! uses the best detected ISA).  [`set_mode`] overrides it at runtime for
+//! tests and benches.  Every dispatch increments
+//! `simd_dispatch_total{path,isa}` in the metrics registry — inert like all
+//! obs counters: results are bit-identical with metrics on or off.
+//!
+//! ## Tile configuration and autotuning
+//!
+//! The SIMD kernels read their blocking parameters from a process-wide
+//! [`TileConfig`] (k-panel height `kc`, row sub-block `mc`, and the
+//! parallel-dispatch threshold `par_min_macs` consumed by
+//! `tensor::gemm_workers`).  [`autotune`] sweeps a small candidate grid at
+//! first profiler use and `hw::MeasuredProfiler` persists the winner into
+//! the versioned profile cache next to the target fingerprint, so later
+//! runs re-tune nothing.  Any `kc` that is a multiple of 4 preserves the
+//! scalar grouping (panel boundaries stay 4-aligned, the remainder loop is
+//! only ever the final `k % 4` tail), so tuning never affects results.
+
+/// AVX2 (x86_64) kernel bodies.
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
+/// NEON (aarch64) kernel bodies.
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+/// The tile-parameter autotuner.
+mod tune;
+
+pub use tune::{autotune, autotune_runs};
+
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::obs;
+
+/// Dispatch mode: which kernel family the process runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Force the scalar oracle kernels (`GALEN_SIMD=off` / `=scalar`).
+    Scalar,
+    /// Use the best runtime-detected ISA (`GALEN_SIMD=auto`, the default).
+    Auto,
+}
+
+/// The instruction set a kernel call actually runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// The scalar oracle (also the fallback when no SIMD ISA is detected).
+    Scalar,
+    /// 256-bit AVX2 (x86_64, runtime-detected).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// 128-bit NEON (aarch64, runtime-detected).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+// Mode cell: 0 = Scalar, 1 = Auto, 0xFF = not yet initialized from the
+// environment.  A plain atomic (not OnceLock) so tests and benches can
+// flip the mode at runtime; the env parse races benignly (idempotent).
+static MODE: AtomicU8 = AtomicU8::new(0xFF);
+
+fn mode_from_env() -> SimdMode {
+    match std::env::var("GALEN_SIMD").ok().as_deref() {
+        Some("off") | Some("scalar") => SimdMode::Scalar,
+        Some("auto") | None => SimdMode::Auto,
+        Some(other) => {
+            log::warn!("GALEN_SIMD={other:?} not recognized (off|scalar|auto); using auto");
+            SimdMode::Auto
+        }
+    }
+}
+
+/// The current dispatch mode (initialized from `GALEN_SIMD` on first use).
+pub fn mode() -> SimdMode {
+    match MODE.load(Ordering::Relaxed) {
+        0 => SimdMode::Scalar,
+        1 => SimdMode::Auto,
+        _ => {
+            let m = mode_from_env();
+            MODE.store(if m == SimdMode::Scalar { 0 } else { 1 }, Ordering::Relaxed);
+            m
+        }
+    }
+}
+
+/// Override the dispatch mode process-wide (tests / benches; production
+/// uses the `GALEN_SIMD` environment variable).  Because SIMD output is
+/// bit-identical to scalar, flipping the mode never changes results — only
+/// which kernel bodies produce them.
+pub fn set_mode(m: SimdMode) {
+    MODE.store(if m == SimdMode::Scalar { 0 } else { 1 }, Ordering::Relaxed);
+}
+
+/// Best ISA the host supports (runtime feature detection, cached).
+fn detected_isa() -> Isa {
+    static ISA: OnceLock<Isa> = OnceLock::new();
+    *ISA.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return Isa::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return Isa::Neon;
+            }
+        }
+        Isa::Scalar
+    })
+}
+
+/// The ISA kernel calls dispatch to under the current mode.
+pub fn active_isa() -> Isa {
+    match mode() {
+        SimdMode::Scalar => Isa::Scalar,
+        SimdMode::Auto => detected_isa(),
+    }
+}
+
+/// Metrics label of [`active_isa`] (`"scalar"`, `"avx2"`, `"neon"`).
+pub fn isa_label() -> &'static str {
+    match active_isa() {
+        Isa::Scalar => "scalar",
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => "avx2",
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => "neon",
+    }
+}
+
+/// Label of the SIMD ISA this build *could* dispatch to (independent of
+/// runtime detection and mode) — the non-scalar column of the dispatch
+/// counter.
+const SIMD_LABEL: &str = {
+    #[cfg(target_arch = "x86_64")]
+    {
+        "avx2"
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        "neon"
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        "none"
+    }
+};
+
+/// Kernel families that dispatch through this module (the `path` label of
+/// `simd_dispatch_total`).
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Kernel {
+    /// `Mat::matmul_into` (`A @ B`).
+    GemmF32,
+    /// `Mat::t_matmul_into` (`A^T @ B`).
+    TGemmF32,
+    /// `Mat::matmul_t_into` (`A @ B^T`).
+    GemmTF32,
+    /// `quant::gemm_i8_i32` (unpacked RHS).
+    GemmI8,
+    /// `quant::gemm_i8_packed_i32` (panel-packed RHS).
+    GemmI8Packed,
+    /// `depthwise::conv_dw_f32`.
+    DwF32,
+    /// `depthwise::conv_dw_i8`.
+    DwI8,
+}
+
+const KERNELS: usize = 7;
+
+impl Kernel {
+    fn label(self) -> &'static str {
+        match self {
+            Kernel::GemmF32 => "gemm_f32",
+            Kernel::TGemmF32 => "t_gemm_f32",
+            Kernel::GemmTF32 => "gemm_t_f32",
+            Kernel::GemmI8 => "gemm_i8",
+            Kernel::GemmI8Packed => "gemm_i8_packed",
+            Kernel::DwF32 => "dw_f32",
+            Kernel::DwI8 => "dw_i8",
+        }
+    }
+}
+
+const KERNEL_LABELS: [&str; KERNELS] = [
+    "gemm_f32",
+    "t_gemm_f32",
+    "gemm_t_f32",
+    "gemm_i8",
+    "gemm_i8_packed",
+    "dw_f32",
+    "dw_i8",
+];
+
+/// One registered counter per (path, isa) pair, built eagerly on first
+/// dispatch so the hot path is a relaxed sharded add.
+fn dispatch_counter(k: Kernel, isa: Isa) -> &'static obs::Counter {
+    static C: OnceLock<Vec<obs::Counter>> = OnceLock::new();
+    let all = C.get_or_init(|| {
+        let mut v = Vec::with_capacity(KERNELS * 2);
+        for path in KERNEL_LABELS {
+            for isa_label in ["scalar", SIMD_LABEL] {
+                v.push(obs::Counter::register(
+                    "simd_dispatch_total",
+                    &[("path", path), ("isa", isa_label)],
+                ));
+            }
+        }
+        v
+    });
+    let isa_ix = usize::from(isa != Isa::Scalar);
+    &all[kernel_index(k) * 2 + isa_ix]
+}
+
+fn kernel_index(k: Kernel) -> usize {
+    match k {
+        Kernel::GemmF32 => 0,
+        Kernel::TGemmF32 => 1,
+        Kernel::GemmTF32 => 2,
+        Kernel::GemmI8 => 3,
+        Kernel::GemmI8Packed => 4,
+        Kernel::DwF32 => 5,
+        Kernel::DwI8 => 6,
+    }
+}
+
+/// Resolve the ISA for one kernel call and count the dispatch
+/// (`simd_dispatch_total{path,isa}`).  Called once per public kernel entry
+/// — not per row block — so the counter tracks kernel calls, not the
+/// worker split.
+pub(crate) fn dispatch(k: Kernel) -> Isa {
+    let isa = active_isa();
+    dispatch_counter(k, isa).inc();
+    isa
+}
+
+// ---------------------------------------------------------------------------
+// Tile configuration
+// ---------------------------------------------------------------------------
+
+/// Blocking parameters of the SIMD kernels plus the parallel-dispatch
+/// threshold, autotuned per target and persisted in the profile cache.
+///
+/// Every field is results-neutral by construction: `kc` is clamped to a
+/// multiple of 4 so the scalar groups-of-four accumulation boundaries are
+/// preserved, `mc` only reorders whole disjoint output rows, and
+/// `par_min_macs` only moves the serial/parallel worker crossover (the
+/// row-parallel path is bit-identical at any worker count).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileConfig {
+    /// K-panel height of the blocked SIMD GEMMs (multiple of 4).
+    pub kc: usize,
+    /// Row sub-block height inside a k-panel (cache blocking of the
+    /// output/LHS rows); large values disable sub-blocking.
+    pub mc: usize,
+    /// Minimum MAC count before a GEMM fans out to the row-parallel path
+    /// (consumed by `tensor::gemm_workers`).
+    pub par_min_macs: usize,
+}
+
+impl TileConfig {
+    /// The untuned defaults: the scalar kernels' historical constants
+    /// (`KC = 256`, no row sub-blocking, `PAR_MIN_MACS = 2^21`).
+    pub fn untuned() -> Self {
+        Self { kc: 256, mc: 1 << 20, par_min_macs: 1 << 21 }
+    }
+
+    /// Clamp fields to their validity domains (`kc` to a positive multiple
+    /// of 4, `mc`/`par_min_macs` to >= 1).
+    pub fn sanitized(self) -> Self {
+        Self {
+            kc: (self.kc & !3).max(4),
+            mc: self.mc.max(1),
+            par_min_macs: self.par_min_macs.max(1),
+        }
+    }
+}
+
+/// Serializes tests that mutate the process-wide tile config or dispatch
+/// mode (the parallel test runner would otherwise interleave them).
+#[cfg(test)]
+pub(crate) static TEST_GLOBALS_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+static TILE_KC: AtomicUsize = AtomicUsize::new(256);
+static TILE_MC: AtomicUsize = AtomicUsize::new(1 << 20);
+static TILE_PAR_MIN: AtomicUsize = AtomicUsize::new(1 << 21);
+
+/// The process-wide tile configuration the kernels currently read.
+pub fn tile_config() -> TileConfig {
+    TileConfig {
+        kc: TILE_KC.load(Ordering::Relaxed),
+        mc: TILE_MC.load(Ordering::Relaxed),
+        par_min_macs: TILE_PAR_MIN.load(Ordering::Relaxed),
+    }
+}
+
+/// Install a tile configuration process-wide (sanitized; see
+/// [`TileConfig::sanitized`]).  Called by `hw::MeasuredProfiler` with the
+/// autotuned (or cache-loaded) config; never changes kernel results.
+pub fn set_tile_config(t: TileConfig) {
+    let t = t.sanitized();
+    TILE_KC.store(t.kc, Ordering::Relaxed);
+    TILE_MC.store(t.mc, Ordering::Relaxed);
+    TILE_PAR_MIN.store(t.par_min_macs, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Kernel dispatch wrappers (one per family; scalar fallback inline)
+// ---------------------------------------------------------------------------
+
+/// Rows `r0..` of `A @ B` under `isa` (bit-identical to the scalar
+/// `tensor::gemm_rows` for every ISA).
+pub(crate) fn gemm_rows(
+    isa: Isa,
+    a: &[f32],
+    k_dim: usize,
+    b: &[f32],
+    n: usize,
+    r0: usize,
+    out: &mut [f32],
+) {
+    match isa {
+        Isa::Scalar => super::gemm_rows(a, k_dim, b, n, r0, out),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => {
+            let t = tile_config();
+            unsafe { avx2::gemm_rows(a, k_dim, b, n, r0, out, t.kc, t.mc) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => {
+            let t = tile_config();
+            unsafe { neon::gemm_rows(a, k_dim, b, n, r0, out, t.kc, t.mc) }
+        }
+    }
+}
+
+/// [`gemm_rows`] with explicit tile parameters (the autotuner's probe
+/// entry; the scalar oracle ignores them).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_rows_tiled(
+    isa: Isa,
+    a: &[f32],
+    k_dim: usize,
+    b: &[f32],
+    n: usize,
+    r0: usize,
+    out: &mut [f32],
+    kc: usize,
+    mc: usize,
+) {
+    match isa {
+        Isa::Scalar => super::gemm_rows(a, k_dim, b, n, r0, out),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::gemm_rows(a, k_dim, b, n, r0, out, kc, mc) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::gemm_rows(a, k_dim, b, n, r0, out, kc, mc) },
+    }
+}
+
+/// Rows `i0..` of `A^T @ B` under `isa` (bit-identical to the scalar
+/// `tensor::t_gemm_rows`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn t_gemm_rows(
+    isa: Isa,
+    a: &[f32],
+    ka: usize,
+    b: &[f32],
+    n: usize,
+    m: usize,
+    i0: usize,
+    out: &mut [f32],
+) {
+    match isa {
+        Isa::Scalar => super::t_gemm_rows(a, ka, b, n, m, i0, out),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::t_gemm_rows(a, ka, b, n, m, i0, out) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::t_gemm_rows(a, ka, b, n, m, i0, out) },
+    }
+}
+
+/// Rows `r0..` of `A @ B^T` under `isa` (bit-identical to the scalar
+/// `tensor::gemm_t_rows`).
+pub(crate) fn gemm_t_rows(
+    isa: Isa,
+    a: &[f32],
+    k_dim: usize,
+    b: &[f32],
+    b_rows: usize,
+    r0: usize,
+    out: &mut [f32],
+) {
+    match isa {
+        Isa::Scalar => super::gemm_t_rows(a, k_dim, b, b_rows, r0, out),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::gemm_t_rows(a, k_dim, b, b_rows, r0, out) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::gemm_t_rows(a, k_dim, b, b_rows, r0, out) },
+    }
+}
+
+/// i8×i8→i32 GEMM under `isa` (integer accumulation: equal to scalar for
+/// every ISA, with a freely vectorized reduction).
+pub(crate) fn gemm_i8_i32(isa: Isa, a: &[i8], k: usize, b: &[i8], n: usize, out: &mut [i32]) {
+    match isa {
+        Isa::Scalar => super::quant::gemm_i8_i32_scalar(a, k, b, n, out),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => {
+            let kc = tile_config().kc;
+            unsafe { avx2::gemm_i8_i32(a, k, b, n, out, kc) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => {
+            let kc = tile_config().kc;
+            unsafe { neon::gemm_i8_i32(a, k, b, n, out, kc) }
+        }
+    }
+}
+
+/// Panel-packed i8×i8→i32 GEMM under `isa` (equal to [`gemm_i8_i32`] on
+/// the same logical operands).
+pub(crate) fn gemm_i8_packed_i32(
+    isa: Isa,
+    a: &[i8],
+    k: usize,
+    packed: &super::quant::PackedRhsI8,
+    out: &mut [i32],
+) {
+    match isa {
+        Isa::Scalar => super::quant::gemm_i8_packed_i32_scalar(a, k, packed, out),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { avx2::gemm_i8_packed_i32(a, k, &packed.data, packed.n, out) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::gemm_i8_packed_i32(a, k, &packed.data, packed.n, out) },
+    }
+}
+
+/// f32 depthwise conv under `isa`.  SIMD vectorizes the output-x dimension
+/// at stride 1 (bit-identical per element: ascending (ky, kx) tap order is
+/// preserved lane-wise); other strides run the scalar oracle.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv_dw_f32(
+    isa: Isa,
+    input: &[f32],
+    channels: usize,
+    in_sp: usize,
+    out_sp: usize,
+    kernel: usize,
+    stride: usize,
+    weights: &[f32],
+    out: &mut [f32],
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 if stride == 1 => unsafe {
+            avx2::conv_dw_f32(input, channels, in_sp, out_sp, kernel, weights, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon if stride == 1 => unsafe {
+            neon::conv_dw_f32(input, channels, in_sp, out_sp, kernel, weights, out)
+        },
+        _ => super::depthwise::conv_dw_f32_scalar(
+            input, channels, in_sp, out_sp, kernel, stride, weights, out,
+        ),
+    }
+}
+
+/// i8 depthwise conv under `isa` (i32 accumulation; stride 1 vectorizes,
+/// other strides run the scalar oracle).  `acc` is a caller-owned i32
+/// scratch row reused across calls.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv_dw_i8(
+    isa: Isa,
+    input: &[i8],
+    a_scale: f32,
+    channels: usize,
+    in_sp: usize,
+    out_sp: usize,
+    stride: usize,
+    w: &super::depthwise::QuantizedDwWeights,
+    out: &mut [f32],
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 if stride == 1 => unsafe {
+            avx2::conv_dw_i8(input, a_scale, channels, in_sp, out_sp, w, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon if stride == 1 => unsafe {
+            neon::conv_dw_i8(input, a_scale, channels, in_sp, out_sp, w, out)
+        },
+        _ => super::depthwise::conv_dw_i8_scalar(
+            input, a_scale, channels, in_sp, out_sp, stride, w, out,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_f32(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+    }
+
+    /// The module's core promise, asserted at the row-kernel level across
+    /// shapes that cross every vector-width and unroll tail: the SIMD f32
+    /// kernels are bit-identical to the scalar oracle.
+    #[test]
+    fn simd_f32_row_kernels_match_scalar_bit_exact() {
+        let isa = detected_isa();
+        let mut rng = Pcg64::new(0x51);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (2, 4, 8),
+            (4, 261, 9),
+            (5, 16, 17),
+            (3, 300, 31),
+            (2, 7, 33),
+        ] {
+            let a = random_f32(&mut rng, m * k);
+            let b = random_f32(&mut rng, k * n);
+            let bt = random_f32(&mut rng, n * k);
+            let c = random_f32(&mut rng, m * n);
+            let mut s = vec![0.0f32; m * n];
+            let mut v = vec![0.0f32; m * n];
+            gemm_rows(Isa::Scalar, &a, k, &b, n, 0, &mut s);
+            gemm_rows(isa, &a, k, &b, n, 0, &mut v);
+            assert_eq!(s, v, "gemm_rows {m}x{k}x{n}");
+
+            let mut st = vec![0.0f32; k * n];
+            let mut vt = vec![0.0f32; k * n];
+            t_gemm_rows(Isa::Scalar, &a, k, &c, n, m, 0, &mut st);
+            t_gemm_rows(isa, &a, k, &c, n, m, 0, &mut vt);
+            assert_eq!(st, vt, "t_gemm_rows {m}x{k}x{n}");
+
+            let mut sg = vec![0.0f32; m * n];
+            let mut vg = vec![0.0f32; m * n];
+            gemm_t_rows(Isa::Scalar, &a, k, &bt, n, 0, &mut sg);
+            gemm_t_rows(isa, &a, k, &bt, n, 0, &mut vg);
+            assert_eq!(sg, vg, "gemm_t_rows {m}x{k}x{n}");
+        }
+    }
+
+    /// Tile parameters never change f32 results (kc stays 4-aligned).
+    #[test]
+    fn tile_parameters_are_results_neutral() {
+        let isa = detected_isa();
+        let mut rng = Pcg64::new(0x52);
+        let (m, k, n) = (5usize, 261usize, 19usize);
+        let a = random_f32(&mut rng, m * k);
+        let b = random_f32(&mut rng, k * n);
+        let mut reference = vec![0.0f32; m * n];
+        gemm_rows_tiled(isa, &a, k, &b, n, 0, &mut reference, 256, 1 << 20);
+        for &(kc, mc) in &[(4usize, 1usize), (128, 2), (512, 3), (8, 1 << 20)] {
+            let mut out = vec![0.0f32; m * n];
+            gemm_rows_tiled(isa, &a, k, &b, n, 0, &mut out, kc, mc);
+            assert_eq!(reference, out, "kc={kc} mc={mc}");
+        }
+    }
+
+    #[test]
+    fn tile_config_roundtrip_and_sanitization() {
+        let _g = TEST_GLOBALS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = tile_config();
+        set_tile_config(TileConfig { kc: 130, mc: 0, par_min_macs: 0 });
+        let t = tile_config();
+        assert_eq!(t.kc, 128, "kc clamps to a multiple of 4");
+        assert_eq!(t.mc, 1);
+        assert_eq!(t.par_min_macs, 1);
+        set_tile_config(prev);
+        assert_eq!(tile_config(), prev.sanitized());
+    }
+
+    #[test]
+    fn untuned_defaults_match_the_historical_constants() {
+        let t = TileConfig::untuned();
+        assert_eq!(t.kc, 256);
+        assert_eq!(t.par_min_macs, 1 << 21);
+    }
+
+    #[test]
+    fn mode_controls_active_isa() {
+        let _g = TEST_GLOBALS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let prev = mode();
+        set_mode(SimdMode::Scalar);
+        assert_eq!(active_isa(), Isa::Scalar);
+        assert_eq!(isa_label(), "scalar");
+        set_mode(SimdMode::Auto);
+        assert_eq!(active_isa(), detected_isa());
+        set_mode(prev);
+    }
+
+    #[test]
+    fn dispatch_counts_into_the_registry() {
+        let _g = TEST_GLOBALS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let isa = active_isa();
+        let before = dispatch_counter(Kernel::GemmF32, isa).value();
+        let _ = dispatch(Kernel::GemmF32);
+        let after = dispatch_counter(Kernel::GemmF32, isa).value();
+        // >= rather than ==: concurrent tests also run f32 GEMMs and bump
+        // the same process-wide counter
+        assert!(after >= before + 1, "{after} vs {before}");
+    }
+}

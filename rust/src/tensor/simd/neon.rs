@@ -1,0 +1,502 @@
+//! NEON kernel bodies (aarch64, runtime-dispatched by `tensor::simd`).
+//!
+//! Mirrors `simd::avx2` at 128-bit width: f32 kernels vectorize across the
+//! `n`/output-column dimension with separate `vmulq_f32` / `vaddq_f32`
+//! (never `vfmaq`/`vmlaq`, which fuse and change low-order bits), so
+//! results are bit-identical to the scalar oracle; i8 kernels use the
+//! widening multiply-accumulates (`vmull_n_s16`/`vmlal_n_s16` — exact
+//! integer arithmetic) and the stride-4 de-interleaving load `vld4_s8`
+//! that matches `PackedRhsI8`'s panel layout directly.
+//!
+//! Safety: every function is `#[target_feature(enable = "neon")]` and must
+//! only be called after `is_aarch64_feature_detected!("neon")` succeeded —
+//! `tensor::simd::dispatch` guarantees that.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use std::arch::aarch64::*;
+
+use super::super::depthwise::QuantizedDwWeights;
+
+/// Rows `r0..` of `A @ B` (bit-identical to `tensor::gemm_rows`), with
+/// explicit tile parameters (`kc` a multiple of 4 — the caller sanitizes).
+///
+/// # Safety
+/// Requires NEON (runtime-detected by the dispatcher).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn gemm_rows(
+    a: &[f32],
+    k_dim: usize,
+    b: &[f32],
+    n: usize,
+    r0: usize,
+    out_block: &mut [f32],
+    kc: usize,
+    mc: usize,
+) {
+    out_block.fill(0.0);
+    if n == 0 || k_dim == 0 {
+        return;
+    }
+    let rows = out_block.len() / n;
+    for k0 in (0..k_dim).step_by(kc) {
+        let k1 = (k0 + kc).min(k_dim);
+        for i0 in (0..rows).step_by(mc) {
+            let i1 = (i0 + mc).min(rows);
+            for i in i0..i1 {
+                let arow = &a[(r0 + i) * k_dim..(r0 + i) * k_dim + k_dim];
+                let orow = &mut out_block[i * n..(i + 1) * n];
+                let op = orow.as_mut_ptr();
+                let mut k = k0;
+                while k + 4 <= k1 {
+                    let (a0, a1, a2, a3) = (arow[k], arow[k + 1], arow[k + 2], arow[k + 3]);
+                    let b0 = b.as_ptr().add(k * n);
+                    let b1 = b.as_ptr().add((k + 1) * n);
+                    let b2 = b.as_ptr().add((k + 2) * n);
+                    let b3 = b.as_ptr().add((k + 3) * n);
+                    let mut j = 0;
+                    while j + 4 <= n {
+                        // (((a0*v0 + a1*v1) + a2*v2) + a3*v3), then o + t —
+                        // the scalar expression lane-for-lane, no fused mla.
+                        let t = vaddq_f32(
+                            vaddq_f32(
+                                vaddq_f32(
+                                    vmulq_n_f32(vld1q_f32(b0.add(j)), a0),
+                                    vmulq_n_f32(vld1q_f32(b1.add(j)), a1),
+                                ),
+                                vmulq_n_f32(vld1q_f32(b2.add(j)), a2),
+                            ),
+                            vmulq_n_f32(vld1q_f32(b3.add(j)), a3),
+                        );
+                        vst1q_f32(op.add(j), vaddq_f32(vld1q_f32(op.add(j)), t));
+                        j += 4;
+                    }
+                    while j < n {
+                        *op.add(j) +=
+                            a0 * *b0.add(j) + a1 * *b1.add(j) + a2 * *b2.add(j) + a3 * *b3.add(j);
+                        j += 1;
+                    }
+                    k += 4;
+                }
+                while k < k1 {
+                    let av = arow[k];
+                    let bp = b.as_ptr().add(k * n);
+                    let mut j = 0;
+                    while j + 4 <= n {
+                        let t = vmulq_n_f32(vld1q_f32(bp.add(j)), av);
+                        vst1q_f32(op.add(j), vaddq_f32(vld1q_f32(op.add(j)), t));
+                        j += 4;
+                    }
+                    while j < n {
+                        *op.add(j) += av * *bp.add(j);
+                        j += 1;
+                    }
+                    k += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Rows `i0..` of `A^T @ B` (bit-identical to `tensor::t_gemm_rows`).
+///
+/// # Safety
+/// Requires NEON (runtime-detected by the dispatcher).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn t_gemm_rows(
+    a: &[f32],
+    ka: usize,
+    b: &[f32],
+    n: usize,
+    m: usize,
+    i0: usize,
+    out_block: &mut [f32],
+) {
+    out_block.fill(0.0);
+    if n == 0 {
+        return;
+    }
+    let rows = out_block.len() / n;
+    let mut r = 0;
+    while r + 4 <= m {
+        for i in 0..rows {
+            let c = i0 + i;
+            let (a0, a1) = (a[r * ka + c], a[(r + 1) * ka + c]);
+            let (a2, a3) = (a[(r + 2) * ka + c], a[(r + 3) * ka + c]);
+            let op = out_block.as_mut_ptr().add(i * n);
+            let b0 = b.as_ptr().add(r * n);
+            let b1 = b.as_ptr().add((r + 1) * n);
+            let b2 = b.as_ptr().add((r + 2) * n);
+            let b3 = b.as_ptr().add((r + 3) * n);
+            let mut j = 0;
+            while j + 4 <= n {
+                let t = vaddq_f32(
+                    vaddq_f32(
+                        vaddq_f32(
+                            vmulq_n_f32(vld1q_f32(b0.add(j)), a0),
+                            vmulq_n_f32(vld1q_f32(b1.add(j)), a1),
+                        ),
+                        vmulq_n_f32(vld1q_f32(b2.add(j)), a2),
+                    ),
+                    vmulq_n_f32(vld1q_f32(b3.add(j)), a3),
+                );
+                vst1q_f32(op.add(j), vaddq_f32(vld1q_f32(op.add(j)), t));
+                j += 4;
+            }
+            while j < n {
+                *op.add(j) +=
+                    a0 * *b0.add(j) + a1 * *b1.add(j) + a2 * *b2.add(j) + a3 * *b3.add(j);
+                j += 1;
+            }
+        }
+        r += 4;
+    }
+    while r < m {
+        for i in 0..rows {
+            let av = a[r * ka + i0 + i];
+            let op = out_block.as_mut_ptr().add(i * n);
+            let bp = b.as_ptr().add(r * n);
+            let mut j = 0;
+            while j + 4 <= n {
+                let t = vmulq_n_f32(vld1q_f32(bp.add(j)), av);
+                vst1q_f32(op.add(j), vaddq_f32(vld1q_f32(op.add(j)), t));
+                j += 4;
+            }
+            while j < n {
+                *op.add(j) += av * *bp.add(j);
+                j += 1;
+            }
+        }
+        r += 1;
+    }
+}
+
+/// Rows `r0..` of `A @ B^T` (bit-identical to `tensor::gemm_t_rows`): a
+/// `float32x4` maps lane-for-lane onto the scalar kernel's 4 independent
+/// accumulators; the horizontal sum extracts lanes in the scalar's
+/// `((acc0 + acc1) + acc2) + acc3` order.
+///
+/// # Safety
+/// Requires NEON (runtime-detected by the dispatcher).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn gemm_t_rows(
+    a: &[f32],
+    k_dim: usize,
+    b: &[f32],
+    b_rows: usize,
+    r0: usize,
+    out_block: &mut [f32],
+) {
+    if b_rows == 0 {
+        return;
+    }
+    let rows = out_block.len() / b_rows;
+    for i in 0..rows {
+        let arow = &a[(r0 + i) * k_dim..(r0 + i) * k_dim + k_dim];
+        let orow = &mut out_block[i * b_rows..(i + 1) * b_rows];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k_dim..(j + 1) * k_dim];
+            let mut vacc = vdupq_n_f32(0.0);
+            let chunks = k_dim / 4;
+            for t in 0..chunks {
+                let ca = vld1q_f32(arow.as_ptr().add(4 * t));
+                let cb = vld1q_f32(brow.as_ptr().add(4 * t));
+                vacc = vaddq_f32(vacc, vmulq_f32(ca, cb));
+            }
+            let mut acc = [0.0f32; 4];
+            vst1q_f32(acc.as_mut_ptr(), vacc);
+            let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+            for t in 4 * chunks..k_dim {
+                s += arow[t] * brow[t];
+            }
+            *o = s;
+        }
+    }
+}
+
+/// i8×i8→i32 GEMM, unpacked row-major RHS (equal to
+/// `quant::gemm_i8_i32_scalar`): 8 output columns per iteration via the
+/// widening `vmull_n_s16`/`vmlal_n_s16` chain (exact integer arithmetic).
+///
+/// # Safety
+/// Requires NEON (runtime-detected by the dispatcher).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn gemm_i8_i32(
+    a: &[i8],
+    k: usize,
+    b: &[i8],
+    n: usize,
+    out: &mut [i32],
+    kc: usize,
+) {
+    out.fill(0);
+    if n == 0 || k == 0 {
+        return;
+    }
+    let m = out.len() / n;
+    for k0 in (0..k).step_by(kc) {
+        let k1 = (k0 + kc).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..i * k + k];
+            let op = out.as_mut_ptr().add(i * n);
+            let mut kk = k0;
+            while kk + 4 <= k1 {
+                let a0 = arow[kk] as i16;
+                let a1 = arow[kk + 1] as i16;
+                let a2 = arow[kk + 2] as i16;
+                let a3 = arow[kk + 3] as i16;
+                let b0 = b.as_ptr().add(kk * n);
+                let b1 = b.as_ptr().add((kk + 1) * n);
+                let b2 = b.as_ptr().add((kk + 2) * n);
+                let b3 = b.as_ptr().add((kk + 3) * n);
+                let mut j = 0;
+                while j + 8 <= n {
+                    let w0 = vmovl_s8(vld1_s8(b0.add(j)));
+                    let w1 = vmovl_s8(vld1_s8(b1.add(j)));
+                    let w2 = vmovl_s8(vld1_s8(b2.add(j)));
+                    let w3 = vmovl_s8(vld1_s8(b3.add(j)));
+                    let mut lo = vmull_n_s16(vget_low_s16(w0), a0);
+                    lo = vmlal_n_s16(lo, vget_low_s16(w1), a1);
+                    lo = vmlal_n_s16(lo, vget_low_s16(w2), a2);
+                    lo = vmlal_n_s16(lo, vget_low_s16(w3), a3);
+                    let mut hi = vmull_n_s16(vget_high_s16(w0), a0);
+                    hi = vmlal_n_s16(hi, vget_high_s16(w1), a1);
+                    hi = vmlal_n_s16(hi, vget_high_s16(w2), a2);
+                    hi = vmlal_n_s16(hi, vget_high_s16(w3), a3);
+                    vst1q_s32(op.add(j), vaddq_s32(vld1q_s32(op.add(j)), lo));
+                    vst1q_s32(op.add(j + 4), vaddq_s32(vld1q_s32(op.add(j + 4)), hi));
+                    j += 8;
+                }
+                while j < n {
+                    *op.add(j) += a0 as i32 * *b0.add(j) as i32
+                        + a1 as i32 * *b1.add(j) as i32
+                        + a2 as i32 * *b2.add(j) as i32
+                        + a3 as i32 * *b3.add(j) as i32;
+                    j += 1;
+                }
+                kk += 4;
+            }
+            while kk < k1 {
+                let av = arow[kk] as i16;
+                let bp = b.as_ptr().add(kk * n);
+                let mut j = 0;
+                while j + 8 <= n {
+                    let w = vmovl_s8(vld1_s8(bp.add(j)));
+                    let lo = vmull_n_s16(vget_low_s16(w), av);
+                    let hi = vmull_n_s16(vget_high_s16(w), av);
+                    vst1q_s32(op.add(j), vaddq_s32(vld1q_s32(op.add(j)), lo));
+                    vst1q_s32(op.add(j + 4), vaddq_s32(vld1q_s32(op.add(j + 4)), hi));
+                    j += 8;
+                }
+                while j < n {
+                    *op.add(j) += av as i32 * *bp.add(j) as i32;
+                    j += 1;
+                }
+                kk += 1;
+            }
+        }
+    }
+}
+
+/// i8×i8→i32 GEMM over the `PackedRhsI8` panel layout (equal to
+/// `quant::gemm_i8_packed_i32_scalar`): `vld4_s8` de-interleaves the
+/// stride-4 tap bytes of 8 columns in one load — the packed layout was
+/// made for this instruction.
+///
+/// # Safety
+/// Requires NEON (runtime-detected by the dispatcher).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn gemm_i8_packed_i32(
+    a: &[i8],
+    k: usize,
+    packed: &[i8],
+    n: usize,
+    out: &mut [i32],
+) {
+    out.fill(0);
+    if n == 0 || k == 0 {
+        return;
+    }
+    let m = out.len() / n;
+    let panels = k.div_ceil(4);
+    for i in 0..m {
+        let arow = &a[i * k..i * k + k];
+        let op = out.as_mut_ptr().add(i * n);
+        for p in 0..panels {
+            let k0 = 4 * p;
+            let a0 = arow[k0] as i16;
+            let a1 = if k0 + 1 < k { arow[k0 + 1] as i16 } else { 0 };
+            let a2 = if k0 + 2 < k { arow[k0 + 2] as i16 } else { 0 };
+            let a3 = if k0 + 3 < k { arow[k0 + 3] as i16 } else { 0 };
+            let panel = packed.as_ptr().add(p * 4 * n);
+            let mut j = 0;
+            while j + 8 <= n {
+                let q = vld4_s8(panel.add(j * 4));
+                let w0 = vmovl_s8(q.0);
+                let w1 = vmovl_s8(q.1);
+                let w2 = vmovl_s8(q.2);
+                let w3 = vmovl_s8(q.3);
+                let mut lo = vmull_n_s16(vget_low_s16(w0), a0);
+                lo = vmlal_n_s16(lo, vget_low_s16(w1), a1);
+                lo = vmlal_n_s16(lo, vget_low_s16(w2), a2);
+                lo = vmlal_n_s16(lo, vget_low_s16(w3), a3);
+                let mut hi = vmull_n_s16(vget_high_s16(w0), a0);
+                hi = vmlal_n_s16(hi, vget_high_s16(w1), a1);
+                hi = vmlal_n_s16(hi, vget_high_s16(w2), a2);
+                hi = vmlal_n_s16(hi, vget_high_s16(w3), a3);
+                vst1q_s32(op.add(j), vaddq_s32(vld1q_s32(op.add(j)), lo));
+                vst1q_s32(op.add(j + 4), vaddq_s32(vld1q_s32(op.add(j + 4)), hi));
+                j += 8;
+            }
+            while j < n {
+                let q = panel.add(j * 4);
+                *op.add(j) += a0 as i32 * *q as i32
+                    + a1 as i32 * *q.add(1) as i32
+                    + a2 as i32 * *q.add(2) as i32
+                    + a3 as i32 * *q.add(3) as i32;
+                j += 1;
+            }
+        }
+    }
+}
+
+/// f32 depthwise conv at stride 1 (bit-identical to
+/// `depthwise::conv_dw_f32_scalar`): taps move outside the 4-wide
+/// output-x loop, preserving the ascending (ky, kx) per-element order.
+///
+/// # Safety
+/// Requires NEON (runtime-detected by the dispatcher).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn conv_dw_f32(
+    input: &[f32],
+    channels: usize,
+    in_sp: usize,
+    out_sp: usize,
+    kernel: usize,
+    weights: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(input.len(), channels * in_sp * in_sp, "input shape");
+    assert_eq!(weights.len(), channels * kernel * kernel, "weight shape");
+    assert_eq!(out.len(), channels * out_sp * out_sp, "output shape");
+    let pad = kernel / 2;
+    for c in 0..channels {
+        let plane = &input[c * in_sp * in_sp..(c + 1) * in_sp * in_sp];
+        let w = &weights[c * kernel * kernel..(c + 1) * kernel * kernel];
+        let oplane = &mut out[c * out_sp * out_sp..(c + 1) * out_sp * out_sp];
+        for oy in 0..out_sp {
+            let orow = &mut oplane[oy * out_sp..(oy + 1) * out_sp];
+            orow.fill(0.0);
+            let op = orow.as_mut_ptr();
+            for ky in 0..kernel {
+                let iy = (oy + ky) as isize - pad as isize;
+                if iy < 0 || iy >= in_sp as isize {
+                    continue;
+                }
+                let row = plane.as_ptr().add(iy as usize * in_sp);
+                let wrow = &w[ky * kernel..(ky + 1) * kernel];
+                for (kx, &wv) in wrow.iter().enumerate() {
+                    let lo = pad.saturating_sub(kx);
+                    let hi = (in_sp + pad).saturating_sub(kx).min(out_sp);
+                    if lo >= hi {
+                        continue;
+                    }
+                    let src = row.add(lo + kx - pad);
+                    let mut j = lo;
+                    while j + 4 <= hi {
+                        let t = vmulq_n_f32(vld1q_f32(src.add(j - lo)), wv);
+                        vst1q_f32(op.add(j), vaddq_f32(vld1q_f32(op.add(j)), t));
+                        j += 4;
+                    }
+                    while j < hi {
+                        *op.add(j) += *src.add(j - lo) * wv;
+                        j += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// i8 depthwise conv at stride 1 (equal to
+/// `depthwise::conv_dw_i8_scalar`): interior groups of 8 output columns
+/// accumulate the window in two `int32x4` registers; border groups run the
+/// scalar per-element path.
+///
+/// # Safety
+/// Requires NEON (runtime-detected by the dispatcher).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn conv_dw_i8(
+    input: &[i8],
+    a_scale: f32,
+    channels: usize,
+    in_sp: usize,
+    out_sp: usize,
+    w: &QuantizedDwWeights,
+    out: &mut [f32],
+) {
+    assert_eq!(w.channels, channels, "filter bank channels");
+    assert_eq!(input.len(), channels * in_sp * in_sp, "input shape");
+    assert_eq!(out.len(), channels * out_sp * out_sp, "output shape");
+    let kernel = w.kernel;
+    let pad = kernel / 2;
+    // ox range where all 8 lanes' taps stay inside the input row
+    let int_lo = pad;
+    let int_hi = (in_sp + pad).saturating_sub(kernel + 6);
+    for c in 0..channels {
+        let plane = &input[c * in_sp * in_sp..(c + 1) * in_sp * in_sp];
+        let taps = &w.data[c * kernel * kernel..(c + 1) * kernel * kernel];
+        let scale = a_scale * w.scales[c];
+        let oplane = &mut out[c * out_sp * out_sp..(c + 1) * out_sp * out_sp];
+        for oy in 0..out_sp {
+            let orow = &mut oplane[oy * out_sp..(oy + 1) * out_sp];
+            let mut ox = 0;
+            while ox < out_sp {
+                if ox >= int_lo && ox < int_hi && ox + 8 <= out_sp {
+                    let mut acc_lo = vdupq_n_s32(0);
+                    let mut acc_hi = vdupq_n_s32(0);
+                    for ky in 0..kernel {
+                        let iy = (oy + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= in_sp as isize {
+                            continue;
+                        }
+                        let row = plane.as_ptr().add(iy as usize * in_sp);
+                        for kx in 0..kernel {
+                            let coeff = taps[ky * kernel + kx] as i16;
+                            let v = vmovl_s8(vld1_s8(row.add(ox + kx - pad)));
+                            acc_lo = vmlal_n_s16(acc_lo, vget_low_s16(v), coeff);
+                            acc_hi = vmlal_n_s16(acc_hi, vget_high_s16(v), coeff);
+                        }
+                    }
+                    let mut acc = [0i32; 8];
+                    vst1q_s32(acc.as_mut_ptr(), acc_lo);
+                    vst1q_s32(acc.as_mut_ptr().add(4), acc_hi);
+                    for (l, &q) in acc.iter().enumerate() {
+                        orow[ox + l] = q as f32 * scale;
+                    }
+                    ox += 8;
+                } else {
+                    let mut acc = 0i32;
+                    for ky in 0..kernel {
+                        let iy = (oy + ky) as isize - pad as isize;
+                        if iy < 0 || iy >= in_sp as isize {
+                            continue;
+                        }
+                        let row = &plane[iy as usize * in_sp..(iy as usize + 1) * in_sp];
+                        let wrow = &taps[ky * kernel..(ky + 1) * kernel];
+                        for (kx, &tv) in wrow.iter().enumerate() {
+                            let ix = (ox + kx) as isize - pad as isize;
+                            if ix < 0 || ix >= in_sp as isize {
+                                continue;
+                            }
+                            acc += row[ix as usize] as i32 * tv as i32;
+                        }
+                    }
+                    orow[ox] = acc as f32 * scale;
+                    ox += 1;
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Tile-parameter autotuner: picks `TileConfig` for this host/target pair.
+//!
+//! Runs once per profile cache (at `MeasuredProfiler::with_cache` time,
+//! when the manifest has no recorded tile yet — the winner is persisted
+//! next to the target fingerprint, so second runs re-tune nothing).  The
+//! sweep is deliberately tiny (~tens of milliseconds): a fixed probe GEMM
+//! is timed over a small candidate grid of (`kc`, `mc`), and the
+//! parallel-dispatch threshold is derived from the measured thread-spawn
+//! overhead against the probe's MAC rate.
+//!
+//! Every candidate is results-neutral (`kc` candidates are multiples of 4;
+//! see `TileConfig`), so the autotuner can never change what a kernel
+//! computes — only how fast it computes it.
+
+use std::hint::black_box;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use super::{active_isa, gemm_rows_tiled, Isa, TileConfig};
+use crate::util::{parallel_row_blocks, rng::Pcg64};
+
+/// Probe GEMM shape: large enough that kc/mc matter, small enough that the
+/// whole sweep stays in the tens of milliseconds.
+const PROBE_M: usize = 48;
+const PROBE_K: usize = 256;
+const PROBE_N: usize = 64;
+
+/// Candidate k-panel heights (all multiples of 4 — results-neutral).
+const KC_CANDIDATES: [usize; 3] = [128, 256, 512];
+/// Candidate row sub-blocks (`1 << 20` disables sub-blocking).
+const MC_CANDIDATES: [usize; 3] = [8, 32, 1 << 20];
+
+static RUNS: AtomicU64 = AtomicU64::new(0);
+
+/// How many times [`autotune`] has executed in this process — lets tests
+/// (and the profiler smoke) assert the zero-re-tune-on-second-run
+/// contract.
+pub fn autotune_runs() -> u64 {
+    RUNS.load(Ordering::Relaxed)
+}
+
+fn median3(mut xs: [f64; 3]) -> f64 {
+    xs.sort_by(f64::total_cmp);
+    xs[1]
+}
+
+fn time_probe(isa: Isa, a: &[f32], b: &[f32], out: &mut [f32], kc: usize, mc: usize) -> f64 {
+    // one warmup, then the median of three reps
+    gemm_rows_tiled(isa, a, PROBE_K, b, PROBE_N, 0, out, kc, mc);
+    let mut reps = [0.0f64; 3];
+    for r in &mut reps {
+        let t0 = Instant::now();
+        gemm_rows_tiled(isa, a, PROBE_K, b, PROBE_N, 0, out, kc, mc);
+        black_box(&out[0]);
+        *r = t0.elapsed().as_secs_f64();
+    }
+    median3(reps)
+}
+
+/// Measure the round-trip overhead of fanning a trivial workload out to two
+/// scoped threads — the cost a parallel GEMM dispatch must amortize.
+fn spawn_overhead_s(out: &mut [f32]) -> f64 {
+    let rows = PROBE_M;
+    let mut reps = [0.0f64; 3];
+    for r in &mut reps {
+        let t0 = Instant::now();
+        parallel_row_blocks(out, rows, 2, |_r0, block| {
+            black_box(block.first());
+        });
+        *r = t0.elapsed().as_secs_f64();
+    }
+    median3(reps)
+}
+
+/// Sweep the candidate grid and derive the parallel-dispatch threshold.
+///
+/// Under a scalar-only dispatch (mode `off`, or no SIMD ISA detected) the
+/// kc/mc sweep is skipped — the scalar oracle ignores tile parameters —
+/// but `par_min_macs` is still measured, since the serial/parallel
+/// crossover matters for any kernel family.
+///
+/// The measurement is memoized per process (it probes *host* kernel
+/// throughput, which no simulated target changes), so only the first
+/// tile-less profile cache in a process pays the sweep; [`autotune_runs`]
+/// counts actual measurement runs.
+pub fn autotune() -> TileConfig {
+    static CACHED: std::sync::OnceLock<TileConfig> = std::sync::OnceLock::new();
+    *CACHED.get_or_init(autotune_measured)
+}
+
+fn autotune_measured() -> TileConfig {
+    RUNS.fetch_add(1, Ordering::Relaxed);
+    let isa = active_isa();
+    let mut rng = Pcg64::new(0x7e57_7e57);
+    let a: Vec<f32> = (0..PROBE_M * PROBE_K).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let b: Vec<f32> = (0..PROBE_K * PROBE_N).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+    let mut out = vec![0.0f32; PROBE_M * PROBE_N];
+
+    let mut best = TileConfig::untuned();
+    let mut best_t = time_probe(isa, &a, &b, &mut out, best.kc, best.mc);
+    if isa != Isa::Scalar {
+        for &kc in &KC_CANDIDATES {
+            for &mc in &MC_CANDIDATES {
+                if kc == best.kc && mc == best.mc {
+                    continue;
+                }
+                let t = time_probe(isa, &a, &b, &mut out, kc, mc);
+                if t < best_t {
+                    best_t = t;
+                    best.kc = kc;
+                    best.mc = mc;
+                }
+            }
+        }
+    }
+
+    // Threshold: the parallel path must buy back ~2x the spawn overhead.
+    let macs = (PROBE_M * PROBE_K * PROBE_N) as f64;
+    let mac_rate = macs / best_t.max(1e-9);
+    let spawn = spawn_overhead_s(&mut out);
+    best.par_min_macs = ((2.0 * spawn * mac_rate) as usize).clamp(1 << 18, 1 << 24);
+    log::info!(
+        "autotuned tiles: kc={} mc={} par_min_macs={} (probe {:.1} GMAC/s, spawn {:.1}us)",
+        best.kc,
+        best.mc,
+        best.par_min_macs,
+        mac_rate / 1e9,
+        spawn * 1e6
+    );
+    best.sanitized()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn autotune_returns_a_sane_config_and_memoizes() {
+        let t = autotune();
+        let runs = autotune_runs();
+        assert!(runs >= 1);
+        let t2 = autotune();
+        assert_eq!(autotune_runs(), runs, "second call must be memoized");
+        assert_eq!(t, t2);
+        assert_eq!(t.kc % 4, 0, "kc must stay a multiple of 4");
+        assert!(t.kc >= 4);
+        assert!(t.mc >= 1);
+        assert!((1 << 18..=1 << 24).contains(&t.par_min_macs));
+    }
+}

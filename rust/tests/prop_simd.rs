@@ -1,0 +1,249 @@
+//! Property suite for the SIMD dispatch layer: every kernel family is
+//! bit-identical to the scalar oracle across odd shapes (vector-width
+//! tails, k remainders, empty dims), and the equality survives all the way
+//! up the stack — a full search trajectory and a packaged `.galen`
+//! artifact are byte-for-byte the same under `GALEN_SIMD=off` and
+//! `GALEN_SIMD=auto`.
+//!
+//! On hosts without a detected SIMD ISA the mode flip is a no-op and the
+//! suite degenerates to scalar == scalar, which keeps it green (and
+//! meaningful as a regression fence) everywhere.
+
+use std::sync::Mutex;
+
+use galen::agent::{mapper_for, AgentKind, DdpgConfig};
+use galen::artifact::{self, LatencyClaim, PackInputs};
+use galen::compress::DiscretePolicy;
+use galen::coordinator::Session;
+use galen::eval::{SensitivityConfig, SensitivityTable};
+use galen::hw::{CostModel, HwTarget, LatencyKind, LatencySimulator};
+use galen::model::ModelIr;
+use galen::search::{run_search, SearchConfig, SearchOutcome, SimEvaluator};
+use galen::tensor::depthwise::{conv_dw_f32, conv_dw_i8, QuantizedDwWeights};
+use galen::tensor::quant::{gemm_i8_i32, gemm_i8_packed_i32, PackedRhsI8};
+use galen::tensor::simd::{self, SimdMode};
+use galen::tensor::Mat;
+use galen::util::rng::Pcg64;
+
+/// Serializes the tests in this binary that flip the process-wide dispatch
+/// mode (the harness runs them on parallel threads).
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` once under the scalar oracle and once under auto dispatch,
+/// returning both results; restores the entry mode.
+fn under_both_modes<T>(mut f: impl FnMut() -> T) -> (T, T) {
+    let prev = simd::mode();
+    simd::set_mode(SimdMode::Scalar);
+    let scalar = f();
+    simd::set_mode(SimdMode::Auto);
+    let auto = f();
+    simd::set_mode(prev);
+    (scalar, auto)
+}
+
+fn random_f32(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+}
+
+fn random_i8(rng: &mut Pcg64, n: usize) -> Vec<i8> {
+    (0..n).map(|_| (rng.next_u64() & 0xFF) as u8 as i8).collect()
+}
+
+/// Shapes chosen to cross every tail the kernels have: n not a multiple of
+/// the 8/4 vector widths, k % 4 remainders, single elements, and empty
+/// dims on each axis.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (3, 5, 7),
+    (2, 4, 8),
+    (4, 261, 9),
+    (5, 16, 17),
+    (3, 300, 31),
+    (2, 7, 33),
+    (6, 2, 64),
+    (0, 4, 5),
+    (4, 0, 5),
+    (4, 5, 0),
+];
+
+#[test]
+fn f32_gemm_family_is_mode_invariant_across_odd_shapes() {
+    let _g = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Pcg64::new(0xF32);
+    for &(m, k, n) in SHAPES {
+        let a = Mat::from_vec(m, k, random_f32(&mut rng, m * k));
+        let b = Mat::from_vec(k, n, random_f32(&mut rng, k * n));
+        let bt = Mat::from_vec(n, k, random_f32(&mut rng, n * k));
+        let c = Mat::from_vec(m, n, random_f32(&mut rng, m * n));
+
+        let (s, v) = under_both_modes(|| {
+            let mut out = Mat::zeros(m, n);
+            a.matmul_into(&b, &mut out);
+            out.data
+        });
+        assert_eq!(s, v, "matmul {m}x{k}x{n}");
+
+        let (s, v) = under_both_modes(|| {
+            let mut out = Mat::zeros(k, n);
+            a.t_matmul_into(&c, &mut out);
+            out.data
+        });
+        assert_eq!(s, v, "t_matmul {m}x{k}x{n}");
+
+        let (s, v) = under_both_modes(|| {
+            let mut out = Mat::zeros(m, n);
+            a.matmul_t_into(&bt, &mut out);
+            out.data
+        });
+        assert_eq!(s, v, "matmul_t {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn i8_gemms_are_mode_invariant_across_odd_shapes() {
+    let _g = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Pcg64::new(0x18);
+    for &(m, k, n) in SHAPES {
+        let a = random_i8(&mut rng, m * k);
+        let b = random_i8(&mut rng, k * n);
+
+        let (s, v) = under_both_modes(|| {
+            let mut out = vec![0i32; m * n];
+            for r in 0..m {
+                gemm_i8_i32(&a[r * k..(r + 1) * k], k, &b, n, &mut out[r * n..(r + 1) * n]);
+            }
+            out
+        });
+        assert_eq!(s, v, "gemm_i8 {m}x{k}x{n}");
+
+        let packed = PackedRhsI8::pack(&b, k, n, vec![1.0; n]);
+        let (s, v) = under_both_modes(|| {
+            let mut out = vec![0i32; m * n];
+            for r in 0..m {
+                gemm_i8_packed_i32(
+                    &a[r * k..(r + 1) * k],
+                    k,
+                    &packed,
+                    &mut out[r * n..(r + 1) * n],
+                );
+            }
+            out
+        });
+        assert_eq!(s, v, "gemm_i8_packed {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn depthwise_convs_are_mode_invariant() {
+    let _g = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut rng = Pcg64::new(0xD4);
+    // odd spatial extents and strides; stride 2 always takes the scalar
+    // path, so it doubles as a fence that the dispatch gating is correct
+    for &(channels, in_sp, kernel, stride) in &[
+        (3usize, 9usize, 3usize, 1usize),
+        (2, 17, 3, 1),
+        (1, 7, 5, 1),
+        (4, 5, 1, 1),
+        (2, 16, 3, 2),
+        (3, 11, 5, 2),
+        (1, 1, 3, 1),
+        (5, 8, 3, 1),
+    ] {
+        let out_sp = (in_sp + stride - 1) / stride;
+        let input = random_f32(&mut rng, channels * in_sp * in_sp);
+        let weights = random_f32(&mut rng, channels * kernel * kernel);
+        let tag = format!("c{channels} sp{in_sp} k{kernel} s{stride}");
+
+        let (s, v) = under_both_modes(|| {
+            let mut out = vec![0.0f32; channels * out_sp * out_sp];
+            conv_dw_f32(&input, channels, in_sp, out_sp, kernel, stride, &weights, &mut out);
+            out
+        });
+        assert_eq!(s, v, "dw_f32 {tag}");
+
+        let qin = random_i8(&mut rng, channels * in_sp * in_sp);
+        let qw = QuantizedDwWeights::quantize(&weights, channels, kernel);
+        let (s, v) = under_both_modes(|| {
+            let mut out = vec![0.0f32; channels * out_sp * out_sp];
+            conv_dw_i8(&qin, 0.031_25, channels, in_sp, out_sp, stride, &qw, &mut out);
+            out
+        });
+        assert_eq!(s, v, "dw_i8 {tag}");
+    }
+}
+
+fn zoo_search() -> SearchOutcome {
+    let ir = ModelIr::from_meta(&galen::model::zoo::meta("mobilenetv2s").unwrap()).unwrap();
+    let sens = SensitivityTable::disabled(
+        ir.layers.len(),
+        &SensitivityConfig::default(),
+        "mobilenetv2s",
+    );
+    let ev = SimEvaluator::new(&ir);
+    let mapper = mapper_for(AgentKind::Joint);
+    let mut sim = LatencySimulator::new(CostModel::new(HwTarget::cortex_a72()), 11);
+    let mut cfg = SearchConfig::fast(AgentKind::Joint, 0.5);
+    cfg.episodes = 6;
+    cfg.warmup_episodes = 2;
+    cfg.opt_steps_per_episode = 4;
+    cfg.eval_batches = 1;
+    cfg.log_every = 0;
+    cfg.ddpg = DdpgConfig {
+        hidden: (32, 24),
+        batch: 24,
+        replay_capacity: 400,
+        ..Default::default()
+    };
+    run_search(&ir, &sens, &ev, &mut sim, mapper.as_ref(), &cfg, None).unwrap()
+}
+
+/// The whole-stack consequence of kernel bit-exactness: a full search
+/// trajectory (every episode's reward/accuracy/latency f64 bits, and the
+/// best policy) is identical whichever kernel family runs it.
+#[test]
+fn full_search_trajectory_is_mode_invariant() {
+    let _g = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (scalar, auto) = under_both_modes(zoo_search);
+    assert_eq!(scalar.history.len(), auto.history.len());
+    for (s, v) in scalar.history.iter().zip(&auto.history) {
+        assert_eq!(s.episode, v.episode);
+        assert_eq!(s.reward.to_bits(), v.reward.to_bits(), "ep {} reward", s.episode);
+        assert_eq!(s.accuracy.to_bits(), v.accuracy.to_bits(), "ep {} accuracy", s.episode);
+        assert_eq!(s.latency_s.to_bits(), v.latency_s.to_bits(), "ep {} latency", s.episode);
+        assert_eq!(s.macs, v.macs, "ep {} macs", s.episode);
+        assert_eq!(s.bops, v.bops, "ep {} bops", s.episode);
+    }
+    assert_eq!(scalar.base_latency_s.to_bits(), auto.base_latency_s.to_bits());
+    assert_eq!(scalar.best_policy, auto.best_policy);
+}
+
+/// Packaged `.galen` artifacts are byte-identical across dispatch modes —
+/// the acceptance fence that lets artifacts built on SIMD hosts verify on
+/// scalar ones and vice versa.
+#[test]
+fn packed_artifact_bytes_are_mode_invariant() {
+    let _g = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let (scalar, auto) = under_both_modes(|| {
+        let session = Session::fixture(LatencyKind::Sim, 7).unwrap();
+        let policy = DiscretePolicy::reference(&session.ir);
+        let (weights, weights_source) = session.packaging_weights().unwrap();
+        let mut provider = session.latency_provider(7).unwrap();
+        let claim = LatencyClaim {
+            latency_s: provider.latency(&session.ir, &policy),
+            base_latency_s: provider.latency(&session.ir, &policy),
+            backend: provider.backend().to_string(),
+        };
+        artifact::pack(&PackInputs {
+            ir: &session.ir,
+            policy: &policy,
+            weights: &weights,
+            weights_source,
+            target: &session.opts.target_hw,
+            claim,
+            profile_cache: "none".to_string(),
+        })
+        .unwrap()
+        .encode(None)
+    });
+    assert_eq!(scalar, auto, "artifact bytes differ between dispatch modes");
+}

@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Bench-regression gate over BENCH_hot_paths.json.
+
+Compares a freshly produced bench trajectory against the committed
+baseline and fails on median-latency regressions beyond a noise
+tolerance.  Stdlib-only; CI-runner noise is the enemy, so the gate is
+deliberately coarse (default 1.6x) and only watches the curated kernel
+and substrate sections — the full file remains available for humans.
+
+Usage:
+    bench_gate.py BASELINE.json CURRENT.json [--tolerance 1.6]
+                  [--enforce-speedup]
+
+Bootstrap-aware: a missing baseline prints a warning and exits 0 so the
+first CI run (which records the baseline) stays green.
+
+With --enforce-speedup, additionally requires the current run's
+SIMD-vs-scalar GEMM speedup (meta block) to reach 2x when a SIMD ISA is
+active; without the flag the speedups are only reported.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+# Sections the gate watches: the kernel substrate the measured-latency
+# profiler times, plus the cheap always-present microbenches.  Broad
+# search/sweep sections are excluded — their medians move with runner
+# core counts, not code quality.
+GATED_PREFIXES = (
+    "tensor/",
+    "replay/",
+    "json/",
+    "compress/",
+)
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def gated(benches):
+    return {
+        name: entry["p50_ns"]
+        for name, entry in benches.items()
+        if name.startswith(GATED_PREFIXES) and entry.get("p50_ns")
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--tolerance", type=float, default=1.6,
+                    help="fail when current p50 exceeds baseline by this factor")
+    ap.add_argument("--enforce-speedup", action="store_true",
+                    help="require >=2x SIMD GEMM speedup when a SIMD ISA is active")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.baseline):
+        print(f"bench_gate: no baseline at {args.baseline} — bootstrap run, "
+              "nothing to compare (record this run's JSON as the baseline)")
+        return 0
+
+    base = load(args.baseline)
+    cur = load(args.current)
+    base_b = gated(base.get("benches", {}))
+    cur_b = gated(cur.get("benches", {}))
+
+    base_isa = base.get("meta", {}).get("simd_isa", "?")
+    cur_isa = cur.get("meta", {}).get("simd_isa", "?")
+    if base_isa != cur_isa:
+        print(f"bench_gate: baseline ISA '{base_isa}' != current ISA '{cur_isa}' — "
+              "timings are not comparable across kernel backends; skipping "
+              "regression comparison")
+        base_b = {}
+
+    failures = []
+    compared = 0
+    for name, base_ns in sorted(base_b.items()):
+        cur_ns = cur_b.get(name)
+        if cur_ns is None:
+            print(f"bench_gate: '{name}' missing from current run (renamed?)")
+            continue
+        ratio = cur_ns / base_ns
+        compared += 1
+        marker = "FAIL" if ratio > args.tolerance else "ok"
+        print(f"  {marker:>4}  {ratio:5.2f}x  {name}")
+        if ratio > args.tolerance:
+            failures.append((name, ratio))
+
+    print(f"bench_gate: compared {compared} entries "
+          f"(tolerance {args.tolerance:.2f}x, ISA {cur_isa})")
+
+    meta = cur.get("meta", {})
+    speedups = {k: float(v) for k, v in meta.items()
+                if k.startswith("simd_") and k.endswith("_speedup")}
+    for k, v in sorted(speedups.items()):
+        print(f"  {k} = {v:.2f}x")
+    if args.enforce_speedup and cur_isa in ("avx2", "neon"):
+        gemm_speedups = [v for k, v in speedups.items() if "gemm" in k]
+        if gemm_speedups and max(gemm_speedups) < 2.0:
+            failures.append(("simd gemm speedup < 2x", max(gemm_speedups)))
+
+    if failures:
+        for name, ratio in failures:
+            print(f"bench_gate: REGRESSION {name}: {ratio:.2f}x", file=sys.stderr)
+        return 1
+    print("bench_gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
